@@ -1,0 +1,46 @@
+//! END-TO-END DRIVER: the §5 benchmark on a real (synthetic-suite)
+//! workload — 16 learners × datasets × K-fold CV — regenerating Figure 6
+//! and Tables 2/3/4/5/6/7. This is the headline experiment of the paper;
+//! the run is recorded in EXPERIMENTS.md.
+//!
+//! Run:        cargo run --release --example benchmark_suite
+//! Bigger run: cargo run --release --example benchmark_suite -- --trees=50 --folds=5
+
+use ydf::benchmark::{run_suite, table5_report, SuiteConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut config = SuiteConfig::default();
+    for a in &args {
+        if let Some(v) = a.strip_prefix("--trees=") {
+            config.scale.num_trees = v.parse().unwrap();
+        } else if let Some(v) = a.strip_prefix("--folds=") {
+            config.folds = v.parse().unwrap();
+        } else if let Some(v) = a.strip_prefix("--trials=") {
+            config.scale.tuner_trials = v.parse().unwrap();
+        } else if let Some(v) = a.strip_prefix("--max-examples=") {
+            config.max_examples = v.parse().unwrap();
+        } else if a == "--full" {
+            config = SuiteConfig::full();
+        }
+    }
+    eprintln!(
+        "suite: {} datasets, {} folds, {} trees, {} tuning trials, <= {} examples",
+        config.datasets.len(),
+        config.folds,
+        config.scale.num_trees,
+        config.scale.tuner_trials,
+        config.max_examples
+    );
+    let t0 = std::time::Instant::now();
+    let result = run_suite(&config, |line| eprintln!("{line}"));
+    eprintln!("suite completed in {:.1}s", t0.elapsed().as_secs_f64());
+
+    println!("{}", result.fig6_report());
+    println!("{}", result.table2_report());
+    println!("{}", result.table3_report());
+    println!("{}", result.table4_report());
+    println!("{}", table5_report());
+    println!("{}", result.time_table_report(false));
+    println!("{}", result.time_table_report(true));
+}

@@ -1,0 +1,53 @@
+//! Figure 3: composed meta-learners — a calibrator containing an
+//! ensembler, which contains a hyper-parameter tuner around a Random
+//! Forest plus a vanilla Gradient Boosted Trees learner (§3.2).
+//!
+//! Run: `cargo run --release --example metalearners`
+
+use ydf::dataset::synthetic;
+use ydf::evaluation::evaluate_model;
+use ydf::learner::gbt::GbtConfig;
+use ydf::learner::random_forest::RandomForestConfig;
+use ydf::learner::{GradientBoostedTreesLearner, Learner, RandomForestLearner};
+use ydf::metalearner::{
+    CalibratorLearner, EnsemblerLearner, FeatureSelectorLearner, TunerLearner, TunerScoring,
+};
+
+fn main() {
+    let train = synthetic::adult_like(1500, 21);
+    let test = synthetic::adult_like(800, 22);
+
+    // Inner learner 1: hyper-parameter tuner optimising a Random Forest.
+    let mut rf = RandomForestConfig::new("income");
+    rf.num_trees = 20;
+    rf.compute_oob = false;
+    let tuner = TunerLearner::new_rf(rf, 4, TunerScoring::Accuracy);
+
+    // Inner learner 2: vanilla GBT.
+    let mut gbt = GbtConfig::new("income");
+    gbt.num_trees = 30;
+    gbt.max_depth = 4;
+    let gbt_learner = GradientBoostedTreesLearner::new(gbt);
+
+    // Ensembler over both; calibrator on top (Figure 3's exact nesting).
+    let ensembler = EnsemblerLearner::new(vec![Box::new(tuner), Box::new(gbt_learner)]);
+    let calibrated = CalibratorLearner::new(Box::new(ensembler));
+
+    println!("training calibrator(ensembler(tuner(RF), GBT)) ...");
+    let model = calibrated.train(&train).expect("training");
+    let ev = evaluate_model(model.as_ref(), &test, "income").unwrap();
+    println!("composed meta-learner:\n{}", ev.report());
+
+    // Bonus composition: feature selector around a Random Forest using
+    // out-of-bag self-evaluation (§3.6's example).
+    let mut rf = RandomForestConfig::new("income");
+    rf.num_trees = 15;
+    let selector = FeatureSelectorLearner::new(Box::new(RandomForestLearner::new(rf)));
+    let model = selector.train(&train).expect("feature selection");
+    let ev = evaluate_model(model.as_ref(), &test, "income").unwrap();
+    println!(
+        "feature-selected RF: accuracy {:.4} (features kept: {})",
+        ev.accuracy,
+        model.input_features().len()
+    );
+}

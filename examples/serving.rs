@@ -1,0 +1,102 @@
+//! Serving example: compile a trained model to its fastest engine (§3.7),
+//! serve concurrent batched requests from multiple threads, and report
+//! latency/throughput — including the PJRT/XLA engine when `make
+//! artifacts` has been run.
+//!
+//! Run: `cargo run --release --example serving`
+
+use std::sync::Arc;
+use ydf::dataset::synthetic;
+use ydf::inference::{compile_engines, InferenceEngine};
+use ydf::learner::gbt::GbtConfig;
+use ydf::learner::{GradientBoostedTreesLearner, Learner};
+
+fn main() {
+    // Train the model to serve.
+    let spec = synthetic::spec_by_name("Wilt").unwrap();
+    let opts = synthetic::GenOptions { max_examples: 2000, ..Default::default() };
+    let train = synthetic::generate(spec, 41, &opts);
+    let mut cfg = GbtConfig::new("label");
+    cfg.num_trees = 40;
+    cfg.max_depth = 5;
+    let model = GradientBoostedTreesLearner::new(cfg).train(&train).unwrap();
+
+    // Engine selection (§3.7): all compatible engines, fastest first.
+    let engines = compile_engines(model.as_ref());
+    println!("compatible engines:");
+    for e in &engines {
+        println!("  {}", e.name());
+    }
+
+    // Optional PJRT engine, if the XLA artifact is available.
+    let pjrt: Option<Arc<dyn InferenceEngine>> =
+        match ydf::runtime::Runtime::cpu().and_then(|rt| {
+            ydf::inference::pjrt::PjrtEngine::compile(model.as_ref(), &rt)
+        }) {
+            Ok(e) => {
+                println!("  {} (XLA artifact)", e.name());
+                Some(Arc::new(e))
+            }
+            Err(e) => {
+                println!("  (PJRT engine unavailable: {e})");
+                None
+            }
+        };
+
+    // Serve: 4 client threads, batched requests, measure latency.
+    let engine: Arc<dyn InferenceEngine> = Arc::from(
+        compile_engines(model.as_ref()).remove(0), // fastest
+    );
+    let requests_per_client = 50usize;
+    let batch = synthetic::generate(
+        spec,
+        42,
+        &synthetic::GenOptions { max_examples: 64, ..Default::default() },
+    );
+    let t0 = std::time::Instant::now();
+    let mut latencies: Vec<f64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let engine = Arc::clone(&engine);
+                let batch = &batch;
+                s.spawn(move || {
+                    let mut lat = Vec::with_capacity(requests_per_client);
+                    for _ in 0..requests_per_client {
+                        let t = std::time::Instant::now();
+                        std::hint::black_box(engine.predict_dataset(batch));
+                        lat.push(t.elapsed().as_secs_f64() * 1e3);
+                    }
+                    lat
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let total_examples = 4 * requests_per_client * batch.num_rows();
+    println!(
+        "served {} batched requests ({} examples) in {:.2}s  ->  {:.0} examples/s",
+        4 * requests_per_client,
+        total_examples,
+        wall,
+        total_examples as f64 / wall
+    );
+    println!(
+        "batch latency p50={:.3}ms p95={:.3}ms p99={:.3}ms",
+        latencies[latencies.len() / 2],
+        latencies[latencies.len() * 95 / 100],
+        latencies[latencies.len() * 99 / 100]
+    );
+
+    // One PJRT batch for comparison, if available.
+    if let Some(p) = pjrt {
+        let t = std::time::Instant::now();
+        let preds = p.predict_dataset(&batch);
+        println!(
+            "PJRT/XLA engine: {} predictions in {:.3}ms",
+            preds.len(),
+            t.elapsed().as_secs_f64() * 1e3
+        );
+    }
+}

@@ -1,0 +1,98 @@
+"""AOT lowering: JAX/Pallas graphs -> HLO *text* artifacts for the Rust
+PJRT runtime.
+
+HLO text — not `lowered.compile().serialize()` — is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids that
+the runtime's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage: python -m compile.aot [--out-dir ../artifacts]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import forest as fk
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_forest():
+    f32 = jnp.float32
+    i32 = jnp.int32
+    spec = jax.ShapeDtypeStruct
+    args = (
+        spec((fk.BATCH, fk.MAX_FEATURES), f32),      # features
+        spec((fk.MAX_TREES, fk.MAX_NODES), i32),     # node_feature
+        spec((fk.MAX_TREES, fk.MAX_NODES), f32),     # node_threshold
+        spec((fk.MAX_TREES, fk.MAX_NODES), i32),     # node_pos
+        spec((fk.MAX_TREES, fk.MAX_NODES), i32),     # node_neg
+        spec((fk.MAX_TREES, fk.MAX_NODES), f32),     # leaf_value
+        spec((1,), f32),                             # initial
+    )
+    return jax.jit(model.forest_predict).lower(*args)
+
+
+LINEAR_DIM = 32
+LINEAR_CLASSES = 8
+LINEAR_BATCH = 64
+
+
+def lower_linear_predict():
+    f32 = jnp.float32
+    spec = jax.ShapeDtypeStruct
+    return jax.jit(model.linear_predict).lower(
+        spec((LINEAR_BATCH, LINEAR_DIM), f32),
+        spec((LINEAR_DIM, LINEAR_CLASSES), f32),
+        spec((LINEAR_CLASSES,), f32),
+    )
+
+
+def lower_linear_train_step():
+    f32 = jnp.float32
+    spec = jax.ShapeDtypeStruct
+    return jax.jit(model.linear_train_step).lower(
+        spec((LINEAR_BATCH, LINEAR_DIM), f32),
+        spec((LINEAR_BATCH, LINEAR_CLASSES), f32),
+        spec((LINEAR_DIM, LINEAR_CLASSES), f32),
+        spec((LINEAR_CLASSES,), f32),
+        spec((1,), f32),
+    )
+
+
+ARTIFACTS = {
+    "forest.hlo.txt": lower_forest,
+    "linear.hlo.txt": lower_linear_predict,
+    "linear_train_step.hlo.txt": lower_linear_train_step,
+}
+
+
+def main():
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    parser.add_argument("--only", default=None, help="single artifact name")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, lower in ARTIFACTS.items():
+        if args.only and name != args.only:
+            continue
+        text = to_hlo_text(lower())
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text)} chars to {path}")
+
+
+if __name__ == "__main__":
+    main()

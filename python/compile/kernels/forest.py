@@ -1,0 +1,90 @@
+"""L1 Pallas kernel: blocked, vectorized decision-forest traversal.
+
+The paper's QuickScorer engine (§3.7) exploits CPU bitvector tricks; on
+TPU-class hardware the same insight — replace pointer chasing with dense,
+branch-free arithmetic — maps to *tensorized traversal*: node attributes
+are packed into `[trees, nodes]` tables, and traversal becomes `depth`
+rounds of gather + select over an example block resident in VMEM
+(DESIGN.md §Hardware-Adaptation).
+
+Grid: one step per tree. Each step keeps one tree's node tables and the
+whole example block in VMEM and emits that tree's leaf values for the
+block. `interpret=True` everywhere: the CPU PJRT runtime cannot execute
+Mosaic custom-calls, and interpret-mode lowering inlines the kernel into
+portable HLO (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Padded artifact shapes; must match rust/src/inference/pjrt.rs.
+BATCH = 64
+MAX_TREES = 64
+MAX_NODES = 256
+MAX_FEATURES = 16
+MAX_DEPTH = 12
+
+
+def _traverse_kernel(nf_ref, nt_ref, npos_ref, nneg_ref, lv_ref, x_ref, o_ref, *, depth):
+    """One grid step: evaluate one tree on the whole example block."""
+    nf = nf_ref[...][0]      # [N] node feature, -1 for leaves
+    nt = nt_ref[...][0]      # [N] thresholds
+    npos = npos_ref[...][0]  # [N] positive child
+    nneg = nneg_ref[...][0]  # [N] negative child
+    lv = lv_ref[...][0]      # [N] leaf values
+    x = x_ref[...]           # [B, F] examples
+
+    b = x.shape[0]
+    idx = jnp.zeros((b,), jnp.int32)
+
+    def body(_, idx):
+        f = nf[idx]                              # [B]
+        is_leaf = f < 0
+        fx = jnp.take_along_axis(
+            x, jnp.clip(f, 0, x.shape[1] - 1)[:, None], axis=1
+        )[:, 0]
+        go_pos = fx >= nt[idx]
+        nxt = jnp.where(go_pos, npos[idx], nneg[idx])
+        return jnp.where(is_leaf, idx, nxt)
+
+    idx = jax.lax.fori_loop(0, depth, body, idx)
+    o_ref[...] = lv[idx][None, :]
+
+
+def forest_traverse(features, node_feature, node_threshold, node_pos, node_neg,
+                    leaf_value, *, depth=MAX_DEPTH):
+    """Evaluates every tree on every example.
+
+    Args:
+      features:       f32[B, F]  (no NaNs; impute before calling)
+      node_feature:   i32[T, N]  (-1 marks leaves)
+      node_threshold: f32[T, N]
+      node_pos:       i32[T, N]
+      node_neg:       i32[T, N]
+      leaf_value:     f32[T, N]
+      depth:          static traversal bound (max tree depth)
+
+    Returns:
+      f32[T, B]: the leaf value reached in tree t by example b.
+    """
+    num_trees, num_nodes = node_feature.shape
+    batch, _num_features = features.shape
+    kernel = functools.partial(_traverse_kernel, depth=depth)
+    return pl.pallas_call(
+        kernel,
+        grid=(num_trees,),
+        in_specs=[
+            pl.BlockSpec((1, num_nodes), lambda t: (t, 0)),
+            pl.BlockSpec((1, num_nodes), lambda t: (t, 0)),
+            pl.BlockSpec((1, num_nodes), lambda t: (t, 0)),
+            pl.BlockSpec((1, num_nodes), lambda t: (t, 0)),
+            pl.BlockSpec((1, num_nodes), lambda t: (t, 0)),
+            pl.BlockSpec(features.shape, lambda t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, batch), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_trees, batch), jnp.float32),
+        interpret=True,
+    )(node_feature, node_threshold, node_pos, node_neg, leaf_value, features)

@@ -1,0 +1,67 @@
+"""Pure-numpy correctness oracle for the forest-traversal kernel.
+
+Deliberately written as the naive per-example, per-tree pointer-chasing
+loop (Algorithm 1 of the paper) so it shares no code or vectorization
+structure with the Pallas kernel it validates — the "simple module as
+ground truth for the optimized module" pattern of §2.3.
+"""
+
+import numpy as np
+
+
+def forest_traverse_ref(features, node_feature, node_threshold, node_pos,
+                        node_neg, leaf_value, depth):
+    """Reference traversal. Same contract as kernels.forest.forest_traverse.
+
+    Note: `depth` bounds the number of traversal steps exactly like the
+    kernel's fori_loop, so trees deeper than `depth` produce the same
+    (truncated) result in both implementations.
+    """
+    num_trees, _ = node_feature.shape
+    batch = features.shape[0]
+    out = np.zeros((num_trees, batch), dtype=np.float32)
+    for t in range(num_trees):
+        for b in range(batch):
+            idx = 0
+            for _ in range(depth):
+                f = node_feature[t, idx]
+                if f < 0:
+                    break
+                if features[b, f] >= node_threshold[t, idx]:
+                    idx = node_pos[t, idx]
+                else:
+                    idx = node_neg[t, idx]
+            out[t, b] = leaf_value[t, idx]
+    return out
+
+
+def random_forest_tensors(rng, num_trees, num_nodes, num_features, *,
+                          max_depth=8):
+    """Generates valid random padded forest tensors for testing.
+
+    Trees are built top-down with contiguous child allocation, so every
+    index is in range and every path terminates within `max_depth`.
+    """
+    node_feature = -np.ones((num_trees, num_nodes), dtype=np.int32)
+    node_threshold = np.zeros((num_trees, num_nodes), dtype=np.float32)
+    node_pos = np.zeros((num_trees, num_nodes), dtype=np.int32)
+    node_neg = np.zeros((num_trees, num_nodes), dtype=np.int32)
+    leaf_value = rng.normal(size=(num_trees, num_nodes)).astype(np.float32)
+
+    for t in range(num_trees):
+        next_free = [1]
+        frontier = [(0, 0)]  # (node, depth)
+        while frontier:
+            node, depth = frontier.pop()
+            # Leaf if too deep, out of space, or by chance.
+            if depth >= max_depth or next_free[0] + 2 > num_nodes or rng.random() < 0.3:
+                continue  # stays a leaf (node_feature == -1)
+            node_feature[t, node] = rng.integers(0, num_features)
+            node_threshold[t, node] = rng.normal()
+            pos, neg = next_free[0], next_free[0] + 1
+            next_free[0] += 2
+            node_pos[t, node] = pos
+            node_neg[t, node] = neg
+            frontier.append((pos, depth + 1))
+            frontier.append((neg, depth + 1))
+    return node_feature, node_threshold, node_pos, node_neg, leaf_value

@@ -1,0 +1,60 @@
+"""L2 JAX compute graphs (build-time only; never on the request path).
+
+Two graphs are AOT-compiled to HLO text for the Rust runtime:
+
+* `forest_predict` — the accelerated GBT inference engine: the L1 Pallas
+  traversal kernel plus score accumulation and the binomial link. Loaded
+  by `rust/src/inference/pjrt.rs` as the `GradientBoostedTreesPjrtXla`
+  engine (§3.7).
+* `linear_train_step` / `linear_predict` — the "TF Linear" baseline's
+  forward and SGD train step (fwd/bwd in one graph), demonstrating the
+  full fwd+bwd lowering path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import forest as forest_kernel
+
+
+def forest_predict(features, node_feature, node_threshold, node_pos,
+                   node_neg, leaf_value, initial):
+    """Binary-GBT batched inference.
+
+    Args:
+      features:  f32[B, F] imputed (NaN-free) examples
+      node_*:    padded forest tensors, see kernels.forest
+      initial:   f32[1] initial log-odds
+    Returns:
+      (probs,): f32[B] positive-class probability.
+    """
+    per_tree = forest_kernel.forest_traverse(
+        features, node_feature, node_threshold, node_pos, node_neg, leaf_value,
+        depth=forest_kernel.MAX_DEPTH)
+    scores = initial[0] + jnp.sum(per_tree, axis=0)
+    return (jax.nn.sigmoid(scores),)
+
+
+def linear_predict(x, w, b):
+    """Multinomial logistic forward: softmax(x @ w + b).
+
+    x: f32[B, D], w: f32[D, K], b: f32[K] -> (f32[B, K],)
+    """
+    return (jax.nn.softmax(x @ w + b, axis=-1),)
+
+
+def _linear_loss(params, x, y_onehot):
+    w, b = params
+    logits = x @ w + b
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+def linear_train_step(x, y_onehot, w, b, lr):
+    """One SGD step on the cross-entropy loss (fwd + bwd in one graph).
+
+    Returns (new_w, new_b, loss).
+    """
+    loss, grads = jax.value_and_grad(_linear_loss)((w, b), x, y_onehot)
+    gw, gb = grads
+    return (w - lr[0] * gw, b - lr[0] * gb, loss)

@@ -1,0 +1,84 @@
+"""L1 kernel correctness: Pallas traversal vs the pointer-chasing oracle.
+
+Hypothesis sweeps shapes and tree structures; every case asserts exact
+agreement (the kernel and the oracle compute identical float32 selects).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import forest as fk
+from compile.kernels.ref import forest_traverse_ref, random_forest_tensors
+
+
+def run_both(features, tensors, depth):
+    nf, nt, npos, nneg, lv = tensors
+    got = np.asarray(
+        fk.forest_traverse(features, nf, nt, npos, nneg, lv, depth=depth))
+    want = forest_traverse_ref(features, nf, nt, npos, nneg, lv, depth)
+    return got, want
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    num_trees=st.integers(1, 8),
+    num_nodes=st.sampled_from([8, 32, 64]),
+    num_features=st.integers(1, 6),
+    batch=st.sampled_from([1, 4, 16]),
+    depth=st.integers(1, 8),
+)
+def test_kernel_matches_ref(seed, num_trees, num_nodes, num_features, batch, depth):
+    rng = np.random.default_rng(seed)
+    tensors = random_forest_tensors(
+        rng, num_trees, num_nodes, num_features, max_depth=depth)
+    features = rng.normal(size=(batch, num_features)).astype(np.float32)
+    got, want = run_both(features, tensors, depth)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_full_artifact_shapes():
+    """The exact shapes the AOT artifact is compiled with."""
+    rng = np.random.default_rng(7)
+    tensors = random_forest_tensors(
+        rng, fk.MAX_TREES, fk.MAX_NODES, fk.MAX_FEATURES, max_depth=fk.MAX_DEPTH)
+    features = rng.normal(size=(fk.BATCH, fk.MAX_FEATURES)).astype(np.float32)
+    got, want = run_both(features, tensors, fk.MAX_DEPTH)
+    np.testing.assert_array_equal(got, want)
+    assert got.shape == (fk.MAX_TREES, fk.BATCH)
+
+
+def test_all_leaf_trees_return_root_value():
+    rng = np.random.default_rng(3)
+    nf = -np.ones((4, 8), dtype=np.int32)
+    nt = np.zeros((4, 8), dtype=np.float32)
+    npos = np.zeros((4, 8), dtype=np.int32)
+    nneg = np.zeros((4, 8), dtype=np.int32)
+    lv = rng.normal(size=(4, 8)).astype(np.float32)
+    features = rng.normal(size=(5, 3)).astype(np.float32)
+    got = np.asarray(fk.forest_traverse(features, nf, nt, npos, nneg, lv, depth=4))
+    for t in range(4):
+        np.testing.assert_allclose(got[t], np.full(5, lv[t, 0]))
+
+
+def test_single_stump_thresholds():
+    """Hand-built stump: x0 >= 0 ? +1 : -1."""
+    nf = np.array([[0, -1, -1]], dtype=np.int32)
+    nt = np.zeros((1, 3), dtype=np.float32)
+    npos = np.array([[1, 0, 0]], dtype=np.int32)
+    nneg = np.array([[2, 0, 0]], dtype=np.int32)
+    lv = np.array([[0.0, 1.0, -1.0]], dtype=np.float32)
+    features = np.array([[0.5], [-0.5], [0.0]], dtype=np.float32)
+    got = np.asarray(fk.forest_traverse(features, nf, nt, npos, nneg, lv, depth=2))
+    np.testing.assert_allclose(got[0], [1.0, -1.0, 1.0])  # >= is positive
+
+
+@pytest.mark.parametrize("depth", [1, 3, 12])
+def test_depth_truncation_consistent(depth):
+    """Truncated traversal must agree between kernel and oracle."""
+    rng = np.random.default_rng(11)
+    tensors = random_forest_tensors(rng, 3, 64, 4, max_depth=10)
+    features = rng.normal(size=(8, 4)).astype(np.float32)
+    got, want = run_both(features, tensors, depth)
+    np.testing.assert_array_equal(got, want)

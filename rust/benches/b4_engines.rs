@@ -1,0 +1,40 @@
+//! Appendix B.4: the model inference benchmark — every compatible engine
+//! timed over the dataset, µs/example (the report the CLI's
+//! `benchmark_inference` prints). Includes the PJRT/XLA engine when the
+//! artifact is available.
+//!
+//! Run: cargo bench --bench b4_engines
+
+use ydf::dataset::synthetic;
+use ydf::inference::{benchmark_inference_report, InferenceEngine};
+use ydf::learner::gbt::GbtConfig;
+use ydf::learner::{GradientBoostedTreesLearner, Learner};
+
+fn main() {
+    // Numerical-only dataset so every engine (incl. PJRT) is compatible.
+    let spec = synthetic::spec_by_name("Wilt").unwrap();
+    let opts = synthetic::GenOptions { max_examples: 2000, ..Default::default() };
+    let ds = synthetic::generate(spec, 20230806, &opts);
+    let mut cfg = GbtConfig::new("label");
+    cfg.num_trees = 50;
+    cfg.max_depth = 5;
+    let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+
+    println!("{}", benchmark_inference_report(model.as_ref(), &ds, 20));
+
+    // PJRT/XLA engine (lossy compilation, §3.7), when artifacts exist.
+    match ydf::runtime::Runtime::cpu()
+        .and_then(|rt| ydf::inference::pjrt::PjrtEngine::compile(model.as_ref(), &rt))
+    {
+        Ok(engine) => {
+            let t0 = std::time::Instant::now();
+            let runs = 5;
+            for _ in 0..runs {
+                std::hint::black_box(engine.predict_dataset(&ds));
+            }
+            let us = t0.elapsed().as_secs_f64() / (runs * ds.num_rows()) as f64 * 1e6;
+            println!("  {:<42} {us:>10.3} us/example", engine.name());
+        }
+        Err(e) => println!("  (PJRT engine skipped: {e})"),
+    }
+}

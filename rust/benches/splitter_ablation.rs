@@ -1,0 +1,40 @@
+//! §3.8 ablation: exact in-sorting vs pre-sorted vs per-node Auto vs
+//! approximate histogram numerical splitters — training time and train
+//! accuracy trade-off (the design choice DESIGN.md E12 calls out).
+//!
+//! Run: cargo bench --bench splitter_ablation
+
+use ydf::dataset::synthetic;
+use ydf::learner::gbt::{EarlyStopping, GbtConfig};
+use ydf::learner::{GradientBoostedTreesLearner, Learner};
+use ydf::splitter::NumericalSplit;
+use ydf::utils::bench::Table;
+
+fn main() {
+    let spec = synthetic::spec_by_name("Eletricity").unwrap();
+    let opts = synthetic::GenOptions { max_examples: 6000, ..Default::default() };
+    let ds = synthetic::generate(spec, 20230806, &opts);
+
+    let variants: Vec<(&str, NumericalSplit)> = vec![
+        ("exact in-sorting", NumericalSplit::ExactInSort),
+        ("exact pre-sorted", NumericalSplit::Presorted),
+        ("auto (per-node choice)", NumericalSplit::Auto),
+        ("histogram 255 bins", NumericalSplit::Histogram { bins: 255 }),
+        ("histogram 32 bins", NumericalSplit::Histogram { bins: 32 }),
+    ];
+    let mut t = Table::new(&["Splitter", "train (s)", "train accuracy"]);
+    for (name, numerical) in variants {
+        let mut cfg = GbtConfig::new("label");
+        cfg.num_trees = 15;
+        cfg.max_depth = 6;
+        cfg.validation_ratio = 0.0;
+        cfg.early_stopping = EarlyStopping::None;
+        cfg.splitter.numerical = numerical;
+        let t0 = std::time::Instant::now();
+        let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        let acc = ydf::evaluation_free_accuracy(model.as_ref(), &ds);
+        t.row(vec![name.to_string(), format!("{secs:.2}"), format!("{acc:.4}")]);
+    }
+    println!("Splitter ablation (GBT, 15 trees, {} examples)\n{}", ds.num_rows(), t.render());
+}

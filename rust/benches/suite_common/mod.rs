@@ -1,0 +1,37 @@
+//! Shared scaled-down suite configuration for the table/figure benches.
+//! Each bench binary regenerates one paper artifact; the configuration is
+//! printed so the scale is explicit in the recorded output.
+
+use ydf::benchmark::learners::LearnerScale;
+use ydf::benchmark::{run_suite, SuiteConfig, SuiteResult};
+
+pub fn bench_config() -> SuiteConfig {
+    SuiteConfig {
+        datasets: vec![
+            "Iris",
+            "Blood_Transfusion",
+            "Diabetes",
+            "Banknote_Authentication",
+            "Credit_Approval",
+            "TicTacToe",
+        ],
+        folds: 3,
+        max_examples: 300,
+        max_features: 16,
+        scale: LearnerScale { num_trees: 10, tuner_trials: 2 },
+        seed: 20230806,
+    }
+}
+
+pub fn run() -> SuiteResult {
+    let config = bench_config();
+    eprintln!(
+        "[suite] {} datasets, {} folds, {} trees, {} trials (paper: 70 datasets, 10 folds, \
+         500 trees, 300 trials — scale with `ydf benchmark_suite --full`)",
+        config.datasets.len(),
+        config.folds,
+        config.scale.num_trees,
+        config.scale.tuner_trials
+    );
+    run_suite(&config, |_| {})
+}

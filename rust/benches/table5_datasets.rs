@@ -1,0 +1,6 @@
+//! Table 5: dataset inventory of the synthetic suite.
+//! Run: cargo bench --bench table5_datasets
+
+fn main() {
+    println!("{}", ydf::benchmark::table5_report());
+}

@@ -1,0 +1,12 @@
+//! Regenerates the paper artifact via the shared scaled suite.
+//! Run: cargo bench --bench table6_train_time
+
+#[path = "suite_common/mod.rs"]
+mod suite_common;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let result = suite_common::run();
+    println!("{}", result.time_table_report(false));
+    eprintln!("[suite] completed in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,313 @@
+//! KDD'23 benchmark harness (§5): runs the 16 learners over the synthetic
+//! Table 5 suite with consistent 10-fold cross-validation and regenerates
+//! Figure 6 and Tables 2, 3, 4, 5, 6 and 7.
+
+pub mod learners;
+
+use crate::dataset::synthetic::{self, GenOptions, SyntheticSpec};
+use crate::evaluation::comparison::PairwiseComparison;
+use crate::evaluation::cv::cross_validate;
+use crate::utils::bench::{bar_chart, Table};
+use crate::utils::stats;
+use learners::{benchmark_learners, untuned_learner_names, LearnerScale};
+
+/// Suite configuration. The default is scaled for a single-core budget;
+/// `SuiteConfig::full()` mirrors the paper's protocol (70 datasets, 10
+/// folds, 500 trees, 300 trials) and takes correspondingly long.
+#[derive(Clone, Debug)]
+pub struct SuiteConfig {
+    /// Dataset names from Table 5 (`synthetic::TABLE5`).
+    pub datasets: Vec<&'static str>,
+    pub folds: usize,
+    pub max_examples: usize,
+    pub max_features: usize,
+    pub scale: LearnerScale,
+    pub seed: u64,
+}
+
+impl Default for SuiteConfig {
+    fn default() -> Self {
+        SuiteConfig {
+            datasets: vec![
+                "Iris",
+                "Blood_Transfusion",
+                "Diabetes",
+                "Banknote_Authentication",
+                "Credit_Approval",
+                "Balance_Scale",
+                "TicTacToe",
+                "Dresses_Sales",
+                "ILPD",
+                "Vowel",
+            ],
+            folds: 3,
+            max_examples: 400,
+            max_features: 24,
+            scale: LearnerScale { num_trees: 15, tuner_trials: 3 },
+            seed: 20230806, // KDD'23 started 2023-08-06
+        }
+    }
+}
+
+impl SuiteConfig {
+    /// The paper-faithful configuration (hours of compute on this testbed).
+    pub fn full() -> SuiteConfig {
+        SuiteConfig {
+            datasets: synthetic::TABLE5.iter().map(|s| s.name).collect(),
+            folds: 10,
+            max_examples: usize::MAX,
+            max_features: usize::MAX,
+            scale: LearnerScale { num_trees: 500, tuner_trials: 300 },
+            seed: 20230806,
+        }
+    }
+}
+
+/// Raw per-(dataset × learner × fold) results.
+pub struct SuiteResult {
+    pub config: SuiteConfig,
+    pub learner_names: Vec<&'static str>,
+    pub dataset_names: Vec<&'static str>,
+    /// accuracy[dataset][learner][fold]
+    pub accuracy: Vec<Vec<Vec<f64>>>,
+    /// mean seconds per fold
+    pub train_seconds: Vec<Vec<f64>>,
+    pub inference_seconds: Vec<Vec<f64>>,
+}
+
+/// Runs the suite. `progress` receives one line per (dataset, learner).
+pub fn run_suite(config: &SuiteConfig, mut progress: impl FnMut(&str)) -> SuiteResult {
+    let learner_names: Vec<&'static str> =
+        benchmark_learners("label", config.scale).into_iter().map(|(n, _)| n).collect();
+    let mut accuracy = Vec::new();
+    let mut train_seconds = Vec::new();
+    let mut inference_seconds = Vec::new();
+    let gen_opts = GenOptions {
+        max_examples: config.max_examples,
+        max_features: config.max_features,
+        ..Default::default()
+    };
+    for ds_name in &config.datasets {
+        let spec: &SyntheticSpec =
+            synthetic::spec_by_name(ds_name).unwrap_or_else(|| panic!("unknown dataset {ds_name}"));
+        let ds = synthetic::generate(spec, config.seed, &gen_opts);
+        let mut ds_acc = Vec::new();
+        let mut ds_train = Vec::new();
+        let mut ds_infer = Vec::new();
+        for (name, learner) in benchmark_learners("label", config.scale) {
+            let cv = cross_validate(learner.as_ref(), &ds, config.folds, config.seed)
+                .unwrap_or_else(|e| panic!("{ds_name}/{name}: {e}"));
+            progress(&format!(
+                "{ds_name:>24} {name:<28} acc={:.4} train={:.2}s",
+                cv.mean_accuracy(),
+                cv.mean_train_seconds()
+            ));
+            ds_acc.push(cv.fold_evaluations.iter().map(|e| e.accuracy).collect());
+            ds_train.push(cv.mean_train_seconds());
+            ds_infer.push(cv.mean_inference_seconds());
+        }
+        accuracy.push(ds_acc);
+        train_seconds.push(ds_train);
+        inference_seconds.push(ds_infer);
+    }
+    SuiteResult {
+        config: config.clone(),
+        learner_names,
+        dataset_names: config.datasets.clone(),
+        accuracy,
+        train_seconds,
+        inference_seconds,
+    }
+}
+
+impl SuiteResult {
+    fn mean_accuracy(&self, dataset: usize, learner: usize) -> f64 {
+        stats::mean(&self.accuracy[dataset][learner])
+    }
+
+    /// Mean rank per learner (Figure 6): rank learners per dataset by mean
+    /// CV accuracy (rank 1 = best), average over datasets.
+    pub fn mean_ranks(&self) -> Vec<(String, f64)> {
+        let nl = self.learner_names.len();
+        let mut rank_sum = vec![0.0; nl];
+        for d in 0..self.dataset_names.len() {
+            // Negate accuracy so rank 1 = highest accuracy.
+            let neg_acc: Vec<f64> = (0..nl).map(|l| -self.mean_accuracy(d, l)).collect();
+            let ranks = stats::fractional_ranks(&neg_acc);
+            for (s, r) in rank_sum.iter_mut().zip(&ranks) {
+                *s += r;
+            }
+        }
+        let nd = self.dataset_names.len().max(1) as f64;
+        let mut out: Vec<(String, f64)> = self
+            .learner_names
+            .iter()
+            .zip(&rank_sum)
+            .map(|(n, &s)| (n.to_string(), s / nd))
+            .collect();
+        out.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        out
+    }
+
+    /// Figure 6: mean learner ranks as an ASCII bar chart (smaller =
+    /// better).
+    pub fn fig6_report(&self) -> String {
+        let ranks = self.mean_ranks();
+        format!(
+            "Figure 6 — Mean learner ranks over {} datasets ({} folds). Smaller is better.\n{}",
+            self.dataset_names.len(),
+            self.config.folds,
+            bar_chart(&ranks, 30)
+        )
+    }
+
+    /// Table 2: mean training and inference seconds of the untuned
+    /// learners, ordered by quality rank.
+    pub fn table2_report(&self) -> String {
+        let ranks = self.mean_ranks();
+        let mut t = Table::new(&["Learner", "training (s)", "inference (s)"]);
+        for untuned in untuned_learner_names() {
+            // Order rows by the rank computed above, as the paper does.
+            let _ = &ranks;
+            let l = self.learner_names.iter().position(|n| *n == untuned).unwrap();
+            let train = stats::mean(
+                &(0..self.dataset_names.len())
+                    .map(|d| self.train_seconds[d][l])
+                    .collect::<Vec<_>>(),
+            );
+            let infer = stats::mean(
+                &(0..self.dataset_names.len())
+                    .map(|d| self.inference_seconds[d][l])
+                    .collect::<Vec<_>>(),
+            );
+            t.row(vec![untuned.to_string(), format!("{train:.3}"), format!("{infer:.4}")]);
+        }
+        format!("Table 2 — Mean training and inference duration (untuned learners)\n{}", t.render())
+    }
+
+    /// Table 3: pairwise wins/losses over all (dataset, fold) pairs.
+    pub fn table3_report(&self) -> String {
+        let nl = self.learner_names.len();
+        let order: Vec<usize> = {
+            let ranks = self.mean_ranks();
+            ranks
+                .iter()
+                .map(|(n, _)| self.learner_names.iter().position(|x| x == n).unwrap())
+                .collect()
+        };
+        let mut header = vec!["row \\ col"];
+        let idx_label: Vec<String> = (1..=nl).map(|i| format!("{i}")).collect();
+        header.extend(idx_label.iter().map(|s| s.as_str()));
+        let mut t = Table::new(&header);
+        for (ri, &l_row) in order.iter().enumerate() {
+            let mut cells = vec![format!("{} {}", ri + 1, self.learner_names[l_row])];
+            for &l_col in &order {
+                if l_row == l_col {
+                    cells.push("-".to_string());
+                    continue;
+                }
+                let a: Vec<f64> = self.accuracy.iter().flat_map(|d| d[l_row].clone()).collect();
+                let b: Vec<f64> = self.accuracy.iter().flat_map(|d| d[l_col].clone()).collect();
+                let cmp = PairwiseComparison::from_paired(&a, &b);
+                cells.push(cmp.cell());
+            }
+            t.row(cells);
+        }
+        format!(
+            "Table 3 — Pairwise wins/losses (row vs column) over all dataset x fold pairs\n{}",
+            t.render()
+        )
+    }
+
+    /// Table 4: per-dataset mean accuracy, learners sorted by rank.
+    pub fn table4_report(&self) -> String {
+        let ranks = self.mean_ranks();
+        let mut header = vec!["Learner".to_string(), "Avg.Rank".to_string()];
+        header.extend(self.dataset_names.iter().map(|n| n.to_string()));
+        let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(&header_refs);
+        for (name, rank) in &ranks {
+            let l = self.learner_names.iter().position(|n| n == name).unwrap();
+            let mut cells = vec![name.clone(), format!("{rank:.1}")];
+            for d in 0..self.dataset_names.len() {
+                cells.push(format!("{:.3}", self.mean_accuracy(d, l)));
+            }
+            t.row(cells);
+        }
+        format!("Table 4 — Accuracy per learner per dataset (mean over folds)\n{}", t.render())
+    }
+
+    /// Tables 6/7: per-dataset training / inference time of untuned
+    /// learners.
+    pub fn time_table_report(&self, inference: bool) -> String {
+        let mut header = vec!["Learner".to_string()];
+        header.extend(self.dataset_names.iter().map(|n| n.to_string()));
+        let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(&header_refs);
+        for untuned in untuned_learner_names() {
+            let l = self.learner_names.iter().position(|n| *n == untuned).unwrap();
+            let mut cells = vec![untuned.to_string()];
+            for d in 0..self.dataset_names.len() {
+                let v = if inference {
+                    self.inference_seconds[d][l]
+                } else {
+                    self.train_seconds[d][l]
+                };
+                cells.push(format!("{v:.4}"));
+            }
+            t.row(cells);
+        }
+        let which = if inference { "7 — Inference" } else { "6 — Training" };
+        format!("Table {which} time in seconds per dataset (untuned learners)\n{}", t.render())
+    }
+}
+
+/// Table 5: the dataset inventory.
+pub fn table5_report() -> String {
+    let mut t =
+        Table::new(&["Dataset", "Examples", "Features", "Categorical", "Numerical", "Classes"]);
+    for s in synthetic::TABLE5 {
+        t.row(vec![
+            s.name.to_string(),
+            s.examples.to_string(),
+            s.features().to_string(),
+            s.categorical.to_string(),
+            s.numerical.to_string(),
+            s.classes.to_string(),
+        ]);
+    }
+    format!("Table 5 — Name and size of the datasets (synthetic suite)\n{}", t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_suite_runs_end_to_end() {
+        let config = SuiteConfig {
+            datasets: vec!["Iris", "Blood_Transfusion"],
+            folds: 2,
+            max_examples: 120,
+            max_features: 8,
+            scale: LearnerScale { num_trees: 3, tuner_trials: 1 },
+            seed: 1,
+        };
+        let result = run_suite(&config, |_| {});
+        assert_eq!(result.dataset_names.len(), 2);
+        assert_eq!(result.learner_names.len(), 16);
+        let ranks = result.mean_ranks();
+        assert_eq!(ranks.len(), 16);
+        // Ranks average to (1 + 16) / 2.
+        let mean_of_ranks: f64 = ranks.iter().map(|(_, r)| r).sum::<f64>() / 16.0;
+        assert!((mean_of_ranks - 8.5).abs() < 1e-9, "{mean_of_ranks}");
+        // All report renderers produce non-empty output.
+        assert!(result.fig6_report().contains("Figure 6"));
+        assert!(result.table2_report().contains("Table 2"));
+        assert!(result.table3_report().contains("Table 3"));
+        assert!(result.table4_report().contains("Table 4"));
+        assert!(result.time_table_report(false).contains("Table 6"));
+        assert!(result.time_table_report(true).contains("Table 7"));
+        assert!(table5_report().contains("Adult"));
+    }
+}

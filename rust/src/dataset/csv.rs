@@ -1,0 +1,299 @@
+//! CSV reader/writer (§3.5 READERS/WRITERS).
+//!
+//! Handles RFC-4180 quoting, embedded separators/newlines and missing cells
+//! (empty string or `?`, the UCI convention used by the Adult dataset of the
+//! paper's usage example).
+
+use super::dataspec::{infer_dataspec, InferenceOptions, RawColumn};
+use super::{AttrValue, ColumnData, Dataset};
+use std::io::Write;
+use std::path::Path;
+
+/// Parses CSV text into header + string cells.
+pub fn parse_csv(text: &str) -> Result<(Vec<String>, Vec<Vec<Option<String>>>), String> {
+    let mut rows: Vec<Vec<Option<String>>> = Vec::new();
+    let mut record: Vec<Option<String>> = Vec::new();
+    let mut field = String::new();
+    let mut in_quotes = false;
+    let mut field_was_quoted = false;
+    let mut chars = text.chars().peekable();
+
+    let push_field = |record: &mut Vec<Option<String>>, field: &mut String, quoted: bool| {
+        let raw = std::mem::take(field);
+        let trimmed = raw.trim();
+        if !quoted && (trimmed.is_empty() || trimmed == "?") {
+            record.push(None);
+        } else if quoted {
+            record.push(Some(raw));
+        } else {
+            record.push(Some(trimmed.to_string()));
+        }
+    };
+
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        field.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                c => field.push(c),
+            }
+        } else {
+            match c {
+                '"' => {
+                    in_quotes = true;
+                    field_was_quoted = true;
+                }
+                ',' => {
+                    push_field(&mut record, &mut field, field_was_quoted);
+                    field_was_quoted = false;
+                }
+                '\r' => {} // tolerate CRLF
+                '\n' => {
+                    push_field(&mut record, &mut field, field_was_quoted);
+                    field_was_quoted = false;
+                    rows.push(std::mem::take(&mut record));
+                }
+                c => field.push(c),
+            }
+        }
+    }
+    if in_quotes {
+        return Err("CSV parse error: unterminated quoted field at end of input".to_string());
+    }
+    if !field.is_empty() || !record.is_empty() {
+        push_field(&mut record, &mut field, field_was_quoted);
+        rows.push(record);
+    }
+    if rows.is_empty() {
+        return Err("CSV parse error: the file is empty (no header row found)".to_string());
+    }
+    let header: Vec<String> = rows
+        .remove(0)
+        .into_iter()
+        .map(|c| c.unwrap_or_default())
+        .collect();
+    for (i, r) in rows.iter().enumerate() {
+        if r.len() != header.len() {
+            return Err(format!(
+                "CSV parse error: row {} has {} fields but the header declares {}. Check for \
+                 unquoted separators.",
+                i + 2,
+                r.len(),
+                header.len()
+            ));
+        }
+    }
+    Ok((header, rows))
+}
+
+/// Reads a CSV string into a `Dataset`, inferring the dataspec.
+pub fn read_csv_str(text: &str, options: &InferenceOptions) -> Result<Dataset, String> {
+    let (header, rows) = parse_csv(text)?;
+    let mut raw_cols: Vec<RawColumn> = header
+        .iter()
+        .map(|name| RawColumn { name: name.clone(), values: Vec::with_capacity(rows.len()) })
+        .collect();
+    for row in rows {
+        for (c, cell) in row.into_iter().enumerate() {
+            raw_cols[c].values.push(cell);
+        }
+    }
+    let inferred = infer_dataspec(&raw_cols, options)?;
+    Dataset::new(inferred.spec, inferred.columns)
+}
+
+/// Reads a CSV file into a `Dataset`.
+pub fn read_csv_file(path: &Path, options: &InferenceOptions) -> Result<Dataset, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read CSV file {}: {e}", path.display()))?;
+    read_csv_str(&text, options)
+}
+
+fn escape_cell(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Writes a dataset back to CSV text (WRITERS module).
+pub fn write_csv_string(ds: &Dataset) -> String {
+    let mut out = String::new();
+    let names: Vec<String> =
+        ds.spec.columns.iter().map(|c| escape_cell(&c.name)).collect();
+    out.push_str(&names.join(","));
+    out.push('\n');
+    for r in 0..ds.num_rows() {
+        let mut cells = Vec::with_capacity(ds.num_columns());
+        for (ci, col) in ds.columns.iter().enumerate() {
+            let spec = &ds.spec.columns[ci];
+            let cell = if col.is_missing(r) {
+                String::new()
+            } else {
+                match col {
+                    ColumnData::Numerical(v) => format!("{}", v[r]),
+                    ColumnData::Categorical(v) => {
+                        escape_cell(&spec.dictionary[v[r] as usize])
+                    }
+                    ColumnData::Boolean(v) => {
+                        if v[r] == 1 { "true".into() } else { "false".into() }
+                    }
+                    ColumnData::CategoricalSet { .. } => {
+                        let toks: Vec<&str> = col
+                            .set_values(r)
+                            .unwrap()
+                            .iter()
+                            .map(|&t| spec.dictionary[t as usize].as_str())
+                            .collect();
+                        escape_cell(&toks.join(" "))
+                    }
+                }
+            };
+            cells.push(cell);
+        }
+        out.push_str(&cells.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+/// Writes predictions to CSV (`predict --output=csv:...` in the CLI flow).
+pub fn write_predictions_csv<W: Write>(
+    w: &mut W,
+    class_names: &[String],
+    probabilities: &[Vec<f64>],
+) -> std::io::Result<()> {
+    writeln!(w, "{}", class_names.join(","))?;
+    for p in probabilities {
+        let cells: Vec<String> = p.iter().map(|x| format!("{x}")).collect();
+        writeln!(w, "{}", cells.join(","))?;
+    }
+    Ok(())
+}
+
+/// Converts one CSV-style string row into an observation for the given
+/// dataset spec (single-example serving path).
+pub fn observation_from_strs(
+    ds_spec: &super::DataSpec,
+    cells: &[Option<&str>],
+) -> Result<super::Observation, String> {
+    if cells.len() != ds_spec.columns.len() {
+        return Err(format!(
+            "expected {} cells, got {}",
+            ds_spec.columns.len(),
+            cells.len()
+        ));
+    }
+    let mut obs = Vec::with_capacity(cells.len());
+    for (spec, cell) in ds_spec.columns.iter().zip(cells) {
+        let v = match cell {
+            None => AttrValue::Missing,
+            Some(s) => match spec.semantic {
+                super::FeatureSemantic::Numerical => AttrValue::Num(
+                    s.trim()
+                        .parse::<f32>()
+                        .map_err(|_| format!("bad numerical value '{s}' for '{}'", spec.name))?,
+                ),
+                super::FeatureSemantic::Categorical => spec
+                    .category_index(s)
+                    .map(AttrValue::Cat)
+                    .unwrap_or(AttrValue::Missing),
+                super::FeatureSemantic::Boolean => {
+                    AttrValue::Bool(matches!(s.trim(), "true" | "1"))
+                }
+                super::FeatureSemantic::CategoricalSet => AttrValue::CatSet(
+                    s.split_whitespace()
+                        .filter_map(|t| spec.category_index(t))
+                        .collect(),
+                ),
+            },
+        };
+        obs.push(v);
+    }
+    Ok(obs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::FeatureSemantic;
+
+    const SAMPLE: &str = "age,workclass,income\n44,Private,<=50K\n20,Private,<=50K\n67,\"Self-emp, inc\",>50K\n51,?,<=50K\n33,Private,>50K\n18,Private,<=50K\n29,Private,<=50K\n";
+
+    #[test]
+    fn parses_quotes_and_missing() {
+        let (header, rows) = parse_csv(SAMPLE).unwrap();
+        assert_eq!(header, vec!["age", "workclass", "income"]);
+        assert_eq!(rows.len(), 7);
+        assert_eq!(rows[2][1].as_deref(), Some("Self-emp, inc"));
+        assert_eq!(rows[3][1], None); // "?" is missing
+    }
+
+    #[test]
+    fn reads_dataset_with_inference() {
+        let ds = read_csv_str(SAMPLE, &InferenceOptions::default()).unwrap();
+        assert_eq!(ds.num_rows(), 7);
+        assert_eq!(ds.spec.columns[0].semantic, FeatureSemantic::Numerical);
+        assert_eq!(ds.spec.columns[1].semantic, FeatureSemantic::Categorical);
+        assert_eq!(ds.spec.columns[2].semantic, FeatureSemantic::Categorical);
+        assert!(ds.column(1).is_missing(3));
+    }
+
+    #[test]
+    fn roundtrip_write_read() {
+        let ds = read_csv_str(SAMPLE, &InferenceOptions::default()).unwrap();
+        let text = write_csv_string(&ds);
+        let ds2 = read_csv_str(&text, &InferenceOptions::default()).unwrap();
+        assert_eq!(ds2.num_rows(), ds.num_rows());
+        assert_eq!(
+            ds2.column(0).as_numerical().unwrap(),
+            ds.column(0).as_numerical().unwrap()
+        );
+    }
+
+    #[test]
+    fn row_count_mismatch_is_descriptive() {
+        let err = parse_csv("a,b\n1\n").unwrap_err();
+        assert!(err.contains("row 2 has 1 fields"), "{err}");
+    }
+
+    #[test]
+    fn quoted_newline() {
+        let (_, rows) = parse_csv("a,b\n\"x\ny\",2\n").unwrap();
+        assert_eq!(rows[0][0].as_deref(), Some("x\ny"));
+    }
+
+    #[test]
+    fn crlf_tolerated() {
+        let (h, rows) = parse_csv("a,b\r\n1,2\r\n").unwrap();
+        assert_eq!(h, vec!["a", "b"]);
+        assert_eq!(rows.len(), 1);
+    }
+
+    #[test]
+    fn observation_parsing() {
+        let ds = read_csv_str(SAMPLE, &InferenceOptions::default()).unwrap();
+        let obs =
+            observation_from_strs(&ds.spec, &[Some("40"), Some("Private"), Some("<=50K")])
+                .unwrap();
+        assert_eq!(obs[0], AttrValue::Num(40.0));
+        assert!(matches!(obs[1], AttrValue::Cat(_)));
+        // Unknown category degrades to Missing, not an error.
+        let obs2 =
+            observation_from_strs(&ds.spec, &[Some("40"), Some("Unseen"), None]).unwrap();
+        assert_eq!(obs2[1], AttrValue::Missing);
+        assert_eq!(obs2[2], AttrValue::Missing);
+    }
+
+    #[test]
+    fn empty_file_error() {
+        assert!(parse_csv("").is_err());
+    }
+}

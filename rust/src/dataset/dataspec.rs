@@ -1,0 +1,747 @@
+//! Dataspec: per-column semantics, statistics and dictionaries, plus the
+//! automated semantic-inference heuristics of §3.4.
+//!
+//! "Any operation that can be automated should be automated, the user should
+//! be made aware of the automation, and should be given control over it"
+//! (§2.1): `infer` produces the spec from raw string columns, `describe`
+//! renders the human-readable report of what was decided, and callers may
+//! override any column before building the dataset.
+
+use crate::utils::histogram::TextHistogram;
+use crate::utils::json::Json;
+use crate::utils::stats::Moments;
+use std::collections::HashMap;
+
+/// Model-agnostic feature semantics (§3.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FeatureSemantic {
+    /// Total ordering and scale significance (quantities, counts).
+    Numerical,
+    /// Discrete space without order (types, colors).
+    Categorical,
+    /// True/false.
+    Boolean,
+    /// A value is a *set* of categories (e.g. tokenized text).
+    CategoricalSet,
+}
+
+impl FeatureSemantic {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FeatureSemantic::Numerical => "NUMERICAL",
+            FeatureSemantic::Categorical => "CATEGORICAL",
+            FeatureSemantic::Boolean => "BOOLEAN",
+            FeatureSemantic::CategoricalSet => "CATEGORICAL_SET",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<FeatureSemantic> {
+        match s {
+            "NUMERICAL" => Some(FeatureSemantic::Numerical),
+            "CATEGORICAL" => Some(FeatureSemantic::Categorical),
+            "BOOLEAN" => Some(FeatureSemantic::Boolean),
+            "CATEGORICAL_SET" => Some(FeatureSemantic::CategoricalSet),
+            _ => None,
+        }
+    }
+}
+
+/// Numerical column statistics, used for reports and global imputation.
+#[derive(Clone, Debug, Default)]
+pub struct NumericalStats {
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub std: f64,
+}
+
+/// Per-column specification.
+#[derive(Clone, Debug)]
+pub struct ColumnSpec {
+    pub name: String,
+    pub semantic: FeatureSemantic,
+    /// Dictionary for categorical / categorical-set columns; index = code.
+    pub dictionary: Vec<String>,
+    /// Occurrence count per dictionary entry (same length as `dictionary`).
+    pub dict_counts: Vec<u64>,
+    /// Count of out-of-dictionary items observed during inference.
+    pub ood_items: u64,
+    pub num_stats: NumericalStats,
+    /// Number of missing (non-available) values observed.
+    pub missing_count: u64,
+    /// True if the user set the semantic explicitly rather than relying on
+    /// automated inference (shown in reports as `manually-defined`).
+    pub manually_defined: bool,
+}
+
+impl ColumnSpec {
+    pub fn numerical(name: &str) -> ColumnSpec {
+        ColumnSpec {
+            name: name.to_string(),
+            semantic: FeatureSemantic::Numerical,
+            dictionary: vec![],
+            dict_counts: vec![],
+            ood_items: 0,
+            num_stats: NumericalStats::default(),
+            missing_count: 0,
+            manually_defined: false,
+        }
+    }
+
+    pub fn categorical(name: &str, dictionary: Vec<String>) -> ColumnSpec {
+        let n = dictionary.len();
+        ColumnSpec {
+            name: name.to_string(),
+            semantic: FeatureSemantic::Categorical,
+            dictionary,
+            dict_counts: vec![0; n],
+            ood_items: 0,
+            num_stats: NumericalStats::default(),
+            missing_count: 0,
+            manually_defined: false,
+        }
+    }
+
+    pub fn boolean(name: &str) -> ColumnSpec {
+        ColumnSpec { semantic: FeatureSemantic::Boolean, ..ColumnSpec::numerical(name) }
+    }
+
+    pub fn catset(name: &str, dictionary: Vec<String>) -> ColumnSpec {
+        ColumnSpec {
+            semantic: FeatureSemantic::CategoricalSet,
+            ..ColumnSpec::categorical(name, dictionary)
+        }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.dictionary.len()
+    }
+
+    /// Dictionary index of a category name.
+    pub fn category_index(&self, value: &str) -> Option<u32> {
+        self.dictionary.iter().position(|d| d == value).map(|i| i as u32)
+    }
+
+    /// Most frequent category (global imputation value for categoricals).
+    pub fn most_frequent_category(&self) -> Option<u32> {
+        self.dict_counts
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &c)| c)
+            .map(|(i, _)| i as u32)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", Json::Str(self.name.clone()))
+            .set("semantic", Json::Str(self.semantic.name().into()))
+            .set(
+                "dictionary",
+                Json::Arr(self.dictionary.iter().map(|s| Json::Str(s.clone())).collect()),
+            )
+            .set(
+                "dict_counts",
+                Json::Arr(self.dict_counts.iter().map(|&c| Json::Num(c as f64)).collect()),
+            )
+            .set("ood_items", Json::Num(self.ood_items as f64))
+            .set("mean", Json::Num(self.num_stats.mean))
+            .set("min", Json::Num(self.num_stats.min))
+            .set("max", Json::Num(self.num_stats.max))
+            .set("std", Json::Num(self.num_stats.std))
+            .set("missing_count", Json::Num(self.missing_count as f64))
+            .set("manually_defined", Json::Bool(self.manually_defined));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<ColumnSpec, String> {
+        let semantic_name = j.req_str("semantic")?;
+        let semantic = FeatureSemantic::from_name(semantic_name)
+            .ok_or_else(|| format!("unknown feature semantic '{semantic_name}'"))?;
+        let dictionary: Vec<String> = j
+            .req_arr("dictionary")?
+            .iter()
+            .map(|v| v.as_str().unwrap_or_default().to_string())
+            .collect();
+        let dict_counts: Vec<u64> = j
+            .req_arr("dict_counts")?
+            .iter()
+            .map(|v| v.as_f64().unwrap_or(0.0) as u64)
+            .collect();
+        Ok(ColumnSpec {
+            name: j.req_str("name")?.to_string(),
+            semantic,
+            dictionary,
+            dict_counts,
+            ood_items: j.req_f64("ood_items")? as u64,
+            num_stats: NumericalStats {
+                mean: j.req_f64("mean")?,
+                min: j.req_f64("min")?,
+                max: j.req_f64("max")?,
+                std: j.req_f64("std")?,
+            },
+            missing_count: j.req_f64("missing_count")? as u64,
+            manually_defined: j.get("manually_defined").and_then(|v| v.as_bool()).unwrap_or(false),
+        })
+    }
+}
+
+/// Dataset specification: the ordered list of columns.
+#[derive(Clone, Debug)]
+pub struct DataSpec {
+    pub columns: Vec<ColumnSpec>,
+}
+
+impl DataSpec {
+    pub fn column(&self, name: &str) -> Option<&ColumnSpec> {
+        self.columns.iter().find(|c| c.name == name)
+    }
+
+    pub fn column_index(&self, name: &str) -> Option<usize> {
+        self.columns.iter().position(|c| c.name == name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("columns", Json::Arr(self.columns.iter().map(|c| c.to_json()).collect()));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<DataSpec, String> {
+        let columns = j
+            .req_arr("columns")?
+            .iter()
+            .map(ColumnSpec::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(DataSpec { columns })
+    }
+
+    /// Renders the `show_dataspec` report (Appendix B.1 format).
+    pub fn describe(&self, num_rows: usize) -> String {
+        let mut by_sem: HashMap<&'static str, usize> = HashMap::new();
+        for c in &self.columns {
+            *by_sem.entry(c.semantic.name()).or_insert(0) += 1;
+        }
+        let mut out = format!(
+            "Number of records: {}\nNumber of columns: {}\n\nNumber of columns by type:\n",
+            num_rows,
+            self.columns.len()
+        );
+        let mut sems: Vec<_> = by_sem.iter().collect();
+        sems.sort();
+        for (sem, count) in sems {
+            out.push_str(&format!(
+                "    {}: {} ({:.0}%)\n",
+                sem,
+                count,
+                100.0 * *count as f64 / self.columns.len().max(1) as f64
+            ));
+        }
+        out.push_str("\nColumns:\n");
+        for (i, c) in self.columns.iter().enumerate() {
+            match c.semantic {
+                FeatureSemantic::Categorical | FeatureSemantic::CategoricalSet => {
+                    let most = c
+                        .most_frequent_category()
+                        .map(|m| {
+                            format!(
+                                "most-frequent:\"{}\" {} ({:.4}%)",
+                                c.dictionary[m as usize],
+                                c.dict_counts[m as usize],
+                                100.0 * c.dict_counts[m as usize] as f64 / num_rows.max(1) as f64
+                            )
+                        })
+                        .unwrap_or_default();
+                    out.push_str(&format!(
+                        "    {}: \"{}\" {} has-dict vocab-size:{} {}-ood-items {}{}\n",
+                        i,
+                        c.name,
+                        c.semantic.name(),
+                        c.vocab_size(),
+                        if c.ood_items == 0 { "zero".to_string() } else { c.ood_items.to_string() },
+                        most,
+                        if c.manually_defined { " manually-defined" } else { "" },
+                    ));
+                }
+                FeatureSemantic::Numerical => {
+                    out.push_str(&format!(
+                        "    {}: \"{}\" NUMERICAL mean:{:.4} min:{} max:{} sd:{:.4}{}{}\n",
+                        i,
+                        c.name,
+                        c.num_stats.mean,
+                        c.num_stats.min,
+                        c.num_stats.max,
+                        c.num_stats.std,
+                        if c.missing_count > 0 {
+                            format!(" nas:{}", c.missing_count)
+                        } else {
+                            String::new()
+                        },
+                        if c.manually_defined { " manually-defined" } else { "" },
+                    ));
+                }
+                FeatureSemantic::Boolean => {
+                    out.push_str(&format!("    {}: \"{}\" BOOLEAN\n", i, c.name));
+                }
+            }
+        }
+        out.push_str(
+            "\nTerminology:\n    nas: Number of non-available (i.e. missing) values.\n    \
+             ood: Out of dictionary.\n    manually-defined: Attribute which type is manually \
+             defined by the user i.e. the type was not automatically inferred.\n    has-dict: \
+             The attribute is attached to a string dictionary.\n    vocab-size: Number of \
+             unique values.\n",
+        );
+        out
+    }
+}
+
+/// A raw (string) column prior to semantic inference.
+pub struct RawColumn {
+    pub name: String,
+    pub values: Vec<Option<String>>, // None = missing cell
+}
+
+/// Options controlling automated semantic inference (§3.4 heuristics). The
+/// defaults mirror YDF's: numbers become NUMERICAL unless their unique-value
+/// count is tiny; strings become CATEGORICAL; rare categories are pruned to
+/// out-of-dictionary.
+#[derive(Clone, Debug)]
+pub struct InferenceOptions {
+    /// A parsed-as-number column with at most this many distinct values is
+    /// treated as CATEGORICAL (e.g. {1, 2, 3} class codes).
+    pub max_unique_for_numerical_as_categorical: usize,
+    /// Maximum dictionary size; less frequent values become OOD.
+    pub max_vocab_size: usize,
+    /// Minimum occurrences for a dictionary entry.
+    pub min_vocab_frequency: u64,
+    /// Columns whose semantic the user forces.
+    pub overrides: Vec<(String, FeatureSemantic)>,
+}
+
+impl Default for InferenceOptions {
+    fn default() -> Self {
+        InferenceOptions {
+            max_unique_for_numerical_as_categorical: 5,
+            max_vocab_size: 2000,
+            min_vocab_frequency: 1,
+            overrides: vec![],
+        }
+    }
+}
+
+/// Result of dataspec inference: spec + encoded columns + user-facing notes
+/// about what was automated (§2.1: "the user should be made aware").
+pub struct InferredData {
+    pub spec: DataSpec,
+    pub columns: Vec<super::ColumnData>,
+    pub notes: Vec<String>,
+}
+
+/// Infers semantics and encodes raw columns into typed storage.
+pub fn infer_dataspec(raw: &[RawColumn], options: &InferenceOptions) -> Result<InferredData, String> {
+    let mut specs = Vec::with_capacity(raw.len());
+    let mut datas = Vec::with_capacity(raw.len());
+    let mut notes = Vec::new();
+    for col in raw {
+        let forced = options
+            .overrides
+            .iter()
+            .find(|(n, _)| n == &col.name)
+            .map(|(_, s)| *s);
+        let semantic = forced.unwrap_or_else(|| guess_semantic(col, options));
+        let (mut spec, data) = encode_column(col, semantic, options)?;
+        spec.manually_defined = forced.is_some();
+        if forced.is_none() {
+            notes.push(format!(
+                "column \"{}\": automatically detected semantic {} ({}). Override with \
+                 InferenceOptions::overrides if incorrect.",
+                col.name,
+                semantic.name(),
+                semantic_reason(col, semantic)
+            ));
+        }
+        specs.push(spec);
+        datas.push(data);
+    }
+    Ok(InferredData { spec: DataSpec { columns: specs }, columns: datas, notes })
+}
+
+fn is_number(s: &str) -> bool {
+    s.trim().parse::<f64>().map(|x| x.is_finite()).unwrap_or(false)
+}
+
+fn is_bool_token(s: &str) -> bool {
+    matches!(s.trim().to_ascii_lowercase().as_str(), "true" | "false")
+}
+
+fn semantic_reason(col: &RawColumn, sem: FeatureSemantic) -> &'static str {
+    let _ = col;
+    match sem {
+        FeatureSemantic::Numerical => "most values parse as numbers with many unique values",
+        FeatureSemantic::Categorical => "non-numeric strings or few unique values",
+        FeatureSemantic::Boolean => "all values are true/false",
+        FeatureSemantic::CategoricalSet => "values are whitespace-separated token sets",
+    }
+}
+
+fn guess_semantic(col: &RawColumn, options: &InferenceOptions) -> FeatureSemantic {
+    let present: Vec<&str> = col.values.iter().flatten().map(|s| s.as_str()).collect();
+    if present.is_empty() {
+        return FeatureSemantic::Numerical;
+    }
+    if present.iter().all(|s| is_bool_token(s)) {
+        return FeatureSemantic::Boolean;
+    }
+    let numeric = present.iter().filter(|s| is_number(s)).count();
+    let numeric_frac = numeric as f64 / present.len() as f64;
+    if numeric_frac >= 0.999 {
+        let mut unique: Vec<&str> = present.clone();
+        unique.sort_unstable();
+        unique.dedup();
+        if unique.len() <= options.max_unique_for_numerical_as_categorical {
+            return FeatureSemantic::Categorical;
+        }
+        return FeatureSemantic::Numerical;
+    }
+    FeatureSemantic::Categorical
+}
+
+fn encode_column(
+    col: &RawColumn,
+    semantic: FeatureSemantic,
+    options: &InferenceOptions,
+) -> Result<(ColumnSpec, super::ColumnData), String> {
+    use super::{ColumnData, MISSING_BOOL, MISSING_CAT};
+    match semantic {
+        FeatureSemantic::Numerical => {
+            let mut spec = ColumnSpec::numerical(&col.name);
+            let mut m = Moments::new();
+            let mut values = Vec::with_capacity(col.values.len());
+            for v in &col.values {
+                match v {
+                    None => {
+                        spec.missing_count += 1;
+                        values.push(f32::NAN);
+                    }
+                    Some(s) => {
+                        let x: f64 = s.trim().parse().map_err(|_| {
+                            format!(
+                                "column \"{}\" is declared NUMERICAL but the value \"{}\" does \
+                                 not parse as a number. Possible solutions: (1) declare the \
+                                 column CATEGORICAL, or (2) clean the dataset.",
+                                col.name, s
+                            )
+                        })?;
+                        m.add(x);
+                        values.push(x as f32);
+                    }
+                }
+            }
+            if m.count() > 0 {
+                spec.num_stats =
+                    NumericalStats { mean: m.mean(), min: m.min(), max: m.max(), std: m.std() };
+            }
+            Ok((spec, ColumnData::Numerical(values)))
+        }
+        FeatureSemantic::Boolean => {
+            let mut spec = ColumnSpec::boolean(&col.name);
+            let mut values = Vec::with_capacity(col.values.len());
+            for v in &col.values {
+                match v.as_deref().map(|s| s.trim().to_ascii_lowercase()) {
+                    None => {
+                        spec.missing_count += 1;
+                        values.push(MISSING_BOOL);
+                    }
+                    Some(s) if s == "true" || s == "1" => values.push(1),
+                    Some(s) if s == "false" || s == "0" => values.push(0),
+                    Some(s) => {
+                        return Err(format!(
+                            "column \"{}\" is declared BOOLEAN but contains \"{s}\".",
+                            col.name
+                        ))
+                    }
+                }
+            }
+            Ok((spec, ColumnData::Boolean(values)))
+        }
+        FeatureSemantic::Categorical => {
+            // Build frequency-ordered dictionary.
+            let mut counts: HashMap<&str, u64> = HashMap::new();
+            for v in col.values.iter().flatten() {
+                *counts.entry(v.as_str()).or_insert(0) += 1;
+            }
+            let mut entries: Vec<(&str, u64)> = counts.into_iter().collect();
+            // Sort by (desc count, asc name) for determinism.
+            entries.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+            let mut ood = 0u64;
+            let mut kept = Vec::new();
+            for (i, (name, c)) in entries.iter().enumerate() {
+                if i < options.max_vocab_size && *c >= options.min_vocab_frequency {
+                    kept.push((*name, *c));
+                } else {
+                    ood += *c;
+                }
+            }
+            let dictionary: Vec<String> = kept.iter().map(|(n, _)| n.to_string()).collect();
+            let dict_counts: Vec<u64> = kept.iter().map(|(_, c)| *c).collect();
+            let lookup: HashMap<&str, u32> =
+                kept.iter().enumerate().map(|(i, (n, _))| (*n, i as u32)).collect();
+            let mut spec = ColumnSpec::categorical(&col.name, dictionary);
+            spec.dict_counts = dict_counts;
+            spec.ood_items = ood;
+            let mut values = Vec::with_capacity(col.values.len());
+            for v in &col.values {
+                match v {
+                    None => {
+                        spec.missing_count += 1;
+                        values.push(MISSING_CAT);
+                    }
+                    Some(s) => {
+                        // OOD values map to missing (YDF maps them to a
+                        // reserved OOD bucket; missing is the closest
+                        // behaviour without a dedicated code).
+                        values.push(*lookup.get(s.as_str()).unwrap_or(&MISSING_CAT));
+                    }
+                }
+            }
+            Ok((spec, ColumnData::Categorical(values)))
+        }
+        FeatureSemantic::CategoricalSet => {
+            // Values are whitespace-separated token lists.
+            let mut counts: HashMap<String, u64> = HashMap::new();
+            for v in col.values.iter().flatten() {
+                for tok in v.split_whitespace() {
+                    *counts.entry(tok.to_string()).or_insert(0) += 1;
+                }
+            }
+            let mut entries: Vec<(String, u64)> = counts.into_iter().collect();
+            entries.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+            entries.truncate(options.max_vocab_size);
+            let dictionary: Vec<String> = entries.iter().map(|(n, _)| n.clone()).collect();
+            let dict_counts: Vec<u64> = entries.iter().map(|(_, c)| *c).collect();
+            let lookup: HashMap<String, u32> = dictionary
+                .iter()
+                .enumerate()
+                .map(|(i, n)| (n.clone(), i as u32))
+                .collect();
+            let mut spec = ColumnSpec::catset(&col.name, dictionary);
+            spec.dict_counts = dict_counts;
+            let mut offsets = vec![0u32];
+            let mut values = Vec::new();
+            for v in &col.values {
+                match v {
+                    None => {
+                        spec.missing_count += 1;
+                        values.push(MISSING_CAT);
+                    }
+                    Some(s) => {
+                        for tok in s.split_whitespace() {
+                            if let Some(&code) = lookup.get(tok) {
+                                values.push(code);
+                            }
+                        }
+                    }
+                }
+                offsets.push(values.len() as u32);
+            }
+            Ok((spec, ColumnData::CategoricalSet { offsets, values }))
+        }
+    }
+}
+
+/// Safety-of-use check (§2.2): called by classification learners. If the
+/// label column looks like a regression target, returns the well-written
+/// error of Table 1(b) / §2.2 rather than training a nonsensical model.
+pub fn check_classification_label(
+    spec: &ColumnSpec,
+    num_rows: usize,
+    disable_error: bool,
+) -> Result<(), String> {
+    if spec.semantic == FeatureSemantic::Numerical {
+        return Err(format!(
+            "Classification training requires a CATEGORICAL label, however, the label column \
+             \"{}\" has NUMERICAL semantics. Possible solutions: (1) Configure the training as \
+             a regression with task=REGRESSION, or (2) force the label column to CATEGORICAL in \
+             the dataspec.",
+            spec.name
+        ));
+    }
+    let vocab = spec.vocab_size();
+    let numeric_looking = spec
+        .dictionary
+        .iter()
+        .filter(|d| d.trim().parse::<f64>().is_ok())
+        .count();
+    if !disable_error
+        && vocab > 50
+        && num_rows > 0
+        && numeric_looking as f64 >= 0.99 * vocab as f64
+    {
+        return Err(format!(
+            "The classification label column \"{}\" looks like a regression column ({} unique \
+             values for {} examples, {:.0}% of the values look like numbers). Solutions: (1) \
+             Configure the training as a regression with task=REGRESSION, or (2) disable the \
+             error with disable_error.classification_look_like_regression=true.",
+            spec.name,
+            vocab,
+            num_rows,
+            100.0 * numeric_looking as f64 / vocab as f64
+        ));
+    }
+    Ok(())
+}
+
+/// Renders the distribution of a numerical column (report helper).
+pub fn render_numerical_histogram(values: &[f32], bins: usize) -> String {
+    let mut h = TextHistogram::new();
+    h.extend(values.iter().filter(|v| !v.is_nan()).map(|&v| v as f64));
+    h.render(bins, 10)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(name: &str, vals: &[&str]) -> RawColumn {
+        RawColumn {
+            name: name.into(),
+            values: vals
+                .iter()
+                .map(|s| if s.is_empty() { None } else { Some(s.to_string()) })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn infers_numerical() {
+        let r = infer_dataspec(
+            &[raw("age", &["44", "20", "40", "30", "67", "18", "51.5"])],
+            &InferenceOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(r.spec.columns[0].semantic, FeatureSemantic::Numerical);
+        assert!(r.spec.columns[0].num_stats.max > 67.0 - 1e-6);
+    }
+
+    #[test]
+    fn infers_categorical_strings() {
+        let r = infer_dataspec(
+            &[raw("workclass", &["Private", "Private", "Self-emp", "Private"])],
+            &InferenceOptions::default(),
+        )
+        .unwrap();
+        let c = &r.spec.columns[0];
+        assert_eq!(c.semantic, FeatureSemantic::Categorical);
+        assert_eq!(c.dictionary[0], "Private"); // most frequent first
+        assert_eq!(c.dict_counts[0], 3);
+    }
+
+    #[test]
+    fn numeric_with_few_uniques_becomes_categorical() {
+        let r = infer_dataspec(
+            &[raw("code", &["1", "2", "1", "2", "3", "1"])],
+            &InferenceOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(r.spec.columns[0].semantic, FeatureSemantic::Categorical);
+    }
+
+    #[test]
+    fn infers_boolean() {
+        let r = infer_dataspec(
+            &[raw("flag", &["true", "false", "true"])],
+            &InferenceOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(r.spec.columns[0].semantic, FeatureSemantic::Boolean);
+    }
+
+    #[test]
+    fn missing_values_counted() {
+        let r = infer_dataspec(
+            &[raw("x", &["1", "", "3", "", "5", "6"])],
+            &InferenceOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(r.spec.columns[0].missing_count, 2);
+        let col = &r.columns[0];
+        assert!(col.is_missing(1) && col.is_missing(3));
+    }
+
+    #[test]
+    fn override_forces_semantic() {
+        let mut opts = InferenceOptions::default();
+        opts.overrides.push(("zip".into(), FeatureSemantic::Categorical));
+        let r = infer_dataspec(
+            &[raw("zip", &["94103", "10001", "60601", "94103", "73301", "94110"])],
+            &opts,
+        )
+        .unwrap();
+        assert_eq!(r.spec.columns[0].semantic, FeatureSemantic::Categorical);
+        assert!(r.spec.columns[0].manually_defined);
+    }
+
+    #[test]
+    fn classification_label_guard() {
+        // A numeric-looking high-cardinality label triggers the §2.2 error.
+        let vals: Vec<String> = (0..100).map(|i| format!("{}", i * 3 + 1)).collect();
+        let refs: Vec<&str> = vals.iter().map(|s| s.as_str()).collect();
+        let mut opts = InferenceOptions::default();
+        opts.overrides.push(("revenue".into(), FeatureSemantic::Categorical));
+        let r = infer_dataspec(&[raw("revenue", &refs)], &opts).unwrap();
+        let err =
+            check_classification_label(&r.spec.columns[0], 100, false).unwrap_err();
+        assert!(err.contains("looks like a regression column"), "{err}");
+        // And can be explicitly disabled (§2.2: option to ignore).
+        assert!(check_classification_label(&r.spec.columns[0], 100, true).is_ok());
+    }
+
+    #[test]
+    fn dataspec_json_roundtrip() {
+        let r = infer_dataspec(
+            &[
+                raw("age", &["1", "2", "3", "4", "5", "6", "7"]),
+                raw("color", &["red", "blue", "red"]),
+            ],
+            &InferenceOptions::default(),
+        )
+        .unwrap();
+        let j = r.spec.to_json();
+        let back = DataSpec::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.columns.len(), 2);
+        assert_eq!(back.columns[1].dictionary, r.spec.columns[1].dictionary);
+        assert_eq!(back.columns[0].semantic, FeatureSemantic::Numerical);
+    }
+
+    #[test]
+    fn describe_mentions_counts() {
+        let r = infer_dataspec(
+            &[raw("color", &["red", "blue", "red", "green"])],
+            &InferenceOptions::default(),
+        )
+        .unwrap();
+        let report = r.spec.describe(4);
+        assert!(report.contains("Number of records: 4"));
+        assert!(report.contains("CATEGORICAL"));
+        assert!(report.contains("most-frequent:\"red\""));
+    }
+
+    #[test]
+    fn catset_tokenization() {
+        let r = infer_dataspec(
+            &[RawColumn {
+                name: "text".into(),
+                values: vec![Some("hello world".into()), Some("world".into()), None],
+            }],
+            &InferenceOptions {
+                overrides: vec![("text".into(), FeatureSemantic::CategoricalSet)],
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let col = &r.columns[0];
+        assert_eq!(col.set_values(0).unwrap().len(), 2);
+        assert_eq!(col.set_values(1).unwrap().len(), 1);
+        assert!(col.is_missing(2));
+    }
+}

@@ -1,0 +1,357 @@
+//! Dataset layer: feature semantics, dataspec, column-wise storage, CSV
+//! readers/writers and the synthetic benchmark suite.
+//!
+//! YDF stores training data column-wise ("vertical dataset"): splitters scan
+//! one feature across all examples, so column-major layout is the natural
+//! cache-friendly representation (§3.5 READERS, §3.8 SPLITTERS).
+
+pub mod csv;
+pub mod dataspec;
+pub mod synthetic;
+
+pub use dataspec::{ColumnSpec, DataSpec, FeatureSemantic};
+
+use crate::utils::rng::Rng;
+
+/// Missing-value sentinel for categorical columns.
+pub const MISSING_CAT: u32 = u32::MAX;
+/// Missing-value sentinel for boolean columns.
+pub const MISSING_BOOL: u8 = 2;
+
+/// Typed column storage. Numerical missing values are `f32::NAN`.
+#[derive(Clone, Debug)]
+pub enum ColumnData {
+    /// Continuous or discrete values with order and scale (§3.4).
+    Numerical(Vec<f32>),
+    /// Dictionary-encoded categories; `MISSING_CAT` = missing.
+    Categorical(Vec<u32>),
+    /// 0/1 with `MISSING_BOOL` = missing.
+    Boolean(Vec<u8>),
+    /// Ragged sets of categories (categorical-set semantic, used for
+    /// tokenized text). `offsets.len() == rows + 1`.
+    CategoricalSet { offsets: Vec<u32>, values: Vec<u32> },
+}
+
+impl ColumnData {
+    pub fn len(&self) -> usize {
+        match self {
+            ColumnData::Numerical(v) => v.len(),
+            ColumnData::Categorical(v) => v.len(),
+            ColumnData::Boolean(v) => v.len(),
+            ColumnData::CategoricalSet { offsets, .. } => offsets.len().saturating_sub(1),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn semantic(&self) -> FeatureSemantic {
+        match self {
+            ColumnData::Numerical(_) => FeatureSemantic::Numerical,
+            ColumnData::Categorical(_) => FeatureSemantic::Categorical,
+            ColumnData::Boolean(_) => FeatureSemantic::Boolean,
+            ColumnData::CategoricalSet { .. } => FeatureSemantic::CategoricalSet,
+        }
+    }
+
+    pub fn as_numerical(&self) -> Option<&[f32]> {
+        match self {
+            ColumnData::Numerical(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_categorical(&self) -> Option<&[u32]> {
+        match self {
+            ColumnData::Categorical(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_boolean(&self) -> Option<&[u8]> {
+        match self {
+            ColumnData::Boolean(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Set values of row `i` for categorical-set columns.
+    pub fn set_values(&self, i: usize) -> Option<&[u32]> {
+        match self {
+            ColumnData::CategoricalSet { offsets, values } => {
+                Some(&values[offsets[i] as usize..offsets[i + 1] as usize])
+            }
+            _ => None,
+        }
+    }
+
+    pub fn is_missing(&self, i: usize) -> bool {
+        match self {
+            ColumnData::Numerical(v) => v[i].is_nan(),
+            ColumnData::Categorical(v) => v[i] == MISSING_CAT,
+            ColumnData::Boolean(v) => v[i] == MISSING_BOOL,
+            // A missing set is encoded as a sentinel single-element set
+            // containing MISSING_CAT (semantically different from empty,
+            // as the paper stresses in §3.4).
+            ColumnData::CategoricalSet { .. } => {
+                self.set_values(i).map(|s| s == [MISSING_CAT]).unwrap_or(false)
+            }
+        }
+    }
+}
+
+/// A single attribute value, used for row-wise inference input.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AttrValue {
+    Num(f32),
+    Cat(u32),
+    Bool(bool),
+    CatSet(Vec<u32>),
+    Missing,
+}
+
+/// One observation in row form (an "example" minus the label, §3.1).
+pub type Observation = Vec<AttrValue>;
+
+/// Column-wise dataset: the training-side container.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub spec: DataSpec,
+    pub columns: Vec<ColumnData>,
+    num_rows: usize,
+}
+
+impl Dataset {
+    pub fn new(spec: DataSpec, columns: Vec<ColumnData>) -> Result<Dataset, String> {
+        if spec.columns.len() != columns.len() {
+            return Err(format!(
+                "dataspec declares {} columns but {} columns of data were provided. \
+                 Re-run dataspec inference (`infer_dataspec`) on this dataset or pass a \
+                 matching dataspec.",
+                spec.columns.len(),
+                columns.len()
+            ));
+        }
+        let num_rows = columns.first().map(|c| c.len()).unwrap_or(0);
+        for (i, c) in columns.iter().enumerate() {
+            if c.len() != num_rows {
+                return Err(format!(
+                    "column '{}' has {} values but the first column has {}. All columns \
+                     must have the same number of rows.",
+                    spec.columns[i].name,
+                    c.len(),
+                    num_rows
+                ));
+            }
+            if c.semantic() != spec.columns[i].semantic {
+                return Err(format!(
+                    "column '{}' is stored as {:?} but the dataspec declares {:?}.",
+                    spec.columns[i].name,
+                    c.semantic(),
+                    spec.columns[i].semantic
+                ));
+            }
+        }
+        Ok(Dataset { spec, columns, num_rows })
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.num_rows
+    }
+
+    pub fn num_columns(&self) -> usize {
+        self.columns.len()
+    }
+
+    pub fn column_index(&self, name: &str) -> Option<usize> {
+        self.spec.columns.iter().position(|c| c.name == name)
+    }
+
+    pub fn column(&self, idx: usize) -> &ColumnData {
+        &self.columns[idx]
+    }
+
+    /// Extracts row `i` as an observation (all columns; callers mask the
+    /// label themselves).
+    pub fn row(&self, i: usize) -> Observation {
+        self.columns
+            .iter()
+            .map(|c| {
+                if c.is_missing(i) {
+                    AttrValue::Missing
+                } else {
+                    match c {
+                        ColumnData::Numerical(v) => AttrValue::Num(v[i]),
+                        ColumnData::Categorical(v) => AttrValue::Cat(v[i]),
+                        ColumnData::Boolean(v) => AttrValue::Bool(v[i] == 1),
+                        ColumnData::CategoricalSet { .. } => {
+                            AttrValue::CatSet(c.set_values(i).unwrap().to_vec())
+                        }
+                    }
+                }
+            })
+            .collect()
+    }
+
+    /// Returns a new dataset containing the given rows (duplicates allowed:
+    /// used by bootstrap and fold extraction).
+    pub fn subset(&self, rows: &[usize]) -> Dataset {
+        let columns = self
+            .columns
+            .iter()
+            .map(|c| match c {
+                ColumnData::Numerical(v) => {
+                    ColumnData::Numerical(rows.iter().map(|&r| v[r]).collect())
+                }
+                ColumnData::Categorical(v) => {
+                    ColumnData::Categorical(rows.iter().map(|&r| v[r]).collect())
+                }
+                ColumnData::Boolean(v) => {
+                    ColumnData::Boolean(rows.iter().map(|&r| v[r]).collect())
+                }
+                ColumnData::CategoricalSet { .. } => {
+                    let mut offsets = Vec::with_capacity(rows.len() + 1);
+                    let mut values = Vec::new();
+                    offsets.push(0u32);
+                    for &r in rows {
+                        values.extend_from_slice(c.set_values(r).unwrap());
+                        offsets.push(values.len() as u32);
+                    }
+                    ColumnData::CategoricalSet { offsets, values }
+                }
+            })
+            .collect();
+        Dataset { spec: self.spec.clone(), columns, num_rows: rows.len() }
+    }
+
+    /// Deterministic K-fold split: returns `folds` lists of row indices.
+    /// Fold assignments depend only on the seed so fold splits are
+    /// "consistent across learners" as required by the protocol (§5.2).
+    pub fn kfold_indices(&self, folds: usize, seed: u64) -> Vec<Vec<usize>> {
+        let mut idx: Vec<usize> = (0..self.num_rows).collect();
+        let mut rng = Rng::seed_from_u64(seed);
+        rng.shuffle(&mut idx);
+        let mut out = vec![Vec::new(); folds];
+        for (i, r) in idx.into_iter().enumerate() {
+            out[i % folds].push(r);
+        }
+        out
+    }
+
+    /// Train/valid split (used for GBT early stopping when no validation
+    /// dataset is given — §3.3: learners extract it themselves).
+    pub fn train_valid_split(&self, valid_ratio: f64, seed: u64) -> (Vec<usize>, Vec<usize>) {
+        let mut idx: Vec<usize> = (0..self.num_rows).collect();
+        let mut rng = Rng::seed_from_u64(seed);
+        rng.shuffle(&mut idx);
+        let n_valid = ((self.num_rows as f64) * valid_ratio).round() as usize;
+        let n_valid = n_valid.clamp(1.min(self.num_rows), self.num_rows.saturating_sub(1));
+        let valid = idx[..n_valid].to_vec();
+        let train = idx[n_valid..].to_vec();
+        (train, valid)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::dataspec::{ColumnSpec, DataSpec};
+
+    fn tiny() -> Dataset {
+        let spec = DataSpec {
+            columns: vec![
+                ColumnSpec::numerical("x"),
+                ColumnSpec::categorical("c", vec!["a".into(), "b".into()]),
+            ],
+        };
+        Dataset::new(
+            spec,
+            vec![
+                ColumnData::Numerical(vec![1.0, f32::NAN, 3.0, 4.0]),
+                ColumnData::Categorical(vec![0, 1, MISSING_CAT, 0]),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn construction_and_access() {
+        let d = tiny();
+        assert_eq!(d.num_rows(), 4);
+        assert_eq!(d.num_columns(), 2);
+        assert!(d.column(0).is_missing(1));
+        assert!(d.column(1).is_missing(2));
+        assert_eq!(d.column_index("c"), Some(1));
+    }
+
+    #[test]
+    fn row_extraction() {
+        let d = tiny();
+        let r = d.row(0);
+        assert_eq!(r[0], AttrValue::Num(1.0));
+        assert_eq!(r[1], AttrValue::Cat(0));
+        let r1 = d.row(1);
+        assert_eq!(r1[0], AttrValue::Missing);
+    }
+
+    #[test]
+    fn subset_with_duplicates() {
+        let d = tiny();
+        let s = d.subset(&[3, 3, 0]);
+        assert_eq!(s.num_rows(), 3);
+        assert_eq!(s.column(0).as_numerical().unwrap(), &[4.0, 4.0, 1.0]);
+    }
+
+    #[test]
+    fn mismatched_columns_rejected() {
+        let spec = DataSpec { columns: vec![ColumnSpec::numerical("x")] };
+        let err = Dataset::new(
+            spec,
+            vec![
+                ColumnData::Numerical(vec![1.0]),
+                ColumnData::Numerical(vec![2.0]),
+            ],
+        )
+        .unwrap_err();
+        assert!(err.contains("dataspec declares 1 columns"), "{err}");
+    }
+
+    #[test]
+    fn kfold_partitions_all_rows() {
+        let d = tiny();
+        let folds = d.kfold_indices(2, 13);
+        let mut all: Vec<usize> = folds.concat();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3]);
+        // Deterministic.
+        assert_eq!(folds, d.kfold_indices(2, 13));
+    }
+
+    #[test]
+    fn train_valid_split_covers() {
+        let d = tiny();
+        let (tr, va) = d.train_valid_split(0.25, 3);
+        assert_eq!(tr.len() + va.len(), 4);
+        assert!(!va.is_empty());
+    }
+
+    #[test]
+    fn catset_missing_vs_empty() {
+        let spec = DataSpec {
+            columns: vec![ColumnSpec::catset("s", vec!["t1".into(), "t2".into()])],
+        };
+        let d = Dataset::new(
+            spec,
+            vec![ColumnData::CategoricalSet {
+                offsets: vec![0, 2, 2, 3],
+                values: vec![0, 1, MISSING_CAT],
+            }],
+        )
+        .unwrap();
+        assert!(!d.column(0).is_missing(0));
+        assert!(!d.column(0).is_missing(1)); // empty set is NOT missing
+        assert!(d.column(0).is_missing(2)); // sentinel set IS missing
+        assert_eq!(d.column(0).set_values(1).unwrap(), &[] as &[u32]);
+    }
+}

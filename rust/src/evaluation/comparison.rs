@@ -1,0 +1,91 @@
+//! Pairwise model comparison with statistical tests (§2.2: "model
+//! comparison should include the results of appropriate statistical
+//! tests"). Produces the wins/losses cells of Table 3.
+
+use crate::utils::stats::sign_test_p_value;
+
+/// Outcome of comparing learner A against learner B over many paired
+/// observations (dataset × fold accuracies in the benchmark).
+#[derive(Clone, Debug, Default)]
+pub struct PairwiseComparison {
+    pub wins: f64,
+    pub losses: f64,
+    pub ties: u64,
+    pub mean_difference: f64,
+    pub num_pairs: u64,
+}
+
+impl PairwiseComparison {
+    /// Compares paired metric values (higher = better). Ties count as half
+    /// a win and half a loss, as in Table 3's caption.
+    pub fn from_paired(a: &[f64], b: &[f64]) -> PairwiseComparison {
+        assert_eq!(a.len(), b.len());
+        let mut c = PairwiseComparison::default();
+        let mut diff_sum = 0.0;
+        for (&x, &y) in a.iter().zip(b) {
+            diff_sum += x - y;
+            if (x - y).abs() < 1e-12 {
+                c.ties += 1;
+                c.wins += 0.5;
+                c.losses += 0.5;
+            } else if x > y {
+                c.wins += 1.0;
+            } else {
+                c.losses += 1.0;
+            }
+        }
+        c.num_pairs = a.len() as u64;
+        c.mean_difference = if a.is_empty() { 0.0 } else { diff_sum / a.len() as f64 };
+        c
+    }
+
+    /// Two-sided sign-test p-value on the non-tied pairs.
+    pub fn p_value(&self) -> f64 {
+        sign_test_p_value(
+            (self.wins - self.ties as f64 * 0.5).round() as u64,
+            (self.losses - self.ties as f64 * 0.5).round() as u64,
+        )
+    }
+
+    /// True when A wins more than half the comparisons (the green cells of
+    /// Table 3).
+    pub fn a_is_better(&self) -> bool {
+        self.wins > self.losses
+    }
+
+    /// Table 3 cell format: "wins/losses" (half-wins from ties rounded
+    /// half-away-from-zero, as in the paper's integer cells).
+    pub fn cell(&self) -> String {
+        format!("{}/{}", self.wins.round() as i64, self.losses.round() as i64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_wins_losses_ties() {
+        let a = vec![0.9, 0.8, 0.7, 0.6];
+        let b = vec![0.8, 0.8, 0.8, 0.5];
+        let c = PairwiseComparison::from_paired(&a, &b);
+        assert_eq!(c.wins, 2.5);
+        assert_eq!(c.losses, 1.5);
+        assert_eq!(c.ties, 1);
+        assert!(c.a_is_better());
+        assert!((c.mean_difference - 0.025).abs() < 1e-12);
+        assert_eq!(c.cell(), "3/2");
+    }
+
+    #[test]
+    fn p_value_behaviour() {
+        let a: Vec<f64> = (0..100).map(|i| 1.0 + i as f64).collect();
+        let b: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let c = PairwiseComparison::from_paired(&a, &b);
+        assert!(c.p_value() < 1e-20);
+        let even_a: Vec<f64> = (0..100).map(|i| (i % 2) as f64).collect();
+        let even_b: Vec<f64> = (0..100).map(|i| ((i + 1) % 2) as f64).collect();
+        let c2 = PairwiseComparison::from_paired(&even_a, &even_b);
+        assert!(c2.p_value() > 0.9);
+    }
+}

@@ -1,0 +1,109 @@
+//! Cross-validation (§5.2's 10-fold protocol and the self-evaluation
+//! backend of meta-learners, §3.6).
+
+use super::{evaluate_model, Evaluation};
+use crate::dataset::Dataset;
+use crate::learner::Learner;
+
+/// Result of a K-fold cross-validation of one learner on one dataset.
+#[derive(Clone, Debug)]
+pub struct CrossValidation {
+    pub fold_evaluations: Vec<Evaluation>,
+    /// Wall-clock seconds spent training, per fold.
+    pub train_seconds: Vec<f64>,
+    /// Wall-clock seconds spent predicting the test fold, per fold.
+    pub inference_seconds: Vec<f64>,
+}
+
+impl CrossValidation {
+    pub fn mean_accuracy(&self) -> f64 {
+        let accs: Vec<f64> = self.fold_evaluations.iter().map(|e| e.accuracy).collect();
+        crate::utils::stats::mean(&accs)
+    }
+
+    pub fn mean_log_loss(&self) -> f64 {
+        let lls: Vec<f64> = self.fold_evaluations.iter().map(|e| e.log_loss).collect();
+        crate::utils::stats::mean(&lls)
+    }
+
+    pub fn mean_train_seconds(&self) -> f64 {
+        crate::utils::stats::mean(&self.train_seconds)
+    }
+
+    pub fn mean_inference_seconds(&self) -> f64 {
+        crate::utils::stats::mean(&self.inference_seconds)
+    }
+}
+
+/// Runs K-fold cross-validation. Fold splits depend only on `seed` so they
+/// are identical across learners (§5.2: "fold splits are consistent across
+/// learners to facilitate a fair comparison").
+pub fn cross_validate(
+    learner: &dyn Learner,
+    ds: &Dataset,
+    folds: usize,
+    seed: u64,
+) -> Result<CrossValidation, String> {
+    if folds < 2 {
+        return Err("cross-validation requires at least 2 folds.".to_string());
+    }
+    let fold_rows = ds.kfold_indices(folds, seed);
+    let mut fold_evaluations = Vec::with_capacity(folds);
+    let mut train_seconds = Vec::with_capacity(folds);
+    let mut inference_seconds = Vec::with_capacity(folds);
+    for test_fold in 0..folds {
+        let mut train_rows = Vec::new();
+        for (f, rows) in fold_rows.iter().enumerate() {
+            if f != test_fold {
+                train_rows.extend_from_slice(rows);
+            }
+        }
+        let train_ds = ds.subset(&train_rows);
+        let test_ds = ds.subset(&fold_rows[test_fold]);
+        let t0 = std::time::Instant::now();
+        let model = learner.train(&train_ds)?;
+        train_seconds.push(t0.elapsed().as_secs_f64());
+        let t1 = std::time::Instant::now();
+        let ev = evaluate_model(model.as_ref(), &test_ds, learner.label())?;
+        inference_seconds.push(t1.elapsed().as_secs_f64());
+        fold_evaluations.push(ev);
+    }
+    Ok(CrossValidation { fold_evaluations, train_seconds, inference_seconds })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic;
+    use crate::learner::gbt::GbtConfig;
+    use crate::learner::GradientBoostedTreesLearner;
+
+    #[test]
+    fn cv_runs_and_aggregates() {
+        let ds = synthetic::adult_like(300, 71);
+        let mut cfg = GbtConfig::new("income");
+        cfg.num_trees = 8;
+        cfg.max_depth = 3;
+        let learner = GradientBoostedTreesLearner::new(cfg);
+        let cv = cross_validate(&learner, &ds, 3, 17).unwrap();
+        assert_eq!(cv.fold_evaluations.len(), 3);
+        let acc = cv.mean_accuracy();
+        assert!(acc > 0.6 && acc <= 1.0, "cv accuracy {acc}");
+        assert!(cv.mean_train_seconds() > 0.0);
+    }
+
+    #[test]
+    fn folds_identical_across_learners() {
+        let ds = synthetic::adult_like(100, 73);
+        let a = ds.kfold_indices(5, 42);
+        let b = ds.kfold_indices(5, 42);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn too_few_folds_rejected() {
+        let ds = synthetic::adult_like(50, 74);
+        let learner = GradientBoostedTreesLearner::default_config("income");
+        assert!(cross_validate(&learner, &ds, 1, 1).is_err());
+    }
+}

@@ -1,0 +1,183 @@
+//! Classification metrics: accuracy, log-loss, ROC AUC (with Hanley–McNeil
+//! and bootstrap CIs), PR-AUC and average precision (§2.2: easily
+//! accessible *correct* methods, with documented confidence bounds).
+
+use crate::utils::rng::Rng;
+use crate::utils::stats;
+
+/// Area under the ROC curve via the rank statistic (Mann–Whitney U), with
+/// tie handling.
+pub fn roc_auc(scores: &[f64], positives: &[bool]) -> f64 {
+    assert_eq!(scores.len(), positives.len());
+    let n_pos = positives.iter().filter(|&&p| p).count();
+    let n_neg = positives.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    let ranks = stats::fractional_ranks(scores);
+    let rank_sum: f64 = ranks
+        .iter()
+        .zip(positives)
+        .filter(|(_, &p)| p)
+        .map(|(&r, _)| r)
+        .sum();
+    let u = rank_sum - (n_pos as f64) * (n_pos as f64 + 1.0) / 2.0;
+    u / (n_pos as f64 * n_neg as f64)
+}
+
+/// Hanley–McNeil (1982) closed-form standard error of the AUC; the `[H]`
+/// interval of the evaluation report.
+pub fn auc_hanley_ci(auc: f64, n_pos: usize, n_neg: usize, z: f64) -> (f64, f64) {
+    if n_pos == 0 || n_neg == 0 {
+        return (0.0, 1.0);
+    }
+    let q1 = auc / (2.0 - auc);
+    let q2 = 2.0 * auc * auc / (1.0 + auc);
+    let var = (auc * (1.0 - auc)
+        + (n_pos as f64 - 1.0) * (q1 - auc * auc)
+        + (n_neg as f64 - 1.0) * (q2 - auc * auc))
+        / (n_pos as f64 * n_neg as f64);
+    let se = var.max(0.0).sqrt();
+    ((auc - z * se).max(0.0), (auc + z * se).min(1.0))
+}
+
+/// Bootstrap CI of the AUC; the `[B]` interval.
+pub fn auc_bootstrap_ci(
+    scores: &[f64],
+    positives: &[bool],
+    rounds: usize,
+    alpha: f64,
+    rng: &mut Rng,
+) -> (f64, f64) {
+    let n = scores.len();
+    let mut vals = Vec::with_capacity(rounds);
+    let mut s = vec![0.0; n];
+    let mut p = vec![false; n];
+    for _ in 0..rounds {
+        for i in 0..n {
+            let j = rng.uniform_usize(n);
+            s[i] = scores[j];
+            p[i] = positives[j];
+        }
+        vals.push(roc_auc(&s, &p));
+    }
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (
+        stats::quantile_sorted(&vals, alpha / 2.0),
+        stats::quantile_sorted(&vals, 1.0 - alpha / 2.0),
+    )
+}
+
+/// Average precision (area under the precision-recall curve, step-wise).
+pub fn average_precision(scores: &[f64], positives: &[bool]) -> f64 {
+    let n_pos = positives.iter().filter(|&&p| p).count();
+    if n_pos == 0 {
+        return 0.0;
+    }
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    let mut tp = 0usize;
+    let mut ap = 0.0;
+    for (k, &i) in order.iter().enumerate() {
+        if positives[i] {
+            tp += 1;
+            ap += tp as f64 / (k + 1) as f64;
+        }
+    }
+    ap / n_pos as f64
+}
+
+/// Multiclass log-loss.
+pub fn log_loss(probabilities: &[Vec<f64>], labels: &[u32]) -> f64 {
+    let mut sum = 0.0;
+    for (p, &y) in probabilities.iter().zip(labels) {
+        sum -= p[y as usize].max(1e-12).ln();
+    }
+    sum / probabilities.len().max(1) as f64
+}
+
+/// Accuracy of argmax predictions.
+pub fn accuracy(probabilities: &[Vec<f64>], labels: &[u32]) -> f64 {
+    let correct = probabilities
+        .iter()
+        .zip(labels)
+        .filter(|(p, &y)| crate::model::argmax(p) as u32 == y)
+        .count();
+    correct as f64 / probabilities.len().max(1) as f64
+}
+
+/// Root-mean-square error (regression).
+pub fn rmse(predictions: &[f64], targets: &[f32]) -> f64 {
+    let sse: f64 = predictions
+        .iter()
+        .zip(targets)
+        .map(|(&p, &t)| (p - t as f64) * (p - t as f64))
+        .sum();
+    (sse / predictions.len().max(1) as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auc_perfect_and_random() {
+        let scores = vec![0.9, 0.8, 0.2, 0.1];
+        let pos = vec![true, true, false, false];
+        assert!((roc_auc(&scores, &pos) - 1.0).abs() < 1e-12);
+        let anti = vec![false, false, true, true];
+        assert!((roc_auc(&scores, &anti) - 0.0).abs() < 1e-12);
+        // Ties everywhere -> 0.5.
+        let flat = vec![0.5; 4];
+        assert!((roc_auc(&flat, &pos) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_known_value() {
+        // scores: pos {0.8, 0.4}, neg {0.6, 0.2}: pairs (0.8>0.6),(0.8>0.2),
+        // (0.4<0.6),(0.4>0.2) => 3/4.
+        let scores = vec![0.8, 0.4, 0.6, 0.2];
+        let pos = vec![true, true, false, false];
+        assert!((roc_auc(&scores, &pos) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hanley_ci_brackets_auc() {
+        let (lo, hi) = auc_hanley_ci(0.9, 100, 200, 1.96);
+        assert!(lo < 0.9 && 0.9 < hi);
+        assert!(hi - lo < 0.15);
+    }
+
+    #[test]
+    fn bootstrap_ci_reasonable() {
+        let mut rng = Rng::seed_from_u64(4);
+        let n = 300;
+        let scores: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+        let pos: Vec<bool> = scores.iter().map(|&s| rng.uniform() < s).collect();
+        let auc = roc_auc(&scores, &pos);
+        let (lo, hi) = auc_bootstrap_ci(&scores, &pos, 200, 0.05, &mut rng);
+        assert!(lo <= auc && auc <= hi, "{lo} {auc} {hi}");
+    }
+
+    #[test]
+    fn average_precision_perfect() {
+        let scores = vec![0.9, 0.8, 0.2, 0.1];
+        let pos = vec![true, true, false, false];
+        assert!((average_precision(&scores, &pos) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log_loss_and_accuracy() {
+        let probs = vec![vec![0.9, 0.1], vec![0.2, 0.8], vec![0.6, 0.4]];
+        let labels = vec![0u32, 1, 1];
+        assert!((accuracy(&probs, &labels) - 2.0 / 3.0).abs() < 1e-12);
+        let ll = log_loss(&probs, &labels);
+        let expected = -(0.9f64.ln() + 0.8f64.ln() + 0.4f64.ln()) / 3.0;
+        assert!((ll - expected).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rmse_basic() {
+        assert!((rmse(&[1.0, 2.0], &[0.0, 4.0]) - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,333 @@
+//! Model evaluation (§2.2, §3.6): metrics with confidence intervals, the
+//! Appendix B.3 evaluation report, cross-validation and pairwise model
+//! comparison with statistical tests.
+
+pub mod comparison;
+pub mod cv;
+pub mod metrics;
+
+use crate::dataset::Dataset;
+use crate::model::{Model, Task};
+use crate::utils::rng::Rng;
+use crate::utils::stats;
+
+/// Per-class one-vs-rest metrics (Appendix B.3 "One vs other classes").
+#[derive(Clone, Debug)]
+pub struct OneVsRest {
+    pub class_name: String,
+    pub auc: f64,
+    /// Hanley–McNeil closed-form CI `[H]`.
+    pub auc_ci_h: (f64, f64),
+    /// Bootstrap CI `[B]`.
+    pub auc_ci_b: (f64, f64),
+    pub pr_auc: f64,
+    pub pr_auc_ci_b: (f64, f64),
+    pub average_precision: f64,
+}
+
+/// A full classification/regression evaluation.
+#[derive(Clone, Debug)]
+pub struct Evaluation {
+    pub task: Task,
+    pub label: String,
+    pub num_examples: usize,
+    pub accuracy: f64,
+    /// Bootstrap CI of the accuracy (`CI95[W]` in the report; we use the
+    /// percentile bootstrap and additionally report the Wilson interval).
+    pub accuracy_ci_b: (f64, f64),
+    pub accuracy_ci_wilson: (f64, f64),
+    pub log_loss: f64,
+    pub error_rate: f64,
+    /// Accuracy/logloss of always predicting the majority class.
+    pub default_accuracy: f64,
+    pub default_log_loss: f64,
+    /// confusion[truth][predicted].
+    pub confusion: Vec<Vec<u64>>,
+    pub class_names: Vec<String>,
+    pub one_vs_rest: Vec<OneVsRest>,
+    /// RMSE for regression evaluations.
+    pub rmse: f64,
+}
+
+/// Evaluates a model on a dataset (held-out examples). `label` must match
+/// the model's label column name.
+pub fn evaluate_model(
+    model: &dyn Model,
+    ds: &Dataset,
+    label: &str,
+) -> Result<Evaluation, String> {
+    let label_col = ds.column_index(label).ok_or_else(|| {
+        format!("evaluation dataset has no column \"{label}\" (the model's label).")
+    })?;
+    match model.task() {
+        Task::Classification => evaluate_classification(model, ds, label, label_col),
+        Task::Regression => evaluate_regression(model, ds, label, label_col),
+    }
+}
+
+fn evaluate_classification(
+    model: &dyn Model,
+    ds: &Dataset,
+    label: &str,
+    label_col: usize,
+) -> Result<Evaluation, String> {
+    let labels = ds.columns[label_col]
+        .as_categorical()
+        .ok_or_else(|| format!("label column \"{label}\" is not categorical."))?;
+    let n = ds.num_rows();
+    if n == 0 {
+        return Err("cannot evaluate on an empty dataset.".to_string());
+    }
+    let probs = model.predict_dataset(ds);
+    let num_classes = model.num_classes();
+    let class_names = model.class_names();
+
+    let mut confusion = vec![vec![0u64; num_classes]; num_classes];
+    let mut correct_flags = Vec::with_capacity(n);
+    for (p, &y) in probs.iter().zip(labels) {
+        let pred = crate::model::argmax(p);
+        confusion[y as usize][pred] += 1;
+        correct_flags.push((pred as u32 == y) as u8 as f64);
+    }
+    let accuracy = metrics::accuracy(&probs, labels);
+    let log_loss = metrics::log_loss(&probs, labels);
+
+    // Majority-class baseline ("Default" rows of B.3).
+    let mut class_counts = vec![0u64; num_classes];
+    for &y in labels {
+        class_counts[y as usize] += 1;
+    }
+    let majority = class_counts.iter().copied().max().unwrap_or(0);
+    let default_accuracy = majority as f64 / n as f64;
+    let default_log_loss = -class_counts
+        .iter()
+        .map(|&c| {
+            let p = c as f64 / n as f64;
+            if c > 0 {
+                p * p.max(1e-12).ln()
+            } else {
+                0.0
+            }
+        })
+        .sum::<f64>();
+
+    let mut rng = Rng::seed_from_u64(0xE7A1);
+    let accuracy_ci_b = stats::bootstrap_ci(&correct_flags, stats::mean, 500, 0.05, &mut rng);
+    let correct_count = correct_flags.iter().filter(|&&f| f > 0.5).count() as u64;
+    let accuracy_ci_wilson = stats::wilson_interval(correct_count, n as u64, 1.96);
+
+    // One-vs-rest per class.
+    let mut one_vs_rest = Vec::new();
+    for k in 0..num_classes {
+        let scores: Vec<f64> = probs.iter().map(|p| p[k]).collect();
+        let positives: Vec<bool> = labels.iter().map(|&y| y as usize == k).collect();
+        let n_pos = positives.iter().filter(|&&p| p).count();
+        let auc = metrics::roc_auc(&scores, &positives);
+        one_vs_rest.push(OneVsRest {
+            class_name: class_names.get(k).cloned().unwrap_or_else(|| format!("c{k}")),
+            auc,
+            auc_ci_h: metrics::auc_hanley_ci(auc, n_pos, n - n_pos, 1.96),
+            auc_ci_b: metrics::auc_bootstrap_ci(&scores, &positives, 100, 0.05, &mut rng),
+            pr_auc: metrics::average_precision(&scores, &positives),
+            pr_auc_ci_b: {
+                // Bootstrap of AP.
+                let mut vals = Vec::with_capacity(100);
+                let mut s = vec![0.0; n];
+                let mut p = vec![false; n];
+                for _ in 0..100 {
+                    for i in 0..n {
+                        let j = rng.uniform_usize(n);
+                        s[i] = scores[j];
+                        p[i] = positives[j];
+                    }
+                    vals.push(metrics::average_precision(&s, &p));
+                }
+                vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                (
+                    stats::quantile_sorted(&vals, 0.025),
+                    stats::quantile_sorted(&vals, 0.975),
+                )
+            },
+            average_precision: metrics::average_precision(&scores, &positives),
+        });
+    }
+
+    Ok(Evaluation {
+        task: Task::Classification,
+        label: label.to_string(),
+        num_examples: n,
+        accuracy,
+        accuracy_ci_b,
+        accuracy_ci_wilson,
+        log_loss,
+        error_rate: 1.0 - accuracy,
+        default_accuracy,
+        default_log_loss,
+        confusion,
+        class_names,
+        one_vs_rest,
+        rmse: 0.0,
+    })
+}
+
+fn evaluate_regression(
+    model: &dyn Model,
+    ds: &Dataset,
+    label: &str,
+    label_col: usize,
+) -> Result<Evaluation, String> {
+    let targets = ds.columns[label_col]
+        .as_numerical()
+        .ok_or_else(|| format!("label column \"{label}\" is not numerical."))?;
+    let n = ds.num_rows();
+    let preds: Vec<f64> = (0..n).map(|r| model.predict_ds_row(ds, r)[0]).collect();
+    Ok(Evaluation {
+        task: Task::Regression,
+        label: label.to_string(),
+        num_examples: n,
+        accuracy: 0.0,
+        accuracy_ci_b: (0.0, 0.0),
+        accuracy_ci_wilson: (0.0, 0.0),
+        log_loss: 0.0,
+        error_rate: 0.0,
+        default_accuracy: 0.0,
+        default_log_loss: 0.0,
+        confusion: vec![],
+        class_names: vec![],
+        one_vs_rest: vec![],
+        rmse: metrics::rmse(&preds, targets),
+    })
+}
+
+impl Evaluation {
+    /// Renders the Appendix B.3 evaluation report.
+    pub fn report(&self) -> String {
+        match self.task {
+            Task::Regression => format!(
+                "Evaluation:\nNumber of predictions: {}\nTask: REGRESSION\nLabel: {}\n\nRMSE: \
+                 {:.6}\n",
+                self.num_examples, self.label, self.rmse
+            ),
+            Task::Classification => {
+                let mut out = format!(
+                    "Evaluation:\nNumber of predictions (without weights): {}\nNumber of \
+                     predictions (with weights): {}\nTask: CLASSIFICATION\nLabel: {}\n\n\
+                     Accuracy: {:.6} CI95[B][{:.6} {:.6}] CI95[Wilson][{:.6} {:.6}]\n\
+                     LogLoss: {:.6}\nErrorRate: {:.6}\n\nDefault Accuracy: {:.6}\nDefault \
+                     LogLoss: {:.6}\n\nConfusion Table: truth\\prediction\n",
+                    self.num_examples,
+                    self.num_examples,
+                    self.label,
+                    self.accuracy,
+                    self.accuracy_ci_b.0,
+                    self.accuracy_ci_b.1,
+                    self.accuracy_ci_wilson.0,
+                    self.accuracy_ci_wilson.1,
+                    self.log_loss,
+                    self.error_rate,
+                    self.default_accuracy,
+                    self.default_log_loss,
+                );
+                // Confusion table.
+                out.push_str(&format!(
+                    "        {}\n",
+                    self.class_names
+                        .iter()
+                        .map(|c| format!("{c:>10}"))
+                        .collect::<Vec<_>>()
+                        .join(" ")
+                ));
+                for (t, row) in self.confusion.iter().enumerate() {
+                    out.push_str(&format!(
+                        "{:>7} {}\n",
+                        self.class_names[t],
+                        row.iter().map(|c| format!("{c:>10}")).collect::<Vec<_>>().join(" ")
+                    ));
+                }
+                out.push_str(&format!("Total: {}\n\nOne vs other classes:\n", self.num_examples));
+                for ovr in &self.one_vs_rest {
+                    out.push_str(&format!(
+                        "  \"{}\" vs. the others\n    auc: {:.6} CI95[H][{:.5} {:.5}] \
+                         CI95[B][{:.5} {:.5}]\n    p/r-auc: {:.5} CI95[B][{:.5} {:.5}]\n    \
+                         ap: {:.6}\n",
+                        ovr.class_name,
+                        ovr.auc,
+                        ovr.auc_ci_h.0,
+                        ovr.auc_ci_h.1,
+                        ovr.auc_ci_b.0,
+                        ovr.auc_ci_b.1,
+                        ovr.pr_auc,
+                        ovr.pr_auc_ci_b.0,
+                        ovr.pr_auc_ci_b.1,
+                        ovr.average_precision,
+                    ));
+                }
+                out
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic;
+    use crate::learner::{GradientBoostedTreesLearner, Learner};
+
+    fn trained() -> (Box<dyn Model>, Dataset, Dataset) {
+        let train = synthetic::adult_like(500, 61);
+        let test = synthetic::adult_like(300, 62);
+        let mut cfg = crate::learner::gbt::GbtConfig::new("income");
+        cfg.num_trees = 20;
+        cfg.max_depth = 4;
+        let model = GradientBoostedTreesLearner::new(cfg).train(&train).unwrap();
+        (model, train, test)
+    }
+
+    #[test]
+    fn evaluation_on_heldout() {
+        let (model, _, test) = trained();
+        let ev = evaluate_model(model.as_ref(), &test, "income").unwrap();
+        assert!(ev.accuracy > 0.7, "accuracy {}", ev.accuracy);
+        assert!(ev.accuracy > ev.default_accuracy);
+        assert!(ev.log_loss < ev.default_log_loss);
+        assert!(ev.accuracy_ci_b.0 <= ev.accuracy && ev.accuracy <= ev.accuracy_ci_b.1);
+        // Confusion matrix sums to n.
+        let total: u64 = ev.confusion.iter().flatten().sum();
+        assert_eq!(total as usize, ev.num_examples);
+        // AUC above chance for both one-vs-rest views.
+        for ovr in &ev.one_vs_rest {
+            assert!(ovr.auc > 0.6, "{} auc {}", ovr.class_name, ovr.auc);
+            assert!(ovr.auc_ci_h.0 <= ovr.auc && ovr.auc <= ovr.auc_ci_h.1);
+        }
+    }
+
+    #[test]
+    fn report_has_b3_sections() {
+        let (model, _, test) = trained();
+        let ev = evaluate_model(model.as_ref(), &test, "income").unwrap();
+        let rep = ev.report();
+        for needle in [
+            "Task: CLASSIFICATION",
+            "Accuracy:",
+            "CI95[B]",
+            "LogLoss:",
+            "Default Accuracy:",
+            "Confusion Table: truth\\prediction",
+            "One vs other classes:",
+            "vs. the others",
+        ] {
+            assert!(rep.contains(needle), "missing {needle}\n{rep}");
+        }
+    }
+
+    #[test]
+    fn missing_label_column_actionable() {
+        let (model, _, test) = trained();
+        let err = match evaluate_model(model.as_ref(), &test, "nope") {
+            Err(e) => e,
+            Ok(_) => panic!(),
+        };
+        assert!(err.contains("no column"), "{err}");
+    }
+}

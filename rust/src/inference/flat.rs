@@ -1,0 +1,482 @@
+//! Flat engine: all trees compiled into contiguous structure-of-arrays
+//! node tables. Removes pointer chasing and per-node heap indirection —
+//! the generic fast path for any forest model (§3.7).
+
+use super::InferenceEngine;
+use crate::dataset::{AttrValue, ColumnData, Dataset, Observation};
+use crate::model::forest::{GbtLoss, GradientBoostedTreesModel, RandomForestModel};
+use crate::model::tree::{bitmap_contains, Condition, DecisionTree};
+use crate::model::{Model, Task};
+
+const KIND_LEAF: u8 = 0;
+const KIND_HIGHER: u8 = 1;
+const KIND_CONTAINS: u8 = 2;
+const KIND_CONTAINS_SET: u8 = 3;
+const KIND_OBLIQUE: u8 = 4;
+const KIND_IS_TRUE: u8 = 5;
+
+/// One flattened node. Children are stored adjacently: positive child at
+/// `child`, negative child at `child + 1`.
+#[derive(Clone, Copy)]
+struct FlatNode {
+    kind: u8,
+    missing_to_positive: bool,
+    attr: u32,
+    threshold: f32,
+    /// Offset+len into `bitmaps` (contains) or `oblique` (oblique terms),
+    /// or offset into `leaf_values` for leaves.
+    aux: u32,
+    aux_len: u32,
+    child: u32,
+}
+
+/// Aggregation mode, fixed at compile time.
+enum Aggregate {
+    RfAverage { num_classes: usize, winner_take_all: bool },
+    RfRegression,
+    Gbt { loss: GbtLoss, dim: usize, initial: Vec<f64> },
+}
+
+pub struct FlatEngine {
+    nodes: Vec<FlatNode>,
+    roots: Vec<u32>,
+    bitmaps: Vec<u64>,
+    /// Oblique terms: (attr, weight) pairs.
+    oblique: Vec<(u32, f32)>,
+    leaf_values: Vec<f32>,
+    leaf_dim: usize,
+    aggregate: Aggregate,
+}
+
+impl FlatEngine {
+    pub fn compile(model: &dyn Model) -> Option<FlatEngine> {
+        if let Some(m) = model.as_any().downcast_ref::<RandomForestModel>() {
+            let num_classes = match m.task {
+                Task::Classification => m.spec.columns[m.label_col].vocab_size(),
+                Task::Regression => 1,
+            };
+            let aggregate = match m.task {
+                Task::Classification => Aggregate::RfAverage {
+                    num_classes,
+                    winner_take_all: m.winner_take_all,
+                },
+                Task::Regression => Aggregate::RfRegression,
+            };
+            Some(Self::from_trees(&m.trees, num_classes, aggregate))
+        } else if let Some(m) = model.as_any().downcast_ref::<GradientBoostedTreesModel>() {
+            let aggregate = Aggregate::Gbt {
+                loss: m.loss,
+                dim: m.trees_per_iter,
+                initial: m.initial_predictions.clone(),
+            };
+            Some(Self::from_trees(&m.trees, 1, aggregate))
+        } else {
+            None
+        }
+    }
+
+    fn from_trees(trees: &[DecisionTree], leaf_dim: usize, aggregate: Aggregate) -> FlatEngine {
+        let mut e = FlatEngine {
+            nodes: Vec::new(),
+            roots: Vec::with_capacity(trees.len()),
+            bitmaps: Vec::new(),
+            oblique: Vec::new(),
+            leaf_values: Vec::new(),
+            leaf_dim,
+            aggregate,
+        };
+        for t in trees {
+            let root = e.nodes.len() as u32;
+            e.roots.push(root);
+            // BFS copy with children-adjacent layout.
+            // map: original index -> flat index.
+            let mut flat_of = vec![u32::MAX; t.nodes.len()];
+            let mut queue = std::collections::VecDeque::new();
+            flat_of[0] = e.nodes.len() as u32;
+            e.nodes.push(FlatNode {
+                kind: KIND_LEAF,
+                missing_to_positive: false,
+                attr: 0,
+                threshold: 0.0,
+                aux: 0,
+                aux_len: 0,
+                child: 0,
+            });
+            queue.push_back(0usize);
+            while let Some(orig) = queue.pop_front() {
+                let node = &t.nodes[orig];
+                let flat_idx = flat_of[orig] as usize;
+                match &node.condition {
+                    None => {
+                        let aux = e.leaf_values.len() as u32;
+                        e.leaf_values.extend_from_slice(&node.value);
+                        // pad to leaf_dim
+                        for _ in node.value.len()..leaf_dim {
+                            e.leaf_values.push(0.0);
+                        }
+                        e.nodes[flat_idx] = FlatNode {
+                            kind: KIND_LEAF,
+                            missing_to_positive: false,
+                            attr: 0,
+                            threshold: 0.0,
+                            aux,
+                            aux_len: leaf_dim as u32,
+                            child: 0,
+                        };
+                    }
+                    Some(cond) => {
+                        // Allocate both children adjacently.
+                        let child = e.nodes.len() as u32;
+                        for _ in 0..2 {
+                            e.nodes.push(FlatNode {
+                                kind: KIND_LEAF,
+                                missing_to_positive: false,
+                                attr: 0,
+                                threshold: 0.0,
+                                aux: 0,
+                                aux_len: 0,
+                                child: 0,
+                            });
+                        }
+                        flat_of[node.positive as usize] = child;
+                        flat_of[node.negative as usize] = child + 1;
+                        queue.push_back(node.positive as usize);
+                        queue.push_back(node.negative as usize);
+                        let fl = match cond {
+                            Condition::Higher { attr, threshold } => FlatNode {
+                                kind: KIND_HIGHER,
+                                missing_to_positive: node.missing_to_positive,
+                                attr: *attr as u32,
+                                threshold: *threshold,
+                                aux: 0,
+                                aux_len: 0,
+                                child,
+                            },
+                            Condition::ContainsBitmap { attr, bitmap } => {
+                                let aux = e.bitmaps.len() as u32;
+                                e.bitmaps.extend_from_slice(bitmap);
+                                FlatNode {
+                                    kind: KIND_CONTAINS,
+                                    missing_to_positive: node.missing_to_positive,
+                                    attr: *attr as u32,
+                                    threshold: 0.0,
+                                    aux,
+                                    aux_len: bitmap.len() as u32,
+                                    child,
+                                }
+                            }
+                            Condition::ContainsSetBitmap { attr, bitmap } => {
+                                let aux = e.bitmaps.len() as u32;
+                                e.bitmaps.extend_from_slice(bitmap);
+                                FlatNode {
+                                    kind: KIND_CONTAINS_SET,
+                                    missing_to_positive: node.missing_to_positive,
+                                    attr: *attr as u32,
+                                    threshold: 0.0,
+                                    aux,
+                                    aux_len: bitmap.len() as u32,
+                                    child,
+                                }
+                            }
+                            Condition::Oblique { attrs, weights, threshold } => {
+                                let aux = e.oblique.len() as u32;
+                                for (&a, &w) in attrs.iter().zip(weights) {
+                                    e.oblique.push((a as u32, w));
+                                }
+                                FlatNode {
+                                    kind: KIND_OBLIQUE,
+                                    missing_to_positive: node.missing_to_positive,
+                                    attr: 0,
+                                    threshold: *threshold,
+                                    aux,
+                                    aux_len: attrs.len() as u32,
+                                    child,
+                                }
+                            }
+                            Condition::IsTrue { attr } => FlatNode {
+                                kind: KIND_IS_TRUE,
+                                missing_to_positive: node.missing_to_positive,
+                                attr: *attr as u32,
+                                threshold: 0.0,
+                                aux: 0,
+                                aux_len: 0,
+                                child,
+                            },
+                        };
+                        e.nodes[flat_idx] = fl;
+                    }
+                }
+            }
+        }
+        e
+    }
+
+    /// Evaluates one tree on a row observation; returns leaf-value offset.
+    #[inline]
+    fn eval_tree_row(&self, root: u32, obs: &Observation) -> u32 {
+        let mut idx = root;
+        loop {
+            let n = &self.nodes[idx as usize];
+            let go_pos = match n.kind {
+                KIND_LEAF => return n.aux,
+                KIND_HIGHER => match &obs[n.attr as usize] {
+                    AttrValue::Num(x) if !x.is_nan() => *x >= n.threshold,
+                    _ => n.missing_to_positive,
+                },
+                KIND_CONTAINS => match &obs[n.attr as usize] {
+                    AttrValue::Cat(c) => bitmap_contains(
+                        &self.bitmaps[n.aux as usize..(n.aux + n.aux_len) as usize],
+                        *c,
+                    ),
+                    _ => n.missing_to_positive,
+                },
+                KIND_CONTAINS_SET => match &obs[n.attr as usize] {
+                    AttrValue::CatSet(items) => {
+                        let bm = &self.bitmaps[n.aux as usize..(n.aux + n.aux_len) as usize];
+                        items.iter().any(|&i| bitmap_contains(bm, i))
+                    }
+                    _ => n.missing_to_positive,
+                },
+                KIND_OBLIQUE => {
+                    let mut acc = 0.0f32;
+                    for &(a, w) in
+                        &self.oblique[n.aux as usize..(n.aux + n.aux_len) as usize]
+                    {
+                        if let AttrValue::Num(x) = &obs[a as usize] {
+                            if !x.is_nan() {
+                                acc += w * x;
+                            }
+                        }
+                    }
+                    acc >= n.threshold
+                }
+                KIND_IS_TRUE => match &obs[n.attr as usize] {
+                    AttrValue::Bool(b) => *b,
+                    _ => n.missing_to_positive,
+                },
+                _ => unreachable!(),
+            };
+            idx = if go_pos { n.child } else { n.child + 1 };
+        }
+    }
+
+    /// Same traversal against column storage (batch path).
+    #[inline]
+    fn eval_tree_ds(&self, root: u32, ds: &Dataset, row: usize) -> u32 {
+        let mut idx = root;
+        loop {
+            let n = &self.nodes[idx as usize];
+            let go_pos = match n.kind {
+                KIND_LEAF => return n.aux,
+                KIND_HIGHER => match &ds.columns[n.attr as usize] {
+                    ColumnData::Numerical(v) => {
+                        let x = v[row];
+                        if x.is_nan() {
+                            n.missing_to_positive
+                        } else {
+                            x >= n.threshold
+                        }
+                    }
+                    _ => n.missing_to_positive,
+                },
+                KIND_CONTAINS => match &ds.columns[n.attr as usize] {
+                    ColumnData::Categorical(v) => {
+                        let c = v[row];
+                        if c == crate::dataset::MISSING_CAT {
+                            n.missing_to_positive
+                        } else {
+                            bitmap_contains(
+                                &self.bitmaps[n.aux as usize..(n.aux + n.aux_len) as usize],
+                                c,
+                            )
+                        }
+                    }
+                    _ => n.missing_to_positive,
+                },
+                KIND_CONTAINS_SET => {
+                    let col = &ds.columns[n.attr as usize];
+                    if col.is_missing(row) {
+                        n.missing_to_positive
+                    } else {
+                        let bm = &self.bitmaps[n.aux as usize..(n.aux + n.aux_len) as usize];
+                        col.set_values(row)
+                            .map(|items| items.iter().any(|&i| bitmap_contains(bm, i)))
+                            .unwrap_or(n.missing_to_positive)
+                    }
+                }
+                KIND_OBLIQUE => {
+                    let mut acc = 0.0f32;
+                    for &(a, w) in
+                        &self.oblique[n.aux as usize..(n.aux + n.aux_len) as usize]
+                    {
+                        if let ColumnData::Numerical(v) = &ds.columns[a as usize] {
+                            let x = v[row];
+                            if !x.is_nan() {
+                                acc += w * x;
+                            }
+                        }
+                    }
+                    acc >= n.threshold
+                }
+                KIND_IS_TRUE => match &ds.columns[n.attr as usize] {
+                    ColumnData::Boolean(v) => match v[row] {
+                        1 => true,
+                        0 => false,
+                        _ => n.missing_to_positive,
+                    },
+                    _ => n.missing_to_positive,
+                },
+                _ => unreachable!(),
+            };
+            idx = if go_pos { n.child } else { n.child + 1 };
+        }
+    }
+
+    fn aggregate_leaves(&self, leaf_offsets: &[u32]) -> Vec<f64> {
+        match &self.aggregate {
+            Aggregate::RfAverage { num_classes, winner_take_all } => {
+                let mut acc = vec![0.0f64; *num_classes];
+                for &off in leaf_offsets {
+                    let v = &self.leaf_values[off as usize..off as usize + self.leaf_dim];
+                    if *winner_take_all {
+                        let mut best = 0usize;
+                        for (i, &x) in v.iter().enumerate().skip(1) {
+                            if x > v[best] {
+                                best = i;
+                            }
+                        }
+                        acc[best] += 1.0;
+                    } else {
+                        for (a, &x) in acc.iter_mut().zip(v) {
+                            *a += x as f64;
+                        }
+                    }
+                }
+                let n = leaf_offsets.len().max(1) as f64;
+                for a in acc.iter_mut() {
+                    *a /= n;
+                }
+                acc
+            }
+            Aggregate::RfRegression => {
+                let sum: f64 = leaf_offsets
+                    .iter()
+                    .map(|&off| self.leaf_values[off as usize] as f64)
+                    .sum();
+                vec![sum / leaf_offsets.len().max(1) as f64]
+            }
+            Aggregate::Gbt { loss, dim, initial } => {
+                let mut scores = initial.clone();
+                for (i, &off) in leaf_offsets.iter().enumerate() {
+                    scores[i % dim] += self.leaf_values[off as usize] as f64;
+                }
+                match loss {
+                    GbtLoss::BinomialLogLikelihood => {
+                        let p = crate::utils::stats::sigmoid(scores[0]);
+                        vec![1.0 - p, p]
+                    }
+                    GbtLoss::MultinomialLogLikelihood => {
+                        crate::utils::stats::softmax_in_place(&mut scores);
+                        scores
+                    }
+                    GbtLoss::SquaredError => scores,
+                }
+            }
+        }
+    }
+}
+
+impl InferenceEngine for FlatEngine {
+    fn name(&self) -> String {
+        let kind = match self.aggregate {
+            Aggregate::RfAverage { .. } | Aggregate::RfRegression => "RandomForest",
+            Aggregate::Gbt { .. } => "GradientBoostedTrees",
+        };
+        format!("{kind}OptPred") // YDF's name for its flat SoA engine
+    }
+
+    fn predict_row(&self, obs: &Observation) -> Vec<f64> {
+        let leaves: Vec<u32> =
+            self.roots.iter().map(|&r| self.eval_tree_row(r, obs)).collect();
+        self.aggregate_leaves(&leaves)
+    }
+
+    fn predict_dataset(&self, ds: &Dataset) -> Vec<Vec<f64>> {
+        let mut out = Vec::with_capacity(ds.num_rows());
+        let mut leaves = vec![0u32; self.roots.len()];
+        for row in 0..ds.num_rows() {
+            for (slot, &root) in leaves.iter_mut().zip(&self.roots) {
+                *slot = self.eval_tree_ds(root, ds, row);
+            }
+            out.push(self.aggregate_leaves(&leaves));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic;
+    use crate::learner::gbt::GbtConfig;
+    use crate::learner::random_forest::RandomForestConfig;
+    use crate::learner::{GradientBoostedTreesLearner, Learner, RandomForestLearner};
+
+    fn close(a: &[f64], b: &[f64]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < 1e-9, "{a:?} vs {b:?}");
+        }
+    }
+
+    #[test]
+    fn flat_matches_naive_gbt() {
+        let ds = synthetic::adult_like(200, 131);
+        let mut cfg = GbtConfig::new("income");
+        cfg.num_trees = 10;
+        cfg.max_depth = 4;
+        let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+        let flat = FlatEngine::compile(model.as_ref()).unwrap();
+        for r in 0..50 {
+            close(&flat.predict_row(&ds.row(r)), &model.predict_ds_row(&ds, r));
+        }
+        let batch = flat.predict_dataset(&ds);
+        for r in 0..50 {
+            close(&batch[r], &model.predict_ds_row(&ds, r));
+        }
+    }
+
+    #[test]
+    fn flat_matches_naive_rf_with_missing() {
+        let ds = synthetic::adult_like(200, 133);
+        let mut cfg = RandomForestConfig::new("income");
+        cfg.num_trees = 8;
+        cfg.compute_oob = false;
+        let model = RandomForestLearner::new(cfg).train(&ds).unwrap();
+        let flat = FlatEngine::compile(model.as_ref()).unwrap();
+        for r in 0..ds.num_rows() {
+            close(&flat.predict_row(&ds.row(r)), &model.predict_ds_row(&ds, r));
+        }
+    }
+
+    #[test]
+    fn flat_matches_naive_oblique_model() {
+        let ds = synthetic::adult_like(150, 137);
+        let mut cfg = GbtConfig::benchmark_rank1("income");
+        cfg.num_trees = 6;
+        let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+        let flat = FlatEngine::compile(model.as_ref()).unwrap();
+        for r in 0..ds.num_rows() {
+            close(&flat.predict_row(&ds.row(r)), &model.predict_ds_row(&ds, r));
+        }
+    }
+
+    #[test]
+    fn linear_model_not_compilable() {
+        let ds = synthetic::adult_like(50, 139);
+        let model = crate::learner::LinearLearner::default_config("income")
+            .train(&ds)
+            .unwrap();
+        assert!(FlatEngine::compile(model.as_ref()).is_none());
+    }
+}

@@ -1,0 +1,108 @@
+//! Inference engines (§3.7): a model is *compiled* into an engine chosen
+//! by model structure and available backends, trading space, complexity
+//! and latency. Engines:
+//!
+//! * [`naive::NaiveEngine`] — Algorithm 1, pointer-chasing traversal.
+//! * [`flat::FlatEngine`] — structure-of-arrays layout, branch-light.
+//! * [`quickscorer::QuickScorerEngine`] — Lucchese et al. 2015 bitvector
+//!   traversal for trees with ≤ 64 leaves (the engine the B.4 report calls
+//!   `GradientBoostedTreesQuickScorer`).
+//! * [`pjrt::PjrtEngine`] — the XLA artifact produced by the build-time
+//!   JAX/Pallas layers, executed through the PJRT C API.
+
+pub mod flat;
+pub mod naive;
+pub mod pjrt;
+pub mod quickscorer;
+
+use crate::dataset::{Dataset, Observation};
+use crate::model::Model;
+
+/// A compiled inference engine.
+pub trait InferenceEngine: Send + Sync {
+    /// Engine name as shown by `benchmark_inference` (B.4).
+    fn name(&self) -> String;
+    /// Predicts one row observation (probabilities / regression value).
+    fn predict_row(&self, obs: &Observation) -> Vec<f64>;
+    /// Predicts a whole dataset.
+    fn predict_dataset(&self, ds: &Dataset) -> Vec<Vec<f64>> {
+        (0..ds.num_rows()).map(|r| self.predict_row(&ds.row(r))).collect()
+    }
+}
+
+/// Compiles all engines compatible with `model`, fastest first. This is
+/// the automatic engine selection of §3.7: callers normally use
+/// `engines.first()`.
+pub fn compile_engines(model: &dyn Model) -> Vec<Box<dyn InferenceEngine>> {
+    let mut out: Vec<Box<dyn InferenceEngine>> = Vec::new();
+    if let Some(qs) = quickscorer::QuickScorerEngine::compile(model) {
+        out.push(Box::new(qs));
+    }
+    if let Some(flat) = flat::FlatEngine::compile(model) {
+        out.push(Box::new(flat));
+    }
+    out.push(Box::new(naive::NaiveEngine::compile(model)));
+    out
+}
+
+/// Inference benchmark report (Appendix B.4): runs every compatible engine
+/// over the dataset `runs` times and reports µs/example.
+pub fn benchmark_inference_report(
+    model: &dyn Model,
+    ds: &Dataset,
+    runs: usize,
+) -> String {
+    let engines = compile_engines(model);
+    let mut rows: Vec<(String, f64)> = Vec::new();
+    for e in &engines {
+        let t0 = std::time::Instant::now();
+        for _ in 0..runs.max(1) {
+            std::hint::black_box(e.predict_dataset(ds));
+        }
+        let per_example = t0.elapsed().as_secs_f64() / (runs.max(1) * ds.num_rows()) as f64;
+        rows.push((e.name(), per_example * 1e6));
+    }
+    rows.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    let mut out = format!(
+        "Inference benchmark: {} engines compatible with the model, {} examples x {} runs\n",
+        engines.len(),
+        ds.num_rows(),
+        runs
+    );
+    for (name, us) in rows {
+        out.push_str(&format!("  {name:<42} {us:>10.3} us/example\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic;
+    use crate::learner::gbt::GbtConfig;
+    use crate::learner::{GradientBoostedTreesLearner, Learner};
+
+    #[test]
+    fn engine_selection_order() {
+        let ds = synthetic::adult_like(200, 111);
+        let mut cfg = GbtConfig::new("income");
+        cfg.num_trees = 5;
+        cfg.max_depth = 4; // <= 64 leaves -> QuickScorer compatible
+        let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+        let engines = compile_engines(model.as_ref());
+        assert!(engines.len() >= 3);
+        assert!(engines[0].name().contains("QuickScorer"), "{}", engines[0].name());
+    }
+
+    #[test]
+    fn b4_report_renders() {
+        let ds = synthetic::adult_like(100, 113);
+        let mut cfg = GbtConfig::new("income");
+        cfg.num_trees = 3;
+        cfg.max_depth = 3;
+        let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+        let rep = benchmark_inference_report(model.as_ref(), &ds, 2);
+        assert!(rep.contains("us/example"));
+        assert!(rep.contains("engines compatible"));
+    }
+}

@@ -1,0 +1,86 @@
+//! Naive engine: Algorithm 1 of the paper — per-tree root-to-leaf pointer
+//! chasing through the model's own structures. Always compatible; the
+//! baseline the optimized engines are validated against.
+
+use super::InferenceEngine;
+use crate::dataset::{Dataset, Observation};
+use crate::model::forest::{GradientBoostedTreesModel, RandomForestModel};
+use crate::model::linear::LinearModel;
+use crate::model::Model;
+
+/// Holds a deep copy of the model (engines are self-contained so the
+/// source model can be dropped after compilation, §3.7).
+pub enum NaiveEngine {
+    Rf(RandomForestModel),
+    Gbt(GradientBoostedTreesModel),
+    Linear(LinearModel),
+    /// Fallback for wrapper models (ensembles, calibrated): boxed clone is
+    /// unavailable, so this variant is not constructed for them — see
+    /// `compile`.
+    Unsupported,
+}
+
+impl NaiveEngine {
+    pub fn compile(model: &dyn Model) -> NaiveEngine {
+        if let Some(m) = model.as_any().downcast_ref::<RandomForestModel>() {
+            NaiveEngine::Rf(m.clone())
+        } else if let Some(m) = model.as_any().downcast_ref::<GradientBoostedTreesModel>() {
+            NaiveEngine::Gbt(m.clone())
+        } else if let Some(m) = model.as_any().downcast_ref::<LinearModel>() {
+            NaiveEngine::Linear(m.clone())
+        } else {
+            NaiveEngine::Unsupported
+        }
+    }
+
+    fn as_model(&self) -> &dyn Model {
+        match self {
+            NaiveEngine::Rf(m) => m,
+            NaiveEngine::Gbt(m) => m,
+            NaiveEngine::Linear(m) => m,
+            NaiveEngine::Unsupported => {
+                panic!("naive engine compiled from an unsupported model type")
+            }
+        }
+    }
+}
+
+impl InferenceEngine for NaiveEngine {
+    fn name(&self) -> String {
+        let kind = match self {
+            NaiveEngine::Rf(_) => "RandomForest",
+            NaiveEngine::Gbt(_) => "GradientBoostedTrees",
+            NaiveEngine::Linear(_) => "Linear",
+            NaiveEngine::Unsupported => "Unsupported",
+        };
+        format!("{kind}Generic")
+    }
+
+    fn predict_row(&self, obs: &Observation) -> Vec<f64> {
+        self.as_model().predict_row(obs)
+    }
+
+    fn predict_dataset(&self, ds: &Dataset) -> Vec<Vec<f64>> {
+        self.as_model().predict_dataset(ds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic;
+    use crate::learner::{Learner, RandomForestLearner};
+
+    #[test]
+    fn naive_matches_model() {
+        let ds = synthetic::adult_like(100, 121);
+        let mut cfg = crate::learner::random_forest::RandomForestConfig::new("income");
+        cfg.num_trees = 4;
+        cfg.compute_oob = false;
+        let model = RandomForestLearner::new(cfg).train(&ds).unwrap();
+        let engine = NaiveEngine::compile(model.as_ref());
+        for r in [0usize, 7, 42] {
+            assert_eq!(engine.predict_row(&ds.row(r)), model.predict_ds_row(&ds, r));
+        }
+    }
+}

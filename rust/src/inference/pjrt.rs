@@ -1,0 +1,237 @@
+//! PJRT/XLA inference engine: executes the AOT artifact produced by the
+//! build-time JAX + Pallas layers (`python/compile/aot.py`) through the
+//! PJRT C API.
+//!
+//! The artifact is a *padded-tensor* forest evaluator with fixed shapes —
+//! the "tensorized" adaptation of QuickScorer's insight for accelerators
+//! (DESIGN.md §Hardware-Adaptation). Compilation is **lossy** in the §3.7
+//! sense: only binary GBT models over numerical features with `Higher`
+//! conditions are supported, missing values are mean-imputed before
+//! packing, and models exceeding the padded shapes are rejected.
+
+use super::InferenceEngine;
+use crate::dataset::{AttrValue, ColumnData, Dataset, FeatureSemantic, Observation};
+use crate::model::forest::{GbtLoss, GradientBoostedTreesModel};
+use crate::model::tree::Condition;
+use crate::model::Model;
+use crate::runtime::{literal_f32, literal_i32, to_vec_f32, Executable, Runtime};
+
+/// Padded shapes — must match python/compile/aot.py.
+pub const BATCH: usize = 64;
+pub const MAX_TREES: usize = 64;
+pub const MAX_NODES: usize = 256;
+pub const MAX_FEATURES: usize = 16;
+pub const MAX_DEPTH: usize = 12;
+
+/// The packed model tensors.
+struct PackedForest {
+    node_feature: Vec<i32>,  // [T, N], -1 = leaf
+    node_threshold: Vec<f32>, // [T, N]
+    node_pos: Vec<i32>,       // [T, N]
+    node_neg: Vec<i32>,       // [T, N]
+    leaf_value: Vec<f32>,     // [T, N]
+    initial: f32,
+    /// Numerical feature columns used, in packed order.
+    feature_cols: Vec<usize>,
+    /// Global means for imputation, aligned with `feature_cols`.
+    feature_means: Vec<f32>,
+}
+
+pub struct PjrtEngine {
+    exe: Executable,
+    packed: PackedForest,
+    num_classes: usize,
+}
+
+// SAFETY: the `xla` crate stores its PJRT handles behind `Rc` + raw
+// pointers without Send/Sync annotations, but the PJRT CPU client is
+// thread-safe for execution and `PjrtEngine` never clones the `Rc` or
+// hands the raw handles out; all access goes through `&self`.
+unsafe impl Send for PjrtEngine {}
+unsafe impl Sync for PjrtEngine {}
+
+impl PjrtEngine {
+    /// Compiles `model` into the PJRT engine, if compatible. Requires the
+    /// `forest.hlo.txt` artifact (built by `make artifacts`).
+    pub fn compile(model: &dyn Model, runtime: &Runtime) -> Result<PjrtEngine, String> {
+        let gbt = model
+            .as_any()
+            .downcast_ref::<GradientBoostedTreesModel>()
+            .ok_or("PJRT engine supports GRADIENT_BOOSTED_TREES models only")?;
+        if gbt.loss != GbtLoss::BinomialLogLikelihood {
+            return Err("PJRT engine supports the binomial loss only".to_string());
+        }
+        if gbt.trees.len() > MAX_TREES {
+            return Err(format!(
+                "model has {} trees; the compiled artifact supports up to {MAX_TREES}",
+                gbt.trees.len()
+            ));
+        }
+        // Collect used numerical features.
+        let mut feature_cols: Vec<usize> = Vec::new();
+        for t in &gbt.trees {
+            if t.num_nodes() > MAX_NODES {
+                return Err(format!(
+                    "a tree has {} nodes; the artifact supports up to {MAX_NODES}",
+                    t.num_nodes()
+                ));
+            }
+            if t.max_depth() > MAX_DEPTH {
+                return Err(format!(
+                    "a tree has depth {}; the artifact supports up to {MAX_DEPTH}",
+                    t.max_depth()
+                ));
+            }
+            for n in &t.nodes {
+                match &n.condition {
+                    None => {}
+                    Some(Condition::Higher { attr, .. }) => {
+                        if gbt.spec.columns[*attr].semantic != FeatureSemantic::Numerical {
+                            return Err("non-numerical feature in model".to_string());
+                        }
+                        if !feature_cols.contains(attr) {
+                            feature_cols.push(*attr);
+                        }
+                    }
+                    Some(c) => {
+                        return Err(format!(
+                            "condition {} is not supported by the PJRT engine",
+                            c.type_name()
+                        ))
+                    }
+                }
+            }
+        }
+        feature_cols.sort_unstable();
+        if feature_cols.len() > MAX_FEATURES {
+            return Err(format!(
+                "model uses {} features; the artifact supports up to {MAX_FEATURES}",
+                feature_cols.len()
+            ));
+        }
+        let feature_means: Vec<f32> = feature_cols
+            .iter()
+            .map(|&c| gbt.spec.columns[c].num_stats.mean as f32)
+            .collect();
+        let feat_slot = |attr: usize| feature_cols.iter().position(|&c| c == attr).unwrap();
+
+        // Pack node tables. Padding trees are a single leaf with value 0.
+        let mut node_feature = vec![-1i32; MAX_TREES * MAX_NODES];
+        let mut node_threshold = vec![0.0f32; MAX_TREES * MAX_NODES];
+        let mut node_pos = vec![0i32; MAX_TREES * MAX_NODES];
+        let mut node_neg = vec![0i32; MAX_TREES * MAX_NODES];
+        let mut leaf_value = vec![0.0f32; MAX_TREES * MAX_NODES];
+        for (t, tree) in gbt.trees.iter().enumerate() {
+            for (i, node) in tree.nodes.iter().enumerate() {
+                let idx = t * MAX_NODES + i;
+                match &node.condition {
+                    None => {
+                        node_feature[idx] = -1;
+                        leaf_value[idx] = node.value[0];
+                    }
+                    Some(Condition::Higher { attr, threshold }) => {
+                        node_feature[idx] = feat_slot(*attr) as i32;
+                        node_threshold[idx] = *threshold;
+                        node_pos[idx] = node.positive as i32;
+                        node_neg[idx] = node.negative as i32;
+                    }
+                    _ => unreachable!(),
+                }
+            }
+        }
+
+        let artifact = crate::runtime::artifacts_dir().join("forest.hlo.txt");
+        let exe = runtime.load_hlo_text(&artifact)?;
+
+        Ok(PjrtEngine {
+            exe,
+            packed: PackedForest {
+                node_feature,
+                node_threshold,
+                node_pos,
+                node_neg,
+                leaf_value,
+                initial: gbt.initial_predictions[0] as f32,
+                feature_cols,
+                feature_means,
+            },
+            num_classes: 2,
+        })
+    }
+
+    /// Executes one padded batch; `features` is [BATCH, MAX_FEATURES]
+    /// row-major, already imputed.
+    fn run_batch(&self, features: &[f32]) -> Result<Vec<f64>, String> {
+        let p = &self.packed;
+        let inputs = vec![
+            literal_f32(features, &[BATCH as i64, MAX_FEATURES as i64])?,
+            literal_i32(&p.node_feature, &[MAX_TREES as i64, MAX_NODES as i64])?,
+            literal_f32(&p.node_threshold, &[MAX_TREES as i64, MAX_NODES as i64])?,
+            literal_i32(&p.node_pos, &[MAX_TREES as i64, MAX_NODES as i64])?,
+            literal_i32(&p.node_neg, &[MAX_TREES as i64, MAX_NODES as i64])?,
+            literal_f32(&p.leaf_value, &[MAX_TREES as i64, MAX_NODES as i64])?,
+            literal_f32(&[p.initial], &[1])?,
+        ];
+        let out = self.exe.run(&inputs)?;
+        let probs = to_vec_f32(&out[0])?;
+        Ok(probs.into_iter().map(|x| x as f64).collect())
+    }
+
+    /// Packs dataset rows [start, start+count) into the feature buffer.
+    fn pack_ds(&self, ds: &Dataset, start: usize, count: usize, buf: &mut [f32]) {
+        let p = &self.packed;
+        buf.fill(0.0);
+        for (slot, (&col, &mean)) in
+            p.feature_cols.iter().zip(&p.feature_means).enumerate()
+        {
+            if let ColumnData::Numerical(v) = &ds.columns[col] {
+                for i in 0..count {
+                    let x = v[start + i];
+                    buf[i * MAX_FEATURES + slot] = if x.is_nan() { mean } else { x };
+                }
+            }
+        }
+    }
+}
+
+impl InferenceEngine for PjrtEngine {
+    fn name(&self) -> String {
+        "GradientBoostedTreesPjrtXla".to_string()
+    }
+
+    fn predict_row(&self, obs: &Observation) -> Vec<f64> {
+        let p = &self.packed;
+        let mut buf = vec![0.0f32; BATCH * MAX_FEATURES];
+        for (slot, (&col, &mean)) in
+            p.feature_cols.iter().zip(&p.feature_means).enumerate()
+        {
+            buf[slot] = match &obs[col] {
+                AttrValue::Num(x) if !x.is_nan() => *x,
+                _ => mean,
+            };
+        }
+        let probs = self.run_batch(&buf).expect("PJRT execution failed");
+        vec![1.0 - probs[0], probs[0]]
+    }
+
+    fn predict_dataset(&self, ds: &Dataset) -> Vec<Vec<f64>> {
+        let n = ds.num_rows();
+        let mut out = Vec::with_capacity(n);
+        let mut buf = vec![0.0f32; BATCH * MAX_FEATURES];
+        let mut start = 0usize;
+        while start < n {
+            let count = BATCH.min(n - start);
+            self.pack_ds(ds, start, count, &mut buf);
+            let probs = self.run_batch(&buf).expect("PJRT execution failed");
+            for &p in probs.iter().take(count) {
+                out.push(vec![1.0 - p, p]);
+            }
+            start += count;
+        }
+        let _ = self.num_classes;
+        out
+    }
+}
+
+// Integration coverage for this engine lives in rust/tests/pjrt_roundtrip.rs
+// (requires `make artifacts`).

@@ -1,0 +1,496 @@
+//! QuickScorer engine (Lucchese et al., SIGIR 2015): branch-free forest
+//! traversal for trees with up to 64 leaves.
+//!
+//! Leaves are numbered in positive-first DFS order; every internal node
+//! carries a 64-bit mask clearing the leaves of its *positive* subtree.
+//! Scoring an example ANDs the masks of all *false* nodes; the exit leaf
+//! is the lowest surviving bit. Numerical conditions are grouped per
+//! feature and sorted by threshold so the false set is a suffix found by
+//! binary search — the property that makes QuickScorer fast.
+
+use super::InferenceEngine;
+use crate::dataset::{AttrValue, ColumnData, Dataset, Observation, MISSING_CAT};
+use crate::model::forest::{GbtLoss, GradientBoostedTreesModel, RandomForestModel};
+use crate::model::tree::{bitmap_contains, Condition, DecisionTree};
+use crate::model::{Model, Task};
+
+/// A numerical (Higher) node: false iff `x < threshold`.
+struct NumericalNode {
+    threshold: f32,
+    tree: u32,
+    mask: u64,
+    missing_to_positive: bool,
+}
+
+/// A categorical (ContainsBitmap) node.
+struct CategoricalNode {
+    tree: u32,
+    mask: u64,
+    bitmap: Vec<u64>,
+    missing_to_positive: bool,
+}
+
+/// A boolean (IsTrue) node.
+struct BooleanNode {
+    tree: u32,
+    mask: u64,
+    missing_to_positive: bool,
+}
+
+enum Aggregate {
+    RfAverage { num_classes: usize, winner_take_all: bool },
+    RfRegression,
+    Gbt { loss: GbtLoss, dim: usize, initial: Vec<f64> },
+}
+
+pub struct QuickScorerEngine {
+    /// Numerical nodes grouped by attribute, sorted by threshold asc.
+    numerical: Vec<(usize, Vec<NumericalNode>)>,
+    categorical: Vec<(usize, Vec<CategoricalNode>)>,
+    boolean: Vec<(usize, Vec<BooleanNode>)>,
+    /// leaf_values[tree][leaf * leaf_dim .. +leaf_dim].
+    leaf_values: Vec<Vec<f32>>,
+    leaf_dim: usize,
+    num_trees: usize,
+    aggregate: Aggregate,
+}
+
+impl QuickScorerEngine {
+    /// Compiles the model if every tree has ≤ 64 leaves and only
+    /// QuickScorer-compatible conditions (Higher/ContainsBitmap/IsTrue).
+    pub fn compile(model: &dyn Model) -> Option<QuickScorerEngine> {
+        let (trees, leaf_dim, aggregate): (&[DecisionTree], usize, Aggregate) =
+            if let Some(m) = model.as_any().downcast_ref::<RandomForestModel>() {
+                let classes = match m.task {
+                    Task::Classification => m.spec.columns[m.label_col].vocab_size(),
+                    Task::Regression => 1,
+                };
+                let agg = match m.task {
+                    Task::Classification => Aggregate::RfAverage {
+                        num_classes: classes,
+                        winner_take_all: m.winner_take_all,
+                    },
+                    Task::Regression => Aggregate::RfRegression,
+                };
+                (&m.trees, classes, agg)
+            } else if let Some(m) =
+                model.as_any().downcast_ref::<GradientBoostedTreesModel>()
+            {
+                (
+                    &m.trees,
+                    1,
+                    Aggregate::Gbt {
+                        loss: m.loss,
+                        dim: m.trees_per_iter,
+                        initial: m.initial_predictions.clone(),
+                    },
+                )
+            } else {
+                return None;
+            };
+
+        let mut numerical: std::collections::BTreeMap<usize, Vec<NumericalNode>> =
+            Default::default();
+        let mut categorical: std::collections::BTreeMap<usize, Vec<CategoricalNode>> =
+            Default::default();
+        let mut boolean: std::collections::BTreeMap<usize, Vec<BooleanNode>> =
+            Default::default();
+        let mut leaf_values: Vec<Vec<f32>> = Vec::with_capacity(trees.len());
+
+        for (tree_idx, t) in trees.iter().enumerate() {
+            if t.num_leaves() > 64 {
+                return None;
+            }
+            // Positive-first DFS: assign leaf numbers and positive-subtree
+            // ranges.
+            let mut values = vec![0.0f32; t.num_leaves() * leaf_dim];
+            let mut next_leaf = 0u32;
+            // Iterative DFS with explicit post-processing of ranges.
+            // range_of[node] = (first_leaf, last_leaf_exclusive) of subtree.
+            fn dfs(
+                t: &DecisionTree,
+                idx: usize,
+                next_leaf: &mut u32,
+                values: &mut [f32],
+                leaf_dim: usize,
+                out: &mut Vec<(usize, u32, u32)>, // (node, pos_start, pos_end)
+            ) -> Result<(u32, u32), ()> {
+                let node = &t.nodes[idx];
+                match &node.condition {
+                    None => {
+                        let leaf = *next_leaf;
+                        *next_leaf += 1;
+                        for (k, &v) in node.value.iter().enumerate().take(leaf_dim) {
+                            values[leaf as usize * leaf_dim + k] = v;
+                        }
+                        Ok((leaf, leaf + 1))
+                    }
+                    Some(c) => {
+                        if !matches!(
+                            c,
+                            Condition::Higher { .. }
+                                | Condition::ContainsBitmap { .. }
+                                | Condition::IsTrue { .. }
+                        ) {
+                            return Err(());
+                        }
+                        let (ps, pe) =
+                            dfs(t, node.positive as usize, next_leaf, values, leaf_dim, out)?;
+                        let (_ns, ne) =
+                            dfs(t, node.negative as usize, next_leaf, values, leaf_dim, out)?;
+                        out.push((idx, ps, pe));
+                        Ok((ps, ne))
+                    }
+                }
+            }
+            let mut internal = Vec::new();
+            if dfs(t, 0, &mut next_leaf, &mut values, leaf_dim, &mut internal).is_err() {
+                return None;
+            }
+            leaf_values.push(values);
+
+            for (node_idx, ps, pe) in internal {
+                let node = &t.nodes[node_idx];
+                // Mask clears the positive-subtree leaves [ps, pe).
+                let width = pe - ps;
+                let bits = if width >= 64 { !0u64 } else { ((1u64 << width) - 1) << ps };
+                let mask = !bits;
+                match node.condition.as_ref().unwrap() {
+                    Condition::Higher { attr, threshold } => {
+                        numerical.entry(*attr).or_default().push(NumericalNode {
+                            threshold: *threshold,
+                            tree: tree_idx as u32,
+                            mask,
+                            missing_to_positive: node.missing_to_positive,
+                        });
+                    }
+                    Condition::ContainsBitmap { attr, bitmap } => {
+                        categorical.entry(*attr).or_default().push(CategoricalNode {
+                            tree: tree_idx as u32,
+                            mask,
+                            bitmap: bitmap.clone(),
+                            missing_to_positive: node.missing_to_positive,
+                        });
+                    }
+                    Condition::IsTrue { attr } => {
+                        boolean.entry(*attr).or_default().push(BooleanNode {
+                            tree: tree_idx as u32,
+                            mask,
+                            missing_to_positive: node.missing_to_positive,
+                        });
+                    }
+                    _ => unreachable!(),
+                }
+            }
+        }
+
+        let numerical: Vec<(usize, Vec<NumericalNode>)> = numerical
+            .into_iter()
+            .map(|(attr, mut nodes)| {
+                nodes.sort_by(|a, b| a.threshold.partial_cmp(&b.threshold).unwrap());
+                (attr, nodes)
+            })
+            .collect();
+
+        Some(QuickScorerEngine {
+            numerical,
+            categorical: categorical.into_iter().collect(),
+            boolean: boolean.into_iter().collect(),
+            leaf_values,
+            leaf_dim,
+            num_trees: trees.len(),
+            aggregate,
+        })
+    }
+
+    /// Core scoring: caller supplies per-attribute accessors.
+    fn score<'a>(
+        &self,
+        get_num: impl Fn(usize) -> Option<f32>, // None = missing
+        get_cat: impl Fn(usize) -> Option<u32>,
+        get_bool: impl Fn(usize) -> Option<bool>,
+        v: &'a mut [u64],
+    ) -> &'a [u64] {
+        v.fill(!0u64);
+        for (attr, nodes) in &self.numerical {
+            match get_num(*attr) {
+                Some(x) => {
+                    // Nodes are sorted by threshold; false iff x < thr, a
+                    // suffix. Binary search for the first false node.
+                    let start = nodes.partition_point(|n| n.threshold <= x);
+                    for n in &nodes[start..] {
+                        v[n.tree as usize] &= n.mask;
+                    }
+                }
+                None => {
+                    for n in nodes {
+                        if !n.missing_to_positive {
+                            v[n.tree as usize] &= n.mask;
+                        }
+                    }
+                }
+            }
+        }
+        for (attr, nodes) in &self.categorical {
+            match get_cat(*attr) {
+                Some(c) => {
+                    for n in nodes {
+                        if !bitmap_contains(&n.bitmap, c) {
+                            v[n.tree as usize] &= n.mask;
+                        }
+                    }
+                }
+                None => {
+                    for n in nodes {
+                        if !n.missing_to_positive {
+                            v[n.tree as usize] &= n.mask;
+                        }
+                    }
+                }
+            }
+        }
+        for (attr, nodes) in &self.boolean {
+            match get_bool(*attr) {
+                Some(true) => {}
+                Some(false) => {
+                    for n in nodes {
+                        v[n.tree as usize] &= n.mask;
+                    }
+                }
+                None => {
+                    for n in nodes {
+                        if !n.missing_to_positive {
+                            v[n.tree as usize] &= n.mask;
+                        }
+                    }
+                }
+            }
+        }
+        v
+    }
+
+    fn aggregate_bitvectors(&self, v: &[u64]) -> Vec<f64> {
+        match &self.aggregate {
+            Aggregate::RfAverage { num_classes, winner_take_all } => {
+                let mut acc = vec![0.0f64; *num_classes];
+                for (t, &bits) in v.iter().enumerate() {
+                    let leaf = bits.trailing_zeros() as usize;
+                    let lv = &self.leaf_values[t]
+                        [leaf * self.leaf_dim..(leaf + 1) * self.leaf_dim];
+                    if *winner_take_all {
+                        let mut best = 0usize;
+                        for (i, &x) in lv.iter().enumerate().skip(1) {
+                            if x > lv[best] {
+                                best = i;
+                            }
+                        }
+                        acc[best] += 1.0;
+                    } else {
+                        for (a, &x) in acc.iter_mut().zip(lv) {
+                            *a += x as f64;
+                        }
+                    }
+                }
+                let n = v.len().max(1) as f64;
+                for a in acc.iter_mut() {
+                    *a /= n;
+                }
+                acc
+            }
+            Aggregate::RfRegression => {
+                let sum: f64 = v
+                    .iter()
+                    .enumerate()
+                    .map(|(t, &bits)| {
+                        self.leaf_values[t][bits.trailing_zeros() as usize] as f64
+                    })
+                    .sum();
+                vec![sum / v.len().max(1) as f64]
+            }
+            Aggregate::Gbt { loss, dim, initial } => {
+                let mut scores = initial.clone();
+                for (t, &bits) in v.iter().enumerate() {
+                    let leaf = bits.trailing_zeros() as usize;
+                    scores[t % dim] += self.leaf_values[t][leaf] as f64;
+                }
+                match loss {
+                    GbtLoss::BinomialLogLikelihood => {
+                        let p = crate::utils::stats::sigmoid(scores[0]);
+                        vec![1.0 - p, p]
+                    }
+                    GbtLoss::MultinomialLogLikelihood => {
+                        crate::utils::stats::softmax_in_place(&mut scores);
+                        scores
+                    }
+                    GbtLoss::SquaredError => scores,
+                }
+            }
+        }
+    }
+}
+
+impl InferenceEngine for QuickScorerEngine {
+    fn name(&self) -> String {
+        let kind = match self.aggregate {
+            Aggregate::Gbt { .. } => "GradientBoostedTrees",
+            _ => "RandomForest",
+        };
+        format!("{kind}QuickScorer")
+    }
+
+    fn predict_row(&self, obs: &Observation) -> Vec<f64> {
+        let mut v = vec![!0u64; self.num_trees];
+        self.score(
+            |a| match &obs[a] {
+                AttrValue::Num(x) if !x.is_nan() => Some(*x),
+                _ => None,
+            },
+            |a| match &obs[a] {
+                AttrValue::Cat(c) => Some(*c),
+                _ => None,
+            },
+            |a| match &obs[a] {
+                AttrValue::Bool(b) => Some(*b),
+                _ => None,
+            },
+            &mut v,
+        );
+        self.aggregate_bitvectors(&v)
+    }
+
+    fn predict_dataset(&self, ds: &Dataset) -> Vec<Vec<f64>> {
+        // Resolve column storage once (perf iteration #2, EXPERIMENTS.md
+        // §Perf): the enum match per attribute per row measurably costs on
+        // the batch path.
+        let num_cols: Vec<Option<&[f32]>> =
+            ds.columns.iter().map(|c| c.as_numerical()).collect();
+        let cat_cols: Vec<Option<&[u32]>> =
+            ds.columns.iter().map(|c| c.as_categorical()).collect();
+        let bool_cols: Vec<Option<&[u8]>> =
+            ds.columns.iter().map(|c| c.as_boolean()).collect();
+        let mut out = Vec::with_capacity(ds.num_rows());
+        let mut v = vec![!0u64; self.num_trees];
+        for row in 0..ds.num_rows() {
+            self.score(
+                |a| {
+                    num_cols[a].and_then(|vals| {
+                        let x = vals[row];
+                        if x.is_nan() {
+                            None
+                        } else {
+                            Some(x)
+                        }
+                    })
+                },
+                |a| {
+                    cat_cols[a].and_then(|vals| {
+                        let c = vals[row];
+                        if c == MISSING_CAT {
+                            None
+                        } else {
+                            Some(c)
+                        }
+                    })
+                },
+                |a| {
+                    bool_cols[a].and_then(|vals| match vals[row] {
+                        1 => Some(true),
+                        0 => Some(false),
+                        _ => None,
+                    })
+                },
+                &mut v,
+            );
+            out.push(self.aggregate_bitvectors(&v));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic;
+    use crate::learner::gbt::GbtConfig;
+    use crate::learner::random_forest::RandomForestConfig;
+    use crate::learner::{GradientBoostedTreesLearner, Learner, RandomForestLearner};
+
+    fn close(a: &[f64], b: &[f64]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < 1e-9, "{a:?} vs {b:?}");
+        }
+    }
+
+    #[test]
+    fn quickscorer_matches_naive_gbt() {
+        let ds = synthetic::adult_like(300, 141);
+        let mut cfg = GbtConfig::new("income");
+        cfg.num_trees = 12;
+        cfg.max_depth = 5; // <= 32 leaves
+        let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+        let qs = QuickScorerEngine::compile(model.as_ref()).expect("compatible");
+        for r in 0..ds.num_rows() {
+            close(&qs.predict_row(&ds.row(r)), &model.predict_ds_row(&ds, r));
+        }
+        let batch = qs.predict_dataset(&ds);
+        for r in 0..ds.num_rows() {
+            close(&batch[r], &model.predict_ds_row(&ds, r));
+        }
+    }
+
+    #[test]
+    fn quickscorer_matches_small_rf() {
+        let ds = synthetic::adult_like(200, 143);
+        let mut cfg = RandomForestConfig::new("income");
+        cfg.num_trees = 6;
+        cfg.max_depth = 5;
+        cfg.compute_oob = false;
+        let model = RandomForestLearner::new(cfg).train(&ds).unwrap();
+        let qs = QuickScorerEngine::compile(model.as_ref()).expect("compatible");
+        for r in 0..ds.num_rows() {
+            close(&qs.predict_row(&ds.row(r)), &model.predict_ds_row(&ds, r));
+        }
+    }
+
+    #[test]
+    fn deep_trees_rejected() {
+        // Depth-16 RF trees typically exceed 64 leaves -> incompatible,
+        // "with the obvious caveat that it does not extend to larger
+        // trees" (§3.7).
+        let ds = synthetic::adult_like(2000, 145);
+        let mut cfg = RandomForestConfig::new("income");
+        cfg.num_trees = 2;
+        cfg.max_depth = 16;
+        cfg.min_examples = 1;
+        cfg.compute_oob = false;
+        let model = RandomForestLearner::new(cfg).train(&ds).unwrap();
+        let rf = model.as_any().downcast_ref::<RandomForestModel>().unwrap();
+        if rf.trees.iter().any(|t| t.num_leaves() > 64) {
+            assert!(QuickScorerEngine::compile(model.as_ref()).is_none());
+        }
+    }
+
+    #[test]
+    fn oblique_conditions_rejected() {
+        let ds = synthetic::adult_like(150, 147);
+        let mut cfg = GbtConfig::benchmark_rank1("income");
+        cfg.num_trees = 3;
+        let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+        assert!(QuickScorerEngine::compile(model.as_ref()).is_none());
+    }
+
+    #[test]
+    fn multiclass_gbt() {
+        let spec = synthetic::spec_by_name("Iris").unwrap();
+        let ds = synthetic::generate(spec, 3, &synthetic::GenOptions::default());
+        let mut cfg = GbtConfig::new("label");
+        cfg.num_trees = 6;
+        cfg.max_depth = 3;
+        let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+        let qs = QuickScorerEngine::compile(model.as_ref()).expect("compatible");
+        for r in 0..ds.num_rows() {
+            close(&qs.predict_row(&ds.row(r)), &model.predict_ds_row(&ds, r));
+        }
+    }
+}

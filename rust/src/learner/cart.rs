@@ -1,0 +1,316 @@
+//! CART learner (Breiman et al. 1984): a single decision tree with
+//! validation-set pruning. One of the built-in learners of §3.1.
+
+use super::decision_tree::{grow_tree, AttrSampling, GrowingStrategy, TreeConfig};
+use super::{classification_labels, feature_columns, regression_targets, Learner};
+use crate::dataset::Dataset;
+use crate::model::forest::RandomForestModel;
+use crate::model::tree::DecisionTree;
+use crate::model::{Model, Task};
+use crate::splitter::score::Labels;
+use crate::splitter::{SplitterConfig, TrainingCache};
+use crate::utils::rng::Rng;
+use std::collections::HashMap;
+
+/// CART configuration.
+#[derive(Clone, Debug)]
+pub struct CartConfig {
+    pub label: String,
+    pub task: Task,
+    pub max_depth: usize,
+    pub min_examples: usize,
+    pub splitter: SplitterConfig,
+    /// Fraction of examples used for reduced-error pruning (0 disables).
+    pub pruning_ratio: f64,
+    pub seed: u64,
+}
+
+impl CartConfig {
+    pub fn new(label: &str) -> CartConfig {
+        CartConfig {
+            label: label.to_string(),
+            task: Task::Classification,
+            max_depth: 16,
+            min_examples: 5,
+            splitter: SplitterConfig::default(),
+            pruning_ratio: 0.1,
+            seed: 9876,
+        }
+    }
+}
+
+/// A CART model is a Random Forest model with a single tree and probability
+/// averaging — the LEARNER–MODEL separation (§3.1) lets two learners share
+/// one model type, so all tree tooling applies.
+pub struct CartLearner {
+    pub config: CartConfig,
+}
+
+impl CartLearner {
+    pub fn new(config: CartConfig) -> Self {
+        CartLearner { config }
+    }
+
+    pub fn default_config(label: &str) -> Self {
+        CartLearner::new(CartConfig::new(label))
+    }
+}
+
+pub fn factory(
+    label: &str,
+    params: &HashMap<String, String>,
+) -> Result<Box<dyn Learner>, String> {
+    let mut cfg = CartConfig::new(label);
+    cfg.max_depth = super::parse_param(params, "max_depth", cfg.max_depth)?;
+    cfg.min_examples = super::parse_param(params, "min_examples", cfg.min_examples)?;
+    cfg.seed = super::parse_param(params, "seed", cfg.seed)?;
+    if let Some(t) = params.get("task") {
+        cfg.task = match t.as_str() {
+            "CLASSIFICATION" => Task::Classification,
+            "REGRESSION" => Task::Regression,
+            other => return Err(format!("unknown task '{other}'")),
+        };
+    }
+    Ok(Box::new(CartLearner::new(cfg)))
+}
+
+/// Reduced-error pruning: replace internal nodes by leaves whenever that
+/// does not hurt accuracy/SSE on a held-out set.
+fn prune(
+    tree: &mut DecisionTree,
+    ds: &Dataset,
+    rows: &[u32],
+    task: Task,
+    labels: &[u32],
+    targets: &[f32],
+) {
+    // For each node, collect the held-out rows that reach it, bottom-up.
+    fn route(tree: &DecisionTree, ds: &Dataset, rows: &[u32]) -> Vec<Vec<u32>> {
+        let mut reach: Vec<Vec<u32>> = vec![Vec::new(); tree.nodes.len()];
+        for &r in rows {
+            let mut idx = 0usize;
+            loop {
+                reach[idx].push(r);
+                let node = &tree.nodes[idx];
+                match &node.condition {
+                    None => break,
+                    Some(c) => {
+                        let pos = c
+                            .evaluate_ds(ds, r as usize)
+                            .unwrap_or(node.missing_to_positive);
+                        idx = if pos { node.positive as usize } else { node.negative as usize };
+                    }
+                }
+            }
+        }
+        reach
+    }
+    let reach = route(tree, ds, rows);
+
+    // Node error if converted to a leaf vs error of its subtree.
+    fn leaf_error(
+        value: &[f32],
+        rows: &[u32],
+        task: Task,
+        labels: &[u32],
+        targets: &[f32],
+    ) -> f64 {
+        match task {
+            Task::Classification => {
+                let mut best = 0usize;
+                for (i, &v) in value.iter().enumerate().skip(1) {
+                    if v > value[best] {
+                        best = i;
+                    }
+                }
+                rows.iter().filter(|&&r| labels[r as usize] != best as u32).count() as f64
+            }
+            Task::Regression => rows
+                .iter()
+                .map(|&r| {
+                    let e = value[0] as f64 - targets[r as usize] as f64;
+                    e * e
+                })
+                .sum(),
+        }
+    }
+
+    fn subtree_error(
+        tree: &DecisionTree,
+        idx: usize,
+        reach: &[Vec<u32>],
+        task: Task,
+        labels: &[u32],
+        targets: &[f32],
+    ) -> f64 {
+        let node = &tree.nodes[idx];
+        if node.is_leaf() {
+            leaf_error(&node.value, &reach[idx], task, labels, targets)
+        } else {
+            subtree_error(tree, node.positive as usize, reach, task, labels, targets)
+                + subtree_error(tree, node.negative as usize, reach, task, labels, targets)
+        }
+    }
+
+    // The leaf payload each internal node would get: recompute from its
+    // children (weighted by training counts).
+    fn merged_value(tree: &DecisionTree, idx: usize) -> (Vec<f32>, f64) {
+        let node = &tree.nodes[idx];
+        if node.is_leaf() {
+            return (node.value.clone(), node.num_examples);
+        }
+        let (pv, pn) = merged_value(tree, node.positive as usize);
+        let (nv, nn) = merged_value(tree, node.negative as usize);
+        let total = pn + nn;
+        let value = pv
+            .iter()
+            .zip(&nv)
+            .map(|(&a, &b)| ((a as f64 * pn + b as f64 * nn) / total.max(1.0)) as f32)
+            .collect();
+        (value, total)
+    }
+
+    // Bottom-up: visit nodes in decreasing index order (children always
+    // have larger indices than parents in our arena construction).
+    for idx in (0..tree.nodes.len()).rev() {
+        if tree.nodes[idx].is_leaf() || reach[idx].is_empty() {
+            continue;
+        }
+        let (value, total) = merged_value(tree, idx);
+        let as_leaf = leaf_error(&value, &reach[idx], task, labels, targets);
+        let as_subtree = subtree_error(tree, idx, &reach, task, labels, targets);
+        if as_leaf <= as_subtree {
+            let node = &mut tree.nodes[idx];
+            node.condition = None;
+            node.value = value;
+            node.num_examples = total;
+            node.score = 0.0;
+        }
+    }
+}
+
+impl Learner for CartLearner {
+    fn name(&self) -> &'static str {
+        "CART"
+    }
+
+    fn label(&self) -> &str {
+        &self.config.label
+    }
+
+    fn train_with_valid(
+        &self,
+        ds: &Dataset,
+        valid: Option<&Dataset>,
+    ) -> Result<Box<dyn Model>, String> {
+        let cfg = &self.config;
+        let (label_col, class_labels, reg_targets) = match cfg.task {
+            Task::Classification => {
+                let (c, l) = classification_labels(ds, &cfg.label)?;
+                (c, l, vec![])
+            }
+            Task::Regression => {
+                let (c, t) = regression_targets(ds, &cfg.label)?;
+                (c, vec![], t)
+            }
+        };
+        let features = feature_columns(ds, label_col);
+        let num_classes = ds.spec.columns[label_col].vocab_size();
+
+        // Split off a pruning set (or use the provided validation set).
+        let (train_rows, prune_rows): (Vec<u32>, Vec<u32>) =
+            if valid.is_none() && cfg.pruning_ratio > 0.0 && ds.num_rows() >= 20 {
+                let (tr, va) = ds.train_valid_split(cfg.pruning_ratio, cfg.seed);
+                (tr.iter().map(|&r| r as u32).collect(), va.iter().map(|&r| r as u32).collect())
+            } else {
+                ((0..ds.num_rows() as u32).collect(), vec![])
+            };
+
+        let labels_view = match cfg.task {
+            Task::Classification => {
+                Labels::Classification { labels: &class_labels, num_classes }
+            }
+            Task::Regression => Labels::Regression { targets: &reg_targets },
+        };
+        let tree_cfg = TreeConfig {
+            max_depth: cfg.max_depth,
+            min_examples: cfg.min_examples,
+            splitter: cfg.splitter.clone(),
+            growing: GrowingStrategy::Local,
+            attr_sampling: AttrSampling::All,
+        };
+        let mut cache = TrainingCache::new(ds);
+        let mut rng = Rng::seed_from_u64(cfg.seed);
+        let mut tree =
+            grow_tree(ds, train_rows, &labels_view, &features, &tree_cfg, &mut cache, &mut rng);
+
+        if !prune_rows.is_empty() {
+            prune(&mut tree, ds, &prune_rows, cfg.task, &class_labels, &reg_targets);
+        } else if let Some(v) = valid {
+            let (v_labels, v_targets) = match cfg.task {
+                Task::Classification => (classification_labels(v, &cfg.label)?.1, vec![]),
+                Task::Regression => (vec![], regression_targets(v, &cfg.label)?.1),
+            };
+            let rows: Vec<u32> = (0..v.num_rows() as u32).collect();
+            prune(&mut tree, v, &rows, cfg.task, &v_labels, &v_targets);
+        }
+
+        Ok(Box::new(RandomForestModel {
+            spec: ds.spec.clone(),
+            label_col,
+            task: cfg.task,
+            trees: vec![tree],
+            winner_take_all: false,
+            oob_evaluation: None,
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic;
+    use crate::evaluation_free_accuracy;
+
+    #[test]
+    fn single_tree_learns() {
+        let ds = synthetic::adult_like(500, 41);
+        let model = CartLearner::default_config("income").train(&ds).unwrap();
+        let acc = evaluation_free_accuracy(model.as_ref(), &ds);
+        assert!(acc > 0.72, "accuracy {acc}");
+        let rf = model.as_any().downcast_ref::<RandomForestModel>().unwrap();
+        assert_eq!(rf.trees.len(), 1);
+    }
+
+    #[test]
+    fn pruning_shrinks_overfit_tree() {
+        let ds = synthetic::adult_like(400, 43);
+        let mut cfg = CartConfig::new("income");
+        cfg.max_depth = 30;
+        cfg.min_examples = 1;
+        cfg.pruning_ratio = 0.0;
+        let unpruned = CartLearner::new(cfg.clone()).train(&ds).unwrap();
+        cfg.pruning_ratio = 0.3;
+        let pruned = CartLearner::new(cfg).train(&ds).unwrap();
+        let nodes = |m: &dyn Model| {
+            m.as_any().downcast_ref::<RandomForestModel>().unwrap().trees[0].num_nodes()
+        };
+        assert!(
+            nodes(pruned.as_ref()) < nodes(unpruned.as_ref()),
+            "{} vs {}",
+            nodes(pruned.as_ref()),
+            nodes(unpruned.as_ref())
+        );
+    }
+
+    #[test]
+    fn regression_cart() {
+        let ds = synthetic::adult_like(300, 47);
+        let mut cfg = CartConfig::new("hours_per_week");
+        cfg.task = Task::Regression;
+        let model = CartLearner::new(cfg).train(&ds).unwrap();
+        let p = model.predict_ds_row(&ds, 0);
+        assert_eq!(p.len(), 1);
+        assert!(p[0].is_finite());
+    }
+}

@@ -1,0 +1,531 @@
+//! Gradient Boosted Trees learner (Friedman 2001) with binomial,
+//! multinomial and squared-error losses, shrinkage, early stopping on a
+//! self-extracted validation split (§3.3), optional hessian gain and the
+//! benchmark_rank1@v1 template (Appendix C.1).
+
+use super::decision_tree::{grow_tree, AttrSampling, GrowingStrategy, TreeConfig};
+use super::{classification_labels, feature_columns, regression_targets, Learner};
+use crate::dataset::Dataset;
+use crate::model::forest::{GbtLoss, GradientBoostedTreesModel};
+use crate::model::{Model, SelfEvaluation, Task};
+use crate::splitter::score::Labels;
+use crate::splitter::{
+    CategoricalSplit, ObliqueNormalization, SplitAxis, SplitterConfig, TrainingCache,
+};
+use crate::utils::rng::Rng;
+use crate::utils::stats::{sigmoid, softmax_in_place};
+use std::collections::HashMap;
+
+/// Early-stopping policy (Appendix C.1: `early_stopping: LOSS_INCREASE`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EarlyStopping {
+    None,
+    /// Stop when validation loss has not improved for `patience`
+    /// iterations; keep the best iteration's trees.
+    LossIncrease { patience: usize },
+}
+
+/// GBT configuration. Defaults = Appendix C.1 "Gradient Boosted Trees
+/// hyper-parameters".
+#[derive(Clone, Debug)]
+pub struct GbtConfig {
+    pub label: String,
+    pub task: Task,
+    pub num_trees: usize,
+    pub shrinkage: f64,
+    pub max_depth: usize,
+    pub min_examples: usize,
+    pub l1: f64,
+    pub l2: f64,
+    pub use_hessian_gain: bool,
+    /// Row subsampling per iteration (`sampling_method: NONE` -> 1.0).
+    pub subsample: f64,
+    pub attr_sampling: AttrSampling,
+    pub splitter: SplitterConfig,
+    pub growing: GrowingStrategy,
+    /// Fraction of the training set set aside for validation when no
+    /// validation dataset is provided (§3.3).
+    pub validation_ratio: f64,
+    pub early_stopping: EarlyStopping,
+    pub seed: u64,
+}
+
+impl GbtConfig {
+    pub fn new(label: &str) -> GbtConfig {
+        GbtConfig {
+            label: label.to_string(),
+            task: Task::Classification,
+            num_trees: 300,
+            shrinkage: 0.1,
+            max_depth: 6,
+            min_examples: 5,
+            l1: 0.0,
+            l2: 0.0,
+            use_hessian_gain: false,
+            subsample: 1.0,
+            attr_sampling: AttrSampling::All, // num_candidate_attributes: -1
+            splitter: SplitterConfig::default(),
+            growing: GrowingStrategy::Local,
+            validation_ratio: 0.1,
+            early_stopping: EarlyStopping::LossIncrease { patience: 30 },
+            seed: 4321,
+        }
+    }
+
+    /// benchmark_rank1@v1 (Appendix C.1): best-first global growth, random
+    /// categorical splits, sparse oblique projections with MIN_MAX
+    /// normalization.
+    pub fn benchmark_rank1(label: &str) -> GbtConfig {
+        let mut cfg = GbtConfig::new(label);
+        cfg.growing = GrowingStrategy::BestFirstGlobal { max_num_leaves: 32 };
+        cfg.max_depth = usize::MAX;
+        cfg.splitter.categorical = CategoricalSplit::Random { trials: 32 };
+        cfg.splitter.axis = SplitAxis::SparseOblique {
+            num_projections_exponent: 1.0,
+            normalization: ObliqueNormalization::MinMax,
+        };
+        cfg
+    }
+}
+
+pub struct GradientBoostedTreesLearner {
+    pub config: GbtConfig,
+}
+
+impl GradientBoostedTreesLearner {
+    pub fn new(config: GbtConfig) -> Self {
+        GradientBoostedTreesLearner { config }
+    }
+
+    pub fn default_config(label: &str) -> Self {
+        GradientBoostedTreesLearner::new(GbtConfig::new(label))
+    }
+}
+
+/// Registry factory (§3.5).
+pub fn factory(
+    label: &str,
+    params: &HashMap<String, String>,
+) -> Result<Box<dyn Learner>, String> {
+    let mut cfg = GbtConfig::new(label);
+    if params.get("template").map(|s| s.as_str()) == Some("benchmark_rank1@v1") {
+        cfg = GbtConfig::benchmark_rank1(label);
+    }
+    cfg.num_trees = super::parse_param(params, "num_trees", cfg.num_trees)?;
+    cfg.shrinkage = super::parse_param(params, "shrinkage", cfg.shrinkage)?;
+    cfg.max_depth = super::parse_param(params, "max_depth", cfg.max_depth)?;
+    cfg.min_examples = super::parse_param(params, "min_examples", cfg.min_examples)?;
+    cfg.subsample = super::parse_param(params, "subsample", cfg.subsample)?;
+    cfg.use_hessian_gain =
+        super::parse_param(params, "use_hessian_gain", cfg.use_hessian_gain)?;
+    cfg.seed = super::parse_param(params, "seed", cfg.seed)?;
+    if let Some(t) = params.get("task") {
+        cfg.task = match t.as_str() {
+            "CLASSIFICATION" => Task::Classification,
+            "REGRESSION" => Task::Regression,
+            other => return Err(format!("unknown task '{other}'")),
+        };
+    }
+    Ok(Box::new(GradientBoostedTreesLearner::new(cfg)))
+}
+
+impl Learner for GradientBoostedTreesLearner {
+    fn name(&self) -> &'static str {
+        "GRADIENT_BOOSTED_TREES"
+    }
+
+    fn label(&self) -> &str {
+        &self.config.label
+    }
+
+    fn train_with_valid(
+        &self,
+        ds: &Dataset,
+        valid: Option<&Dataset>,
+    ) -> Result<Box<dyn Model>, String> {
+        let cfg = &self.config;
+        if ds.num_rows() < 4 {
+            return Err(format!(
+                "GBT training requires at least 4 examples, got {}.",
+                ds.num_rows()
+            ));
+        }
+        // Split off the validation set unless one was provided (§3.3).
+        let use_early_stop = cfg.early_stopping != EarlyStopping::None;
+        let (train_ds, valid_ds): (Dataset, Option<Dataset>) = match valid {
+            Some(v) => (ds.clone(), Some(v.clone())),
+            None if use_early_stop && cfg.validation_ratio > 0.0 => {
+                let (tr, va) = ds.train_valid_split(cfg.validation_ratio, cfg.seed ^ 0x7777);
+                (ds.subset(&tr), Some(ds.subset(&va)))
+            }
+            None => (ds.clone(), None),
+        };
+
+        match cfg.task {
+            Task::Classification => {
+                let (label_col, labels) = classification_labels(&train_ds, &cfg.label)?;
+                let num_classes = train_ds.spec.columns[label_col].vocab_size();
+                if num_classes < 2 {
+                    return Err(format!(
+                        "the label column \"{}\" has fewer than 2 classes.",
+                        cfg.label
+                    ));
+                }
+                let valid_labels = valid_ds
+                    .as_ref()
+                    .map(|v| classification_labels(v, &cfg.label).map(|(_, l)| l))
+                    .transpose()?;
+                if num_classes == 2 {
+                    self.boost(
+                        &train_ds,
+                        valid_ds.as_ref(),
+                        label_col,
+                        BoostTargets::Binary { labels, valid_labels },
+                    )
+                } else {
+                    self.boost(
+                        &train_ds,
+                        valid_ds.as_ref(),
+                        label_col,
+                        BoostTargets::Multiclass { labels, valid_labels, num_classes },
+                    )
+                }
+            }
+            Task::Regression => {
+                let (label_col, targets) = regression_targets(&train_ds, &cfg.label)?;
+                let valid_targets = valid_ds
+                    .as_ref()
+                    .map(|v| regression_targets(v, &cfg.label).map(|(_, t)| t))
+                    .transpose()?;
+                self.boost(
+                    &train_ds,
+                    valid_ds.as_ref(),
+                    label_col,
+                    BoostTargets::Regression { targets, valid_targets },
+                )
+            }
+        }
+    }
+}
+
+enum BoostTargets {
+    Binary { labels: Vec<u32>, valid_labels: Option<Vec<u32>> },
+    Multiclass { labels: Vec<u32>, valid_labels: Option<Vec<u32>>, num_classes: usize },
+    Regression { targets: Vec<f32>, valid_targets: Option<Vec<f32>> },
+}
+
+impl GradientBoostedTreesLearner {
+    fn boost(
+        &self,
+        train: &Dataset,
+        valid: Option<&Dataset>,
+        label_col: usize,
+        targets: BoostTargets,
+    ) -> Result<Box<dyn Model>, String> {
+        let cfg = &self.config;
+        let n = train.num_rows();
+        let features = feature_columns(train, label_col);
+        let mut rng = Rng::seed_from_u64(cfg.seed);
+
+        let (loss, dim, initial): (GbtLoss, usize, Vec<f64>) = match &targets {
+            BoostTargets::Binary { labels, .. } => {
+                let pos = labels.iter().filter(|&&l| l == 1).count() as f64;
+                let p = (pos / n as f64).clamp(1e-6, 1.0 - 1e-6);
+                (GbtLoss::BinomialLogLikelihood, 1, vec![(p / (1.0 - p)).ln()])
+            }
+            BoostTargets::Multiclass { labels, num_classes, .. } => {
+                let mut priors = vec![0.0f64; *num_classes];
+                for &l in labels {
+                    priors[l as usize] += 1.0;
+                }
+                let init = priors
+                    .iter()
+                    .map(|&c| ((c / n as f64).max(1e-9)).ln())
+                    .collect();
+                (GbtLoss::MultinomialLogLikelihood, *num_classes, init)
+            }
+            BoostTargets::Regression { targets, .. } => {
+                let mean = targets.iter().map(|&t| t as f64).sum::<f64>() / n as f64;
+                (GbtLoss::SquaredError, 1, vec![mean])
+            }
+        };
+
+        // Raw scores per train/valid example per dim.
+        let mut scores: Vec<f64> = (0..n * dim).map(|i| initial[i % dim]).collect();
+        let n_valid = valid.map(|v| v.num_rows()).unwrap_or(0);
+        let mut valid_scores: Vec<f64> =
+            (0..n_valid * dim).map(|i| initial[i % dim]).collect();
+
+        let tree_cfg = TreeConfig {
+            max_depth: cfg.max_depth,
+            min_examples: cfg.min_examples,
+            splitter: cfg.splitter.clone(),
+            growing: cfg.growing,
+            attr_sampling: cfg.attr_sampling,
+        };
+
+        let mut cache = TrainingCache::new(train);
+        let mut trees = Vec::new();
+        let mut grad = vec![0.0f32; n];
+        let mut hess = vec![0.0f32; n];
+        let mut best_valid_loss = f64::INFINITY;
+        let mut best_num_trees = 0usize;
+        let mut since_best = 0usize;
+        let mut last_valid_loss = None;
+
+        'outer: for _iter in 0..cfg.num_trees {
+            // Row subsampling for this iteration.
+            let rows: Vec<u32> = if cfg.subsample < 1.0 {
+                (0..n as u32)
+                    .filter(|_| rng.bernoulli(cfg.subsample))
+                    .collect()
+            } else {
+                (0..n as u32).collect()
+            };
+            if rows.len() < 2 * cfg.min_examples {
+                break;
+            }
+            for k in 0..dim {
+                // Gradients of the loss at current scores.
+                match &targets {
+                    BoostTargets::Binary { labels, .. } => {
+                        for i in 0..n {
+                            let p = sigmoid(scores[i]);
+                            grad[i] = (p - labels[i] as f64) as f32;
+                            hess[i] = (p * (1.0 - p)).max(1e-6) as f32;
+                        }
+                    }
+                    BoostTargets::Multiclass { labels, num_classes, .. } => {
+                        for i in 0..n {
+                            let mut probs: Vec<f64> =
+                                (0..*num_classes).map(|c| scores[i * dim + c]).collect();
+                            softmax_in_place(&mut probs);
+                            let y = (labels[i] as usize == k) as u8 as f64;
+                            grad[i] = (probs[k] - y) as f32;
+                            hess[i] = (probs[k] * (1.0 - probs[k])).max(1e-6) as f32;
+                        }
+                    }
+                    BoostTargets::Regression { targets, .. } => {
+                        for i in 0..n {
+                            grad[i] = (scores[i] - targets[i] as f64) as f32;
+                            hess[i] = 1.0;
+                        }
+                    }
+                }
+                let labels_view = Labels::Gradients {
+                    grad: &grad,
+                    hess: &hess,
+                    use_hessian_gain: cfg.use_hessian_gain,
+                    l1: cfg.l1,
+                    l2: cfg.l2,
+                };
+                let mut tree = grow_tree(
+                    train,
+                    rows.clone(),
+                    &labels_view,
+                    &features,
+                    &tree_cfg,
+                    &mut cache,
+                    &mut rng,
+                );
+                // Bake the shrinkage into leaf values.
+                for node in &mut tree.nodes {
+                    if node.is_leaf() {
+                        node.value[0] *= cfg.shrinkage as f32;
+                    }
+                }
+                // Update scores.
+                for i in 0..n {
+                    scores[i * dim + k] += tree.eval_ds(train, i).value[0] as f64;
+                }
+                if let Some(v) = valid {
+                    for i in 0..n_valid {
+                        valid_scores[i * dim + k] += tree.eval_ds(v, i).value[0] as f64;
+                    }
+                }
+                trees.push(tree);
+            }
+
+            // Early stopping on validation loss (LOSS_INCREASE).
+            if let (Some(_v), EarlyStopping::LossIncrease { patience }) =
+                (valid, cfg.early_stopping)
+            {
+                let vloss = match &targets {
+                    BoostTargets::Binary { valid_labels: Some(vl), .. } => {
+                        let mut loss_sum = 0.0;
+                        for i in 0..n_valid {
+                            let p = sigmoid(valid_scores[i]).clamp(1e-12, 1.0 - 1e-12);
+                            loss_sum -= if vl[i] == 1 { p.ln() } else { (1.0 - p).ln() };
+                        }
+                        loss_sum / n_valid.max(1) as f64
+                    }
+                    BoostTargets::Multiclass { valid_labels: Some(vl), num_classes, .. } => {
+                        let mut loss_sum = 0.0;
+                        for i in 0..n_valid {
+                            let mut probs: Vec<f64> = (0..*num_classes)
+                                .map(|c| valid_scores[i * dim + c])
+                                .collect();
+                            softmax_in_place(&mut probs);
+                            loss_sum -= probs[vl[i] as usize].max(1e-12).ln();
+                        }
+                        loss_sum / n_valid.max(1) as f64
+                    }
+                    BoostTargets::Regression { valid_targets: Some(vt), .. } => {
+                        let mut loss_sum = 0.0;
+                        for i in 0..n_valid {
+                            let e = valid_scores[i] - vt[i] as f64;
+                            loss_sum += e * e;
+                        }
+                        loss_sum / n_valid.max(1) as f64
+                    }
+                    _ => f64::INFINITY,
+                };
+                last_valid_loss = Some(vloss);
+                if vloss < best_valid_loss - 1e-9 {
+                    best_valid_loss = vloss;
+                    best_num_trees = trees.len();
+                    since_best = 0;
+                } else {
+                    since_best += 1;
+                    if since_best >= patience {
+                        break 'outer;
+                    }
+                }
+            }
+        }
+
+        // Truncate to the best validated iteration.
+        if best_num_trees > 0 && best_num_trees < trees.len() {
+            trees.truncate(best_num_trees);
+        }
+        let validation_loss = if best_valid_loss.is_finite() {
+            Some(best_valid_loss)
+        } else {
+            last_valid_loss
+        };
+
+        let self_eval = validation_loss.map(|v| SelfEvaluation {
+            metric: "validation loss".to_string(),
+            value: v,
+            num_examples: n_valid as u64,
+        });
+
+        Ok(Box::new(GradientBoostedTreesModel {
+            spec: train.spec.clone(),
+            label_col,
+            task: cfg.task,
+            loss,
+            trees,
+            trees_per_iter: dim,
+            initial_predictions: initial,
+            validation_loss,
+            self_eval,
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic;
+    use crate::evaluation_free_accuracy;
+
+    fn small_gbt(label: &str, trees: usize) -> GradientBoostedTreesLearner {
+        let mut cfg = GbtConfig::new(label);
+        cfg.num_trees = trees;
+        cfg.max_depth = 4;
+        GradientBoostedTreesLearner::new(cfg)
+    }
+
+    #[test]
+    fn learns_binary_classification() {
+        let ds = synthetic::adult_like(600, 21);
+        let model = small_gbt("income", 30).train(&ds).unwrap();
+        let acc = evaluation_free_accuracy(model.as_ref(), &ds);
+        assert!(acc > 0.78, "train accuracy {acc}");
+        assert!(model.self_evaluation().is_some());
+    }
+
+    #[test]
+    fn learns_multiclass() {
+        let spec = synthetic::spec_by_name("Iris").unwrap();
+        let ds = synthetic::generate(spec, 3, &synthetic::GenOptions::default());
+        let model = small_gbt("label", 25).train(&ds).unwrap();
+        assert_eq!(model.num_classes(), 3);
+        let p = model.predict_ds_row(&ds, 0);
+        assert_eq!(p.len(), 3);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        let acc = evaluation_free_accuracy(model.as_ref(), &ds);
+        assert!(acc > 0.5, "accuracy {acc}");
+    }
+
+    #[test]
+    fn learns_regression() {
+        let ds = synthetic::adult_like(400, 9);
+        let mut cfg = GbtConfig::new("capital_gain");
+        cfg.task = Task::Regression;
+        cfg.num_trees = 10;
+        let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+        assert_eq!(model.task(), Task::Regression);
+        let p = model.predict_ds_row(&ds, 0);
+        assert_eq!(p.len(), 1);
+    }
+
+    #[test]
+    fn early_stopping_truncates() {
+        let ds = synthetic::adult_like(300, 13);
+        let mut cfg = GbtConfig::new("income");
+        cfg.num_trees = 200;
+        cfg.max_depth = 3;
+        cfg.early_stopping = EarlyStopping::LossIncrease { patience: 5 };
+        let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+        let gbt = model
+            .as_any()
+            .downcast_ref::<GradientBoostedTreesModel>()
+            .unwrap();
+        // On 300 examples the model overfits long before 200 trees.
+        assert!(gbt.trees.len() < 200, "kept {} trees", gbt.trees.len());
+        assert!(gbt.validation_loss.is_some());
+    }
+
+    #[test]
+    fn deterministic() {
+        let ds = synthetic::adult_like(200, 17);
+        let m1 = small_gbt("income", 8).train(&ds).unwrap();
+        let m2 = small_gbt("income", 8).train(&ds).unwrap();
+        assert_eq!(m1.to_json().to_string(), m2.to_json().to_string());
+    }
+
+    #[test]
+    fn benchmark_template_improves_or_matches_default() {
+        // Not a strict inequality in general; check it trains and predicts.
+        let ds = synthetic::adult_like(400, 29);
+        let mut cfg = GbtConfig::benchmark_rank1("income");
+        cfg.num_trees = 20;
+        let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+        let acc = evaluation_free_accuracy(model.as_ref(), &ds);
+        assert!(acc > 0.7, "accuracy {acc}");
+    }
+
+    #[test]
+    fn explicit_validation_dataset_used() {
+        let ds = synthetic::adult_like(300, 31);
+        let valid = synthetic::adult_like(100, 32);
+        let model = small_gbt("income", 10).train_with_valid(&ds, Some(&valid)).unwrap();
+        let gbt = model
+            .as_any()
+            .downcast_ref::<GradientBoostedTreesModel>()
+            .unwrap();
+        assert!(gbt.validation_loss.is_some());
+    }
+
+    #[test]
+    fn tiny_dataset_rejected() {
+        let ds = synthetic::adult_like(3, 1);
+        let err = match small_gbt("income", 5).train(&ds) {
+            Err(e) => e,
+            Ok(_) => panic!(),
+        };
+        assert!(err.contains("at least 4 examples"), "{err}");
+    }
+}

@@ -1,0 +1,285 @@
+//! Hyper-parameter templates (§3.11) and the tuning search spaces of
+//! Appendix C.2.
+//!
+//! Templates are versioned: `benchmark_rank1@v1` always denotes the same
+//! hyper-parameters, preserving the backwards-compatibility guarantee that
+//! "running a learner configured with a given set of hyper-parameters
+//! always returns the same model".
+
+use crate::utils::rng::Rng;
+use std::collections::HashMap;
+
+/// A named, versioned hyper-parameter template.
+#[derive(Clone, Debug)]
+pub struct HyperParameterTemplate {
+    pub name: &'static str,
+    pub version: u32,
+    pub learner: &'static str,
+    pub params: &'static [(&'static str, &'static str)],
+}
+
+/// All built-in templates. `benchmark_rank1@v1` mirrors Appendix C.1.
+pub const TEMPLATES: &[HyperParameterTemplate] = &[
+    HyperParameterTemplate {
+        name: "benchmark_rank1",
+        version: 1,
+        learner: "GRADIENT_BOOSTED_TREES",
+        params: &[("template", "benchmark_rank1@v1")],
+    },
+    HyperParameterTemplate {
+        name: "benchmark_rank1",
+        version: 1,
+        learner: "RANDOM_FOREST",
+        params: &[("template", "benchmark_rank1@v1")],
+    },
+];
+
+/// Looks up a template by `name@version` (e.g. "benchmark_rank1@v1").
+pub fn find_template(learner: &str, spec: &str) -> Option<&'static HyperParameterTemplate> {
+    let (name, version) = match spec.split_once("@v") {
+        Some((n, v)) => (n, v.parse::<u32>().ok()?),
+        None => (spec, 1),
+    };
+    TEMPLATES
+        .iter()
+        .find(|t| t.learner == learner && t.name == name && t.version == version)
+}
+
+/// One hyper-parameter axis of a search space.
+#[derive(Clone, Debug)]
+pub enum ParamRange {
+    IntRange { key: &'static str, lo: i64, hi: i64 },
+    FloatRange { key: &'static str, lo: f64, hi: f64 },
+    Choice { key: &'static str, options: &'static [&'static str] },
+}
+
+impl ParamRange {
+    /// Draws one random value, rendered as a string override.
+    pub fn sample(&self, rng: &mut Rng) -> (String, String) {
+        match self {
+            ParamRange::IntRange { key, lo, hi } => (
+                key.to_string(),
+                (lo + rng.uniform_usize((hi - lo + 1) as usize) as i64).to_string(),
+            ),
+            ParamRange::FloatRange { key, lo, hi } => {
+                (key.to_string(), format!("{}", rng.uniform_range(*lo, *hi)))
+            }
+            ParamRange::Choice { key, options } => {
+                (key.to_string(), options[rng.uniform_usize(options.len())].to_string())
+            }
+        }
+    }
+}
+
+/// YDF's tuning space for GBT (Appendix C.2): min examples, categorical
+/// algorithm, split axis, hessian splits, shrinkage, attribute ratio,
+/// growing strategy.
+pub fn gbt_search_space() -> Vec<ParamRange> {
+    vec![
+        ParamRange::IntRange { key: "min_examples", lo: 2, hi: 10 },
+        ParamRange::Choice { key: "categorical_algorithm", options: &["CART", "RANDOM"] },
+        ParamRange::Choice { key: "split_axis", options: &["AXIS_ALIGNED", "SPARSE_OBLIQUE"] },
+        ParamRange::Choice { key: "use_hessian_gain", options: &["true", "false"] },
+        ParamRange::FloatRange { key: "shrinkage", lo: 0.02, hi: 0.15 },
+        ParamRange::FloatRange { key: "num_candidate_attributes_ratio", lo: 0.2, hi: 1.0 },
+        ParamRange::Choice { key: "growing_strategy", options: &["LOCAL", "BEST_FIRST_GLOBAL"] },
+        ParamRange::IntRange { key: "max_depth", lo: 3, hi: 8 },
+        ParamRange::IntRange { key: "max_num_leaves", lo: 16, hi: 256 },
+    ]
+}
+
+/// YDF's tuning space for Random Forests (Appendix C.2).
+pub fn rf_search_space() -> Vec<ParamRange> {
+    vec![
+        ParamRange::IntRange { key: "min_examples", lo: 2, hi: 10 },
+        ParamRange::Choice { key: "categorical_algorithm", options: &["CART", "RANDOM"] },
+        ParamRange::Choice { key: "split_axis", options: &["AXIS_ALIGNED", "SPARSE_OBLIQUE"] },
+        ParamRange::IntRange { key: "max_depth", lo: 12, hi: 30 },
+    ]
+}
+
+/// Applies string overrides of the C.2 vocabulary onto a GBT config.
+pub fn apply_gbt_overrides(
+    cfg: &mut super::gbt::GbtConfig,
+    overrides: &HashMap<String, String>,
+) -> Result<(), String> {
+    use crate::learner::decision_tree::{AttrSampling, GrowingStrategy};
+    use crate::splitter::{CategoricalSplit, ObliqueNormalization, SplitAxis};
+    // Apply the growing strategy first: `max_num_leaves` only applies on
+    // top of BEST_FIRST_GLOBAL (HashMap iteration order is arbitrary).
+    if overrides.get("growing_strategy").map(|s| s.as_str()) == Some("BEST_FIRST_GLOBAL")
+        && !matches!(cfg.growing, GrowingStrategy::BestFirstGlobal { .. })
+    {
+        cfg.growing = GrowingStrategy::BestFirstGlobal { max_num_leaves: 64 };
+        cfg.max_depth = usize::MAX;
+    }
+    for (k, v) in overrides {
+        match k.as_str() {
+            "min_examples" => {
+                cfg.min_examples =
+                    v.parse().map_err(|_| format!("bad min_examples '{v}'"))?
+            }
+            "shrinkage" => {
+                cfg.shrinkage = v.parse().map_err(|_| format!("bad shrinkage '{v}'"))?
+            }
+            "max_depth" => {
+                cfg.max_depth = v.parse().map_err(|_| format!("bad max_depth '{v}'"))?
+            }
+            "use_hessian_gain" => {
+                cfg.use_hessian_gain =
+                    v.parse().map_err(|_| format!("bad use_hessian_gain '{v}'"))?
+            }
+            "num_candidate_attributes_ratio" => {
+                cfg.attr_sampling = AttrSampling::Ratio(
+                    v.parse().map_err(|_| format!("bad ratio '{v}'"))?,
+                )
+            }
+            "categorical_algorithm" => {
+                cfg.splitter.categorical = match v.as_str() {
+                    "CART" => CategoricalSplit::Cart,
+                    "RANDOM" => CategoricalSplit::Random { trials: 32 },
+                    "ONE_HOT" => CategoricalSplit::OneHot,
+                    other => return Err(format!("unknown categorical algorithm '{other}'")),
+                }
+            }
+            "split_axis" => {
+                cfg.splitter.axis = match v.as_str() {
+                    "AXIS_ALIGNED" => SplitAxis::AxisAligned,
+                    "SPARSE_OBLIQUE" => SplitAxis::SparseOblique {
+                        num_projections_exponent: 1.0,
+                        normalization: ObliqueNormalization::MinMax,
+                    },
+                    other => return Err(format!("unknown split axis '{other}'")),
+                }
+            }
+            "growing_strategy" => match v.as_str() {
+                "LOCAL" => cfg.growing = GrowingStrategy::Local,
+                "BEST_FIRST_GLOBAL" => {
+                    if !matches!(cfg.growing, GrowingStrategy::BestFirstGlobal { .. }) {
+                        cfg.growing = GrowingStrategy::BestFirstGlobal { max_num_leaves: 64 };
+                        cfg.max_depth = usize::MAX;
+                    }
+                }
+                other => return Err(format!("unknown growing strategy '{other}'")),
+            },
+            "max_num_leaves" => {
+                if let GrowingStrategy::BestFirstGlobal { .. } = cfg.growing {
+                    cfg.growing = GrowingStrategy::BestFirstGlobal {
+                        max_num_leaves: v
+                            .parse()
+                            .map_err(|_| format!("bad max_num_leaves '{v}'"))?,
+                    };
+                }
+            }
+            _ => {} // tolerated: axes for other learners
+        }
+    }
+    Ok(())
+}
+
+/// Applies overrides onto an RF config.
+pub fn apply_rf_overrides(
+    cfg: &mut super::random_forest::RandomForestConfig,
+    overrides: &HashMap<String, String>,
+) -> Result<(), String> {
+    use crate::splitter::{CategoricalSplit, ObliqueNormalization, SplitAxis};
+    for (k, v) in overrides {
+        match k.as_str() {
+            "min_examples" => {
+                cfg.min_examples =
+                    v.parse().map_err(|_| format!("bad min_examples '{v}'"))?
+            }
+            "max_depth" => {
+                cfg.max_depth = v.parse().map_err(|_| format!("bad max_depth '{v}'"))?
+            }
+            "categorical_algorithm" => {
+                cfg.splitter.categorical = match v.as_str() {
+                    "CART" => CategoricalSplit::Cart,
+                    "RANDOM" => CategoricalSplit::Random { trials: 32 },
+                    "ONE_HOT" => CategoricalSplit::OneHot,
+                    other => return Err(format!("unknown categorical algorithm '{other}'")),
+                }
+            }
+            "split_axis" => {
+                cfg.splitter.axis = match v.as_str() {
+                    "AXIS_ALIGNED" => SplitAxis::AxisAligned,
+                    "SPARSE_OBLIQUE" => SplitAxis::SparseOblique {
+                        num_projections_exponent: 1.0,
+                        normalization: ObliqueNormalization::MinMax,
+                    },
+                    other => return Err(format!("unknown split axis '{other}'")),
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn template_lookup() {
+        assert!(find_template("GRADIENT_BOOSTED_TREES", "benchmark_rank1@v1").is_some());
+        assert!(find_template("GRADIENT_BOOSTED_TREES", "benchmark_rank1").is_some());
+        assert!(find_template("GRADIENT_BOOSTED_TREES", "benchmark_rank1@v9").is_none());
+        assert!(find_template("LINEAR", "benchmark_rank1@v1").is_none());
+    }
+
+    #[test]
+    fn search_space_samples_in_range() {
+        let mut rng = Rng::seed_from_u64(1);
+        for range in gbt_search_space() {
+            for _ in 0..20 {
+                let (k, v) = range.sample(&mut rng);
+                assert!(!k.is_empty() && !v.is_empty());
+                if let ParamRange::IntRange { lo, hi, .. } = range {
+                    let x: i64 = v.parse().unwrap();
+                    assert!(x >= lo && x <= hi);
+                }
+                if let ParamRange::FloatRange { lo, hi, .. } = range {
+                    let x: f64 = v.parse().unwrap();
+                    assert!(x >= lo && x <= hi);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gbt_overrides_applied() {
+        let mut cfg = crate::learner::gbt::GbtConfig::new("y");
+        let mut o = HashMap::new();
+        o.insert("shrinkage".to_string(), "0.05".to_string());
+        o.insert("categorical_algorithm".to_string(), "RANDOM".to_string());
+        o.insert("growing_strategy".to_string(), "BEST_FIRST_GLOBAL".to_string());
+        o.insert("max_num_leaves".to_string(), "32".to_string());
+        apply_gbt_overrides(&mut cfg, &o).unwrap();
+        assert!((cfg.shrinkage - 0.05).abs() < 1e-12);
+        assert!(matches!(
+            cfg.splitter.categorical,
+            crate::splitter::CategoricalSplit::Random { .. }
+        ));
+        assert!(matches!(
+            cfg.growing,
+            crate::learner::decision_tree::GrowingStrategy::BestFirstGlobal {
+                max_num_leaves: 32
+            }
+        ));
+    }
+
+    #[test]
+    fn rf_overrides_applied() {
+        let mut cfg = crate::learner::random_forest::RandomForestConfig::new("y");
+        let mut o = HashMap::new();
+        o.insert("max_depth".to_string(), "25".to_string());
+        o.insert("split_axis".to_string(), "SPARSE_OBLIQUE".to_string());
+        apply_rf_overrides(&mut cfg, &o).unwrap();
+        assert_eq!(cfg.max_depth, 25);
+        assert!(matches!(
+            cfg.splitter.axis,
+            crate::splitter::SplitAxis::SparseOblique { .. }
+        ));
+    }
+}

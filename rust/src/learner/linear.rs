@@ -1,0 +1,230 @@
+//! Linear learner: multinomial logistic regression / linear regression via
+//! mini-batch SGD over the dense encoding. This is the "TF Linear" baseline
+//! of the paper's benchmark (§5) — at serving time its compute graph is
+//! exactly the L2 JAX linear model lowered to the PJRT engine.
+
+use super::{classification_labels, regression_targets, Learner};
+use crate::dataset::Dataset;
+use crate::model::linear::{DenseEncoding, LinearModel};
+use crate::model::{Model, SelfEvaluation, Task};
+use crate::utils::rng::Rng;
+use crate::utils::stats::softmax_in_place;
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+pub struct LinearConfig {
+    pub label: String,
+    pub task: Task,
+    pub epochs: usize,
+    pub learning_rate: f64,
+    pub l2: f64,
+    pub batch_size: usize,
+    pub seed: u64,
+}
+
+impl LinearConfig {
+    pub fn new(label: &str) -> LinearConfig {
+        LinearConfig {
+            label: label.to_string(),
+            task: Task::Classification,
+            epochs: 30,
+            learning_rate: 0.1,
+            l2: 1e-4,
+            batch_size: 32,
+            seed: 555,
+        }
+    }
+}
+
+pub struct LinearLearner {
+    pub config: LinearConfig,
+}
+
+impl LinearLearner {
+    pub fn new(config: LinearConfig) -> Self {
+        LinearLearner { config }
+    }
+
+    pub fn default_config(label: &str) -> Self {
+        LinearLearner::new(LinearConfig::new(label))
+    }
+}
+
+pub fn factory(
+    label: &str,
+    params: &HashMap<String, String>,
+) -> Result<Box<dyn Learner>, String> {
+    let mut cfg = LinearConfig::new(label);
+    cfg.epochs = super::parse_param(params, "epochs", cfg.epochs)?;
+    cfg.learning_rate = super::parse_param(params, "learning_rate", cfg.learning_rate)?;
+    cfg.l2 = super::parse_param(params, "l2", cfg.l2)?;
+    cfg.seed = super::parse_param(params, "seed", cfg.seed)?;
+    if let Some(t) = params.get("task") {
+        cfg.task = match t.as_str() {
+            "CLASSIFICATION" => Task::Classification,
+            "REGRESSION" => Task::Regression,
+            other => return Err(format!("unknown task '{other}'")),
+        };
+    }
+    Ok(Box::new(LinearLearner::new(cfg)))
+}
+
+impl Learner for LinearLearner {
+    fn name(&self) -> &'static str {
+        "LINEAR"
+    }
+
+    fn label(&self) -> &str {
+        &self.config.label
+    }
+
+    fn train_with_valid(
+        &self,
+        ds: &Dataset,
+        _valid: Option<&Dataset>,
+    ) -> Result<Box<dyn Model>, String> {
+        let cfg = &self.config;
+        let n = ds.num_rows();
+        if n == 0 {
+            return Err("cannot train on an empty dataset.".to_string());
+        }
+        let (label_col, class_labels, reg_targets, num_out) = match cfg.task {
+            Task::Classification => {
+                let (c, l) = classification_labels(ds, &cfg.label)?;
+                let k = ds.spec.columns[c].vocab_size();
+                (c, l, vec![], k)
+            }
+            Task::Regression => {
+                let (c, t) = regression_targets(ds, &cfg.label)?;
+                (c, vec![], t, 1)
+            }
+        };
+        let encoding = DenseEncoding::build(&ds.spec, label_col);
+        let dim = encoding.dim;
+
+        // Materialize the dense matrix once (row-major).
+        let mut dense = vec![0.0f32; n * dim];
+        for r in 0..n {
+            encoding.encode_ds(&ds.spec, ds, r, &mut dense[r * dim..(r + 1) * dim]);
+        }
+
+        let mut weights = vec![vec![0.0f32; dim]; num_out];
+        let mut bias = vec![0.0f32; num_out];
+        let mut rng = Rng::seed_from_u64(cfg.seed);
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut logits = vec![0.0f64; num_out];
+        let mut final_loss = 0.0f64;
+
+        for epoch in 0..cfg.epochs {
+            rng.shuffle(&mut order);
+            let lr = cfg.learning_rate / (1.0 + 0.1 * epoch as f64);
+            let mut epoch_loss = 0.0f64;
+            for chunk in order.chunks(cfg.batch_size) {
+                // Accumulate batch gradient.
+                let mut gw = vec![vec![0.0f64; dim]; num_out];
+                let mut gb = vec![0.0f64; num_out];
+                for &r in chunk {
+                    let x = &dense[r * dim..(r + 1) * dim];
+                    for k in 0..num_out {
+                        logits[k] = bias[k] as f64
+                            + weights[k]
+                                .iter()
+                                .zip(x)
+                                .map(|(&w, &xi)| w as f64 * xi as f64)
+                                .sum::<f64>();
+                    }
+                    match cfg.task {
+                        Task::Classification => {
+                            softmax_in_place(&mut logits);
+                            epoch_loss -=
+                                logits[class_labels[r] as usize].max(1e-12).ln();
+                            for k in 0..num_out {
+                                let err = logits[k]
+                                    - (class_labels[r] as usize == k) as u8 as f64;
+                                gb[k] += err;
+                                for (g, &xi) in gw[k].iter_mut().zip(x) {
+                                    *g += err * xi as f64;
+                                }
+                            }
+                        }
+                        Task::Regression => {
+                            let err = logits[0] - reg_targets[r] as f64;
+                            epoch_loss += err * err;
+                            gb[0] += err;
+                            for (g, &xi) in gw[0].iter_mut().zip(x) {
+                                *g += err * xi as f64;
+                            }
+                        }
+                    }
+                }
+                let scale = lr / chunk.len() as f64;
+                for k in 0..num_out {
+                    bias[k] -= (scale * gb[k]) as f32;
+                    for (w, g) in weights[k].iter_mut().zip(&gw[k]) {
+                        *w = (*w as f64 * (1.0 - lr * cfg.l2) - scale * g) as f32;
+                    }
+                }
+            }
+            final_loss = epoch_loss / n as f64;
+        }
+
+        Ok(Box::new(LinearModel {
+            spec: ds.spec.clone(),
+            label_col,
+            task: cfg.task,
+            encoding,
+            weights,
+            bias,
+            self_eval: Some(SelfEvaluation {
+                metric: "final training loss".to_string(),
+                value: final_loss,
+                num_examples: n as u64,
+            }),
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic;
+    use crate::evaluation_free_accuracy;
+
+    #[test]
+    fn learns_linearly_separable_signal() {
+        let ds = synthetic::adult_like(600, 51);
+        let model = LinearLearner::default_config("income").train(&ds).unwrap();
+        let acc = evaluation_free_accuracy(model.as_ref(), &ds);
+        // The adult teacher has a large linear component.
+        assert!(acc > 0.72, "accuracy {acc}");
+    }
+
+    #[test]
+    fn multiclass_probabilities_normalized() {
+        let spec = synthetic::spec_by_name("Iris").unwrap();
+        let ds = synthetic::generate(spec, 3, &synthetic::GenOptions::default());
+        let model = LinearLearner::default_config("label").train(&ds).unwrap();
+        let p = model.predict_ds_row(&ds, 0);
+        assert_eq!(p.len(), 3);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn regression_mode() {
+        let ds = synthetic::adult_like(300, 53);
+        let mut cfg = LinearConfig::new("hours_per_week");
+        cfg.task = Task::Regression;
+        cfg.epochs = 10;
+        let model = LinearLearner::new(cfg).train(&ds).unwrap();
+        let p = model.predict_ds_row(&ds, 0);
+        assert!(p[0].is_finite());
+    }
+
+    #[test]
+    fn deterministic() {
+        let ds = synthetic::adult_like(150, 57);
+        let m1 = LinearLearner::default_config("income").train(&ds).unwrap();
+        let m2 = LinearLearner::default_config("income").train(&ds).unwrap();
+        assert_eq!(m1.to_json().to_string(), m2.to_json().to_string());
+    }
+}

@@ -1,0 +1,249 @@
+//! LEARNER abstraction (§3.1): a learner is a function that takes a dataset
+//! and returns a [`Model`]. Learners are registered by name (§3.5's
+//! REGISTER mechanism) so the CLI, meta-learners and the benchmark harness
+//! can instantiate them generically.
+
+pub mod cart;
+pub mod decision_tree;
+pub mod gbt;
+pub mod hparams;
+pub mod linear;
+pub mod random_forest;
+
+pub use gbt::GradientBoostedTreesLearner;
+pub use linear::LinearLearner;
+pub use random_forest::RandomForestLearner;
+
+use crate::dataset::{ColumnData, Dataset, FeatureSemantic, MISSING_CAT};
+use crate::model::Model;
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+/// A learning algorithm (§3.1). `train_with_valid` supports the optional
+/// validation dataset of §3.3; the default implementation delegates to
+/// `train`, and learners that support early stopping override it.
+pub trait Learner: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// The label column this learner is configured for.
+    fn label(&self) -> &str;
+    fn train(&self, ds: &Dataset) -> Result<Box<dyn Model>, String> {
+        self.train_with_valid(ds, None)
+    }
+    fn train_with_valid(
+        &self,
+        ds: &Dataset,
+        valid: Option<&Dataset>,
+    ) -> Result<Box<dyn Model>, String>;
+}
+
+/// Extracts classification labels (dense class indices) from a dataset.
+/// Fails with a §2.1-style actionable message when the label is unusable.
+pub fn classification_labels(ds: &Dataset, label: &str) -> Result<(usize, Vec<u32>), String> {
+    let label_col = ds.column_index(label).ok_or_else(|| {
+        format!(
+            "the label column \"{label}\" does not exist in the dataset. Available columns: \
+             [{}].",
+            ds.spec.columns.iter().map(|c| c.name.as_str()).collect::<Vec<_>>().join(", ")
+        )
+    })?;
+    let spec = &ds.spec.columns[label_col];
+    crate::dataset::dataspec::check_classification_label(spec, ds.num_rows(), false)?;
+    if spec.semantic != FeatureSemantic::Categorical {
+        return Err(format!(
+            "classification training requires a CATEGORICAL label; column \"{label}\" is {}.",
+            spec.semantic.name()
+        ));
+    }
+    let values = match &ds.columns[label_col] {
+        ColumnData::Categorical(v) => v,
+        _ => unreachable!(),
+    };
+    if values.iter().any(|&v| v == MISSING_CAT) {
+        return Err(format!(
+            "the label column \"{label}\" contains missing values. Remove or impute the \
+             affected examples before training."
+        ));
+    }
+    Ok((label_col, values.clone()))
+}
+
+/// Extracts regression targets.
+pub fn regression_targets(ds: &Dataset, label: &str) -> Result<(usize, Vec<f32>), String> {
+    let label_col = ds
+        .column_index(label)
+        .ok_or_else(|| format!("the label column \"{label}\" does not exist in the dataset."))?;
+    let values = ds.columns[label_col].as_numerical().ok_or_else(|| {
+        format!(
+            "regression training requires a NUMERICAL label; column \"{label}\" is {}. \
+             Possible solution: configure the training as a classification with \
+             task=CLASSIFICATION.",
+            ds.spec.columns[label_col].semantic.name()
+        )
+    })?;
+    if values.iter().any(|v| v.is_nan()) {
+        return Err(format!("the label column \"{label}\" contains missing values."));
+    }
+    Ok((label_col, values.to_vec()))
+}
+
+/// Feature columns = all columns except the label.
+pub fn feature_columns(ds: &Dataset, label_col: usize) -> Vec<usize> {
+    (0..ds.num_columns()).filter(|&c| c != label_col).collect()
+}
+
+/// Binary-classification sanity guard used by GBT's binomial loss.
+pub fn require_binary(ds: &Dataset, label_col: usize) -> Result<(), String> {
+    let spec = &ds.spec.columns[label_col];
+    let n = spec.vocab_size();
+    if n != 2 {
+        return Err(format!(
+            "Binary classification training (task=BINARY_CLASSIFICATION) requires a training \
+             dataset with a label having 2 classes, however, {n} classe(s) were found in the \
+             label column \"{}\". Those {n} classe(s) are [{}]. Possible solutions: (1) Use a \
+             training dataset with two classes, or (2) use a learning algorithm that supports \
+             single-class or multi-class classification e.g. learner='RANDOM_FOREST'.",
+            spec.name,
+            spec.dictionary.join(", ")
+        ));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Learner registry (§3.5): REGISTER_AbstractLearner equivalent.
+// ---------------------------------------------------------------------------
+
+/// Factory signature: (label name, hyper-parameter overrides) -> learner.
+pub type LearnerFactory =
+    fn(label: &str, params: &HashMap<String, String>) -> Result<Box<dyn Learner>, String>;
+
+fn registry() -> &'static Mutex<HashMap<String, LearnerFactory>> {
+    static REGISTRY: OnceLock<Mutex<HashMap<String, LearnerFactory>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        let mut m: HashMap<String, LearnerFactory> = HashMap::new();
+        // Built-in learners (§3.1).
+        m.insert("GRADIENT_BOOSTED_TREES".into(), gbt::factory);
+        m.insert("RANDOM_FOREST".into(), random_forest::factory);
+        m.insert("CART".into(), cart::factory);
+        m.insert("LINEAR".into(), linear::factory);
+        Mutex::new(m)
+    })
+}
+
+/// Registers a custom learner under `name` (custom modules can live outside
+/// the library code base, §3.5).
+pub fn register_learner(name: &str, factory: LearnerFactory) {
+    registry().lock().unwrap().insert(name.to_string(), factory);
+}
+
+/// Instantiates a registered learner.
+pub fn create_learner(
+    name: &str,
+    label: &str,
+    params: &HashMap<String, String>,
+) -> Result<Box<dyn Learner>, String> {
+    let reg = registry().lock().unwrap();
+    let factory = reg.get(name).ok_or_else(|| {
+        let mut known: Vec<&str> = reg.keys().map(|s| s.as_str()).collect();
+        known.sort_unstable();
+        format!(
+            "unknown learner '{name}'. Registered learners: [{}].",
+            known.join(", ")
+        )
+    })?;
+    factory(label, params)
+}
+
+/// Parses a hyper-parameter with a typed error message.
+pub fn parse_param<T: std::str::FromStr>(
+    params: &HashMap<String, String>,
+    key: &str,
+    default: T,
+) -> Result<T, String> {
+    match params.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse::<T>().map_err(|_| {
+            format!("hyper-parameter '{key}' has invalid value '{v}' (expected {}).",
+                std::any::type_name::<T>())
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic;
+
+    #[test]
+    fn label_extraction() {
+        let ds = synthetic::adult_like(100, 1);
+        let (col, labels) = classification_labels(&ds, "income").unwrap();
+        assert_eq!(col, 8);
+        assert_eq!(labels.len(), 100);
+        assert!(labels.iter().all(|&l| l < 2));
+    }
+
+    #[test]
+    fn unknown_label_lists_columns() {
+        let ds = synthetic::adult_like(10, 1);
+        let err = classification_labels(&ds, "nope").unwrap_err();
+        assert!(err.contains("Available columns"), "{err}");
+        assert!(err.contains("income"), "{err}");
+    }
+
+    #[test]
+    fn regression_on_categorical_label_fails_actionably() {
+        let ds = synthetic::adult_like(10, 1);
+        let err = regression_targets(&ds, "income").unwrap_err();
+        assert!(err.contains("task=CLASSIFICATION"), "{err}");
+    }
+
+    #[test]
+    fn binary_guard_message_matches_table1() {
+        let ds = synthetic::generate(
+            synthetic::spec_by_name("Iris").unwrap(),
+            1,
+            &synthetic::GenOptions::default(),
+        );
+        let (label_col, _) = classification_labels(&ds, "label").unwrap();
+        let err = require_binary(&ds, label_col).unwrap_err();
+        assert!(err.contains("requires a training dataset with a label having 2 classes"));
+        assert!(err.contains("learner='RANDOM_FOREST'"));
+    }
+
+    #[test]
+    fn registry_has_builtins_and_rejects_unknown() {
+        let params = HashMap::new();
+        assert!(create_learner("GRADIENT_BOOSTED_TREES", "income", &params).is_ok());
+        assert!(create_learner("RANDOM_FOREST", "income", &params).is_ok());
+        assert!(create_learner("CART", "income", &params).is_ok());
+        assert!(create_learner("LINEAR", "income", &params).is_ok());
+        let err = match create_learner("DOES_NOT_EXIST", "y", &params) {
+            Err(e) => e,
+            Ok(_) => panic!(),
+        };
+        assert!(err.contains("Registered learners"), "{err}");
+    }
+
+    #[test]
+    fn custom_registration() {
+        fn f(
+            label: &str,
+            _p: &HashMap<String, String>,
+        ) -> Result<Box<dyn Learner>, String> {
+            Ok(Box::new(gbt::GradientBoostedTreesLearner::default_config(label)))
+        }
+        register_learner("MY_LEARNER", f);
+        assert!(create_learner("MY_LEARNER", "y", &HashMap::new()).is_ok());
+    }
+
+    #[test]
+    fn param_parsing() {
+        let mut p = HashMap::new();
+        p.insert("num_trees".to_string(), "25".to_string());
+        assert_eq!(parse_param(&p, "num_trees", 300usize).unwrap(), 25);
+        assert_eq!(parse_param(&p, "other", 7usize).unwrap(), 7);
+        p.insert("bad".to_string(), "xyz".to_string());
+        assert!(parse_param(&p, "bad", 1.0f64).is_err());
+    }
+}

@@ -1,0 +1,353 @@
+//! Random Forest learner (Breiman 2001) with out-of-bag self-evaluation
+//! (§3.6). Default hyper-parameters follow Appendix C.1.
+
+use super::decision_tree::{grow_tree, AttrSampling, GrowingStrategy, TreeConfig};
+use super::{classification_labels, feature_columns, regression_targets, Learner};
+use crate::dataset::Dataset;
+use crate::model::forest::RandomForestModel;
+use crate::model::{Model, SelfEvaluation, Task};
+use crate::splitter::score::Labels;
+use crate::splitter::{
+    CategoricalSplit, ObliqueNormalization, SplitAxis, SplitterConfig,
+};
+use crate::utils::pool::parallel_map;
+use crate::utils::rng::Rng;
+use std::collections::HashMap;
+
+/// Random Forest configuration. Defaults = Appendix C.1 "Random Forest
+/// default hyper-parameters" (categorical CART, local growth, depth 16,
+/// min 5 examples, √p attribute sampling, axis-aligned splits).
+#[derive(Clone, Debug)]
+pub struct RandomForestConfig {
+    pub label: String,
+    pub task: Task,
+    pub num_trees: usize,
+    pub max_depth: usize,
+    pub min_examples: usize,
+    pub attr_sampling: AttrSampling,
+    pub splitter: SplitterConfig,
+    pub growing: GrowingStrategy,
+    /// Sample the training set with replacement per tree.
+    pub bootstrap: bool,
+    /// Majority vote (YDF default) vs probability averaging.
+    pub winner_take_all: bool,
+    /// Compute the OOB self-evaluation (§3.6).
+    pub compute_oob: bool,
+    pub num_threads: usize,
+    pub seed: u64,
+}
+
+impl RandomForestConfig {
+    pub fn new(label: &str) -> RandomForestConfig {
+        RandomForestConfig {
+            label: label.to_string(),
+            task: Task::Classification,
+            num_trees: 300,
+            max_depth: 16,
+            min_examples: 5,
+            attr_sampling: AttrSampling::Sqrt, // Breiman's rule of thumb
+            splitter: SplitterConfig::default(),
+            growing: GrowingStrategy::Local,
+            bootstrap: true,
+            winner_take_all: true,
+            compute_oob: true,
+            num_threads: 1,
+            seed: 1234,
+        }
+    }
+
+    /// benchmark_rank1@v1 template (Appendix C.1): random categorical
+    /// splits + sparse oblique projections with min-max normalization.
+    pub fn benchmark_rank1(label: &str) -> RandomForestConfig {
+        let mut cfg = RandomForestConfig::new(label);
+        cfg.splitter.categorical = CategoricalSplit::Random { trials: 32 };
+        cfg.splitter.axis = SplitAxis::SparseOblique {
+            num_projections_exponent: 1.0,
+            normalization: ObliqueNormalization::MinMax,
+        };
+        cfg
+    }
+}
+
+pub struct RandomForestLearner {
+    pub config: RandomForestConfig,
+}
+
+impl RandomForestLearner {
+    pub fn new(config: RandomForestConfig) -> Self {
+        RandomForestLearner { config }
+    }
+
+    pub fn default_config(label: &str) -> Self {
+        RandomForestLearner::new(RandomForestConfig::new(label))
+    }
+}
+
+/// Registry factory (§3.5).
+pub fn factory(
+    label: &str,
+    params: &HashMap<String, String>,
+) -> Result<Box<dyn Learner>, String> {
+    let mut cfg = RandomForestConfig::new(label);
+    cfg.num_trees = super::parse_param(params, "num_trees", cfg.num_trees)?;
+    cfg.max_depth = super::parse_param(params, "max_depth", cfg.max_depth)?;
+    cfg.min_examples = super::parse_param(params, "min_examples", cfg.min_examples)?;
+    cfg.seed = super::parse_param(params, "seed", cfg.seed)?;
+    cfg.winner_take_all =
+        super::parse_param(params, "winner_take_all", cfg.winner_take_all)?;
+    if let Some(t) = params.get("task") {
+        cfg.task = match t.as_str() {
+            "CLASSIFICATION" => Task::Classification,
+            "REGRESSION" => Task::Regression,
+            other => return Err(format!("unknown task '{other}'")),
+        };
+    }
+    if params.get("template").map(|s| s.as_str()) == Some("benchmark_rank1@v1") {
+        let label_owned = cfg.label.clone();
+        let mut c = RandomForestConfig::benchmark_rank1(&label_owned);
+        c.num_trees = cfg.num_trees;
+        c.task = cfg.task;
+        c.seed = cfg.seed;
+        cfg = c;
+    }
+    Ok(Box::new(RandomForestLearner::new(cfg)))
+}
+
+impl Learner for RandomForestLearner {
+    fn name(&self) -> &'static str {
+        "RANDOM_FOREST"
+    }
+
+    fn label(&self) -> &str {
+        &self.config.label
+    }
+
+    fn train_with_valid(
+        &self,
+        ds: &Dataset,
+        _valid: Option<&Dataset>, // RF self-evaluates out-of-bag instead
+    ) -> Result<Box<dyn Model>, String> {
+        let cfg = &self.config;
+        let n = ds.num_rows();
+        if n == 0 {
+            return Err("cannot train on an empty dataset.".to_string());
+        }
+
+        enum Targets {
+            Class { labels: Vec<u32>, num_classes: usize, label_col: usize },
+            Reg { targets: Vec<f32>, label_col: usize },
+        }
+        let targets = match cfg.task {
+            Task::Classification => {
+                let (label_col, labels) = classification_labels(ds, &cfg.label)?;
+                let num_classes = ds.spec.columns[label_col].vocab_size();
+                Targets::Class { labels, num_classes, label_col }
+            }
+            Task::Regression => {
+                let (label_col, targets) = regression_targets(ds, &cfg.label)?;
+                Targets::Reg { targets, label_col }
+            }
+        };
+        let label_col = match &targets {
+            Targets::Class { label_col, .. } | Targets::Reg { label_col, .. } => *label_col,
+        };
+        let features = feature_columns(ds, label_col);
+
+        let tree_cfg = TreeConfig {
+            max_depth: cfg.max_depth,
+            min_examples: cfg.min_examples,
+            splitter: cfg.splitter.clone(),
+            growing: cfg.growing,
+            attr_sampling: cfg.attr_sampling,
+        };
+
+        // Deterministic per-tree seeds (§3.11): derived from the config
+        // seed; tree order is immaterial, so parallel training yields the
+        // same model as sequential.
+        let mut seed_rng = Rng::seed_from_u64(cfg.seed);
+        let tree_seeds: Vec<u64> = (0..cfg.num_trees).map(|_| seed_rng.next_u64()).collect();
+
+        let trees_and_bags = parallel_map(cfg.num_trees, cfg.num_threads, |t| {
+            let mut rng = Rng::seed_from_u64(tree_seeds[t]);
+            let rows: Vec<u32> = if cfg.bootstrap {
+                (0..n).map(|_| rng.uniform_usize(n) as u32).collect()
+            } else {
+                (0..n as u32).collect()
+            };
+            let mut in_bag = vec![false; n];
+            for &r in &rows {
+                in_bag[r as usize] = true;
+            }
+            let labels_view = match &targets {
+                Targets::Class { labels, num_classes, .. } => {
+                    Labels::Classification { labels, num_classes: *num_classes }
+                }
+                Targets::Reg { targets, .. } => Labels::Regression { targets },
+            };
+            let mut cache = crate::splitter::TrainingCache::new(ds);
+            let tree =
+                grow_tree(ds, rows, &labels_view, &features, &tree_cfg, &mut cache, &mut rng);
+            (tree, in_bag)
+        });
+
+        let mut trees = Vec::with_capacity(cfg.num_trees);
+        let mut bags = Vec::with_capacity(cfg.num_trees);
+        for (tree, bag) in trees_and_bags {
+            trees.push(tree);
+            bags.push(bag);
+        }
+
+        // Out-of-bag evaluation (§3.6): each example is scored only by the
+        // trees whose bootstrap sample excluded it.
+        let oob_evaluation = if cfg.compute_oob && cfg.bootstrap {
+            match &targets {
+                Targets::Class { labels, num_classes, .. } => {
+                    let mut correct = 0u64;
+                    let mut counted = 0u64;
+                    for r in 0..n {
+                        let mut votes = vec![0.0f64; *num_classes];
+                        let mut any = false;
+                        for (t, tree) in trees.iter().enumerate() {
+                            if !bags[t][r] {
+                                let leaf = tree.eval_ds(ds, r);
+                                if cfg.winner_take_all {
+                                    let mut best = 0usize;
+                                    for (i, &v) in leaf.value.iter().enumerate().skip(1) {
+                                        if v > leaf.value[best] {
+                                            best = i;
+                                        }
+                                    }
+                                    votes[best] += 1.0;
+                                } else {
+                                    for (v, &lv) in votes.iter_mut().zip(&leaf.value) {
+                                        *v += lv as f64;
+                                    }
+                                }
+                                any = true;
+                            }
+                        }
+                        if any {
+                            let mut best = 0usize;
+                            for (i, &v) in votes.iter().enumerate().skip(1) {
+                                if v > votes[best] {
+                                    best = i;
+                                }
+                            }
+                            counted += 1;
+                            if best as u32 == labels[r] {
+                                correct += 1;
+                            }
+                        }
+                    }
+                    Some(SelfEvaluation {
+                        metric: "out-of-bag accuracy".to_string(),
+                        value: if counted > 0 { correct as f64 / counted as f64 } else { 0.0 },
+                        num_examples: counted,
+                    })
+                }
+                Targets::Reg { targets, .. } => {
+                    let mut sse = 0.0f64;
+                    let mut counted = 0u64;
+                    for r in 0..n {
+                        let mut sum = 0.0f64;
+                        let mut cnt = 0usize;
+                        for (t, tree) in trees.iter().enumerate() {
+                            if !bags[t][r] {
+                                sum += tree.eval_ds(ds, r).value[0] as f64;
+                                cnt += 1;
+                            }
+                        }
+                        if cnt > 0 {
+                            let err = sum / cnt as f64 - targets[r] as f64;
+                            sse += err * err;
+                            counted += 1;
+                        }
+                    }
+                    Some(SelfEvaluation {
+                        metric: "out-of-bag rmse".to_string(),
+                        value: if counted > 0 { (sse / counted as f64).sqrt() } else { 0.0 },
+                        num_examples: counted,
+                    })
+                }
+            }
+        } else {
+            None
+        };
+
+        Ok(Box::new(RandomForestModel {
+            spec: ds.spec.clone(),
+            label_col,
+            task: cfg.task,
+            trees,
+            winner_take_all: cfg.winner_take_all,
+            oob_evaluation,
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic;
+    use crate::evaluation_free_accuracy;
+
+    #[test]
+    fn learns_adult_like() {
+        let ds = synthetic::adult_like(600, 7);
+        let mut cfg = RandomForestConfig::new("income");
+        cfg.num_trees = 20;
+        let model = RandomForestLearner::new(cfg).train(&ds).unwrap();
+        let acc = evaluation_free_accuracy(model.as_ref(), &ds);
+        assert!(acc > 0.75, "train accuracy {acc}");
+        let oob = model.self_evaluation().unwrap();
+        assert!(oob.metric.contains("out-of-bag"));
+        assert!(oob.value > 0.6, "oob {}", oob.value);
+        assert!(oob.value <= 1.0);
+    }
+
+    #[test]
+    fn deterministic_model() {
+        let ds = synthetic::adult_like(200, 3);
+        let mut cfg = RandomForestConfig::new("income");
+        cfg.num_trees = 5;
+        cfg.compute_oob = false;
+        let m1 = RandomForestLearner::new(cfg.clone()).train(&ds).unwrap();
+        let m2 = RandomForestLearner::new(cfg).train(&ds).unwrap();
+        assert_eq!(m1.to_json().to_string(), m2.to_json().to_string());
+    }
+
+    #[test]
+    fn parallel_equals_sequential() {
+        let ds = synthetic::adult_like(150, 5);
+        let mut cfg = RandomForestConfig::new("income");
+        cfg.num_trees = 4;
+        cfg.compute_oob = false;
+        let seq = RandomForestLearner::new(cfg.clone()).train(&ds).unwrap();
+        cfg.num_threads = 3;
+        let par = RandomForestLearner::new(cfg).train(&ds).unwrap();
+        assert_eq!(seq.to_json().to_string(), par.to_json().to_string());
+    }
+
+    #[test]
+    fn regression_forest() {
+        // Regress hours_per_week from the other features — weak signal,
+        // just verify plumbing and OOB RMSE sanity.
+        let ds = synthetic::adult_like(300, 11);
+        let mut cfg = RandomForestConfig::new("hours_per_week");
+        cfg.task = Task::Regression;
+        cfg.num_trees = 10;
+        let model = RandomForestLearner::new(cfg).train(&ds).unwrap();
+        assert_eq!(model.task(), Task::Regression);
+        let p = model.predict_ds_row(&ds, 0);
+        assert_eq!(p.len(), 1);
+        assert!(p[0] > 0.0 && p[0] < 100.0);
+        assert!(model.self_evaluation().unwrap().metric.contains("rmse"));
+    }
+
+    #[test]
+    fn benchmark_template_uses_oblique() {
+        let cfg = RandomForestConfig::benchmark_rank1("income");
+        assert!(matches!(cfg.splitter.axis, SplitAxis::SparseOblique { .. }));
+        assert!(matches!(cfg.splitter.categorical, CategoricalSplit::Random { .. }));
+    }
+}

@@ -1,0 +1,53 @@
+//! # Yggdrasil Decision Forests (reproduction)
+//!
+//! A library for the training, serving and interpretation of decision
+//! forest models, reproducing *Yggdrasil Decision Forests: A Fast and
+//! Extensible Decision Forests Library* (KDD 2023) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! The crate is organized around the paper's LEARNER–MODEL abstraction
+//! (§3.1): a [`model::Model`] is a function from observation to prediction;
+//! a [`learner::Learner`] is a function from dataset to model. Everything
+//! else — splitters, inference engines, meta-learners, self-evaluation,
+//! distributed training — is an interchangeable module (§3.5).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use ydf::dataset::synthetic;
+//! use ydf::learner::{Learner, gbt::GradientBoostedTreesLearner};
+//!
+//! let data = synthetic::adult_like(1000, 42);
+//! let learner = GradientBoostedTreesLearner::default_config("income");
+//! let model = learner.train(&data).unwrap();
+//! let eval = ydf::evaluation::evaluate_model(model.as_ref(), &data, "income").unwrap();
+//! println!("{}", eval.report());
+//! ```
+
+pub mod benchmark;
+pub mod dataset;
+pub mod distributed;
+pub mod evaluation;
+pub mod inference;
+pub mod learner;
+pub mod metalearner;
+pub mod model;
+pub mod runtime;
+pub mod splitter;
+pub mod utils;
+
+/// Plain accuracy of a classification model against a dataset's label
+/// column (convenience used widely in tests; the full evaluation lives in
+/// [`evaluation`]).
+pub fn evaluation_free_accuracy(model: &dyn model::Model, ds: &dataset::Dataset) -> f64 {
+    let label_col = model.label_col();
+    let labels = ds.columns[label_col].as_categorical().expect("categorical label");
+    let mut correct = 0usize;
+    for r in 0..ds.num_rows() {
+        let p = model.predict_ds_row(ds, r);
+        if model::argmax(&p) as u32 == labels[r] {
+            correct += 1;
+        }
+    }
+    correct as f64 / ds.num_rows().max(1) as f64
+}

@@ -1,0 +1,230 @@
+//! `ydf` CLI — the command-line API of §4.1: `infer_dataspec`,
+//! `show_dataspec`, `train`, `show_model`, `evaluate`, `predict`,
+//! `benchmark_inference`, plus `synth` (dataset generation) and
+//! `benchmark_suite` (the §5 experiment harness).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use ydf::dataset::csv::{read_csv_file, write_csv_string};
+use ydf::dataset::dataspec::{DataSpec, InferenceOptions};
+use ydf::dataset::synthetic;
+use ydf::learner::create_learner;
+use ydf::model::io::{load_model, save_model};
+use ydf::utils::json::Json;
+
+fn usage() -> ! {
+    eprintln!(
+        "Yggdrasil Decision Forests (reproduction) — command line interface
+
+USAGE: ydf <command> [--flag=value ...]
+
+COMMANDS
+  infer_dataspec   --dataset=csv:FILE --output=SPEC.json
+  show_dataspec    --dataspec=SPEC.json [--dataset=csv:FILE]
+  train            --dataset=csv:FILE --label=NAME --learner=NAME
+                   [--param:KEY=VALUE ...] --output=MODEL.json
+  show_model       --model=MODEL.json
+  evaluate         --dataset=csv:FILE --model=MODEL.json
+  predict          --dataset=csv:FILE --model=MODEL.json --output=csv:FILE
+  benchmark_inference --dataset=csv:FILE --model=MODEL.json [--runs=20]
+  synth            --name=TABLE5_NAME --output=csv:FILE [--max-examples=N]
+  benchmark_suite  [--full] [--folds=N] [--trees=N] [--trials=N]
+                   [--datasets=a,b,c] [--max-examples=N]
+
+Registered learners: GRADIENT_BOOSTED_TREES, RANDOM_FOREST, CART, LINEAR.
+Hyper-parameter template: --param:template=benchmark_rank1@v1"
+    );
+    std::process::exit(2);
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    for a in args {
+        if let Some(rest) = a.strip_prefix("--") {
+            match rest.split_once('=') {
+                Some((k, v)) => out.insert(k.to_string(), v.to_string()),
+                None => out.insert(rest.to_string(), "true".to_string()),
+            };
+        } else {
+            eprintln!("unexpected argument '{a}' (flags are --key=value)");
+            std::process::exit(2);
+        }
+    }
+    out
+}
+
+fn req<'a>(flags: &'a HashMap<String, String>, key: &str) -> &'a str {
+    match flags.get(key) {
+        Some(v) => v,
+        None => {
+            eprintln!("missing required flag --{key}=...");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Parses "csv:path" dataset designators (the paper's CLI syntax).
+fn dataset_path(designator: &str) -> PathBuf {
+    match designator.split_once(':') {
+        Some(("csv", path)) => PathBuf::from(path),
+        Some((fmt, _)) => {
+            eprintln!("unsupported dataset format '{fmt}' (supported: csv)");
+            std::process::exit(2);
+        }
+        None => PathBuf::from(designator),
+    }
+}
+
+fn load_dataset(designator: &str) -> ydf::dataset::Dataset {
+    let path = dataset_path(designator);
+    read_csv_file(&path, &InferenceOptions::default()).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(1);
+    })
+}
+
+fn ok_or_die<T>(r: Result<T, String>) -> T {
+    r.unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(1);
+    })
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r),
+        None => usage(),
+    };
+    let flags = parse_flags(rest);
+    match cmd {
+        "infer_dataspec" => {
+            let ds = load_dataset(req(&flags, "dataset"));
+            let out = req(&flags, "output");
+            std::fs::write(out, ds.spec.to_json().to_string_pretty()).unwrap_or_else(|e| {
+                eprintln!("cannot write {out}: {e}");
+                std::process::exit(1);
+            });
+            println!("wrote dataspec ({} columns) to {out}", ds.spec.columns.len());
+        }
+        "show_dataspec" => {
+            let text = std::fs::read_to_string(req(&flags, "dataspec")).unwrap();
+            let spec = ok_or_die(DataSpec::from_json(&ok_or_die(
+                Json::parse(&text).map_err(|e| e.to_string()),
+            )));
+            let rows = flags
+                .get("dataset")
+                .map(|d| load_dataset(d).num_rows())
+                .unwrap_or(0);
+            println!("{}", spec.describe(rows));
+        }
+        "train" => {
+            let ds = load_dataset(req(&flags, "dataset"));
+            let label = req(&flags, "label");
+            let learner_name = req(&flags, "learner");
+            let params: HashMap<String, String> = flags
+                .iter()
+                .filter_map(|(k, v)| k.strip_prefix("param:").map(|p| (p.to_string(), v.clone())))
+                .collect();
+            let learner = ok_or_die(create_learner(learner_name, label, &params));
+            let t0 = std::time::Instant::now();
+            let model = ok_or_die(learner.train(&ds));
+            let out = req(&flags, "output");
+            ok_or_die(save_model(model.as_ref(), Path::new(out)));
+            println!(
+                "trained {} on {} examples in {:.2}s -> {out}",
+                learner_name,
+                ds.num_rows(),
+                t0.elapsed().as_secs_f64()
+            );
+        }
+        "show_model" => {
+            let model = ok_or_die(load_model(Path::new(req(&flags, "model"))));
+            println!("{}", model.describe());
+        }
+        "evaluate" => {
+            let ds = load_dataset(req(&flags, "dataset"));
+            let model = ok_or_die(load_model(Path::new(req(&flags, "model"))));
+            let label = model.spec().columns[model.label_col()].name.clone();
+            let ev = ok_or_die(ydf::evaluation::evaluate_model(model.as_ref(), &ds, &label));
+            println!("{}", ev.report());
+        }
+        "predict" => {
+            let ds = load_dataset(req(&flags, "dataset"));
+            let model = ok_or_die(load_model(Path::new(req(&flags, "model"))));
+            let probs = model.predict_dataset(&ds);
+            let out_path = dataset_path(req(&flags, "output"));
+            let mut file = std::fs::File::create(&out_path).unwrap();
+            let classes = model.class_names();
+            let names =
+                if classes.is_empty() { vec!["prediction".to_string()] } else { classes };
+            ydf::dataset::csv::write_predictions_csv(&mut file, &names, &probs).unwrap();
+            println!("wrote {} predictions to {}", probs.len(), out_path.display());
+        }
+        "benchmark_inference" => {
+            let ds = load_dataset(req(&flags, "dataset"));
+            let model = ok_or_die(load_model(Path::new(req(&flags, "model"))));
+            let runs: usize = flags.get("runs").map(|v| v.parse().unwrap()).unwrap_or(20);
+            println!(
+                "{}",
+                ydf::inference::benchmark_inference_report(model.as_ref(), &ds, runs)
+            );
+        }
+        "synth" => {
+            let name = req(&flags, "name");
+            let spec = synthetic::spec_by_name(name).unwrap_or_else(|| {
+                eprintln!("unknown dataset '{name}'. See Table 5 (DESIGN.md) for names.");
+                std::process::exit(2);
+            });
+            let mut opts = synthetic::GenOptions::default();
+            if let Some(m) = flags.get("max-examples") {
+                opts.max_examples = m.parse().unwrap();
+            }
+            let ds = synthetic::generate(spec, 20230806, &opts);
+            let out_path = dataset_path(req(&flags, "output"));
+            std::fs::write(&out_path, write_csv_string(&ds)).unwrap();
+            println!("wrote {} rows to {}", ds.num_rows(), out_path.display());
+        }
+        "benchmark_suite" => {
+            let mut config = if flags.contains_key("full") {
+                ydf::benchmark::SuiteConfig::full()
+            } else {
+                ydf::benchmark::SuiteConfig::default()
+            };
+            if let Some(f) = flags.get("folds") {
+                config.folds = f.parse().unwrap();
+            }
+            if let Some(t) = flags.get("trees") {
+                config.scale.num_trees = t.parse().unwrap();
+            }
+            if let Some(t) = flags.get("trials") {
+                config.scale.tuner_trials = t.parse().unwrap();
+            }
+            if let Some(m) = flags.get("max-examples") {
+                config.max_examples = m.parse().unwrap();
+            }
+            if let Some(d) = flags.get("datasets") {
+                config.datasets = d
+                    .split(',')
+                    .map(|n| {
+                        synthetic::spec_by_name(n.trim())
+                            .unwrap_or_else(|| {
+                                eprintln!("unknown dataset '{n}'");
+                                std::process::exit(2);
+                            })
+                            .name
+                    })
+                    .collect();
+            }
+            let result = ydf::benchmark::run_suite(&config, |line| eprintln!("{line}"));
+            println!("{}", result.fig6_report());
+            println!("{}", result.table2_report());
+            println!("{}", result.table3_report());
+            println!("{}", result.table4_report());
+            println!("{}", ydf::benchmark::table5_report());
+            println!("{}", result.time_table_report(false));
+            println!("{}", result.time_table_report(true));
+        }
+        _ => usage(),
+    }
+}

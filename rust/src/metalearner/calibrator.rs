@@ -1,0 +1,192 @@
+//! Calibrator meta-learner (§3.2): Platt scaling of a binary classifier's
+//! scores on a held-out calibration split.
+
+use crate::dataset::{DataSpec, Dataset, Observation};
+use crate::learner::{classification_labels, Learner};
+use crate::model::{Model, Task};
+use crate::utils::json::Json;
+use crate::utils::stats::sigmoid;
+
+/// A model whose positive-class probability is re-mapped through a fitted
+/// logistic transform `sigmoid(a·logit(p) + b)`.
+pub struct CalibratedModel {
+    pub base: Box<dyn Model>,
+    pub a: f64,
+    pub b: f64,
+}
+
+impl CalibratedModel {
+    fn calibrate(&self, mut probs: Vec<f64>) -> Vec<f64> {
+        if probs.len() == 2 {
+            let p = probs[1].clamp(1e-9, 1.0 - 1e-9);
+            let logit = (p / (1.0 - p)).ln();
+            let q = sigmoid(self.a * logit + self.b);
+            probs[1] = q;
+            probs[0] = 1.0 - q;
+        }
+        probs
+    }
+}
+
+impl Model for CalibratedModel {
+    fn model_type(&self) -> &'static str {
+        "CALIBRATED"
+    }
+    fn task(&self) -> Task {
+        self.base.task()
+    }
+    fn spec(&self) -> &DataSpec {
+        self.base.spec()
+    }
+    fn label_col(&self) -> usize {
+        self.base.label_col()
+    }
+    fn input_features(&self) -> Vec<usize> {
+        self.base.input_features()
+    }
+
+    fn predict_row(&self, obs: &Observation) -> Vec<f64> {
+        self.calibrate(self.base.predict_row(obs))
+    }
+
+    fn predict_ds_row(&self, ds: &Dataset, row: usize) -> Vec<f64> {
+        self.calibrate(self.base.predict_ds_row(ds, row))
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "Type: \"CALIBRATED\" (a={:.4}, b={:.4})\n--- base ---\n{}",
+            self.a,
+            self.b,
+            self.base.describe()
+        )
+    }
+
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("format_version", Json::Num(crate::model::io::MODEL_FORMAT_VERSION as f64))
+            .set("model_type", Json::Str("CALIBRATED".into()))
+            .set("a", Json::Num(self.a))
+            .set("b", Json::Num(self.b))
+            .set("base", self.base.to_json());
+        j
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// Platt-scaling calibrator for binary classifiers.
+pub struct CalibratorLearner {
+    pub base: Box<dyn Learner>,
+    /// Fraction of the training data held out for calibration.
+    pub calibration_ratio: f64,
+    pub seed: u64,
+}
+
+impl CalibratorLearner {
+    pub fn new(base: Box<dyn Learner>) -> CalibratorLearner {
+        CalibratorLearner { base, calibration_ratio: 0.2, seed: 0xCA11 }
+    }
+}
+
+impl Learner for CalibratorLearner {
+    fn name(&self) -> &'static str {
+        "CALIBRATOR"
+    }
+
+    fn label(&self) -> &str {
+        self.base.label()
+    }
+
+    fn train_with_valid(
+        &self,
+        ds: &Dataset,
+        valid: Option<&Dataset>,
+    ) -> Result<Box<dyn Model>, String> {
+        // Hold out a calibration split (or reuse a provided validation set).
+        let (train_ds, calib_ds) = match valid {
+            Some(v) => (ds.clone(), v.clone()),
+            None => {
+                let (tr, ca) = ds.train_valid_split(self.calibration_ratio, self.seed);
+                (ds.subset(&tr), ds.subset(&ca))
+            }
+        };
+        let base_model = self.base.train(&train_ds)?;
+        if base_model.task() != Task::Classification || base_model.num_classes() != 2 {
+            return Err(
+                "the calibrator meta-learner requires a binary classification base learner."
+                    .to_string(),
+            );
+        }
+        let (_, labels) = classification_labels(&calib_ds, self.base.label())?;
+        // Fit sigmoid(a·logit + b) by gradient descent on log-loss.
+        let logits: Vec<f64> = (0..calib_ds.num_rows())
+            .map(|r| {
+                let p = base_model.predict_ds_row(&calib_ds, r)[1].clamp(1e-9, 1.0 - 1e-9);
+                (p / (1.0 - p)).ln()
+            })
+            .collect();
+        let (mut a, mut b) = (1.0f64, 0.0f64);
+        let n = logits.len().max(1) as f64;
+        for _ in 0..200 {
+            let mut ga = 0.0;
+            let mut gb = 0.0;
+            for (&z, &y) in logits.iter().zip(&labels) {
+                let p = sigmoid(a * z + b);
+                let err = p - y as f64;
+                ga += err * z;
+                gb += err;
+            }
+            a -= 0.1 * ga / n;
+            b -= 0.1 * gb / n;
+        }
+        Ok(Box::new(CalibratedModel { base: base_model, a, b }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic;
+    use crate::evaluation::evaluate_model;
+    use crate::learner::gbt::GbtConfig;
+    use crate::learner::GradientBoostedTreesLearner;
+
+    #[test]
+    fn calibration_preserves_or_improves_logloss() {
+        let train = synthetic::adult_like(500, 95);
+        let test = synthetic::adult_like(300, 96);
+        let mut cfg = GbtConfig::new("income");
+        cfg.num_trees = 15;
+        cfg.max_depth = 3;
+        let base = GradientBoostedTreesLearner::new(cfg.clone());
+        let base_model = base.train(&train).unwrap();
+        let base_eval = evaluate_model(base_model.as_ref(), &test, "income").unwrap();
+
+        let calib = CalibratorLearner::new(Box::new(GradientBoostedTreesLearner::new(cfg)));
+        let calib_model = calib.train(&train).unwrap();
+        let calib_eval = evaluate_model(calib_model.as_ref(), &test, "income").unwrap();
+        // Platt scaling should not blow up the log-loss.
+        assert!(
+            calib_eval.log_loss < base_eval.log_loss + 0.05,
+            "calibrated {} vs base {}",
+            calib_eval.log_loss,
+            base_eval.log_loss
+        );
+        // Probabilities stay normalized.
+        let p = calib_model.predict_ds_row(&test, 0);
+        assert!((p[0] + p[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multiclass_base_rejected() {
+        let spec = synthetic::spec_by_name("Iris").unwrap();
+        let ds = synthetic::generate(spec, 3, &synthetic::GenOptions::default());
+        let mut cfg = GbtConfig::new("label");
+        cfg.num_trees = 4;
+        let calib = CalibratorLearner::new(Box::new(GradientBoostedTreesLearner::new(cfg)));
+        assert!(calib.train(&ds).is_err());
+    }
+}

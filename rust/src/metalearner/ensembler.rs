@@ -1,0 +1,166 @@
+//! Ensembler meta-learner (§3.2): trains several base learners and
+//! averages their predictions.
+
+use crate::dataset::{DataSpec, Dataset, Observation};
+use crate::learner::Learner;
+use crate::model::{Model, Task};
+use crate::utils::json::Json;
+
+/// Prediction-averaging ensemble of heterogeneous models.
+pub struct EnsembleModel {
+    pub members: Vec<Box<dyn Model>>,
+}
+
+impl Model for EnsembleModel {
+    fn model_type(&self) -> &'static str {
+        "ENSEMBLE"
+    }
+    fn task(&self) -> Task {
+        self.members[0].task()
+    }
+    fn spec(&self) -> &DataSpec {
+        self.members[0].spec()
+    }
+    fn label_col(&self) -> usize {
+        self.members[0].label_col()
+    }
+
+    fn input_features(&self) -> Vec<usize> {
+        let mut all: Vec<usize> =
+            self.members.iter().flat_map(|m| m.input_features()).collect();
+        all.sort_unstable();
+        all.dedup();
+        all
+    }
+
+    fn predict_row(&self, obs: &Observation) -> Vec<f64> {
+        average(self.members.iter().map(|m| m.predict_row(obs)))
+    }
+
+    fn predict_ds_row(&self, ds: &Dataset, row: usize) -> Vec<f64> {
+        average(self.members.iter().map(|m| m.predict_ds_row(ds, row)))
+    }
+
+    fn describe(&self) -> String {
+        let mut s = format!("Type: \"ENSEMBLE\" ({} members)\n", self.members.len());
+        for (i, m) in self.members.iter().enumerate() {
+            s.push_str(&format!("--- member {} ---\n{}\n", i, m.describe()));
+        }
+        s
+    }
+
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("format_version", Json::Num(crate::model::io::MODEL_FORMAT_VERSION as f64))
+            .set("model_type", Json::Str("ENSEMBLE".into()))
+            .set(
+                "members",
+                Json::Arr(self.members.iter().map(|m| m.to_json()).collect()),
+            );
+        j
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+fn average<I: Iterator<Item = Vec<f64>>>(preds: I) -> Vec<f64> {
+    let mut acc: Vec<f64> = Vec::new();
+    let mut count = 0usize;
+    for p in preds {
+        if acc.is_empty() {
+            acc = p;
+        } else {
+            for (a, b) in acc.iter_mut().zip(&p) {
+                *a += b;
+            }
+        }
+        count += 1;
+    }
+    for a in acc.iter_mut() {
+        *a /= count.max(1) as f64;
+    }
+    acc
+}
+
+/// Trains each member learner on the full dataset and ensembles them.
+pub struct EnsemblerLearner {
+    pub members: Vec<Box<dyn Learner>>,
+}
+
+impl EnsemblerLearner {
+    pub fn new(members: Vec<Box<dyn Learner>>) -> EnsemblerLearner {
+        EnsemblerLearner { members }
+    }
+}
+
+impl Learner for EnsemblerLearner {
+    fn name(&self) -> &'static str {
+        "ENSEMBLER"
+    }
+
+    fn label(&self) -> &str {
+        self.members[0].label()
+    }
+
+    fn train_with_valid(
+        &self,
+        ds: &Dataset,
+        valid: Option<&Dataset>,
+    ) -> Result<Box<dyn Model>, String> {
+        if self.members.is_empty() {
+            return Err("the ensembler requires at least one member learner.".to_string());
+        }
+        let mut models = Vec::with_capacity(self.members.len());
+        for m in &self.members {
+            models.push(m.train_with_valid(ds, valid)?);
+        }
+        // Sanity: all members must agree on the task and label.
+        let t0 = models[0].task();
+        if models.iter().any(|m| m.task() != t0) {
+            return Err("ensemble members disagree on the task.".to_string());
+        }
+        Ok(Box::new(EnsembleModel { members: models }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic;
+    use crate::evaluation_free_accuracy;
+    use crate::learner::gbt::GbtConfig;
+    use crate::learner::{GradientBoostedTreesLearner, LinearLearner};
+
+    #[test]
+    fn ensemble_of_gbt_and_linear() {
+        let ds = synthetic::adult_like(300, 91);
+        let mut gbt = GbtConfig::new("income");
+        gbt.num_trees = 10;
+        gbt.max_depth = 3;
+        let ens = EnsemblerLearner::new(vec![
+            Box::new(GradientBoostedTreesLearner::new(gbt)),
+            Box::new(LinearLearner::default_config("income")),
+        ]);
+        let model = ens.train(&ds).unwrap();
+        assert_eq!(model.model_type(), "ENSEMBLE");
+        let acc = evaluation_free_accuracy(model.as_ref(), &ds);
+        assert!(acc > 0.72, "ensemble accuracy {acc}");
+        let p = model.predict_ds_row(&ds, 0);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_ensemble_rejected() {
+        let ds = synthetic::adult_like(50, 93);
+        let ens = EnsemblerLearner::new(vec![]);
+        assert!(ens.train(&ds).is_err());
+    }
+
+    #[test]
+    fn average_helper() {
+        let out = average(vec![vec![0.2, 0.8], vec![0.6, 0.4]].into_iter());
+        assert_eq!(out, vec![0.4, 0.6000000000000001]);
+    }
+}

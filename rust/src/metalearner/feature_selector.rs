@@ -1,0 +1,168 @@
+//! Feature-selector meta-learner (§3.2, §3.6): backward elimination scored
+//! by the base model's self-evaluation (e.g. Random Forest out-of-bag),
+//! exactly the composition the paper highlights — "the feature-selector
+//! meta-learner can choose the optimal input features for a Random Forest
+//! model using out-of-bag self-evaluation".
+
+use crate::dataset::{ColumnData, Dataset, MISSING_BOOL, MISSING_CAT};
+use crate::learner::Learner;
+use crate::model::Model;
+
+/// Backward-elimination feature selector.
+///
+/// Features are removed by *masking* (every value set to missing) rather
+/// than dropping columns, so the final model keeps the original dataspec
+/// and serves unmodified observations.
+pub struct FeatureSelectorLearner {
+    pub base: Box<dyn Learner>,
+    /// Maximum number of elimination rounds.
+    pub max_removals: usize,
+}
+
+impl FeatureSelectorLearner {
+    pub fn new(base: Box<dyn Learner>) -> FeatureSelectorLearner {
+        FeatureSelectorLearner { base, max_removals: 8 }
+    }
+}
+
+fn mask_column(ds: &Dataset, col: usize) -> Dataset {
+    let mut out = ds.clone();
+    out.columns[col] = match &ds.columns[col] {
+        ColumnData::Numerical(v) => ColumnData::Numerical(vec![f32::NAN; v.len()]),
+        ColumnData::Categorical(v) => ColumnData::Categorical(vec![MISSING_CAT; v.len()]),
+        ColumnData::Boolean(v) => ColumnData::Boolean(vec![MISSING_BOOL; v.len()]),
+        ColumnData::CategoricalSet { offsets, .. } => {
+            let rows = offsets.len() - 1;
+            ColumnData::CategoricalSet {
+                offsets: (0..=rows as u32).collect(),
+                values: vec![MISSING_CAT; rows],
+            }
+        }
+    };
+    out
+}
+
+/// Self-evaluation score of a trained model — higher is better. Accuracy
+/// metrics are used as-is; loss metrics are negated.
+fn self_eval_score(model: &dyn Model) -> Option<f64> {
+    model.self_evaluation().map(|e| {
+        if e.metric.contains("loss") || e.metric.contains("rmse") {
+            -e.value
+        } else {
+            e.value
+        }
+    })
+}
+
+impl Learner for FeatureSelectorLearner {
+    fn name(&self) -> &'static str {
+        "FEATURE_SELECTOR"
+    }
+
+    fn label(&self) -> &str {
+        self.base.label()
+    }
+
+    fn train_with_valid(
+        &self,
+        ds: &Dataset,
+        _valid: Option<&Dataset>,
+    ) -> Result<Box<dyn Model>, String> {
+        let label_col = ds
+            .column_index(self.base.label())
+            .ok_or_else(|| format!("label column \"{}\" not found.", self.base.label()))?;
+        let mut current = ds.clone();
+        let mut best_model = self.base.train(&current)?;
+        let mut best_score = self_eval_score(best_model.as_ref()).ok_or_else(|| {
+            "the feature selector requires a base learner with self-evaluation (e.g. \
+             RANDOM_FOREST with out-of-bag, or GBT with a validation split)."
+                .to_string()
+        })?;
+        let mut active: Vec<usize> =
+            (0..ds.num_columns()).filter(|&c| c != label_col).collect();
+
+        for _round in 0..self.max_removals {
+            if active.len() <= 1 {
+                break;
+            }
+            // Try removing the least-important active feature (by the
+            // current model's NUM_NODES importance; absent features are the
+            // cheapest candidates).
+            let importances = best_model.variable_importances();
+            let nodes_vi = importances.iter().find(|v| v.kind == "NUM_NODES");
+            let candidate = {
+                let by_importance = |c: &usize| -> f64 {
+                    let name = &ds.spec.columns[*c].name;
+                    nodes_vi
+                        .and_then(|vi| {
+                            vi.values.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+                        })
+                        .unwrap_or(0.0)
+                };
+                *active
+                    .iter()
+                    .min_by(|a, b| by_importance(a).partial_cmp(&by_importance(b)).unwrap())
+                    .unwrap()
+            };
+            let masked = mask_column(&current, candidate);
+            let model = self.base.train(&masked)?;
+            let score = match self_eval_score(model.as_ref()) {
+                Some(s) => s,
+                None => break,
+            };
+            if score >= best_score {
+                best_score = score;
+                best_model = model;
+                current = masked;
+                active.retain(|&c| c != candidate);
+            } else {
+                break; // removal hurt: stop eliminating
+            }
+        }
+        Ok(best_model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic;
+    use crate::evaluation_free_accuracy;
+    use crate::learner::random_forest::{RandomForestConfig, RandomForestLearner};
+
+    #[test]
+    fn selector_with_rf_oob() {
+        let ds = synthetic::adult_like(300, 101);
+        let mut cfg = RandomForestConfig::new("income");
+        cfg.num_trees = 10;
+        let selector =
+            FeatureSelectorLearner::new(Box::new(RandomForestLearner::new(cfg)));
+        let model = selector.train(&ds).unwrap();
+        let acc = evaluation_free_accuracy(model.as_ref(), &ds);
+        assert!(acc > 0.7, "accuracy {acc}");
+    }
+
+    #[test]
+    fn masking_keeps_spec() {
+        let ds = synthetic::adult_like(50, 103);
+        let masked = mask_column(&ds, 0);
+        assert_eq!(masked.num_columns(), ds.num_columns());
+        assert!(masked.column(0).is_missing(0));
+        assert!(!masked.column(1).is_missing(0));
+    }
+
+    #[test]
+    fn base_without_self_eval_rejected() {
+        let ds = synthetic::adult_like(100, 105);
+        let mut cfg = RandomForestConfig::new("income");
+        cfg.compute_oob = false;
+        cfg.num_trees = 3;
+        let selector =
+            FeatureSelectorLearner::new(Box::new(RandomForestLearner::new(cfg)));
+        let err = match selector.train(&ds) {
+            Err(e) => e,
+            Ok(_) => panic!(),
+        };
+        assert!(err.contains("self-evaluation"), "{err}");
+    }
+}

@@ -1,0 +1,13 @@
+//! META-LEARNERS (§3.2): learners that wrap other learners. Because a
+//! meta-learner *is* a learner, they compose arbitrarily — Figure 3's
+//! calibrator(ensembler(tuner(RF), GBT)) is expressible directly.
+
+pub mod calibrator;
+pub mod ensembler;
+pub mod feature_selector;
+pub mod tuner;
+
+pub use calibrator::CalibratorLearner;
+pub use ensembler::EnsemblerLearner;
+pub use feature_selector::FeatureSelectorLearner;
+pub use tuner::{TunerLearner, TunerScoring};

@@ -1,0 +1,199 @@
+//! Human-readable model reports in the `show_model` format (Appendix B.2):
+//! input features, variable importances, tree statistics histograms,
+//! condition-type counts and per-depth attribute usage.
+
+use super::tree::DecisionTree;
+use super::{SelfEvaluation, Task, VariableImportance};
+use crate::dataset::DataSpec;
+use crate::utils::bench::bar_chart;
+use crate::utils::histogram::TextHistogram;
+use std::collections::BTreeMap;
+
+/// Builds the `show_model` report for tree-based models.
+pub fn describe_forest(
+    model_type: &str,
+    task: Task,
+    spec: &DataSpec,
+    label_col: usize,
+    trees: &[DecisionTree],
+    self_eval: Option<&SelfEvaluation>,
+    importances: &[VariableImportance],
+) -> String {
+    let mut out = format!(
+        "Type: \"{}\"\nTask: {}\nLabel: \"{}\"\n\n",
+        model_type,
+        task.name(),
+        spec.columns[label_col].name
+    );
+
+    // Input features.
+    let used = super::forest::used_attributes(trees);
+    out.push_str(&format!("Input Features ({}):\n", used.len()));
+    for a in &used {
+        out.push_str(&format!("    {}\n", spec.columns[*a].name));
+    }
+    out.push('\n');
+
+    // Variable importances (bar-chart style, as in B.2).
+    for vi in importances.iter().take(2) {
+        out.push_str(&format!("Variable Importance: {}:\n", vi.kind));
+        let items: Vec<(String, f64)> = vi
+            .values
+            .iter()
+            .take(8)
+            .enumerate()
+            .map(|(i, (name, v))| (format!("{:2}. \"{}\"", i + 1, name), *v))
+            .collect();
+        out.push_str(&bar_chart(&items, 15));
+        out.push('\n');
+    }
+
+    if let Some(e) = self_eval {
+        out.push_str(&format!(
+            "Self evaluation: {} = {:.6} ({} examples)\n\n",
+            e.metric, e.value, e.num_examples
+        ));
+    }
+
+    // Global tree statistics.
+    let total_nodes: usize = trees.iter().map(|t| t.num_nodes()).sum();
+    out.push_str(&format!(
+        "Number of trees: {}\nTotal number of nodes: {}\n\n",
+        trees.len(),
+        total_nodes
+    ));
+
+    // Number of nodes by tree.
+    let mut h = TextHistogram::new();
+    h.extend(trees.iter().map(|t| t.num_nodes() as f64));
+    out.push_str("Number of nodes by tree:\n");
+    out.push_str(&h.render(8, 10));
+    out.push('\n');
+
+    // Depth by leaves.
+    let mut h = TextHistogram::new();
+    for t in trees {
+        h.extend(t.leaf_depths().iter().map(|&d| d as f64));
+    }
+    out.push_str("Depth by leafs:\n");
+    out.push_str(&h.render(8, 10));
+    out.push('\n');
+
+    // Number of training obs by leaf.
+    let mut h = TextHistogram::new();
+    for t in trees {
+        h.extend(t.nodes.iter().filter(|n| n.is_leaf()).map(|n| n.num_examples));
+    }
+    out.push_str("Number of training obs by leaf:\n");
+    out.push_str(&h.render(8, 10));
+    out.push('\n');
+
+    // Attribute usage, total and shallow.
+    let mut in_nodes: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut in_nodes_d0: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut in_nodes_d1: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut cond_types: BTreeMap<&'static str, usize> = BTreeMap::new();
+    for t in trees {
+        t.visit_internal(|n, depth| {
+            if let Some(c) = &n.condition {
+                *cond_types.entry(c.type_name()).or_insert(0) += 1;
+                for a in c.attributes() {
+                    *in_nodes.entry(a).or_insert(0) += 1;
+                    if depth == 0 {
+                        *in_nodes_d0.entry(a).or_insert(0) += 1;
+                    }
+                    if depth <= 1 {
+                        *in_nodes_d1.entry(a).or_insert(0) += 1;
+                    }
+                }
+            }
+        });
+    }
+    let fmt_usage = |title: &str, m: &BTreeMap<usize, usize>, out: &mut String| {
+        out.push_str(title);
+        let mut items: Vec<(usize, usize)> = m.iter().map(|(&a, &c)| (a, c)).collect();
+        items.sort_by(|a, b| b.1.cmp(&a.1));
+        for (a, c) in items.into_iter().take(10) {
+            out.push_str(&format!(
+                "    {} : {} [{}]\n",
+                c,
+                spec.columns[a].name,
+                spec.columns[a].semantic.name()
+            ));
+        }
+        out.push('\n');
+    };
+    fmt_usage("Attribute in nodes:\n", &in_nodes, &mut out);
+    fmt_usage("Attribute in nodes with depth <= 0:\n", &in_nodes_d0, &mut out);
+    fmt_usage("Attribute in nodes with depth <= 1:\n", &in_nodes_d1, &mut out);
+
+    out.push_str("Condition type in nodes:\n");
+    let mut types: Vec<(&str, usize)> = cond_types.into_iter().collect();
+    types.sort_by(|a, b| b.1.cmp(&a.1));
+    for (name, c) in types {
+        out.push_str(&format!("    {c} : {name}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::dataspec::ColumnSpec;
+    use crate::model::forest::variable_importances;
+    use crate::model::tree::{Condition, Node};
+
+    fn make() -> (DataSpec, Vec<DecisionTree>) {
+        let spec = DataSpec {
+            columns: vec![
+                ColumnSpec::numerical("age"),
+                ColumnSpec::categorical("y", vec!["n".into(), "y".into()]),
+            ],
+        };
+        let tree = DecisionTree {
+            nodes: vec![
+                Node {
+                    condition: Some(Condition::Higher { attr: 0, threshold: 30.0 }),
+                    positive: 1,
+                    negative: 2,
+                    missing_to_positive: false,
+                    value: vec![],
+                    num_examples: 10.0,
+                    score: 0.4,
+                },
+                Node::leaf(vec![0.1, 0.9], 6.0),
+                Node::leaf(vec![0.8, 0.2], 4.0),
+            ],
+        };
+        (spec, vec![tree])
+    }
+
+    #[test]
+    fn report_contains_sections() {
+        let (spec, trees) = make();
+        let vis = variable_importances(&trees, &spec);
+        let rep = describe_forest(
+            "RANDOM_FOREST",
+            Task::Classification,
+            &spec,
+            1,
+            &trees,
+            None,
+            &vis,
+        );
+        for needle in [
+            "Type: \"RANDOM_FOREST\"",
+            "Task: CLASSIFICATION",
+            "Label: \"y\"",
+            "Input Features (1):",
+            "Variable Importance: NUM_AS_ROOT:",
+            "Number of trees: 1",
+            "Total number of nodes: 3",
+            "Depth by leafs:",
+            "Attribute in nodes:",
+            "HigherCondition",
+        ] {
+            assert!(rep.contains(needle), "missing: {needle}\n{rep}");
+        }
+    }
+}

@@ -1,0 +1,510 @@
+//! Decision forest models: Random Forest (Breiman 2001) and Gradient
+//! Boosted Trees (Friedman 2001).
+//!
+//! Both are *models only* — training logic lives in `learner::` per the
+//! LEARNER–MODEL separation (§3.1): different learners (e.g. the classic
+//! in-memory learner and the distributed learner) produce the same model
+//! structures, and all post-training tools apply to both.
+
+use super::tree::DecisionTree;
+use super::{Model, SelfEvaluation, Task, VariableImportance};
+use crate::dataset::{DataSpec, Dataset, Observation};
+use crate::utils::json::Json;
+use crate::utils::stats::{sigmoid, softmax_in_place};
+use std::collections::BTreeMap;
+
+/// Random Forest: bagged deep trees, prediction = average of per-tree class
+/// distributions (or vote when `winner_take_all`).
+#[derive(Clone)]
+pub struct RandomForestModel {
+    pub spec: DataSpec,
+    pub label_col: usize,
+    pub task: Task,
+    pub trees: Vec<DecisionTree>,
+    /// Majority vote instead of probability averaging.
+    pub winner_take_all: bool,
+    /// Out-of-bag self-evaluation (§3.6), when computed by the learner.
+    pub oob_evaluation: Option<SelfEvaluation>,
+}
+
+impl RandomForestModel {
+    fn aggregate<'a, I: Iterator<Item = &'a [f32]>>(&self, leaves: I) -> Vec<f64> {
+        let dim = match self.task {
+            Task::Classification => self.spec.columns[self.label_col].vocab_size(),
+            Task::Regression => 1,
+        };
+        let mut acc = vec![0.0f64; dim];
+        let mut count = 0usize;
+        for leaf in leaves {
+            if self.winner_take_all && self.task == Task::Classification {
+                // First-wins tie rule, shared with every inference engine.
+                let mut best = 0usize;
+                for (i, &v) in leaf.iter().enumerate().skip(1) {
+                    if v > leaf[best] {
+                        best = i;
+                    }
+                }
+                acc[best] += 1.0;
+            } else {
+                for (a, &v) in acc.iter_mut().zip(leaf) {
+                    *a += v as f64;
+                }
+            }
+            count += 1;
+        }
+        if count > 0 {
+            for a in acc.iter_mut() {
+                *a /= count as f64;
+            }
+        }
+        acc
+    }
+}
+
+impl Model for RandomForestModel {
+    fn model_type(&self) -> &'static str {
+        "RANDOM_FOREST"
+    }
+    fn task(&self) -> Task {
+        self.task
+    }
+    fn spec(&self) -> &DataSpec {
+        &self.spec
+    }
+    fn label_col(&self) -> usize {
+        self.label_col
+    }
+
+    fn input_features(&self) -> Vec<usize> {
+        used_attributes(&self.trees)
+    }
+
+    fn predict_row(&self, obs: &Observation) -> Vec<f64> {
+        self.aggregate(self.trees.iter().map(|t| t.eval_row(obs).value.as_slice()))
+    }
+
+    fn predict_ds_row(&self, ds: &Dataset, row: usize) -> Vec<f64> {
+        self.aggregate(self.trees.iter().map(|t| t.eval_ds(ds, row).value.as_slice()))
+    }
+
+    fn describe(&self) -> String {
+        super::describe::describe_forest(
+            self.model_type(),
+            self.task,
+            &self.spec,
+            self.label_col,
+            &self.trees,
+            self.self_evaluation(),
+            &self.variable_importances(),
+        )
+    }
+
+    fn variable_importances(&self) -> Vec<VariableImportance> {
+        variable_importances(&self.trees, &self.spec)
+    }
+
+    fn self_evaluation(&self) -> Option<&SelfEvaluation> {
+        self.oob_evaluation.as_ref()
+    }
+
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("format_version", Json::Num(super::io::MODEL_FORMAT_VERSION as f64))
+            .set("model_type", Json::Str(self.model_type().into()))
+            .set("task", Json::Str(self.task.name().into()))
+            .set("label_col", Json::Num(self.label_col as f64))
+            .set("winner_take_all", Json::Bool(self.winner_take_all))
+            .set("spec", self.spec.to_json())
+            .set("trees", Json::Arr(self.trees.iter().map(|t| t.to_json()).collect()));
+        if let Some(e) = &self.oob_evaluation {
+            let mut ej = Json::obj();
+            ej.set("metric", Json::Str(e.metric.clone()))
+                .set("value", Json::Num(e.value))
+                .set("num_examples", Json::Num(e.num_examples as f64));
+            j.set("self_evaluation", ej);
+        }
+        j
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// The GBT loss, fixed at training time and needed at inference to map the
+/// accumulated scores into predictions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GbtLoss {
+    /// Binary classification (Appendix B.2: BINOMIAL_LOG_LIKELIHOOD).
+    BinomialLogLikelihood,
+    /// Multi-class classification: one tree per class per iteration.
+    MultinomialLogLikelihood,
+    /// Regression.
+    SquaredError,
+}
+
+impl GbtLoss {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GbtLoss::BinomialLogLikelihood => "BINOMIAL_LOG_LIKELIHOOD",
+            GbtLoss::MultinomialLogLikelihood => "MULTINOMIAL_LOG_LIKELIHOOD",
+            GbtLoss::SquaredError => "SQUARED_ERROR",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<GbtLoss> {
+        match s {
+            "BINOMIAL_LOG_LIKELIHOOD" => Some(GbtLoss::BinomialLogLikelihood),
+            "MULTINOMIAL_LOG_LIKELIHOOD" => Some(GbtLoss::MultinomialLogLikelihood),
+            "SQUARED_ERROR" => Some(GbtLoss::SquaredError),
+            _ => None,
+        }
+    }
+}
+
+/// Gradient Boosted Trees: sum of shrunken tree outputs added to an initial
+/// prediction, mapped through the loss's link function.
+#[derive(Clone)]
+pub struct GradientBoostedTreesModel {
+    pub spec: DataSpec,
+    pub label_col: usize,
+    pub task: Task,
+    pub loss: GbtLoss,
+    /// Trees, grouped by iteration: `trees[i * trees_per_iter + k]` is the
+    /// tree for output dimension `k` at iteration `i`. Leaf values are
+    /// already multiplied by the shrinkage.
+    pub trees: Vec<DecisionTree>,
+    pub trees_per_iter: usize,
+    /// Initial prediction (prior log-odds / mean), one per output dim.
+    pub initial_predictions: Vec<f64>,
+    /// Validation loss recorded by early stopping (Appendix B.2 report).
+    pub validation_loss: Option<f64>,
+    pub self_eval: Option<SelfEvaluation>,
+}
+
+impl GradientBoostedTreesModel {
+    /// Raw accumulated scores (log-odds / regression value), before the
+    /// link function. The inference engines reproduce exactly this.
+    pub fn decision_scores_row(&self, obs: &Observation) -> Vec<f64> {
+        let mut scores = self.initial_predictions.clone();
+        for (i, t) in self.trees.iter().enumerate() {
+            scores[i % self.trees_per_iter] += t.eval_row(obs).value[0] as f64;
+        }
+        scores
+    }
+
+    pub fn decision_scores_ds(&self, ds: &Dataset, row: usize) -> Vec<f64> {
+        let mut scores = self.initial_predictions.clone();
+        for (i, t) in self.trees.iter().enumerate() {
+            scores[i % self.trees_per_iter] += t.eval_ds(ds, row).value[0] as f64;
+        }
+        scores
+    }
+
+    /// Maps raw scores to the prediction space.
+    pub fn activation(&self, scores: &[f64]) -> Vec<f64> {
+        match self.loss {
+            GbtLoss::BinomialLogLikelihood => {
+                let p = sigmoid(scores[0]);
+                vec![1.0 - p, p]
+            }
+            GbtLoss::MultinomialLogLikelihood => {
+                let mut probs = scores.to_vec();
+                softmax_in_place(&mut probs);
+                probs
+            }
+            GbtLoss::SquaredError => scores.to_vec(),
+        }
+    }
+
+    pub fn num_iterations(&self) -> usize {
+        self.trees.len() / self.trees_per_iter.max(1)
+    }
+}
+
+impl Model for GradientBoostedTreesModel {
+    fn model_type(&self) -> &'static str {
+        "GRADIENT_BOOSTED_TREES"
+    }
+    fn task(&self) -> Task {
+        self.task
+    }
+    fn spec(&self) -> &DataSpec {
+        &self.spec
+    }
+    fn label_col(&self) -> usize {
+        self.label_col
+    }
+
+    fn input_features(&self) -> Vec<usize> {
+        used_attributes(&self.trees)
+    }
+
+    fn predict_row(&self, obs: &Observation) -> Vec<f64> {
+        self.activation(&self.decision_scores_row(obs))
+    }
+
+    fn predict_ds_row(&self, ds: &Dataset, row: usize) -> Vec<f64> {
+        self.activation(&self.decision_scores_ds(ds, row))
+    }
+
+    fn describe(&self) -> String {
+        let mut s = super::describe::describe_forest(
+            self.model_type(),
+            self.task,
+            &self.spec,
+            self.label_col,
+            &self.trees,
+            self.self_eval.as_ref(),
+            &self.variable_importances(),
+        );
+        s.push_str(&format!(
+            "\nLoss: {}\nNumber of trees per iteration: {}\n",
+            self.loss.name(),
+            self.trees_per_iter
+        ));
+        if let Some(vl) = self.validation_loss {
+            s.push_str(&format!("Validation loss value: {vl:.6}\n"));
+        }
+        s
+    }
+
+    fn variable_importances(&self) -> Vec<VariableImportance> {
+        variable_importances(&self.trees, &self.spec)
+    }
+
+    fn self_evaluation(&self) -> Option<&SelfEvaluation> {
+        self.self_eval.as_ref()
+    }
+
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("format_version", Json::Num(super::io::MODEL_FORMAT_VERSION as f64))
+            .set("model_type", Json::Str(self.model_type().into()))
+            .set("task", Json::Str(self.task.name().into()))
+            .set("label_col", Json::Num(self.label_col as f64))
+            .set("loss", Json::Str(self.loss.name().into()))
+            .set("trees_per_iter", Json::Num(self.trees_per_iter as f64))
+            .set("initial_predictions", Json::from_f64s(&self.initial_predictions))
+            .set("spec", self.spec.to_json())
+            .set("trees", Json::Arr(self.trees.iter().map(|t| t.to_json()).collect()));
+        if let Some(vl) = self.validation_loss {
+            j.set("validation_loss", Json::Num(vl));
+        }
+        j
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// Attributes referenced by any tree condition, sorted and deduplicated.
+pub fn used_attributes(trees: &[DecisionTree]) -> Vec<usize> {
+    let mut attrs: Vec<usize> = trees
+        .iter()
+        .flat_map(|t| {
+            t.nodes
+                .iter()
+                .filter_map(|n| n.condition.as_ref())
+                .flat_map(|c| c.attributes())
+        })
+        .collect();
+    attrs.sort_unstable();
+    attrs.dedup();
+    attrs
+}
+
+/// Structural variable importances over a set of trees.
+pub fn variable_importances(trees: &[DecisionTree], spec: &DataSpec) -> Vec<VariableImportance> {
+    let mut as_root: BTreeMap<usize, f64> = BTreeMap::new();
+    let mut num_nodes: BTreeMap<usize, f64> = BTreeMap::new();
+    let mut sum_score: BTreeMap<usize, f64> = BTreeMap::new();
+    let mut min_depth_sum: BTreeMap<usize, f64> = BTreeMap::new();
+    let mut min_depth_count: BTreeMap<usize, f64> = BTreeMap::new();
+    for t in trees {
+        if let Some(root) = t.nodes.first() {
+            if let Some(c) = &root.condition {
+                for a in c.attributes() {
+                    *as_root.entry(a).or_insert(0.0) += 1.0;
+                }
+            }
+        }
+        let mut per_tree_min_depth: BTreeMap<usize, usize> = BTreeMap::new();
+        t.visit_internal(|n, depth| {
+            if let Some(c) = &n.condition {
+                for a in c.attributes() {
+                    *num_nodes.entry(a).or_insert(0.0) += 1.0;
+                    *sum_score.entry(a).or_insert(0.0) += n.score as f64;
+                    per_tree_min_depth
+                        .entry(a)
+                        .and_modify(|d| *d = (*d).min(depth))
+                        .or_insert(depth);
+                }
+            }
+        });
+        for (a, d) in per_tree_min_depth {
+            *min_depth_sum.entry(a).or_insert(0.0) += d as f64;
+            *min_depth_count.entry(a).or_insert(0.0) += 1.0;
+        }
+    }
+    let to_vi = |kind: &'static str, m: BTreeMap<usize, f64>| -> VariableImportance {
+        let mut values: Vec<(String, f64)> = m
+            .into_iter()
+            .map(|(a, v)| (spec.columns[a].name.clone(), v))
+            .collect();
+        values.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        VariableImportance { kind, values }
+    };
+    let inv_mean_min_depth: BTreeMap<usize, f64> = min_depth_sum
+        .iter()
+        .map(|(&a, &s)| (a, 1.0 / (1.0 + s / min_depth_count[&a])))
+        .collect();
+    vec![
+        to_vi("NUM_AS_ROOT", as_root),
+        to_vi("NUM_NODES", num_nodes),
+        to_vi("SUM_SCORE", sum_score),
+        to_vi("INV_MEAN_MIN_DEPTH", inv_mean_min_depth),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::dataspec::ColumnSpec;
+    use crate::dataset::AttrValue;
+    use crate::model::tree::{Condition, Node};
+
+    fn spec2() -> DataSpec {
+        DataSpec {
+            columns: vec![
+                ColumnSpec::numerical("x"),
+                ColumnSpec::categorical("y", vec!["no".into(), "yes".into()]),
+            ],
+        }
+    }
+
+    fn stump(threshold: f32, lo: Vec<f32>, hi: Vec<f32>) -> DecisionTree {
+        DecisionTree {
+            nodes: vec![
+                Node {
+                    condition: Some(Condition::Higher { attr: 0, threshold }),
+                    positive: 1,
+                    negative: 2,
+                    missing_to_positive: false,
+                    value: vec![],
+                    num_examples: 10.0,
+                    score: 1.0,
+                },
+                Node::leaf(hi, 5.0),
+                Node::leaf(lo, 5.0),
+            ],
+        }
+    }
+
+    #[test]
+    fn rf_averages_probabilities() {
+        let m = RandomForestModel {
+            spec: spec2(),
+            label_col: 1,
+            task: Task::Classification,
+            trees: vec![
+                stump(0.0, vec![0.8, 0.2], vec![0.2, 0.8]),
+                stump(0.0, vec![0.6, 0.4], vec![0.4, 0.6]),
+            ],
+            winner_take_all: false,
+            oob_evaluation: None,
+        };
+        let p = m.predict_row(&vec![AttrValue::Num(1.0), AttrValue::Missing]);
+        assert!((p[1] - 0.7).abs() < 1e-6);
+        let p = m.predict_row(&vec![AttrValue::Num(-1.0), AttrValue::Missing]);
+        assert!((p[1] - 0.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rf_winner_take_all_votes() {
+        let m = RandomForestModel {
+            spec: spec2(),
+            label_col: 1,
+            task: Task::Classification,
+            trees: vec![
+                stump(0.0, vec![0.4, 0.6], vec![0.2, 0.8]),
+                stump(0.0, vec![0.9, 0.1], vec![0.2, 0.8]),
+                stump(0.0, vec![0.9, 0.1], vec![0.2, 0.8]),
+            ],
+            winner_take_all: true,
+            oob_evaluation: None,
+        };
+        let p = m.predict_row(&vec![AttrValue::Num(-1.0), AttrValue::Missing]);
+        // Votes: yes, no, no -> [2/3, 1/3]
+        assert!((p[0] - 2.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gbt_binary_sigmoid() {
+        let m = GradientBoostedTreesModel {
+            spec: spec2(),
+            label_col: 1,
+            task: Task::Classification,
+            loss: GbtLoss::BinomialLogLikelihood,
+            trees: vec![stump(0.0, vec![-1.0], vec![1.0]), stump(0.0, vec![-0.5], vec![0.5])],
+            trees_per_iter: 1,
+            initial_predictions: vec![0.2],
+            validation_loss: Some(0.5),
+            self_eval: None,
+        };
+        let p = m.predict_row(&vec![AttrValue::Num(1.0), AttrValue::Missing]);
+        let expected = sigmoid(0.2 + 1.0 + 0.5);
+        assert!((p[1] - expected).abs() < 1e-6);
+        assert!((p[0] + p[1] - 1.0).abs() < 1e-12);
+        assert_eq!(m.num_iterations(), 2);
+    }
+
+    #[test]
+    fn gbt_multiclass_softmax() {
+        let spec = DataSpec {
+            columns: vec![
+                ColumnSpec::numerical("x"),
+                ColumnSpec::categorical("y", vec!["a".into(), "b".into(), "c".into()]),
+            ],
+        };
+        let m = GradientBoostedTreesModel {
+            spec,
+            label_col: 1,
+            task: Task::Classification,
+            loss: GbtLoss::MultinomialLogLikelihood,
+            trees: vec![
+                stump(0.0, vec![0.1], vec![2.0]), // class a
+                stump(0.0, vec![0.1], vec![0.0]), // class b
+                stump(0.0, vec![0.1], vec![-1.0]), // class c
+            ],
+            trees_per_iter: 3,
+            initial_predictions: vec![0.0, 0.0, 0.0],
+            validation_loss: None,
+            self_eval: None,
+        };
+        let p = m.predict_row(&vec![AttrValue::Num(1.0), AttrValue::Missing]);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(p[0] > p[1] && p[1] > p[2]);
+    }
+
+    #[test]
+    fn variable_importance_counts() {
+        let trees = vec![
+            stump(0.0, vec![0.5, 0.5], vec![0.5, 0.5]),
+            stump(1.0, vec![0.5, 0.5], vec![0.5, 0.5]),
+        ];
+        let vis = variable_importances(&trees, &spec2());
+        let as_root = vis.iter().find(|v| v.kind == "NUM_AS_ROOT").unwrap();
+        assert_eq!(as_root.values, vec![("x".to_string(), 2.0)]);
+        let nodes = vis.iter().find(|v| v.kind == "NUM_NODES").unwrap();
+        assert_eq!(nodes.values[0].1, 2.0);
+    }
+
+    #[test]
+    fn used_attributes_dedup() {
+        let trees =
+            vec![stump(0.0, vec![0.5], vec![0.5]), stump(2.0, vec![0.5], vec![0.5])];
+        assert_eq!(used_attributes(&trees), vec![0]);
+    }
+}

@@ -1,0 +1,210 @@
+//! Model (de)serialization: a versioned JSON format with full backwards
+//! compatibility (§3.11 — "models trained in 2018 are still usable today").
+//!
+//! The format version is embedded in every file; loaders accept all
+//! versions ≤ current. `rust/tests/backcompat.rs` pins a v1 fixture.
+
+use super::forest::{GbtLoss, GradientBoostedTreesModel, RandomForestModel};
+use super::linear::{DenseEncoding, LinearModel};
+use super::tree::DecisionTree;
+use super::{Model, SelfEvaluation, Task};
+use crate::dataset::DataSpec;
+use crate::utils::json::Json;
+use std::path::Path;
+
+/// Current model format version. Bump only with an accompanying loader
+/// branch — old files must load forever.
+pub const MODEL_FORMAT_VERSION: u32 = 1;
+
+/// Serializes any model to its JSON text form.
+pub fn model_to_string(model: &dyn Model) -> String {
+    model.to_json().to_string_pretty()
+}
+
+/// Saves a model to a file.
+pub fn save_model(model: &dyn Model, path: &Path) -> Result<(), String> {
+    std::fs::write(path, model_to_string(model))
+        .map_err(|e| format!("cannot write model file {}: {e}", path.display()))
+}
+
+/// Loads a model from a JSON text string, dispatching on `model_type`.
+pub fn model_from_string(text: &str) -> Result<Box<dyn Model>, String> {
+    let j = Json::parse(text).map_err(|e| format!("invalid model file: {e}"))?;
+    let version = j.req_usize("format_version")? as u32;
+    if version > MODEL_FORMAT_VERSION {
+        return Err(format!(
+            "model format version {version} is newer than this library supports \
+             ({MODEL_FORMAT_VERSION}). Upgrade the library to load this model."
+        ));
+    }
+    let task = match j.req_str("task")? {
+        "CLASSIFICATION" => Task::Classification,
+        "REGRESSION" => Task::Regression,
+        t => return Err(format!("unknown task '{t}'")),
+    };
+    let spec = DataSpec::from_json(j.req("spec")?)?;
+    let label_col = j.req_usize("label_col")?;
+    let parse_trees = |j: &Json| -> Result<Vec<DecisionTree>, String> {
+        j.req_arr("trees")?.iter().map(DecisionTree::from_json).collect()
+    };
+    match j.req_str("model_type")? {
+        "RANDOM_FOREST" => {
+            let oob_evaluation = j.get("self_evaluation").map(|ej| SelfEvaluation {
+                metric: ej.req_str("metric").unwrap_or("oob").to_string(),
+                value: ej.req_f64("value").unwrap_or(0.0),
+                num_examples: ej.req_f64("num_examples").unwrap_or(0.0) as u64,
+            });
+            Ok(Box::new(RandomForestModel {
+                spec,
+                label_col,
+                task,
+                trees: parse_trees(&j)?,
+                winner_take_all: j
+                    .get("winner_take_all")
+                    .and_then(|v| v.as_bool())
+                    .unwrap_or(false),
+                oob_evaluation,
+            }))
+        }
+        "GRADIENT_BOOSTED_TREES" => {
+            let loss_name = j.req_str("loss")?;
+            let loss = GbtLoss::from_name(loss_name)
+                .ok_or_else(|| format!("unknown GBT loss '{loss_name}'"))?;
+            Ok(Box::new(GradientBoostedTreesModel {
+                spec,
+                label_col,
+                task,
+                loss,
+                trees: parse_trees(&j)?,
+                trees_per_iter: j.req_usize("trees_per_iter")?,
+                initial_predictions: j
+                    .req_arr("initial_predictions")?
+                    .iter()
+                    .map(|v| v.as_f64().unwrap_or(0.0))
+                    .collect(),
+                validation_loss: j.get("validation_loss").and_then(|v| v.as_f64()),
+                self_eval: None,
+            }))
+        }
+        "LINEAR" => Ok(Box::new(LinearModel {
+            spec,
+            label_col,
+            task,
+            encoding: DenseEncoding::from_json(j.req("encoding")?)?,
+            weights: j
+                .req_arr("weights")?
+                .iter()
+                .map(|wj| {
+                    wj.as_arr()
+                        .map(|a| a.iter().map(|v| v.as_f64().unwrap_or(0.0) as f32).collect())
+                        .ok_or_else(|| "weights rows must be arrays".to_string())
+                })
+                .collect::<Result<Vec<Vec<f32>>, String>>()?,
+            bias: j
+                .req_arr("bias")?
+                .iter()
+                .map(|v| v.as_f64().unwrap_or(0.0) as f32)
+                .collect(),
+            self_eval: None,
+        })),
+        t => Err(format!(
+            "unknown model type '{t}'. This library supports RANDOM_FOREST, \
+             GRADIENT_BOOSTED_TREES and LINEAR."
+        )),
+    }
+}
+
+/// Loads a model from a file.
+pub fn load_model(path: &Path) -> Result<Box<dyn Model>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read model file {}: {e}", path.display()))?;
+    model_from_string(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::dataspec::ColumnSpec;
+    use crate::dataset::AttrValue;
+    use crate::model::tree::{Condition, Node};
+
+    fn sample_rf() -> RandomForestModel {
+        let spec = DataSpec {
+            columns: vec![
+                ColumnSpec::numerical("x"),
+                ColumnSpec::categorical("y", vec!["a".into(), "b".into()]),
+            ],
+        };
+        RandomForestModel {
+            spec,
+            label_col: 1,
+            task: Task::Classification,
+            trees: vec![DecisionTree {
+                nodes: vec![
+                    Node {
+                        condition: Some(Condition::Higher { attr: 0, threshold: 1.5 }),
+                        positive: 1,
+                        negative: 2,
+                        missing_to_positive: true,
+                        value: vec![],
+                        num_examples: 7.0,
+                        score: 0.33,
+                    },
+                    Node::leaf(vec![0.25, 0.75], 3.0),
+                    Node::leaf(vec![0.75, 0.25], 4.0),
+                ],
+            }],
+            winner_take_all: false,
+            oob_evaluation: Some(SelfEvaluation {
+                metric: "oob accuracy".into(),
+                value: 0.91,
+                num_examples: 7,
+            }),
+        }
+    }
+
+    #[test]
+    fn rf_roundtrip_preserves_predictions() {
+        let m = sample_rf();
+        let text = model_to_string(&m);
+        let loaded = model_from_string(&text).unwrap();
+        assert_eq!(loaded.model_type(), "RANDOM_FOREST");
+        let obs = vec![AttrValue::Num(2.0), AttrValue::Missing];
+        assert_eq!(loaded.predict_row(&obs), m.predict_row(&obs));
+        let obs = vec![AttrValue::Missing, AttrValue::Missing];
+        assert_eq!(loaded.predict_row(&obs), m.predict_row(&obs));
+    }
+
+    #[test]
+    fn future_version_rejected() {
+        let m = sample_rf();
+        let text = model_to_string(&m).replace("\"format_version\": 1", "\"format_version\": 99");
+        let err = match model_from_string(&text) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.contains("newer than this library supports"), "{err}");
+    }
+
+    #[test]
+    fn unknown_type_rejected_with_guidance() {
+        let text = r#"{"format_version":1,"model_type":"NEURAL_NET","task":"CLASSIFICATION","label_col":0,"spec":{"columns":[]}}"#;
+        let err = match model_from_string(text) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.contains("supports RANDOM_FOREST"), "{err}");
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let m = sample_rf();
+        let dir = std::env::temp_dir().join("ydf_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.json");
+        save_model(&m, &path).unwrap();
+        let loaded = load_model(&path).unwrap();
+        assert_eq!(loaded.num_classes(), 2);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,368 @@
+//! Linear model (multinomial logistic regression over a dense encoding).
+//!
+//! This is the "TF Linear" baseline of the paper's benchmark (§5): numerical
+//! features are standardized, categorical features one-hot encoded, booleans
+//! 0/1; missing values impute to the global mean / all-zeros.
+
+use super::{Model, SelfEvaluation, Task, VariableImportance};
+use crate::dataset::{AttrValue, ColumnData, DataSpec, Dataset, FeatureSemantic, Observation};
+use crate::utils::json::Json;
+use crate::utils::stats::softmax_in_place;
+
+/// Dense feature encoding shared between training and inference.
+#[derive(Clone, Debug)]
+pub struct DenseEncoding {
+    /// For each source column: (column index, offset into dense vector,
+    /// width). Label column excluded.
+    pub slots: Vec<EncodingSlot>,
+    pub dim: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct EncodingSlot {
+    pub col: usize,
+    pub offset: usize,
+    pub width: usize,
+    /// Standardization for numerical slots.
+    pub mean: f32,
+    pub inv_std: f32,
+}
+
+impl DenseEncoding {
+    /// Builds the encoding from a dataspec, excluding `label_col`.
+    pub fn build(spec: &DataSpec, label_col: usize) -> DenseEncoding {
+        let mut slots = Vec::new();
+        let mut offset = 0usize;
+        for (ci, c) in spec.columns.iter().enumerate() {
+            if ci == label_col {
+                continue;
+            }
+            let width = match c.semantic {
+                FeatureSemantic::Numerical | FeatureSemantic::Boolean => 1,
+                FeatureSemantic::Categorical | FeatureSemantic::CategoricalSet => {
+                    c.vocab_size()
+                }
+            };
+            let (mean, inv_std) = if c.semantic == FeatureSemantic::Numerical {
+                let std = c.num_stats.std;
+                (c.num_stats.mean as f32, if std > 1e-12 { 1.0 / std as f32 } else { 1.0 })
+            } else {
+                (0.0, 1.0)
+            };
+            slots.push(EncodingSlot { col: ci, offset, width, mean, inv_std });
+            offset += width;
+        }
+        DenseEncoding { slots, dim: offset }
+    }
+
+    /// Encodes a dataset row into `out` (must be `dim` long, zeroed by this
+    /// function).
+    pub fn encode_ds(&self, spec: &DataSpec, ds: &Dataset, row: usize, out: &mut [f32]) {
+        out.fill(0.0);
+        for s in &self.slots {
+            match &ds.columns[s.col] {
+                ColumnData::Numerical(v) => {
+                    let x = v[row];
+                    // Missing -> standardized 0 (the global mean).
+                    out[s.offset] = if x.is_nan() { 0.0 } else { (x - s.mean) * s.inv_std };
+                }
+                ColumnData::Categorical(v) => {
+                    let c = v[row];
+                    if c != crate::dataset::MISSING_CAT && (c as usize) < s.width {
+                        out[s.offset + c as usize] = 1.0;
+                    }
+                }
+                ColumnData::Boolean(v) => {
+                    if v[row] == 1 {
+                        out[s.offset] = 1.0;
+                    }
+                }
+                col @ ColumnData::CategoricalSet { .. } => {
+                    if !col.is_missing(row) {
+                        for &t in col.set_values(row).unwrap() {
+                            if (t as usize) < s.width {
+                                out[s.offset + t as usize] = 1.0;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let _ = spec;
+    }
+
+    /// Encodes a row observation.
+    pub fn encode_row(&self, obs: &Observation, out: &mut [f32]) {
+        out.fill(0.0);
+        for s in &self.slots {
+            match &obs[s.col] {
+                AttrValue::Num(x) if !x.is_nan() => {
+                    out[s.offset] = (x - s.mean) * s.inv_std;
+                }
+                AttrValue::Cat(c) => {
+                    if (*c as usize) < s.width {
+                        out[s.offset + *c as usize] = 1.0;
+                    }
+                }
+                AttrValue::Bool(b) => {
+                    if *b {
+                        out[s.offset] = 1.0;
+                    }
+                }
+                AttrValue::CatSet(items) => {
+                    for &t in items {
+                        if (t as usize) < s.width {
+                            out[s.offset + t as usize] = 1.0;
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut slots = Vec::new();
+        for s in &self.slots {
+            let mut j = Json::obj();
+            j.set("col", Json::Num(s.col as f64))
+                .set("offset", Json::Num(s.offset as f64))
+                .set("width", Json::Num(s.width as f64))
+                .set("mean", Json::Num(s.mean as f64))
+                .set("inv_std", Json::Num(s.inv_std as f64));
+            slots.push(j);
+        }
+        let mut j = Json::obj();
+        j.set("slots", Json::Arr(slots)).set("dim", Json::Num(self.dim as f64));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<DenseEncoding, String> {
+        let slots = j
+            .req_arr("slots")?
+            .iter()
+            .map(|sj| {
+                Ok(EncodingSlot {
+                    col: sj.req_usize("col")?,
+                    offset: sj.req_usize("offset")?,
+                    width: sj.req_usize("width")?,
+                    mean: sj.req_f64("mean")? as f32,
+                    inv_std: sj.req_f64("inv_std")? as f32,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(DenseEncoding { slots, dim: j.req_usize("dim")? })
+    }
+}
+
+/// Multinomial logistic regression model.
+#[derive(Clone)]
+pub struct LinearModel {
+    pub spec: DataSpec,
+    pub label_col: usize,
+    pub task: Task,
+    pub encoding: DenseEncoding,
+    /// `weights[k]` is the weight vector of class k (length `encoding.dim`).
+    /// Regression uses a single output.
+    pub weights: Vec<Vec<f32>>,
+    pub bias: Vec<f32>,
+    pub self_eval: Option<SelfEvaluation>,
+}
+
+impl LinearModel {
+    fn scores(&self, dense: &[f32]) -> Vec<f64> {
+        self.weights
+            .iter()
+            .zip(&self.bias)
+            .map(|(w, &b)| {
+                b as f64
+                    + w.iter().zip(dense).map(|(&wi, &xi)| wi as f64 * xi as f64).sum::<f64>()
+            })
+            .collect()
+    }
+
+    fn finalize(&self, mut scores: Vec<f64>) -> Vec<f64> {
+        if self.task == Task::Classification {
+            softmax_in_place(&mut scores);
+        }
+        scores
+    }
+}
+
+impl Model for LinearModel {
+    fn model_type(&self) -> &'static str {
+        "LINEAR"
+    }
+    fn task(&self) -> Task {
+        self.task
+    }
+    fn spec(&self) -> &DataSpec {
+        &self.spec
+    }
+    fn label_col(&self) -> usize {
+        self.label_col
+    }
+
+    fn input_features(&self) -> Vec<usize> {
+        self.encoding.slots.iter().map(|s| s.col).collect()
+    }
+
+    fn predict_row(&self, obs: &Observation) -> Vec<f64> {
+        let mut dense = vec![0.0f32; self.encoding.dim];
+        self.encoding.encode_row(obs, &mut dense);
+        self.finalize(self.scores(&dense))
+    }
+
+    fn predict_ds_row(&self, ds: &Dataset, row: usize) -> Vec<f64> {
+        let mut dense = vec![0.0f32; self.encoding.dim];
+        self.encoding.encode_ds(&self.spec, ds, row, &mut dense);
+        self.finalize(self.scores(&dense))
+    }
+
+    fn describe(&self) -> String {
+        let mut s = format!(
+            "Type: \"{}\"\nTask: {}\nLabel: \"{}\"\n\nDense dimension: {}\nClasses: {}\n",
+            self.model_type(),
+            self.task.name(),
+            self.spec.columns[self.label_col].name,
+            self.encoding.dim,
+            self.weights.len()
+        );
+        if let Some(e) = &self.self_eval {
+            s.push_str(&format!("Self-evaluation: {} = {:.6}\n", e.metric, e.value));
+        }
+        s
+    }
+
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("format_version", Json::Num(super::io::MODEL_FORMAT_VERSION as f64))
+            .set("model_type", Json::Str(self.model_type().into()))
+            .set("task", Json::Str(self.task.name().into()))
+            .set("label_col", Json::Num(self.label_col as f64))
+            .set("spec", self.spec.to_json())
+            .set("encoding", self.encoding.to_json())
+            .set(
+                "weights",
+                Json::Arr(
+                    self.weights
+                        .iter()
+                        .map(|w| {
+                            Json::Arr(w.iter().map(|&x| Json::Num(x as f64)).collect())
+                        })
+                        .collect(),
+                ),
+            )
+            .set("bias", Json::Arr(self.bias.iter().map(|&b| Json::Num(b as f64)).collect()));
+        j
+    }
+
+    fn variable_importances(&self) -> Vec<VariableImportance> {
+        // |weight| mass per source column.
+        let mut values: Vec<(String, f64)> = self
+            .encoding
+            .slots
+            .iter()
+            .map(|s| {
+                let mass: f64 = self
+                    .weights
+                    .iter()
+                    .map(|w| {
+                        w[s.offset..s.offset + s.width]
+                            .iter()
+                            .map(|&x| x.abs() as f64)
+                            .sum::<f64>()
+                    })
+                    .sum();
+                (self.spec.columns[s.col].name.clone(), mass)
+            })
+            .collect();
+        values.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        vec![VariableImportance { kind: "ABS_WEIGHT_MASS", values }]
+    }
+
+    fn self_evaluation(&self) -> Option<&SelfEvaluation> {
+        self.self_eval.as_ref()
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::dataspec::{ColumnSpec, NumericalStats};
+
+    fn spec() -> DataSpec {
+        let mut num = ColumnSpec::numerical("x");
+        num.num_stats = NumericalStats { mean: 10.0, min: 0.0, max: 20.0, std: 2.0 };
+        DataSpec {
+            columns: vec![
+                num,
+                ColumnSpec::categorical("c", vec!["a".into(), "b".into(), "z".into()]),
+                ColumnSpec::categorical("y", vec!["no".into(), "yes".into()]),
+            ],
+        }
+    }
+
+    #[test]
+    fn encoding_layout() {
+        let s = spec();
+        let enc = DenseEncoding::build(&s, 2);
+        assert_eq!(enc.dim, 4); // 1 numerical + 3 one-hot
+        let mut out = vec![0.0; 4];
+        enc.encode_row(
+            &vec![AttrValue::Num(14.0), AttrValue::Cat(1), AttrValue::Missing],
+            &mut out,
+        );
+        assert_eq!(out, vec![2.0, 0.0, 1.0, 0.0]); // (14-10)/2, one-hot b
+    }
+
+    #[test]
+    fn missing_encodes_to_zero() {
+        let s = spec();
+        let enc = DenseEncoding::build(&s, 2);
+        let mut out = vec![0.0; 4];
+        enc.encode_row(&vec![AttrValue::Missing, AttrValue::Missing, AttrValue::Missing], &mut out);
+        assert_eq!(out, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn predict_softmax() {
+        let s = spec();
+        let enc = DenseEncoding::build(&s, 2);
+        let m = LinearModel {
+            spec: s,
+            label_col: 2,
+            task: Task::Classification,
+            encoding: enc,
+            weights: vec![vec![0.0; 4], vec![1.0, 0.0, 0.0, 0.0]],
+            bias: vec![0.0, -1.0],
+            self_eval: None,
+        };
+        let p = m.predict_row(&vec![AttrValue::Num(14.0), AttrValue::Cat(0), AttrValue::Missing]);
+        // class1 score = 2*1 - 1 = 1, class0 = 0 -> sigmoid-like
+        assert!((p[0] + p[1] - 1.0).abs() < 1e-12);
+        assert!(p[1] > p[0]);
+    }
+
+    #[test]
+    fn importances_nonzero() {
+        let s = spec();
+        let enc = DenseEncoding::build(&s, 2);
+        let m = LinearModel {
+            spec: s,
+            label_col: 2,
+            task: Task::Classification,
+            encoding: enc,
+            weights: vec![vec![0.5, 0.0, 0.0, 0.0], vec![-0.5, 1.0, 0.0, 0.0]],
+            bias: vec![0.0, 0.0],
+            self_eval: None,
+        };
+        let vi = m.variable_importances();
+        assert_eq!(vi[0].values.len(), 2);
+        assert!(vi[0].values.iter().all(|(_, v)| *v > 0.0));
+    }
+}

@@ -1,0 +1,135 @@
+//! MODEL abstraction (§3.1): a model is a function that takes an
+//! observation and returns a prediction. Concrete models (Random Forest,
+//! Gradient Boosted Trees, linear) implement the [`Model`] trait; learners
+//! return `Box<dyn Model>` so meta-learners and tools stay model-agnostic.
+
+pub mod describe;
+pub mod forest;
+pub mod io;
+pub mod linear;
+pub mod tree;
+
+pub use forest::{GradientBoostedTreesModel, RandomForestModel};
+pub use linear::LinearModel;
+
+use crate::dataset::{DataSpec, Dataset, Observation};
+use crate::utils::json::Json;
+
+/// The learning task. Ranking and uplifting from the paper reduce to
+/// regression over engineered labels in this reproduction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    Classification,
+    Regression,
+}
+
+impl Task {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Classification => "CLASSIFICATION",
+            Task::Regression => "REGRESSION",
+        }
+    }
+}
+
+/// Model self-evaluation (§3.6): a fair quality estimate computed by the
+/// learner itself (out-of-bag for RF, validation loss for GBT), available
+/// without a held-out dataset.
+#[derive(Clone, Debug, Default)]
+pub struct SelfEvaluation {
+    /// e.g. "out-of-bag accuracy" or "validation loss".
+    pub metric: String,
+    pub value: f64,
+    /// Number of examples the estimate is based on.
+    pub num_examples: u64,
+}
+
+/// One variable-importance ranking (Appendix B.2 shows NUM_AS_ROOT and
+/// NUM_NODES; SUM_SCORE and INV_MEAN_MIN_DEPTH are also standard in YDF).
+#[derive(Clone, Debug)]
+pub struct VariableImportance {
+    pub kind: &'static str,
+    /// (feature name, importance), sorted descending.
+    pub values: Vec<(String, f64)>,
+}
+
+/// A trained model. Prediction output: probabilities per class for
+/// classification (aligned with the label dictionary), a single value for
+/// regression.
+pub trait Model: Send + Sync {
+    /// Type string, e.g. "GRADIENT_BOOSTED_TREES" (report header).
+    fn model_type(&self) -> &'static str;
+    fn task(&self) -> Task;
+    /// Dataspec of the columns the model was trained with (incl. label).
+    fn spec(&self) -> &DataSpec;
+    /// Column index of the label within `spec`.
+    fn label_col(&self) -> usize;
+    /// Indices of the columns actually used as input features.
+    fn input_features(&self) -> Vec<usize>;
+
+    /// Predicts a single row observation (column order = `spec`).
+    fn predict_row(&self, obs: &Observation) -> Vec<f64>;
+    /// Predicts row `row` of a column-wise dataset.
+    fn predict_ds_row(&self, ds: &Dataset, row: usize) -> Vec<f64>;
+    /// Batch prediction. Default: row loop; engines override.
+    fn predict_dataset(&self, ds: &Dataset) -> Vec<Vec<f64>> {
+        (0..ds.num_rows()).map(|r| self.predict_ds_row(ds, r)).collect()
+    }
+
+    /// Human-readable summary (`show_model`, Appendix B.2).
+    fn describe(&self) -> String;
+    /// Serialization to the versioned JSON model format.
+    fn to_json(&self) -> Json;
+    /// Variable importances, if the model supports them.
+    fn variable_importances(&self) -> Vec<VariableImportance> {
+        vec![]
+    }
+    /// Self-evaluation recorded at training time (§3.6).
+    fn self_evaluation(&self) -> Option<&SelfEvaluation> {
+        None
+    }
+    /// Downcasting support (engine compilation inspects concrete types).
+    fn as_any(&self) -> &dyn std::any::Any;
+
+    /// Class names for classification models (label dictionary).
+    fn class_names(&self) -> Vec<String> {
+        self.spec().columns[self.label_col()].dictionary.clone()
+    }
+
+    /// Number of classes (1 for regression).
+    fn num_classes(&self) -> usize {
+        match self.task() {
+            Task::Classification => self.spec().columns[self.label_col()].vocab_size(),
+            Task::Regression => 1,
+        }
+    }
+}
+
+/// Classification decision: argmax class index of a probability vector.
+pub fn argmax(probs: &[f64]) -> usize {
+    let mut best = 0usize;
+    for (i, &p) in probs.iter().enumerate().skip(1) {
+        if p > probs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.1, 0.7, 0.2]), 1);
+        assert_eq!(argmax(&[1.0]), 0);
+        assert_eq!(argmax(&[0.5, 0.5]), 0); // first wins ties
+    }
+
+    #[test]
+    fn task_names() {
+        assert_eq!(Task::Classification.name(), "CLASSIFICATION");
+        assert_eq!(Task::Regression.name(), "REGRESSION");
+    }
+}

@@ -1,0 +1,568 @@
+//! Decision tree structure: conditions, nodes and traversal.
+//!
+//! Condition types mirror YDF's (Appendix B.2 lists `HigherCondition`,
+//! `ContainsBitmapCondition`, `ContainsCondition`; §3.8 adds oblique and
+//! categorical-set splits). Each node records which branch receives missing
+//! values (local imputation decided at training time, §3.4).
+
+use crate::dataset::{AttrValue, ColumnData, Dataset, Observation};
+use crate::utils::json::Json;
+
+/// A split condition evaluated on one observation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Condition {
+    /// `x[attr] >= threshold` — numerical features.
+    Higher { attr: usize, threshold: f32 },
+    /// `x[attr] ∈ set` with the set encoded as a bitmap over the dictionary
+    /// — categorical features (the efficient form of ContainsCondition).
+    ContainsBitmap { attr: usize, bitmap: Vec<u64> },
+    /// `x[attr] ∩ set ≠ ∅` — categorical-set features (text tokens, §3.8).
+    ContainsSetBitmap { attr: usize, bitmap: Vec<u64> },
+    /// `Σ weights[i]·x[attrs[i]] >= threshold` — sparse oblique splits
+    /// (Tomita et al.), the `split_axis: SPARSE_OBLIQUE` of benchmark hp.
+    Oblique { attrs: Vec<usize>, weights: Vec<f32>, threshold: f32 },
+    /// `x[attr] == true` — boolean features.
+    IsTrue { attr: usize },
+}
+
+#[inline]
+pub fn bitmap_contains(bitmap: &[u64], value: u32) -> bool {
+    let w = (value / 64) as usize;
+    w < bitmap.len() && (bitmap[w] >> (value % 64)) & 1 == 1
+}
+
+pub fn bitmap_from_items(items: &[u32], domain: usize) -> Vec<u64> {
+    let mut bm = vec![0u64; domain.div_ceil(64)];
+    for &it in items {
+        bm[(it / 64) as usize] |= 1 << (it % 64);
+    }
+    bm
+}
+
+impl Condition {
+    /// The primary attribute(s) tested by this condition.
+    pub fn attributes(&self) -> Vec<usize> {
+        match self {
+            Condition::Higher { attr, .. }
+            | Condition::ContainsBitmap { attr, .. }
+            | Condition::ContainsSetBitmap { attr, .. }
+            | Condition::IsTrue { attr } => vec![*attr],
+            Condition::Oblique { attrs, .. } => attrs.clone(),
+        }
+    }
+
+    /// Human-readable name matching the paper's report vocabulary.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Condition::Higher { .. } => "HigherCondition",
+            Condition::ContainsBitmap { .. } => "ContainsBitmapCondition",
+            Condition::ContainsSetBitmap { .. } => "ContainsSetCondition",
+            Condition::Oblique { .. } => "ObliqueCondition",
+            Condition::IsTrue { .. } => "IsTrueCondition",
+        }
+    }
+
+    /// Evaluates on a row-form observation. `None` = value missing.
+    pub fn evaluate(&self, obs: &Observation) -> Option<bool> {
+        match self {
+            Condition::Higher { attr, threshold } => match &obs[*attr] {
+                AttrValue::Num(x) if !x.is_nan() => Some(*x >= *threshold),
+                _ => None,
+            },
+            Condition::ContainsBitmap { attr, bitmap } => match &obs[*attr] {
+                AttrValue::Cat(c) => Some(bitmap_contains(bitmap, *c)),
+                _ => None,
+            },
+            Condition::ContainsSetBitmap { attr, bitmap } => match &obs[*attr] {
+                AttrValue::CatSet(items) => {
+                    Some(items.iter().any(|&i| bitmap_contains(bitmap, i)))
+                }
+                _ => None,
+            },
+            Condition::Oblique { attrs, weights, threshold } => {
+                let mut acc = 0.0f32;
+                for (&a, &w) in attrs.iter().zip(weights) {
+                    match &obs[a] {
+                        AttrValue::Num(x) if !x.is_nan() => acc += w * x,
+                        // Oblique projections impute missing as 0 (post
+                        // normalization this is the mid-range), matching
+                        // the sparse-oblique training-side treatment.
+                        _ => {}
+                    }
+                }
+                Some(acc >= *threshold)
+            }
+            Condition::IsTrue { attr } => match &obs[*attr] {
+                AttrValue::Bool(b) => Some(*b),
+                _ => None,
+            },
+        }
+    }
+
+    /// Evaluates against column storage (training/batch path — avoids
+    /// materializing row observations).
+    pub fn evaluate_ds(&self, ds: &Dataset, row: usize) -> Option<bool> {
+        match self {
+            Condition::Higher { attr, threshold } => {
+                let x = match &ds.columns[*attr] {
+                    ColumnData::Numerical(v) => v[row],
+                    _ => return None,
+                };
+                if x.is_nan() {
+                    None
+                } else {
+                    Some(x >= *threshold)
+                }
+            }
+            Condition::ContainsBitmap { attr, bitmap } => {
+                let c = match &ds.columns[*attr] {
+                    ColumnData::Categorical(v) => v[row],
+                    _ => return None,
+                };
+                if c == crate::dataset::MISSING_CAT {
+                    None
+                } else {
+                    Some(bitmap_contains(bitmap, c))
+                }
+            }
+            Condition::ContainsSetBitmap { attr, bitmap } => {
+                let col = &ds.columns[*attr];
+                if col.is_missing(row) {
+                    return None;
+                }
+                col.set_values(row)
+                    .map(|items| items.iter().any(|&i| bitmap_contains(bitmap, i)))
+            }
+            Condition::Oblique { attrs, weights, threshold } => {
+                let mut acc = 0.0f32;
+                for (&a, &w) in attrs.iter().zip(weights) {
+                    if let ColumnData::Numerical(v) = &ds.columns[a] {
+                        let x = v[row];
+                        if !x.is_nan() {
+                            acc += w * x;
+                        }
+                    }
+                }
+                Some(acc >= *threshold)
+            }
+            Condition::IsTrue { attr } => {
+                let b = match &ds.columns[*attr] {
+                    ColumnData::Boolean(v) => v[row],
+                    _ => return None,
+                };
+                if b == crate::dataset::MISSING_BOOL {
+                    None
+                } else {
+                    Some(b == 1)
+                }
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        match self {
+            Condition::Higher { attr, threshold } => {
+                j.set("type", Json::Str("higher".into()))
+                    .set("attr", Json::Num(*attr as f64))
+                    .set("threshold", Json::Num(*threshold as f64));
+            }
+            Condition::ContainsBitmap { attr, bitmap } => {
+                j.set("type", Json::Str("contains".into()))
+                    .set("attr", Json::Num(*attr as f64))
+                    .set(
+                        "bitmap",
+                        Json::Arr(bitmap.iter().map(|&w| Json::Str(format!("{w:x}"))).collect()),
+                    );
+            }
+            Condition::ContainsSetBitmap { attr, bitmap } => {
+                j.set("type", Json::Str("contains_set".into()))
+                    .set("attr", Json::Num(*attr as f64))
+                    .set(
+                        "bitmap",
+                        Json::Arr(bitmap.iter().map(|&w| Json::Str(format!("{w:x}"))).collect()),
+                    );
+            }
+            Condition::Oblique { attrs, weights, threshold } => {
+                j.set("type", Json::Str("oblique".into()))
+                    .set("attrs", Json::from_usizes(attrs))
+                    .set(
+                        "weights",
+                        Json::Arr(weights.iter().map(|&w| Json::Num(w as f64)).collect()),
+                    )
+                    .set("threshold", Json::Num(*threshold as f64));
+            }
+            Condition::IsTrue { attr } => {
+                j.set("type", Json::Str("is_true".into()))
+                    .set("attr", Json::Num(*attr as f64));
+            }
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Condition, String> {
+        let parse_bitmap = |j: &Json| -> Result<Vec<u64>, String> {
+            j.req_arr("bitmap")?
+                .iter()
+                .map(|v| {
+                    u64::from_str_radix(v.as_str().unwrap_or(""), 16)
+                        .map_err(|e| format!("bad bitmap word: {e}"))
+                })
+                .collect()
+        };
+        match j.req_str("type")? {
+            "higher" => Ok(Condition::Higher {
+                attr: j.req_usize("attr")?,
+                threshold: j.req_f64("threshold")? as f32,
+            }),
+            "contains" => Ok(Condition::ContainsBitmap {
+                attr: j.req_usize("attr")?,
+                bitmap: parse_bitmap(j)?,
+            }),
+            "contains_set" => Ok(Condition::ContainsSetBitmap {
+                attr: j.req_usize("attr")?,
+                bitmap: parse_bitmap(j)?,
+            }),
+            "oblique" => Ok(Condition::Oblique {
+                attrs: j
+                    .req_arr("attrs")?
+                    .iter()
+                    .map(|v| v.as_usize().unwrap_or(0))
+                    .collect(),
+                weights: j
+                    .req_arr("weights")?
+                    .iter()
+                    .map(|v| v.as_f64().unwrap_or(0.0) as f32)
+                    .collect(),
+                threshold: j.req_f64("threshold")? as f32,
+            }),
+            "is_true" => Ok(Condition::IsTrue { attr: j.req_usize("attr")? }),
+            t => Err(format!("unknown condition type '{t}'")),
+        }
+    }
+}
+
+/// A tree node in arena storage.
+#[derive(Clone, Debug)]
+pub struct Node {
+    /// `None` for leaves.
+    pub condition: Option<Condition>,
+    /// Index of the positive (condition true) child.
+    pub positive: u32,
+    /// Index of the negative child.
+    pub negative: u32,
+    /// Branch receiving missing values (local imputation result).
+    pub missing_to_positive: bool,
+    /// Leaf payload: class distribution (RF), single logit (GBT) or
+    /// regression value. Empty on internal nodes.
+    pub value: Vec<f32>,
+    /// Number of training examples that reached this node.
+    pub num_examples: f64,
+    /// Split score (gain) — used by variable importances.
+    pub score: f32,
+}
+
+impl Node {
+    pub fn leaf(value: Vec<f32>, num_examples: f64) -> Node {
+        Node {
+            condition: None,
+            positive: 0,
+            negative: 0,
+            missing_to_positive: false,
+            value,
+            num_examples,
+            score: 0.0,
+        }
+    }
+
+    pub fn is_leaf(&self) -> bool {
+        self.condition.is_none()
+    }
+}
+
+/// A decision tree in arena form; node 0 is the root.
+#[derive(Clone, Debug, Default)]
+pub struct DecisionTree {
+    pub nodes: Vec<Node>,
+}
+
+impl DecisionTree {
+    /// Algorithm 1 of the paper: iterate from the root, follow the branch
+    /// given by the node condition, return the leaf.
+    pub fn eval_row(&self, obs: &Observation) -> &Node {
+        let mut idx = 0usize;
+        loop {
+            let node = &self.nodes[idx];
+            let cond = match &node.condition {
+                None => return node,
+                Some(c) => c,
+            };
+            let go_positive = cond.evaluate(obs).unwrap_or(node.missing_to_positive);
+            idx = if go_positive { node.positive as usize } else { node.negative as usize };
+        }
+    }
+
+    /// Same traversal against column storage.
+    pub fn eval_ds(&self, ds: &Dataset, row: usize) -> &Node {
+        let mut idx = 0usize;
+        loop {
+            let node = &self.nodes[idx];
+            let cond = match &node.condition {
+                None => return node,
+                Some(c) => c,
+            };
+            let go_positive = cond.evaluate_ds(ds, row).unwrap_or(node.missing_to_positive);
+            idx = if go_positive { node.positive as usize } else { node.negative as usize };
+        }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn num_leaves(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_leaf()).count()
+    }
+
+    /// Maximum depth (root = 0). Iterative to avoid recursion limits on
+    /// deep RF trees.
+    pub fn max_depth(&self) -> usize {
+        if self.nodes.is_empty() {
+            return 0;
+        }
+        let mut max_d = 0;
+        let mut stack = vec![(0u32, 0usize)];
+        while let Some((idx, d)) = stack.pop() {
+            let n = &self.nodes[idx as usize];
+            if n.is_leaf() {
+                max_d = max_d.max(d);
+            } else {
+                stack.push((n.positive, d + 1));
+                stack.push((n.negative, d + 1));
+            }
+        }
+        max_d
+    }
+
+    /// Per-leaf depths (for the `show_model` "Depth by leafs" histogram).
+    pub fn leaf_depths(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        if self.nodes.is_empty() {
+            return out;
+        }
+        let mut stack = vec![(0u32, 0usize)];
+        while let Some((idx, d)) = stack.pop() {
+            let n = &self.nodes[idx as usize];
+            if n.is_leaf() {
+                out.push(d);
+            } else {
+                stack.push((n.positive, d + 1));
+                stack.push((n.negative, d + 1));
+            }
+        }
+        out
+    }
+
+    /// Visits internal nodes with their depth.
+    pub fn visit_internal<F: FnMut(&Node, usize)>(&self, mut f: F) {
+        if self.nodes.is_empty() {
+            return;
+        }
+        let mut stack = vec![(0u32, 0usize)];
+        while let Some((idx, d)) = stack.pop() {
+            let n = &self.nodes[idx as usize];
+            if !n.is_leaf() {
+                f(n, d);
+                stack.push((n.positive, d + 1));
+                stack.push((n.negative, d + 1));
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut nodes = Vec::with_capacity(self.nodes.len());
+        for n in &self.nodes {
+            let mut j = Json::obj();
+            if let Some(c) = &n.condition {
+                j.set("cond", c.to_json())
+                    .set("pos", Json::Num(n.positive as f64))
+                    .set("neg", Json::Num(n.negative as f64))
+                    .set("miss_pos", Json::Bool(n.missing_to_positive))
+                    .set("score", Json::Num(n.score as f64));
+            } else {
+                j.set(
+                    "value",
+                    Json::Arr(n.value.iter().map(|&v| Json::Num(v as f64)).collect()),
+                );
+            }
+            j.set("n", Json::Num(n.num_examples));
+            nodes.push(j);
+        }
+        let mut j = Json::obj();
+        j.set("nodes", Json::Arr(nodes));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<DecisionTree, String> {
+        let mut nodes = Vec::new();
+        for nj in j.req_arr("nodes")? {
+            let num_examples = nj.req_f64("n")?;
+            let node = if let Some(cj) = nj.get("cond") {
+                Node {
+                    condition: Some(Condition::from_json(cj)?),
+                    positive: nj.req_usize("pos")? as u32,
+                    negative: nj.req_usize("neg")? as u32,
+                    missing_to_positive: nj
+                        .get("miss_pos")
+                        .and_then(|v| v.as_bool())
+                        .unwrap_or(false),
+                    value: vec![],
+                    num_examples,
+                    score: nj.get("score").and_then(|v| v.as_f64()).unwrap_or(0.0) as f32,
+                }
+            } else {
+                Node::leaf(
+                    nj.req_arr("value")?
+                        .iter()
+                        .map(|v| v.as_f64().unwrap_or(0.0) as f32)
+                        .collect(),
+                    num_examples,
+                )
+            };
+            nodes.push(node);
+        }
+        Ok(DecisionTree { nodes })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::AttrValue;
+
+    /// x0 >= 2.0 ? leaf[0.9] : (x1 in {1,3} ? leaf[0.5] : leaf[0.1])
+    fn sample_tree() -> DecisionTree {
+        DecisionTree {
+            nodes: vec![
+                Node {
+                    condition: Some(Condition::Higher { attr: 0, threshold: 2.0 }),
+                    positive: 1,
+                    negative: 2,
+                    missing_to_positive: false,
+                    value: vec![],
+                    num_examples: 100.0,
+                    score: 0.5,
+                },
+                Node::leaf(vec![0.9], 40.0),
+                Node {
+                    condition: Some(Condition::ContainsBitmap {
+                        attr: 1,
+                        bitmap: bitmap_from_items(&[1, 3], 8),
+                    }),
+                    positive: 3,
+                    negative: 4,
+                    missing_to_positive: true,
+                    value: vec![],
+                    num_examples: 60.0,
+                    score: 0.2,
+                },
+                Node::leaf(vec![0.5], 30.0),
+                Node::leaf(vec![0.1], 30.0),
+            ],
+        }
+    }
+
+    #[test]
+    fn traversal_follows_conditions() {
+        let t = sample_tree();
+        let leaf = t.eval_row(&vec![AttrValue::Num(3.0), AttrValue::Cat(0)]);
+        assert_eq!(leaf.value, vec![0.9]);
+        let leaf = t.eval_row(&vec![AttrValue::Num(1.0), AttrValue::Cat(3)]);
+        assert_eq!(leaf.value, vec![0.5]);
+        let leaf = t.eval_row(&vec![AttrValue::Num(1.0), AttrValue::Cat(0)]);
+        assert_eq!(leaf.value, vec![0.1]);
+    }
+
+    #[test]
+    fn missing_value_follows_configured_branch() {
+        let t = sample_tree();
+        // Root: missing_to_positive = false -> negative -> node 2; node 2
+        // missing_to_positive = true -> leaf 3.
+        let leaf = t.eval_row(&vec![AttrValue::Missing, AttrValue::Missing]);
+        assert_eq!(leaf.value, vec![0.5]);
+    }
+
+    #[test]
+    fn bitmap_roundtrip() {
+        let bm = bitmap_from_items(&[0, 63, 64, 100], 128);
+        assert!(bitmap_contains(&bm, 0));
+        assert!(bitmap_contains(&bm, 63));
+        assert!(bitmap_contains(&bm, 64));
+        assert!(bitmap_contains(&bm, 100));
+        assert!(!bitmap_contains(&bm, 1));
+        assert!(!bitmap_contains(&bm, 127));
+        assert!(!bitmap_contains(&bm, 4000)); // out of range is false
+    }
+
+    #[test]
+    fn depth_and_leaves() {
+        let t = sample_tree();
+        assert_eq!(t.num_nodes(), 5);
+        assert_eq!(t.num_leaves(), 3);
+        assert_eq!(t.max_depth(), 2);
+        let mut depths = t.leaf_depths();
+        depths.sort_unstable();
+        assert_eq!(depths, vec![1, 2, 2]);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = sample_tree();
+        let j = t.to_json();
+        let back = DecisionTree::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.num_nodes(), t.num_nodes());
+        let obs = vec![AttrValue::Num(1.0), AttrValue::Cat(3)];
+        assert_eq!(back.eval_row(&obs).value, t.eval_row(&obs).value);
+        match &back.nodes[2].condition {
+            Some(Condition::ContainsBitmap { bitmap, .. }) => {
+                assert!(bitmap_contains(bitmap, 1) && bitmap_contains(bitmap, 3));
+            }
+            other => panic!("bad condition {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oblique_condition() {
+        let c = Condition::Oblique {
+            attrs: vec![0, 1],
+            weights: vec![1.0, -1.0],
+            threshold: 0.5,
+        };
+        let obs = vec![AttrValue::Num(2.0), AttrValue::Num(1.0)];
+        assert_eq!(c.evaluate(&obs), Some(true));
+        let obs = vec![AttrValue::Num(1.0), AttrValue::Num(1.0)];
+        assert_eq!(c.evaluate(&obs), Some(false));
+        // Missing coordinate contributes 0.
+        let obs = vec![AttrValue::Missing, AttrValue::Num(-1.0)];
+        assert_eq!(c.evaluate(&obs), Some(true));
+    }
+
+    #[test]
+    fn condition_json_all_variants() {
+        let conds = vec![
+            Condition::Higher { attr: 3, threshold: -1.5 },
+            Condition::ContainsBitmap { attr: 1, bitmap: vec![0b1010] },
+            Condition::ContainsSetBitmap { attr: 2, bitmap: vec![0b1, 0b10] },
+            Condition::Oblique {
+                attrs: vec![0, 2],
+                weights: vec![0.5, -0.25],
+                threshold: 1.0,
+            },
+            Condition::IsTrue { attr: 7 },
+        ];
+        for c in conds {
+            let j = Json::parse(&c.to_json().to_string()).unwrap();
+            assert_eq!(Condition::from_json(&j).unwrap(), c);
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! PJRT runtime: loads AOT-compiled XLA computations (HLO *text* emitted by
+//! `python/compile/aot.py`) and executes them on the CPU PJRT client.
+//!
+//! HLO text — not a serialized `HloModuleProto` — is the interchange
+//! format: jax ≥ 0.5 emits protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+use std::path::Path;
+
+/// A PJRT client plus compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// A compiled XLA executable.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: String,
+}
+
+impl Runtime {
+    /// Creates a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime, String> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| format!("cannot create PJRT CPU client: {e}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Loads and compiles an HLO text artifact.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable, String> {
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
+            format!(
+                "cannot parse HLO text {}: {e}. Re-generate artifacts with `make artifacts`.",
+                path.display()
+            )
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| format!("XLA compilation of {} failed: {e}", path.display()))?;
+        Ok(Executable { exe, path: path.display().to_string() })
+    }
+}
+
+impl Executable {
+    /// Executes with literal inputs; returns the elements of the output
+    /// tuple (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>, String> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| format!("execution of {} failed: {e}", self.path))?;
+        let mut out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("cannot fetch output of {}: {e}", self.path))?;
+        // Tuples report their arity through decompose; plain outputs pass
+        // through unchanged.
+        match out.decompose_tuple() {
+            Ok(parts) if !parts.is_empty() => Ok(parts),
+            _ => Ok(vec![out]),
+        }
+    }
+}
+
+/// Builds an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal, String> {
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| format!("cannot reshape f32 literal to {dims:?}: {e}"))
+}
+
+/// Builds an i32 literal of the given shape from a flat slice.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal, String> {
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| format!("cannot reshape i32 literal to {dims:?}: {e}"))
+}
+
+/// Extracts an f32 vector from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>, String> {
+    lit.to_vec::<f32>().map_err(|e| format!("cannot read f32 output: {e}"))
+}
+
+/// Default artifact directory (overridable with YDF_ARTIFACTS).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("YDF_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The runtime tests require built artifacts; they are exercised by
+    // rust/tests/pjrt_roundtrip.rs (integration) so unit tests here only
+    // cover literal helpers.
+
+    #[test]
+    fn literal_helpers_roundtrip() {
+        let lit = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_vec_f32(&lit).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = literal_i32(&[1, 2, 3], &[3]).unwrap();
+        assert_eq!(lit.element_count(), 3);
+    }
+
+    #[test]
+    fn artifacts_dir_env_override() {
+        std::env::set_var("YDF_ARTIFACTS", "/tmp/ydf_artifacts_test");
+        assert_eq!(
+            artifacts_dir(),
+            std::path::PathBuf::from("/tmp/ydf_artifacts_test")
+        );
+        std::env::remove_var("YDF_ARTIFACTS");
+    }
+}

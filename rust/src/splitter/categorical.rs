@@ -1,0 +1,526 @@
+//! Categorical, boolean and categorical-set splitters (§3.8).
+//!
+//! Three categorical algorithms, matching the paper's inventory: CART
+//! (exact ordering trick, Fisher 1958 — like LightGBM), Random (random
+//! set projections, Breiman — benchmark hp), and OneHot (one category vs
+//! rest — how XGBoost/scikit-learn behave after one-hot encoding).
+
+use super::score::{Labels, ScoreAcc};
+use super::{CategoricalSplit, SplitCandidate, SplitterConfig};
+use crate::dataset::{ColumnData, Dataset, MISSING_CAT};
+use crate::model::tree::{bitmap_from_items, Condition};
+use crate::utils::rng::Rng;
+
+/// Per-category accumulators + missing accumulator for a node.
+struct CatStats {
+    per_cat: Vec<ScoreAcc>,
+    cat_counts: Vec<usize>,
+    miss: ScoreAcc,
+    parent: ScoreAcc,
+    n_nonmissing: usize,
+    /// Most frequent category in the node (local imputation target).
+    most_frequent: usize,
+}
+
+fn collect_cat_stats(
+    ds: &Dataset,
+    col: usize,
+    rows: &[u32],
+    labels: &Labels,
+    vocab: usize,
+) -> CatStats {
+    let values = match &ds.columns[col] {
+        ColumnData::Categorical(v) => v,
+        _ => panic!("categorical splitter on non-categorical column"),
+    };
+    let mut per_cat: Vec<ScoreAcc> = (0..vocab).map(|_| labels.new_acc()).collect();
+    let mut cat_counts = vec![0usize; vocab];
+    let mut miss = labels.new_acc();
+    let mut parent = labels.new_acc();
+    let mut n_nonmissing = 0usize;
+    for &r in rows {
+        let c = values[r as usize];
+        parent.add(labels, r as usize);
+        if c == MISSING_CAT || (c as usize) >= vocab {
+            miss.add(labels, r as usize);
+        } else {
+            per_cat[c as usize].add(labels, r as usize);
+            cat_counts[c as usize] += 1;
+            n_nonmissing += 1;
+        }
+    }
+    let most_frequent = cat_counts
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, &c)| c)
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    CatStats { per_cat, cat_counts, miss, parent, n_nonmissing, most_frequent }
+}
+
+/// Evaluates the split "x ∈ positive_set", with missing imputed to the
+/// node's most frequent category.
+fn eval_set_split(
+    stats: &CatStats,
+    positive: &[bool],
+    labels: &Labels,
+    min_examples: usize,
+) -> Option<f64> {
+    let mut pos = labels.new_acc();
+    let mut neg = labels.new_acc();
+    let mut n_pos = 0usize;
+    let mut n_neg = 0usize;
+    for (c, in_pos) in positive.iter().enumerate() {
+        if stats.cat_counts[c] == 0 {
+            continue;
+        }
+        if *in_pos {
+            pos.merge(&stats.per_cat[c]);
+            n_pos += stats.cat_counts[c];
+        } else {
+            neg.merge(&stats.per_cat[c]);
+            n_neg += stats.cat_counts[c];
+        }
+    }
+    if n_pos < min_examples || n_neg < min_examples {
+        return None;
+    }
+    if stats.miss.count() > 0.0 {
+        if positive[stats.most_frequent] {
+            pos.merge(&stats.miss);
+        } else {
+            neg.merge(&stats.miss);
+        }
+    }
+    Some(ScoreAcc::gain(&stats.parent, &pos, &neg, labels))
+}
+
+/// Dispatch by configured algorithm.
+pub fn split_categorical(
+    ds: &Dataset,
+    col: usize,
+    rows: &[u32],
+    labels: &Labels,
+    cfg: &SplitterConfig,
+    rng: &mut Rng,
+) -> Option<SplitCandidate> {
+    let vocab = ds.spec.columns[col].vocab_size();
+    if vocab < 2 {
+        return None;
+    }
+    let stats = collect_cat_stats(ds, col, rows, labels, vocab);
+    if stats.n_nonmissing < 2 * cfg.min_examples.max(1) {
+        return None;
+    }
+    let best_set: Option<(Vec<bool>, f64)> = match cfg.categorical {
+        CategoricalSplit::Cart => cart_best_set(&stats, labels, cfg.min_examples),
+        CategoricalSplit::Random { trials } => {
+            random_best_set(&stats, labels, cfg.min_examples, trials, rng)
+        }
+        CategoricalSplit::OneHot => onehot_best_set(&stats, labels, cfg.min_examples),
+    };
+    best_set.map(|(positive, gain)| {
+        let items: Vec<u32> = positive
+            .iter()
+            .enumerate()
+            .filter(|(_, &p)| p)
+            .map(|(c, _)| c as u32)
+            .collect();
+        SplitCandidate {
+            condition: Condition::ContainsBitmap {
+                attr: col,
+                bitmap: bitmap_from_items(&items, vocab),
+            },
+            gain,
+            missing_to_positive: positive[stats.most_frequent],
+        }
+    })
+}
+
+/// CART: order categories by their label statistic, scan prefix splits.
+/// Exact for binary classification and regression (Fisher 1958).
+fn cart_best_set(
+    stats: &CatStats,
+    labels: &Labels,
+    min_examples: usize,
+) -> Option<(Vec<bool>, f64)> {
+    let vocab = stats.per_cat.len();
+    let mut present: Vec<usize> = (0..vocab).filter(|&c| stats.cat_counts[c] > 0).collect();
+    if present.len() < 2 {
+        return None;
+    }
+    present.sort_by(|&a, &b| {
+        stats.per_cat[a]
+            .ordering_statistic(labels)
+            .partial_cmp(&stats.per_cat[b].ordering_statistic(labels))
+            .unwrap()
+    });
+    let mut best: Option<(Vec<bool>, f64)> = None;
+    let mut positive = vec![false; vocab];
+    // Prefix scan over the ordering: positive set = categories seen so far.
+    for i in 0..present.len() - 1 {
+        positive[present[i]] = true;
+        if let Some(gain) = eval_set_split(stats, &positive, labels, min_examples) {
+            if gain > best.as_ref().map(|b| b.1).unwrap_or(0.0) {
+                best = Some((positive.clone(), gain));
+            }
+        }
+    }
+    best
+}
+
+/// Random: evaluate `trials` random subsets, keep the best (Breiman's
+/// random categorical projection; `categorical_algorithm: RANDOM`).
+fn random_best_set(
+    stats: &CatStats,
+    labels: &Labels,
+    min_examples: usize,
+    trials: usize,
+    rng: &mut Rng,
+) -> Option<(Vec<bool>, f64)> {
+    let vocab = stats.per_cat.len();
+    let present: Vec<usize> = (0..vocab).filter(|&c| stats.cat_counts[c] > 0).collect();
+    if present.len() < 2 {
+        return None;
+    }
+    let mut best: Option<(Vec<bool>, f64)> = None;
+    for _ in 0..trials {
+        let mut positive = vec![false; vocab];
+        let mut any = false;
+        let mut all = true;
+        for &c in &present {
+            if rng.bernoulli(0.5) {
+                positive[c] = true;
+                any = true;
+            } else {
+                all = false;
+            }
+        }
+        if !any || all {
+            continue;
+        }
+        if let Some(gain) = eval_set_split(stats, &positive, labels, min_examples) {
+            if gain > best.as_ref().map(|b| b.1).unwrap_or(0.0) {
+                best = Some((positive, gain));
+            }
+        }
+    }
+    best
+}
+
+/// OneHot: each category alone vs the rest — mirrors what libraries without
+/// native categorical support explore after one-hot encoding.
+fn onehot_best_set(
+    stats: &CatStats,
+    labels: &Labels,
+    min_examples: usize,
+) -> Option<(Vec<bool>, f64)> {
+    let vocab = stats.per_cat.len();
+    let mut best: Option<(Vec<bool>, f64)> = None;
+    for c in 0..vocab {
+        if stats.cat_counts[c] == 0 {
+            continue;
+        }
+        let mut positive = vec![false; vocab];
+        positive[c] = true;
+        if let Some(gain) = eval_set_split(stats, &positive, labels, min_examples) {
+            if gain > best.as_ref().map(|b| b.1).unwrap_or(0.0) {
+                best = Some((positive, gain));
+            }
+        }
+    }
+    best
+}
+
+/// Boolean splitter: the single candidate `x == true`.
+pub fn split_boolean(
+    ds: &Dataset,
+    col: usize,
+    rows: &[u32],
+    labels: &Labels,
+    cfg: &SplitterConfig,
+) -> Option<SplitCandidate> {
+    let values = match &ds.columns[col] {
+        ColumnData::Boolean(v) => v,
+        _ => return None,
+    };
+    let mut pos = labels.new_acc();
+    let mut neg = labels.new_acc();
+    let mut miss = labels.new_acc();
+    let mut parent = labels.new_acc();
+    let (mut n_pos, mut n_neg, mut n_true_like) = (0usize, 0usize, 0usize);
+    for &r in rows {
+        parent.add(labels, r as usize);
+        match values[r as usize] {
+            1 => {
+                pos.add(labels, r as usize);
+                n_pos += 1;
+                n_true_like += 1;
+            }
+            0 => {
+                neg.add(labels, r as usize);
+                n_neg += 1;
+            }
+            _ => miss.add(labels, r as usize),
+        }
+    }
+    if n_pos < cfg.min_examples || n_neg < cfg.min_examples {
+        return None;
+    }
+    // Missing imputes to the majority value in the node.
+    let missing_to_positive = n_true_like * 2 > n_pos + n_neg;
+    if miss.count() > 0.0 {
+        if missing_to_positive {
+            pos.merge(&miss);
+        } else {
+            neg.merge(&miss);
+        }
+    }
+    let gain = ScoreAcc::gain(&parent, &pos, &neg, labels);
+    Some(SplitCandidate {
+        condition: Condition::IsTrue { attr: col },
+        gain,
+        missing_to_positive,
+    })
+}
+
+/// Categorical-set splitter (§3.8, Guillame-Bert et al. 2020): greedily
+/// grows the positive token set in decreasing singleton-gain order while
+/// the gain improves.
+pub fn split_categorical_set(
+    ds: &Dataset,
+    col: usize,
+    rows: &[u32],
+    labels: &Labels,
+    cfg: &SplitterConfig,
+) -> Option<SplitCandidate> {
+    let vocab = ds.spec.columns[col].vocab_size();
+    if vocab == 0 {
+        return None;
+    }
+    let col_data = &ds.columns[col];
+    // Evaluate "example's set intersects `mask`".
+    let eval_mask = |mask: &[u64]| -> Option<(f64, bool)> {
+        let mut pos = labels.new_acc();
+        let mut neg = labels.new_acc();
+        let mut miss = labels.new_acc();
+        let mut parent = labels.new_acc();
+        let (mut n_pos, mut n_neg) = (0usize, 0usize);
+        for &r in rows {
+            parent.add(labels, r as usize);
+            if col_data.is_missing(r as usize) {
+                miss.add(labels, r as usize);
+                continue;
+            }
+            let hit = col_data
+                .set_values(r as usize)
+                .map(|items| {
+                    items.iter().any(|&i| crate::model::tree::bitmap_contains(mask, i))
+                })
+                .unwrap_or(false);
+            if hit {
+                pos.add(labels, r as usize);
+                n_pos += 1;
+            } else {
+                neg.add(labels, r as usize);
+                n_neg += 1;
+            }
+        }
+        if n_pos < cfg.min_examples || n_neg < cfg.min_examples {
+            return None;
+        }
+        // Missing sets impute to the negative (no-intersection) branch.
+        neg.merge(&miss);
+        Some((ScoreAcc::gain(&parent, &pos, &neg, labels), false))
+    };
+
+    // Singleton gains for the most frequent tokens.
+    let max_tokens = 32usize.min(vocab);
+    let mut singles: Vec<(u32, f64)> = Vec::new();
+    for t in 0..max_tokens as u32 {
+        let mask = bitmap_from_items(&[t], vocab);
+        if let Some((gain, _)) = eval_mask(&mask) {
+            singles.push((t, gain));
+        }
+    }
+    singles.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    if singles.is_empty() {
+        return None;
+    }
+    // Greedy growth.
+    let mut chosen = vec![singles[0].0];
+    let mut best_gain = singles[0].1;
+    for &(t, _) in &singles[1..] {
+        let mut candidate = chosen.clone();
+        candidate.push(t);
+        let mask = bitmap_from_items(&candidate, vocab);
+        if let Some((gain, _)) = eval_mask(&mask) {
+            if gain > best_gain {
+                best_gain = gain;
+                chosen = candidate;
+            }
+        }
+    }
+    Some(SplitCandidate {
+        condition: Condition::ContainsSetBitmap {
+            attr: col,
+            bitmap: bitmap_from_items(&chosen, vocab),
+        },
+        gain: best_gain,
+        missing_to_positive: false,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::dataspec::{ColumnSpec, DataSpec};
+    use crate::model::tree::bitmap_contains;
+
+    fn cat_ds(values: Vec<u32>, vocab: usize) -> Dataset {
+        let dict: Vec<String> = (0..vocab).map(|i| format!("v{i}")).collect();
+        let spec = DataSpec { columns: vec![ColumnSpec::categorical("c", dict)] };
+        Dataset::new(spec, vec![ColumnData::Categorical(values)]).unwrap()
+    }
+
+    fn cfg() -> SplitterConfig {
+        SplitterConfig { min_examples: 1, ..Default::default() }
+    }
+
+    #[test]
+    fn cart_separates_pure_categories() {
+        // cats {0,1} -> class 0; cats {2,3} -> class 1.
+        let values = vec![0u32, 1, 0, 1, 2, 3, 2, 3];
+        let labels_data = vec![0u32, 0, 0, 0, 1, 1, 1, 1];
+        let ds = cat_ds(values, 4);
+        let labels = Labels::Classification { labels: &labels_data, num_classes: 2 };
+        let rows: Vec<u32> = (0..8).collect();
+        let mut rng = Rng::seed_from_u64(1);
+        let c = split_categorical(&ds, 0, &rows, &labels, &cfg(), &mut rng).unwrap();
+        match &c.condition {
+            Condition::ContainsBitmap { bitmap, .. } => {
+                let side0 = bitmap_contains(bitmap, 0);
+                assert_eq!(bitmap_contains(bitmap, 1), side0);
+                assert_eq!(bitmap_contains(bitmap, 2), !side0);
+                assert_eq!(bitmap_contains(bitmap, 3), !side0);
+            }
+            _ => panic!(),
+        }
+        // Perfect split: gain = 8 ln 2.
+        assert!((c.gain - 8.0 * std::f64::consts::LN_2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn random_finds_signal_with_enough_trials() {
+        let values = vec![0u32, 1, 0, 1, 2, 3, 2, 3];
+        let labels_data = vec![0u32, 0, 0, 0, 1, 1, 1, 1];
+        let ds = cat_ds(values, 4);
+        let labels = Labels::Classification { labels: &labels_data, num_classes: 2 };
+        let rows: Vec<u32> = (0..8).collect();
+        let mut c = cfg();
+        c.categorical = CategoricalSplit::Random { trials: 64 };
+        let mut rng = Rng::seed_from_u64(2);
+        let cand = split_categorical(&ds, 0, &rows, &labels, &c, &mut rng).unwrap();
+        assert!((cand.gain - 8.0 * std::f64::consts::LN_2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn onehot_is_single_category() {
+        let values = vec![0u32, 0, 0, 0, 1, 2, 1, 2];
+        let labels_data = vec![1u32, 1, 1, 1, 0, 0, 0, 0];
+        let ds = cat_ds(values, 3);
+        let labels = Labels::Classification { labels: &labels_data, num_classes: 2 };
+        let rows: Vec<u32> = (0..8).collect();
+        let mut c = cfg();
+        c.categorical = CategoricalSplit::OneHot;
+        let mut rng = Rng::seed_from_u64(3);
+        let cand = split_categorical(&ds, 0, &rows, &labels, &c, &mut rng).unwrap();
+        match &cand.condition {
+            Condition::ContainsBitmap { bitmap, .. } => {
+                let members: Vec<u32> = (0..3).filter(|&v| bitmap_contains(bitmap, v)).collect();
+                assert_eq!(members, vec![0]); // category 0 vs rest
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn onehot_weaker_than_cart_on_two_group_structure() {
+        // Classes split across groups {0,1} vs {2,3}: one-hot cannot
+        // separate them in a single split; CART can. This is the §5.5
+        // mechanism behind XGB/sklearn losing on categorical-heavy data.
+        let values = vec![0u32, 1, 0, 1, 2, 3, 2, 3];
+        let labels_data = vec![0u32, 0, 0, 0, 1, 1, 1, 1];
+        let ds = cat_ds(values, 4);
+        let labels = Labels::Classification { labels: &labels_data, num_classes: 2 };
+        let rows: Vec<u32> = (0..8).collect();
+        let mut rng = Rng::seed_from_u64(4);
+        let cart = split_categorical(&ds, 0, &rows, &labels, &cfg(), &mut rng).unwrap();
+        let mut c1 = cfg();
+        c1.categorical = CategoricalSplit::OneHot;
+        let onehot = split_categorical(&ds, 0, &rows, &labels, &c1, &mut rng).unwrap();
+        assert!(cart.gain > onehot.gain * 1.5, "{} vs {}", cart.gain, onehot.gain);
+    }
+
+    #[test]
+    fn missing_goes_with_most_frequent() {
+        let values = vec![0u32, 0, 0, 1, 1, MISSING_CAT];
+        let labels_data = vec![0u32, 0, 0, 1, 1, 0];
+        let ds = cat_ds(values, 2);
+        let labels = Labels::Classification { labels: &labels_data, num_classes: 2 };
+        let rows: Vec<u32> = (0..6).collect();
+        let mut rng = Rng::seed_from_u64(5);
+        let cand = split_categorical(&ds, 0, &rows, &labels, &cfg(), &mut rng).unwrap();
+        // Most frequent category is 0; whichever side holds cat 0 receives
+        // missing.
+        match &cand.condition {
+            Condition::ContainsBitmap { bitmap, .. } => {
+                assert_eq!(cand.missing_to_positive, bitmap_contains(bitmap, 0));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn boolean_split() {
+        let spec = DataSpec { columns: vec![ColumnSpec::boolean("b")] };
+        let ds = Dataset::new(
+            spec,
+            vec![ColumnData::Boolean(vec![1, 1, 1, 0, 0, 0, crate::dataset::MISSING_BOOL])],
+        )
+        .unwrap();
+        let labels_data = vec![1u32, 1, 1, 0, 0, 0, 1];
+        let labels = Labels::Classification { labels: &labels_data, num_classes: 2 };
+        let rows: Vec<u32> = (0..7).collect();
+        let cand = split_boolean(&ds, 0, &rows, &labels, &cfg()).unwrap();
+        assert!(cand.gain > 0.0);
+        assert_eq!(cand.condition, Condition::IsTrue { attr: 0 });
+    }
+
+    #[test]
+    fn catset_greedy_picks_predictive_tokens() {
+        // Token 0 and 1 indicate class 1; tokens 2,3 are noise.
+        let spec = DataSpec {
+            columns: vec![ColumnSpec::catset(
+                "s",
+                vec!["t0".into(), "t1".into(), "t2".into(), "t3".into()],
+            )],
+        };
+        let offsets = vec![0u32, 1, 2, 4, 5, 6, 7];
+        let values = vec![0u32, 1, 0, 2, 2, 3, 3];
+        let ds = Dataset::new(spec, vec![ColumnData::CategoricalSet { offsets, values }])
+            .unwrap();
+        let labels_data = vec![1u32, 1, 1, 0, 0, 0];
+        let labels = Labels::Classification { labels: &labels_data, num_classes: 2 };
+        let rows: Vec<u32> = (0..6).collect();
+        let cand = split_categorical_set(&ds, 0, &rows, &labels, &cfg()).unwrap();
+        match &cand.condition {
+            Condition::ContainsSetBitmap { bitmap, .. } => {
+                assert!(bitmap_contains(bitmap, 0) || bitmap_contains(bitmap, 1));
+                assert!(!bitmap_contains(bitmap, 3));
+            }
+            _ => panic!(),
+        }
+        assert!(cand.gain > 0.0);
+    }
+}

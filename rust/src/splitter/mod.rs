@@ -1,0 +1,370 @@
+//! SPLITTERS (§3.8): algorithms that find the best split condition for a
+//! node. Organized as the paper describes (§2.3): one module per feature
+//! type (numerical, categorical, boolean, categorical-set, oblique), all
+//! generic over the label type through [`score::Labels`].
+//!
+//! Numerical splitters are *exact* by default (no discretization), like
+//! XGBoost; the histogram splitter provides LightGBM-style approximate
+//! splitting. `Auto` picks in-sorting vs pre-sorting per node, the dynamic
+//! choice §2.3 credits to the modular design.
+
+pub mod categorical;
+pub mod numerical;
+pub mod oblique;
+pub mod score;
+
+use crate::dataset::{ColumnData, Dataset, FeatureSemantic};
+use crate::model::tree::Condition;
+use crate::utils::rng::Rng;
+use score::Labels;
+
+/// A proposed split.
+#[derive(Clone, Debug)]
+pub struct SplitCandidate {
+    pub condition: Condition,
+    pub gain: f64,
+    pub missing_to_positive: bool,
+}
+
+/// Numerical splitter selection.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NumericalSplit {
+    /// Sort the node's values at each node (simple, good for deep trees).
+    ExactInSort,
+    /// Reuse a global per-feature sort (good for top/shallow nodes).
+    Presorted,
+    /// Per-node dynamic choice between the two (§2.3).
+    Auto,
+    /// LightGBM-style quantile histogram (approximate, fast).
+    Histogram { bins: usize },
+}
+
+/// Categorical splitter selection (§3.8).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CategoricalSplit {
+    /// Exact one-vs-rest ordering trick (Fisher/Breiman; LightGBM-like).
+    Cart,
+    /// Random set sampling (Breiman's random projections).
+    Random { trials: usize },
+    /// One category vs rest (XGBoost/scikit-learn one-hot emulation).
+    OneHot,
+}
+
+/// Axis handling for numerical features.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SplitAxis {
+    AxisAligned,
+    /// Sparse oblique projections (Tomita et al.; benchmark_rank1@v1).
+    SparseOblique { num_projections_exponent: f64, normalization: ObliqueNormalization },
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ObliqueNormalization {
+    None,
+    /// Weights scaled by 1/(max-min) of the node (benchmark hp default).
+    MinMax,
+    /// Weights scaled by 1/std of the node.
+    StandardDeviation,
+}
+
+/// Splitter configuration, shared by all tree learners.
+#[derive(Clone, Debug)]
+pub struct SplitterConfig {
+    pub numerical: NumericalSplit,
+    pub categorical: CategoricalSplit,
+    pub axis: SplitAxis,
+    pub min_examples: usize,
+}
+
+impl Default for SplitterConfig {
+    fn default() -> Self {
+        SplitterConfig {
+            numerical: NumericalSplit::ExactInSort,
+            categorical: CategoricalSplit::Cart,
+            axis: SplitAxis::AxisAligned,
+            min_examples: 5,
+        }
+    }
+}
+
+/// Per-training caches: lazily built global sort orders and histogram bin
+/// assignments, plus node-membership scratch (epoch-stamped to avoid
+/// clearing).
+pub struct TrainingCache {
+    /// Per column: rows sorted by value, missing rows excluded.
+    sorted: Vec<Option<Vec<u32>>>,
+    /// Per column: (bin upper edges, per-row bin index).
+    binned: Vec<Option<(Vec<f32>, Vec<u16>)>>,
+    /// Node membership stamp per row.
+    member_epoch: Vec<u32>,
+    epoch: u32,
+    num_rows: usize,
+}
+
+impl TrainingCache {
+    pub fn new(ds: &Dataset) -> TrainingCache {
+        TrainingCache {
+            sorted: vec![None; ds.num_columns()],
+            binned: vec![None; ds.num_columns()],
+            member_epoch: vec![0; ds.num_rows()],
+            epoch: 0,
+            num_rows: ds.num_rows(),
+        }
+    }
+
+    /// Marks `rows` as the current node; returns the epoch token.
+    fn mark_members(&mut self, rows: &[u32]) -> u32 {
+        self.epoch += 1;
+        for &r in rows {
+            self.member_epoch[r as usize] = self.epoch;
+        }
+        self.epoch
+    }
+
+    #[inline]
+    fn is_member(&self, row: u32, epoch: u32) -> bool {
+        self.member_epoch[row as usize] == epoch
+    }
+
+    /// Global sort order of a numerical column (built on first use).
+    fn sorted_order(&mut self, ds: &Dataset, col: usize) -> &[u32] {
+        if self.sorted[col].is_none() {
+            let values = ds.columns[col].as_numerical().expect("presort on non-numerical");
+            let mut idx: Vec<u32> =
+                (0..values.len() as u32).filter(|&r| !values[r as usize].is_nan()).collect();
+            idx.sort_by(|&a, &b| {
+                values[a as usize].partial_cmp(&values[b as usize]).unwrap()
+            });
+            self.sorted[col] = Some(idx);
+        }
+        self.sorted[col].as_ref().unwrap()
+    }
+
+    /// Histogram binning of a numerical column (built on first use).
+    fn binned_column(&mut self, ds: &Dataset, col: usize, bins: usize) -> &(Vec<f32>, Vec<u16>) {
+        if self.binned[col].is_none() {
+            let values = ds.columns[col].as_numerical().expect("binning non-numerical");
+            let mut sorted: Vec<f32> =
+                values.iter().copied().filter(|v| !v.is_nan()).collect();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mut edges = Vec::with_capacity(bins);
+            if !sorted.is_empty() {
+                for b in 1..bins {
+                    let pos = b * (sorted.len() - 1) / bins;
+                    let e = sorted[pos];
+                    if edges.last().map(|&l| e > l).unwrap_or(true) {
+                        edges.push(e);
+                    }
+                }
+            }
+            // Edge semantics: bin i = values <= edges[i]; last bin = rest.
+            let bin_of = |v: f32| -> u16 {
+                match edges.binary_search_by(|e| e.partial_cmp(&v).unwrap()) {
+                    Ok(i) => i as u16,
+                    Err(i) => i as u16,
+                }
+            };
+            let assigned: Vec<u16> = values
+                .iter()
+                .map(|&v| if v.is_nan() { u16::MAX } else { bin_of(v) })
+                .collect();
+            self.binned[col] = Some((edges, assigned));
+        }
+        self.binned[col].as_ref().unwrap()
+    }
+}
+
+/// Finds the best split over the candidate columns.
+///
+/// `rows` are the examples in the node (duplicates allowed under
+/// bootstrap); `candidates` are column indices to consider.
+#[allow(clippy::too_many_arguments)]
+pub fn find_best_split(
+    ds: &Dataset,
+    rows: &[u32],
+    labels: &Labels,
+    candidates: &[usize],
+    cfg: &SplitterConfig,
+    cache: &mut TrainingCache,
+    rng: &mut Rng,
+) -> Option<SplitCandidate> {
+    let mut best: Option<SplitCandidate> = None;
+    let mut consider = |cand: Option<SplitCandidate>, best: &mut Option<SplitCandidate>| {
+        if let Some(c) = cand {
+            if c.gain > 1e-12 && best.as_ref().map(|b| c.gain > b.gain).unwrap_or(true) {
+                *best = Some(c);
+            }
+        }
+    };
+
+    let oblique = matches!(cfg.axis, SplitAxis::SparseOblique { .. });
+    let mut numerical_candidates = Vec::new();
+    for &col in candidates {
+        match ds.spec.columns[col].semantic {
+            FeatureSemantic::Numerical => {
+                if oblique {
+                    numerical_candidates.push(col);
+                } else {
+                    consider(
+                        numerical::split_numerical(ds, col, rows, labels, cfg, cache),
+                        &mut best,
+                    );
+                }
+            }
+            FeatureSemantic::Categorical => {
+                consider(
+                    categorical::split_categorical(ds, col, rows, labels, cfg, rng),
+                    &mut best,
+                );
+            }
+            FeatureSemantic::Boolean => {
+                consider(categorical::split_boolean(ds, col, rows, labels, cfg), &mut best);
+            }
+            FeatureSemantic::CategoricalSet => {
+                consider(
+                    categorical::split_categorical_set(ds, col, rows, labels, cfg),
+                    &mut best,
+                );
+            }
+        }
+    }
+    if oblique && !numerical_candidates.is_empty() {
+        if let SplitAxis::SparseOblique { num_projections_exponent, normalization } = cfg.axis {
+            consider(
+                oblique::split_oblique(
+                    ds,
+                    &numerical_candidates,
+                    rows,
+                    labels,
+                    cfg,
+                    num_projections_exponent,
+                    normalization,
+                    rng,
+                ),
+                &mut best,
+            );
+        }
+    }
+    best
+}
+
+/// Partitions `rows` into (positive, negative) according to a condition,
+/// applying the missing policy.
+pub fn partition_rows(
+    ds: &Dataset,
+    rows: &[u32],
+    condition: &Condition,
+    missing_to_positive: bool,
+) -> (Vec<u32>, Vec<u32>) {
+    let mut pos = Vec::new();
+    let mut neg = Vec::new();
+    for &r in rows {
+        let goes_pos =
+            condition.evaluate_ds(ds, r as usize).unwrap_or(missing_to_positive);
+        if goes_pos {
+            pos.push(r);
+        } else {
+            neg.push(r);
+        }
+    }
+    (pos, neg)
+}
+
+/// Helper used by the numerical splitters: scan sorted (value, row) pairs,
+/// evaluating every distinct-value boundary. Missing-value examples follow
+/// the node mean (local imputation, §3.4).
+pub(crate) struct ScanResult {
+    pub threshold: f32,
+    pub gain: f64,
+    pub missing_to_positive: bool,
+}
+
+pub(crate) fn scan_sorted_pairs(
+    pairs: &[(f32, u32)],
+    missing_rows: &[u32],
+    labels: &Labels,
+    min_examples: usize,
+) -> Option<ScanResult> {
+    let n = pairs.len();
+    if n < 2 * min_examples.max(1) {
+        return None;
+    }
+    // Node accumulators: all non-missing start on the positive (>=) side.
+    let mut left = labels.new_acc();
+    let mut right = labels.new_acc();
+    for &(_, r) in pairs {
+        right.add(labels, r as usize);
+    }
+    let mut miss = labels.new_acc();
+    for &r in missing_rows {
+        miss.add(labels, r as usize);
+    }
+    let has_missing = miss.count() > 0.0;
+    // Mean of the feature over the node: where missing values impute.
+    let mean = pairs.iter().map(|&(v, _)| v as f64).sum::<f64>() / n as f64;
+
+    let mut parent = right.clone();
+    parent.merge(&miss);
+
+    let mut best: Option<ScanResult> = None;
+    for i in 0..n - 1 {
+        let (v, r) = pairs[i];
+        left.add(labels, r as usize);
+        right.remove(labels, r as usize);
+        let next_v = pairs[i + 1].0;
+        if next_v <= v {
+            continue; // not a boundary between distinct values
+        }
+        let n_left = i + 1;
+        let n_right = n - n_left;
+        if n_left < min_examples || n_right < min_examples {
+            continue;
+        }
+        // Threshold at the midpoint (condition is x >= t, so the right
+        // block is positive).
+        let threshold = v + (next_v - v) / 2.0;
+        let missing_to_positive = (mean as f32) >= threshold;
+        let gain = if has_missing {
+            // Merge missing into the side it would impute to.
+            if missing_to_positive {
+                let mut r2 = right.clone();
+                r2.merge(&miss);
+                score::ScoreAcc::gain(&parent, &left, &r2, labels)
+            } else {
+                let mut l2 = left.clone();
+                l2.merge(&miss);
+                score::ScoreAcc::gain(&parent, &l2, &right, labels)
+            }
+        } else {
+            score::ScoreAcc::gain(&parent, &left, &right, labels)
+        };
+        if best.as_ref().map(|b| gain > b.gain).unwrap_or(true) {
+            best = Some(ScanResult { threshold, gain, missing_to_positive });
+        }
+    }
+    best
+}
+
+/// Collects the non-missing (value, row) pairs and missing rows of a
+/// numerical column restricted to `rows`.
+pub(crate) fn collect_numerical(
+    ds: &Dataset,
+    col: usize,
+    rows: &[u32],
+) -> (Vec<(f32, u32)>, Vec<u32>) {
+    let values = match &ds.columns[col] {
+        ColumnData::Numerical(v) => v,
+        _ => panic!("collect_numerical on non-numerical column"),
+    };
+    let mut pairs = Vec::with_capacity(rows.len());
+    let mut missing = Vec::new();
+    for &r in rows {
+        let v = values[r as usize];
+        if v.is_nan() {
+            missing.push(r);
+        } else {
+            pairs.push((v, r));
+        }
+    }
+    (pairs, missing)
+}

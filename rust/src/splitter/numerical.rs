@@ -1,0 +1,340 @@
+//! Numerical feature splitters: exact in-sorting, exact pre-sorted, the
+//! per-node automatic choice between them, and approximate histogram
+//! splitting (§3.8, §2.3).
+
+use super::score::{Labels, ScoreAcc};
+use super::{
+    collect_numerical, scan_sorted_pairs, NumericalSplit, SplitCandidate, SplitterConfig,
+    TrainingCache,
+};
+use crate::dataset::Dataset;
+use crate::model::tree::Condition;
+
+/// Dispatches to the configured numerical splitter.
+pub fn split_numerical(
+    ds: &Dataset,
+    col: usize,
+    rows: &[u32],
+    labels: &Labels,
+    cfg: &SplitterConfig,
+    cache: &mut TrainingCache,
+) -> Option<SplitCandidate> {
+    match cfg.numerical {
+        NumericalSplit::ExactInSort => split_insort(ds, col, rows, labels, cfg),
+        NumericalSplit::Presorted => split_presorted(ds, col, rows, labels, cfg, cache),
+        NumericalSplit::Auto => {
+            // In-sorting costs n·log n on node size n; pre-sorting costs a
+            // full pass over all N rows. Pick the cheaper one per node —
+            // the dynamic-choice behaviour §2.3 attributes to modularity.
+            let n = rows.len() as f64;
+            if n * n.log2().max(1.0) <= cache.num_rows as f64 {
+                split_insort(ds, col, rows, labels, cfg)
+            } else {
+                split_presorted(ds, col, rows, labels, cfg, cache)
+            }
+        }
+        NumericalSplit::Histogram { bins } => {
+            split_histogram(ds, col, rows, labels, cfg, cache, bins)
+        }
+    }
+}
+
+/// Exact splitter, in-sorting approach: sort the node's feature values.
+pub fn split_insort(
+    ds: &Dataset,
+    col: usize,
+    rows: &[u32],
+    labels: &Labels,
+    cfg: &SplitterConfig,
+) -> Option<SplitCandidate> {
+    let (mut pairs, missing) = collect_numerical(ds, col, rows);
+    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    scan_sorted_pairs(&pairs, &missing, labels, cfg.min_examples).map(|r| SplitCandidate {
+        condition: Condition::Higher { attr: col, threshold: r.threshold },
+        gain: r.gain,
+        missing_to_positive: r.missing_to_positive,
+    })
+}
+
+/// Exact splitter, pre-sorting approach: reuse the global sort order of the
+/// column and filter it down to the node's rows.
+pub fn split_presorted(
+    ds: &Dataset,
+    col: usize,
+    rows: &[u32],
+    labels: &Labels,
+    cfg: &SplitterConfig,
+    cache: &mut TrainingCache,
+) -> Option<SplitCandidate> {
+    // Duplicated rows (bootstrap) need multiplicity, which membership
+    // stamps cannot express; fall back to in-sorting in that case. The RF
+    // learner does not use presorting for exactly this reason.
+    let epoch = cache.mark_members(rows);
+    if rows.iter().any(|&r| !cache.is_member(r, epoch)) {
+        return split_insort(ds, col, rows, labels, cfg);
+    }
+    let values = ds.columns[col].as_numerical().expect("numerical column");
+    let order = cache.sorted_order(ds, col).to_vec();
+    let mut pairs = Vec::with_capacity(rows.len());
+    for r in order {
+        if cache.is_member(r, epoch) {
+            pairs.push((values[r as usize], r));
+        }
+    }
+    let missing: Vec<u32> =
+        rows.iter().copied().filter(|&r| values[r as usize].is_nan()).collect();
+    scan_sorted_pairs(&pairs, &missing, labels, cfg.min_examples).map(|r| SplitCandidate {
+        condition: Condition::Higher { attr: col, threshold: r.threshold },
+        gain: r.gain,
+        missing_to_positive: r.missing_to_positive,
+    })
+}
+
+/// Approximate histogram splitter (LightGBM-style): bucket values into
+/// quantile bins once, then scan per-bin statistics per node.
+pub fn split_histogram(
+    ds: &Dataset,
+    col: usize,
+    rows: &[u32],
+    labels: &Labels,
+    cfg: &SplitterConfig,
+    cache: &mut TrainingCache,
+    bins: usize,
+) -> Option<SplitCandidate> {
+    let (edges, assignment) = cache.binned_column(ds, col, bins).clone();
+    if edges.is_empty() {
+        return None;
+    }
+    let num_bins = edges.len() + 1;
+    let mut accs: Vec<ScoreAcc> = (0..num_bins).map(|_| labels.new_acc()).collect();
+    let mut bin_counts = vec![0usize; num_bins];
+    let mut miss = labels.new_acc();
+    let values = ds.columns[col].as_numerical().expect("numerical column");
+    let mut sum = 0.0f64;
+    let mut n_nonmissing = 0usize;
+    for &r in rows {
+        let b = assignment[r as usize];
+        if b == u16::MAX {
+            miss.add(labels, r as usize);
+        } else {
+            accs[b as usize].add(labels, r as usize);
+            bin_counts[b as usize] += 1;
+            sum += values[r as usize] as f64;
+            n_nonmissing += 1;
+        }
+    }
+    if n_nonmissing < 2 * cfg.min_examples.max(1) {
+        return None;
+    }
+    let mean = (sum / n_nonmissing as f64) as f32;
+    let has_missing = miss.count() > 0.0;
+
+    let mut parent = labels.new_acc();
+    for a in &accs {
+        parent.merge(a);
+    }
+    parent.merge(&miss);
+
+    // Suffix accumulators: suffix[b] = union of bins b..num_bins, computed
+    // once so the scan is O(bins), not O(bins^2).
+    let mut suffix: Vec<ScoreAcc> = Vec::with_capacity(num_bins + 1);
+    suffix.push(labels.new_acc());
+    for a in accs.iter().rev() {
+        let mut next = suffix.last().unwrap().clone();
+        next.merge(a);
+        suffix.push(next);
+    }
+    suffix.reverse(); // suffix[b] now covers bins b..
+
+    // Scan: left = bins 0..=b (values <= edges[b]), threshold just above
+    // edge b. Condition is x >= t, so left is the negative branch.
+    let mut left = labels.new_acc();
+    let mut n_left = 0usize;
+    let mut best: Option<SplitCandidate> = None;
+    for b in 0..num_bins - 1 {
+        left.merge(&accs[b]);
+        n_left += bin_counts[b];
+        let n_right = n_nonmissing - n_left;
+        if n_left < cfg.min_examples || n_right < cfg.min_examples {
+            continue;
+        }
+        let threshold = next_up(edges[b]);
+        let missing_to_positive = mean >= threshold;
+        let gain = if has_missing {
+            if missing_to_positive {
+                let mut r2 = suffix[b + 1].clone();
+                r2.merge(&miss);
+                ScoreAcc::gain(&parent, &left, &r2, labels)
+            } else {
+                let mut l2 = left.clone();
+                l2.merge(&miss);
+                ScoreAcc::gain(&parent, &l2, &suffix[b + 1], labels)
+            }
+        } else {
+            ScoreAcc::gain(&parent, &left, &suffix[b + 1], labels)
+        };
+        if gain > best.as_ref().map(|b| b.gain).unwrap_or(0.0) {
+            best = Some(SplitCandidate {
+                condition: Condition::Higher { attr: col, threshold },
+                gain,
+                missing_to_positive,
+            });
+        }
+    }
+    best
+}
+
+/// Smallest f32 strictly greater than x (threshold "just above the edge").
+fn next_up(x: f32) -> f32 {
+    if x.is_nan() || x == f32::INFINITY {
+        return x;
+    }
+    let bits = x.to_bits();
+    let next = if x >= 0.0 { bits + 1 } else { bits - 1 };
+    f32::from_bits(next)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::dataspec::{ColumnSpec, DataSpec};
+    use crate::dataset::ColumnData;
+    use crate::utils::rng::Rng;
+
+    fn ds_with(values: Vec<f32>) -> Dataset {
+        let spec = DataSpec { columns: vec![ColumnSpec::numerical("x")] };
+        Dataset::new(spec, vec![ColumnData::Numerical(values)]).unwrap()
+    }
+
+    fn cfg() -> SplitterConfig {
+        SplitterConfig { min_examples: 1, ..Default::default() }
+    }
+
+    #[test]
+    fn insort_finds_obvious_boundary() {
+        let ds = ds_with(vec![1.0, 2.0, 3.0, 10.0, 11.0, 12.0]);
+        let labels_data = vec![0u32, 0, 0, 1, 1, 1];
+        let labels = Labels::Classification { labels: &labels_data, num_classes: 2 };
+        let rows: Vec<u32> = (0..6).collect();
+        let c = split_insort(&ds, 0, &rows, &labels, &cfg()).unwrap();
+        match c.condition {
+            Condition::Higher { attr, threshold } => {
+                assert_eq!(attr, 0);
+                assert!((threshold - 6.5).abs() < 1e-6, "threshold {threshold}");
+            }
+            _ => panic!("wrong condition"),
+        }
+        assert!(c.gain > 0.0);
+    }
+
+    #[test]
+    fn presorted_matches_insort() {
+        let mut rng = Rng::seed_from_u64(5);
+        for _ in 0..20 {
+            let n = 30 + rng.uniform_usize(50);
+            let values: Vec<f32> =
+                (0..n).map(|_| rng.uniform_range(-5.0, 5.0) as f32).collect();
+            let labels_data: Vec<u32> =
+                values.iter().map(|&v| (v > 0.0) as u32 ^ (rng.bernoulli(0.1) as u32)).collect();
+            let ds = ds_with(values);
+            let labels = Labels::Classification { labels: &labels_data, num_classes: 2 };
+            let rows: Vec<u32> = (0..n as u32).filter(|r| r % 3 != 0).collect();
+            let mut cache = TrainingCache::new(&ds);
+            let a = split_insort(&ds, 0, &rows, &labels, &cfg());
+            let b = split_presorted(&ds, 0, &rows, &labels, &cfg(), &mut cache);
+            match (a, b) {
+                (Some(a), Some(b)) => {
+                    assert!((a.gain - b.gain).abs() < 1e-9, "{} vs {}", a.gain, b.gain);
+                    match (&a.condition, &b.condition) {
+                        (
+                            Condition::Higher { threshold: ta, .. },
+                            Condition::Higher { threshold: tb, .. },
+                        ) => assert_eq!(ta, tb),
+                        _ => panic!(),
+                    }
+                }
+                (None, None) => {}
+                (a, b) => panic!("mismatch: {a:?} vs {b:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_close_to_exact_on_separable() {
+        let n = 200;
+        let mut rng = Rng::seed_from_u64(9);
+        let values: Vec<f32> = (0..n).map(|_| rng.uniform_range(0.0, 1.0) as f32).collect();
+        let labels_data: Vec<u32> = values.iter().map(|&v| (v > 0.6) as u32).collect();
+        let ds = ds_with(values);
+        let labels = Labels::Classification { labels: &labels_data, num_classes: 2 };
+        let rows: Vec<u32> = (0..n as u32).collect();
+        let mut cache = TrainingCache::new(&ds);
+        let c = split_histogram(&ds, 0, &rows, &labels, &cfg(), &mut cache, 64).unwrap();
+        match c.condition {
+            Condition::Higher { threshold, .. } => {
+                assert!((threshold - 0.6).abs() < 0.05, "threshold {threshold}");
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn missing_values_follow_mean() {
+        // Mean is in the high block, so missing should go positive.
+        let ds = ds_with(vec![1.0, 1.5, 100.0, 101.0, 102.0, f32::NAN]);
+        let labels_data = vec![0u32, 0, 1, 1, 1, 1];
+        let labels = Labels::Classification { labels: &labels_data, num_classes: 2 };
+        let rows: Vec<u32> = (0..6).collect();
+        let c = split_insort(&ds, 0, &rows, &labels, &cfg()).unwrap();
+        assert!(c.missing_to_positive);
+    }
+
+    #[test]
+    fn constant_feature_yields_none() {
+        let ds = ds_with(vec![3.0; 10]);
+        let labels_data = vec![0u32, 1, 0, 1, 0, 1, 0, 1, 0, 1];
+        let labels = Labels::Classification { labels: &labels_data, num_classes: 2 };
+        let rows: Vec<u32> = (0..10).collect();
+        assert!(split_insort(&ds, 0, &rows, &labels, &cfg()).is_none());
+    }
+
+    #[test]
+    fn min_examples_respected() {
+        let ds = ds_with(vec![1.0, 2.0, 3.0, 4.0]);
+        let labels_data = vec![0u32, 1, 1, 1];
+        let labels = Labels::Classification { labels: &labels_data, num_classes: 2 };
+        let rows: Vec<u32> = (0..4).collect();
+        let mut c = cfg();
+        c.min_examples = 2;
+        let best = split_insort(&ds, 0, &rows, &labels, &c).unwrap();
+        // The only legal boundary is 2|2.
+        match best.condition {
+            Condition::Higher { threshold, .. } => {
+                assert!((threshold - 2.5).abs() < 1e-6)
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn next_up_is_strictly_greater() {
+        for x in [0.0f32, 1.0, -1.0, 12345.678, -0.0001] {
+            assert!(next_up(x) > x);
+        }
+    }
+
+    #[test]
+    fn regression_split() {
+        let ds = ds_with(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let targets = vec![1.0f32, 1.1, 0.9, 5.0, 5.1, 4.9];
+        let labels = Labels::Regression { targets: &targets };
+        let rows: Vec<u32> = (0..6).collect();
+        let c = split_insort(&ds, 0, &rows, &labels, &cfg()).unwrap();
+        match c.condition {
+            Condition::Higher { threshold, .. } => {
+                assert!((threshold - 3.5).abs() < 1e-6)
+            }
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! Sparse oblique splits (Tomita et al. 2020, "Sparse Projection Oblique
+//! Randomer Forests") — `split_axis: SPARSE_OBLIQUE` of the paper's
+//! benchmark_rank1@v1 template (§3.11, Appendix C.1).
+//!
+//! Each candidate is a sparse ±1 projection over a random subset of the
+//! numerical features, optionally normalized per node (MIN_MAX), scanned
+//! exactly like a numerical feature. The normalization is folded into the
+//! stored weights so inference needs no extra state.
+
+use super::score::Labels;
+use super::{scan_sorted_pairs, ObliqueNormalization, SplitCandidate, SplitterConfig};
+use crate::dataset::{ColumnData, Dataset};
+use crate::model::tree::Condition;
+use crate::utils::rng::Rng;
+
+/// Finds the best sparse oblique split over `num_cols` numerical columns.
+#[allow(clippy::too_many_arguments)]
+pub fn split_oblique(
+    ds: &Dataset,
+    num_cols: &[usize],
+    rows: &[u32],
+    labels: &Labels,
+    cfg: &SplitterConfig,
+    num_projections_exponent: f64,
+    normalization: ObliqueNormalization,
+    rng: &mut Rng,
+) -> Option<SplitCandidate> {
+    let p = num_cols.len();
+    if p == 0 || rows.len() < 2 * cfg.min_examples.max(1) {
+        return None;
+    }
+    // num_projections = ceil(p ^ exponent), clamped (Tomita et al. §5;
+    // exponent 1 in benchmark_rank1@v1).
+    let num_projections = ((p as f64).powf(num_projections_exponent).ceil() as usize)
+        .clamp(1, 200);
+
+    let mut best: Option<SplitCandidate> = None;
+    let mut projected: Vec<(f32, u32)> = Vec::with_capacity(rows.len());
+    for _ in 0..num_projections {
+        // Sparse projection: expected 2-3 nonzero coordinates.
+        let nnz = 1 + rng.uniform_usize(3.min(p));
+        let mut attrs: Vec<usize> = rng
+            .sample_without_replacement(p, nnz)
+            .into_iter()
+            .map(|i| num_cols[i])
+            .collect();
+        attrs.sort_unstable();
+        // Raw ±1 weights, then fold in per-node normalization.
+        let mut weights: Vec<f32> = (0..attrs.len())
+            .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+            .collect();
+        match normalization {
+            ObliqueNormalization::None => {}
+            ObliqueNormalization::MinMax => {
+                for (w, &a) in weights.iter_mut().zip(&attrs) {
+                    let (lo, hi) = node_min_max(ds, a, rows);
+                    let range = hi - lo;
+                    if range > 1e-12 {
+                        *w /= range;
+                    }
+                }
+            }
+            ObliqueNormalization::StandardDeviation => {
+                for (w, &a) in weights.iter_mut().zip(&attrs) {
+                    let std = node_std(ds, a, rows);
+                    if std > 1e-12 {
+                        *w /= std;
+                    }
+                }
+            }
+        }
+        // Project. Missing coordinates contribute 0 (the same convention
+        // Condition::Oblique uses at inference).
+        projected.clear();
+        for &r in rows {
+            let mut acc = 0.0f32;
+            for (&a, &w) in attrs.iter().zip(&weights) {
+                if let ColumnData::Numerical(v) = &ds.columns[a] {
+                    let x = v[r as usize];
+                    if !x.is_nan() {
+                        acc += w * x;
+                    }
+                }
+            }
+            projected.push((acc, r));
+        }
+        projected.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        if let Some(scan) = scan_sorted_pairs(&projected, &[], labels, cfg.min_examples) {
+            if scan.gain > best.as_ref().map(|b| b.gain).unwrap_or(0.0) {
+                best = Some(SplitCandidate {
+                    condition: Condition::Oblique {
+                        attrs: attrs.clone(),
+                        weights: weights.clone(),
+                        threshold: scan.threshold,
+                    },
+                    gain: scan.gain,
+                    missing_to_positive: scan.missing_to_positive,
+                });
+            }
+        }
+    }
+    best
+}
+
+fn node_min_max(ds: &Dataset, col: usize, rows: &[u32]) -> (f32, f32) {
+    let values = ds.columns[col].as_numerical().expect("numerical");
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &r in rows {
+        let v = values[r as usize];
+        if !v.is_nan() {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    if lo > hi {
+        (0.0, 0.0)
+    } else {
+        (lo, hi)
+    }
+}
+
+fn node_std(ds: &Dataset, col: usize, rows: &[u32]) -> f32 {
+    let values = ds.columns[col].as_numerical().expect("numerical");
+    let mut m = crate::utils::stats::Moments::new();
+    for &r in rows {
+        let v = values[r as usize];
+        if !v.is_nan() {
+            m.add(v as f64);
+        }
+    }
+    m.std() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::dataspec::{ColumnSpec, DataSpec};
+
+    fn two_col_ds(x0: Vec<f32>, x1: Vec<f32>) -> Dataset {
+        let spec = DataSpec {
+            columns: vec![ColumnSpec::numerical("x0"), ColumnSpec::numerical("x1")],
+        };
+        Dataset::new(spec, vec![ColumnData::Numerical(x0), ColumnData::Numerical(x1)])
+            .unwrap()
+    }
+
+    #[test]
+    fn oblique_separates_diagonal_boundary() {
+        // Class = (x0 + x1 > 0): axis-aligned needs depth, oblique one cut.
+        let mut rng = Rng::seed_from_u64(11);
+        let n = 200;
+        let x0: Vec<f32> = (0..n).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
+        let x1: Vec<f32> = (0..n).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
+        let labels_data: Vec<u32> =
+            x0.iter().zip(&x1).map(|(&a, &b)| (a + b > 0.0) as u32).collect();
+        let ds = two_col_ds(x0, x1);
+        let labels = Labels::Classification { labels: &labels_data, num_classes: 2 };
+        let rows: Vec<u32> = (0..n as u32).collect();
+        let cfg = SplitterConfig { min_examples: 5, ..Default::default() };
+        let cand = split_oblique(
+            &ds,
+            &[0, 1],
+            &rows,
+            &labels,
+            &cfg,
+            2.0, // enough projections to find the diagonal
+            ObliqueNormalization::MinMax,
+            &mut Rng::seed_from_u64(3),
+        )
+        .unwrap();
+        // The perfect diagonal yields near-total gain: n*ln2 is the max.
+        assert!(
+            cand.gain > 0.5 * n as f64 * std::f64::consts::LN_2,
+            "gain {}",
+            cand.gain
+        );
+        match &cand.condition {
+            Condition::Oblique { attrs, weights, .. } => {
+                assert!(!attrs.is_empty());
+                assert_eq!(attrs.len(), weights.len());
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn min_max_stats() {
+        let ds = two_col_ds(vec![1.0, 5.0, f32::NAN, 3.0], vec![0.0; 4]);
+        let rows: Vec<u32> = (0..4).collect();
+        assert_eq!(node_min_max(&ds, 0, &rows), (1.0, 5.0));
+        assert!(node_std(&ds, 0, &rows) > 0.0);
+    }
+
+    #[test]
+    fn empty_feature_list_yields_none() {
+        let ds = two_col_ds(vec![1.0, 2.0], vec![3.0, 4.0]);
+        let labels_data = vec![0u32, 1];
+        let labels = Labels::Classification { labels: &labels_data, num_classes: 2 };
+        let cfg = SplitterConfig::default();
+        assert!(split_oblique(
+            &ds,
+            &[],
+            &[0, 1],
+            &labels,
+            &cfg,
+            1.0,
+            ObliqueNormalization::None,
+            &mut Rng::seed_from_u64(1)
+        )
+        .is_none());
+    }
+}

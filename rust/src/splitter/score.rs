@@ -1,0 +1,404 @@
+//! Label access and split scoring.
+//!
+//! Splitters are modular along two axes (§2.3): *feature type* (numerical,
+//! categorical, boolean, categorical-set — one module each) and *label type*
+//! (classification, regression, gradient pairs — this module). A label type
+//! is a [`Labels`] view plus a [`ScoreAcc`] accumulator; every feature-type
+//! splitter works with every label type through this interface, which is
+//! exactly the code-reuse structure the paper describes for YDF's splitters.
+
+/// Borrowed view of the training targets.
+#[derive(Clone, Copy)]
+pub enum Labels<'a> {
+    /// Class index per example.
+    Classification { labels: &'a [u32], num_classes: usize },
+    /// Numerical target per example.
+    Regression { targets: &'a [f32] },
+    /// Gradient/hessian pair per example (GBT training). `use_hessian_gain`
+    /// selects between variance gain over -g (default, §C.1) and the
+    /// XGBoost-style G²/H gain.
+    Gradients { grad: &'a [f32], hess: &'a [f32], use_hessian_gain: bool, l1: f64, l2: f64 },
+}
+
+impl<'a> Labels<'a> {
+    pub fn new_acc(&self) -> ScoreAcc {
+        match self {
+            Labels::Classification { num_classes, .. } => {
+                ScoreAcc::Class { counts: vec![0.0; *num_classes], n: 0.0 }
+            }
+            Labels::Regression { .. } => ScoreAcc::Reg { sum: 0.0, sum_sq: 0.0, n: 0.0 },
+            Labels::Gradients { .. } => {
+                ScoreAcc::Grad { g: 0.0, h: 0.0, neg_g_sq: 0.0, n: 0.0 }
+            }
+        }
+    }
+
+    pub fn num_examples(&self) -> usize {
+        match self {
+            Labels::Classification { labels, .. } => labels.len(),
+            Labels::Regression { targets } => targets.len(),
+            Labels::Gradients { grad, .. } => grad.len(),
+        }
+    }
+}
+
+/// Incremental accumulator of label statistics for one side of a split.
+#[derive(Clone, Debug)]
+pub enum ScoreAcc {
+    Class { counts: Vec<f64>, n: f64 },
+    Reg { sum: f64, sum_sq: f64, n: f64 },
+    Grad { g: f64, h: f64, neg_g_sq: f64, n: f64 },
+}
+
+impl ScoreAcc {
+    #[inline]
+    pub fn add(&mut self, labels: &Labels, row: usize) {
+        match (self, labels) {
+            (ScoreAcc::Class { counts, n }, Labels::Classification { labels, .. }) => {
+                counts[labels[row] as usize] += 1.0;
+                *n += 1.0;
+            }
+            (ScoreAcc::Reg { sum, sum_sq, n }, Labels::Regression { targets }) => {
+                let y = targets[row] as f64;
+                *sum += y;
+                *sum_sq += y * y;
+                *n += 1.0;
+            }
+            (ScoreAcc::Grad { g, h, neg_g_sq, n }, Labels::Gradients { grad, hess, .. }) => {
+                let gi = grad[row] as f64;
+                *g += gi;
+                *h += hess[row] as f64;
+                *neg_g_sq += gi * gi;
+                *n += 1.0;
+            }
+            _ => unreachable!("accumulator/label type mismatch"),
+        }
+    }
+
+    #[inline]
+    pub fn remove(&mut self, labels: &Labels, row: usize) {
+        match (self, labels) {
+            (ScoreAcc::Class { counts, n }, Labels::Classification { labels, .. }) => {
+                counts[labels[row] as usize] -= 1.0;
+                *n -= 1.0;
+            }
+            (ScoreAcc::Reg { sum, sum_sq, n }, Labels::Regression { targets }) => {
+                let y = targets[row] as f64;
+                *sum -= y;
+                *sum_sq -= y * y;
+                *n -= 1.0;
+            }
+            (ScoreAcc::Grad { g, h, neg_g_sq, n }, Labels::Gradients { grad, hess, .. }) => {
+                let gi = grad[row] as f64;
+                *g -= gi;
+                *h -= hess[row] as f64;
+                *neg_g_sq -= gi * gi;
+                *n -= 1.0;
+            }
+            _ => unreachable!("accumulator/label type mismatch"),
+        }
+    }
+
+    /// Merges another accumulator of the same kind.
+    pub fn merge(&mut self, other: &ScoreAcc) {
+        match (self, other) {
+            (ScoreAcc::Class { counts, n }, ScoreAcc::Class { counts: c2, n: n2 }) => {
+                for (a, b) in counts.iter_mut().zip(c2) {
+                    *a += b;
+                }
+                *n += n2;
+            }
+            (
+                ScoreAcc::Reg { sum, sum_sq, n },
+                ScoreAcc::Reg { sum: s2, sum_sq: q2, n: n2 },
+            ) => {
+                *sum += s2;
+                *sum_sq += q2;
+                *n += n2;
+            }
+            (
+                ScoreAcc::Grad { g, h, neg_g_sq, n },
+                ScoreAcc::Grad { g: g2, h: h2, neg_g_sq: q2, n: n2 },
+            ) => {
+                *g += g2;
+                *h += h2;
+                *neg_g_sq += q2;
+                *n += n2;
+            }
+            _ => unreachable!("accumulator kind mismatch"),
+        }
+    }
+
+    pub fn count(&self) -> f64 {
+        match self {
+            ScoreAcc::Class { n, .. } | ScoreAcc::Reg { n, .. } | ScoreAcc::Grad { n, .. } => *n,
+        }
+    }
+
+    /// Node impurity × n (so gains are additive in examples).
+    fn weighted_impurity(&self, labels: &Labels) -> f64 {
+        match self {
+            ScoreAcc::Class { counts, n } => {
+                if *n <= 0.0 {
+                    return 0.0;
+                }
+                // Shannon entropy (information gain splits, YDF default).
+                let mut ent = 0.0;
+                for &c in counts {
+                    if c > 0.0 {
+                        let p = c / n;
+                        ent -= p * p.ln();
+                    }
+                }
+                ent * n
+            }
+            ScoreAcc::Reg { sum, sum_sq, n } => {
+                if *n <= 0.0 {
+                    return 0.0;
+                }
+                // Variance × n = SSE.
+                sum_sq - sum * sum / n
+            }
+            ScoreAcc::Grad { g, h, neg_g_sq, n } => {
+                if *n <= 0.0 {
+                    return 0.0;
+                }
+                if let Labels::Gradients { use_hessian_gain: true, l1, l2, .. } = labels {
+                    // Negated XGBoost leaf objective: -G'^2 / (H + λ2);
+                    // impurity form so gain = parent - children is positive.
+                    let gg = soft_threshold(*g, *l1);
+                    -(gg * gg) / (h + l2)
+                } else {
+                    // Variance of -g (Friedman residual-fitting).
+                    neg_g_sq - g * g / n
+                }
+            }
+        }
+    }
+
+    /// Split gain: impurity(parent) − impurity(left) − impurity(right).
+    pub fn gain(parent: &ScoreAcc, left: &ScoreAcc, right: &ScoreAcc, labels: &Labels) -> f64 {
+        parent.weighted_impurity(labels)
+            - left.weighted_impurity(labels)
+            - right.weighted_impurity(labels)
+    }
+
+    /// Leaf payload for this label type.
+    pub fn leaf_value(&self, labels: &Labels) -> Vec<f32> {
+        match self {
+            ScoreAcc::Class { counts, n } => {
+                if *n <= 0.0 {
+                    vec![0.0; counts.len()]
+                } else {
+                    counts.iter().map(|&c| (c / n) as f32).collect()
+                }
+            }
+            ScoreAcc::Reg { sum, n, .. } => {
+                vec![if *n > 0.0 { (sum / n) as f32 } else { 0.0 }]
+            }
+            ScoreAcc::Grad { g, h, .. } => {
+                if let Labels::Gradients { l1, l2, .. } = labels {
+                    let gg = soft_threshold(*g, *l1);
+                    vec![(-gg / (h + l2)).clamp(-1e4, 1e4) as f32]
+                } else {
+                    vec![0.0]
+                }
+            }
+        }
+    }
+
+    /// Mean target used to order categories in the CART categorical
+    /// splitter (Fisher 1958 / Breiman's exact trick for binary targets).
+    pub fn ordering_statistic(&self, labels: &Labels) -> f64 {
+        match self {
+            ScoreAcc::Class { counts, n } => {
+                // Probability of the globally most useful class: for binary
+                // this is exactly p(class 1), optimal ordering; for
+                // multiclass it is the standard one-vs-rest heuristic.
+                if *n <= 0.0 {
+                    0.0
+                } else {
+                    let _ = labels;
+                    counts.last().map(|&c| c / n).unwrap_or(0.0)
+                        + counts.get(1).map(|&c| c / n).unwrap_or(0.0)
+                }
+            }
+            ScoreAcc::Reg { sum, n, .. } => {
+                if *n > 0.0 {
+                    sum / n
+                } else {
+                    0.0
+                }
+            }
+            ScoreAcc::Grad { g, h, .. } => {
+                if *h > 0.0 {
+                    -g / h
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+}
+
+#[inline]
+fn soft_threshold(g: f64, l1: f64) -> f64 {
+    if l1 <= 0.0 {
+        g
+    } else if g > l1 {
+        g - l1
+    } else if g < -l1 {
+        g + l1
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classification_gain_perfect_split() {
+        let labels_data = vec![0u32, 0, 0, 0, 1, 1, 1, 1];
+        let labels = Labels::Classification { labels: &labels_data, num_classes: 2 };
+        let mut parent = labels.new_acc();
+        let mut left = labels.new_acc();
+        let mut right = labels.new_acc();
+        for i in 0..8 {
+            parent.add(&labels, i);
+            if i < 4 {
+                left.add(&labels, i);
+            } else {
+                right.add(&labels, i);
+            }
+        }
+        let g = ScoreAcc::gain(&parent, &left, &right, &labels);
+        // Perfect split: gain = n * ln 2.
+        assert!((g - 8.0 * std::f64::consts::LN_2).abs() < 1e-9, "{g}");
+    }
+
+    #[test]
+    fn classification_gain_useless_split_zero() {
+        let labels_data = vec![0u32, 1, 0, 1];
+        let labels = Labels::Classification { labels: &labels_data, num_classes: 2 };
+        let mut parent = labels.new_acc();
+        let mut left = labels.new_acc();
+        let mut right = labels.new_acc();
+        for i in 0..4 {
+            parent.add(&labels, i);
+            if i < 2 {
+                left.add(&labels, i);
+            } else {
+                right.add(&labels, i);
+            }
+        }
+        let g = ScoreAcc::gain(&parent, &left, &right, &labels);
+        assert!(g.abs() < 1e-9);
+    }
+
+    #[test]
+    fn regression_gain_is_sse_reduction() {
+        let targets = vec![1.0f32, 1.0, 5.0, 5.0];
+        let labels = Labels::Regression { targets: &targets };
+        let mut parent = labels.new_acc();
+        let mut left = labels.new_acc();
+        let mut right = labels.new_acc();
+        for i in 0..4 {
+            parent.add(&labels, i);
+            if i < 2 {
+                left.add(&labels, i);
+            } else {
+                right.add(&labels, i);
+            }
+        }
+        // Parent SSE = 4 * var = 16; children = 0.
+        let g = ScoreAcc::gain(&parent, &left, &right, &labels);
+        assert!((g - 16.0).abs() < 1e-9, "{g}");
+        assert_eq!(left.leaf_value(&labels), vec![1.0]);
+        assert_eq!(right.leaf_value(&labels), vec![5.0]);
+    }
+
+    #[test]
+    fn add_remove_is_inverse() {
+        let targets = vec![2.0f32, -1.0, 3.5];
+        let labels = Labels::Regression { targets: &targets };
+        let mut acc = labels.new_acc();
+        acc.add(&labels, 0);
+        acc.add(&labels, 1);
+        acc.add(&labels, 2);
+        acc.remove(&labels, 1);
+        acc.remove(&labels, 2);
+        assert_eq!(acc.leaf_value(&labels), vec![2.0]);
+        assert!((acc.count() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gradient_leaf_is_newton_step() {
+        let grad = vec![-1.0f32, -1.0, -1.0, -1.0];
+        let hess = vec![0.5f32, 0.5, 0.5, 0.5];
+        let labels =
+            Labels::Gradients { grad: &grad, hess: &hess, use_hessian_gain: false, l1: 0.0, l2: 0.0 };
+        let mut acc = labels.new_acc();
+        for i in 0..4 {
+            acc.add(&labels, i);
+        }
+        // -(Σg)/(Σh) = 4/2 = 2.
+        assert_eq!(acc.leaf_value(&labels), vec![2.0]);
+    }
+
+    #[test]
+    fn hessian_gain_prefers_separating_gradients() {
+        let grad = vec![-1.0f32, -1.0, 1.0, 1.0];
+        let hess = vec![1.0f32; 4];
+        let labels =
+            Labels::Gradients { grad: &grad, hess: &hess, use_hessian_gain: true, l1: 0.0, l2: 1.0 };
+        let mut parent = labels.new_acc();
+        let mut good_l = labels.new_acc();
+        let mut good_r = labels.new_acc();
+        let mut bad_l = labels.new_acc();
+        let mut bad_r = labels.new_acc();
+        for i in 0..4 {
+            parent.add(&labels, i);
+        }
+        good_l.add(&labels, 0);
+        good_l.add(&labels, 1);
+        good_r.add(&labels, 2);
+        good_r.add(&labels, 3);
+        bad_l.add(&labels, 0);
+        bad_l.add(&labels, 2);
+        bad_r.add(&labels, 1);
+        bad_r.add(&labels, 3);
+        let g_good = ScoreAcc::gain(&parent, &good_l, &good_r, &labels);
+        let g_bad = ScoreAcc::gain(&parent, &bad_l, &bad_r, &labels);
+        assert!(g_good > g_bad, "{g_good} vs {g_bad}");
+        assert!(g_good > 0.0);
+    }
+
+    #[test]
+    fn merge_matches_bulk_add() {
+        let labels_data = vec![0u32, 1, 1, 0, 1];
+        let labels = Labels::Classification { labels: &labels_data, num_classes: 2 };
+        let mut a = labels.new_acc();
+        let mut b = labels.new_acc();
+        let mut all = labels.new_acc();
+        for i in 0..5 {
+            all.add(&labels, i);
+            if i % 2 == 0 {
+                a.add(&labels, i);
+            } else {
+                b.add(&labels, i);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.leaf_value(&labels), all.leaf_value(&labels));
+    }
+
+    #[test]
+    fn l1_soft_threshold() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(2.0, 0.0), 2.0);
+    }
+}

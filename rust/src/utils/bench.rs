@@ -1,0 +1,175 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides wall-clock timing with warmup, repetition and simple stats, plus
+//! table rendering used by the `rust/benches/*` binaries that regenerate the
+//! paper's tables and figures.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+/// Times `f` for `iters` iterations after `warmup` iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    summarize(name, &times)
+}
+
+/// Times `f` once (for long-running cases such as whole training runs).
+pub fn bench_once<F: FnOnce()>(name: &str, f: F) -> BenchResult {
+    let t0 = Instant::now();
+    f();
+    let d = t0.elapsed();
+    summarize(name, &[d])
+}
+
+fn summarize(name: &str, times: &[Duration]) -> BenchResult {
+    let total: Duration = times.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters: times.len(),
+        mean: total / times.len() as u32,
+        min: *times.iter().min().unwrap(),
+        max: *times.iter().max().unwrap(),
+    }
+}
+
+/// Prevents the optimizer from discarding a value (std::hint::black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Fixed-width text table builder for bench/report output, mirroring the
+/// paper's table layouts.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(c);
+                for _ in c.chars().count()..width[i] {
+                    line.push(' ');
+                }
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header, &width));
+        out.push('\n');
+        let total: usize = width.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &width));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Renders a horizontal ASCII bar chart — used for the Figure 6 mean-rank
+/// plot and variable-importance displays (Appendix B.2 style).
+pub fn bar_chart(items: &[(String, f64)], max_width: usize) -> String {
+    let max_v = items.iter().map(|(_, v)| *v).fold(0.0f64, f64::max).max(1e-12);
+    let name_w = items.iter().map(|(n, _)| n.chars().count()).max().unwrap_or(0);
+    let mut out = String::new();
+    for (name, v) in items {
+        let bars = ((v / max_v) * max_width as f64).round() as usize;
+        out.push_str(&format!(
+            "{name:<name_w$} {v:>8.3} {}\n",
+            "#".repeat(bars.max(if *v > 0.0 { 1 } else { 0 }))
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 1, 3, || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert_eq!(r.iters, 3);
+        assert!(r.mean >= r.min && r.mean <= r.max);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["Learner", "training (s)", "inference (s)"]);
+        t.row(vec!["YDF GBT".into(), "39.99".into(), "0.108".into()]);
+        t.row(vec!["LGBM GBT (default)".into(), "4.91".into(), "0.061".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("Learner"));
+        assert!(lines[2].contains("39.99"));
+    }
+
+    #[test]
+    fn bar_chart_scales() {
+        let s = bar_chart(
+            &[("a".into(), 1.0), ("b".into(), 2.0)],
+            10,
+        );
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines[1].matches('#').count() == 10);
+        assert!(lines[0].matches('#').count() == 5);
+    }
+}

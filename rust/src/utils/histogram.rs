@@ -1,0 +1,127 @@
+//! Text histograms in the YDF report style (Appendix B.1/B.2):
+//!
+//! ```text
+//! [ 23, 25)  1   0.54%   0.54%
+//! [ 25, 27)  0   0.00%   0.54% #
+//! ```
+
+use crate::utils::stats::Moments;
+
+/// Computes and renders a fixed-bin-count histogram with count, percent and
+/// cumulative-percent columns plus a proportional bar, as in the paper's
+//  `show_model` output.
+pub struct TextHistogram {
+    pub moments: Moments,
+    values: Vec<f64>,
+}
+
+impl Default for TextHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TextHistogram {
+    pub fn new() -> Self {
+        TextHistogram { moments: Moments::new(), values: Vec::new() }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.moments.add(x);
+        self.values.push(x);
+    }
+
+    pub fn extend<I: IntoIterator<Item = f64>>(&mut self, xs: I) {
+        for x in xs {
+            self.add(x);
+        }
+    }
+
+    /// Renders with `bins` buckets and a `bar_width`-char max bar.
+    pub fn render(&self, bins: usize, bar_width: usize) -> String {
+        let n = self.values.len();
+        if n == 0 {
+            return "  (empty)\n".to_string();
+        }
+        let mut out = format!(
+            "Count: {} Average: {:.5} StdDev: {:.5}\nMin: {} Max: {} Ignored: 0\n----------------------------------------------\n",
+            self.moments.count(),
+            self.moments.mean(),
+            self.moments.std(),
+            fmt_num(self.moments.min()),
+            fmt_num(self.moments.max()),
+        );
+        let lo = self.moments.min();
+        let hi = self.moments.max();
+        let bins = bins.max(1);
+        let width = ((hi - lo) / bins as f64).max(f64::MIN_POSITIVE);
+        let mut counts = vec![0usize; bins];
+        for &v in &self.values {
+            let mut b = ((v - lo) / width) as usize;
+            if b >= bins {
+                b = bins - 1;
+            }
+            counts[b] += 1;
+        }
+        let max_count = counts.iter().copied().max().unwrap_or(1).max(1);
+        let mut cumulative = 0usize;
+        for (i, &c) in counts.iter().enumerate() {
+            cumulative += c;
+            let b_lo = lo + i as f64 * width;
+            let b_hi = if i + 1 == bins { hi } else { lo + (i + 1) as f64 * width };
+            let bracket = if i + 1 == bins { "]" } else { ")" };
+            let bar = "#".repeat((c * bar_width).div_ceil(max_count).min(bar_width));
+            out.push_str(&format!(
+                "[ {}, {}{} {} {:.2}% {:.2}% {}\n",
+                fmt_num(b_lo),
+                fmt_num(b_hi),
+                bracket,
+                c,
+                100.0 * c as f64 / n as f64,
+                100.0 * cumulative as f64 / n as f64,
+                bar
+            ));
+        }
+        out
+    }
+}
+
+fn fmt_num(x: f64) -> String {
+    if x == x.trunc() && x.abs() < 1e12 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_bins_and_percentages() {
+        let mut h = TextHistogram::new();
+        h.extend((0..100).map(|i| i as f64));
+        let s = h.render(10, 10);
+        assert!(s.contains("Count: 100"));
+        // 10 equal bins of 10 items each -> every line has 10.00%.
+        let bin_lines: Vec<&str> = s.lines().filter(|l| l.starts_with('[')).collect();
+        assert_eq!(bin_lines.len(), 10);
+        assert!(bin_lines.iter().all(|l| l.contains("10.00%")));
+        assert!(bin_lines.last().unwrap().contains("100.00%"));
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = TextHistogram::new();
+        assert!(h.render(5, 5).contains("empty"));
+    }
+
+    #[test]
+    fn single_value() {
+        let mut h = TextHistogram::new();
+        h.add(5.0);
+        let s = h.render(4, 4);
+        assert!(s.contains("Count: 1"));
+    }
+}

@@ -1,0 +1,14 @@
+//! Shared substrates: deterministic RNG, statistics, JSON, histograms,
+//! micro-benchmark harness, thread pool and property-testing helpers.
+//!
+//! The execution environment is offline (no crates.io), so these modules
+//! replace the usual `rand`/`serde_json`/`criterion`/`rayon`/`proptest`
+//! dependencies with small, well-tested implementations.
+
+pub mod bench;
+pub mod histogram;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,146 @@
+//! A small scoped thread pool (rayon is unavailable offline).
+//!
+//! Used by the Random Forest learner (per-tree parallelism), the distributed
+//! backend and the serving example. Work items are closures; `scope_map`
+//! offers the common "parallel map over indices" pattern.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Runs `f(i)` for `i in 0..n` across `threads` OS threads and returns the
+/// results in index order. Falls back to sequential execution when
+/// `threads <= 1` (the common case on this single-core testbed).
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let threads = threads.min(n);
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = f(i);
+                *results[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker did not produce a result"))
+        .collect()
+}
+
+/// Long-lived worker pool with explicit job submission; used by the
+/// distributed backend to model persistent training workers.
+pub struct WorkerPool {
+    senders: Vec<std::sync::mpsc::Sender<Job>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+impl WorkerPool {
+    pub fn new(workers: usize) -> WorkerPool {
+        let mut senders = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = std::sync::mpsc::channel::<Job>();
+            senders.push(tx);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("ydf-worker-{w}"))
+                    .spawn(move || {
+                        while let Ok(job) = rx.recv() {
+                            job();
+                        }
+                    })
+                    .expect("failed to spawn worker"),
+            );
+        }
+        WorkerPool { senders, handles }
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Submits a job to a specific worker (the feature-parallel algorithm
+    /// pins features to workers, so placement matters).
+    pub fn submit_to<F: FnOnce() + Send + 'static>(&self, worker: usize, f: F) {
+        self.senders[worker].send(Box::new(f)).expect("worker channel closed");
+    }
+
+    /// Runs `f(w)` on every worker and blocks until all complete.
+    pub fn broadcast<F>(&self, f: F)
+    where
+        F: Fn(usize) + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let (done_tx, done_rx) = std::sync::mpsc::channel::<()>();
+        for w in 0..self.senders.len() {
+            let f = Arc::clone(&f);
+            let done = done_tx.clone();
+            self.submit_to(w, move || {
+                f(w);
+                let _ = done.send(());
+            });
+        }
+        for _ in 0..self.senders.len() {
+            done_rx.recv().expect("worker died");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.senders.clear(); // close channels, letting workers exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(100, 4, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_sequential_fallback() {
+        let out = parallel_map(5, 1, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn worker_pool_broadcast_touches_all() {
+        let pool = WorkerPool::new(3);
+        static COUNT: AtomicU64 = AtomicU64::new(0);
+        pool.broadcast(|_w| {
+            COUNT.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(COUNT.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn worker_pool_submit_to_runs() {
+        let pool = WorkerPool::new(2);
+        let (tx, rx) = std::sync::mpsc::channel();
+        pool.submit_to(1, move || tx.send(42).unwrap());
+        assert_eq!(rx.recv().unwrap(), 42);
+    }
+}

@@ -1,0 +1,92 @@
+//! Property-based testing helpers (proptest is unavailable offline).
+//!
+//! `run_cases` drives a property over many random inputs with a fixed seed
+//! per test (reproducible failures); generators produce random datasets,
+//! vectors and label assignments. On failure the failing case index and a
+//! compact debug description are reported.
+
+use crate::utils::rng::Rng;
+
+/// Runs `prop(case_rng, case_index)` for `cases` deterministic cases.
+/// Panics with the case index on the first failure so the case can be
+/// replayed by seeding `Rng::seed_from_u64(seed ^ index)`.
+pub fn run_cases<F: FnMut(&mut Rng, usize)>(seed: u64, cases: usize, mut prop: F) {
+    for i in 0..cases {
+        let mut rng = Rng::seed_from_u64(seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        prop(&mut rng, i);
+    }
+}
+
+/// Random f64 vector with occasional extreme values — exercises splitter
+/// edge cases (constants, duplicates, infinities are excluded by design:
+/// the dataset layer rejects non-finite input).
+pub fn gen_f64_vec(rng: &mut Rng, len: usize) -> Vec<f64> {
+    let style = rng.uniform_usize(4);
+    (0..len)
+        .map(|_| match style {
+            0 => rng.uniform_range(-1.0, 1.0),
+            1 => rng.uniform_range(-1e6, 1e6),
+            2 => (rng.uniform_usize(5) as f64) - 2.0, // heavy ties
+            _ => rng.normal_ms(0.0, 10.0),
+        })
+        .collect()
+}
+
+/// Random binary label vector.
+pub fn gen_labels(rng: &mut Rng, len: usize, classes: usize) -> Vec<u32> {
+    (0..len).map(|_| rng.uniform_usize(classes) as u32).collect()
+}
+
+/// Random weights, strictly positive.
+pub fn gen_weights(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.uniform_range(0.1, 3.0) as f32).collect()
+}
+
+/// Asserts two floats are close with a relative+absolute tolerance.
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, tol: f64) {
+    let scale = a.abs().max(b.abs()).max(1.0);
+    assert!(
+        (a - b).abs() <= tol * scale,
+        "assert_close failed: {a} vs {b} (tol {tol})"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first = Vec::new();
+        run_cases(7, 5, |rng, _| first.push(rng.next_u64()));
+        let mut second = Vec::new();
+        run_cases(7, 5, |rng, _| second.push(rng.next_u64()));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        run_cases(3, 20, |rng, _| {
+            let xs = gen_f64_vec(rng, 50);
+            assert_eq!(xs.len(), 50);
+            assert!(xs.iter().all(|x| x.is_finite()));
+            let ys = gen_labels(rng, 30, 4);
+            assert!(ys.iter().all(|&y| y < 4));
+            let ws = gen_weights(rng, 10);
+            assert!(ws.iter().all(|&w| w > 0.0));
+        });
+    }
+
+    #[test]
+    fn assert_close_accepts_close() {
+        assert_close(1.0, 1.0 + 1e-12, 1e-9);
+        assert_close(1e9, 1e9 * (1.0 + 1e-10), 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn assert_close_rejects_far() {
+        assert_close(1.0, 2.0, 1e-9);
+    }
+}

@@ -1,0 +1,381 @@
+//! Basic statistics: running moments, quantiles, ranking and bootstrap
+//! resampling — the numeric substrate under dataspec inference, the
+//! evaluation module's confidence intervals (§2.2) and the benchmark
+//! harness's mean-rank computation (Figure 6).
+
+use crate::utils::rng::Rng;
+
+/// Single-pass mean/variance/min/max accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Moments {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Moments {
+    pub fn new() -> Self {
+        Moments { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+    /// Sample variance (n-1 denominator).
+    pub fn sample_variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn merge(&mut self, other: &Moments) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let delta = other.mean - self.mean;
+        let mean = self.mean + delta * other.n as f64 / n as f64;
+        let m2 = self.m2
+            + other.m2
+            + delta * delta * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+        self.mean = mean;
+        self.m2 = m2;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Quantile of a sorted slice with linear interpolation (type-7, the
+/// NumPy/R default).
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = pos - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Quantile of an unsorted slice (copies + sorts).
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&v, q)
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    let mut m = Moments::new();
+    for &x in xs {
+        m.add(x);
+    }
+    m.std()
+}
+
+/// Fractional ranks (1-based, ties get the average rank). Lower value =
+/// rank 1. Used for Figure 6's "mean rank" where rank 1 is the *best*
+/// (highest accuracy) learner — callers negate accuracies first.
+pub fn fractional_ranks(xs: &[f64]) -> Vec<f64> {
+    let n = xs.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    let mut ranks = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && xs[order[j + 1]] == xs[order[i]] {
+            j += 1;
+        }
+        // average rank of tied block [i, j]
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            ranks[order[k]] = avg;
+        }
+        i = j + 1;
+    }
+    ranks
+}
+
+/// Percentile bootstrap confidence interval of a statistic of `xs`.
+pub fn bootstrap_ci<F: Fn(&[f64]) -> f64>(
+    xs: &[f64],
+    stat: F,
+    rounds: usize,
+    alpha: f64,
+    rng: &mut Rng,
+) -> (f64, f64) {
+    assert!(!xs.is_empty());
+    let mut vals = Vec::with_capacity(rounds);
+    let mut buf = vec![0.0; xs.len()];
+    for _ in 0..rounds {
+        for b in buf.iter_mut() {
+            *b = xs[rng.uniform_usize(xs.len())];
+        }
+        vals.push(stat(&buf));
+    }
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (
+        quantile_sorted(&vals, alpha / 2.0),
+        quantile_sorted(&vals, 1.0 - alpha / 2.0),
+    )
+}
+
+/// Wilson score interval for a binomial proportion (closed-form CI used as
+/// the fast path for accuracy CIs; the report also offers bootstrap).
+pub fn wilson_interval(successes: u64, total: u64, z: f64) -> (f64, f64) {
+    if total == 0 {
+        return (0.0, 1.0);
+    }
+    let n = total as f64;
+    let p = successes as f64 / n;
+    let z2 = z * z;
+    let denom = 1.0 + z2 / n;
+    let center = (p + z2 / (2.0 * n)) / denom;
+    let half = (z / denom) * ((p * (1.0 - p) / n + z2 / (4.0 * n * n)).sqrt());
+    ((center - half).max(0.0), (center + half).min(1.0))
+}
+
+/// Two-sided sign test p-value: #wins of A over B out of n non-tied trials,
+/// under H0 ~ Binomial(n, 0.5). Used for pairwise learner comparison
+/// (Table 3 significance shading).
+pub fn sign_test_p_value(wins: u64, losses: u64) -> f64 {
+    let n = wins + losses;
+    if n == 0 {
+        return 1.0;
+    }
+    let k = wins.min(losses);
+    // P(X <= k) * 2 with X ~ Bin(n, 0.5), computed in log space.
+    let mut log_p = f64::NEG_INFINITY;
+    for i in 0..=k {
+        let lp = log_binom(n, i) - n as f64 * std::f64::consts::LN_2;
+        log_p = log_add(log_p, lp);
+    }
+    (2.0 * log_p.exp()).min(1.0)
+}
+
+fn log_binom(n: u64, k: u64) -> f64 {
+    ln_gamma(n as f64 + 1.0) - ln_gamma(k as f64 + 1.0) - ln_gamma((n - k) as f64 + 1.0)
+}
+
+fn log_add(a: f64, b: f64) -> f64 {
+    if a == f64::NEG_INFINITY {
+        return b;
+    }
+    if b == f64::NEG_INFINITY {
+        return a;
+    }
+    let m = a.max(b);
+    m + ((a - m).exp() + (b - m).exp()).ln()
+}
+
+/// Lanczos approximation of ln Γ(x).
+pub fn ln_gamma(x: f64) -> f64 {
+    const G: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // reflection
+        std::f64::consts::PI.ln() - (std::f64::consts::PI * x).sin().ln() - ln_gamma(1.0 - x)
+    } else {
+        let x = x - 1.0;
+        let mut a = G[0];
+        let t = x + 7.5;
+        for (i, &g) in G.iter().enumerate().skip(1) {
+            a += g / (x + i as f64);
+        }
+        0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+    }
+}
+
+/// Logistic sigmoid.
+#[inline]
+pub fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Numerically-stable softmax in place.
+pub fn softmax_in_place(xs: &mut [f64]) {
+    let m = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut sum = 0.0;
+    for x in xs.iter_mut() {
+        *x = (*x - m).exp();
+        sum += *x;
+    }
+    for x in xs.iter_mut() {
+        *x /= sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments_basic() {
+        let mut m = Moments::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            m.add(x);
+        }
+        assert_eq!(m.count(), 4);
+        assert!((m.mean() - 2.5).abs() < 1e-12);
+        assert!((m.variance() - 1.25).abs() < 1e-12);
+        assert_eq!(m.min(), 1.0);
+        assert_eq!(m.max(), 4.0);
+    }
+
+    #[test]
+    fn moments_merge_equals_combined() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut all = Moments::new();
+        for &x in &xs {
+            all.add(x);
+        }
+        let mut a = Moments::new();
+        let mut b = Moments::new();
+        for &x in &xs[..37] {
+            a.add(x);
+        }
+        for &x in &xs[37..] {
+            b.add(x);
+        }
+        a.merge(&b);
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        assert!((a.variance() - all.variance()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 5.0);
+        assert_eq!(quantile(&xs, 0.5), 3.0);
+        assert!((quantile(&xs, 0.25) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ranks_with_ties() {
+        let xs = [3.0, 1.0, 2.0, 2.0];
+        let r = fractional_ranks(&xs);
+        assert_eq!(r, vec![4.0, 1.0, 2.5, 2.5]);
+    }
+
+    #[test]
+    fn wilson_sane() {
+        let (lo, hi) = wilson_interval(85, 100, 1.96);
+        assert!(lo < 0.85 && 0.85 < hi);
+        assert!(lo > 0.75 && hi < 0.95);
+        let (lo0, hi0) = wilson_interval(0, 0, 1.96);
+        assert_eq!((lo0, hi0), (0.0, 1.0));
+    }
+
+    #[test]
+    fn bootstrap_mean_ci_contains_mean() {
+        let xs: Vec<f64> = (0..200).map(|i| (i % 10) as f64).collect();
+        let mut rng = Rng::seed_from_u64(1);
+        let (lo, hi) = bootstrap_ci(&xs, mean, 500, 0.05, &mut rng);
+        let m = mean(&xs);
+        assert!(lo < m && m < hi, "({lo}, {hi}) vs {m}");
+        assert!(hi - lo < 1.5);
+    }
+
+    #[test]
+    fn sign_test() {
+        // Even split => p ~ 1.
+        assert!(sign_test_p_value(50, 50) > 0.9);
+        // Extreme split => tiny p.
+        assert!(sign_test_p_value(95, 5) < 1e-10);
+        // Symmetric.
+        let a = sign_test_p_value(30, 70);
+        let b = sign_test_p_value(70, 30);
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ln_gamma_matches_factorials() {
+        for n in 1..10u64 {
+            let f: f64 = (1..=n).product::<u64>() as f64;
+            assert!((ln_gamma(n as f64 + 1.0) - f.ln()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn sigmoid_softmax() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-12);
+        assert!(sigmoid(30.0) > 0.999999);
+        assert!(sigmoid(-30.0) < 1e-6);
+        let mut xs = [1.0, 2.0, 3.0];
+        softmax_in_place(&mut xs);
+        assert!((xs.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(xs[2] > xs[1] && xs[1] > xs[0]);
+    }
+}

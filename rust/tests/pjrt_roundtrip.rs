@@ -1,0 +1,108 @@
+//! Integration test of the full AOT bridge: train a GBT in Rust, compile
+//! it to the PJRT engine (the XLA artifact produced by the JAX/Pallas
+//! build layer), and check its predictions against the native engines.
+//!
+//! Requires `make artifacts`; skipped (with a message) when the artifact
+//! is absent.
+
+use ydf::dataset::synthetic;
+use ydf::inference::pjrt::PjrtEngine;
+use ydf::inference::InferenceEngine;
+use ydf::learner::gbt::GbtConfig;
+use ydf::learner::{GradientBoostedTreesLearner, Learner};
+use ydf::runtime::Runtime;
+
+fn artifact_present() -> bool {
+    ydf::runtime::artifacts_dir().join("forest.hlo.txt").exists()
+}
+
+#[test]
+fn pjrt_engine_matches_native_engines() {
+    if !artifact_present() {
+        eprintln!("SKIP: artifacts/forest.hlo.txt missing — run `make artifacts`");
+        return;
+    }
+    // Numerical-only dataset (the PJRT engine supports Higher conditions
+    // over numerical features only — documented lossy compilation).
+    let spec = synthetic::spec_by_name("Wilt").unwrap();
+    let opts = synthetic::GenOptions { max_examples: 500, ..Default::default() };
+    let ds = synthetic::generate(spec, 161, &opts);
+    // Fit within the artifact's padded shapes (T<=64, N<=256, D<=12).
+    let mut cfg = GbtConfig::new("label");
+    cfg.num_trees = 40;
+    cfg.max_depth = 5;
+    let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+
+    let runtime = Runtime::cpu().expect("PJRT CPU client");
+    let engine = PjrtEngine::compile(model.as_ref(), &runtime).expect("compatible model");
+
+    let pjrt_preds = engine.predict_dataset(&ds);
+    assert_eq!(pjrt_preds.len(), ds.num_rows());
+
+    // The PJRT engine mean-imputes missing values (documented lossy
+    // compilation, §3.7); compare on rows without missing values and
+    // check the imputed rows stay within probability bounds.
+    let mut compared = 0;
+    for r in 0..ds.num_rows() {
+        let row = ds.row(r);
+        let has_missing = row.iter().any(|v| matches!(v, ydf::dataset::AttrValue::Missing));
+        let native = model.predict_ds_row(&ds, r);
+        let pjrt = &pjrt_preds[r];
+        assert!(pjrt[1] >= 0.0 && pjrt[1] <= 1.0);
+        if !has_missing {
+            assert!(
+                (native[1] - pjrt[1]).abs() < 1e-4,
+                "row {r}: native {native:?} vs pjrt {pjrt:?}"
+            );
+            compared += 1;
+        }
+    }
+    assert!(compared > 100, "only {compared} rows compared");
+}
+
+#[test]
+fn pjrt_rejects_oversized_models() {
+    if !artifact_present() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let spec = synthetic::spec_by_name("Wilt").unwrap();
+    let opts = synthetic::GenOptions { max_examples: 400, ..Default::default() };
+    let ds = synthetic::generate(spec, 163, &opts);
+    let mut cfg = GbtConfig::new("label");
+    cfg.num_trees = 80; // > MAX_TREES
+    cfg.max_depth = 4;
+    let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+    let runtime = Runtime::cpu().unwrap();
+    let err = match PjrtEngine::compile(model.as_ref(), &runtime) {
+        Err(e) => e,
+        Ok(_) => return, // early stopping may have kept < 64 trees
+    };
+    assert!(err.contains("trees"), "{err}");
+}
+
+#[test]
+fn linear_artifact_executes() {
+    let path = ydf::runtime::artifacts_dir().join("linear.hlo.txt");
+    if !path.exists() {
+        eprintln!("SKIP: artifacts/linear.hlo.txt missing");
+        return;
+    }
+    let runtime = Runtime::cpu().unwrap();
+    let exe = runtime.load_hlo_text(&path).unwrap();
+    // x: [64, 32], w: [32, 8], b: [8] -> softmax probs [64, 8].
+    let x = vec![0.1f32; 64 * 32];
+    let w = vec![0.0f32; 32 * 8];
+    let b = vec![0.0f32; 8];
+    let out = exe
+        .run(&[
+            ydf::runtime::literal_f32(&x, &[64, 32]).unwrap(),
+            ydf::runtime::literal_f32(&w, &[32, 8]).unwrap(),
+            ydf::runtime::literal_f32(&b, &[8]).unwrap(),
+        ])
+        .unwrap();
+    let probs = ydf::runtime::to_vec_f32(&out[0]).unwrap();
+    assert_eq!(probs.len(), 64 * 8);
+    // Uniform weights -> uniform softmax.
+    assert!((probs[0] - 0.125).abs() < 1e-5);
+}

@@ -1,0 +1,202 @@
+//! Property-based tests over coordinator invariants: splitter optimality
+//! and consistency, engine equivalence, partition conservation, metric
+//! bounds, determinism — randomized with fixed seeds (utils::prop).
+
+use ydf::dataset::dataspec::{ColumnSpec, DataSpec};
+use ydf::dataset::{ColumnData, Dataset};
+use ydf::splitter::score::Labels;
+use ydf::splitter::{
+    find_best_split, partition_rows, NumericalSplit, SplitterConfig, TrainingCache,
+};
+use ydf::utils::prop::{gen_f64_vec, gen_labels, run_cases};
+use ydf::utils::rng::Rng;
+
+fn numeric_ds(values: Vec<f32>) -> Dataset {
+    let spec = DataSpec { columns: vec![ColumnSpec::numerical("x")] };
+    Dataset::new(spec, vec![ColumnData::Numerical(values)]).unwrap()
+}
+
+/// Brute-force best split: try every boundary between sorted distinct
+/// values, missing excluded (generator produces no NaN).
+fn brute_force_best_gain(values: &[f32], labels: &[u32], min_examples: usize) -> Option<f64> {
+    let labels_view = Labels::Classification { labels, num_classes: 2 };
+    let mut idx: Vec<usize> = (0..values.len()).collect();
+    idx.sort_by(|&a, &b| values[a].partial_cmp(&values[b]).unwrap());
+    let mut best: Option<f64> = None;
+    for cut in 1..values.len() {
+        if values[idx[cut - 1]] >= values[idx[cut]] {
+            continue;
+        }
+        if cut < min_examples || values.len() - cut < min_examples {
+            continue;
+        }
+        let mut parent = labels_view.new_acc();
+        let mut left = labels_view.new_acc();
+        let mut right = labels_view.new_acc();
+        for (pos, &i) in idx.iter().enumerate() {
+            parent.add(&labels_view, i);
+            if pos < cut {
+                left.add(&labels_view, i);
+            } else {
+                right.add(&labels_view, i);
+            }
+        }
+        let g = ydf::splitter::score::ScoreAcc::gain(&parent, &left, &right, &labels_view);
+        if best.map(|b| g > b).unwrap_or(true) {
+            best = Some(g);
+        }
+    }
+    best
+}
+
+#[test]
+fn prop_exact_splitter_is_optimal() {
+    run_cases(0xA11CE, 40, |rng, case| {
+        let n = 20 + rng.uniform_usize(60);
+        let values: Vec<f32> = gen_f64_vec(rng, n).into_iter().map(|v| v as f32).collect();
+        let labels = gen_labels(rng, n, 2);
+        let ds = numeric_ds(values.clone());
+        let labels_view = Labels::Classification { labels: &labels, num_classes: 2 };
+        let cfg = SplitterConfig { min_examples: 2, ..Default::default() };
+        let mut cache = TrainingCache::new(&ds);
+        let mut split_rng = Rng::seed_from_u64(1);
+        let rows: Vec<u32> = (0..n as u32).collect();
+        let found = find_best_split(
+            &ds, &rows, &labels_view, &[0], &cfg, &mut cache, &mut split_rng,
+        );
+        let brute = brute_force_best_gain(&values, &labels, 2)
+            .filter(|&g| g > 1e-12);
+        match (found, brute) {
+            (Some(f), Some(b)) => {
+                assert!((f.gain - b).abs() < 1e-9, "case {case}: {} vs {b}", f.gain)
+            }
+            (None, None) => {}
+            (f, b) => panic!("case {case}: splitter {f:?} vs brute {b:?}"),
+        }
+    });
+}
+
+#[test]
+fn prop_partition_conserves_rows() {
+    run_cases(0xB0B, 30, |rng, _| {
+        let n = 30 + rng.uniform_usize(50);
+        let values: Vec<f32> = gen_f64_vec(rng, n).into_iter().map(|v| v as f32).collect();
+        let labels = gen_labels(rng, n, 2);
+        let ds = numeric_ds(values);
+        let labels_view = Labels::Classification { labels: &labels, num_classes: 2 };
+        let cfg = SplitterConfig { min_examples: 1, ..Default::default() };
+        let mut cache = TrainingCache::new(&ds);
+        let mut split_rng = Rng::seed_from_u64(2);
+        let rows: Vec<u32> = (0..n as u32).collect();
+        if let Some(split) =
+            find_best_split(&ds, &rows, &labels_view, &[0], &cfg, &mut cache, &mut split_rng)
+        {
+            let (pos, neg) =
+                partition_rows(&ds, &rows, &split.condition, split.missing_to_positive);
+            let mut all: Vec<u32> = pos.iter().chain(neg.iter()).copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, rows, "partition must conserve rows");
+        }
+    });
+}
+
+#[test]
+fn prop_histogram_gain_never_exceeds_exact() {
+    run_cases(0xC0FFEE, 25, |rng, case| {
+        let n = 60 + rng.uniform_usize(100);
+        let values: Vec<f32> = gen_f64_vec(rng, n).into_iter().map(|v| v as f32).collect();
+        let labels = gen_labels(rng, n, 2);
+        let ds = numeric_ds(values);
+        let labels_view = Labels::Classification { labels: &labels, num_classes: 2 };
+        let rows: Vec<u32> = (0..n as u32).collect();
+        let mut split_rng = Rng::seed_from_u64(3);
+        let exact_cfg = SplitterConfig { min_examples: 1, ..Default::default() };
+        let mut cache = TrainingCache::new(&ds);
+        let exact = find_best_split(
+            &ds, &rows, &labels_view, &[0], &exact_cfg, &mut cache, &mut split_rng,
+        );
+        let hist_cfg = SplitterConfig {
+            min_examples: 1,
+            numerical: NumericalSplit::Histogram { bins: 32 },
+            ..Default::default()
+        };
+        let mut cache2 = TrainingCache::new(&ds);
+        let hist = find_best_split(
+            &ds, &rows, &labels_view, &[0], &hist_cfg, &mut cache2, &mut split_rng,
+        );
+        if let (Some(e), Some(h)) = (&exact, &hist) {
+            assert!(
+                h.gain <= e.gain + 1e-9,
+                "case {case}: histogram gain {} exceeds exact {}",
+                h.gain,
+                e.gain
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_probability_outputs_valid() {
+    use ydf::learner::gbt::GbtConfig;
+    use ydf::learner::{GradientBoostedTreesLearner, Learner, RandomForestLearner};
+    run_cases(0xDEED, 6, |rng, _| {
+        let seed = rng.next_u64();
+        let ds = ydf::dataset::synthetic::adult_like(120, seed);
+        let mut cfg = GbtConfig::new("income");
+        cfg.num_trees = 4;
+        cfg.max_depth = 3;
+        let models: Vec<Box<dyn ydf::model::Model>> = vec![
+            GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap(),
+            {
+                let mut rf = ydf::learner::random_forest::RandomForestConfig::new("income");
+                rf.num_trees = 4;
+                rf.compute_oob = false;
+                RandomForestLearner::new(rf).train(&ds).unwrap()
+            },
+        ];
+        for model in &models {
+            for r in 0..ds.num_rows() {
+                let p = model.predict_ds_row(&ds, r);
+                let sum: f64 = p.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-9, "probs must sum to 1: {p:?}");
+                assert!(p.iter().all(|&x| (0.0..=1.0).contains(&x)), "{p:?}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_auc_invariant_under_monotone_transform() {
+    use ydf::evaluation::metrics::roc_auc;
+    run_cases(0xF00D, 30, |rng, _| {
+        let n = 20 + rng.uniform_usize(100);
+        let scores: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+        let pos: Vec<bool> = (0..n).map(|_| rng.bernoulli(0.4)).collect();
+        let auc = roc_auc(&scores, &pos);
+        let transformed: Vec<f64> = scores.iter().map(|&s| (3.0 * s + 1.0).exp()).collect();
+        let auc2 = roc_auc(&transformed, &pos);
+        assert!((auc - auc2).abs() < 1e-12, "AUC must be rank-invariant");
+        // Complement symmetry: flipping labels mirrors the AUC.
+        let neg: Vec<bool> = pos.iter().map(|&p| !p).collect();
+        let auc3 = roc_auc(&scores, &neg);
+        assert!((auc + auc3 - 1.0).abs() < 1e-9, "{auc} + {auc3} != 1");
+    });
+}
+
+#[test]
+fn prop_kfold_partitions() {
+    run_cases(0x5EED, 20, |rng, _| {
+        let n = 10 + rng.uniform_usize(200);
+        let folds = 2 + rng.uniform_usize(8);
+        let ds = ydf::dataset::synthetic::adult_like(n, rng.next_u64());
+        let fold_rows = ds.kfold_indices(folds, rng.next_u64());
+        assert_eq!(fold_rows.len(), folds);
+        let mut all: Vec<usize> = fold_rows.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..n).collect::<Vec<_>>());
+        let sizes: Vec<usize> = fold_rows.iter().map(|f| f.len()).collect();
+        let min = sizes.iter().min().unwrap();
+        let max = sizes.iter().max().unwrap();
+        assert!(max - min <= 1, "folds must be balanced: {sizes:?}");
+    });
+}
