@@ -49,9 +49,9 @@ fn main() {
     let ev = evaluate_model(model.as_ref(), &test, "income").unwrap();
     println!("{}", ev.report());
 
-    // --- predict ---
-    let preds = model.predict_dataset(&test);
-    println!("first predictions: {:?}\n", &preds[..3.min(preds.len())]);
+    // --- predict (batch path: fastest engine over columnar storage) ---
+    let (preds, dim) = ydf::inference::predict_flat(model.as_ref(), &test);
+    println!("first predictions: {:?}\n", &preds[..(3 * dim).min(preds.len())]);
 
     // --- benchmark_inference (B.4) ---
     println!("=== B.4 Model inference benchmark ===");

@@ -1,7 +1,8 @@
 //! Serving example: compile a trained model to its fastest engine (§3.7),
-//! serve concurrent batched requests from multiple threads, and report
-//! latency/throughput — including the PJRT/XLA engine when `make
-//! artifacts` has been run.
+//! serve concurrent batched requests from multiple threads through the
+//! allocation-free batch path (`predict_into` writes into a reusable
+//! per-client buffer), and report latency/throughput — including the
+//! PJRT/XLA engine when `make artifacts` has been run.
 //!
 //! Run: `cargo run --release --example serving`
 
@@ -43,7 +44,10 @@ fn main() {
             }
         };
 
-    // Serve: 4 client threads, batched requests, measure latency.
+    // Serve: 4 client threads, batched requests, measure latency. Each
+    // client allocates its output buffer once and the engine writes
+    // predictions into it — the steady-state request loop performs no
+    // heap allocation.
     let engine: Arc<dyn InferenceEngine> = Arc::from(
         compile_engines(model.as_ref()).remove(0), // fastest
     );
@@ -53,6 +57,7 @@ fn main() {
         42,
         &synthetic::GenOptions { max_examples: 64, ..Default::default() },
     );
+    let dim = engine.output_dim();
     let t0 = std::time::Instant::now();
     let mut latencies: Vec<f64> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..4)
@@ -61,9 +66,11 @@ fn main() {
                 let batch = &batch;
                 s.spawn(move || {
                     let mut lat = Vec::with_capacity(requests_per_client);
+                    let mut out = vec![0.0f64; batch.num_rows() * dim];
                     for _ in 0..requests_per_client {
                         let t = std::time::Instant::now();
-                        std::hint::black_box(engine.predict_dataset(batch));
+                        engine.predict_into(batch, 1, &mut out);
+                        std::hint::black_box(&mut out);
                         lat.push(t.elapsed().as_secs_f64() * 1e3);
                     }
                     lat
@@ -91,11 +98,12 @@ fn main() {
 
     // One PJRT batch for comparison, if available.
     if let Some(p) = pjrt {
+        let mut out = vec![0.0f64; batch.num_rows() * p.output_dim()];
         let t = std::time::Instant::now();
-        let preds = p.predict_dataset(&batch);
+        p.predict_into(&batch, 1, &mut out);
         println!(
             "PJRT/XLA engine: {} predictions in {:.3}ms",
-            preds.len(),
+            batch.num_rows(),
             t.elapsed().as_secs_f64() * 1e3
         );
     }

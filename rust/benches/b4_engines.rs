@@ -1,39 +1,76 @@
 //! Appendix B.4: the model inference benchmark — every compatible engine
-//! timed over the dataset, µs/example (the report the CLI's
+//! timed over the dataset on both the batch path (columnar, block-wise)
+//! and the seed-style per-row path, µs/example (the report the CLI's
 //! `benchmark_inference` prints). Includes the PJRT/XLA engine when the
-//! artifact is available.
+//! artifact is available, and writes a machine-readable
+//! `BENCH_inference.json` so subsequent PRs can track the perf
+//! trajectory.
 //!
 //! Run: cargo bench --bench b4_engines
+//!      cargo bench --bench b4_engines -- --rows=20000 --trees=100 --out=path.json
 
 use ydf::dataset::synthetic;
-use ydf::inference::{benchmark_inference_report, InferenceEngine};
+use ydf::inference::{benchmark_inference, InferenceEngine};
 use ydf::learner::gbt::GbtConfig;
 use ydf::learner::{GradientBoostedTreesLearner, Learner};
 
 fn main() {
-    // Numerical-only dataset so every engine (incl. PJRT) is compatible.
-    let spec = synthetic::spec_by_name("Wilt").unwrap();
-    let opts = synthetic::GenOptions { max_examples: 2000, ..Default::default() };
-    let ds = synthetic::generate(spec, 20230806, &opts);
-    let mut cfg = GbtConfig::new("label");
-    cfg.num_trees = 50;
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut rows = 10_000usize;
+    let mut trees = 50usize;
+    let mut runs = 5usize;
+    let mut out_path = "BENCH_inference.json".to_string();
+    for a in &args {
+        if let Some(v) = a.strip_prefix("--rows=") {
+            rows = v.parse().unwrap();
+        } else if let Some(v) = a.strip_prefix("--trees=") {
+            trees = v.parse().unwrap();
+        } else if let Some(v) = a.strip_prefix("--runs=") {
+            runs = v.parse().unwrap();
+        } else if let Some(v) = a.strip_prefix("--out=") {
+            out_path = v.to_string();
+        }
+    }
+
+    // Adult-like mixed numerical/categorical dataset — the workload of the
+    // acceptance gate (>=10k rows, GBT >=50 trees, QuickScorer-compatible
+    // depth).
+    let ds = synthetic::adult_like(rows, 20230806);
+    let mut cfg = GbtConfig::new("income");
+    cfg.num_trees = trees;
     cfg.max_depth = 5;
     let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
 
-    println!("{}", benchmark_inference_report(model.as_ref(), &ds, 20));
+    let bench = benchmark_inference(model.as_ref(), &ds, runs);
+    println!("{}", bench.report());
+
+    match std::fs::write(&out_path, bench.to_json().to_string_pretty()) {
+        Ok(()) => eprintln!("wrote {out_path}"),
+        Err(e) => eprintln!("cannot write {out_path}: {e}"),
+    }
 
     // PJRT/XLA engine (lossy compilation, §3.7), when artifacts exist.
+    // It requires an all-numerical model, so it gets its own dataset.
+    let wilt = synthetic::spec_by_name("Wilt").unwrap();
+    let opts = synthetic::GenOptions { max_examples: 2000, ..Default::default() };
+    let pjrt_ds = synthetic::generate(wilt, 20230806, &opts);
+    let mut pjrt_cfg = GbtConfig::new("label");
+    pjrt_cfg.num_trees = 50;
+    pjrt_cfg.max_depth = 5;
+    let pjrt_model = GradientBoostedTreesLearner::new(pjrt_cfg).train(&pjrt_ds).unwrap();
     match ydf::runtime::Runtime::cpu()
-        .and_then(|rt| ydf::inference::pjrt::PjrtEngine::compile(model.as_ref(), &rt))
+        .and_then(|rt| ydf::inference::pjrt::PjrtEngine::compile(pjrt_model.as_ref(), &rt))
     {
         Ok(engine) => {
+            let mut out = vec![0.0f64; pjrt_ds.num_rows() * engine.output_dim()];
             let t0 = std::time::Instant::now();
-            let runs = 5;
-            for _ in 0..runs {
-                std::hint::black_box(engine.predict_dataset(&ds));
+            let pjrt_runs = 5;
+            for _ in 0..pjrt_runs {
+                engine.predict_into(&pjrt_ds, 1, &mut out);
+                std::hint::black_box(&mut out);
             }
-            let us = t0.elapsed().as_secs_f64() / (runs * ds.num_rows()) as f64 * 1e6;
-            println!("  {:<42} {us:>10.3} us/example", engine.name());
+            let us = t0.elapsed().as_secs_f64() / (pjrt_runs * pjrt_ds.num_rows()) as f64 * 1e6;
+            println!("  {:<42} {us:>10.3} us/example (Wilt, numerical-only)", engine.name());
         }
         Err(e) => println!("  (PJRT engine skipped: {e})"),
     }

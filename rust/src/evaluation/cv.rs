@@ -63,6 +63,10 @@ pub fn cross_validate(
         let t0 = std::time::Instant::now();
         let model = learner.train(&train_ds)?;
         train_seconds.push(t0.elapsed().as_secs_f64());
+        // Fold prediction rides the batch path: evaluate_model compiles
+        // the fastest compatible engine and scores the fold through
+        // predict_flat, so `inference_seconds` reflects engine batch
+        // throughput, not the per-row Observation path.
         let t1 = std::time::Instant::now();
         let ev = evaluate_model(model.as_ref(), &test_ds, learner.label())?;
         inference_seconds.push(t1.elapsed().as_secs_f64());

@@ -106,6 +106,30 @@ pub fn accuracy(probabilities: &[Vec<f64>], labels: &[u32]) -> f64 {
     correct as f64 / probabilities.len().max(1) as f64
 }
 
+/// Multiclass log-loss over a flat row-major probability buffer
+/// (`probabilities.len() == labels.len() * dim`) — the layout produced by
+/// the batch inference path (`inference::predict_flat`), avoiding the
+/// Vec-per-row intermediate.
+pub fn log_loss_flat(probabilities: &[f64], dim: usize, labels: &[u32]) -> f64 {
+    let mut sum = 0.0;
+    for (r, &y) in labels.iter().enumerate() {
+        sum -= probabilities[r * dim + y as usize].max(1e-12).ln();
+    }
+    sum / labels.len().max(1) as f64
+}
+
+/// Accuracy of argmax predictions over a flat row-major probability buffer.
+pub fn accuracy_flat(probabilities: &[f64], dim: usize, labels: &[u32]) -> f64 {
+    let correct = labels
+        .iter()
+        .enumerate()
+        .filter(|&(r, &y)| {
+            crate::model::argmax(&probabilities[r * dim..(r + 1) * dim]) as u32 == y
+        })
+        .count();
+    correct as f64 / labels.len().max(1) as f64
+}
+
 /// Root-mean-square error (regression).
 pub fn rmse(predictions: &[f64], targets: &[f32]) -> f64 {
     let sse: f64 = predictions
@@ -174,6 +198,15 @@ mod tests {
         let ll = log_loss(&probs, &labels);
         let expected = -(0.9f64.ln() + 0.8f64.ln() + 0.4f64.ln()) / 3.0;
         assert!((ll - expected).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flat_metrics_match_nested() {
+        let probs = vec![vec![0.9, 0.1], vec![0.2, 0.8], vec![0.6, 0.4]];
+        let flat: Vec<f64> = probs.iter().flatten().copied().collect();
+        let labels = vec![0u32, 1, 1];
+        assert!((accuracy(&probs, &labels) - accuracy_flat(&flat, 2, &labels)).abs() < 1e-12);
+        assert!((log_loss(&probs, &labels) - log_loss_flat(&flat, 2, &labels)).abs() < 1e-12);
     }
 
     #[test]

@@ -7,6 +7,7 @@ pub mod cv;
 pub mod metrics;
 
 use crate::dataset::Dataset;
+use crate::inference::predict_flat;
 use crate::model::{Model, Task};
 use crate::utils::rng::Rng;
 use crate::utils::stats;
@@ -78,19 +79,22 @@ fn evaluate_classification(
     if n == 0 {
         return Err("cannot evaluate on an empty dataset.".to_string());
     }
-    let probs = model.predict_dataset(ds);
+    // Batch path: fastest compatible engine, flat row-major output — the
+    // evaluation layer never materializes per-row prediction Vecs.
+    let (probs, dim) = predict_flat(model, ds);
     let num_classes = model.num_classes();
+    debug_assert_eq!(dim, num_classes);
     let class_names = model.class_names();
 
     let mut confusion = vec![vec![0u64; num_classes]; num_classes];
     let mut correct_flags = Vec::with_capacity(n);
-    for (p, &y) in probs.iter().zip(labels) {
-        let pred = crate::model::argmax(p);
+    for (r, &y) in labels.iter().enumerate() {
+        let pred = crate::model::argmax(&probs[r * dim..(r + 1) * dim]);
         confusion[y as usize][pred] += 1;
         correct_flags.push((pred as u32 == y) as u8 as f64);
     }
-    let accuracy = metrics::accuracy(&probs, labels);
-    let log_loss = metrics::log_loss(&probs, labels);
+    let accuracy = metrics::accuracy_flat(&probs, dim, labels);
+    let log_loss = metrics::log_loss_flat(&probs, dim, labels);
 
     // Majority-class baseline ("Default" rows of B.3).
     let mut class_counts = vec![0u64; num_classes];
@@ -119,7 +123,7 @@ fn evaluate_classification(
     // One-vs-rest per class.
     let mut one_vs_rest = Vec::new();
     for k in 0..num_classes {
-        let scores: Vec<f64> = probs.iter().map(|p| p[k]).collect();
+        let scores: Vec<f64> = (0..n).map(|r| probs[r * dim + k]).collect();
         let positives: Vec<bool> = labels.iter().map(|&y| y as usize == k).collect();
         let n_pos = positives.iter().filter(|&&p| p).count();
         let auc = metrics::roc_auc(&scores, &positives);
@@ -180,7 +184,8 @@ fn evaluate_regression(
         .as_numerical()
         .ok_or_else(|| format!("label column \"{label}\" is not numerical."))?;
     let n = ds.num_rows();
-    let preds: Vec<f64> = (0..n).map(|r| model.predict_ds_row(ds, r)[0]).collect();
+    // Batch path (dim = 1 for regression models).
+    let (preds, _dim) = predict_flat(model, ds);
     Ok(Evaluation {
         task: Task::Regression,
         label: label.to_string(),

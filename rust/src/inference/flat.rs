@@ -1,12 +1,18 @@
 //! Flat engine: all trees compiled into contiguous structure-of-arrays
 //! node tables. Removes pointer chasing and per-node heap indirection —
 //! the generic fast path for any forest model (§3.7).
+//!
+//! The batch path walks [`BLOCK_SIZE`]-row blocks tree-major (one tree's
+//! node table stays cache-hot across the whole block) against resolved
+//! columnar slices, and aggregates into the caller's output buffer —
+//! no `Observation`, no per-row `Vec`.
 
-use super::InferenceEngine;
-use crate::dataset::{AttrValue, ColumnData, Dataset, Observation};
-use crate::model::forest::{GbtLoss, GradientBoostedTreesModel, RandomForestModel};
+use super::{Aggregate, BLOCK_SIZE, ColumnAccess, InferenceEngine};
+use crate::dataset::{AttrValue, Dataset, Observation};
+use crate::model::forest::{GradientBoostedTreesModel, RandomForestModel};
 use crate::model::tree::{bitmap_contains, Condition, DecisionTree};
 use crate::model::{Model, Task};
+use std::ops::Range;
 
 const KIND_LEAF: u8 = 0;
 const KIND_HIGHER: u8 = 1;
@@ -28,13 +34,6 @@ struct FlatNode {
     aux: u32,
     aux_len: u32,
     child: u32,
-}
-
-/// Aggregation mode, fixed at compile time.
-enum Aggregate {
-    RfAverage { num_classes: usize, winner_take_all: bool },
-    RfRegression,
-    Gbt { loss: GbtLoss, dim: usize, initial: Vec<f64> },
 }
 
 pub struct FlatEngine {
@@ -260,16 +259,16 @@ impl FlatEngine {
         }
     }
 
-    /// Same traversal against column storage (batch path).
+    /// Same traversal against resolved columnar slices (batch path).
     #[inline]
-    fn eval_tree_ds(&self, root: u32, ds: &Dataset, row: usize) -> u32 {
+    fn eval_tree_cols(&self, root: u32, cols: &ColumnAccess, row: usize) -> u32 {
         let mut idx = root;
         loop {
             let n = &self.nodes[idx as usize];
             let go_pos = match n.kind {
                 KIND_LEAF => return n.aux,
-                KIND_HIGHER => match &ds.columns[n.attr as usize] {
-                    ColumnData::Numerical(v) => {
+                KIND_HIGHER => match cols.num[n.attr as usize] {
+                    Some(v) => {
                         let x = v[row];
                         if x.is_nan() {
                             n.missing_to_positive
@@ -277,10 +276,10 @@ impl FlatEngine {
                             x >= n.threshold
                         }
                     }
-                    _ => n.missing_to_positive,
+                    None => n.missing_to_positive,
                 },
-                KIND_CONTAINS => match &ds.columns[n.attr as usize] {
-                    ColumnData::Categorical(v) => {
+                KIND_CONTAINS => match cols.cat[n.attr as usize] {
+                    Some(v) => {
                         let c = v[row];
                         if c == crate::dataset::MISSING_CAT {
                             n.missing_to_positive
@@ -291,10 +290,10 @@ impl FlatEngine {
                             )
                         }
                     }
-                    _ => n.missing_to_positive,
+                    None => n.missing_to_positive,
                 },
                 KIND_CONTAINS_SET => {
-                    let col = &ds.columns[n.attr as usize];
+                    let col = &cols.columns[n.attr as usize];
                     if col.is_missing(row) {
                         n.missing_to_positive
                     } else {
@@ -309,7 +308,7 @@ impl FlatEngine {
                     for &(a, w) in
                         &self.oblique[n.aux as usize..(n.aux + n.aux_len) as usize]
                     {
-                        if let ColumnData::Numerical(v) = &ds.columns[a as usize] {
+                        if let Some(v) = cols.num[a as usize] {
                             let x = v[row];
                             if !x.is_nan() {
                                 acc += w * x;
@@ -318,13 +317,13 @@ impl FlatEngine {
                     }
                     acc >= n.threshold
                 }
-                KIND_IS_TRUE => match &ds.columns[n.attr as usize] {
-                    ColumnData::Boolean(v) => match v[row] {
+                KIND_IS_TRUE => match cols.boolean[n.attr as usize] {
+                    Some(v) => match v[row] {
                         1 => true,
                         0 => false,
                         _ => n.missing_to_positive,
                     },
-                    _ => n.missing_to_positive,
+                    None => n.missing_to_positive,
                 },
                 _ => unreachable!(),
             };
@@ -332,10 +331,13 @@ impl FlatEngine {
         }
     }
 
-    fn aggregate_leaves(&self, leaf_offsets: &[u32]) -> Vec<f64> {
+    /// Aggregates one example's per-tree leaf offsets into `out`
+    /// (`out.len() == output_dim()`). `scores` is caller-owned scratch of
+    /// `aggregate.score_dim()` values, reused across examples.
+    fn aggregate_leaves_into(&self, leaf_offsets: &[u32], scores: &mut [f64], out: &mut [f64]) {
         match &self.aggregate {
-            Aggregate::RfAverage { num_classes, winner_take_all } => {
-                let mut acc = vec![0.0f64; *num_classes];
+            Aggregate::RfAverage { winner_take_all, .. } => {
+                out.fill(0.0);
                 for &off in leaf_offsets {
                     let v = &self.leaf_values[off as usize..off as usize + self.leaf_dim];
                     if *winner_take_all {
@@ -345,42 +347,31 @@ impl FlatEngine {
                                 best = i;
                             }
                         }
-                        acc[best] += 1.0;
+                        out[best] += 1.0;
                     } else {
-                        for (a, &x) in acc.iter_mut().zip(v) {
+                        for (a, &x) in out.iter_mut().zip(v) {
                             *a += x as f64;
                         }
                     }
                 }
                 let n = leaf_offsets.len().max(1) as f64;
-                for a in acc.iter_mut() {
+                for a in out.iter_mut() {
                     *a /= n;
                 }
-                acc
             }
             Aggregate::RfRegression => {
                 let sum: f64 = leaf_offsets
                     .iter()
                     .map(|&off| self.leaf_values[off as usize] as f64)
                     .sum();
-                vec![sum / leaf_offsets.len().max(1) as f64]
+                out[0] = sum / leaf_offsets.len().max(1) as f64;
             }
             Aggregate::Gbt { loss, dim, initial } => {
-                let mut scores = initial.clone();
+                scores.copy_from_slice(initial);
                 for (i, &off) in leaf_offsets.iter().enumerate() {
                     scores[i % dim] += self.leaf_values[off as usize] as f64;
                 }
-                match loss {
-                    GbtLoss::BinomialLogLikelihood => {
-                        let p = crate::utils::stats::sigmoid(scores[0]);
-                        vec![1.0 - p, p]
-                    }
-                    GbtLoss::MultinomialLogLikelihood => {
-                        crate::utils::stats::softmax_in_place(&mut scores);
-                        scores
-                    }
-                    GbtLoss::SquaredError => scores,
-                }
+                Aggregate::apply_gbt_link(*loss, scores, out);
             }
         }
     }
@@ -395,22 +386,50 @@ impl InferenceEngine for FlatEngine {
         format!("{kind}OptPred") // YDF's name for its flat SoA engine
     }
 
+    fn output_dim(&self) -> usize {
+        self.aggregate.output_dim()
+    }
+
     fn predict_row(&self, obs: &Observation) -> Vec<f64> {
         let leaves: Vec<u32> =
             self.roots.iter().map(|&r| self.eval_tree_row(r, obs)).collect();
-        self.aggregate_leaves(&leaves)
+        let mut scores = vec![0.0f64; self.aggregate.score_dim()];
+        let mut out = vec![0.0f64; self.aggregate.output_dim()];
+        self.aggregate_leaves_into(&leaves, &mut scores, &mut out);
+        out
     }
 
-    fn predict_dataset(&self, ds: &Dataset) -> Vec<Vec<f64>> {
-        let mut out = Vec::with_capacity(ds.num_rows());
-        let mut leaves = vec![0u32; self.roots.len()];
-        for row in 0..ds.num_rows() {
-            for (slot, &root) in leaves.iter_mut().zip(&self.roots) {
-                *slot = self.eval_tree_ds(root, ds, row);
+    fn predict_batch(&self, ds: &Dataset, rows: Range<usize>, out: &mut [f64]) {
+        let dim = self.output_dim();
+        debug_assert_eq!(out.len(), rows.len() * dim);
+        let cols = ColumnAccess::new(ds);
+        let num_trees = self.roots.len();
+        // Scratch sized once per batch call; the per-row loop is
+        // allocation-free.
+        let mut leaves = vec![0u32; BLOCK_SIZE * num_trees];
+        let mut scores = vec![0.0f64; self.aggregate.score_dim()];
+        let mut start = rows.start;
+        let mut out_off = 0usize;
+        while start < rows.end {
+            let bs = BLOCK_SIZE.min(rows.end - start);
+            // Tree-major over the block: one tree's node table stays hot
+            // across all `bs` examples.
+            for (ti, &root) in self.roots.iter().enumerate() {
+                for bi in 0..bs {
+                    leaves[bi * num_trees + ti] = self.eval_tree_cols(root, &cols, start + bi);
+                }
             }
-            out.push(self.aggregate_leaves(&leaves));
+            for bi in 0..bs {
+                let o = out_off + bi * dim;
+                self.aggregate_leaves_into(
+                    &leaves[bi * num_trees..(bi + 1) * num_trees],
+                    &mut scores,
+                    &mut out[o..o + dim],
+                );
+            }
+            start += bs;
+            out_off += bs * dim;
         }
-        out
     }
 }
 
@@ -468,6 +487,25 @@ mod tests {
         let flat = FlatEngine::compile(model.as_ref()).unwrap();
         for r in 0..ds.num_rows() {
             close(&flat.predict_row(&ds.row(r)), &model.predict_ds_row(&ds, r));
+        }
+    }
+
+    #[test]
+    fn batch_handles_unaligned_tail_and_offset_ranges() {
+        // 150 rows = 2 full 64-row blocks + a 22-row tail.
+        let ds = synthetic::adult_like(150, 138);
+        let mut cfg = GbtConfig::new("income");
+        cfg.num_trees = 7;
+        cfg.max_depth = 4;
+        let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+        let flat = FlatEngine::compile(model.as_ref()).unwrap();
+        let dim = flat.output_dim();
+        // Offset, non-block-aligned range.
+        let range = 13..97;
+        let mut out = vec![0.0f64; (97 - 13) * dim];
+        flat.predict_batch(&ds, range.clone(), &mut out);
+        for (i, r) in range.enumerate() {
+            close(&out[i * dim..(i + 1) * dim], &model.predict_ds_row(&ds, r));
         }
     }
 

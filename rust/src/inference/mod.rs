@@ -3,30 +3,216 @@
 //! and latency. Engines:
 //!
 //! * [`naive::NaiveEngine`] — Algorithm 1, pointer-chasing traversal.
+//!   Always compatible with the core model types; the correctness
+//!   reference the optimized engines are validated against.
 //! * [`flat::FlatEngine`] — structure-of-arrays layout, branch-light.
+//!   Compiles for any RF/GBT forest, including oblique and
+//!   categorical-set conditions.
 //! * [`quickscorer::QuickScorerEngine`] — Lucchese et al. 2015 bitvector
-//!   traversal for trees with ≤ 64 leaves (the engine the B.4 report calls
-//!   `GradientBoostedTreesQuickScorer`).
+//!   traversal for trees with ≤ 64 leaves and Higher/Contains/IsTrue
+//!   conditions only (the engine the B.4 report calls
+//!   `GradientBoostedTreesQuickScorer`). Fastest when compatible.
 //! * [`pjrt::PjrtEngine`] — the XLA artifact produced by the build-time
-//!   JAX/Pallas layers, executed through the PJRT C API.
+//!   JAX/Pallas layers, executed through the PJRT C API (requires the
+//!   `xla` cargo feature plus `make artifacts`; lossy: binary GBT over
+//!   numerical features only).
+//!
+//! ## The batch contract
+//!
+//! The hot path is [`InferenceEngine::predict_batch`]: engines read the
+//! columnar [`ColumnData`] storage directly and write predictions into a
+//! caller-provided `&mut [f64]` — no `Observation` materialization, no
+//! per-row output `Vec`. Examples are processed in fixed-size blocks of
+//! [`BLOCK_SIZE`] rows across trees so node tables and bitvectors stay
+//! cache-resident (QuickScorer's bitvector traversal operates block-wise,
+//! as Lucchese et al. intend). `predict_row` remains for single-example
+//! serving; `predict_dataset` is a compatibility wrapper over
+//! [`InferenceEngine::predict_into`], which fans blocks out over threads
+//! with index-disjoint writes (thread count from `YDF_INFER_THREADS`,
+//! default = available parallelism).
+//!
+//! Engine selection: [`compile_engines`] returns every compatible engine,
+//! fastest first — QuickScorer when every tree fits its 64-leaf/condition
+//! envelope, then the flat engine, then the naive fallback. Callers that
+//! only need predictions from a `Model` should use [`predict_flat`], which
+//! performs the selection and batch fan-out in one call and degrades to
+//! the model's own row loop for wrapper models (ensembles, calibrators)
+//! that no engine compiles.
 
 pub mod flat;
 pub mod naive;
 pub mod pjrt;
 pub mod quickscorer;
 
-use crate::dataset::{Dataset, Observation};
+use crate::dataset::{ColumnData, Dataset, Observation};
+use crate::model::forest::GbtLoss;
 use crate::model::Model;
+use crate::utils::json::Json;
+use std::ops::Range;
+
+/// Rows per inference block. 64 keeps a block's bitvectors (64 × 8 bytes ×
+/// trees) and leaf scratch within L1/L2 for typical model sizes while
+/// amortizing per-block setup; it also matches the PJRT artifact's padded
+/// batch. The knob is compile-time on purpose: engines size their scratch
+/// buffers from it.
+pub const BLOCK_SIZE: usize = 64;
+
+/// Thread count for whole-dataset fan-out: `YDF_INFER_THREADS` when set
+/// to a positive integer, otherwise (including when set but unparsable)
+/// the machine's available parallelism.
+pub fn batch_threads() -> usize {
+    let fallback = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    match std::env::var("YDF_INFER_THREADS") {
+        Ok(v) => v.parse::<usize>().ok().filter(|&t| t >= 1).unwrap_or(fallback),
+        Err(_) => fallback,
+    }
+}
+
+/// Columnar storage resolved once per batch: engines index typed slices
+/// instead of matching the `ColumnData` enum per node visit per row.
+pub(crate) struct ColumnAccess<'a> {
+    pub num: Vec<Option<&'a [f32]>>,
+    pub cat: Vec<Option<&'a [u32]>>,
+    pub boolean: Vec<Option<&'a [u8]>>,
+    /// Raw columns, for the ragged categorical-set accessor.
+    pub columns: &'a [ColumnData],
+}
+
+impl<'a> ColumnAccess<'a> {
+    pub fn new(ds: &'a Dataset) -> ColumnAccess<'a> {
+        ColumnAccess {
+            num: ds.columns.iter().map(|c| c.as_numerical()).collect(),
+            cat: ds.columns.iter().map(|c| c.as_categorical()).collect(),
+            boolean: ds.columns.iter().map(|c| c.as_boolean()).collect(),
+            columns: &ds.columns,
+        }
+    }
+}
+
+/// Forest-output aggregation mode, fixed at engine-compile time. Shared by
+/// the flat and QuickScorer engines: they differ in how per-tree leaves
+/// are gathered, not in how outputs are shaped or linked.
+pub(crate) enum Aggregate {
+    RfAverage { num_classes: usize, winner_take_all: bool },
+    RfRegression,
+    Gbt { loss: GbtLoss, dim: usize, initial: Vec<f64> },
+}
+
+impl Aggregate {
+    /// Values per example in batch output.
+    pub(crate) fn output_dim(&self) -> usize {
+        match self {
+            Aggregate::RfAverage { num_classes, .. } => *num_classes,
+            Aggregate::RfRegression => 1,
+            Aggregate::Gbt { loss, dim, .. } => match loss {
+                GbtLoss::BinomialLogLikelihood => 2,
+                GbtLoss::MultinomialLogLikelihood | GbtLoss::SquaredError => *dim,
+            },
+        }
+    }
+
+    /// Length of the raw-score scratch the GBT link function needs
+    /// (0 for RF aggregates, which accumulate directly into the output).
+    pub(crate) fn score_dim(&self) -> usize {
+        match self {
+            Aggregate::Gbt { dim, .. } => *dim,
+            _ => 0,
+        }
+    }
+
+    /// Maps accumulated raw GBT scores into the prediction space.
+    pub(crate) fn apply_gbt_link(loss: GbtLoss, scores: &mut [f64], out: &mut [f64]) {
+        match loss {
+            GbtLoss::BinomialLogLikelihood => {
+                let p = crate::utils::stats::sigmoid(scores[0]);
+                out[0] = 1.0 - p;
+                out[1] = p;
+            }
+            GbtLoss::MultinomialLogLikelihood => {
+                crate::utils::stats::softmax_in_place(scores);
+                out.copy_from_slice(scores);
+            }
+            GbtLoss::SquaredError => out.copy_from_slice(scores),
+        }
+    }
+}
 
 /// A compiled inference engine.
 pub trait InferenceEngine: Send + Sync {
     /// Engine name as shown by `benchmark_inference` (B.4).
     fn name(&self) -> String;
+
+    /// Values per example in batch output: class count for classification,
+    /// 1 (or the tree multiplicity) for regression.
+    fn output_dim(&self) -> usize;
+
     /// Predicts one row observation (probabilities / regression value).
+    /// Single-example serving path; batch callers use `predict_batch`.
     fn predict_row(&self, obs: &Observation) -> Vec<f64>;
-    /// Predicts a whole dataset.
+
+    /// Batch prediction over `rows` of a columnar dataset into a
+    /// caller-provided buffer of `rows.len() * output_dim()` values,
+    /// row-major. Engines override this with an allocation-free columnar
+    /// traversal; the default funnels through the per-row path for
+    /// engines without a native batch implementation.
+    fn predict_batch(&self, ds: &Dataset, rows: Range<usize>, out: &mut [f64]) {
+        let dim = self.output_dim();
+        debug_assert_eq!(out.len(), rows.len() * dim);
+        for (i, r) in rows.enumerate() {
+            out[i * dim..(i + 1) * dim].copy_from_slice(&self.predict_row(&ds.row(r)));
+        }
+    }
+
+    /// Predicts the whole dataset into a flat row-major buffer of
+    /// `num_rows * output_dim()` values, fanning contiguous
+    /// [`BLOCK_SIZE`]-aligned row spans out over `threads` threads with
+    /// index-disjoint writes (no per-item synchronization). Each thread
+    /// makes a single `predict_batch` call over its whole span — engines
+    /// block internally, so scratch and column resolution are set up once
+    /// per span, not once per block.
+    fn predict_into(&self, ds: &Dataset, threads: usize, out: &mut [f64]) {
+        let dim = self.output_dim();
+        let n = ds.num_rows();
+        assert_eq!(
+            out.len(),
+            n * dim,
+            "predict_into: output buffer holds {} values but {} rows x {} outputs are required",
+            out.len(),
+            n,
+            dim
+        );
+        if n == 0 {
+            return;
+        }
+        let n_blocks = n.div_ceil(BLOCK_SIZE);
+        let threads = threads.clamp(1, n_blocks);
+        if threads == 1 {
+            self.predict_batch(ds, 0..n, out);
+            return;
+        }
+        let span = n_blocks.div_ceil(threads) * BLOCK_SIZE;
+        std::thread::scope(|s| {
+            let mut rest: &mut [f64] = out;
+            let mut row0 = 0usize;
+            while row0 < n {
+                let span_rows = span.min(n - row0);
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(span_rows * dim);
+                rest = tail;
+                let start = row0;
+                row0 += span_rows;
+                s.spawn(move || self.predict_batch(ds, start..start + span_rows, head));
+            }
+        });
+    }
+
+    /// Predicts a whole dataset (compatibility wrapper: one `Vec` per row).
+    /// Batch callers should prefer `predict_into`, which is what this
+    /// method rides on.
     fn predict_dataset(&self, ds: &Dataset) -> Vec<Vec<f64>> {
-        (0..ds.num_rows()).map(|r| self.predict_row(&ds.row(r))).collect()
+        let dim = self.output_dim();
+        let mut flat = vec![0.0f64; ds.num_rows() * dim];
+        self.predict_into(ds, batch_threads(), &mut flat);
+        flat.chunks(dim).map(|c| c.to_vec()).collect()
     }
 }
 
@@ -45,34 +231,141 @@ pub fn compile_engines(model: &dyn Model) -> Vec<Box<dyn InferenceEngine>> {
     out
 }
 
-/// Inference benchmark report (Appendix B.4): runs every compatible engine
-/// over the dataset `runs` times and reports µs/example.
+/// Batch prediction for any model through the fastest compatible engine:
+/// compiles QuickScorer or the flat engine when the model structure allows
+/// it, and falls back to the model's own columnar row loop otherwise
+/// (wrapper models — ensembles, calibrators — have no native engine).
+/// Returns the flat row-major prediction buffer and the per-row dimension.
+pub fn predict_flat(model: &dyn Model, ds: &Dataset) -> (Vec<f64>, usize) {
+    let dim = model.num_classes().max(1);
+    let n = ds.num_rows();
+    let mut flat = vec![0.0f64; n * dim];
+    if let Some(qs) = quickscorer::QuickScorerEngine::compile(model) {
+        qs.predict_into(ds, batch_threads(), &mut flat);
+    } else if let Some(fl) = flat::FlatEngine::compile(model) {
+        fl.predict_into(ds, batch_threads(), &mut flat);
+    } else {
+        for r in 0..n {
+            flat[r * dim..(r + 1) * dim].copy_from_slice(&model.predict_ds_row(ds, r));
+        }
+    }
+    (flat, dim)
+}
+
+/// One engine's timings in the B.4 report: the batch path (columnar
+/// `predict_into`, single thread, so µs/example/core matches the paper's
+/// unit) and the seed-style per-row path (`Dataset::row` materialization +
+/// `predict_row`), measured in the same run.
+pub struct EngineTiming {
+    pub name: String,
+    pub batch_us_per_example: f64,
+    pub row_us_per_example: f64,
+}
+
+/// Inference benchmark results (Appendix B.4), machine-readable.
+pub struct InferenceBenchmark {
+    pub num_examples: usize,
+    pub runs: usize,
+    pub block_size: usize,
+    /// Sorted by batch time, fastest first.
+    pub engines: Vec<EngineTiming>,
+}
+
+/// Runs every compatible engine over the dataset `runs` times on both the
+/// batch and the per-row path.
+pub fn benchmark_inference(
+    model: &dyn Model,
+    ds: &Dataset,
+    runs: usize,
+) -> InferenceBenchmark {
+    let engines = compile_engines(model);
+    let runs = runs.max(1);
+    let denom = (runs * ds.num_rows().max(1)) as f64;
+    let mut timings: Vec<EngineTiming> = Vec::new();
+    for e in &engines {
+        let dim = e.output_dim();
+        let mut flat = vec![0.0f64; ds.num_rows() * dim];
+        let t0 = std::time::Instant::now();
+        for _ in 0..runs {
+            e.predict_into(ds, 1, &mut flat);
+            std::hint::black_box(&mut flat);
+        }
+        let batch_us = t0.elapsed().as_secs_f64() / denom * 1e6;
+        let t0 = std::time::Instant::now();
+        for _ in 0..runs {
+            for r in 0..ds.num_rows() {
+                std::hint::black_box(e.predict_row(&ds.row(r)));
+            }
+        }
+        let row_us = t0.elapsed().as_secs_f64() / denom * 1e6;
+        timings.push(EngineTiming {
+            name: e.name(),
+            batch_us_per_example: batch_us,
+            row_us_per_example: row_us,
+        });
+    }
+    timings.sort_by(|a, b| a.batch_us_per_example.partial_cmp(&b.batch_us_per_example).unwrap());
+    InferenceBenchmark {
+        num_examples: ds.num_rows(),
+        runs,
+        block_size: BLOCK_SIZE,
+        engines: timings,
+    }
+}
+
+impl InferenceBenchmark {
+    /// Renders the B.4 report.
+    pub fn report(&self) -> String {
+        let mut out = format!(
+            "Inference benchmark: {} engines compatible with the model, {} examples x {} runs \
+             (block={})\n  {:<42} {:>16} {:>18} {:>9}\n",
+            self.engines.len(),
+            self.num_examples,
+            self.runs,
+            self.block_size,
+            "engine",
+            "batch us/example",
+            "per-row us/example",
+            "speedup",
+        );
+        for e in &self.engines {
+            out.push_str(&format!(
+                "  {:<42} {:>16.3} {:>18.3} {:>8.1}x\n",
+                e.name,
+                e.batch_us_per_example,
+                e.row_us_per_example,
+                e.row_us_per_example / e.batch_us_per_example.max(1e-12),
+            ));
+        }
+        out
+    }
+
+    /// JSON form for perf tracking across PRs (BENCH_inference.json).
+    pub fn to_json(&self) -> Json {
+        let mut engines = Json::obj();
+        for e in &self.engines {
+            let mut ej = Json::obj();
+            ej.set("batch_us_per_example", Json::Num(e.batch_us_per_example))
+                .set("row_us_per_example", Json::Num(e.row_us_per_example));
+            engines.set(&e.name, ej);
+        }
+        let mut j = Json::obj();
+        j.set("num_examples", Json::Num(self.num_examples as f64))
+            .set("runs", Json::Num(self.runs as f64))
+            .set("block_size", Json::Num(self.block_size as f64))
+            .set("engines", engines);
+        j
+    }
+}
+
+/// Inference benchmark report (Appendix B.4) as a string — the CLI's
+/// `benchmark_inference` output.
 pub fn benchmark_inference_report(
     model: &dyn Model,
     ds: &Dataset,
     runs: usize,
 ) -> String {
-    let engines = compile_engines(model);
-    let mut rows: Vec<(String, f64)> = Vec::new();
-    for e in &engines {
-        let t0 = std::time::Instant::now();
-        for _ in 0..runs.max(1) {
-            std::hint::black_box(e.predict_dataset(ds));
-        }
-        let per_example = t0.elapsed().as_secs_f64() / (runs.max(1) * ds.num_rows()) as f64;
-        rows.push((e.name(), per_example * 1e6));
-    }
-    rows.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-    let mut out = format!(
-        "Inference benchmark: {} engines compatible with the model, {} examples x {} runs\n",
-        engines.len(),
-        ds.num_rows(),
-        runs
-    );
-    for (name, us) in rows {
-        out.push_str(&format!("  {name:<42} {us:>10.3} us/example\n"));
-    }
-    out
+    benchmark_inference(model, ds, runs).report()
 }
 
 #[cfg(test)]
@@ -101,8 +394,44 @@ mod tests {
         cfg.num_trees = 3;
         cfg.max_depth = 3;
         let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
-        let rep = benchmark_inference_report(model.as_ref(), &ds, 2);
+        let bench = benchmark_inference(model.as_ref(), &ds, 2);
+        let rep = bench.report();
         assert!(rep.contains("us/example"));
         assert!(rep.contains("engines compatible"));
+        let json = bench.to_json().to_string();
+        assert!(json.contains("batch_us_per_example"), "{json}");
+    }
+
+    #[test]
+    fn predict_flat_matches_model_rows() {
+        let ds = synthetic::adult_like(150, 117);
+        let mut cfg = GbtConfig::new("income");
+        cfg.num_trees = 6;
+        cfg.max_depth = 4;
+        let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+        let (flat, dim) = predict_flat(model.as_ref(), &ds);
+        assert_eq!(flat.len(), ds.num_rows() * dim);
+        for r in 0..ds.num_rows() {
+            let p = model.predict_ds_row(&ds, r);
+            for k in 0..dim {
+                assert!((flat[r * dim + k] - p[k]).abs() < 1e-9, "row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn predict_into_multithreaded_matches_single() {
+        let ds = synthetic::adult_like(333, 119); // non-aligned tail
+        let mut cfg = GbtConfig::new("income");
+        cfg.num_trees = 4;
+        cfg.max_depth = 3;
+        let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+        let engine = flat::FlatEngine::compile(model.as_ref()).unwrap();
+        let dim = engine.output_dim();
+        let mut single = vec![0.0; ds.num_rows() * dim];
+        let mut multi = vec![0.0; ds.num_rows() * dim];
+        engine.predict_into(&ds, 1, &mut single);
+        engine.predict_into(&ds, 3, &mut multi);
+        assert_eq!(single, multi);
     }
 }

@@ -7,6 +7,7 @@ use crate::dataset::{Dataset, Observation};
 use crate::model::forest::{GradientBoostedTreesModel, RandomForestModel};
 use crate::model::linear::LinearModel;
 use crate::model::Model;
+use std::ops::Range;
 
 /// Holds a deep copy of the model (engines are self-contained so the
 /// source model can be dropped after compilation, §3.7).
@@ -56,12 +57,24 @@ impl InferenceEngine for NaiveEngine {
         format!("{kind}Generic")
     }
 
+    fn output_dim(&self) -> usize {
+        self.as_model().num_classes().max(1)
+    }
+
     fn predict_row(&self, obs: &Observation) -> Vec<f64> {
         self.as_model().predict_row(obs)
     }
 
-    fn predict_dataset(&self, ds: &Dataset) -> Vec<Vec<f64>> {
-        self.as_model().predict_dataset(ds)
+    /// Columnar row loop: no `Observation` materialization, predictions
+    /// written straight into the caller's buffer (the per-tree traversal
+    /// itself stays Algorithm 1).
+    fn predict_batch(&self, ds: &Dataset, rows: Range<usize>, out: &mut [f64]) {
+        let dim = self.output_dim();
+        debug_assert_eq!(out.len(), rows.len() * dim);
+        let model = self.as_model();
+        for (i, r) in rows.enumerate() {
+            out[i * dim..(i + 1) * dim].copy_from_slice(&model.predict_ds_row(ds, r));
+        }
     }
 }
 

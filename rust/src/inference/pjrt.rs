@@ -199,6 +199,10 @@ impl InferenceEngine for PjrtEngine {
         "GradientBoostedTreesPjrtXla".to_string()
     }
 
+    fn output_dim(&self) -> usize {
+        self.num_classes
+    }
+
     fn predict_row(&self, obs: &Observation) -> Vec<f64> {
         let p = &self.packed;
         let mut buf = vec![0.0f32; BATCH * MAX_FEATURES];
@@ -214,22 +218,26 @@ impl InferenceEngine for PjrtEngine {
         vec![1.0 - probs[0], probs[0]]
     }
 
-    fn predict_dataset(&self, ds: &Dataset) -> Vec<Vec<f64>> {
-        let n = ds.num_rows();
-        let mut out = Vec::with_capacity(n);
+    /// Batch path: rows are packed into the artifact's padded [BATCH,
+    /// MAX_FEATURES] tensor and the probabilities written straight into
+    /// the caller's buffer. `predict_dataset` rides the trait default
+    /// (block fan-out over this method).
+    fn predict_batch(&self, ds: &Dataset, rows: std::ops::Range<usize>, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), rows.len() * 2);
         let mut buf = vec![0.0f32; BATCH * MAX_FEATURES];
-        let mut start = 0usize;
-        while start < n {
-            let count = BATCH.min(n - start);
+        let mut start = rows.start;
+        let mut off = 0usize;
+        while start < rows.end {
+            let count = BATCH.min(rows.end - start);
             self.pack_ds(ds, start, count, &mut buf);
             let probs = self.run_batch(&buf).expect("PJRT execution failed");
             for &p in probs.iter().take(count) {
-                out.push(vec![1.0 - p, p]);
+                out[off] = 1.0 - p;
+                out[off + 1] = p;
+                off += 2;
             }
             start += count;
         }
-        let _ = self.num_classes;
-        out
     }
 }
 

@@ -7,12 +7,19 @@
 //! is the lowest surviving bit. Numerical conditions are grouped per
 //! feature and sorted by threshold so the false set is a suffix found by
 //! binary search — the property that makes QuickScorer fast.
+//!
+//! The batch path is block-wise, as the paper intends (their "BWQS"
+//! variant): bitvectors for a whole [`BLOCK_SIZE`]-row block live in one
+//! scratch array, and the engine iterates feature-major — each feature's
+//! sorted node list and the feature's *column* are streamed once per
+//! block, so both stay cache-resident while the 64 examples are scored.
 
-use super::InferenceEngine;
-use crate::dataset::{AttrValue, ColumnData, Dataset, Observation, MISSING_CAT};
-use crate::model::forest::{GbtLoss, GradientBoostedTreesModel, RandomForestModel};
+use super::{Aggregate, BLOCK_SIZE, ColumnAccess, InferenceEngine};
+use crate::dataset::{AttrValue, Dataset, Observation, MISSING_BOOL, MISSING_CAT};
+use crate::model::forest::{GradientBoostedTreesModel, RandomForestModel};
 use crate::model::tree::{bitmap_contains, Condition, DecisionTree};
 use crate::model::{Model, Task};
+use std::ops::Range;
 
 /// A numerical (Higher) node: false iff `x < threshold`.
 struct NumericalNode {
@@ -35,12 +42,6 @@ struct BooleanNode {
     tree: u32,
     mask: u64,
     missing_to_positive: bool,
-}
-
-enum Aggregate {
-    RfAverage { num_classes: usize, winner_take_all: bool },
-    RfRegression,
-    Gbt { loss: GbtLoss, dim: usize, initial: Vec<f64> },
 }
 
 pub struct QuickScorerEngine {
@@ -203,7 +204,8 @@ impl QuickScorerEngine {
         })
     }
 
-    /// Core scoring: caller supplies per-attribute accessors.
+    /// Core scoring: caller supplies per-attribute accessors (per-row
+    /// serving path).
     fn score<'a>(
         &self,
         get_num: impl Fn(usize) -> Option<f32>, // None = missing
@@ -269,10 +271,121 @@ impl QuickScorerEngine {
         v
     }
 
-    fn aggregate_bitvectors(&self, v: &[u64]) -> Vec<f64> {
+    /// Block-wise scoring over columnar storage: `v` holds `bs` bitvector
+    /// rows of `num_trees` words each. Feature-major iteration streams
+    /// each feature's node list and data column once per block.
+    fn score_block(&self, cols: &ColumnAccess, start: usize, bs: usize, v: &mut [u64]) {
+        let t = self.num_trees;
+        v[..bs * t].fill(!0u64);
+        for (attr, nodes) in &self.numerical {
+            match cols.num[*attr] {
+                Some(vals) => {
+                    for bi in 0..bs {
+                        let vrow = &mut v[bi * t..(bi + 1) * t];
+                        let x = vals[start + bi];
+                        if x.is_nan() {
+                            for n in nodes {
+                                if !n.missing_to_positive {
+                                    vrow[n.tree as usize] &= n.mask;
+                                }
+                            }
+                        } else {
+                            let cut = nodes.partition_point(|n| n.threshold <= x);
+                            for n in &nodes[cut..] {
+                                vrow[n.tree as usize] &= n.mask;
+                            }
+                        }
+                    }
+                }
+                None => {
+                    for bi in 0..bs {
+                        let vrow = &mut v[bi * t..(bi + 1) * t];
+                        for n in nodes {
+                            if !n.missing_to_positive {
+                                vrow[n.tree as usize] &= n.mask;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for (attr, nodes) in &self.categorical {
+            match cols.cat[*attr] {
+                Some(vals) => {
+                    for bi in 0..bs {
+                        let vrow = &mut v[bi * t..(bi + 1) * t];
+                        let c = vals[start + bi];
+                        if c == MISSING_CAT {
+                            for n in nodes {
+                                if !n.missing_to_positive {
+                                    vrow[n.tree as usize] &= n.mask;
+                                }
+                            }
+                        } else {
+                            for n in nodes {
+                                if !bitmap_contains(&n.bitmap, c) {
+                                    vrow[n.tree as usize] &= n.mask;
+                                }
+                            }
+                        }
+                    }
+                }
+                None => {
+                    for bi in 0..bs {
+                        let vrow = &mut v[bi * t..(bi + 1) * t];
+                        for n in nodes {
+                            if !n.missing_to_positive {
+                                vrow[n.tree as usize] &= n.mask;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for (attr, nodes) in &self.boolean {
+            match cols.boolean[*attr] {
+                Some(vals) => {
+                    for bi in 0..bs {
+                        let vrow = &mut v[bi * t..(bi + 1) * t];
+                        match vals[start + bi] {
+                            1 => {}
+                            0 => {
+                                for n in nodes {
+                                    vrow[n.tree as usize] &= n.mask;
+                                }
+                            }
+                            _ => {
+                                debug_assert_eq!(vals[start + bi], MISSING_BOOL);
+                                for n in nodes {
+                                    if !n.missing_to_positive {
+                                        vrow[n.tree as usize] &= n.mask;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                None => {
+                    for bi in 0..bs {
+                        let vrow = &mut v[bi * t..(bi + 1) * t];
+                        for n in nodes {
+                            if !n.missing_to_positive {
+                                vrow[n.tree as usize] &= n.mask;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Aggregates one example's bitvectors into `out`
+    /// (`out.len() == output_dim()`); `scores` is `aggregate.score_dim()`
+    /// scratch.
+    fn aggregate_bitvectors_into(&self, v: &[u64], scores: &mut [f64], out: &mut [f64]) {
         match &self.aggregate {
-            Aggregate::RfAverage { num_classes, winner_take_all } => {
-                let mut acc = vec![0.0f64; *num_classes];
+            Aggregate::RfAverage { winner_take_all, .. } => {
+                out.fill(0.0);
                 for (t, &bits) in v.iter().enumerate() {
                     let leaf = bits.trailing_zeros() as usize;
                     let lv = &self.leaf_values[t]
@@ -284,18 +397,17 @@ impl QuickScorerEngine {
                                 best = i;
                             }
                         }
-                        acc[best] += 1.0;
+                        out[best] += 1.0;
                     } else {
-                        for (a, &x) in acc.iter_mut().zip(lv) {
+                        for (a, &x) in out.iter_mut().zip(lv) {
                             *a += x as f64;
                         }
                     }
                 }
                 let n = v.len().max(1) as f64;
-                for a in acc.iter_mut() {
+                for a in out.iter_mut() {
                     *a /= n;
                 }
-                acc
             }
             Aggregate::RfRegression => {
                 let sum: f64 = v
@@ -305,25 +417,15 @@ impl QuickScorerEngine {
                         self.leaf_values[t][bits.trailing_zeros() as usize] as f64
                     })
                     .sum();
-                vec![sum / v.len().max(1) as f64]
+                out[0] = sum / v.len().max(1) as f64;
             }
             Aggregate::Gbt { loss, dim, initial } => {
-                let mut scores = initial.clone();
+                scores.copy_from_slice(initial);
                 for (t, &bits) in v.iter().enumerate() {
                     let leaf = bits.trailing_zeros() as usize;
                     scores[t % dim] += self.leaf_values[t][leaf] as f64;
                 }
-                match loss {
-                    GbtLoss::BinomialLogLikelihood => {
-                        let p = crate::utils::stats::sigmoid(scores[0]);
-                        vec![1.0 - p, p]
-                    }
-                    GbtLoss::MultinomialLogLikelihood => {
-                        crate::utils::stats::softmax_in_place(&mut scores);
-                        scores
-                    }
-                    GbtLoss::SquaredError => scores,
-                }
+                Aggregate::apply_gbt_link(*loss, scores, out);
             }
         }
     }
@@ -336,6 +438,10 @@ impl InferenceEngine for QuickScorerEngine {
             _ => "RandomForest",
         };
         format!("{kind}QuickScorer")
+    }
+
+    fn output_dim(&self) -> usize {
+        self.aggregate.output_dim()
     }
 
     fn predict_row(&self, obs: &Observation) -> Vec<f64> {
@@ -355,55 +461,37 @@ impl InferenceEngine for QuickScorerEngine {
             },
             &mut v,
         );
-        self.aggregate_bitvectors(&v)
+        let mut scores = vec![0.0f64; self.aggregate.score_dim()];
+        let mut out = vec![0.0f64; self.output_dim()];
+        self.aggregate_bitvectors_into(&v, &mut scores, &mut out);
+        out
     }
 
-    fn predict_dataset(&self, ds: &Dataset) -> Vec<Vec<f64>> {
-        // Resolve column storage once (perf iteration #2, EXPERIMENTS.md
-        // §Perf): the enum match per attribute per row measurably costs on
-        // the batch path.
-        let num_cols: Vec<Option<&[f32]>> =
-            ds.columns.iter().map(|c| c.as_numerical()).collect();
-        let cat_cols: Vec<Option<&[u32]>> =
-            ds.columns.iter().map(|c| c.as_categorical()).collect();
-        let bool_cols: Vec<Option<&[u8]>> =
-            ds.columns.iter().map(|c| c.as_boolean()).collect();
-        let mut out = Vec::with_capacity(ds.num_rows());
-        let mut v = vec![!0u64; self.num_trees];
-        for row in 0..ds.num_rows() {
-            self.score(
-                |a| {
-                    num_cols[a].and_then(|vals| {
-                        let x = vals[row];
-                        if x.is_nan() {
-                            None
-                        } else {
-                            Some(x)
-                        }
-                    })
-                },
-                |a| {
-                    cat_cols[a].and_then(|vals| {
-                        let c = vals[row];
-                        if c == MISSING_CAT {
-                            None
-                        } else {
-                            Some(c)
-                        }
-                    })
-                },
-                |a| {
-                    bool_cols[a].and_then(|vals| match vals[row] {
-                        1 => Some(true),
-                        0 => Some(false),
-                        _ => None,
-                    })
-                },
-                &mut v,
-            );
-            out.push(self.aggregate_bitvectors(&v));
+    fn predict_batch(&self, ds: &Dataset, rows: Range<usize>, out: &mut [f64]) {
+        let dim = self.output_dim();
+        debug_assert_eq!(out.len(), rows.len() * dim);
+        let cols = ColumnAccess::new(ds);
+        let t = self.num_trees;
+        // Per-batch scratch: bitvectors for a whole block plus the GBT
+        // score vector; the per-row loop is allocation-free.
+        let mut v = vec![!0u64; BLOCK_SIZE * t];
+        let mut scores = vec![0.0f64; self.aggregate.score_dim()];
+        let mut start = rows.start;
+        let mut out_off = 0usize;
+        while start < rows.end {
+            let bs = BLOCK_SIZE.min(rows.end - start);
+            self.score_block(&cols, start, bs, &mut v);
+            for bi in 0..bs {
+                let o = out_off + bi * dim;
+                self.aggregate_bitvectors_into(
+                    &v[bi * t..(bi + 1) * t],
+                    &mut scores,
+                    &mut out[o..o + dim],
+                );
+            }
+            start += bs;
+            out_off += bs * dim;
         }
-        out
     }
 }
 
@@ -436,6 +524,24 @@ mod tests {
         let batch = qs.predict_dataset(&ds);
         for r in 0..ds.num_rows() {
             close(&batch[r], &model.predict_ds_row(&ds, r));
+        }
+    }
+
+    #[test]
+    fn quickscorer_batch_unaligned_range() {
+        // 300 rows; score an offset range crossing block boundaries.
+        let ds = synthetic::adult_like(300, 142);
+        let mut cfg = GbtConfig::new("income");
+        cfg.num_trees = 9;
+        cfg.max_depth = 4;
+        let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+        let qs = QuickScorerEngine::compile(model.as_ref()).expect("compatible");
+        let dim = qs.output_dim();
+        let range = 31..230;
+        let mut out = vec![0.0f64; (230 - 31) * dim];
+        qs.predict_batch(&ds, range.clone(), &mut out);
+        for (i, r) in range.enumerate() {
+            close(&out[i * dim..(i + 1) * dim], &model.predict_ds_row(&ds, r));
         }
     }
 

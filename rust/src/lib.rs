@@ -42,10 +42,11 @@ pub mod utils;
 pub fn evaluation_free_accuracy(model: &dyn model::Model, ds: &dataset::Dataset) -> f64 {
     let label_col = model.label_col();
     let labels = ds.columns[label_col].as_categorical().expect("categorical label");
+    // Batch path: fastest compatible engine, flat output buffer.
+    let (probs, dim) = inference::predict_flat(model, ds);
     let mut correct = 0usize;
-    for r in 0..ds.num_rows() {
-        let p = model.predict_ds_row(ds, r);
-        if model::argmax(&p) as u32 == labels[r] {
+    for (r, &y) in labels.iter().enumerate() {
+        if model::argmax(&probs[r * dim..(r + 1) * dim]) as u32 == y {
             correct += 1;
         }
     }

@@ -152,7 +152,9 @@ fn main() {
         "predict" => {
             let ds = load_dataset(req(&flags, "dataset"));
             let model = ok_or_die(load_model(Path::new(req(&flags, "model"))));
-            let probs = model.predict_dataset(&ds);
+            // Batch path: fastest compatible engine over columnar storage.
+            let (flat, dim) = ydf::inference::predict_flat(model.as_ref(), &ds);
+            let probs: Vec<Vec<f64>> = flat.chunks(dim).map(|c| c.to_vec()).collect();
             let out_path = dataset_path(req(&flags, "output"));
             let mut file = std::fs::File::create(&out_path).unwrap();
             let classes = model.class_names();

@@ -4,87 +4,15 @@
 //! HLO text — not a serialized `HloModuleProto` — is the interchange
 //! format: jax ≥ 0.5 emits protos with 64-bit instruction ids that
 //! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! The external `xla` crate is not vendored offline, so the module has two
+//! builds selected by the `xla` cargo feature: the real PJRT binding, and
+//! a stub whose [`Runtime::cpu`] returns an actionable error while the
+//! shape-checked [`Literal`] helpers keep working (they are pure Rust).
+//! Engine-selection code treats both uniformly: the PJRT engine is simply
+//! "unavailable" when the feature is off or the artifact is absent.
 
 use std::path::Path;
-
-/// A PJRT client plus compiled-executable cache.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-/// A compiled XLA executable.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub path: String,
-}
-
-impl Runtime {
-    /// Creates a CPU PJRT client.
-    pub fn cpu() -> Result<Runtime, String> {
-        let client =
-            xla::PjRtClient::cpu().map_err(|e| format!("cannot create PJRT CPU client: {e}"))?;
-        Ok(Runtime { client })
-    }
-
-    pub fn platform_name(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Loads and compiles an HLO text artifact.
-    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable, String> {
-        let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
-            format!(
-                "cannot parse HLO text {}: {e}. Re-generate artifacts with `make artifacts`.",
-                path.display()
-            )
-        })?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| format!("XLA compilation of {} failed: {e}", path.display()))?;
-        Ok(Executable { exe, path: path.display().to_string() })
-    }
-}
-
-impl Executable {
-    /// Executes with literal inputs; returns the elements of the output
-    /// tuple (aot.py lowers with `return_tuple=True`).
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>, String> {
-        let result = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| format!("execution of {} failed: {e}", self.path))?;
-        let mut out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| format!("cannot fetch output of {}: {e}", self.path))?;
-        // Tuples report their arity through decompose; plain outputs pass
-        // through unchanged.
-        match out.decompose_tuple() {
-            Ok(parts) if !parts.is_empty() => Ok(parts),
-            _ => Ok(vec![out]),
-        }
-    }
-}
-
-/// Builds an f32 literal of the given shape from a flat slice.
-pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal, String> {
-    xla::Literal::vec1(data)
-        .reshape(dims)
-        .map_err(|e| format!("cannot reshape f32 literal to {dims:?}: {e}"))
-}
-
-/// Builds an i32 literal of the given shape from a flat slice.
-pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal, String> {
-    xla::Literal::vec1(data)
-        .reshape(dims)
-        .map_err(|e| format!("cannot reshape i32 literal to {dims:?}: {e}"))
-}
-
-/// Extracts an f32 vector from a literal.
-pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>, String> {
-    lit.to_vec::<f32>().map_err(|e| format!("cannot read f32 output: {e}"))
-}
 
 /// Default artifact directory (overridable with YDF_ARTIFACTS).
 pub fn artifacts_dir() -> std::path::PathBuf {
@@ -92,6 +20,175 @@ pub fn artifacts_dir() -> std::path::PathBuf {
         .map(std::path::PathBuf::from)
         .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
 }
+
+#[cfg(feature = "xla")]
+mod imp {
+    use super::*;
+
+    /// A PJRT client plus compiled-executable cache.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+    }
+
+    /// A compiled XLA executable.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        pub path: String,
+    }
+
+    /// A device-transferable literal (re-export of the binding's type).
+    pub type Literal = xla::Literal;
+
+    impl Runtime {
+        /// Creates a CPU PJRT client.
+        pub fn cpu() -> Result<Runtime, String> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| format!("cannot create PJRT CPU client: {e}"))?;
+            Ok(Runtime { client })
+        }
+
+        pub fn platform_name(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Loads and compiles an HLO text artifact.
+        pub fn load_hlo_text(&self, path: &Path) -> Result<Executable, String> {
+            let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
+                format!(
+                    "cannot parse HLO text {}: {e}. Re-generate artifacts with `make artifacts`.",
+                    path.display()
+                )
+            })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| format!("XLA compilation of {} failed: {e}", path.display()))?;
+            Ok(Executable { exe, path: path.display().to_string() })
+        }
+    }
+
+    impl Executable {
+        /// Executes with literal inputs; returns the elements of the output
+        /// tuple (aot.py lowers with `return_tuple=True`).
+        pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>, String> {
+            let result = self
+                .exe
+                .execute::<Literal>(inputs)
+                .map_err(|e| format!("execution of {} failed: {e}", self.path))?;
+            let mut out = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| format!("cannot fetch output of {}: {e}", self.path))?;
+            // Tuples report their arity through decompose; plain outputs pass
+            // through unchanged.
+            match out.decompose_tuple() {
+                Ok(parts) if !parts.is_empty() => Ok(parts),
+                _ => Ok(vec![out]),
+            }
+        }
+    }
+
+    /// Builds an f32 literal of the given shape from a flat slice.
+    pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal, String> {
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| format!("cannot reshape f32 literal to {dims:?}: {e}"))
+    }
+
+    /// Builds an i32 literal of the given shape from a flat slice.
+    pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<Literal, String> {
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| format!("cannot reshape i32 literal to {dims:?}: {e}"))
+    }
+
+    /// Extracts an f32 vector from a literal.
+    pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>, String> {
+        lit.to_vec::<f32>().map_err(|e| format!("cannot read f32 output: {e}"))
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+mod imp {
+    use super::*;
+
+    const UNAVAILABLE: &str = "the PJRT/XLA runtime is not built into this binary (the `xla` \
+                               crate is not vendored offline). Rebuild with `--features xla` \
+                               on a machine with the dependency available.";
+
+    /// Stub runtime: construction always fails with an actionable message.
+    pub struct Runtime {
+        _private: (),
+    }
+
+    /// Stub executable (never constructed; `load_hlo_text` cannot succeed).
+    pub struct Executable {
+        pub path: String,
+    }
+
+    /// Shape-checked host literal: the subset of the binding's `Literal`
+    /// that pure-Rust callers (and the unit tests) rely on.
+    pub enum Literal {
+        F32(Vec<f32>),
+        I32(Vec<i32>),
+    }
+
+    impl Literal {
+        pub fn element_count(&self) -> usize {
+            match self {
+                Literal::F32(v) => v.len(),
+                Literal::I32(v) => v.len(),
+            }
+        }
+    }
+
+    impl Runtime {
+        pub fn cpu() -> Result<Runtime, String> {
+            Err(UNAVAILABLE.to_string())
+        }
+
+        pub fn platform_name(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn load_hlo_text(&self, _path: &Path) -> Result<Executable, String> {
+            Err(UNAVAILABLE.to_string())
+        }
+    }
+
+    impl Executable {
+        pub fn run(&self, _inputs: &[Literal]) -> Result<Vec<Literal>, String> {
+            Err(UNAVAILABLE.to_string())
+        }
+    }
+
+    fn check_dims(len: usize, dims: &[i64]) -> Result<(), String> {
+        let expect: i64 = dims.iter().product();
+        if expect < 0 || len != expect as usize {
+            return Err(format!("cannot reshape literal of {len} elements to {dims:?}"));
+        }
+        Ok(())
+    }
+
+    pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal, String> {
+        check_dims(data.len(), dims)?;
+        Ok(Literal::F32(data.to_vec()))
+    }
+
+    pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<Literal, String> {
+        check_dims(data.len(), dims)?;
+        Ok(Literal::I32(data.to_vec()))
+    }
+
+    pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>, String> {
+        match lit {
+            Literal::F32(v) => Ok(v.clone()),
+            Literal::I32(_) => Err("cannot read f32 output: literal is i32".to_string()),
+        }
+    }
+}
+
+pub use imp::{literal_f32, literal_i32, to_vec_f32, Executable, Literal, Runtime};
 
 #[cfg(test)]
 mod tests {
@@ -107,6 +204,11 @@ mod tests {
         assert_eq!(to_vec_f32(&lit).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
         let lit = literal_i32(&[1, 2, 3], &[3]).unwrap();
         assert_eq!(lit.element_count(), 3);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0, 2.0, 3.0], &[2, 2]).is_err());
     }
 
     #[test]

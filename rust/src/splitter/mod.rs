@@ -112,13 +112,20 @@ impl TrainingCache {
         }
     }
 
-    /// Marks `rows` as the current node; returns the epoch token.
-    fn mark_members(&mut self, rows: &[u32]) -> u32 {
+    /// Marks `rows` as the current node; returns the epoch token and the
+    /// number of *distinct* rows stamped (fewer than `rows.len()` exactly
+    /// when `rows` contains bootstrap duplicates, which the membership
+    /// stamps cannot express).
+    fn mark_members(&mut self, rows: &[u32]) -> (u32, usize) {
         self.epoch += 1;
+        let mut distinct = 0usize;
         for &r in rows {
-            self.member_epoch[r as usize] = self.epoch;
+            if self.member_epoch[r as usize] != self.epoch {
+                self.member_epoch[r as usize] = self.epoch;
+                distinct += 1;
+            }
         }
-        self.epoch
+        (self.epoch, distinct)
     }
 
     #[inline]
@@ -126,8 +133,12 @@ impl TrainingCache {
         self.member_epoch[row as usize] == epoch
     }
 
-    /// Global sort order of a numerical column (built on first use).
-    fn sorted_order(&mut self, ds: &Dataset, col: usize) -> &[u32] {
+    /// Builds the global sort order of a numerical column on first use.
+    /// Split from the accessor so callers can hold the `&self` borrow of
+    /// [`TrainingCache::sorted_order`] alongside `is_member` — the seed
+    /// cloned the full O(N) order per node to work around the `&mut`
+    /// borrow instead.
+    fn ensure_sorted(&mut self, ds: &Dataset, col: usize) {
         if self.sorted[col].is_none() {
             let values = ds.columns[col].as_numerical().expect("presort on non-numerical");
             let mut idx: Vec<u32> =
@@ -137,11 +148,17 @@ impl TrainingCache {
             });
             self.sorted[col] = Some(idx);
         }
-        self.sorted[col].as_ref().unwrap()
     }
 
-    /// Histogram binning of a numerical column (built on first use).
-    fn binned_column(&mut self, ds: &Dataset, col: usize, bins: usize) -> &(Vec<f32>, Vec<u16>) {
+    /// Borrows the prebuilt global sort order (`ensure_sorted` first).
+    fn sorted_order(&self, col: usize) -> &[u32] {
+        self.sorted[col].as_ref().expect("ensure_sorted must be called before sorted_order")
+    }
+
+    /// Builds the histogram binning of a numerical column on first use
+    /// (same two-phase pattern as `ensure_sorted`: the seed cloned the
+    /// per-row bin assignment per node).
+    fn ensure_binned(&mut self, ds: &Dataset, col: usize, bins: usize) {
         if self.binned[col].is_none() {
             let values = ds.columns[col].as_numerical().expect("binning non-numerical");
             let mut sorted: Vec<f32> =
@@ -170,7 +187,14 @@ impl TrainingCache {
                 .collect();
             self.binned[col] = Some((edges, assigned));
         }
-        self.binned[col].as_ref().unwrap()
+    }
+
+    /// Borrows the prebuilt (bin edges, per-row bin index) of a column
+    /// (`ensure_binned` first).
+    fn binned_column(&self, col: usize) -> (&[f32], &[u16]) {
+        let b =
+            self.binned[col].as_ref().expect("ensure_binned must be called before binned_column");
+        (b.0.as_slice(), b.1.as_slice())
     }
 }
 

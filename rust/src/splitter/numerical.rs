@@ -69,14 +69,14 @@ pub fn split_presorted(
     // Duplicated rows (bootstrap) need multiplicity, which membership
     // stamps cannot express; fall back to in-sorting in that case. The RF
     // learner does not use presorting for exactly this reason.
-    let epoch = cache.mark_members(rows);
-    if rows.iter().any(|&r| !cache.is_member(r, epoch)) {
+    let (epoch, distinct) = cache.mark_members(rows);
+    if distinct != rows.len() {
         return split_insort(ds, col, rows, labels, cfg);
     }
+    cache.ensure_sorted(ds, col);
     let values = ds.columns[col].as_numerical().expect("numerical column");
-    let order = cache.sorted_order(ds, col).to_vec();
     let mut pairs = Vec::with_capacity(rows.len());
-    for r in order {
+    for &r in cache.sorted_order(col) {
         if cache.is_member(r, epoch) {
             pairs.push((values[r as usize], r));
         }
@@ -101,7 +101,8 @@ pub fn split_histogram(
     cache: &mut TrainingCache,
     bins: usize,
 ) -> Option<SplitCandidate> {
-    let (edges, assignment) = cache.binned_column(ds, col, bins).clone();
+    cache.ensure_binned(ds, col, bins);
+    let (edges, assignment) = cache.binned_column(col);
     if edges.is_empty() {
         return None;
     }

@@ -5,11 +5,18 @@
 //! offers the common "parallel map over indices" pattern.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 /// Runs `f(i)` for `i in 0..n` across `threads` OS threads and returns the
 /// results in index order. Falls back to sequential execution when
 /// `threads <= 1` (the common case on this single-core testbed).
+///
+/// Work is handed out as contiguous index blocks through one atomic
+/// counter (dynamic balancing for uneven items like RF trees); each
+/// thread appends results to its own buffers, which are stitched back in
+/// index order at the end. No per-item synchronization — the old
+/// `Mutex<Option<T>>`-per-item scheme cost one allocation and one lock
+/// round-trip per item on the training and batch-inference hot paths.
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -19,24 +26,43 @@ where
         return (0..n).map(f).collect();
     }
     let threads = threads.min(n);
+    // ~4 blocks per thread: coarse enough to amortize the counter, fine
+    // enough to balance uneven per-item cost.
+    let block = n.div_ceil(threads * 4).max(1);
     let next = AtomicUsize::new(0);
-    let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let out = f(i);
-                *results[i].lock().unwrap() = Some(out);
-            });
-        }
+    let mut pieces: Vec<(usize, Vec<T>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut local: Vec<(usize, Vec<T>)> = Vec::new();
+                    loop {
+                        let start = next.fetch_add(block, Ordering::Relaxed);
+                        if start >= n {
+                            break;
+                        }
+                        let end = (start + block).min(n);
+                        let mut buf = Vec::with_capacity(end - start);
+                        for i in start..end {
+                            buf.push(f(i));
+                        }
+                        local.push((start, buf));
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("parallel_map worker panicked"))
+            .collect()
     });
-    results
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker did not produce a result"))
-        .collect()
+    pieces.sort_by_key(|&(start, _)| start);
+    let mut out = Vec::with_capacity(n);
+    for (_, mut piece) in pieces {
+        out.append(&mut piece);
+    }
+    debug_assert_eq!(out.len(), n);
+    out
 }
 
 /// Long-lived worker pool with explicit job submission; used by the
@@ -124,6 +150,18 @@ mod tests {
     fn parallel_map_sequential_fallback() {
         let out = parallel_map(5, 1, |i| i + 1);
         assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn parallel_map_uneven_blocks() {
+        // n not divisible by threads*4: tail blocks must still land in
+        // index order.
+        for n in [2usize, 7, 10, 65, 100] {
+            for threads in [2usize, 3, 8] {
+                let out = parallel_map(n, threads, |i| 3 * i);
+                assert_eq!(out, (0..n).map(|i| 3 * i).collect::<Vec<_>>(), "n={n} t={threads}");
+            }
+        }
     }
 
     #[test]

@@ -183,6 +183,200 @@ fn prop_auc_invariant_under_monotone_transform() {
     });
 }
 
+/// Builds a mixed-semantic dataset (numerical + categorical + boolean +
+/// categorical-set, all with missing values) and a label column:
+/// categorical with `classes` classes when `classes >= 2`, numerical
+/// (regression) when `classes == 0`.
+fn mixed_ds(n: usize, classes: usize, rng: &mut Rng) -> Dataset {
+    use ydf::dataset::{MISSING_BOOL, MISSING_CAT};
+    let mut x0 = Vec::with_capacity(n);
+    let mut x1 = Vec::with_capacity(n);
+    let mut cat = Vec::with_capacity(n);
+    let mut boo = Vec::with_capacity(n);
+    let mut cs_offsets = vec![0u32];
+    let mut cs_values: Vec<u32> = Vec::new();
+    let mut label_cat = Vec::with_capacity(n);
+    let mut label_num = Vec::with_capacity(n);
+    for i in 0..n {
+        let a = rng.uniform_range(-2.0, 2.0);
+        let b = rng.uniform_range(-2.0, 2.0);
+        let c = rng.uniform_usize(4);
+        let bo = rng.bernoulli(0.5);
+        x0.push(if rng.bernoulli(0.06) { f32::NAN } else { a as f32 });
+        x1.push(if rng.bernoulli(0.06) { f32::NAN } else { b as f32 });
+        cat.push(if rng.bernoulli(0.06) { MISSING_CAT } else { c as u32 });
+        boo.push(if rng.bernoulli(0.06) { MISSING_BOOL } else { bo as u8 });
+        let mut has_token0 = false;
+        if rng.bernoulli(0.06) {
+            cs_values.push(MISSING_CAT); // sentinel: missing set
+        } else {
+            for _ in 0..rng.uniform_usize(3) {
+                let tok = rng.uniform_usize(5) as u32;
+                has_token0 |= tok == 0;
+                cs_values.push(tok);
+            }
+        }
+        cs_offsets.push(cs_values.len() as u32);
+        let z = a + 0.5 * b
+            + if bo { 0.8 } else { -0.4 }
+            + c as f64 * 0.3
+            + if has_token0 { 1.2 } else { 0.0 }
+            + rng.normal_ms(0.0, 0.3);
+        if classes >= 2 {
+            let mut y = if z > 0.8 {
+                2
+            } else if z > -0.2 {
+                1
+            } else {
+                0
+            };
+            y = y.min(classes as u32 - 1);
+            // Guarantee every class appears.
+            if i < classes {
+                y = i as u32;
+            }
+            label_cat.push(y);
+        } else {
+            label_num.push(z as f32);
+        }
+    }
+    let mut columns = vec![
+        ColumnSpec::numerical("x0"),
+        ColumnSpec::numerical("x1"),
+        ColumnSpec::categorical("cat", (0..4).map(|i| format!("c{i}")).collect()),
+        ColumnSpec::boolean("flag"),
+        ColumnSpec::catset("tokens", (0..5).map(|i| format!("t{i}")).collect()),
+    ];
+    let mut data = vec![
+        ColumnData::Numerical(x0),
+        ColumnData::Numerical(x1),
+        ColumnData::Categorical(cat),
+        ColumnData::Boolean(boo),
+        ColumnData::CategoricalSet { offsets: cs_offsets, values: cs_values },
+    ];
+    if classes >= 2 {
+        columns.push(ColumnSpec::categorical(
+            "label",
+            (0..classes).map(|i| format!("y{i}")).collect(),
+        ));
+        data.push(ColumnData::Categorical(label_cat));
+    } else {
+        columns.push(ColumnSpec::numerical("label"));
+        data.push(ColumnData::Numerical(label_num));
+    }
+    Dataset::new(DataSpec { columns }, data).unwrap()
+}
+
+/// Asserts one engine agrees with the model (== NaiveEngine) on the
+/// per-row path, the full-range batch path, an offset non-block-aligned
+/// subrange, and the multi-threaded whole-dataset path.
+fn check_engine_consistency(
+    engine: &dyn ydf::inference::InferenceEngine,
+    model: &dyn ydf::model::Model,
+    ds: &Dataset,
+    ctx: &str,
+) {
+    fn close(a: &[f64], b: &[f64], ctx: &str) {
+        assert_eq!(a.len(), b.len(), "{ctx}");
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < 1e-9, "{ctx}: {a:?} vs {b:?}");
+        }
+    }
+    let n = ds.num_rows();
+    let dim = engine.output_dim();
+    for r in 0..n {
+        close(
+            &engine.predict_row(&ds.row(r)),
+            &model.predict_ds_row(ds, r),
+            &format!("{ctx}/row {r}"),
+        );
+    }
+    let mut out = vec![0.0f64; n * dim];
+    engine.predict_batch(ds, 0..n, &mut out);
+    for r in 0..n {
+        close(
+            &out[r * dim..(r + 1) * dim],
+            &model.predict_ds_row(ds, r),
+            &format!("{ctx}/batch {r}"),
+        );
+    }
+    let (lo, hi) = (n / 3 + 1, n - 2); // offset, not block-aligned
+    let mut sub = vec![0.0f64; (hi - lo) * dim];
+    engine.predict_batch(ds, lo..hi, &mut sub);
+    for (i, r) in (lo..hi).enumerate() {
+        close(
+            &sub[i * dim..(i + 1) * dim],
+            &model.predict_ds_row(ds, r),
+            &format!("{ctx}/subrange {r}"),
+        );
+    }
+    let mut multi = vec![0.0f64; n * dim];
+    engine.predict_into(ds, 3, &mut multi);
+    close(&multi, &out, &format!("{ctx}/predict_into"));
+}
+
+fn check_all_engines(model: &dyn ydf::model::Model, ds: &Dataset, ctx: &str) {
+    use ydf::inference::{flat::FlatEngine, naive::NaiveEngine, quickscorer::QuickScorerEngine};
+    let naive = NaiveEngine::compile(model);
+    check_engine_consistency(&naive, model, ds, &format!("{ctx}/naive"));
+    let flat = FlatEngine::compile(model)
+        .unwrap_or_else(|| panic!("{ctx}: flat engine must compile for forest models"));
+    check_engine_consistency(&flat, model, ds, &format!("{ctx}/flat"));
+    if let Some(qs) = QuickScorerEngine::compile(model) {
+        check_engine_consistency(&qs, model, ds, &format!("{ctx}/quickscorer"));
+    }
+}
+
+#[test]
+fn prop_batch_path_matches_row_path_and_naive() {
+    use ydf::learner::gbt::GbtConfig;
+    use ydf::learner::random_forest::RandomForestConfig;
+    use ydf::learner::{GradientBoostedTreesLearner, Learner, RandomForestLearner};
+    use ydf::model::Task;
+
+    run_cases(0xBA7C4, 3, |rng, case| {
+        let n = 91 + rng.uniform_usize(80); // tail block almost never 64-aligned
+        let classes = if case % 2 == 0 { 2 } else { 3 };
+
+        // Classification: binomial (2 classes) and multinomial (3).
+        let ds = mixed_ds(n, classes, rng);
+        let mut gbt = GbtConfig::new("label");
+        gbt.num_trees = 5;
+        gbt.max_depth = 4;
+        let model = GradientBoostedTreesLearner::new(gbt).train(&ds).unwrap();
+        check_all_engines(model.as_ref(), &ds, &format!("case {case}/gbt-cls"));
+
+        let mut rf = RandomForestConfig::new("label");
+        rf.num_trees = 4;
+        rf.compute_oob = false;
+        let model = RandomForestLearner::new(rf).train(&ds).unwrap();
+        check_all_engines(model.as_ref(), &ds, &format!("case {case}/rf-cls"));
+
+        // Regression on the same mixed features.
+        let ds = mixed_ds(n, 0, rng);
+        let mut gbt = GbtConfig::new("label");
+        gbt.task = Task::Regression;
+        gbt.num_trees = 5;
+        gbt.max_depth = 4;
+        let model = GradientBoostedTreesLearner::new(gbt).train(&ds).unwrap();
+        check_all_engines(model.as_ref(), &ds, &format!("case {case}/gbt-reg"));
+
+        let mut rf = RandomForestConfig::new("label");
+        rf.task = Task::Regression;
+        rf.num_trees = 4;
+        rf.compute_oob = false;
+        let model = RandomForestLearner::new(rf).train(&ds).unwrap();
+        check_all_engines(model.as_ref(), &ds, &format!("case {case}/rf-reg"));
+    });
+
+    // Oblique conditions (sparse projections): flat + naive engines only.
+    let ds = ydf::dataset::synthetic::adult_like(141, 77);
+    let mut cfg = ydf::learner::gbt::GbtConfig::benchmark_rank1("income");
+    cfg.num_trees = 5;
+    let model = ydf::learner::GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+    check_all_engines(model.as_ref(), &ds, "oblique-gbt");
+}
+
 #[test]
 fn prop_kfold_partitions() {
     run_cases(0x5EED, 20, |rng, _| {
