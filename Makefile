@@ -1,0 +1,26 @@
+# Convenience targets. The crate itself is plain cargo; see README.md.
+
+.PHONY: build test docs bench verify artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# Documentation gate: rustdoc must be warning-free and every doctest must
+# pass. Part of the tier-1 verify recipe (.claude/skills/verify/SKILL.md).
+docs:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+	cargo test --doc
+
+bench:
+	cargo bench --bench b4_engines
+
+# Tier-1 gate (ROADMAP.md) plus the docs gate.
+verify: build test docs
+
+# Build-time JAX/Pallas artifacts for the PJRT/XLA engine (requires the
+# python/ toolchain; the Rust side is feature-gated behind `--features xla`).
+artifacts:
+	python3 python/compile/aot.py

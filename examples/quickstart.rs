@@ -22,7 +22,13 @@ fn main() {
     // 4. Analyse: the `show_model` report (Appendix B.2).
     println!("{}", model.describe());
 
-    // 5. Evaluate with confidence intervals (Appendix B.3).
+    // 5. Evaluate with confidence intervals (Appendix B.3). Evaluation
+    // rides on the automatic engine selection (§3.7) — say which engine
+    // won instead of picking one silently.
+    match ydf::inference::auto_engine_name(model.as_ref()) {
+        Some(name) => println!("inference engine (auto-selected): {name}"),
+        None => println!("inference engine: none compatible, using the model's row loop"),
+    }
     let evaluation = evaluate_model(model.as_ref(), &test, "income").expect("evaluation");
     println!("{}", evaluation.report());
 }

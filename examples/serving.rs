@@ -23,10 +23,13 @@ fn main() {
     let model = GradientBoostedTreesLearner::new(cfg).train(&train).unwrap();
 
     // Engine selection (§3.7): all compatible engines, fastest first.
+    // The first one is what the serving loop below (and `predict_flat`)
+    // auto-selects — print it rather than choosing silently.
     let engines = compile_engines(model.as_ref());
     println!("compatible engines:");
-    for e in &engines {
-        println!("  {}", e.name());
+    for (i, e) in engines.iter().enumerate() {
+        let marker = if i == 0 { "  <- auto-selected" } else { "" };
+        println!("  {}{marker}", e.name());
     }
 
     // Optional PJRT engine, if the XLA artifact is available.

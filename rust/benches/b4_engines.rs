@@ -1,10 +1,12 @@
 //! Appendix B.4: the model inference benchmark — every compatible engine
 //! timed over the dataset on both the batch path (columnar, block-wise)
 //! and the seed-style per-row path, µs/example (the report the CLI's
-//! `benchmark_inference` prints). Includes the PJRT/XLA engine when the
-//! artifact is available, and writes a machine-readable
-//! `BENCH_inference.json` so subsequent PRs can track the perf
-//! trajectory.
+//! `benchmark_inference` prints). The scalar block kernels of the flat
+//! and QuickScorer engines are timed alongside the default SIMD lane
+//! kernels (`[scalar]`-tagged rows), so the scalar-vs-SIMD gap is part of
+//! the record. Includes the PJRT/XLA engine when the artifact is
+//! available, and writes a machine-readable `BENCH_inference.json` so
+//! subsequent PRs can track the perf trajectory.
 //!
 //! Run: cargo bench --bench b4_engines
 //!      cargo bench --bench b4_engines -- --rows=20000 --trees=100 --out=path.json

@@ -68,7 +68,7 @@ pub struct SuiteResult {
     pub config: SuiteConfig,
     pub learner_names: Vec<&'static str>,
     pub dataset_names: Vec<&'static str>,
-    /// accuracy[dataset][learner][fold]
+    /// `accuracy[dataset][learner][fold]`
     pub accuracy: Vec<Vec<Vec<f64>>>,
     /// mean seconds per fold
     pub train_seconds: Vec<Vec<f64>>,

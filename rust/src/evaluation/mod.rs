@@ -1,6 +1,15 @@
 //! Model evaluation (§2.2, §3.6): metrics with confidence intervals, the
 //! Appendix B.3 evaluation report, cross-validation and pairwise model
 //! comparison with statistical tests.
+//!
+//! The entry point is [`evaluate_model`], which batch-predicts the
+//! dataset through the fastest compiled engine
+//! ([`crate::inference::predict_flat`]) and returns an [`Evaluation`]:
+//! accuracy with bootstrap and Wilson intervals, log loss, confusion
+//! matrix and per-class one-vs-rest AUC/PR-AUC for classification, RMSE
+//! for regression; `Evaluation::report()` renders the Appendix B.3 text
+//! report. [`cv`] adds k-fold cross-validation and [`comparison`] the
+//! pairwise statistical tests of §5.
 
 pub mod comparison;
 pub mod cv;
@@ -42,7 +51,7 @@ pub struct Evaluation {
     /// Accuracy/logloss of always predicting the majority class.
     pub default_accuracy: f64,
     pub default_log_loss: f64,
-    /// confusion[truth][predicted].
+    /// `confusion[truth][predicted]`.
     pub confusion: Vec<Vec<u64>>,
     pub class_names: Vec<String>,
     pub one_vs_rest: Vec<OneVsRest>,

@@ -6,6 +6,17 @@
 //! node table stays cache-hot across the whole block) against resolved
 //! columnar slices, and aggregates into the caller's output buffer —
 //! no `Observation`, no per-row `Vec`.
+//!
+//! Two block kernels exist. The *scalar* kernel ([`FlatEngine`]'s
+//! `eval_tree_cols`) walks each row down the tree independently and is
+//! the correctness reference. The *lane* kernel (`eval_tree_cols_lanes`)
+//! restructures the traversal level-synchronously: all rows of a block
+//! advance one tree level per round, the `x >= threshold` comparisons run
+//! as one straight-line sweep over contiguous lane arrays (which the
+//! compiler auto-vectorizes), and oblique dot products accumulate
+//! term-major across lanes while keeping each lane's scalar term order —
+//! so the two kernels are bit-identical. The `simd` cargo feature selects
+//! the default kernel; [`FlatEngine::set_simd`] overrides it at runtime.
 
 use super::{Aggregate, BLOCK_SIZE, ColumnAccess, InferenceEngine};
 use crate::dataset::{AttrValue, Dataset, Observation};
@@ -45,6 +56,16 @@ pub struct FlatEngine {
     leaf_values: Vec<f32>,
     leaf_dim: usize,
     aggregate: Aggregate,
+    /// Per tree: every node is Leaf/Higher/Oblique — the shapes the lane
+    /// kernel handles. Trees with categorical(-set) or boolean conditions
+    /// fall back to the scalar kernel.
+    lane_ok: Vec<bool>,
+    /// Per tree: attrs read by Higher nodes. The lane kernel is only used
+    /// when each resolves to a numerical column of the dataset at hand.
+    lane_attrs: Vec<Vec<u32>>,
+    /// Whether `predict_batch` uses the lane kernel where possible.
+    /// Defaults to the `simd` cargo feature.
+    simd: bool,
 }
 
 impl FlatEngine {
@@ -83,6 +104,9 @@ impl FlatEngine {
             leaf_values: Vec::new(),
             leaf_dim,
             aggregate,
+            lane_ok: Vec::new(),
+            lane_attrs: Vec::new(),
+            simd: cfg!(feature = "simd"),
         };
         for t in trees {
             let root = e.nodes.len() as u32;
@@ -207,7 +231,148 @@ impl FlatEngine {
                 }
             }
         }
+        // Lane-kernel metadata. Each tree's nodes occupy the contiguous
+        // range [roots[ti], roots[ti+1]) thanks to the BFS copy above.
+        for ti in 0..e.roots.len() {
+            let lo = e.roots[ti] as usize;
+            let hi = e.roots.get(ti + 1).map(|&r| r as usize).unwrap_or(e.nodes.len());
+            let mut ok = true;
+            let mut attrs: Vec<u32> = Vec::new();
+            for n in &e.nodes[lo..hi] {
+                match n.kind {
+                    KIND_LEAF | KIND_OBLIQUE => {}
+                    KIND_HIGHER => attrs.push(n.attr),
+                    _ => ok = false,
+                }
+            }
+            attrs.sort_unstable();
+            attrs.dedup();
+            e.lane_ok.push(ok);
+            e.lane_attrs.push(attrs);
+        }
         e
+    }
+
+    /// Selects the lane-wise (`true`) or scalar (`false`) block kernel for
+    /// `predict_batch`. The default follows the `simd` cargo feature; the
+    /// scalar kernel always stays available as the correctness reference
+    /// and the two are bit-identical (see `prop_simd_lanes_match_scalar`
+    /// in `rust/tests/properties.rs`).
+    pub fn set_simd(&mut self, on: bool) {
+        self.simd = on;
+    }
+
+    /// Lane-wise traversal of one tree over the block rows
+    /// `start..start + bs`: every active row advances one level per round,
+    /// and the `x >= threshold` decisions of a round run as one
+    /// straight-line sweep over contiguous lane arrays. Gated by
+    /// `lane_ok`/`lane_attrs` (Leaf/Higher/Oblique nodes only, all Higher
+    /// attrs resolved to numerical columns). Leaf offsets are written to
+    /// `leaves[row * stride + ti]`.
+    fn eval_tree_cols_lanes(
+        &self,
+        root: u32,
+        cols: &ColumnAccess,
+        start: usize,
+        bs: usize,
+        leaves: &mut [u32],
+        stride: usize,
+        ti: usize,
+    ) {
+        debug_assert!(bs <= BLOCK_SIZE);
+        // Lane state: node index and block-local row of each active lane.
+        let mut idx = [0u32; BLOCK_SIZE];
+        let mut row = [0u32; BLOCK_SIZE];
+        // Per-round gathered operands for the lane sweep.
+        let mut xs = [0.0f32; BLOCK_SIZE];
+        let mut ts = [0.0f32; BLOCK_SIZE];
+        let mut m2p = [false; BLOCK_SIZE];
+        let mut ch = [0u32; BLOCK_SIZE];
+        for i in 0..bs {
+            idx[i] = root;
+            row[i] = i as u32;
+        }
+        let mut m = bs;
+        while m > 0 {
+            // Retire lanes that reached a leaf; keep the rest in row order
+            // (runs below then read their columns with ascending indices).
+            let mut w = 0usize;
+            for i in 0..m {
+                let n = &self.nodes[idx[i] as usize];
+                if n.kind == KIND_LEAF {
+                    leaves[row[i] as usize * stride + ti] = n.aux;
+                } else {
+                    idx[w] = idx[i];
+                    row[w] = row[i];
+                    w += 1;
+                }
+            }
+            m = w;
+            if m == 0 {
+                break;
+            }
+            // Gather (x, threshold, child) per lane. Consecutive lanes on
+            // the same node (a "run" — all of them, at the root) share the
+            // node decode and stream the column in row order.
+            let mut i = 0usize;
+            while i < m {
+                let node_idx = idx[i];
+                let mut j = i + 1;
+                while j < m && idx[j] == node_idx {
+                    j += 1;
+                }
+                let n = &self.nodes[node_idx as usize];
+                match n.kind {
+                    KIND_HIGHER => {
+                        let col = cols.num[n.attr as usize]
+                            .expect("lane kernel requires resolved numerical columns");
+                        for k in i..j {
+                            xs[k] = col[start + row[k] as usize];
+                        }
+                        for k in i..j {
+                            ts[k] = n.threshold;
+                            m2p[k] = n.missing_to_positive;
+                            ch[k] = n.child;
+                        }
+                    }
+                    KIND_OBLIQUE => {
+                        xs[i..j].fill(0.0);
+                        // Term-major across the run's lanes; each lane still
+                        // accumulates in the scalar kernel's term order, so
+                        // the dot product is bit-identical to it.
+                        for &(a, wgt) in
+                            &self.oblique[n.aux as usize..(n.aux + n.aux_len) as usize]
+                        {
+                            if let Some(col) = cols.num[a as usize] {
+                                for k in i..j {
+                                    let x = col[start + row[k] as usize];
+                                    if !x.is_nan() {
+                                        xs[k] += wgt * x;
+                                    }
+                                }
+                            }
+                        }
+                        for k in i..j {
+                            ts[k] = n.threshold;
+                            // The scalar kernel never routes oblique nodes by
+                            // the missing policy: `acc >= threshold` with a
+                            // NaN accumulator is plain false.
+                            m2p[k] = false;
+                            ch[k] = n.child;
+                        }
+                    }
+                    _ => unreachable!("lane kernel gated on node kinds"),
+                }
+                i = j;
+            }
+            // The lane sweep: branch-free compare + advance, vectorizable.
+            for i in 0..m {
+                let x = xs[i];
+                let nan = x.is_nan();
+                let go_pos = (!nan && x >= ts[i]) | (nan & m2p[i]);
+                idx[i] = ch[i] + (!go_pos) as u32;
+            }
+        }
     }
 
     /// Evaluates one tree on a row observation; returns leaf-value offset.
@@ -383,7 +548,10 @@ impl InferenceEngine for FlatEngine {
             Aggregate::RfAverage { .. } | Aggregate::RfRegression => "RandomForest",
             Aggregate::Gbt { .. } => "GradientBoostedTrees",
         };
-        format!("{kind}OptPred") // YDF's name for its flat SoA engine
+        // YDF's name for its flat SoA engine. Stable across kernel choice:
+        // `benchmark_inference` tags its scalar-kernel variants itself, so
+        // BENCH_inference.json keys stay comparable across feature configs.
+        format!("{kind}OptPred")
     }
 
     fn output_dim(&self) -> usize {
@@ -404,6 +572,21 @@ impl InferenceEngine for FlatEngine {
         debug_assert_eq!(out.len(), rows.len() * dim);
         let cols = ColumnAccess::new(ds);
         let num_trees = self.roots.len();
+        // Kernel choice per tree, once per call: the lane kernel needs
+        // compatible node kinds and every Higher attr resolved to a
+        // numerical column of *this* dataset.
+        let use_lanes: Vec<bool> = if self.simd {
+            (0..num_trees)
+                .map(|ti| {
+                    self.lane_ok[ti]
+                        && self.lane_attrs[ti]
+                            .iter()
+                            .all(|&a| cols.num[a as usize].is_some())
+                })
+                .collect()
+        } else {
+            vec![false; num_trees]
+        };
         // Scratch sized once per batch call; the per-row loop is
         // allocation-free.
         let mut leaves = vec![0u32; BLOCK_SIZE * num_trees];
@@ -415,8 +598,13 @@ impl InferenceEngine for FlatEngine {
             // Tree-major over the block: one tree's node table stays hot
             // across all `bs` examples.
             for (ti, &root) in self.roots.iter().enumerate() {
-                for bi in 0..bs {
-                    leaves[bi * num_trees + ti] = self.eval_tree_cols(root, &cols, start + bi);
+                if use_lanes[ti] {
+                    self.eval_tree_cols_lanes(root, &cols, start, bs, &mut leaves, num_trees, ti);
+                } else {
+                    for bi in 0..bs {
+                        leaves[bi * num_trees + ti] =
+                            self.eval_tree_cols(root, &cols, start + bi);
+                    }
                 }
             }
             for bi in 0..bs {
@@ -506,6 +694,29 @@ mod tests {
         flat.predict_batch(&ds, range.clone(), &mut out);
         for (i, r) in range.enumerate() {
             close(&out[i * dim..(i + 1) * dim], &model.predict_ds_row(&ds, r));
+        }
+    }
+
+    #[test]
+    fn lane_kernel_matches_scalar_bitwise() {
+        // Oblique splits included: their lane-wise dot products must stay
+        // bit-identical to the scalar term order.
+        let ds = synthetic::adult_like(150, 151);
+        let mut cfg = GbtConfig::benchmark_rank1("income");
+        cfg.num_trees = 6;
+        let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+        let mut scalar = FlatEngine::compile(model.as_ref()).unwrap();
+        scalar.set_simd(false);
+        let mut lanes = FlatEngine::compile(model.as_ref()).unwrap();
+        lanes.set_simd(true);
+        let dim = scalar.output_dim();
+        let n = ds.num_rows();
+        let mut a = vec![0.0f64; n * dim];
+        let mut b = vec![0.0f64; n * dim];
+        scalar.predict_batch(&ds, 0..n, &mut a);
+        lanes.predict_batch(&ds, 0..n, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "scalar vs lane kernel");
         }
     }
 

@@ -37,7 +37,40 @@
 //! only need predictions from a `Model` should use [`predict_flat`], which
 //! performs the selection and batch fan-out in one call and degrades to
 //! the model's own row loop for wrapper models (ensembles, calibrators)
-//! that no engine compiles.
+//! that no engine compiles. [`auto_engine_name`] reports which path
+//! `predict_flat` would take, so tools can surface the selection.
+//!
+//! ## SIMD lane kernels
+//!
+//! The flat and QuickScorer engines each carry two block kernels: a
+//! scalar one (the correctness reference) and a lane-wise one whose
+//! threshold sweeps and bitvector AND-reductions are straight-line loops
+//! over the [`BLOCK_SIZE`]-row block that the compiler auto-vectorizes.
+//! Both are always compiled; the `simd` cargo feature (on by default)
+//! only selects which one `predict_batch` uses, and
+//! `set_simd(true | false)` on either engine overrides that per instance.
+//! The two kernels are bit-identical (pinned by
+//! `rust/tests/properties.rs::prop_simd_lanes_match_scalar`), and
+//! [`benchmark_inference`] times both — `BENCH_inference.json` keys the
+//! scalar variants with a `[scalar]` suffix. See `docs/serving.md` for
+//! the full serving contract.
+//!
+//! ```
+//! use ydf::inference::predict_flat;
+//! use ydf::learner::gbt::GbtConfig;
+//! use ydf::learner::{GradientBoostedTreesLearner, Learner};
+//!
+//! let data = ydf::dataset::synthetic::adult_like(100, 7);
+//! let mut config = GbtConfig::new("income");
+//! config.num_trees = 3;
+//! config.max_depth = 3;
+//! let model = GradientBoostedTreesLearner::new(config).train(&data).unwrap();
+//! // Fastest compatible engine, flat row-major output buffer.
+//! let (predictions, dim) = predict_flat(model.as_ref(), &data);
+//! assert_eq!(predictions.len(), data.num_rows() * dim);
+//! let p0 = &predictions[..dim]; // class probabilities of row 0
+//! assert!((p0.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+//! ```
 
 pub mod flat;
 pub mod naive;
@@ -231,6 +264,17 @@ pub fn compile_engines(model: &dyn Model) -> Vec<Box<dyn InferenceEngine>> {
     out
 }
 
+/// The engine [`predict_flat`] rides on: QuickScorer when compatible,
+/// otherwise the flat engine, otherwise `None` (wrapper models —
+/// ensembles, calibrators — fall back to the model's own row loop). The
+/// single source of truth for the automatic selection order.
+fn fastest_engine(model: &dyn Model) -> Option<Box<dyn InferenceEngine>> {
+    if let Some(qs) = quickscorer::QuickScorerEngine::compile(model) {
+        return Some(Box::new(qs));
+    }
+    flat::FlatEngine::compile(model).map(|fl| Box::new(fl) as Box<dyn InferenceEngine>)
+}
+
 /// Batch prediction for any model through the fastest compatible engine:
 /// compiles QuickScorer or the flat engine when the model structure allows
 /// it, and falls back to the model's own columnar row loop otherwise
@@ -240,16 +284,24 @@ pub fn predict_flat(model: &dyn Model, ds: &Dataset) -> (Vec<f64>, usize) {
     let dim = model.num_classes().max(1);
     let n = ds.num_rows();
     let mut flat = vec![0.0f64; n * dim];
-    if let Some(qs) = quickscorer::QuickScorerEngine::compile(model) {
-        qs.predict_into(ds, batch_threads(), &mut flat);
-    } else if let Some(fl) = flat::FlatEngine::compile(model) {
-        fl.predict_into(ds, batch_threads(), &mut flat);
+    if let Some(engine) = fastest_engine(model) {
+        engine.predict_into(ds, batch_threads(), &mut flat);
     } else {
         for r in 0..n {
             flat[r * dim..(r + 1) * dim].copy_from_slice(&model.predict_ds_row(ds, r));
         }
     }
     (flat, dim)
+}
+
+/// Name of the engine [`predict_flat`] would select for `model` — the
+/// fastest compatible one — or `None` when no engine compiles and
+/// prediction falls back to the model's own row loop (wrapper models).
+/// Compiles the engine to answer (compilation is cheap next to serving,
+/// but don't call this per request). Lets tools print the automatic
+/// engine selection they ride on.
+pub fn auto_engine_name(model: &dyn Model) -> Option<String> {
+    fastest_engine(model).map(|e| e.name())
 }
 
 /// One engine's timings in the B.4 report: the batch path (columnar
@@ -267,22 +319,46 @@ pub struct InferenceBenchmark {
     pub num_examples: usize,
     pub runs: usize,
     pub block_size: usize,
+    /// Engines compatible with the model (`compile_engines` count); the
+    /// `engines` table may hold more rows — kernel variants of the same
+    /// engine, tagged `[scalar]`.
+    pub num_compatible: usize,
     /// Sorted by batch time, fastest first.
     pub engines: Vec<EngineTiming>,
 }
 
 /// Runs every compatible engine over the dataset `runs` times on both the
-/// batch and the per-row path.
+/// batch and the per-row path. When the default kernels are the SIMD lane
+/// sweeps (`simd` cargo feature, on by default), the scalar kernels of the
+/// flat and QuickScorer engines are timed as additional `[scalar]`-tagged
+/// rows, so `BENCH_inference.json` tracks scalar vs SIMD across PRs. The
+/// per-row path is kernel-independent, so the variants inherit the
+/// untagged row timing instead of re-measuring it.
 pub fn benchmark_inference(
     model: &dyn Model,
     ds: &Dataset,
     runs: usize,
 ) -> InferenceBenchmark {
-    let engines = compile_engines(model);
+    let compatible = compile_engines(model);
+    let num_compatible = compatible.len();
+    // (label, engine, measure_row): scalar-kernel variants are labeled by
+    // the benchmark so engine names stay stable across feature configs.
+    let mut entries: Vec<(String, Box<dyn InferenceEngine>, bool)> =
+        compatible.into_iter().map(|e| (e.name(), e, true)).collect();
+    if cfg!(feature = "simd") {
+        if let Some(mut qs) = quickscorer::QuickScorerEngine::compile(model) {
+            qs.set_simd(false);
+            entries.push((format!("{}[scalar]", qs.name()), Box::new(qs), false));
+        }
+        if let Some(mut fl) = flat::FlatEngine::compile(model) {
+            fl.set_simd(false);
+            entries.push((format!("{}[scalar]", fl.name()), Box::new(fl), false));
+        }
+    }
     let runs = runs.max(1);
     let denom = (runs * ds.num_rows().max(1)) as f64;
     let mut timings: Vec<EngineTiming> = Vec::new();
-    for e in &engines {
+    for (name, e, measure_row) in &entries {
         let dim = e.output_dim();
         let mut flat = vec![0.0f64; ds.num_rows() * dim];
         let t0 = std::time::Instant::now();
@@ -291,15 +367,26 @@ pub fn benchmark_inference(
             std::hint::black_box(&mut flat);
         }
         let batch_us = t0.elapsed().as_secs_f64() / denom * 1e6;
-        let t0 = std::time::Instant::now();
-        for _ in 0..runs {
-            for r in 0..ds.num_rows() {
-                std::hint::black_box(e.predict_row(&ds.row(r)));
+        let row_us = if *measure_row {
+            let t0 = std::time::Instant::now();
+            for _ in 0..runs {
+                for r in 0..ds.num_rows() {
+                    std::hint::black_box(e.predict_row(&ds.row(r)));
+                }
             }
-        }
-        let row_us = t0.elapsed().as_secs_f64() / denom * 1e6;
+            t0.elapsed().as_secs_f64() / denom * 1e6
+        } else {
+            // Kernel variants share the untagged engine's per-row path;
+            // its entry was measured above.
+            let base = name.trim_end_matches("[scalar]");
+            timings
+                .iter()
+                .find(|t| t.name == base)
+                .map(|t| t.row_us_per_example)
+                .unwrap_or(0.0)
+        };
         timings.push(EngineTiming {
-            name: e.name(),
+            name: name.clone(),
             batch_us_per_example: batch_us,
             row_us_per_example: row_us,
         });
@@ -309,6 +396,7 @@ pub fn benchmark_inference(
         num_examples: ds.num_rows(),
         runs,
         block_size: BLOCK_SIZE,
+        num_compatible,
         engines: timings,
     }
 }
@@ -317,8 +405,9 @@ impl InferenceBenchmark {
     /// Renders the B.4 report.
     pub fn report(&self) -> String {
         let mut out = format!(
-            "Inference benchmark: {} engines compatible with the model, {} examples x {} runs \
-             (block={})\n  {:<42} {:>16} {:>18} {:>9}\n",
+            "Inference benchmark: {} engines compatible with the model ({} timed variants), \
+             {} examples x {} runs (block={})\n  {:<42} {:>16} {:>18} {:>9}\n",
+            self.num_compatible,
             self.engines.len(),
             self.num_examples,
             self.runs,
@@ -353,6 +442,7 @@ impl InferenceBenchmark {
         j.set("num_examples", Json::Num(self.num_examples as f64))
             .set("runs", Json::Num(self.runs as f64))
             .set("block_size", Json::Num(self.block_size as f64))
+            .set("num_compatible", Json::Num(self.num_compatible as f64))
             .set("engines", engines);
         j
     }
@@ -400,6 +490,34 @@ mod tests {
         assert!(rep.contains("engines compatible"));
         let json = bench.to_json().to_string();
         assert!(json.contains("batch_us_per_example"), "{json}");
+        // The scalar-kernel variants ride along whenever the default is
+        // the SIMD lane path, keying the scalar-vs-SIMD perf trajectory.
+        if cfg!(feature = "simd") {
+            assert!(json.contains("[scalar]"), "{json}");
+        }
+    }
+
+    #[test]
+    fn auto_engine_name_reports_selection() {
+        // `fastest_engine` and `compile_engines` encode the selection order
+        // independently (first returns one engine, the other all of them);
+        // pin them together so they cannot drift.
+        let ds = synthetic::adult_like(120, 115);
+        let mut cfg = GbtConfig::new("income");
+        cfg.num_trees = 3;
+        cfg.max_depth = 3; // QuickScorer-compatible
+        let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+        let name = auto_engine_name(model.as_ref()).expect("forest model compiles");
+        assert!(name.contains("QuickScorer"), "{name}");
+        assert_eq!(name, compile_engines(model.as_ref())[0].name());
+
+        // Oblique model: QuickScorer incompatible, flat engine selected.
+        let mut cfg = GbtConfig::benchmark_rank1("income");
+        cfg.num_trees = 3;
+        let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+        let name = auto_engine_name(model.as_ref()).expect("forest model compiles");
+        assert!(name.contains("OptPred"), "{name}");
+        assert_eq!(name, compile_engines(model.as_ref())[0].name());
     }
 
     #[test]

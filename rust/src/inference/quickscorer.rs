@@ -13,6 +13,21 @@
 //! scratch array, and the engine iterates feature-major — each feature's
 //! sorted node list and the feature's *column* are streamed once per
 //! block, so both stay cache-resident while the 64 examples are scored.
+//!
+//! Two block kernels exist. The *scalar* kernel (`score_block`) walks
+//! rows inside each feature, binary-searching the sorted node list per
+//! row; it is the correctness reference. The *lane* kernel
+//! (`score_block_lanes`) flips to node-major: bitvectors are held
+//! tree-major (`vt[tree * BLOCK_SIZE + row]`) so each node's threshold
+//! sweep is one branch-free compare-select over the 64-row block and its
+//! mask lands with one contiguous AND-reduction over 64 words — both
+//! straight-line loops the compiler auto-vectorizes. The block's min/max
+//! feature value prunes the node list first: nodes at or below the min
+//! are true everywhere (skipped), nodes above the max are false
+//! everywhere (unconditional AND). Bitwise AND commutes, so the two
+//! kernels produce bit-identical bitvectors. The `simd` cargo feature
+//! selects the default kernel; [`QuickScorerEngine::set_simd`] overrides
+//! it at runtime.
 
 use super::{Aggregate, BLOCK_SIZE, ColumnAccess, InferenceEngine};
 use crate::dataset::{AttrValue, Dataset, Observation, MISSING_BOOL, MISSING_CAT};
@@ -44,16 +59,29 @@ struct BooleanNode {
     missing_to_positive: bool,
 }
 
+/// ANDs `mask` into every lane of `tree`'s row in the tree-major
+/// bitvector scratch — the "false for the whole block" case shared by the
+/// missing-column and unconditional sweeps of `score_block_lanes`.
+#[inline]
+fn and_all_lanes(vt: &mut [u64], tree: u32, bs: usize, mask: u64) {
+    for slot in &mut vt[tree as usize * BLOCK_SIZE..][..bs] {
+        *slot &= mask;
+    }
+}
+
 pub struct QuickScorerEngine {
     /// Numerical nodes grouped by attribute, sorted by threshold asc.
     numerical: Vec<(usize, Vec<NumericalNode>)>,
     categorical: Vec<(usize, Vec<CategoricalNode>)>,
     boolean: Vec<(usize, Vec<BooleanNode>)>,
-    /// leaf_values[tree][leaf * leaf_dim .. +leaf_dim].
+    /// `leaf_values[tree][leaf * leaf_dim .. +leaf_dim]`.
     leaf_values: Vec<Vec<f32>>,
     leaf_dim: usize,
     num_trees: usize,
     aggregate: Aggregate,
+    /// Whether `predict_batch` scores blocks with the lane kernel.
+    /// Defaults to the `simd` cargo feature.
+    simd: bool,
 }
 
 impl QuickScorerEngine {
@@ -201,7 +229,17 @@ impl QuickScorerEngine {
             leaf_dim,
             num_trees: trees.len(),
             aggregate,
+            simd: cfg!(feature = "simd"),
         })
+    }
+
+    /// Selects the lane-wise (`true`) or scalar (`false`) block kernel for
+    /// `predict_batch`. The default follows the `simd` cargo feature; the
+    /// scalar kernel always stays available as the correctness reference
+    /// and the two are bit-identical (see `prop_simd_lanes_match_scalar`
+    /// in `rust/tests/properties.rs`).
+    pub fn set_simd(&mut self, on: bool) {
+        self.simd = on;
     }
 
     /// Core scoring: caller supplies per-attribute accessors (per-row
@@ -379,6 +417,144 @@ impl QuickScorerEngine {
         }
     }
 
+    /// Lane-wise block scoring. Bitvectors are kept tree-major in the
+    /// `vt` scratch (`vt[tree * BLOCK_SIZE + row]`) so every mask
+    /// application is a contiguous AND over the block's words, and the
+    /// per-node threshold sweep is one branch-free compare-select over
+    /// the block's feature values; the result is transposed into the
+    /// row-major `v` layout the aggregation reads. Applies exactly the
+    /// same set of (tree, mask) ANDs as `score_block` — AND commutes, so
+    /// the outputs are bit-identical.
+    fn score_block_lanes(
+        &self,
+        cols: &ColumnAccess,
+        start: usize,
+        bs: usize,
+        vt: &mut [u64],
+        v: &mut [u64],
+    ) {
+        let t = self.num_trees;
+        vt[..t * BLOCK_SIZE].fill(!0u64);
+        for (attr, nodes) in &self.numerical {
+            match cols.num[*attr] {
+                Some(vals) => {
+                    let xs = &vals[start..start + bs];
+                    if xs.iter().any(|x| x.is_nan()) {
+                        // NaN rows route by the per-node missing policy, so
+                        // threshold pruning is off: branch-free select per
+                        // lane over the full node list.
+                        for n in nodes {
+                            let lanes = &mut vt[n.tree as usize * BLOCK_SIZE..][..bs];
+                            for (x, slot) in xs.iter().zip(lanes.iter_mut()) {
+                                let falsify = if x.is_nan() {
+                                    !n.missing_to_positive
+                                } else {
+                                    *x < n.threshold
+                                };
+                                // keep = all-ones (no-op) unless falsified.
+                                *slot &= n.mask | (falsify as u64).wrapping_sub(1);
+                            }
+                        }
+                    } else {
+                        let mut min = xs[0];
+                        let mut max = xs[0];
+                        for &x in xs {
+                            min = min.min(x);
+                            max = max.max(x);
+                        }
+                        // Same predicate as the scalar kernel's per-row
+                        // binary search: nodes[..lo] hold threshold <= min
+                        // (true for every row, skipped); nodes[hi..] hold
+                        // threshold > max (false for every row).
+                        let lo = nodes.partition_point(|n| n.threshold <= min);
+                        let hi = nodes.partition_point(|n| n.threshold <= max);
+                        for n in &nodes[lo..hi] {
+                            let thr = n.threshold;
+                            let lanes = &mut vt[n.tree as usize * BLOCK_SIZE..][..bs];
+                            for (x, slot) in xs.iter().zip(lanes.iter_mut()) {
+                                *slot &= n.mask | ((*x < thr) as u64).wrapping_sub(1);
+                            }
+                        }
+                        for n in &nodes[hi..] {
+                            and_all_lanes(vt, n.tree, bs, n.mask);
+                        }
+                    }
+                }
+                None => {
+                    for n in nodes {
+                        if !n.missing_to_positive {
+                            and_all_lanes(vt, n.tree, bs, n.mask);
+                        }
+                    }
+                }
+            }
+        }
+        for (attr, nodes) in &self.categorical {
+            match cols.cat[*attr] {
+                Some(vals) => {
+                    let cs = &vals[start..start + bs];
+                    for n in nodes {
+                        let lanes = &mut vt[n.tree as usize * BLOCK_SIZE..][..bs];
+                        for (c, slot) in cs.iter().zip(lanes.iter_mut()) {
+                            let falsify = if *c == MISSING_CAT {
+                                !n.missing_to_positive
+                            } else {
+                                !bitmap_contains(&n.bitmap, *c)
+                            };
+                            if falsify {
+                                *slot &= n.mask;
+                            }
+                        }
+                    }
+                }
+                None => {
+                    for n in nodes {
+                        if !n.missing_to_positive {
+                            and_all_lanes(vt, n.tree, bs, n.mask);
+                        }
+                    }
+                }
+            }
+        }
+        for (attr, nodes) in &self.boolean {
+            match cols.boolean[*attr] {
+                Some(vals) => {
+                    let bools = &vals[start..start + bs];
+                    for n in nodes {
+                        let lanes = &mut vt[n.tree as usize * BLOCK_SIZE..][..bs];
+                        for (b, slot) in bools.iter().zip(lanes.iter_mut()) {
+                            let falsify = match *b {
+                                1 => false,
+                                0 => true,
+                                _ => {
+                                    debug_assert_eq!(*b, MISSING_BOOL);
+                                    !n.missing_to_positive
+                                }
+                            };
+                            if falsify {
+                                *slot &= n.mask;
+                            }
+                        }
+                    }
+                }
+                None => {
+                    for n in nodes {
+                        if !n.missing_to_positive {
+                            and_all_lanes(vt, n.tree, bs, n.mask);
+                        }
+                    }
+                }
+            }
+        }
+        // Transpose the tree-major scratch into the row-major layout the
+        // aggregation reads.
+        for bi in 0..bs {
+            for ti in 0..t {
+                v[bi * t + ti] = vt[ti * BLOCK_SIZE + bi];
+            }
+        }
+    }
+
     /// Aggregates one example's bitvectors into `out`
     /// (`out.len() == output_dim()`); `scores` is `aggregate.score_dim()`
     /// scratch.
@@ -437,6 +613,9 @@ impl InferenceEngine for QuickScorerEngine {
             Aggregate::Gbt { .. } => "GradientBoostedTrees",
             _ => "RandomForest",
         };
+        // Stable across kernel choice: `benchmark_inference` tags its
+        // scalar-kernel variants itself, so BENCH_inference.json keys stay
+        // comparable across feature configs.
         format!("{kind}QuickScorer")
     }
 
@@ -472,15 +651,21 @@ impl InferenceEngine for QuickScorerEngine {
         debug_assert_eq!(out.len(), rows.len() * dim);
         let cols = ColumnAccess::new(ds);
         let t = self.num_trees;
-        // Per-batch scratch: bitvectors for a whole block plus the GBT
-        // score vector; the per-row loop is allocation-free.
+        // Per-batch scratch: bitvectors for a whole block (plus the lane
+        // kernel's tree-major view) and the GBT score vector; the per-row
+        // loop is allocation-free.
         let mut v = vec![!0u64; BLOCK_SIZE * t];
+        let mut vt = if self.simd { vec![!0u64; t * BLOCK_SIZE] } else { Vec::new() };
         let mut scores = vec![0.0f64; self.aggregate.score_dim()];
         let mut start = rows.start;
         let mut out_off = 0usize;
         while start < rows.end {
             let bs = BLOCK_SIZE.min(rows.end - start);
-            self.score_block(&cols, start, bs, &mut v);
+            if self.simd {
+                self.score_block_lanes(&cols, start, bs, &mut vt, &mut v);
+            } else {
+                self.score_block(&cols, start, bs, &mut v);
+            }
             for bi in 0..bs {
                 let o = out_off + bi * dim;
                 self.aggregate_bitvectors_into(
@@ -556,6 +741,28 @@ mod tests {
         let qs = QuickScorerEngine::compile(model.as_ref()).expect("compatible");
         for r in 0..ds.num_rows() {
             close(&qs.predict_row(&ds.row(r)), &model.predict_ds_row(&ds, r));
+        }
+    }
+
+    #[test]
+    fn lane_kernel_matches_scalar_bitwise() {
+        let ds = synthetic::adult_like(300, 149);
+        let mut cfg = GbtConfig::new("income");
+        cfg.num_trees = 10;
+        cfg.max_depth = 5;
+        let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+        let mut scalar = QuickScorerEngine::compile(model.as_ref()).expect("compatible");
+        scalar.set_simd(false);
+        let mut lanes = QuickScorerEngine::compile(model.as_ref()).expect("compatible");
+        lanes.set_simd(true);
+        let dim = scalar.output_dim();
+        let n = ds.num_rows();
+        let mut a = vec![0.0f64; n * dim];
+        let mut b = vec![0.0f64; n * dim];
+        scalar.predict_batch(&ds, 0..n, &mut a);
+        lanes.predict_batch(&ds, 0..n, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "scalar vs lane kernel");
         }
     }
 

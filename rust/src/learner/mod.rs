@@ -1,7 +1,30 @@
 //! LEARNER abstraction (§3.1): a learner is a function that takes a dataset
 //! and returns a [`Model`]. Learners are registered by name (§3.5's
 //! REGISTER mechanism) so the CLI, meta-learners and the benchmark harness
-//! can instantiate them generically.
+//! can instantiate them generically — [`create_learner`] resolves
+//! `"GRADIENT_BOOSTED_TREES"`, `"RANDOM_FOREST"`, `"CART"` and `"LINEAR"`.
+//!
+//! Each learner pairs a plain config struct (defaults from Appendix C.1)
+//! with a [`Learner`] impl. Training a Random Forest on a synthetic
+//! dataset:
+//!
+//! ```
+//! use ydf::learner::random_forest::RandomForestConfig;
+//! use ydf::learner::{Learner, RandomForestLearner};
+//! use ydf::model::Model;
+//!
+//! let data = ydf::dataset::synthetic::adult_like(120, 42);
+//! let mut config = RandomForestConfig::new("income"); // label column
+//! config.num_trees = 3;
+//! config.compute_oob = false;
+//! let model = RandomForestLearner::new(config).train(&data).unwrap();
+//! // Classification models predict one probability per class.
+//! assert_eq!(model.predict_ds_row(&data, 0).len(), 2);
+//! ```
+//!
+//! Batch prediction goes through the compiled engines of
+//! [`crate::inference`] (see [`crate::inference::predict_flat`]) rather
+//! than the per-row loop above.
 
 pub mod cart;
 pub mod decision_tree;

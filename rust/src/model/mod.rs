@@ -2,6 +2,16 @@
 //! observation and returns a prediction. Concrete models (Random Forest,
 //! Gradient Boosted Trees, linear) implement the [`Model`] trait; learners
 //! return `Box<dyn Model>` so meta-learners and tools stay model-agnostic.
+//!
+//! Prediction output convention: classification models return one
+//! probability per class, aligned with the label column's dictionary;
+//! regression models return a single value. Besides predicting, a model
+//! carries its [`DataSpec`], an optional self-evaluation
+//! ([`SelfEvaluation`], §3.6), variable importances
+//! ([`VariableImportance`], Appendix B.2), a human-readable
+//! [`Model::describe`] report, and JSON (de)serialization via [`io`].
+//! For fast batch prediction, models are *compiled* into the inference
+//! engines of [`crate::inference`] rather than called row by row.
 
 pub mod describe;
 pub mod forest;

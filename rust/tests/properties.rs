@@ -188,6 +188,13 @@ fn prop_auc_invariant_under_monotone_transform() {
 /// categorical with `classes` classes when `classes >= 2`, numerical
 /// (regression) when `classes == 0`.
 fn mixed_ds(n: usize, classes: usize, rng: &mut Rng) -> Dataset {
+    mixed_ds_opt(n, classes, true, rng)
+}
+
+/// `mixed_ds` with the categorical-set column optional: without it, the
+/// trained trees stay inside QuickScorer's condition envelope while the
+/// numerical/categorical/boolean columns still carry missing values.
+fn mixed_ds_opt(n: usize, classes: usize, with_catset: bool, rng: &mut Rng) -> Dataset {
     use ydf::dataset::{MISSING_BOOL, MISSING_CAT};
     let mut x0 = Vec::with_capacity(n);
     let mut x1 = Vec::with_capacity(n);
@@ -207,16 +214,18 @@ fn mixed_ds(n: usize, classes: usize, rng: &mut Rng) -> Dataset {
         cat.push(if rng.bernoulli(0.06) { MISSING_CAT } else { c as u32 });
         boo.push(if rng.bernoulli(0.06) { MISSING_BOOL } else { bo as u8 });
         let mut has_token0 = false;
-        if rng.bernoulli(0.06) {
-            cs_values.push(MISSING_CAT); // sentinel: missing set
-        } else {
-            for _ in 0..rng.uniform_usize(3) {
-                let tok = rng.uniform_usize(5) as u32;
-                has_token0 |= tok == 0;
-                cs_values.push(tok);
+        if with_catset {
+            if rng.bernoulli(0.06) {
+                cs_values.push(MISSING_CAT); // sentinel: missing set
+            } else {
+                for _ in 0..rng.uniform_usize(3) {
+                    let tok = rng.uniform_usize(5) as u32;
+                    has_token0 |= tok == 0;
+                    cs_values.push(tok);
+                }
             }
+            cs_offsets.push(cs_values.len() as u32);
         }
-        cs_offsets.push(cs_values.len() as u32);
         let z = a + 0.5 * b
             + if bo { 0.8 } else { -0.4 }
             + c as f64 * 0.3
@@ -245,15 +254,17 @@ fn mixed_ds(n: usize, classes: usize, rng: &mut Rng) -> Dataset {
         ColumnSpec::numerical("x1"),
         ColumnSpec::categorical("cat", (0..4).map(|i| format!("c{i}")).collect()),
         ColumnSpec::boolean("flag"),
-        ColumnSpec::catset("tokens", (0..5).map(|i| format!("t{i}")).collect()),
     ];
     let mut data = vec![
         ColumnData::Numerical(x0),
         ColumnData::Numerical(x1),
         ColumnData::Categorical(cat),
         ColumnData::Boolean(boo),
-        ColumnData::CategoricalSet { offsets: cs_offsets, values: cs_values },
     ];
+    if with_catset {
+        columns.push(ColumnSpec::catset("tokens", (0..5).map(|i| format!("t{i}")).collect()));
+        data.push(ColumnData::CategoricalSet { offsets: cs_offsets, values: cs_values });
+    }
     if classes >= 2 {
         columns.push(ColumnSpec::categorical(
             "label",
@@ -375,6 +386,160 @@ fn prop_batch_path_matches_row_path_and_naive() {
     cfg.num_trees = 5;
     let model = ydf::learner::GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
     check_all_engines(model.as_ref(), &ds, "oblique-gbt");
+}
+
+/// Runs one engine twice — scalar kernel vs SIMD lane kernel — over the
+/// full range, an offset non-block-aligned subrange, and the
+/// multi-threaded path, asserting the outputs are *bit-identical*
+/// (`f64::to_bits`), not merely close. `make_engine` returns a freshly
+/// compiled engine or None when the model is incompatible.
+fn check_simd_bitwise<E: ydf::inference::InferenceEngine>(
+    make_engine: impl Fn(bool) -> Option<E>,
+    ds: &Dataset,
+    ctx: &str,
+) {
+    let (scalar, lanes) = match (make_engine(false), make_engine(true)) {
+        (Some(s), Some(l)) => (s, l),
+        _ => return,
+    };
+    let n = ds.num_rows();
+    let dim = scalar.output_dim();
+    let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+    let mut a = vec![0.0f64; n * dim];
+    let mut b = vec![0.0f64; n * dim];
+    scalar.predict_batch(ds, 0..n, &mut a);
+    lanes.predict_batch(ds, 0..n, &mut b);
+    assert_eq!(bits(&a), bits(&b), "{ctx}: full-range batch");
+    let (lo, hi) = (n / 3 + 1, n - 2); // offset, not 64-aligned
+    let mut sa = vec![0.0f64; (hi - lo) * dim];
+    let mut sb = vec![0.0f64; (hi - lo) * dim];
+    scalar.predict_batch(ds, lo..hi, &mut sa);
+    lanes.predict_batch(ds, lo..hi, &mut sb);
+    assert_eq!(bits(&sa), bits(&sb), "{ctx}: unaligned subrange");
+    let mut ma = vec![0.0f64; n * dim];
+    scalar.predict_into(ds, 3, &mut ma);
+    assert_eq!(bits(&ma), bits(&a), "{ctx}: multi-threaded scalar");
+    let mut mb = vec![0.0f64; n * dim];
+    lanes.predict_into(ds, 3, &mut mb);
+    assert_eq!(bits(&mb), bits(&a), "{ctx}: multi-threaded lanes");
+}
+
+/// Flat engine with the given kernel selection (None: model incompatible).
+fn flat_with(
+    model: &dyn ydf::model::Model,
+    simd: bool,
+) -> Option<ydf::inference::flat::FlatEngine> {
+    ydf::inference::flat::FlatEngine::compile(model).map(|mut e| {
+        e.set_simd(simd);
+        e
+    })
+}
+
+/// QuickScorer engine with the given kernel selection.
+fn qs_with(
+    model: &dyn ydf::model::Model,
+    simd: bool,
+) -> Option<ydf::inference::quickscorer::QuickScorerEngine> {
+    ydf::inference::quickscorer::QuickScorerEngine::compile(model).map(|mut e| {
+        e.set_simd(simd);
+        e
+    })
+}
+
+/// The SIMD lane kernels are pinned to the scalar kernels bit-for-bit —
+/// and through them (via `prop_batch_path_matches_row_path_and_naive`) to
+/// the naive engine — across NaN/missing values in every semantic,
+/// non-64-aligned tails and subranges, classification and regression.
+#[test]
+fn prop_simd_lanes_match_scalar() {
+    use ydf::learner::gbt::GbtConfig;
+    use ydf::learner::random_forest::RandomForestConfig;
+    use ydf::learner::{GradientBoostedTreesLearner, Learner, RandomForestLearner};
+    use ydf::model::Task;
+
+    run_cases(0x51D0, 3, |rng, case| {
+        let n = 91 + rng.uniform_usize(80); // tail block almost never 64-aligned
+        let classes = if case % 2 == 0 { 2 } else { 3 };
+        let mut models: Vec<(Box<dyn ydf::model::Model>, String)> = Vec::new();
+
+        let ds = mixed_ds(n, classes, rng);
+        let mut gbt = GbtConfig::new("label");
+        gbt.num_trees = 5;
+        gbt.max_depth = 5;
+        models.push((
+            GradientBoostedTreesLearner::new(gbt).train(&ds).unwrap(),
+            format!("case {case}/gbt-cls"),
+        ));
+        let mut rf = RandomForestConfig::new("label");
+        rf.num_trees = 4;
+        rf.compute_oob = false;
+        models.push((
+            RandomForestLearner::new(rf).train(&ds).unwrap(),
+            format!("case {case}/rf-cls"),
+        ));
+        for (model, ctx) in &models {
+            check_simd_bitwise(
+                |simd| flat_with(model.as_ref(), simd),
+                &ds,
+                &format!("{ctx}/flat"),
+            );
+            check_simd_bitwise(
+                |simd| qs_with(model.as_ref(), simd),
+                &ds,
+                &format!("{ctx}/quickscorer"),
+            );
+        }
+
+        // Regression on the same mixed (NaN-bearing) features.
+        let ds = mixed_ds(n, 0, rng);
+        let mut gbt = GbtConfig::new("label");
+        gbt.task = Task::Regression;
+        gbt.num_trees = 5;
+        gbt.max_depth = 4;
+        let model = GradientBoostedTreesLearner::new(gbt).train(&ds).unwrap();
+        check_simd_bitwise(
+            |simd| flat_with(model.as_ref(), simd),
+            &ds,
+            &format!("case {case}/gbt-reg/flat"),
+        );
+        check_simd_bitwise(
+            |simd| qs_with(model.as_ref(), simd),
+            &ds,
+            &format!("case {case}/gbt-reg/quickscorer"),
+        );
+
+        // Without the categorical-set column the trees stay inside
+        // QuickScorer's condition envelope, so its NaN/missing lane paths
+        // are guaranteed to run (compile() must succeed here).
+        let ds = mixed_ds_opt(n, classes, false, rng);
+        let mut gbt = GbtConfig::new("label");
+        gbt.num_trees = 5;
+        gbt.max_depth = 5;
+        let model = GradientBoostedTreesLearner::new(gbt).train(&ds).unwrap();
+        assert!(
+            qs_with(model.as_ref(), true).is_some(),
+            "case {case}: catset-free GBT must be QS-compatible"
+        );
+        check_simd_bitwise(
+            |simd| qs_with(model.as_ref(), simd),
+            &ds,
+            &format!("case {case}/no-catset/quickscorer"),
+        );
+        check_simd_bitwise(
+            |simd| flat_with(model.as_ref(), simd),
+            &ds,
+            &format!("case {case}/no-catset/flat"),
+        );
+    });
+
+    // Oblique conditions: the lane kernel's term-major dot products must
+    // keep each lane's scalar accumulation order (flat engine only —
+    // QuickScorer rejects oblique models).
+    let ds = ydf::dataset::synthetic::adult_like(141, 78);
+    let mut cfg = ydf::learner::gbt::GbtConfig::benchmark_rank1("income");
+    cfg.num_trees = 5;
+    let model = ydf::learner::GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+    check_simd_bitwise(|simd| flat_with(model.as_ref(), simd), &ds, "oblique-gbt/flat");
 }
 
 #[test]
