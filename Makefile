@@ -1,6 +1,6 @@
 # Convenience targets. The crate itself is plain cargo; see README.md.
 
-.PHONY: build test docs bench verify artifacts
+.PHONY: build test docs bench serve-smoke verify artifacts
 
 build:
 	cargo build --release
@@ -16,9 +16,16 @@ docs:
 
 bench:
 	cargo bench --bench b4_engines
+	cargo bench --bench b5_serving
 
-# Tier-1 gate (ROADMAP.md) plus the docs gate.
-verify: build test docs
+# End-to-end serving smoke: ephemeral-port server, JSON requests
+# (single-row, multi-row, malformed), protocol shutdown. Depends on
+# `build` so the release binary exists even under `make -j`.
+serve-smoke: build
+	bash scripts/serve_smoke.sh
+
+# Tier-1 gate (ROADMAP.md) plus the docs and serving gates.
+verify: build test docs serve-smoke
 
 # Build-time JAX/Pallas artifacts for the PJRT/XLA engine (requires the
 # python/ toolchain; the Rust side is feature-gated behind `--features xla`).

@@ -1,0 +1,174 @@
+//! b5: serving-runtime benchmark — the micro-batching path under load.
+//!
+//! For every request-size × concurrency combination (1/8/64 rows ×
+//! 1/4/16 clients by default), clients submit pre-decoded request blocks
+//! through `serving::Batcher` in a closed loop (one in-flight request per
+//! client — the standard closed-system load model), and the run records
+//! µs/request and requests/s (plus rows/s and the mean coalesced batch
+//! size). Results go to `BENCH_serving.json` so serving performance is
+//! tracked across PRs exactly like `BENCH_inference.json` tracks the
+//! engine kernels.
+//!
+//! Run: cargo bench --bench b5_serving
+//!      cargo bench --bench b5_serving -- --requests=500 --out=path.json
+
+use std::sync::Arc;
+use std::time::Duration;
+use ydf::dataset::synthetic;
+use ydf::learner::gbt::GbtConfig;
+use ydf::learner::{GradientBoostedTreesLearner, Learner};
+use ydf::serving::{Batcher, BatcherConfig, RowBlock, Session};
+use ydf::utils::json::Json;
+
+const REQUEST_ROWS: [usize; 3] = [1, 8, 64];
+const CONCURRENCY: [usize; 3] = [1, 4, 16];
+
+struct ComboResult {
+    request_rows: usize,
+    concurrency: usize,
+    requests: usize,
+    us_per_request: f64,
+    requests_per_s: f64,
+    rows_per_s: f64,
+    mean_batch_rows: f64,
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut requests_per_client = 200usize;
+    let mut out_path = "BENCH_serving.json".to_string();
+    for a in &args {
+        if let Some(v) = a.strip_prefix("--requests=") {
+            requests_per_client = v.parse().unwrap();
+        } else if let Some(v) = a.strip_prefix("--out=") {
+            out_path = v.to_string();
+        }
+    }
+
+    // The b4 workload: adult-like mixed features, QuickScorer-compatible
+    // GBT, so b4 and b5 numbers describe the same model family.
+    let ds = synthetic::adult_like(4000, 20230806);
+    let mut cfg = GbtConfig::new("income");
+    cfg.num_trees = 50;
+    cfg.max_depth = 5;
+    let session =
+        Arc::new(Session::new(GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap()));
+    println!(
+        "serving benchmark: engine {}, {} requests/client\n  {:>12} {:>11} {:>14} {:>14} {:>12} {:>16}",
+        session.engine_name(),
+        requests_per_client,
+        "request_rows",
+        "concurrency",
+        "us/request",
+        "requests/s",
+        "rows/s",
+        "mean batch rows",
+    );
+
+    let mut results: Vec<ComboResult> = Vec::new();
+    for &request_rows in &REQUEST_ROWS {
+        // One prototype request per size, decoded once from dataset rows
+        // (steady-state serving measures the queue + score + scatter path;
+        // JSON decode is measured per-request by the server's own stats).
+        for &concurrency in &CONCURRENCY {
+            let batcher = Batcher::new(
+                Arc::clone(&session),
+                BatcherConfig {
+                    // Adaptive drain: coalesce exactly the backlog that
+                    // accumulates while the previous batch scores.
+                    max_delay: Duration::ZERO,
+                    ..Default::default()
+                },
+            );
+            let total_requests = requests_per_client * concurrency;
+            let t0 = std::time::Instant::now();
+            std::thread::scope(|s| {
+                for client in 0..concurrency {
+                    let session = &session;
+                    let batcher = &batcher;
+                    s.spawn(move || {
+                        let block = request_block(session, request_rows, client);
+                        for _ in 0..requests_per_client {
+                            let out = batcher
+                                .submit(&block)
+                                .expect("bench load stays under queue capacity")
+                                .wait()
+                                .expect("batcher serves until dropped");
+                            std::hint::black_box(out);
+                        }
+                    });
+                }
+            });
+            let wall = t0.elapsed().as_secs_f64();
+            let snap = batcher.stats().snapshot();
+            let r = ComboResult {
+                request_rows,
+                concurrency,
+                requests: total_requests,
+                us_per_request: wall / total_requests as f64 * 1e6,
+                requests_per_s: total_requests as f64 / wall,
+                rows_per_s: (total_requests * request_rows) as f64 / wall,
+                mean_batch_rows: if snap.batches > 0 {
+                    snap.batched_rows as f64 / snap.batches as f64
+                } else {
+                    0.0
+                },
+            };
+            println!(
+                "  {:>12} {:>11} {:>14.2} {:>14.0} {:>12.0} {:>16.1}",
+                r.request_rows,
+                r.concurrency,
+                r.us_per_request,
+                r.requests_per_s,
+                r.rows_per_s,
+                r.mean_batch_rows,
+            );
+            results.push(r);
+        }
+    }
+
+    let mut combos = Json::obj();
+    for r in &results {
+        let mut cj = Json::obj();
+        cj.set("request_rows", Json::Num(r.request_rows as f64))
+            .set("concurrency", Json::Num(r.concurrency as f64))
+            .set("requests", Json::Num(r.requests as f64))
+            .set("us_per_request", Json::Num(r.us_per_request))
+            .set("requests_per_s", Json::Num(r.requests_per_s))
+            .set("rows_per_s", Json::Num(r.rows_per_s))
+            .set("mean_batch_rows", Json::Num(r.mean_batch_rows));
+        combos.set(&format!("s{}_c{}", r.request_rows, r.concurrency), cj);
+    }
+    let mut j = Json::obj();
+    j.set("engine", Json::Str(session.engine_name()))
+        .set("requests_per_client", Json::Num(requests_per_client as f64))
+        .set("block_size", Json::Num(ydf::inference::BLOCK_SIZE as f64))
+        .set("combos", combos);
+    match std::fs::write(&out_path, j.to_string_pretty()) {
+        Ok(()) => eprintln!("wrote {out_path}"),
+        Err(e) => eprintln!("cannot write {out_path}: {e}"),
+    }
+}
+
+/// Builds one request of `rows` rows from dataset-like feature values,
+/// varied per client so coalesced batches are not degenerate.
+fn request_block(session: &Session, rows: usize, client: usize) -> RowBlock {
+    let workclasses = ["Private", "Self-emp-inc", "Federal-gov", "Local-gov"];
+    let educations = ["HS-grad", "Bachelors", "Masters", "Doctorate"];
+    let mut block = session.new_block();
+    for i in 0..rows {
+        let k = client * 31 + i;
+        let row = Json::parse(&format!(
+            r#"{{"age": {}, "hours_per_week": {}, "workclass": "{}",
+                "education": "{}", "capital_gain": {}}}"#,
+            18 + k % 60,
+            20 + (k * 7) % 50,
+            workclasses[k % workclasses.len()],
+            educations[(k / 2) % educations.len()],
+            (k % 9) * 700,
+        ))
+        .unwrap();
+        session.decode_row(&mut block, &row).unwrap();
+    }
+    block
+}

@@ -86,6 +86,47 @@ impl ColumnData {
         }
     }
 
+    /// Appends every row of `other` to this column. Both columns must have
+    /// the same semantic. Used by the serving batcher to coalesce decoded
+    /// request blocks into one scoring block without re-decoding.
+    pub fn extend_from(&mut self, other: &ColumnData) -> Result<(), String> {
+        match (self, other) {
+            (ColumnData::Numerical(a), ColumnData::Numerical(b)) => a.extend_from_slice(b),
+            (ColumnData::Categorical(a), ColumnData::Categorical(b)) => a.extend_from_slice(b),
+            (ColumnData::Boolean(a), ColumnData::Boolean(b)) => a.extend_from_slice(b),
+            (
+                ColumnData::CategoricalSet { offsets, values },
+                ColumnData::CategoricalSet { offsets: o2, values: v2 },
+            ) => {
+                let base = values.len() as u32;
+                values.extend_from_slice(v2);
+                offsets.extend(o2.iter().skip(1).map(|&w| base + w));
+            }
+            (a, b) => {
+                return Err(format!(
+                    "cannot append a {:?} column to a {:?} column",
+                    b.semantic(),
+                    a.semantic()
+                ))
+            }
+        }
+        Ok(())
+    }
+
+    /// Removes all rows, keeping the allocation (serving decode scratch).
+    pub fn clear(&mut self) {
+        match self {
+            ColumnData::Numerical(v) => v.clear(),
+            ColumnData::Categorical(v) => v.clear(),
+            ColumnData::Boolean(v) => v.clear(),
+            ColumnData::CategoricalSet { offsets, values } => {
+                values.clear();
+                offsets.clear();
+                offsets.push(0);
+            }
+        }
+    }
+
     pub fn is_missing(&self, i: usize) -> bool {
         match self {
             ColumnData::Numerical(v) => v[i].is_nan(),
@@ -158,6 +199,25 @@ impl Dataset {
 
     pub fn num_rows(&self) -> usize {
         self.num_rows
+    }
+
+    /// Re-derives the cached row count after callers mutate `columns` in
+    /// place (the serving layer reuses one `Dataset` as columnar decode
+    /// scratch across requests). Errors if the columns disagree on length.
+    pub fn sync_num_rows(&mut self) -> Result<usize, String> {
+        let n = self.columns.first().map(|c| c.len()).unwrap_or(0);
+        for (i, c) in self.columns.iter().enumerate() {
+            if c.len() != n {
+                return Err(format!(
+                    "column '{}' has {} rows but the first column has {n} after in-place \
+                     mutation; every column must receive one value per decoded row.",
+                    self.spec.columns[i].name,
+                    c.len()
+                ));
+            }
+        }
+        self.num_rows = n;
+        Ok(n)
     }
 
     pub fn num_columns(&self) -> usize {
@@ -334,6 +394,46 @@ mod tests {
         let (tr, va) = d.train_valid_split(0.25, 3);
         assert_eq!(tr.len() + va.len(), 4);
         assert!(!va.is_empty());
+    }
+
+    #[test]
+    fn extend_from_appends_and_clear_resets() {
+        let mut a = ColumnData::Numerical(vec![1.0, 2.0]);
+        a.extend_from(&ColumnData::Numerical(vec![3.0])).unwrap();
+        assert_eq!(a.as_numerical().unwrap(), &[1.0, 2.0, 3.0]);
+        a.clear();
+        assert_eq!(a.len(), 0);
+
+        let mut s = ColumnData::CategoricalSet { offsets: vec![0, 2], values: vec![5, 6] };
+        let other = ColumnData::CategoricalSet { offsets: vec![0, 1, 1], values: vec![7] };
+        s.extend_from(&other).unwrap();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.set_values(0).unwrap(), &[5, 6]);
+        assert_eq!(s.set_values(1).unwrap(), &[7]);
+        assert_eq!(s.set_values(2).unwrap(), &[] as &[u32]);
+        s.clear();
+        assert_eq!(s.len(), 0); // offsets reset to [0]
+
+        let mut b = ColumnData::Boolean(vec![1]);
+        let err = b.extend_from(&ColumnData::Numerical(vec![0.0])).unwrap_err();
+        assert!(err.contains("cannot append"), "{err}");
+    }
+
+    #[test]
+    fn sync_num_rows_tracks_mutation() {
+        let mut d = tiny();
+        assert_eq!(d.num_rows(), 4);
+        for c in &mut d.columns {
+            c.clear();
+        }
+        assert_eq!(d.sync_num_rows().unwrap(), 0);
+        assert_eq!(d.num_rows(), 0);
+        // Uneven columns are rejected with the column name.
+        if let ColumnData::Numerical(v) = &mut d.columns[0] {
+            v.push(1.0);
+        }
+        let err = d.sync_num_rows().unwrap_err();
+        assert!(err.contains('x') || err.contains('c'), "{err}");
     }
 
     #[test]

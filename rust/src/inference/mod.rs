@@ -91,12 +91,26 @@ use std::ops::Range;
 pub const BLOCK_SIZE: usize = 64;
 
 /// Thread count for whole-dataset fan-out: `YDF_INFER_THREADS` when set
-/// to a positive integer, otherwise (including when set but unparsable)
-/// the machine's available parallelism.
+/// to a positive integer, otherwise the machine's available parallelism.
+/// A set-but-invalid value (unparsable, or `0`) also falls back, with a
+/// one-time warning on stderr naming the bad value — a misconfigured
+/// deployment should be diagnosable, not silently single- or all-core.
 pub fn batch_threads() -> usize {
     let fallback = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     match std::env::var("YDF_INFER_THREADS") {
-        Ok(v) => v.parse::<usize>().ok().filter(|&t| t >= 1).unwrap_or(fallback),
+        Ok(v) => match v.parse::<usize>() {
+            Ok(t) if t >= 1 => t,
+            _ => {
+                static WARN_ONCE: std::sync::Once = std::sync::Once::new();
+                WARN_ONCE.call_once(|| {
+                    eprintln!(
+                        "warning: ignoring YDF_INFER_THREADS='{v}' (expected a positive \
+                         integer); using {fallback} inference threads"
+                    );
+                });
+                fallback
+            }
+        },
         Err(_) => fallback,
     }
 }
@@ -267,8 +281,9 @@ pub fn compile_engines(model: &dyn Model) -> Vec<Box<dyn InferenceEngine>> {
 /// The engine [`predict_flat`] rides on: QuickScorer when compatible,
 /// otherwise the flat engine, otherwise `None` (wrapper models —
 /// ensembles, calibrators — fall back to the model's own row loop). The
-/// single source of truth for the automatic selection order.
-fn fastest_engine(model: &dyn Model) -> Option<Box<dyn InferenceEngine>> {
+/// single source of truth for the automatic selection order; the serving
+/// layer pins one session to the engine returned here.
+pub fn fastest_engine(model: &dyn Model) -> Option<Box<dyn InferenceEngine>> {
     if let Some(qs) = quickscorer::QuickScorerEngine::compile(model) {
         return Some(Box::new(qs));
     }

@@ -8,8 +8,9 @@
 //! The crate is organized around the paper's LEARNER–MODEL abstraction
 //! (§3.1): a [`model::Model`] is a function from observation to prediction;
 //! a [`learner::Learner`] is a function from dataset to model. Everything
-//! else — splitters, inference engines, meta-learners, self-evaluation,
-//! distributed training — is an interchangeable module (§3.5).
+//! else — splitters, inference engines, the micro-batching serving
+//! runtime, meta-learners, self-evaluation, distributed training — is an
+//! interchangeable module (§3.5).
 //!
 //! ## Quickstart
 //!
@@ -33,6 +34,7 @@ pub mod learner;
 pub mod metalearner;
 pub mod model;
 pub mod runtime;
+pub mod serving;
 pub mod splitter;
 pub mod utils;
 

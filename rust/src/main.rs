@@ -1,7 +1,8 @@
 //! `ydf` CLI — the command-line API of §4.1: `infer_dataspec`,
 //! `show_dataspec`, `train`, `show_model`, `evaluate`, `predict`,
-//! `benchmark_inference`, plus `synth` (dataset generation) and
-//! `benchmark_suite` (the §5 experiment harness).
+//! `benchmark_inference`, plus `synth` (dataset generation),
+//! `benchmark_suite` (the §5 experiment harness) and `serve` (the
+//! micro-batching TCP serving runtime, `docs/serving.md`).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -27,6 +28,9 @@ COMMANDS
   evaluate         --dataset=csv:FILE --model=MODEL.json
   predict          --dataset=csv:FILE --model=MODEL.json --output=csv:FILE
   benchmark_inference --dataset=csv:FILE --model=MODEL.json [--runs=20]
+  serve            --model=MODEL.json [--addr=127.0.0.1] [--port=8123]
+                   [--workers=4] [--flush-rows=64] [--max-delay-ms=2]
+                   [--max-queue-rows=4096]
   synth            --name=TABLE5_NAME --output=csv:FILE [--max-examples=N]
   benchmark_suite  [--full] [--folds=N] [--trees=N] [--trials=N]
                    [--datasets=a,b,c] [--max-examples=N]
@@ -108,7 +112,11 @@ fn main() {
             println!("wrote dataspec ({} columns) to {out}", ds.spec.columns.len());
         }
         "show_dataspec" => {
-            let text = std::fs::read_to_string(req(&flags, "dataspec")).unwrap();
+            let path = req(&flags, "dataspec");
+            let text = ok_or_die(
+                std::fs::read_to_string(path)
+                    .map_err(|e| format!("cannot read dataspec file {path}: {e}")),
+            );
             let spec = ok_or_die(DataSpec::from_json(&ok_or_die(
                 Json::parse(&text).map_err(|e| e.to_string()),
             )));
@@ -171,6 +179,50 @@ fn main() {
                 "{}",
                 ydf::inference::benchmark_inference_report(model.as_ref(), &ds, runs)
             );
+        }
+        "serve" => {
+            let model_path = req(&flags, "model");
+            let session =
+                ok_or_die(ydf::serving::Session::open(Path::new(model_path)));
+            let parse_usize = |key: &str, default: usize| -> usize {
+                flags.get(key).map_or(default, |v| {
+                    ok_or_die(v.parse::<usize>().map_err(|_| {
+                        format!("--{key} must be a non-negative integer, got '{v}'")
+                    }))
+                })
+            };
+            let addr = flags.get("addr").map(|s| s.as_str()).unwrap_or("127.0.0.1");
+            let port = parse_usize("port", 8123);
+            let max_delay_ms = flags.get("max-delay-ms").map_or(2.0, |v| {
+                ok_or_die(
+                    v.parse::<f64>()
+                        .ok()
+                        .filter(|d| d.is_finite() && *d >= 0.0)
+                        .ok_or_else(|| {
+                            format!(
+                                "--max-delay-ms must be a non-negative number of \
+                                 milliseconds, got '{v}'"
+                            )
+                        }),
+                )
+            });
+            let config = ydf::serving::ServerConfig {
+                addr: format!("{addr}:{port}"),
+                workers: parse_usize("workers", 4),
+                batcher: ydf::serving::BatcherConfig {
+                    flush_rows: parse_usize("flush-rows", ydf::inference::BLOCK_SIZE),
+                    max_delay: std::time::Duration::from_secs_f64(max_delay_ms / 1e3),
+                    max_queue_rows: parse_usize("max-queue-rows", 4096),
+                },
+            };
+            println!(
+                "model: {} ({} -> {} outputs); protocol: newline-delimited JSON \
+                 (docs/serving.md)",
+                model_path,
+                session.model().model_type(),
+                session.output_dim()
+            );
+            ok_or_die(ydf::serving::serve(session, &config));
         }
         "synth" => {
             let name = req(&flags, "name");

@@ -1,0 +1,438 @@
+//! Micro-batching request coalescer: a bounded submission queue feeding
+//! one scorer thread.
+//!
+//! Concurrent single/multi-row requests are appended, in arrival order,
+//! to a shared columnar accumulation block. The scorer flushes — one
+//! engine `predict_batch` call over everything pending — when
+//!
+//! * the pending rows reach [`BatcherConfig::flush_rows`] (a
+//!   [`BLOCK_SIZE`] multiple by default, so the engine kernels run full
+//!   blocks), or
+//! * the *oldest* pending request has waited [`BatcherConfig::max_delay`]
+//!   (the latency deadline; `0` means "flush whenever the scorer is
+//!   free" — adaptive batching that coalesces only the backlog that
+//!   accumulates while the previous batch scores).
+//!
+//! Results are scattered back to per-request waiters over one-shot
+//! channels. Coalescing is pure concatenation and engines are
+//! row-independent, so outputs are **bit-identical** to a single
+//! `predict_batch` over the same rows (pinned by
+//! `rust/tests/serving.rs`).
+//!
+//! The queue is bounded by [`BatcherConfig::max_queue_rows`]: a submit
+//! that would overflow is rejected immediately with
+//! [`SubmitError::QueueFull`] — backpressure surfaces to the client as a
+//! retryable error instead of unbounded memory growth or an indefinite
+//! block.
+
+use super::session::{RowBlock, Session};
+use super::stats::ServingStats;
+use crate::inference::BLOCK_SIZE;
+use std::fmt;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs. The defaults suit a low-latency online service;
+/// the b5 bench and the CLI expose them.
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Flush as soon as this many rows are pending. Kept a multiple of
+    /// [`BLOCK_SIZE`] by [`Batcher::new`] (rounded up) so coalesced
+    /// batches fill whole kernel blocks.
+    pub flush_rows: usize,
+    /// Latency deadline: flush when the oldest pending request has waited
+    /// this long, even if `flush_rows` was not reached. `Duration::ZERO`
+    /// disables the wait — the scorer drains whatever is pending the
+    /// moment it is free.
+    pub max_delay: Duration,
+    /// Queue capacity in rows; submissions beyond it are rejected
+    /// ([`SubmitError::QueueFull`]). Also the per-request row cap.
+    pub max_queue_rows: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            flush_rows: BLOCK_SIZE,
+            max_delay: Duration::from_millis(2),
+            max_queue_rows: 64 * BLOCK_SIZE,
+        }
+    }
+}
+
+/// Why a submission was rejected. All variants are immediate — the
+/// batcher never blocks a submitter.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Queue at capacity; retry after in-flight requests drain.
+    QueueFull { pending_rows: usize, capacity: usize },
+    /// The request alone exceeds the queue capacity and can never be
+    /// accepted; split it into smaller requests.
+    RequestTooLarge { rows: usize, capacity: usize },
+    /// Zero-row requests have no result to wait for.
+    EmptyRequest,
+    /// The batcher is shutting down.
+    Shutdown,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::QueueFull { pending_rows, capacity } => write!(
+                f,
+                "serving queue full ({pending_rows}/{capacity} rows pending); retry shortly"
+            ),
+            SubmitError::RequestTooLarge { rows, capacity } => write!(
+                f,
+                "request of {rows} rows exceeds the queue capacity of {capacity} rows; \
+                 split it into smaller requests"
+            ),
+            SubmitError::EmptyRequest => write!(f, "request contains no rows"),
+            SubmitError::Shutdown => write!(f, "serving batcher is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// A submitted request's pending result.
+pub struct Pending {
+    rx: Receiver<Result<Vec<f64>, String>>,
+}
+
+impl Pending {
+    /// Blocks until the coalesced batch containing this request is scored.
+    /// Returns the request's own predictions, row-major
+    /// (`rows * output_dim()` values).
+    pub fn wait(self) -> Result<Vec<f64>, String> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err("serving batcher shut down before scoring the request".to_string()),
+        }
+    }
+}
+
+struct Waiter {
+    /// First row of this request inside the accumulation block.
+    start_row: usize,
+    rows: usize,
+    tx: Sender<Result<Vec<f64>, String>>,
+}
+
+struct QueueState {
+    /// Arrival-order concatenation of all pending request rows.
+    acc: RowBlock,
+    waiters: Vec<Waiter>,
+    /// Arrival time of the oldest pending request (deadline anchor).
+    oldest: Option<Instant>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    /// Wakes the scorer on submission and shutdown.
+    bell: Condvar,
+}
+
+/// The micro-batching coalescer. Clone-free: share it behind an `Arc`.
+/// Dropping the batcher flushes and scores everything still pending, then
+/// joins the scorer thread — no waiter is left hanging.
+pub struct Batcher {
+    shared: Arc<Shared>,
+    session: Arc<Session>,
+    stats: Arc<ServingStats>,
+    flush_rows: usize,
+    max_queue_rows: usize,
+    scorer: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Batcher {
+    pub fn new(session: Arc<Session>, config: BatcherConfig) -> Batcher {
+        Batcher::with_stats(session, config, Arc::new(ServingStats::new()))
+    }
+
+    /// As [`Batcher::new`], recording batch/queue counters into `stats`.
+    pub fn with_stats(
+        session: Arc<Session>,
+        config: BatcherConfig,
+        stats: Arc<ServingStats>,
+    ) -> Batcher {
+        let flush_rows = config.flush_rows.max(1).div_ceil(BLOCK_SIZE) * BLOCK_SIZE;
+        let max_queue_rows = config.max_queue_rows.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState {
+                acc: session.new_block(),
+                waiters: Vec::new(),
+                oldest: None,
+                shutdown: false,
+            }),
+            bell: Condvar::new(),
+        });
+        let scorer = {
+            let shared = Arc::clone(&shared);
+            let session = Arc::clone(&session);
+            let stats = Arc::clone(&stats);
+            let max_delay = config.max_delay;
+            std::thread::Builder::new()
+                .name("ydf-serving-scorer".to_string())
+                .spawn(move || scorer_loop(shared, session, stats, flush_rows, max_delay))
+                .expect("failed to spawn serving scorer thread")
+        };
+        Batcher {
+            shared,
+            session,
+            stats,
+            flush_rows,
+            max_queue_rows,
+            scorer: Some(scorer),
+        }
+    }
+
+    /// The session this batcher scores through.
+    pub fn session(&self) -> &Arc<Session> {
+        &self.session
+    }
+
+    /// Counters shared with the scorer (queue depth, batch sizes).
+    pub fn stats(&self) -> &Arc<ServingStats> {
+        &self.stats
+    }
+
+    /// Rows pending at the threshold that triggers an immediate flush.
+    pub fn flush_rows(&self) -> usize {
+        self.flush_rows
+    }
+
+    /// Queue capacity in rows.
+    pub fn capacity_rows(&self) -> usize {
+        self.max_queue_rows
+    }
+
+    /// Enqueues every row of `rows` as one request, copied in arrival
+    /// order into the shared accumulation block. Returns immediately —
+    /// with a [`Pending`] handle, or with the backpressure error if the
+    /// bounded queue cannot take the rows.
+    pub fn submit(&self, rows: &RowBlock) -> Result<Pending, SubmitError> {
+        let n = rows.rows();
+        if n == 0 {
+            return Err(SubmitError::EmptyRequest);
+        }
+        if n > self.max_queue_rows {
+            return Err(SubmitError::RequestTooLarge { rows: n, capacity: self.max_queue_rows });
+        }
+        let (tx, rx) = channel();
+        {
+            let mut state = self.shared.state.lock().expect("serving queue poisoned");
+            if state.shutdown {
+                return Err(SubmitError::Shutdown);
+            }
+            let pending = state.acc.rows();
+            if pending + n > self.max_queue_rows {
+                self.stats.note_rejected();
+                return Err(SubmitError::QueueFull {
+                    pending_rows: pending,
+                    capacity: self.max_queue_rows,
+                });
+            }
+            state.acc.append_from(rows);
+            state.waiters.push(Waiter { start_row: pending, rows: n, tx });
+            if state.oldest.is_none() {
+                state.oldest = Some(Instant::now());
+            }
+            self.stats.set_queue_rows(state.acc.rows());
+        }
+        self.shared.bell.notify_one();
+        Ok(Pending { rx })
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        {
+            let mut state = self.shared.state.lock().expect("serving queue poisoned");
+            state.shutdown = true;
+        }
+        self.shared.bell.notify_all();
+        if let Some(h) = self.scorer.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn scorer_loop(
+    shared: Arc<Shared>,
+    session: Arc<Session>,
+    stats: Arc<ServingStats>,
+    flush_rows: usize,
+    max_delay: Duration,
+) {
+    // Double buffer: while one block scores, submissions fill the other.
+    // `spare` is moved into the queue at flush and recovered (cleared)
+    // after scattering, so steady-state flushing allocates nothing.
+    let mut spare = session.new_block();
+    let mut state = shared.state.lock().expect("serving queue poisoned");
+    loop {
+        // Wait for work or a flush condition. Spurious wakeups just
+        // re-evaluate the conditions.
+        loop {
+            let pending = state.acc.rows();
+            if state.shutdown {
+                break; // flush the remainder, then exit below
+            }
+            if pending >= flush_rows {
+                break;
+            }
+            if pending > 0 {
+                let age = state.oldest.map(|t| t.elapsed()).unwrap_or(Duration::ZERO);
+                if age >= max_delay {
+                    break;
+                }
+                let (s, _timeout) = shared
+                    .bell
+                    .wait_timeout(state, max_delay - age)
+                    .expect("serving queue poisoned");
+                state = s;
+            } else {
+                state = shared.bell.wait(state).expect("serving queue poisoned");
+            }
+        }
+        if state.acc.rows() == 0 {
+            if state.shutdown {
+                return;
+            }
+            continue;
+        }
+        // Take the whole pending batch; submissions continue concurrently
+        // into the spare block while this one scores.
+        let mut batch = std::mem::replace(&mut state.acc, spare);
+        let waiters = std::mem::take(&mut state.waiters);
+        state.oldest = None;
+        let exiting = state.shutdown;
+        stats.set_queue_rows(0);
+        drop(state);
+
+        let dim = session.output_dim();
+        let out = session.predict_block(&mut batch);
+        stats.note_batch(batch.rows(), waiters.len());
+        for w in waiters {
+            let chunk = out[w.start_row * dim..(w.start_row + w.rows) * dim].to_vec();
+            // A submitter that dropped its Pending just doesn't collect.
+            let _ = w.tx.send(Ok(chunk));
+        }
+        batch.clear();
+        spare = batch;
+        if exiting {
+            // One drain pass under shutdown: anything submitted between
+            // the flush and now still gets scored on the next iteration;
+            // `submit` rejects new work once `shutdown` is set, so this
+            // terminates.
+            state = shared.state.lock().expect("serving queue poisoned");
+            if state.acc.rows() == 0 {
+                return;
+            }
+            continue;
+        }
+        state = shared.state.lock().expect("serving queue poisoned");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic;
+    use crate::learner::gbt::GbtConfig;
+    use crate::learner::{GradientBoostedTreesLearner, Learner};
+    use crate::utils::json::Json;
+
+    fn session() -> Arc<Session> {
+        let ds = synthetic::adult_like(300, 99);
+        let mut cfg = GbtConfig::new("income");
+        cfg.num_trees = 4;
+        cfg.max_depth = 4;
+        Arc::new(Session::new(GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap()))
+    }
+
+    fn one_row(s: &Session, age: f64) -> RowBlock {
+        let mut b = s.new_block();
+        let row = Json::parse(&format!(r#"{{"age": {age}, "education": "Masters"}}"#)).unwrap();
+        s.decode_row(&mut b, &row).unwrap();
+        b
+    }
+
+    #[test]
+    fn single_request_scores_after_deadline() {
+        let s = session();
+        let b = Batcher::new(
+            Arc::clone(&s),
+            BatcherConfig { max_delay: Duration::from_millis(1), ..Default::default() },
+        );
+        let block = one_row(&s, 40.0);
+        let out = b.submit(&block).unwrap().wait().unwrap();
+        assert_eq!(out.len(), s.output_dim());
+        assert!((out.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_delay_drains_immediately() {
+        let s = session();
+        let b = Batcher::new(
+            Arc::clone(&s),
+            BatcherConfig { max_delay: Duration::ZERO, ..Default::default() },
+        );
+        for _ in 0..3 {
+            let block = one_row(&s, 33.0);
+            let out = b.submit(&block).unwrap().wait().unwrap();
+            assert_eq!(out.len(), s.output_dim());
+        }
+        assert!(b.stats().snapshot().batches >= 1);
+    }
+
+    #[test]
+    fn empty_and_oversized_requests_rejected() {
+        let s = session();
+        let b = Batcher::new(
+            Arc::clone(&s),
+            BatcherConfig { max_queue_rows: 4, ..Default::default() },
+        );
+        assert_eq!(b.submit(&s.new_block()).unwrap_err(), SubmitError::EmptyRequest);
+        let mut big = s.new_block();
+        for _ in 0..5 {
+            big.append_from(&one_row(&s, 30.0));
+        }
+        assert!(matches!(
+            b.submit(&big).unwrap_err(),
+            SubmitError::RequestTooLarge { rows: 5, capacity: 4 }
+        ));
+    }
+
+    #[test]
+    fn flush_rows_rounds_up_to_block_multiple() {
+        let s = session();
+        let b = Batcher::new(
+            Arc::clone(&s),
+            BatcherConfig { flush_rows: 65, ..Default::default() },
+        );
+        assert_eq!(b.flush_rows(), 2 * crate::inference::BLOCK_SIZE);
+    }
+
+    #[test]
+    fn drop_flushes_pending_requests() {
+        let s = session();
+        let b = Batcher::new(
+            Arc::clone(&s),
+            // Deadline far away, flush threshold unreachable: only the
+            // shutdown drain can score this request.
+            BatcherConfig {
+                max_delay: Duration::from_secs(30),
+                flush_rows: 1024,
+                ..Default::default()
+            },
+        );
+        let block = one_row(&s, 55.0);
+        let pending = b.submit(&block).unwrap();
+        drop(b);
+        let out = pending.wait().unwrap();
+        assert_eq!(out.len(), s.output_dim());
+    }
+}

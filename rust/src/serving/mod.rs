@@ -1,0 +1,69 @@
+//! Micro-batching model serving runtime: the shared online-serving layer
+//! on top of the batch-first inference contract (`docs/serving.md`).
+//!
+//! The paper positions YDF as a library for "training, serving and
+//! interpretation" with production serving as a first-class concern
+//! (§3.7); this module turns the offline batch path into an online one.
+//! Guan et al. ("A Comparison of Decision Forest Inference Platforms from
+//! A Database Perspective") observe that *batching policy*, not just
+//! kernel speed, dominates end-to-end forest-serving throughput — the
+//! runtime here makes that policy an explicit, configurable knob.
+//!
+//! Four modules:
+//!
+//! * [`session`] — a loaded model pinned to its auto-selected engine, with
+//!   dataspec-driven request decoding: feature-name → column mapping and
+//!   direct materialization of incoming rows into columnar
+//!   [`crate::dataset::ColumnData`] scratch ([`session::RowBlock`]) that
+//!   is reused across calls.
+//! * [`batcher`] — a bounded submission queue that coalesces concurrent
+//!   single/multi-row requests into blocks: flush when the pending rows
+//!   reach a [`crate::inference::BLOCK_SIZE`]-multiple threshold or when
+//!   the oldest request has waited past a configurable deadline; score
+//!   once via the engine batch path; scatter results back to per-request
+//!   waiters. The bounded queue rejects when full — natural backpressure,
+//!   never an unbounded buffer or an indefinite block.
+//! * [`server`] — a `std::net` TCP front end speaking newline-delimited
+//!   JSON (via `utils/json.rs`) over a worker pool (`utils/pool.rs`).
+//! * [`stats`] — latency histograms (`utils/histogram.rs`) plus
+//!   throughput / queue-depth counters, exportable as JSON.
+//!
+//! The CLI exposes all of this as `ydf serve --model=… --port=…`; the
+//! wire protocol is specified in `docs/serving.md` ("Server loop") and
+//! `cargo bench --bench b5_serving` tracks µs/request and requests/s
+//! across request-size × concurrency combinations in
+//! `BENCH_serving.json`.
+//!
+//! ```
+//! use ydf::learner::gbt::GbtConfig;
+//! use ydf::learner::{GradientBoostedTreesLearner, Learner};
+//! use ydf::serving::batcher::{Batcher, BatcherConfig};
+//! use ydf::serving::session::Session;
+//! use ydf::utils::json::Json;
+//! use std::sync::Arc;
+//!
+//! let data = ydf::dataset::synthetic::adult_like(200, 7);
+//! let mut config = GbtConfig::new("income");
+//! config.num_trees = 5;
+//! config.max_depth = 3;
+//! let model = GradientBoostedTreesLearner::new(config).train(&data).unwrap();
+//! let session = Arc::new(Session::new(model));
+//! let batcher = Batcher::new(Arc::clone(&session), BatcherConfig::default());
+//! // Decode one request into reusable columnar scratch and submit it.
+//! let mut block = session.new_block();
+//! let row = Json::parse(r#"{"age": 44, "education": "Masters"}"#).unwrap();
+//! session.decode_row(&mut block, &row).unwrap();
+//! let pending = batcher.submit(&block).unwrap();
+//! let predictions = pending.wait().unwrap(); // one probability per class
+//! assert_eq!(predictions.len(), session.output_dim());
+//! ```
+
+pub mod batcher;
+pub mod server;
+pub mod session;
+pub mod stats;
+
+pub use batcher::{Batcher, BatcherConfig, Pending, SubmitError};
+pub use server::{serve, ServerConfig};
+pub use session::{RowBlock, Session};
+pub use stats::ServingStats;

@@ -1,0 +1,378 @@
+//! TCP front end: newline-delimited JSON over `std::net`, fanned out to a
+//! `utils/pool.rs` worker pool, scored through the shared [`Batcher`].
+//!
+//! ## Wire protocol (one JSON value per line, both directions)
+//!
+//! Prediction requests:
+//!
+//! ```text
+//! {"rows": [{"age": 44, "education": "Masters"}, {"age": 23}]}
+//! {"age": 44, "education": "Masters"}            // single-row shorthand
+//! ```
+//!
+//! → `{"predictions": [[0.21, 0.79], …]}` — one array of
+//! `output_dim()` values per request row, in request order. Absent or
+//! `null` features are missing; unknown feature names are an error.
+//!
+//! Commands:
+//!
+//! ```text
+//! {"cmd": "health"}    -> {"ok": true, "engine": …, "model_type": …}
+//! {"cmd": "spec"}      -> {"features": […], "label": …, "classes": […]}
+//! {"cmd": "stats"}     -> serving counters + latency percentiles
+//! {"cmd": "shutdown"}  -> {"ok": true}, then the server stops accepting
+//! ```
+//!
+//! Every error — malformed JSON, unknown feature, full queue — is a
+//! `{"error": "…"}` response on the same line; the connection survives.
+//! See `docs/serving.md` ("Server loop") for the full contract.
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::session::Session;
+use super::stats::ServingStats;
+use crate::utils::json::Json;
+use crate::utils::pool::WorkerPool;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Front-end configuration. `workers` bounds concurrent connections (a
+/// connection occupies its worker until the peer disconnects).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Bind address; port 0 picks an ephemeral port (printed on stdout).
+    pub addr: String,
+    pub workers: usize,
+    pub batcher: BatcherConfig,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:8123".to_string(),
+            workers: 4,
+            batcher: BatcherConfig::default(),
+        }
+    }
+}
+
+/// Live-connection registry: a clone of every open stream, so shutdown
+/// can close them and unblock workers parked in `reader.lines()` —
+/// without it, one idle client connection would stall `serve()`'s worker
+/// join forever.
+#[derive(Default)]
+struct ConnRegistry {
+    streams: Mutex<HashMap<u64, TcpStream>>,
+    next_id: AtomicU64,
+}
+
+impl ConnRegistry {
+    fn insert(&self, stream: TcpStream) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.streams.lock().expect("registry poisoned").insert(id, stream);
+        id
+    }
+
+    fn remove(&self, id: u64) {
+        self.streams.lock().expect("registry poisoned").remove(&id);
+    }
+
+    fn close_all(&self) {
+        for (_, s) in self.streams.lock().expect("registry poisoned").drain() {
+            // Read half only: unblocks workers parked in `reader.lines()`
+            // (they see EOF) while letting responses to already-accepted
+            // in-flight requests still be written before the worker exits.
+            let _ = s.shutdown(Shutdown::Read);
+        }
+    }
+}
+
+/// Binds, prints `listening on <addr>` on stdout (machine-parsable — the
+/// smoke test reads the ephemeral port from it), and serves until a
+/// `{"cmd": "shutdown"}` request arrives. On shutdown every open
+/// connection is closed (idle clients cannot stall the exit), the
+/// batcher drains, and the call returns once every worker has exited.
+pub fn serve(session: Session, config: &ServerConfig) -> Result<(), String> {
+    let listener = TcpListener::bind(&config.addr)
+        .map_err(|e| format!("cannot bind {}: {e}", config.addr))?;
+    let local = listener
+        .local_addr()
+        .map_err(|e| format!("cannot resolve bound address: {e}"))?;
+    let session = Arc::new(session);
+    let stats = Arc::new(ServingStats::new());
+    let batcher = Arc::new(Batcher::with_stats(
+        Arc::clone(&session),
+        config.batcher.clone(),
+        Arc::clone(&stats),
+    ));
+    println!("serving model through engine: {}", session.engine_name());
+    println!("listening on {local}");
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let registry = Arc::new(ConnRegistry::default());
+    let pool = WorkerPool::new(config.workers.max(1));
+    // Connections go to the least-loaded worker (a connection occupies
+    // its worker until the peer disconnects, so blind round-robin could
+    // queue a new connection behind a long-lived one while other workers
+    // sit idle).
+    let loads: Arc<Vec<AtomicUsize>> =
+        Arc::new((0..pool.num_workers()).map(|_| AtomicUsize::new(0)).collect());
+    for stream in listener.incoming() {
+        if shutdown.load(Ordering::SeqCst) {
+            break; // the wake-up connection from the shutdown handler
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let id = stream.try_clone().ok().map(|c| registry.insert(c));
+        let conn = Connection {
+            session: Arc::clone(&session),
+            batcher: Arc::clone(&batcher),
+            stats: Arc::clone(&stats),
+            shutdown: Arc::clone(&shutdown),
+            wake_addr: local,
+        };
+        let w = loads
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, l)| l.load(Ordering::Relaxed))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        loads[w].fetch_add(1, Ordering::Relaxed);
+        let registry = Arc::clone(&registry);
+        let loads = Arc::clone(&loads);
+        pool.submit_to(w, move || {
+            conn.handle(stream);
+            if let Some(id) = id {
+                registry.remove(id);
+            }
+            loads[w].fetch_sub(1, Ordering::Relaxed);
+        });
+    }
+    registry.close_all(); // unblock workers parked on idle connections
+    drop(pool); // join workers (in-flight requests finish)
+    drop(batcher); // flush + join the scorer
+    println!("server stopped");
+    Ok(())
+}
+
+struct Connection {
+    session: Arc<Session>,
+    batcher: Arc<Batcher>,
+    stats: Arc<ServingStats>,
+    shutdown: Arc<AtomicBool>,
+    wake_addr: std::net::SocketAddr,
+}
+
+impl Connection {
+    fn handle(&self, stream: TcpStream) {
+        let mut writer = match stream.try_clone() {
+            Ok(w) => w,
+            Err(_) => return,
+        };
+        let reader = BufReader::new(stream);
+        let mut block = self.session.new_block();
+        for line in reader.lines() {
+            let line = match line {
+                Ok(l) => l,
+                Err(_) => return, // peer went away
+            };
+            if line.trim().is_empty() {
+                continue;
+            }
+            let (response, stop) = self.respond(&line, &mut block);
+            if writeln!(writer, "{response}").and_then(|_| writer.flush()).is_err() {
+                return;
+            }
+            if stop {
+                // Shutdown acknowledged: stop accepting, then wake the
+                // accept loop with a throwaway connection.
+                self.shutdown.store(true, Ordering::SeqCst);
+                let _ = TcpStream::connect(self.wake_addr);
+                return;
+            }
+        }
+    }
+
+    /// One request line → (response line, stop-serving flag).
+    fn respond(&self, line: &str, block: &mut super::session::RowBlock) -> (Json, bool) {
+        let t0 = Instant::now();
+        let request = match Json::parse(line) {
+            Ok(j) => j,
+            Err(e) => return (self.error(format!("invalid JSON: {e}")), false),
+        };
+        // Dispatch precedence (docs/serving.md): "cmd"-as-string is a
+        // command, "rows"-as-array is a batch request. A model feature
+        // that happens to be named "cmd" or "rows" is still reachable —
+        // through the canonical {"rows": […]} form, or (for "cmd") via a
+        // multi-key shorthand object — the names are only reserved at the
+        // top level of the shorthand.
+        if let Some(cmd) = request.get("cmd").and_then(|c| c.as_str()) {
+            let sole_key = matches!(&request, Json::Obj(m) if m.len() == 1);
+            if sole_key || !self.session.has_column("cmd") {
+                return self.command(cmd);
+            }
+        }
+        let rows: Vec<&Json> = match request.get("rows") {
+            Some(Json::Arr(items)) => items.iter().collect(),
+            Some(other) if !self.session.has_column("rows") => {
+                return (
+                    self.error(format!(
+                        "\"rows\" must be an array of feature objects, got {other}"
+                    )),
+                    false,
+                )
+            }
+            // Single-row shorthand: the object itself is the row (also the
+            // path for a non-array "rows" value when the model really has
+            // a feature of that name).
+            _ => vec![&request],
+        };
+        if rows.is_empty() {
+            return (self.error("request contains no rows".to_string()), false);
+        }
+        block.clear();
+        for row in rows {
+            if let Err(e) = self.session.decode_row(block, row) {
+                return (self.error(e), false);
+            }
+        }
+        let n = block.rows();
+        let pending = match self.batcher.submit(block) {
+            Ok(p) => p,
+            // QueueFull is additionally counted in the `rejected` counter
+            // by the batcher; every error response increments `errors`.
+            Err(e) => return (self.error(e.to_string()), false),
+        };
+        let flat = match pending.wait() {
+            Ok(f) => f,
+            Err(e) => return (self.error(e), false),
+        };
+        let dim = self.session.output_dim();
+        let predictions = Json::Arr(
+            flat.chunks(dim)
+                .map(|row| Json::Arr(row.iter().map(|&p| Json::Num(p)).collect()))
+                .collect(),
+        );
+        let mut resp = Json::obj();
+        resp.set("predictions", predictions);
+        self.stats.note_request(n, t0.elapsed().as_secs_f64() * 1e6);
+        (resp, false)
+    }
+
+    fn command(&self, cmd: &str) -> (Json, bool) {
+        match cmd {
+            "health" => {
+                let mut j = Json::obj();
+                j.set("ok", Json::Bool(true))
+                    .set("engine", Json::Str(self.session.engine_name()))
+                    .set(
+                        "model_type",
+                        Json::Str(self.session.model().model_type().to_string()),
+                    )
+                    .set("output_dim", Json::Num(self.session.output_dim() as f64));
+                (j, false)
+            }
+            "spec" => (self.session.spec_json(), false),
+            "stats" => (self.stats.to_json(), false),
+            "shutdown" => {
+                let mut j = Json::obj();
+                j.set("ok", Json::Bool(true));
+                (j, true)
+            }
+            other => (
+                self.error(format!(
+                    "unknown command '{other}' (known: health, spec, stats, shutdown)"
+                )),
+                false,
+            ),
+        }
+    }
+
+    fn error(&self, message: String) -> Json {
+        self.stats.note_error();
+        let mut j = Json::obj();
+        j.set("error", Json::Str(message));
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic;
+    use crate::learner::gbt::GbtConfig;
+    use crate::learner::{GradientBoostedTreesLearner, Learner};
+
+    fn test_session() -> Session {
+        let ds = synthetic::adult_like(200, 7);
+        let mut cfg = GbtConfig::new("income");
+        cfg.num_trees = 3;
+        cfg.max_depth = 3;
+        Session::new(GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap())
+    }
+
+    fn conn(session: Arc<Session>, batcher: Arc<Batcher>, stats: Arc<ServingStats>) -> Connection {
+        Connection {
+            session,
+            batcher,
+            stats,
+            shutdown: Arc::new(AtomicBool::new(false)),
+            wake_addr: "127.0.0.1:1".parse().unwrap(),
+        }
+    }
+
+    #[test]
+    fn respond_handles_requests_commands_and_errors() {
+        let session = Arc::new(test_session());
+        let stats = Arc::new(ServingStats::new());
+        let batcher = Arc::new(Batcher::with_stats(
+            Arc::clone(&session),
+            BatcherConfig { max_delay: std::time::Duration::ZERO, ..Default::default() },
+            Arc::clone(&stats),
+        ));
+        let c = conn(Arc::clone(&session), batcher, Arc::clone(&stats));
+        let mut block = session.new_block();
+
+        // Multi-row request.
+        let (resp, stop) =
+            c.respond(r#"{"rows": [{"age": 30}, {"age": 60, "education": "Doctorate"}]}"#, &mut block);
+        assert!(!stop);
+        assert_eq!(resp.req_arr("predictions").unwrap().len(), 2);
+
+        // Single-row shorthand.
+        let (resp, _) = c.respond(r#"{"age": 41}"#, &mut block);
+        assert_eq!(resp.req_arr("predictions").unwrap().len(), 1);
+
+        // Malformed JSON and unknown features answer with errors, in-band.
+        let (resp, _) = c.respond("not json at all", &mut block);
+        assert!(resp.req_str("error").unwrap().contains("invalid JSON"));
+        let (resp, _) = c.respond(r#"{"bogus_feature": 1}"#, &mut block);
+        assert!(resp.req_str("error").unwrap().contains("bogus_feature"));
+        let (resp, _) = c.respond(r#"{"rows": []}"#, &mut block);
+        assert!(resp.req_str("error").unwrap().contains("no rows"));
+        let (resp, _) = c.respond(r#"{"rows": 5}"#, &mut block);
+        assert!(resp.req_str("error").unwrap().contains("array"));
+
+        // Commands.
+        let (resp, _) = c.respond(r#"{"cmd": "health"}"#, &mut block);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        let (resp, _) = c.respond(r#"{"cmd": "spec"}"#, &mut block);
+        assert_eq!(resp.req_str("label").unwrap(), "income");
+        let (resp, _) = c.respond(r#"{"cmd": "stats"}"#, &mut block);
+        assert!(resp.req_f64("requests").unwrap() >= 2.0);
+        let (resp, _) = c.respond(r#"{"cmd": "dance"}"#, &mut block);
+        assert!(resp.req_str("error").unwrap().contains("unknown command"));
+        let (resp, stop) = c.respond(r#"{"cmd": "shutdown"}"#, &mut block);
+        assert!(stop);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+
+        let snap = stats.snapshot();
+        assert_eq!(snap.requests, 2);
+        assert_eq!(snap.rows, 3);
+        assert_eq!(snap.errors, 5);
+    }
+}

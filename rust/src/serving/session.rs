@@ -1,0 +1,539 @@
+//! Serving session: a loaded model pinned to its auto-selected inference
+//! engine, plus dataspec-driven request decoding.
+//!
+//! Incoming requests name features by column name; the session maps names
+//! to dataspec columns once at construction and materializes rows
+//! directly into columnar [`ColumnData`] storage (a [`RowBlock`]) — no
+//! intermediate `Observation`, no per-request dataspec scan. Blocks are
+//! scratch: callers `clear()` and refill them across requests, so the
+//! steady-state decode loop reuses its column and staging allocations
+//! (categorical-set rows aside, which own their token lists).
+
+use crate::dataset::{ColumnData, DataSpec, Dataset, FeatureSemantic, MISSING_BOOL, MISSING_CAT};
+use crate::inference::InferenceEngine;
+use crate::model::Model;
+use crate::utils::json::Json;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Columnar decode scratch: one growing column per dataspec column.
+/// Obtained from [`Session::new_block`]; reused across requests via
+/// [`RowBlock::clear`]. Internally this *is* a [`Dataset`] whose columns
+/// are mutated in place, so the engine batch path consumes it directly.
+pub struct RowBlock {
+    ds: Dataset,
+    rows: usize,
+    /// Per-row decode staging, reused across calls so a mid-row decode
+    /// error never leaves the columns at uneven lengths — and so the
+    /// steady-state decode loop performs no per-row allocation.
+    staged: Vec<DecodedValue>,
+}
+
+impl RowBlock {
+    /// Number of decoded rows currently in the block.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Removes all rows, keeping allocations for reuse.
+    pub fn clear(&mut self) {
+        for c in &mut self.ds.columns {
+            c.clear();
+        }
+        self.rows = 0;
+        self.ds.sync_num_rows().expect("cleared columns are even");
+    }
+
+    /// Appends every row of `other` (the batcher's coalescing step).
+    pub fn append_from(&mut self, other: &RowBlock) {
+        for (dst, src) in self.ds.columns.iter_mut().zip(&other.ds.columns) {
+            dst.extend_from(src).expect("blocks from the same session share semantics");
+        }
+        self.rows += other.rows;
+    }
+
+    /// The block as a columnar dataset, row count synced. Only valid until
+    /// the next mutation.
+    fn as_dataset(&mut self) -> &Dataset {
+        let n = self.ds.sync_num_rows().expect("decode pushed one value per column per row");
+        debug_assert_eq!(n, self.rows);
+        &self.ds
+    }
+}
+
+/// A loaded model pinned to its fastest compatible engine, ready to
+/// decode and score requests. Shared across connection handlers and the
+/// batcher behind an `Arc`.
+pub struct Session {
+    model: Box<dyn Model>,
+    /// Fastest compatible engine; `None` for wrapper models, which fall
+    /// back to the model's own row loop.
+    engine: Option<Box<dyn InferenceEngine>>,
+    col_by_name: HashMap<String, usize>,
+    dim: usize,
+    /// Empty columnar prototype cloned by [`Session::new_block`].
+    prototype: Dataset,
+}
+
+impl Session {
+    /// Pins `model` to the fastest engine its structure compiles to
+    /// (QuickScorer → flat SoA → the model's own row loop), the same
+    /// selection `predict_flat` makes for offline batches.
+    pub fn new(model: Box<dyn Model>) -> Session {
+        let engine = crate::inference::fastest_engine(model.as_ref());
+        let spec = model.spec();
+        let col_by_name: HashMap<String, usize> = spec
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| (c.name.clone(), i))
+            .collect();
+        let prototype = empty_like(spec);
+        let dim = engine
+            .as_ref()
+            .map(|e| e.output_dim())
+            .unwrap_or_else(|| model.num_classes().max(1));
+        Session { model, engine, col_by_name, dim, prototype }
+    }
+
+    /// Loads a model file and opens a session on it.
+    pub fn open(path: &Path) -> Result<Session, String> {
+        Ok(Session::new(crate::model::io::load_model(path)?))
+    }
+
+    /// Values per prediction (class count, or 1 for regression).
+    pub fn output_dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Label dictionary for classification models (empty for regression).
+    pub fn class_names(&self) -> Vec<String> {
+        self.model.class_names()
+    }
+
+    pub fn model(&self) -> &dyn Model {
+        self.model.as_ref()
+    }
+
+    /// Name of the engine scoring this session's requests.
+    pub fn engine_name(&self) -> String {
+        self.engine
+            .as_ref()
+            .map(|e| e.name())
+            .unwrap_or_else(|| "model row loop (no engine compiled)".to_string())
+    }
+
+    /// Fresh columnar decode scratch matching the model's dataspec.
+    pub fn new_block(&self) -> RowBlock {
+        RowBlock { ds: self.prototype.clone(), rows: 0, staged: Vec::new() }
+    }
+
+    /// Whether the model's dataspec has a column of this name (the server
+    /// uses it to resolve "cmd"/"rows" name collisions in the protocol).
+    pub fn has_column(&self, name: &str) -> bool {
+        self.col_by_name.contains_key(name)
+    }
+
+    /// The request-facing feature description: every non-label column's
+    /// name, semantic and (for categoricals) dictionary — what a client
+    /// needs to build well-formed rows.
+    pub fn spec_json(&self) -> Json {
+        let spec = self.model.spec();
+        let label_col = self.model.label_col();
+        let features = spec
+            .columns
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != label_col)
+            .map(|(_, c)| {
+                let mut f = Json::obj();
+                f.set("name", Json::Str(c.name.clone()))
+                    .set("semantic", Json::Str(c.semantic.name().to_string()));
+                if !c.dictionary.is_empty() {
+                    f.set(
+                        "dictionary",
+                        Json::Arr(c.dictionary.iter().map(|d| Json::Str(d.clone())).collect()),
+                    );
+                }
+                f
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("features", Json::Arr(features))
+            .set("label", Json::Str(spec.columns[label_col].name.clone()))
+            .set(
+                "classes",
+                Json::Arr(self.class_names().into_iter().map(Json::Str).collect()),
+            );
+        j
+    }
+
+    /// Decodes one JSON object (`{"feature_name": value, …}`) into the
+    /// block. Absent or `null` features are missing; unknown feature names
+    /// — including the model's label, which is an output, not an input —
+    /// are an error naming the offender (§2.1: misconfiguration reports
+    /// what is wrong, not garbage predictions). On error the block is left
+    /// unchanged.
+    pub fn decode_row(&self, block: &mut RowBlock, row: &Json) -> Result<(), String> {
+        let obj = match row {
+            Json::Obj(m) => m,
+            _ => return Err("each row must be a JSON object of feature_name: value".to_string()),
+        };
+        let spec = self.model.spec();
+        let label_name = &spec.columns[self.model.label_col()].name;
+        for key in obj.keys() {
+            if key == label_name {
+                return Err(format!(
+                    "'{key}' is the model's label — an output, not an input feature; \
+                     remove it from the request."
+                ));
+            }
+            if !self.col_by_name.contains_key(key) {
+                return Err(format!(
+                    "unknown feature '{key}'. The model's features are: {}.",
+                    self.feature_names().join(", ")
+                ));
+            }
+        }
+        // Stage the full row before touching the columns, so a mid-row
+        // error cannot leave them at uneven lengths. The staging buffer
+        // lives in the block and is reused across calls.
+        block.staged.clear();
+        for col in &spec.columns {
+            block.staged.push(decode_value(col.name.as_str(), col, obj.get(&col.name))?);
+        }
+        for (c, v) in block.ds.columns.iter_mut().zip(block.staged.drain(..)) {
+            v.push_into(c);
+        }
+        block.rows += 1;
+        Ok(())
+    }
+
+    /// Non-label feature names, in dataspec order.
+    pub fn feature_names(&self) -> Vec<String> {
+        let label_col = self.model.label_col();
+        self.model
+            .spec()
+            .columns
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != label_col)
+            .map(|(_, c)| c.name.clone())
+            .collect()
+    }
+
+    /// Scores every row of the block through the pinned engine (or the
+    /// model row loop for wrapper models) into a fresh row-major buffer of
+    /// `rows * output_dim()` values. One engine call per invocation — the
+    /// batcher's whole flush is a single `predict_batch`.
+    pub fn predict_block(&self, block: &mut RowBlock) -> Vec<f64> {
+        let n = block.rows;
+        let dim = self.dim;
+        let mut out = vec![0.0f64; n * dim];
+        if n == 0 {
+            return out;
+        }
+        let ds = block.as_dataset();
+        match &self.engine {
+            Some(e) => e.predict_batch(ds, 0..n, &mut out),
+            None => {
+                for r in 0..n {
+                    out[r * dim..(r + 1) * dim]
+                        .copy_from_slice(&self.model.predict_ds_row(ds, r));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One decoded attribute value, staged before being pushed columnar.
+enum DecodedValue {
+    Num(f32),
+    Cat(u32),
+    Bool(u8),
+    Set(Vec<u32>),
+}
+
+impl DecodedValue {
+    fn push_into(self, col: &mut ColumnData) {
+        match (self, col) {
+            (DecodedValue::Num(x), ColumnData::Numerical(v)) => v.push(x),
+            (DecodedValue::Cat(x), ColumnData::Categorical(v)) => v.push(x),
+            (DecodedValue::Bool(x), ColumnData::Boolean(v)) => v.push(x),
+            (DecodedValue::Set(xs), ColumnData::CategoricalSet { offsets, values }) => {
+                values.extend_from_slice(&xs);
+                offsets.push(values.len() as u32);
+            }
+            _ => unreachable!("decode_value matches the column semantic"),
+        }
+    }
+}
+
+fn empty_like(spec: &DataSpec) -> Dataset {
+    let columns = spec
+        .columns
+        .iter()
+        .map(|c| match c.semantic {
+            FeatureSemantic::Numerical => ColumnData::Numerical(Vec::new()),
+            FeatureSemantic::Categorical => ColumnData::Categorical(Vec::new()),
+            FeatureSemantic::Boolean => ColumnData::Boolean(Vec::new()),
+            FeatureSemantic::CategoricalSet => {
+                ColumnData::CategoricalSet { offsets: vec![0], values: Vec::new() }
+            }
+        })
+        .collect();
+    Dataset::new(spec.clone(), columns).expect("empty columns match their spec")
+}
+
+/// Formats a JSON number the way the dataspec dictionaries store numeric
+/// category names ("1", not "1.0").
+fn num_to_category(x: f64) -> String {
+    if x == x.trunc() && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+fn decode_value(
+    name: &str,
+    col: &crate::dataset::ColumnSpec,
+    value: Option<&Json>,
+) -> Result<DecodedValue, String> {
+    let missing = matches!(value, None | Some(Json::Null));
+    match col.semantic {
+        FeatureSemantic::Numerical => {
+            if missing {
+                return Ok(DecodedValue::Num(f32::NAN));
+            }
+            match value.unwrap() {
+                Json::Num(x) => Ok(DecodedValue::Num(*x as f32)),
+                Json::Str(s) => s.trim().parse::<f32>().map(DecodedValue::Num).map_err(|_| {
+                    format!(
+                        "feature '{name}' is NUMERICAL but \"{s}\" does not parse as a number."
+                    )
+                }),
+                other => Err(format!(
+                    "feature '{name}' is NUMERICAL but the request holds {other} (expected a \
+                     number, a numeric string, or null for missing)."
+                )),
+            }
+        }
+        FeatureSemantic::Categorical => {
+            if missing {
+                return Ok(DecodedValue::Cat(MISSING_CAT));
+            }
+            let index = match value.unwrap() {
+                Json::Str(s) => col.category_index(s),
+                Json::Num(x) => col.category_index(&num_to_category(*x)),
+                Json::Bool(b) => col.category_index(if *b { "true" } else { "false" }),
+                other => {
+                    return Err(format!(
+                        "feature '{name}' is CATEGORICAL but the request holds {other} \
+                         (expected a string category or null for missing)."
+                    ))
+                }
+            };
+            // Out-of-dictionary categories map to missing, mirroring
+            // dataspec encoding of OOD values at training time.
+            Ok(DecodedValue::Cat(index.unwrap_or(MISSING_CAT)))
+        }
+        FeatureSemantic::Boolean => {
+            if missing {
+                return Ok(DecodedValue::Bool(MISSING_BOOL));
+            }
+            match value.unwrap() {
+                Json::Bool(b) => Ok(DecodedValue::Bool(*b as u8)),
+                Json::Num(x) if *x == 0.0 || *x == 1.0 => Ok(DecodedValue::Bool(*x as u8)),
+                Json::Str(s) => match s.trim().to_ascii_lowercase().as_str() {
+                    "true" | "1" => Ok(DecodedValue::Bool(1)),
+                    "false" | "0" => Ok(DecodedValue::Bool(0)),
+                    _ => Err(format!(
+                        "feature '{name}' is BOOLEAN but the request holds \"{s}\"."
+                    )),
+                },
+                other => Err(format!(
+                    "feature '{name}' is BOOLEAN but the request holds {other} (expected \
+                     true/false, 0/1, or null for missing)."
+                )),
+            }
+        }
+        FeatureSemantic::CategoricalSet => {
+            if missing {
+                // Sentinel single-element MISSING_CAT set = missing
+                // (distinct from an empty set), as in the dataset layer.
+                return Ok(DecodedValue::Set(vec![MISSING_CAT]));
+            }
+            // Unknown tokens are dropped, as in dataspec encoding.
+            let codes: Vec<u32> = match value.unwrap() {
+                Json::Arr(items) => {
+                    let mut codes = Vec::with_capacity(items.len());
+                    for it in items {
+                        match it {
+                            Json::Str(s) => codes.extend(col.category_index(s)),
+                            other => {
+                                return Err(format!(
+                                    "feature '{name}' is CATEGORICAL_SET; array items \
+                                     must be strings, got {other}."
+                                ))
+                            }
+                        }
+                    }
+                    codes
+                }
+                Json::Str(s) => s.split_whitespace().filter_map(|t| col.category_index(t)).collect(),
+                other => {
+                    return Err(format!(
+                        "feature '{name}' is CATEGORICAL_SET but the request holds {other} \
+                         (expected an array of strings, a whitespace-separated string, or \
+                         null for missing)."
+                    ))
+                }
+            };
+            Ok(DecodedValue::Set(codes))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic;
+    use crate::learner::gbt::GbtConfig;
+    use crate::learner::{GradientBoostedTreesLearner, Learner};
+
+    fn session() -> Session {
+        let ds = synthetic::adult_like(300, 2024);
+        let mut cfg = GbtConfig::new("income");
+        cfg.num_trees = 5;
+        cfg.max_depth = 4;
+        Session::new(GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap())
+    }
+
+    #[test]
+    fn decode_matches_dataset_row() {
+        let s = session();
+        let mut block = s.new_block();
+        let row = Json::parse(
+            r#"{"age": 44, "fnlwgt": 120000, "workclass": "Private",
+                "education": "Masters", "occupation": "Exec-managerial",
+                "marital_status": "Never-married", "hours_per_week": 45,
+                "capital_gain": 0}"#,
+        )
+        .unwrap();
+        s.decode_row(&mut block, &row).unwrap();
+        assert_eq!(block.rows(), 1);
+        let out = s.predict_block(&mut block);
+        assert_eq!(out.len(), s.output_dim());
+        assert!((out.iter().sum::<f64>() - 1.0).abs() < 1e-9, "{out:?}");
+    }
+
+    #[test]
+    fn missing_and_null_features_decode_as_missing() {
+        let s = session();
+        let mut block = s.new_block();
+        let row = Json::parse(r#"{"age": null, "workclass": "Private"}"#).unwrap();
+        s.decode_row(&mut block, &row).unwrap();
+        let ds = block.as_dataset();
+        assert!(ds.column(0).is_missing(0)); // age -> NaN
+        assert!(ds.column(4).is_missing(0)); // occupation absent -> MISSING_CAT
+    }
+
+    #[test]
+    fn unknown_feature_is_an_error_naming_it() {
+        let s = session();
+        let mut block = s.new_block();
+        let row = Json::parse(r#"{"agee": 44}"#).unwrap();
+        let err = s.decode_row(&mut block, &row).unwrap_err();
+        assert!(err.contains("agee"), "{err}");
+        assert!(err.contains("age"), "{err}");
+        assert_eq!(block.rows(), 0); // block untouched on error
+    }
+
+    #[test]
+    fn type_mismatch_is_an_error_and_block_stays_even() {
+        let s = session();
+        let mut block = s.new_block();
+        let good = Json::parse(r#"{"age": 30}"#).unwrap();
+        s.decode_row(&mut block, &good).unwrap();
+        let bad = Json::parse(r#"{"age": "not-a-number"}"#).unwrap();
+        let err = s.decode_row(&mut block, &bad).unwrap_err();
+        assert!(err.contains("NUMERICAL"), "{err}");
+        assert_eq!(block.rows(), 1);
+        // Block still scores after a failed decode.
+        let out = s.predict_block(&mut block);
+        assert_eq!(out.len(), s.output_dim());
+    }
+
+    #[test]
+    fn label_in_request_is_rejected() {
+        let s = session();
+        let mut block = s.new_block();
+        let row = Json::parse(r#"{"age": 30, "income": ">50K"}"#).unwrap();
+        let err = s.decode_row(&mut block, &row).unwrap_err();
+        assert!(err.contains("label"), "{err}");
+        assert!(err.contains("income"), "{err}");
+        assert_eq!(block.rows(), 0);
+    }
+
+    #[test]
+    fn has_column_covers_all_spec_columns() {
+        let s = session();
+        assert!(s.has_column("age"));
+        assert!(s.has_column("income")); // label is a column too
+        assert!(!s.has_column("cmd"));
+        assert!(!s.has_column("rows"));
+    }
+
+    #[test]
+    fn ood_category_maps_to_missing() {
+        let s = session();
+        let mut block = s.new_block();
+        let row = Json::parse(r#"{"workclass": "Space-tourism"}"#).unwrap();
+        s.decode_row(&mut block, &row).unwrap();
+        assert!(block.as_dataset().column(2).is_missing(0));
+    }
+
+    #[test]
+    fn blocks_clear_and_append() {
+        let s = session();
+        let mut a = s.new_block();
+        let mut b = s.new_block();
+        let row = Json::parse(r#"{"age": 51, "education": "Doctorate"}"#).unwrap();
+        s.decode_row(&mut a, &row).unwrap();
+        s.decode_row(&mut b, &row).unwrap();
+        s.decode_row(&mut b, &row).unwrap();
+        a.append_from(&b);
+        assert_eq!(a.rows(), 3);
+        let out = s.predict_block(&mut a);
+        assert_eq!(out.len(), 3 * s.output_dim());
+        // All three rows are identical, so predictions must be too.
+        let dim = s.output_dim();
+        assert_eq!(out[..dim], out[dim..2 * dim]);
+        a.clear();
+        assert_eq!(a.rows(), 0);
+        assert!(s.predict_block(&mut a).is_empty());
+    }
+
+    #[test]
+    fn spec_json_lists_features_and_classes() {
+        let s = session();
+        let j = s.spec_json();
+        let features = j.req_arr("features").unwrap();
+        assert_eq!(features.len(), 8); // 9 columns minus the label
+        assert_eq!(j.req_str("label").unwrap(), "income");
+        assert_eq!(j.req_arr("classes").unwrap().len(), 2);
+        assert!(features.iter().any(|f| f.req_str("name") == Ok("workclass")));
+    }
+
+    #[test]
+    fn session_pins_an_optimized_engine_for_forests() {
+        let s = session();
+        let name = s.engine_name();
+        assert!(
+            name.contains("QuickScorer") || name.contains("OptPred"),
+            "expected an optimized engine, got {name}"
+        );
+    }
+}

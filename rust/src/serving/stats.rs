@@ -1,0 +1,327 @@
+//! Serving telemetry: request/row/batch throughput counters, queue-depth
+//! gauges, rejection counts and request-latency percentiles, exportable
+//! as JSON (the server's `{"cmd": "stats"}` response) or as the
+//! `utils/histogram.rs` text rendering for humans.
+//!
+//! Latency is kept in a fixed-size reservoir (Vitter's Algorithm R over
+//! at most [`LATENCY_RESERVOIR_CAP`] samples) with exact full-stream
+//! count/mean/min/max via `utils/stats::Moments` — a long-lived server
+//! holds bounded memory no matter how many requests it answers, and the
+//! `stats` command sorts at most the reservoir, outside the lock.
+
+use crate::utils::histogram::TextHistogram;
+use crate::utils::json::Json;
+use crate::utils::stats::Moments;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Upper bound on retained latency samples (8 bytes each). Percentiles
+/// are exact below the cap and uniformly sampled above it.
+pub const LATENCY_RESERVOIR_CAP: usize = 16384;
+
+/// Fixed-size uniform sample of the latency stream plus exact moments.
+struct LatencyReservoir {
+    moments: Moments,
+    samples: Vec<f64>,
+    /// xorshift64* state for Algorithm R replacement.
+    rng: u64,
+}
+
+impl LatencyReservoir {
+    fn new() -> LatencyReservoir {
+        LatencyReservoir {
+            moments: Moments::new(),
+            samples: Vec::new(),
+            rng: 0x9E37_79B9_7F4A_7C15,
+        }
+    }
+
+    fn add(&mut self, x: f64) {
+        self.moments.add(x);
+        if self.samples.len() < LATENCY_RESERVOIR_CAP {
+            self.samples.push(x);
+        } else {
+            self.rng ^= self.rng >> 12;
+            self.rng ^= self.rng << 25;
+            self.rng ^= self.rng >> 27;
+            let r = self.rng.wrapping_mul(0x2545_F491_4F6C_DD1D);
+            // Algorithm R: replace a uniformly random index in
+            // 0..seen-so-far; indices >= CAP mean "keep the reservoir".
+            let j = (r % self.moments.count()) as usize;
+            if j < LATENCY_RESERVOIR_CAP {
+                self.samples[j] = x;
+            }
+        }
+    }
+}
+
+/// Shared, thread-safe serving counters. One instance is shared by the
+/// TCP front end (request latency), the batcher (batch sizes, queue
+/// depth, rejections) and the `stats` command (export).
+pub struct ServingStats {
+    requests: AtomicU64,
+    rows: AtomicU64,
+    errors: AtomicU64,
+    rejected: AtomicU64,
+    batches: AtomicU64,
+    batched_rows: AtomicU64,
+    batched_requests: AtomicU64,
+    queue_rows: AtomicUsize,
+    queue_rows_peak: AtomicUsize,
+    /// Per-request wall latency in microseconds (decode → respond).
+    latency_us: Mutex<LatencyReservoir>,
+}
+
+/// A point-in-time copy of the counters (tests and reports).
+#[derive(Clone, Debug, Default)]
+pub struct StatsSnapshot {
+    pub requests: u64,
+    pub rows: u64,
+    pub errors: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub batched_rows: u64,
+    pub batched_requests: u64,
+    pub queue_rows: usize,
+    pub queue_rows_peak: usize,
+}
+
+impl Default for ServingStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServingStats {
+    pub fn new() -> ServingStats {
+        ServingStats {
+            requests: AtomicU64::new(0),
+            rows: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_rows: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+            queue_rows: AtomicUsize::new(0),
+            queue_rows_peak: AtomicUsize::new(0),
+            latency_us: Mutex::new(LatencyReservoir::new()),
+        }
+    }
+
+    /// One successfully answered request of `rows` rows taking
+    /// `latency_us` microseconds end to end.
+    pub fn note_request(&self, rows: usize, latency_us: f64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.rows.fetch_add(rows as u64, Ordering::Relaxed);
+        self.latency_us.lock().expect("stats poisoned").add(latency_us);
+    }
+
+    /// One request answered with an error (parse, decode, or submit).
+    pub fn note_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One submission rejected by the bounded queue (backpressure).
+    pub fn note_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One scored batch coalescing `requests` requests into `rows` rows.
+    pub fn note_batch(&self, rows: usize, requests: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_rows.fetch_add(rows as u64, Ordering::Relaxed);
+        self.batched_requests.fetch_add(requests as u64, Ordering::Relaxed);
+    }
+
+    /// Current queue depth in rows; also tracks the high-water mark.
+    pub fn set_queue_rows(&self, rows: usize) {
+        self.queue_rows.store(rows, Ordering::Relaxed);
+        self.queue_rows_peak.fetch_max(rows, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            rows: self.rows.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_rows: self.batched_rows.load(Ordering::Relaxed),
+            batched_requests: self.batched_requests.load(Ordering::Relaxed),
+            queue_rows: self.queue_rows.load(Ordering::Relaxed),
+            queue_rows_peak: self.queue_rows_peak.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Drops accumulated latency samples (counters are kept).
+    pub fn reset_latency(&self) {
+        *self.latency_us.lock().expect("stats poisoned") = LatencyReservoir::new();
+    }
+
+    /// JSON export: counters plus latency mean and p50/p95/p99 (µs).
+    /// Count/mean/min/max are exact over the full stream; percentiles are
+    /// exact below [`LATENCY_RESERVOIR_CAP`] samples, sampled above.
+    pub fn to_json(&self) -> Json {
+        let s = self.snapshot();
+        let mut j = Json::obj();
+        j.set("requests", Json::Num(s.requests as f64))
+            .set("rows", Json::Num(s.rows as f64))
+            .set("errors", Json::Num(s.errors as f64))
+            .set("rejected", Json::Num(s.rejected as f64))
+            .set("batches", Json::Num(s.batches as f64))
+            .set("batched_rows", Json::Num(s.batched_rows as f64))
+            .set("batched_requests", Json::Num(s.batched_requests as f64))
+            .set(
+                "mean_batch_rows",
+                Json::Num(if s.batches > 0 {
+                    s.batched_rows as f64 / s.batches as f64
+                } else {
+                    0.0
+                }),
+            )
+            .set("queue_rows", Json::Num(s.queue_rows as f64))
+            .set("queue_rows_peak", Json::Num(s.queue_rows_peak as f64));
+        // Copy what is needed under the lock; sort outside it so a stats
+        // call never stalls in-flight request accounting.
+        let (count, mean, min, max, mut xs) = {
+            let r = self.latency_us.lock().expect("stats poisoned");
+            (
+                r.moments.count(),
+                r.moments.mean(),
+                r.moments.min(),
+                r.moments.max(),
+                r.samples.clone(),
+            )
+        };
+        let mut lat = Json::obj();
+        lat.set("count", Json::Num(count as f64));
+        if count > 0 {
+            xs.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+            lat.set("mean_us", Json::Num(mean))
+                .set("min_us", Json::Num(min))
+                .set("max_us", Json::Num(max));
+            for (name, p) in [("p50_us", 0.50), ("p95_us", 0.95), ("p99_us", 0.99)] {
+                lat.set(name, Json::Num(percentile(&xs, p)));
+            }
+        }
+        j.set("latency", lat);
+        j
+    }
+
+    /// Human-readable report: counters plus the latency text histogram
+    /// (`utils/histogram.rs`), rendered over the reservoir sample.
+    pub fn report(&self) -> String {
+        let s = self.snapshot();
+        let mut out = format!(
+            "requests: {} ({} rows, {} errors, {} rejected)\n\
+             batches: {} (mean {:.1} rows/batch, {:.1} requests/batch)\n\
+             queue: {} rows now, {} rows peak\n\nrequest latency (us):\n",
+            s.requests,
+            s.rows,
+            s.errors,
+            s.rejected,
+            s.batches,
+            if s.batches > 0 { s.batched_rows as f64 / s.batches as f64 } else { 0.0 },
+            if s.batches > 0 { s.batched_requests as f64 / s.batches as f64 } else { 0.0 },
+            s.queue_rows,
+            s.queue_rows_peak,
+        );
+        let (samples, total) = {
+            let r = self.latency_us.lock().expect("stats poisoned");
+            (r.samples.clone(), r.moments.count())
+        };
+        if total as usize > samples.len() {
+            out.push_str(&format!(
+                "(uniform sample of {} of {} requests)\n",
+                samples.len(),
+                total
+            ));
+        }
+        let mut h = TextHistogram::new();
+        h.extend(samples);
+        out.push_str(&h.render(10, 20));
+        out
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted sample.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_export() {
+        let s = ServingStats::new();
+        s.note_request(1, 120.0);
+        s.note_request(8, 480.0);
+        s.note_error();
+        s.note_rejected();
+        s.note_batch(9, 2);
+        s.set_queue_rows(5);
+        s.set_queue_rows(2);
+        let snap = s.snapshot();
+        assert_eq!(snap.requests, 2);
+        assert_eq!(snap.rows, 9);
+        assert_eq!(snap.errors, 1);
+        assert_eq!(snap.rejected, 1);
+        assert_eq!(snap.batches, 1);
+        assert_eq!(snap.queue_rows, 2);
+        assert_eq!(snap.queue_rows_peak, 5);
+        let j = s.to_json();
+        assert_eq!(j.req_f64("requests").unwrap(), 2.0);
+        assert_eq!(j.req_f64("mean_batch_rows").unwrap(), 9.0);
+        let lat = j.req("latency").unwrap();
+        assert_eq!(lat.req_f64("count").unwrap(), 2.0);
+        assert_eq!(lat.req_f64("p99_us").unwrap(), 480.0);
+        assert!(s.report().contains("rows peak"));
+    }
+
+    #[test]
+    fn empty_stats_export_cleanly() {
+        let s = ServingStats::new();
+        let j = s.to_json();
+        assert_eq!(j.req_f64("requests").unwrap(), 0.0);
+        assert_eq!(j.req("latency").unwrap().req_f64("count").unwrap(), 0.0);
+        assert!(s.report().contains("(empty)"));
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let s = ServingStats::new();
+        for i in 1..=100 {
+            s.note_request(1, i as f64);
+        }
+        let j = s.to_json();
+        let lat = j.req("latency").unwrap();
+        assert_eq!(lat.req_f64("p50_us").unwrap(), 50.0);
+        assert_eq!(lat.req_f64("p95_us").unwrap(), 95.0);
+        assert_eq!(lat.req_f64("p99_us").unwrap(), 99.0);
+    }
+
+    #[test]
+    fn reservoir_stays_bounded_with_exact_moments() {
+        let s = ServingStats::new();
+        let n = LATENCY_RESERVOIR_CAP + 500;
+        for i in 0..n {
+            s.note_request(1, i as f64);
+        }
+        let j = s.to_json();
+        let lat = j.req("latency").unwrap();
+        // Full-stream statistics stay exact past the cap...
+        assert_eq!(lat.req_f64("count").unwrap(), n as f64);
+        assert_eq!(lat.req_f64("min_us").unwrap(), 0.0);
+        assert_eq!(lat.req_f64("max_us").unwrap(), (n - 1) as f64);
+        // ...while percentiles come from the bounded uniform sample.
+        let p50 = lat.req_f64("p50_us").unwrap();
+        assert!(p50 > 0.0 && p50 < (n - 1) as f64, "{p50}");
+        assert!(s.report().contains("uniform sample"));
+    }
+}

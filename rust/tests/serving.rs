@@ -1,0 +1,249 @@
+//! Serving-runtime integration tests: the batcher's coalescing is
+//! bit-identical to one `predict_batch` over the same rows, the bounded
+//! queue rejects instead of blocking, and the TCP server answers the
+//! wire protocol end to end on a loopback socket.
+
+use std::sync::Arc;
+use std::time::Duration;
+use ydf::dataset::synthetic;
+use ydf::inference::BLOCK_SIZE;
+use ydf::learner::gbt::GbtConfig;
+use ydf::learner::{GradientBoostedTreesLearner, Learner};
+use ydf::serving::{Batcher, BatcherConfig, RowBlock, Session, SubmitError};
+use ydf::utils::json::Json;
+
+/// A trained adult-like session plus JSON rows for `n` requests covering
+/// NaN/missing features: every 7th row drops `age` (numerical missing)
+/// and every 5th row carries an out-of-dictionary `workclass`.
+fn session_and_rows(n: usize, seed: u64) -> (Arc<Session>, Vec<String>) {
+    let ds = synthetic::adult_like(400, seed);
+    let mut cfg = GbtConfig::new("income");
+    cfg.num_trees = 6;
+    cfg.max_depth = 4;
+    let session =
+        Arc::new(Session::new(GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap()));
+    let workclasses = ["Private", "Self-emp-inc", "Federal-gov", "Moon-base"];
+    let educations = ["HS-grad", "Bachelors", "Masters", "Doctorate"];
+    let rows: Vec<String> = (0..n)
+        .map(|i| {
+            let age = if i % 7 == 0 {
+                "null".to_string() // missing numerical -> NaN
+            } else {
+                format!("{}", 18 + (i * 13) % 60)
+            };
+            format!(
+                r#"{{"age": {age}, "hours_per_week": {}, "workclass": "{}",
+                    "education": "{}", "capital_gain": {}}}"#,
+                20 + (i * 7) % 50,
+                workclasses[i % workclasses.len()], // i%4==3 -> OOD
+                educations[(i / 3) % educations.len()],
+                (i % 11) * 500,
+            )
+        })
+        .collect();
+    (session, rows)
+}
+
+fn decode_all(session: &Session, rows: &[String]) -> RowBlock {
+    let mut block = session.new_block();
+    for r in rows {
+        session.decode_row(&mut block, &Json::parse(r).unwrap()).unwrap();
+    }
+    block
+}
+
+/// N concurrent requests (mixed sizes, unaligned tails, NaN/missing and
+/// OOD features) coalesced through the batcher must be bit-identical to
+/// one `predict_batch` call over the same rows.
+#[test]
+fn concurrent_coalesced_requests_match_single_predict_batch() {
+    // 201 rows: not a BLOCK_SIZE multiple, so tail blocks are exercised
+    // both in the single reference call and inside coalesced batches.
+    let (session, rows) = session_and_rows(201, 31);
+    let mut reference_block = decode_all(&session, &rows);
+    let reference = session.predict_block(&mut reference_block);
+    let dim = session.output_dim();
+
+    // Uneven request sizes (1, 8, 64, 3, ...) covering every row once.
+    let sizes = [1usize, 8, 64, 3, 17, 2, 64, 5, 1, 9, 27];
+    let mut requests: Vec<(usize, Vec<String>)> = Vec::new(); // (first row, rows)
+    let mut at = 0usize;
+    let mut k = 0usize;
+    while at < rows.len() {
+        let take = sizes[k % sizes.len()].min(rows.len() - at);
+        requests.push((at, rows[at..at + take].to_vec()));
+        at += take;
+        k += 1;
+    }
+
+    for trial in 0..3 {
+        let batcher = Batcher::new(
+            Arc::clone(&session),
+            BatcherConfig {
+                // Vary the flush policy across trials: deadline-driven,
+                // adaptive (drain-when-free), and threshold-driven.
+                max_delay: Duration::from_micros([500, 0, 2000][trial]),
+                flush_rows: [BLOCK_SIZE, BLOCK_SIZE, 2 * BLOCK_SIZE][trial],
+                ..Default::default()
+            },
+        );
+        let results: Vec<(usize, usize, Vec<f64>)> = std::thread::scope(|s| {
+            let handles: Vec<_> = requests
+                .iter()
+                .map(|(start, request_rows)| {
+                    let session = &session;
+                    let batcher = &batcher;
+                    s.spawn(move || {
+                        let block = decode_all(session, request_rows);
+                        let out = batcher
+                            .submit(&block)
+                            .expect("queue sized for the test load")
+                            .wait()
+                            .expect("batcher scores every accepted request");
+                        (*start, request_rows.len(), out)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (start, len, out) in results {
+            assert_eq!(out.len(), len * dim);
+            let expected = &reference[start * dim..(start + len) * dim];
+            // Bit-identical, not approximately equal: coalescing must not
+            // change a single bit of any prediction.
+            assert_eq!(out.as_slice(), expected, "trial {trial}, rows {start}..{}", start + len);
+        }
+    }
+}
+
+/// A full bounded queue rejects new submissions immediately — it never
+/// blocks the submitter — and the already-accepted requests still score.
+#[test]
+fn full_queue_rejects_instead_of_blocking() {
+    let (session, rows) = session_and_rows(12, 47);
+    let batcher = Batcher::new(
+        Arc::clone(&session),
+        BatcherConfig {
+            // Flush can only happen via shutdown: threshold above capacity,
+            // deadline far beyond the test's lifetime.
+            flush_rows: BLOCK_SIZE,
+            max_delay: Duration::from_secs(60),
+            max_queue_rows: 10,
+        },
+    );
+    assert_eq!(batcher.capacity_rows(), 10);
+
+    // Fill the queue to exactly its capacity with 5 two-row requests.
+    let mut accepted = Vec::new();
+    for chunk in rows.chunks(2).take(5) {
+        let block = decode_all(&session, chunk);
+        accepted.push(batcher.submit(&block).expect("queue has room"));
+    }
+
+    // The queue is full: the next submission is rejected, and quickly —
+    // rejection is a return value, not a blocked thread.
+    let extra = decode_all(&session, &rows[10..11]);
+    let t0 = std::time::Instant::now();
+    let err = batcher.submit(&extra).unwrap_err();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "rejection must be immediate, took {:?}",
+        t0.elapsed()
+    );
+    assert_eq!(err, SubmitError::QueueFull { pending_rows: 10, capacity: 10 });
+    assert_eq!(batcher.stats().snapshot().rejected, 1);
+
+    // Shutdown drains the accepted requests; none is left hanging.
+    drop(batcher);
+    let dim = session.output_dim();
+    for pending in accepted {
+        assert_eq!(pending.wait().expect("drained on shutdown").len(), 2 * dim);
+    }
+}
+
+/// End-to-end over loopback TCP: requests, commands, malformed input,
+/// and shutdown through the real server loop.
+#[test]
+fn tcp_server_round_trip() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    let ds = synthetic::adult_like(200, 53);
+    let mut cfg = GbtConfig::new("income");
+    cfg.num_trees = 3;
+    cfg.max_depth = 3;
+    let session = Session::new(GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap());
+
+    // The stdout "listening on <addr>" contract is covered by the smoke
+    // test; here we pre-bind to learn a free loopback port, release it,
+    // and hand it to the server.
+    let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = probe.local_addr().unwrap();
+    drop(probe);
+
+    let config = ydf::serving::ServerConfig {
+        addr: addr.to_string(),
+        workers: 2,
+        batcher: BatcherConfig { max_delay: Duration::ZERO, ..Default::default() },
+    };
+    let server = std::thread::spawn(move || ydf::serving::serve(session, &config));
+
+    // Wait for the listener to come up.
+    let mut stream = None;
+    for _ in 0..100 {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+    let stream = stream.expect("server came up within 2s");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut rpc = |line: &str| -> Json {
+        writeln!(writer, "{line}").unwrap();
+        writer.flush().unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        Json::parse(resp.trim()).unwrap()
+    };
+
+    let health = rpc(r#"{"cmd": "health"}"#);
+    assert_eq!(health.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(health.req_str("model_type").unwrap(), "GRADIENT_BOOSTED_TREES");
+
+    let spec = rpc(r#"{"cmd": "spec"}"#);
+    assert_eq!(spec.req_str("label").unwrap(), "income");
+    assert_eq!(spec.req_arr("features").unwrap().len(), 8);
+
+    let single = rpc(r#"{"age": 44, "education": "Masters"}"#);
+    let preds = single.req_arr("predictions").unwrap();
+    assert_eq!(preds.len(), 1);
+    let p0 = preds[0].as_arr().unwrap();
+    assert_eq!(p0.len(), 2);
+    let total: f64 = p0.iter().map(|v| v.as_f64().unwrap()).sum();
+    assert!((total - 1.0).abs() < 1e-9);
+
+    let multi = rpc(r#"{"rows": [{"age": 23}, {"age": 67, "workclass": "Private"}, {}]}"#);
+    assert_eq!(multi.req_arr("predictions").unwrap().len(), 3);
+
+    let bad = rpc("this is not json");
+    assert!(bad.req_str("error").unwrap().contains("invalid JSON"), "{bad}");
+    let unknown = rpc(r#"{"rows": [{"flux_capacitance": 1.21}]}"#);
+    assert!(unknown.req_str("error").unwrap().contains("flux_capacitance"), "{unknown}");
+
+    let stats = rpc(r#"{"cmd": "stats"}"#);
+    assert!(stats.req_f64("requests").unwrap() >= 2.0);
+    assert!(stats.req_f64("errors").unwrap() >= 2.0);
+
+    // An idle connection that never sends anything must not stall
+    // shutdown: the server closes registered connections on exit.
+    let idle = TcpStream::connect(addr).expect("idle connection accepted");
+
+    let bye = rpc(r#"{"cmd": "shutdown"}"#);
+    assert_eq!(bye.get("ok"), Some(&Json::Bool(true)));
+    server.join().unwrap().expect("server exits cleanly");
+    drop(idle);
+}

@@ -1,0 +1,131 @@
+#!/usr/bin/env bash
+# Serving smoke test (`make serve-smoke`): train a tiny model, start
+# `ydf serve` on an ephemeral port, fire single-row / multi-row /
+# malformed requests plus the command set, check every response, and shut
+# the server down through the protocol. Exits non-zero on any mismatch.
+set -euo pipefail
+
+BIN=${BIN:-./target/release/ydf}
+if [ ! -x "$BIN" ]; then
+    echo "serve-smoke: $BIN not found; run 'cargo build --release' first" >&2
+    exit 1
+fi
+
+TMP=$(mktemp -d)
+SERVER_PID=""
+cleanup() {
+    [ -n "$SERVER_PID" ] && kill "$SERVER_PID" 2>/dev/null || true
+    rm -rf "$TMP"
+}
+trap cleanup EXIT
+
+echo "serve-smoke: training a tiny model"
+"$BIN" synth --name=Iris --output=csv:"$TMP/iris.csv" >/dev/null
+"$BIN" train --dataset=csv:"$TMP/iris.csv" --label=label \
+    --learner=GRADIENT_BOOSTED_TREES --param:num_trees=5 \
+    --output="$TMP/model.json" >/dev/null
+
+echo "serve-smoke: starting server on an ephemeral port"
+"$BIN" serve --model="$TMP/model.json" --port=0 --max-delay-ms=1 \
+    >"$TMP/serve.log" 2>&1 &
+SERVER_PID=$!
+
+PORT=""
+for _ in $(seq 100); do
+    PORT=$(sed -n 's/^listening on .*:\([0-9][0-9]*\)$/\1/p' "$TMP/serve.log" | head -1)
+    [ -n "$PORT" ] && break
+    if ! kill -0 "$SERVER_PID" 2>/dev/null; then
+        echo "serve-smoke: server died during startup:" >&2
+        cat "$TMP/serve.log" >&2
+        exit 1
+    fi
+    sleep 0.1
+done
+if [ -z "$PORT" ]; then
+    echo "serve-smoke: server did not report its port:" >&2
+    cat "$TMP/serve.log" >&2
+    exit 1
+fi
+echo "serve-smoke: server is up on port $PORT"
+
+python3 - "$PORT" <<'EOF'
+import json, socket, sys
+
+port = int(sys.argv[1])
+
+def rpc(line):
+    s = socket.create_connection(("127.0.0.1", port), timeout=10)
+    s.sendall((line + "\n").encode())
+    resp = s.makefile().readline()
+    s.close()
+    return json.loads(resp)
+
+checks = 0
+def check(cond, what):
+    global checks
+    if not cond:
+        raise SystemExit(f"serve-smoke: FAILED: {what}")
+    checks += 1
+    print(f"serve-smoke: ok: {what}")
+
+health = rpc(json.dumps({"cmd": "health"}))
+check(health.get("ok") is True, "health reports ok")
+check("engine" in health, "health names the engine")
+
+spec = rpc(json.dumps({"cmd": "spec"}))
+features = spec["features"]
+classes = spec["classes"]
+check(len(features) > 0 and len(classes) > 0, "spec lists features and classes")
+
+# Build a generic valid row from the served dataspec: mean-ish numbers
+# for numericals, the first dictionary entry for categoricals.
+def sample_row():
+    row = {}
+    for f in features:
+        if f["semantic"] == "NUMERICAL":
+            row[f["name"]] = 1.0
+        elif "dictionary" in f and f["dictionary"]:
+            row[f["name"]] = f["dictionary"][0]
+    return row
+
+single = rpc(json.dumps({"rows": [sample_row()]}))
+preds = single["predictions"]
+check(len(preds) == 1 and len(preds[0]) == len(classes),
+      "single-row request returns one prediction per class")
+check(abs(sum(preds[0]) - 1.0) < 1e-9, "probabilities sum to 1")
+
+multi = rpc(json.dumps({"rows": [sample_row(), {}, sample_row()]}))
+check(len(multi["predictions"]) == 3,
+      "multi-row request (incl. all-missing row) returns one prediction per row")
+
+bad = rpc("this is { not json")
+check("error" in bad, "malformed JSON answers with an in-band error")
+
+unknown = rpc(json.dumps({"rows": [{"no_such_feature": 1}]}))
+check("no_such_feature" in unknown.get("error", ""),
+      "unknown feature error names the offender")
+
+stats = rpc(json.dumps({"cmd": "stats"}))
+check(stats["requests"] >= 2, "stats counted the successful requests")
+check(stats["errors"] >= 2, "stats counted the error responses")
+
+bye = rpc(json.dumps({"cmd": "shutdown"}))
+check(bye.get("ok") is True, "shutdown acknowledged")
+print(f"serve-smoke: all {checks} checks passed")
+EOF
+
+echo "serve-smoke: waiting for server to exit"
+for _ in $(seq 100); do
+    kill -0 "$SERVER_PID" 2>/dev/null || break
+    sleep 0.1
+done
+if kill -0 "$SERVER_PID" 2>/dev/null; then
+    echo "serve-smoke: server still running after shutdown command" >&2
+    exit 1
+fi
+SERVER_PID=""
+grep -q "server stopped" "$TMP/serve.log" || {
+    echo "serve-smoke: server log missing clean-stop marker" >&2
+    exit 1
+}
+echo "serve-smoke: PASS"
