@@ -1,13 +1,20 @@
 //! b5: serving-runtime benchmark — the micro-batching path under load.
 //!
-//! For every request-size × concurrency combination (1/8/64 rows ×
-//! 1/4/16 clients by default), clients submit pre-decoded request blocks
-//! through `serving::Batcher` in a closed loop (one in-flight request per
-//! client — the standard closed-system load model), and the run records
-//! µs/request and requests/s (plus rows/s and the mean coalesced batch
-//! size). Results go to `BENCH_serving.json` so serving performance is
-//! tracked across PRs exactly like `BENCH_inference.json` tracks the
-//! engine kernels.
+//! Three families of configurations, all closed-loop (one in-flight
+//! request per client — the standard closed-system load model), all
+//! recorded to `BENCH_serving.json` so serving performance is tracked
+//! across PRs exactly like `BENCH_inference.json` tracks the engine
+//! kernels:
+//!
+//! * `s{rows}_c{clients}` — the PR-3 grid: request-size × concurrency
+//!   over one model, single-threaded flush scoring.
+//! * `m2_s{rows}_c{clients}` — multi-model: two sessions behind one
+//!   registry, clients alternating models, each model coalescing only
+//!   its own rows.
+//! * `par_s512_c4` / `seq_s512_c4` — large-flush: 512-row requests whose
+//!   coalesced flushes fan block spans out across the scoring pool
+//!   (`par`, 4 workers) vs the single-threaded baseline (`seq`), so the
+//!   parallel-flush speedup is tracked across PRs.
 //!
 //! Run: cargo bench --bench b5_serving
 //!      cargo bench --bench b5_serving -- --requests=500 --out=path.json
@@ -17,13 +24,16 @@ use std::time::Duration;
 use ydf::dataset::synthetic;
 use ydf::learner::gbt::GbtConfig;
 use ydf::learner::{GradientBoostedTreesLearner, Learner};
-use ydf::serving::{Batcher, BatcherConfig, RowBlock, Session};
+use ydf::serving::{Batcher, BatcherConfig, Registry, RowBlock, Session};
 use ydf::utils::json::Json;
 
 const REQUEST_ROWS: [usize; 3] = [1, 8, 64];
 const CONCURRENCY: [usize; 3] = [1, 4, 16];
 
 struct ComboResult {
+    key: String,
+    models: usize,
+    score_threads: usize,
     request_rows: usize,
     concurrency: usize,
     requests: usize,
@@ -31,6 +41,64 @@ struct ComboResult {
     requests_per_s: f64,
     rows_per_s: f64,
     mean_batch_rows: f64,
+}
+
+fn train_session(seed: u64, trees: usize) -> Session {
+    let ds = synthetic::adult_like(4000, seed);
+    let mut cfg = GbtConfig::new("income");
+    cfg.num_trees = trees;
+    cfg.max_depth = 5;
+    Session::new(GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap())
+}
+
+/// Closed loop over per-client (batcher, prototype-request) lanes — one
+/// lane per client, so coalesced batches mix genuinely different rows
+/// (a shared prototype would give every flush identical tree paths and
+/// flatter-than-real numbers). Client `i` drives lane `i`,
+/// `requests_per_client` times.
+fn run_closed_loop(lanes: &[(Arc<Batcher>, RowBlock)], requests_per_client: usize) -> f64 {
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for (batcher, block) in lanes {
+            s.spawn(move || {
+                for _ in 0..requests_per_client {
+                    let out = batcher
+                        .submit(block)
+                        .expect("bench load stays under queue capacity")
+                        .wait()
+                        .expect("batcher serves until dropped");
+                    std::hint::black_box(out);
+                }
+            });
+        }
+    });
+    t0.elapsed().as_secs_f64()
+}
+
+fn combo_result(
+    key: String,
+    models: usize,
+    score_threads: usize,
+    request_rows: usize,
+    concurrency: usize,
+    requests_per_client: usize,
+    wall: f64,
+    batches: u64,
+    batched_rows: u64,
+) -> ComboResult {
+    let total_requests = requests_per_client * concurrency;
+    ComboResult {
+        key,
+        models,
+        score_threads,
+        request_rows,
+        concurrency,
+        requests: total_requests,
+        us_per_request: wall / total_requests as f64 * 1e6,
+        requests_per_s: total_requests as f64 / wall,
+        rows_per_s: (total_requests * request_rows) as f64 / wall,
+        mean_batch_rows: if batches > 0 { batched_rows as f64 / batches as f64 } else { 0.0 },
+    }
 }
 
 fn main() {
@@ -47,16 +115,12 @@ fn main() {
 
     // The b4 workload: adult-like mixed features, QuickScorer-compatible
     // GBT, so b4 and b5 numbers describe the same model family.
-    let ds = synthetic::adult_like(4000, 20230806);
-    let mut cfg = GbtConfig::new("income");
-    cfg.num_trees = 50;
-    cfg.max_depth = 5;
-    let session =
-        Arc::new(Session::new(GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap()));
+    let session = Arc::new(train_session(20230806, 50));
     println!(
-        "serving benchmark: engine {}, {} requests/client\n  {:>12} {:>11} {:>14} {:>14} {:>12} {:>16}",
+        "serving benchmark: engine {}, {} requests/client\n  {:>16} {:>12} {:>11} {:>14} {:>14} {:>12} {:>16}",
         session.engine_name(),
         requests_per_client,
+        "combo",
         "request_rows",
         "concurrency",
         "us/request",
@@ -64,80 +128,157 @@ fn main() {
         "rows/s",
         "mean batch rows",
     );
-
     let mut results: Vec<ComboResult> = Vec::new();
+    let mut report = |r: &ComboResult| {
+        println!(
+            "  {:>16} {:>12} {:>11} {:>14.2} {:>14.0} {:>12.0} {:>16.1}",
+            r.key,
+            r.request_rows,
+            r.concurrency,
+            r.us_per_request,
+            r.requests_per_s,
+            r.rows_per_s,
+            r.mean_batch_rows,
+        );
+    };
+
+    // Family 1: the single-model request-size × concurrency grid
+    // (single-threaded flushes — the PR-3 baseline numbers).
     for &request_rows in &REQUEST_ROWS {
-        // One prototype request per size, decoded once from dataset rows
-        // (steady-state serving measures the queue + score + scatter path;
-        // JSON decode is measured per-request by the server's own stats).
         for &concurrency in &CONCURRENCY {
-            let batcher = Batcher::new(
+            let batcher = Arc::new(Batcher::new(
                 Arc::clone(&session),
                 BatcherConfig {
                     // Adaptive drain: coalesce exactly the backlog that
                     // accumulates while the previous batch scores.
                     max_delay: Duration::ZERO,
+                    score_threads: 1,
                     ..Default::default()
                 },
-            );
-            let total_requests = requests_per_client * concurrency;
-            let t0 = std::time::Instant::now();
-            std::thread::scope(|s| {
-                for client in 0..concurrency {
-                    let session = &session;
-                    let batcher = &batcher;
-                    s.spawn(move || {
-                        let block = request_block(session, request_rows, client);
-                        for _ in 0..requests_per_client {
-                            let out = batcher
-                                .submit(&block)
-                                .expect("bench load stays under queue capacity")
-                                .wait()
-                                .expect("batcher serves until dropped");
-                            std::hint::black_box(out);
-                        }
-                    });
-                }
-            });
-            let wall = t0.elapsed().as_secs_f64();
+            ));
+            let lanes: Vec<(Arc<Batcher>, RowBlock)> = (0..concurrency)
+                .map(|client| {
+                    (Arc::clone(&batcher), request_block(&session, request_rows, client))
+                })
+                .collect();
+            let wall = run_closed_loop(&lanes, requests_per_client);
             let snap = batcher.stats().snapshot();
-            let r = ComboResult {
+            let r = combo_result(
+                format!("s{request_rows}_c{concurrency}"),
+                1,
+                1,
                 request_rows,
                 concurrency,
-                requests: total_requests,
-                us_per_request: wall / total_requests as f64 * 1e6,
-                requests_per_s: total_requests as f64 / wall,
-                rows_per_s: (total_requests * request_rows) as f64 / wall,
-                mean_batch_rows: if snap.batches > 0 {
-                    snap.batched_rows as f64 / snap.batches as f64
-                } else {
-                    0.0
-                },
-            };
-            println!(
-                "  {:>12} {:>11} {:>14.2} {:>14.0} {:>12.0} {:>16.1}",
-                r.request_rows,
-                r.concurrency,
-                r.us_per_request,
-                r.requests_per_s,
-                r.rows_per_s,
-                r.mean_batch_rows,
+                requests_per_client,
+                wall,
+                snap.batches,
+                snap.batched_rows,
             );
+            report(&r);
             results.push(r);
         }
+    }
+
+    // Family 2: two models behind one registry, clients alternating —
+    // the multi-model serving dimension.
+    {
+        let mut registry = Registry::new(BatcherConfig {
+            max_delay: Duration::ZERO,
+            score_threads: 1,
+            ..Default::default()
+        });
+        registry.register("m0", train_session(20230806, 50)).unwrap();
+        registry.register("m1", train_session(7151, 50)).unwrap();
+        for &concurrency in &[4usize, 16] {
+            let request_rows = 8usize;
+            // One lane per client, alternating models, rows varied per
+            // client.
+            let lanes: Vec<(Arc<Batcher>, RowBlock)> = (0..concurrency)
+                .map(|client| {
+                    let e = &registry.entries()[client % registry.len()];
+                    (Arc::clone(e.batcher()), request_block(e.session(), request_rows, client))
+                })
+                .collect();
+            // The registry's stats persist across concurrency runs;
+            // report this run's delta.
+            let base: Vec<(u64, u64)> = registry
+                .entries()
+                .iter()
+                .map(|e| {
+                    let s = e.stats().snapshot();
+                    (s.batches, s.batched_rows)
+                })
+                .collect();
+            let wall = run_closed_loop(&lanes, requests_per_client);
+            let (mut batches, mut batched_rows) = (0u64, 0u64);
+            for (e, (b0, r0)) in registry.entries().iter().zip(&base) {
+                let s = e.stats().snapshot();
+                batches += s.batches - b0;
+                batched_rows += s.batched_rows - r0;
+            }
+            let r = combo_result(
+                format!("m2_s{request_rows}_c{concurrency}"),
+                2,
+                1,
+                request_rows,
+                concurrency,
+                requests_per_client,
+                wall,
+                batches,
+                batched_rows,
+            );
+            report(&r);
+            results.push(r);
+        }
+    }
+
+    // Family 3: large coalesced flushes, parallel-scored vs serial —
+    // the `predict_into`-style fan-out inside a flush.
+    for (key, score_threads) in [("seq_s512_c4", 1usize), ("par_s512_c4", 4usize)] {
+        let batcher = Arc::new(Batcher::new(
+            Arc::clone(&session),
+            BatcherConfig {
+                max_delay: Duration::ZERO,
+                score_threads,
+                max_queue_rows: 8 * 512,
+                ..Default::default()
+            },
+        ));
+        let lanes: Vec<(Arc<Batcher>, RowBlock)> = (0..4)
+            .map(|client| (Arc::clone(&batcher), request_block(&session, 512, client)))
+            .collect();
+        // Fewer, heavier requests: same row volume as ~64-row combos.
+        let heavy_requests = (requests_per_client / 8).max(10);
+        let wall = run_closed_loop(&lanes, heavy_requests);
+        let snap = batcher.stats().snapshot();
+        let r = combo_result(
+            key.to_string(),
+            1,
+            score_threads,
+            512,
+            4,
+            heavy_requests,
+            wall,
+            snap.batches,
+            snap.batched_rows,
+        );
+        report(&r);
+        results.push(r);
     }
 
     let mut combos = Json::obj();
     for r in &results {
         let mut cj = Json::obj();
-        cj.set("request_rows", Json::Num(r.request_rows as f64))
+        cj.set("models", Json::Num(r.models as f64))
+            .set("score_threads", Json::Num(r.score_threads as f64))
+            .set("request_rows", Json::Num(r.request_rows as f64))
             .set("concurrency", Json::Num(r.concurrency as f64))
             .set("requests", Json::Num(r.requests as f64))
             .set("us_per_request", Json::Num(r.us_per_request))
             .set("requests_per_s", Json::Num(r.requests_per_s))
             .set("rows_per_s", Json::Num(r.rows_per_s))
             .set("mean_batch_rows", Json::Num(r.mean_batch_rows));
-        combos.set(&format!("s{}_c{}", r.request_rows, r.concurrency), cj);
+        combos.set(&r.key, cj);
     }
     let mut j = Json::obj();
     j.set("engine", Json::Str(session.engine_name()))
@@ -151,13 +292,13 @@ fn main() {
 }
 
 /// Builds one request of `rows` rows from dataset-like feature values,
-/// varied per client so coalesced batches are not degenerate.
-fn request_block(session: &Session, rows: usize, client: usize) -> RowBlock {
+/// varied per lane so coalesced batches are not degenerate.
+fn request_block(session: &Session, rows: usize, lane: usize) -> RowBlock {
     let workclasses = ["Private", "Self-emp-inc", "Federal-gov", "Local-gov"];
     let educations = ["HS-grad", "Bachelors", "Masters", "Doctorate"];
     let mut block = session.new_block();
     for i in 0..rows {
-        let k = client * 31 + i;
+        let k = lane * 31 + i;
         let row = Json::parse(&format!(
             r#"{{"age": {}, "hours_per_week": {}, "workclass": "{}",
                 "education": "{}", "capital_gain": {}}}"#,

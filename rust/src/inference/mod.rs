@@ -115,6 +115,31 @@ pub fn batch_threads() -> usize {
     }
 }
 
+/// Partitions `n` rows into at most `threads` contiguous,
+/// [`BLOCK_SIZE`]-aligned spans (the last span carries the unaligned
+/// tail). This is the single source of truth for batch fan-out
+/// partitioning: [`InferenceEngine::predict_into`] spawns one scoped
+/// thread per span, and the serving batcher scatters the same spans over
+/// persistent `utils/pool.rs` workers — identical partitioning, so both
+/// paths are trivially bit-identical to a single `predict_batch` call
+/// (engines are row-independent and every span start is block-aligned).
+pub fn block_spans(n: usize, threads: usize) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let n_blocks = n.div_ceil(BLOCK_SIZE);
+    let threads = threads.clamp(1, n_blocks);
+    let span = n_blocks.div_ceil(threads) * BLOCK_SIZE;
+    let mut out = Vec::with_capacity(threads);
+    let mut row0 = 0usize;
+    while row0 < n {
+        let hi = (row0 + span).min(n);
+        out.push(row0..hi);
+        row0 = hi;
+    }
+    out
+}
+
 /// Columnar storage resolved once per batch: engines index typed slices
 /// instead of matching the `ColumnData` enum per node visit per row.
 pub(crate) struct ColumnAccess<'a> {
@@ -231,23 +256,18 @@ pub trait InferenceEngine: Send + Sync {
         if n == 0 {
             return;
         }
-        let n_blocks = n.div_ceil(BLOCK_SIZE);
-        let threads = threads.clamp(1, n_blocks);
-        if threads == 1 {
+        let spans = block_spans(n, threads);
+        if spans.len() == 1 {
             self.predict_batch(ds, 0..n, out);
             return;
         }
-        let span = n_blocks.div_ceil(threads) * BLOCK_SIZE;
         std::thread::scope(|s| {
             let mut rest: &mut [f64] = out;
-            let mut row0 = 0usize;
-            while row0 < n {
-                let span_rows = span.min(n - row0);
-                let (head, tail) = std::mem::take(&mut rest).split_at_mut(span_rows * dim);
+            for span in spans {
+                let (head, tail) =
+                    std::mem::take(&mut rest).split_at_mut((span.end - span.start) * dim);
                 rest = tail;
-                let start = row0;
-                row0 += span_rows;
-                s.spawn(move || self.predict_batch(ds, start..start + span_rows, head));
+                s.spawn(move || self.predict_batch(ds, span, head));
             }
         });
     }
@@ -548,6 +568,28 @@ mod tests {
             let p = model.predict_ds_row(&ds, r);
             for k in 0..dim {
                 assert!((flat[r * dim + k] - p[k]).abs() < 1e-9, "row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_spans_cover_disjoint_and_aligned() {
+        for n in [0usize, 1, 63, 64, 65, 128, 201, 512, 1000] {
+            for threads in [1usize, 2, 3, 4, 16, 100] {
+                let spans = block_spans(n, threads);
+                if n == 0 {
+                    assert!(spans.is_empty());
+                    continue;
+                }
+                assert!(spans.len() <= threads.max(1), "n={n} t={threads}");
+                let mut at = 0usize;
+                for s in &spans {
+                    assert_eq!(s.start, at, "contiguous: n={n} t={threads}");
+                    assert_eq!(s.start % BLOCK_SIZE, 0, "aligned start: n={n} t={threads}");
+                    assert!(s.end > s.start);
+                    at = s.end;
+                }
+                assert_eq!(at, n, "full cover: n={n} t={threads}");
             }
         }
     }

@@ -28,9 +28,14 @@ COMMANDS
   evaluate         --dataset=csv:FILE --model=MODEL.json
   predict          --dataset=csv:FILE --model=MODEL.json --output=csv:FILE
   benchmark_inference --dataset=csv:FILE --model=MODEL.json [--runs=20]
-  serve            --model=MODEL.json [--addr=127.0.0.1] [--port=8123]
-                   [--workers=4] [--flush-rows=64] [--max-delay-ms=2]
-                   [--max-queue-rows=4096]
+  serve            --model=[NAME=]MODEL.json [--model=NAME2=OTHER.json ...]
+                   [--addr=127.0.0.1] [--port=8123] [--workers=4]
+                   [--flush-rows=64] [--max-delay-ms=2]
+                   [--max-queue-rows=4096] [--score-threads=0]
+                   (--model repeats to serve several models from one
+                    port; the first is the default route. NAME defaults
+                    to the file stem. --score-threads: workers a large
+                    coalesced flush fans out over; 0 = auto, 1 = serial)
   synth            --name=TABLE5_NAME --output=csv:FILE [--max-examples=N]
   benchmark_suite  [--full] [--folds=N] [--trees=N] [--trials=N]
                    [--datasets=a,b,c] [--max-examples=N]
@@ -181,9 +186,17 @@ fn main() {
             );
         }
         "serve" => {
-            let model_path = req(&flags, "model");
-            let session =
-                ok_or_die(ydf::serving::Session::open(Path::new(model_path)));
+            // --model repeats: re-scan the raw args (parse_flags keeps
+            // only the last occurrence of a key). Each value is
+            // `name=path` or a bare path (name = the file stem).
+            let model_flags: Vec<&str> = rest
+                .iter()
+                .filter_map(|a| a.strip_prefix("--model="))
+                .collect();
+            if model_flags.is_empty() {
+                eprintln!("missing required flag --model=[NAME=]MODEL.json");
+                std::process::exit(2);
+            }
             let parse_usize = |key: &str, default: usize| -> usize {
                 flags.get(key).map_or(default, |v| {
                     ok_or_die(v.parse::<usize>().map_err(|_| {
@@ -206,23 +219,52 @@ fn main() {
                         }),
                 )
             });
+            let batcher = ydf::serving::BatcherConfig {
+                flush_rows: parse_usize("flush-rows", ydf::inference::BLOCK_SIZE),
+                max_delay: std::time::Duration::from_secs_f64(max_delay_ms / 1e3),
+                max_queue_rows: parse_usize("max-queue-rows", 4096),
+                score_threads: parse_usize("score-threads", 0),
+            };
+            let mut registry = ydf::serving::Registry::new(batcher);
+            for m in model_flags {
+                // `name=path`, where a name is a plain identifier. Two
+                // escape hatches keep the single-model form backward
+                // compatible for paths that themselves contain '=': a
+                // prefix with a path separator (--model=/data/run=3/m.json)
+                // is never a name, and a value naming an existing file
+                // (--model=run=1.json) is served verbatim as that file.
+                let (name, path) = match m.split_once('=') {
+                    Some((n, p))
+                        if !n.contains('/')
+                            && !n.contains('\\')
+                            && !Path::new(m).is_file() =>
+                    {
+                        (n.to_string(), p)
+                    }
+                    _ => (
+                        Path::new(m)
+                            .file_stem()
+                            .map(|s| s.to_string_lossy().into_owned())
+                            .unwrap_or_else(|| "default".to_string()),
+                        m,
+                    ),
+                };
+                let session = ok_or_die(ydf::serving::Session::open(Path::new(path)));
+                println!(
+                    "model '{}': {} ({} -> {} outputs)",
+                    name,
+                    path,
+                    session.model().model_type(),
+                    session.output_dim()
+                );
+                ok_or_die(registry.register(&name, session));
+            }
             let config = ydf::serving::ServerConfig {
                 addr: format!("{addr}:{port}"),
                 workers: parse_usize("workers", 4),
-                batcher: ydf::serving::BatcherConfig {
-                    flush_rows: parse_usize("flush-rows", ydf::inference::BLOCK_SIZE),
-                    max_delay: std::time::Duration::from_secs_f64(max_delay_ms / 1e3),
-                    max_queue_rows: parse_usize("max-queue-rows", 4096),
-                },
             };
-            println!(
-                "model: {} ({} -> {} outputs); protocol: newline-delimited JSON \
-                 (docs/serving.md)",
-                model_path,
-                session.model().model_type(),
-                session.output_dim()
-            );
-            ok_or_die(ydf::serving::serve(session, &config));
+            println!("protocol: newline-delimited JSON (docs/serving.md)");
+            ok_or_die(ydf::serving::serve(registry, &config));
         }
         "synth" => {
             let name = req(&flags, "name");

@@ -28,6 +28,7 @@
 use super::session::{RowBlock, Session};
 use super::stats::ServingStats;
 use crate::inference::BLOCK_SIZE;
+use crate::utils::pool::WorkerPool;
 use std::fmt;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -49,6 +50,14 @@ pub struct BatcherConfig {
     /// Queue capacity in rows; submissions beyond it are rejected
     /// ([`SubmitError::QueueFull`]). Also the per-request row cap.
     pub max_queue_rows: usize,
+    /// Worker threads a flush may fan block spans out over when the
+    /// coalesced batch exceeds one [`BLOCK_SIZE`] block (the
+    /// `predict_into` contract over persistent `utils/pool.rs` workers).
+    /// `0` resolves to [`crate::inference::batch_threads`] (the
+    /// `YDF_INFER_THREADS` knob / available parallelism); `1` keeps
+    /// flushes single-threaded. Ignored when the batcher is handed a
+    /// shared scoring pool ([`Batcher::with_scoring_pool`]).
+    pub score_threads: usize,
 }
 
 impl Default for BatcherConfig {
@@ -57,6 +66,27 @@ impl Default for BatcherConfig {
             flush_rows: BLOCK_SIZE,
             max_delay: Duration::from_millis(2),
             max_queue_rows: 64 * BLOCK_SIZE,
+            score_threads: 0,
+        }
+    }
+}
+
+impl BatcherConfig {
+    /// Resolves [`BatcherConfig::score_threads`] into a scoring pool:
+    /// `None` when flushes should score single-threaded. The single
+    /// source of truth for the resolution rule — used by standalone
+    /// batchers ([`Batcher::with_stats`]) and shared across a registry's
+    /// batchers (`Registry::new`).
+    pub fn resolve_score_pool(&self) -> Option<Arc<WorkerPool>> {
+        let threads = if self.score_threads == 0 {
+            crate::inference::batch_threads()
+        } else {
+            self.score_threads
+        };
+        if threads > 1 {
+            Some(Arc::new(WorkerPool::new(threads)))
+        } else {
+            None
         }
     }
 }
@@ -153,10 +183,27 @@ impl Batcher {
     }
 
     /// As [`Batcher::new`], recording batch/queue counters into `stats`.
+    /// The scoring pool is resolved from [`BatcherConfig::score_threads`]
+    /// and owned by this batcher alone.
     pub fn with_stats(
         session: Arc<Session>,
         config: BatcherConfig,
         stats: Arc<ServingStats>,
+    ) -> Batcher {
+        let pool = config.resolve_score_pool();
+        Batcher::with_scoring_pool(session, config, stats, pool)
+    }
+
+    /// The most general constructor: score large flushes over `score_pool`
+    /// when one is given (the registry shares one pool across all of its
+    /// models' batchers), single-threaded otherwise. The pool must be
+    /// dedicated to scoring — handing over a pool whose workers can block
+    /// on serving requests (like the TCP connection pool) would deadlock.
+    pub fn with_scoring_pool(
+        session: Arc<Session>,
+        config: BatcherConfig,
+        stats: Arc<ServingStats>,
+        score_pool: Option<Arc<WorkerPool>>,
     ) -> Batcher {
         let flush_rows = config.flush_rows.max(1).div_ceil(BLOCK_SIZE) * BLOCK_SIZE;
         let max_queue_rows = config.max_queue_rows.max(1);
@@ -176,7 +223,9 @@ impl Batcher {
             let max_delay = config.max_delay;
             std::thread::Builder::new()
                 .name("ydf-serving-scorer".to_string())
-                .spawn(move || scorer_loop(shared, session, stats, flush_rows, max_delay))
+                .spawn(move || {
+                    scorer_loop(shared, session, stats, flush_rows, max_delay, score_pool)
+                })
                 .expect("failed to spawn serving scorer thread")
         };
         Batcher {
@@ -209,6 +258,23 @@ impl Batcher {
         self.max_queue_rows
     }
 
+    /// Initiates shutdown without waiting: new submissions are rejected
+    /// with [`SubmitError::Shutdown`] from this point on, while every
+    /// already-accepted request is still scored and answered (the scorer's
+    /// drain pass). Idempotent; `Drop` calls it and then joins the scorer.
+    pub fn shutdown(&self) {
+        // A poisoned lock must not stop the shutdown flag from being set
+        // (submitters would keep queueing into a dead batcher): recover
+        // the guard — the flag write is valid on any state.
+        let mut state = match self.shared.state.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        state.shutdown = true;
+        drop(state);
+        self.shared.bell.notify_all();
+    }
+
     /// Enqueues every row of `rows` as one request, copied in arrival
     /// order into the shared accumulation block. Returns immediately —
     /// with a [`Pending`] handle, or with the backpressure error if the
@@ -223,7 +289,15 @@ impl Batcher {
         }
         let (tx, rx) = channel();
         {
-            let mut state = self.shared.state.lock().expect("serving queue poisoned");
+            // A poisoned lock means the scorer thread panicked: the
+            // batcher can never score again, which to a submitter is
+            // indistinguishable from shutdown. Answering with an error —
+            // instead of propagating the panic — keeps server workers
+            // alive to deliver the error reply (serving/server.rs audit).
+            let mut state = match self.shared.state.lock() {
+                Ok(s) => s,
+                Err(_) => return Err(SubmitError::Shutdown),
+            };
             if state.shutdown {
                 return Err(SubmitError::Shutdown);
             }
@@ -249,11 +323,7 @@ impl Batcher {
 
 impl Drop for Batcher {
     fn drop(&mut self) {
-        {
-            let mut state = self.shared.state.lock().expect("serving queue poisoned");
-            state.shutdown = true;
-        }
-        self.shared.bell.notify_all();
+        self.shutdown();
         if let Some(h) = self.scorer.take() {
             let _ = h.join();
         }
@@ -266,7 +336,35 @@ fn scorer_loop(
     stats: Arc<ServingStats>,
     flush_rows: usize,
     max_delay: Duration,
+    score_pool: Option<Arc<WorkerPool>>,
 ) {
+    // If this thread unwinds (an engine panic, a lost scoped job), fail
+    // open: mark shutdown so later submissions get an error reply instead
+    // of queueing forever, and drop the queued waiters so their
+    // `Pending::wait` returns the shutdown error instead of blocking on a
+    // channel nobody will ever answer. Without this, a scorer panic that
+    // strikes outside the lock (the common case — scoring runs with the
+    // lock released) leaves the mutex unpoisoned and the whole server
+    // wedges silently. On a clean exit the guard is a no-op: shutdown is
+    // already set and the waiter list is empty.
+    struct FailOpen(Arc<Shared>);
+    impl Drop for FailOpen {
+        fn drop(&mut self) {
+            // Recover a poisoned lock rather than skip: leaving the
+            // waiters in place would hang their Pending::wait forever —
+            // the exact wedge this guard exists to prevent. Setting the
+            // flag and dropping the senders is valid on any state.
+            let mut state = match self.0.state.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            state.shutdown = true;
+            state.waiters.clear();
+            drop(state);
+            self.0.bell.notify_all();
+        }
+    }
+    let _fail_open = FailOpen(Arc::clone(&shared));
     // Double buffer: while one block scores, submissions fill the other.
     // `spare` is moved into the queue at flush and recovered (cleared)
     // after scattering, so steady-state flushing allocates nothing.
@@ -313,7 +411,10 @@ fn scorer_loop(
         drop(state);
 
         let dim = session.output_dim();
-        let out = session.predict_block(&mut batch);
+        // Large coalesced batches fan block spans out across the scoring
+        // pool (bit-identical to the single-call path); small ones score
+        // inline on this thread.
+        let out = session.predict_block_pooled(&mut batch, score_pool.as_deref());
         stats.note_batch(batch.rows(), waiters.len());
         for w in waiters {
             let chunk = out[w.start_row * dim..(w.start_row + w.rows) * dim].to_vec();
@@ -414,6 +515,48 @@ mod tests {
             BatcherConfig { flush_rows: 65, ..Default::default() },
         );
         assert_eq!(b.flush_rows(), 2 * crate::inference::BLOCK_SIZE);
+    }
+
+    #[test]
+    fn pooled_flush_bit_identical_to_single_call() {
+        let s = session();
+        // A multi-block request forced through a 3-worker scoring pool
+        // must not change a single bit vs the single-threaded score.
+        let b = Batcher::with_scoring_pool(
+            Arc::clone(&s),
+            BatcherConfig { max_delay: Duration::ZERO, ..Default::default() },
+            Arc::new(ServingStats::new()),
+            Some(Arc::new(crate::utils::pool::WorkerPool::new(3))),
+        );
+        let mut big = s.new_block();
+        for i in 0..201 {
+            // Unaligned tail (201 = 3*64 + 9) and varied feature values.
+            big.append_from(&one_row(&s, 20.0 + (i % 45) as f64));
+        }
+        let mut reference_block = s.new_block();
+        reference_block.append_from(&big);
+        let reference = s.predict_block(&mut reference_block);
+        let out = b.submit(&big).unwrap().wait().unwrap();
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+        assert_eq!(bits(&out), bits(&reference));
+    }
+
+    #[test]
+    fn explicit_shutdown_rejects_new_and_drains_accepted() {
+        let s = session();
+        let b = Batcher::new(
+            Arc::clone(&s),
+            BatcherConfig {
+                max_delay: Duration::from_secs(30),
+                flush_rows: 1024,
+                ..Default::default()
+            },
+        );
+        let pending = b.submit(&one_row(&s, 41.0)).unwrap();
+        b.shutdown();
+        assert_eq!(b.submit(&one_row(&s, 42.0)).unwrap_err(), SubmitError::Shutdown);
+        // The accepted request is still scored by the drain pass.
+        assert_eq!(pending.wait().unwrap().len(), s.output_dim());
     }
 
     #[test]

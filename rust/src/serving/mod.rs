@@ -9,7 +9,7 @@
 //! kernel speed, dominates end-to-end forest-serving throughput — the
 //! runtime here makes that policy an explicit, configurable knob.
 //!
-//! Four modules:
+//! Five modules:
 //!
 //! * [`session`] — a loaded model pinned to its auto-selected engine, with
 //!   dataspec-driven request decoding: feature-name → column mapping and
@@ -20,18 +20,28 @@
 //!   single/multi-row requests into blocks: flush when the pending rows
 //!   reach a [`crate::inference::BLOCK_SIZE`]-multiple threshold or when
 //!   the oldest request has waited past a configurable deadline; score
-//!   once via the engine batch path; scatter results back to per-request
-//!   waiters. The bounded queue rejects when full — natural backpressure,
-//!   never an unbounded buffer or an indefinite block.
+//!   once via the engine batch path — fanning the block spans of a large
+//!   coalesced flush out across a persistent scoring pool
+//!   (`utils/pool.rs`, the `predict_into` contract) — and scatter results
+//!   back to per-request waiters. The bounded queue rejects when full —
+//!   natural backpressure, never an unbounded buffer or an indefinite
+//!   block.
+//! * [`registry`] — several named models behind one server: each
+//!   [`Session`] keeps its own [`Batcher`] and [`ServingStats`], requests
+//!   route by the wire protocol's top-level `"model"` field (absent ⇒ the
+//!   default model, preserving the single-model protocol), and all
+//!   batchers share one scoring pool.
 //! * [`server`] — a `std::net` TCP front end speaking newline-delimited
 //!   JSON (via `utils/json.rs`) over a worker pool (`utils/pool.rs`).
 //! * [`stats`] — latency histograms (`utils/histogram.rs`) plus
-//!   throughput / queue-depth counters, exportable as JSON.
+//!   throughput / queue-depth counters, exportable as JSON per model and
+//!   aggregated across the registry.
 //!
-//! The CLI exposes all of this as `ydf serve --model=… --port=…`; the
-//! wire protocol is specified in `docs/serving.md` ("Server loop") and
+//! The CLI exposes all of this as `ydf serve --model=name=path …` (the
+//! flag repeats to serve several models from one port); the wire
+//! protocol is specified in `docs/serving.md` ("Server loop") and
 //! `cargo bench --bench b5_serving` tracks µs/request and requests/s
-//! across request-size × concurrency combinations in
+//! across request-size × concurrency × model-count combinations in
 //! `BENCH_serving.json`.
 //!
 //! ```
@@ -59,11 +69,13 @@
 //! ```
 
 pub mod batcher;
+pub mod registry;
 pub mod server;
 pub mod session;
 pub mod stats;
 
 pub use batcher::{Batcher, BatcherConfig, Pending, SubmitError};
+pub use registry::{ModelEntry, Registry};
 pub use server::{serve, ServerConfig};
 pub use session::{RowBlock, Session};
 pub use stats::ServingStats;

@@ -1,0 +1,234 @@
+//! Multi-model serving registry: several named models behind one server.
+//!
+//! The paper's serving story (§3.7, §5) is one library hosting many
+//! models, each pinned to the fastest engine its structure compiles to.
+//! A [`Registry`] owns N named [`Session`]s; each entry gets its **own**
+//! [`Batcher`] (coalescing only same-model rows — batches must stay
+//! single-dataspec so one flush is one `predict_batch`) and its own
+//! [`ServingStats`]. Requests route by the top-level `"model"` field of
+//! the wire protocol; requests without one go to the **default model**
+//! (the first registered), which preserves the PR-3 single-model wire
+//! protocol bit for bit.
+//!
+//! All batchers share one scoring [`WorkerPool`] (resolved from
+//! [`BatcherConfig::score_threads`]): flushes larger than one kernel
+//! block fan their block spans out across it, so a 512-row coalesced
+//! flush no longer scores on one thread — and N models do not multiply
+//! the scoring-thread count.
+
+use super::batcher::Batcher;
+use super::session::Session;
+use super::stats::{aggregate_json, ServingStats};
+use super::BatcherConfig;
+use crate::utils::json::Json;
+use crate::utils::pool::WorkerPool;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// One served model: a session pinned to its engine, the batcher that
+/// coalesces its requests, and its telemetry.
+pub struct ModelEntry {
+    name: String,
+    session: Arc<Session>,
+    batcher: Arc<Batcher>,
+    stats: Arc<ServingStats>,
+}
+
+impl ModelEntry {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn session(&self) -> &Arc<Session> {
+        &self.session
+    }
+
+    pub fn batcher(&self) -> &Arc<Batcher> {
+        &self.batcher
+    }
+
+    pub fn stats(&self) -> &Arc<ServingStats> {
+        &self.stats
+    }
+}
+
+/// Named collection of serving sessions sharing one batching policy and
+/// one scoring pool. The first registered model is the default route.
+pub struct Registry {
+    entries: Vec<ModelEntry>,
+    by_name: HashMap<String, usize>,
+    batcher_config: BatcherConfig,
+    /// Shared across every entry's batcher; `None` when flushes score
+    /// single-threaded (`score_threads` resolves to 1).
+    score_pool: Option<Arc<WorkerPool>>,
+}
+
+impl Registry {
+    /// An empty registry; `config` is applied to every model's batcher.
+    /// The shared scoring pool is sized from `config.score_threads`
+    /// (`0` = the `batch_threads()` default, `1` = no pool).
+    pub fn new(config: BatcherConfig) -> Registry {
+        let score_pool = config.resolve_score_pool();
+        Registry {
+            entries: Vec::new(),
+            by_name: HashMap::new(),
+            batcher_config: config,
+            score_pool,
+        }
+    }
+
+    /// Registers `session` under `name`, spinning up its batcher (and
+    /// scorer thread) immediately. Errors on an empty or duplicate name —
+    /// misconfiguration reports what is wrong instead of silently
+    /// shadowing an already-served model (§2.1).
+    pub fn register(&mut self, name: &str, session: Session) -> Result<(), String> {
+        if name.is_empty() {
+            return Err("model name must not be empty".to_string());
+        }
+        if self.by_name.contains_key(name) {
+            return Err(format!(
+                "model '{name}' is already registered; model names must be unique"
+            ));
+        }
+        let session = Arc::new(session);
+        let stats = Arc::new(ServingStats::new());
+        let batcher = Arc::new(Batcher::with_scoring_pool(
+            Arc::clone(&session),
+            self.batcher_config.clone(),
+            Arc::clone(&stats),
+            self.score_pool.clone(),
+        ));
+        self.by_name.insert(name.to_string(), self.entries.len());
+        self.entries.push(ModelEntry { name: name.to_string(), session, batcher, stats });
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Registered model names, in registration order (the first is the
+    /// default route).
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    /// The default model: the first registered. Panics on an empty
+    /// registry (the server refuses to start on one).
+    pub fn default_entry(&self) -> &ModelEntry {
+        &self.entries[0]
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ModelEntry> {
+        self.by_name.get(name).map(|&i| &self.entries[i])
+    }
+
+    /// Entries in registration order (index-stable: the position matches
+    /// what [`Registry::resolve`] returns, so per-connection scratch can
+    /// be indexed by it).
+    pub fn entries(&self) -> &[ModelEntry] {
+        &self.entries
+    }
+
+    /// Routes an optional request `"model"` field to an entry: `None`
+    /// means the default model. Unknown names are a clean error listing
+    /// what *is* registered — the server turns it into an in-band
+    /// `{"error": …}` reply, never a dropped connection.
+    pub fn resolve(&self, name: Option<&str>) -> Result<(usize, &ModelEntry), String> {
+        match name {
+            None => Ok((0, self.default_entry())),
+            Some(n) => match self.by_name.get(n) {
+                Some(&i) => Ok((i, &self.entries[i])),
+                None => Err(format!(
+                    "unknown model '{n}'. Registered models: {}.",
+                    self.names().join(", ")
+                )),
+            },
+        }
+    }
+
+    /// The `{"cmd": "stats"}` payload: aggregate counters at the top
+    /// level (single-model shape preserved) plus a per-model breakdown
+    /// under `"models"`.
+    pub fn stats_json(&self) -> Json {
+        let named: Vec<(&str, &ServingStats)> =
+            self.entries.iter().map(|e| (e.name.as_str(), e.stats.as_ref())).collect();
+        aggregate_json(&named)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic;
+    use crate::learner::gbt::GbtConfig;
+    use crate::learner::{GradientBoostedTreesLearner, Learner};
+
+    fn session(seed: u64, trees: usize) -> Session {
+        let ds = synthetic::adult_like(200, seed);
+        let mut cfg = GbtConfig::new("income");
+        cfg.num_trees = trees;
+        cfg.max_depth = 3;
+        Session::new(GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap())
+    }
+
+    #[test]
+    fn register_resolve_and_default() {
+        let mut r = Registry::new(BatcherConfig {
+            max_delay: std::time::Duration::ZERO,
+            ..Default::default()
+        });
+        assert!(r.is_empty());
+        r.register("a", session(1, 3)).unwrap();
+        r.register("b", session(2, 4)).unwrap();
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.names(), vec!["a", "b"]);
+        assert_eq!(r.resolve(None).unwrap().1.name(), "a"); // first = default
+        let (idx, b) = r.resolve(Some("b")).unwrap();
+        assert_eq!((idx, b.name()), (1, "b"));
+        let err = r.resolve(Some("zzz")).unwrap_err();
+        assert!(err.contains("zzz") && err.contains("a, b"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_and_empty_names_rejected() {
+        let mut r = Registry::new(BatcherConfig::default());
+        r.register("m", session(3, 3)).unwrap();
+        assert!(r.register("m", session(4, 3)).unwrap_err().contains("already registered"));
+        assert!(r.register("", session(5, 3)).unwrap_err().contains("empty"));
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn per_model_requests_route_to_their_own_batcher_and_stats() {
+        let mut r = Registry::new(BatcherConfig {
+            max_delay: std::time::Duration::ZERO,
+            ..Default::default()
+        });
+        r.register("a", session(6, 3)).unwrap();
+        r.register("b", session(7, 5)).unwrap();
+        for (name, n) in [("a", 2usize), ("b", 3usize)] {
+            let (_, e) = r.resolve(Some(name)).unwrap();
+            for _ in 0..n {
+                let mut block = e.session().new_block();
+                let row = crate::utils::json::Json::parse(r#"{"age": 33}"#).unwrap();
+                e.session().decode_row(&mut block, &row).unwrap();
+                let out = e.batcher().submit(&block).unwrap().wait().unwrap();
+                assert_eq!(out.len(), e.session().output_dim());
+                e.stats().note_request(1, 50.0);
+            }
+        }
+        let j = r.stats_json();
+        assert_eq!(j.req_f64("requests").unwrap(), 5.0);
+        let models = j.req("models").unwrap();
+        assert_eq!(models.req("a").unwrap().req_f64("requests").unwrap(), 2.0);
+        assert_eq!(models.req("b").unwrap().req_f64("requests").unwrap(), 3.0);
+        // Batches ran on each model's own batcher.
+        assert!(models.req("a").unwrap().req_f64("batches").unwrap() >= 1.0);
+        assert!(models.req("b").unwrap().req_f64("batches").unwrap() >= 1.0);
+    }
+}

@@ -1,5 +1,6 @@
 //! TCP front end: newline-delimited JSON over `std::net`, fanned out to a
-//! `utils/pool.rs` worker pool, scored through the shared [`Batcher`].
+//! `utils/pool.rs` worker pool, routed through the model [`Registry`] and
+//! scored through each model's [`crate::serving::Batcher`].
 //!
 //! ## Wire protocol (one JSON value per line, both directions)
 //!
@@ -7,29 +8,35 @@
 //!
 //! ```text
 //! {"rows": [{"age": 44, "education": "Masters"}, {"age": 23}]}
+//! {"model": "fraud_v2", "rows": [{"age": 44}]}   // route to a named model
 //! {"age": 44, "education": "Masters"}            // single-row shorthand
 //! ```
 //!
-//! → `{"predictions": [[0.21, 0.79], …]}` — one array of
+//! → `{"predictions": [[0.21, 0.79], …], "model": "…"}` — one array of
 //! `output_dim()` values per request row, in request order. Absent or
-//! `null` features are missing; unknown feature names are an error.
+//! `null` features are missing; unknown feature names are an error. The
+//! top-level `"model"` field selects the serving session; requests
+//! without one go to the default model (the first registered), which is
+//! why single-model deployments see the PR-3 protocol unchanged. The
+//! bare single-row shorthand always addresses the default model — its
+//! object is entirely feature keys.
 //!
-//! Commands:
+//! Commands (`"model"` selects the model `health`/`spec` describe):
 //!
 //! ```text
-//! {"cmd": "health"}    -> {"ok": true, "engine": …, "model_type": …}
-//! {"cmd": "spec"}      -> {"features": […], "label": …, "classes": […]}
-//! {"cmd": "stats"}     -> serving counters + latency percentiles
+//! {"cmd": "health"}    -> {"ok": true, "model": …, "models": […], "engine": …}
+//! {"cmd": "spec"}      -> {"model": …, "features": […], "label": …, "classes": […]}
+//! {"cmd": "stats"}     -> aggregate counters + per-model breakdown under "models"
 //! {"cmd": "shutdown"}  -> {"ok": true}, then the server stops accepting
 //! ```
 //!
-//! Every error — malformed JSON, unknown feature, full queue — is a
-//! `{"error": "…"}` response on the same line; the connection survives.
-//! See `docs/serving.md` ("Server loop") for the full contract.
+//! Every error — malformed JSON, unknown feature, unknown model, full
+//! queue — is a `{"error": "…"}` response on the same line; the
+//! connection survives. See `docs/serving.md` ("Server loop") for the
+//! full contract.
 
-use super::batcher::{Batcher, BatcherConfig};
-use super::session::Session;
-use super::stats::ServingStats;
+use super::registry::{ModelEntry, Registry};
+use super::session::RowBlock;
 use crate::utils::json::Json;
 use crate::utils::pool::WorkerPool;
 use std::collections::HashMap;
@@ -40,22 +47,18 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Front-end configuration. `workers` bounds concurrent connections (a
-/// connection occupies its worker until the peer disconnects).
+/// connection occupies its worker until the peer disconnects). Batching
+/// policy lives with the [`Registry`], which applies it to every model.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// Bind address; port 0 picks an ephemeral port (printed on stdout).
     pub addr: String,
     pub workers: usize,
-    pub batcher: BatcherConfig,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig {
-            addr: "127.0.0.1:8123".to_string(),
-            workers: 4,
-            batcher: BatcherConfig::default(),
-        }
+        ServerConfig { addr: "127.0.0.1:8123".to_string(), workers: 4 }
     }
 }
 
@@ -70,48 +73,65 @@ struct ConnRegistry {
 }
 
 impl ConnRegistry {
+    /// The map's operations are valid on any state, so a poisoned lock
+    /// (a worker panicked mid-insert/remove) is recovered rather than
+    /// skipped — skipping `close_all` in particular would let one idle
+    /// connection hang server shutdown forever.
+    fn lock(&self) -> std::sync::MutexGuard<'_, HashMap<u64, TcpStream>> {
+        match self.streams.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
     fn insert(&self, stream: TcpStream) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.streams.lock().expect("registry poisoned").insert(id, stream);
+        self.lock().insert(id, stream);
         id
     }
 
     fn remove(&self, id: u64) {
-        self.streams.lock().expect("registry poisoned").remove(&id);
+        self.lock().remove(&id);
     }
 
     fn close_all(&self) {
-        for (_, s) in self.streams.lock().expect("registry poisoned").drain() {
-            // Read half only: unblocks workers parked in `reader.lines()`
-            // (they see EOF) while letting responses to already-accepted
-            // in-flight requests still be written before the worker exits.
+        for (_, s) in self.lock().drain() {
+            // Read half only: unblocks workers parked in
+            // `reader.lines()` (they see EOF) while letting responses
+            // to already-accepted in-flight requests still be written
+            // before the worker exits.
             let _ = s.shutdown(Shutdown::Read);
         }
     }
 }
 
 /// Binds, prints `listening on <addr>` on stdout (machine-parsable — the
-/// smoke test reads the ephemeral port from it), and serves until a
-/// `{"cmd": "shutdown"}` request arrives. On shutdown every open
-/// connection is closed (idle clients cannot stall the exit), the
-/// batcher drains, and the call returns once every worker has exited.
-pub fn serve(session: Session, config: &ServerConfig) -> Result<(), String> {
+/// smoke test reads the ephemeral port from it), and serves every model
+/// in `registry` until a `{"cmd": "shutdown"}` request arrives. On
+/// shutdown every open connection is closed (idle clients cannot stall
+/// the exit), every model's batcher drains, and the call returns once
+/// every worker has exited.
+pub fn serve(registry: Registry, config: &ServerConfig) -> Result<(), String> {
+    if registry.is_empty() {
+        return Err("cannot serve an empty registry: register at least one model".to_string());
+    }
     let listener = TcpListener::bind(&config.addr)
         .map_err(|e| format!("cannot bind {}: {e}", config.addr))?;
     let local = listener
         .local_addr()
         .map_err(|e| format!("cannot resolve bound address: {e}"))?;
-    let session = Arc::new(session);
-    let stats = Arc::new(ServingStats::new());
-    let batcher = Arc::new(Batcher::with_stats(
-        Arc::clone(&session),
-        config.batcher.clone(),
-        Arc::clone(&stats),
-    ));
-    println!("serving model through engine: {}", session.engine_name());
+    let registry = Arc::new(registry);
+    for e in registry.entries() {
+        println!(
+            "serving model '{}' ({}) through engine: {}",
+            e.name(),
+            e.session().model().model_type(),
+            e.session().engine_name()
+        );
+    }
     println!("listening on {local}");
     let shutdown = Arc::new(AtomicBool::new(false));
-    let registry = Arc::new(ConnRegistry::default());
+    let conns = Arc::new(ConnRegistry::default());
     let pool = WorkerPool::new(config.workers.max(1));
     // Connections go to the least-loaded worker (a connection occupies
     // its worker until the peer disconnects, so blind round-robin could
@@ -127,11 +147,9 @@ pub fn serve(session: Session, config: &ServerConfig) -> Result<(), String> {
             Ok(s) => s,
             Err(_) => continue,
         };
-        let id = stream.try_clone().ok().map(|c| registry.insert(c));
+        let id = stream.try_clone().ok().map(|c| conns.insert(c));
         let conn = Connection {
-            session: Arc::clone(&session),
-            batcher: Arc::clone(&batcher),
-            stats: Arc::clone(&stats),
+            registry: Arc::clone(&registry),
             shutdown: Arc::clone(&shutdown),
             wake_addr: local,
         };
@@ -142,27 +160,25 @@ pub fn serve(session: Session, config: &ServerConfig) -> Result<(), String> {
             .map(|(i, _)| i)
             .unwrap_or(0);
         loads[w].fetch_add(1, Ordering::Relaxed);
-        let registry = Arc::clone(&registry);
+        let conns = Arc::clone(&conns);
         let loads = Arc::clone(&loads);
         pool.submit_to(w, move || {
             conn.handle(stream);
             if let Some(id) = id {
-                registry.remove(id);
+                conns.remove(id);
             }
             loads[w].fetch_sub(1, Ordering::Relaxed);
         });
     }
-    registry.close_all(); // unblock workers parked on idle connections
+    conns.close_all(); // unblock workers parked on idle connections
     drop(pool); // join workers (in-flight requests finish)
-    drop(batcher); // flush + join the scorer
+    drop(registry); // last Arc: every model's batcher flushes + joins
     println!("server stopped");
     Ok(())
 }
 
 struct Connection {
-    session: Arc<Session>,
-    batcher: Arc<Batcher>,
-    stats: Arc<ServingStats>,
+    registry: Arc<Registry>,
     shutdown: Arc<AtomicBool>,
     wake_addr: std::net::SocketAddr,
 }
@@ -174,7 +190,10 @@ impl Connection {
             Err(_) => return,
         };
         let reader = BufReader::new(stream);
-        let mut block = self.session.new_block();
+        // Per-model decode scratch, lazily created: connections that only
+        // ever talk to one model allocate one block.
+        let mut blocks: Vec<Option<RowBlock>> =
+            (0..self.registry.len()).map(|_| None).collect();
         for line in reader.lines() {
             let line = match line {
                 Ok(l) => l,
@@ -183,7 +202,7 @@ impl Connection {
             if line.trim().is_empty() {
                 continue;
             }
-            let (response, stop) = self.respond(&line, &mut block);
+            let (response, stop) = self.respond(&line, &mut blocks);
             if writeln!(writer, "{response}").and_then(|_| writer.flush()).is_err() {
                 return;
             }
@@ -198,12 +217,40 @@ impl Connection {
     }
 
     /// One request line → (response line, stop-serving flag).
-    fn respond(&self, line: &str, block: &mut super::session::RowBlock) -> (Json, bool) {
+    fn respond(&self, line: &str, blocks: &mut [Option<RowBlock>]) -> (Json, bool) {
         let t0 = Instant::now();
         let request = match Json::parse(line) {
             Ok(j) => j,
-            Err(e) => return (self.error(format!("invalid JSON: {e}")), false),
+            Err(e) => return (self.error_default(format!("invalid JSON: {e}")), false),
         };
+        // Routing (docs/serving.md): the top-level "model" string selects
+        // the serving session. It is protocol-reserved in the canonical
+        // {"rows": …} form and in command form, where the top level holds
+        // protocol keys only; the bare single-row shorthand is entirely
+        // feature keys and always addresses the default model.
+        let in_protocol_form =
+            request.get("rows").is_some() || request.get("cmd").is_some();
+        let routed: Option<&str> = match request.get("model") {
+            Some(Json::Str(m)) if in_protocol_form => Some(m.as_str()),
+            Some(other) if in_protocol_form => {
+                return (
+                    self.error_default(format!(
+                        "\"model\" must be a string naming a registered model \
+                         ({}), got {other}",
+                        self.registry.names().join(", ")
+                    )),
+                    false,
+                )
+            }
+            _ => None,
+        };
+        let (idx, entry) = match self.registry.resolve(routed) {
+            Ok(x) => x,
+            // Unknown model: a clean in-band error reply naming the
+            // registered models — never a dropped connection.
+            Err(e) => return (self.error_default(e), false),
+        };
+        let session = entry.session();
         // Dispatch precedence (docs/serving.md): "cmd"-as-string is a
         // command, "rows"-as-array is a batch request. A model feature
         // that happens to be named "cmd" or "rows" is still reachable —
@@ -211,92 +258,140 @@ impl Connection {
         // multi-key shorthand object — the names are only reserved at the
         // top level of the shorthand.
         if let Some(cmd) = request.get("cmd").and_then(|c| c.as_str()) {
-            let sole_key = matches!(&request, Json::Obj(m) if m.len() == 1);
-            if sole_key || !self.session.has_column("cmd") {
-                return self.command(cmd);
+            let reserved_only = matches!(&request, Json::Obj(m)
+                if m.keys().all(|k| k == "cmd" || k == "model"));
+            if reserved_only || !session.has_column("cmd") {
+                return self.command(cmd, entry);
             }
         }
         let rows: Vec<&Json> = match request.get("rows") {
             Some(Json::Arr(items)) => items.iter().collect(),
-            Some(other) if !self.session.has_column("rows") => {
+            Some(other) if !session.has_column("rows") => {
                 return (
-                    self.error(format!(
-                        "\"rows\" must be an array of feature objects, got {other}"
-                    )),
+                    self.error(
+                        entry,
+                        format!("\"rows\" must be an array of feature objects, got {other}"),
+                    ),
                     false,
                 )
             }
             // Single-row shorthand: the object itself is the row (also the
             // path for a non-array "rows" value when the model really has
             // a feature of that name).
-            _ => vec![&request],
+            _ => {
+                // A "model" key in the shorthand is almost always a
+                // routing attempt; unless it is genuinely a feature of the
+                // default model, answer with the canonical form instead of
+                // a confusing unknown-feature error.
+                if let Some(Json::Str(m)) = request.get("model") {
+                    if !session.has_column("model") {
+                        return (
+                            self.error(
+                                entry,
+                                format!(
+                                    "the single-row shorthand always addresses the default \
+                                     model; to route to '{m}', use \
+                                     {{\"model\": \"{m}\", \"rows\": [{{…}}]}}"
+                                ),
+                            ),
+                            false,
+                        );
+                    }
+                }
+                vec![&request]
+            }
         };
         if rows.is_empty() {
-            return (self.error("request contains no rows".to_string()), false);
+            return (self.error(entry, "request contains no rows".to_string()), false);
         }
+        let block = blocks[idx].get_or_insert_with(|| session.new_block());
         block.clear();
         for row in rows {
-            if let Err(e) = self.session.decode_row(block, row) {
-                return (self.error(e), false);
+            if let Err(e) = session.decode_row(block, row) {
+                return (self.error(entry, e), false);
             }
         }
         let n = block.rows();
-        let pending = match self.batcher.submit(block) {
+        let pending = match entry.batcher().submit(block) {
             Ok(p) => p,
             // QueueFull is additionally counted in the `rejected` counter
             // by the batcher; every error response increments `errors`.
-            Err(e) => return (self.error(e.to_string()), false),
+            Err(e) => return (self.error(entry, e.to_string()), false),
         };
         let flat = match pending.wait() {
             Ok(f) => f,
-            Err(e) => return (self.error(e), false),
+            Err(e) => return (self.error(entry, e), false),
         };
-        let dim = self.session.output_dim();
+        let dim = session.output_dim();
         let predictions = Json::Arr(
             flat.chunks(dim)
                 .map(|row| Json::Arr(row.iter().map(|&p| Json::Num(p)).collect()))
                 .collect(),
         );
         let mut resp = Json::obj();
-        resp.set("predictions", predictions);
-        self.stats.note_request(n, t0.elapsed().as_secs_f64() * 1e6);
+        resp.set("predictions", predictions)
+            .set("model", Json::Str(entry.name().to_string()));
+        entry.stats().note_request(n, t0.elapsed().as_secs_f64() * 1e6);
         (resp, false)
     }
 
-    fn command(&self, cmd: &str) -> (Json, bool) {
+    fn command(&self, cmd: &str, entry: &ModelEntry) -> (Json, bool) {
         match cmd {
             "health" => {
                 let mut j = Json::obj();
                 j.set("ok", Json::Bool(true))
-                    .set("engine", Json::Str(self.session.engine_name()))
+                    .set("model", Json::Str(entry.name().to_string()))
+                    .set(
+                        "models",
+                        Json::Arr(
+                            self.registry
+                                .names()
+                                .into_iter()
+                                .map(|n| Json::Str(n.to_string()))
+                                .collect(),
+                        ),
+                    )
+                    .set("engine", Json::Str(entry.session().engine_name()))
                     .set(
                         "model_type",
-                        Json::Str(self.session.model().model_type().to_string()),
+                        Json::Str(entry.session().model().model_type().to_string()),
                     )
-                    .set("output_dim", Json::Num(self.session.output_dim() as f64));
+                    .set("output_dim", Json::Num(entry.session().output_dim() as f64));
                 (j, false)
             }
-            "spec" => (self.session.spec_json(), false),
-            "stats" => (self.stats.to_json(), false),
+            "spec" => {
+                let mut j = entry.session().spec_json();
+                j.set("model", Json::Str(entry.name().to_string()));
+                (j, false)
+            }
+            "stats" => (self.registry.stats_json(), false),
             "shutdown" => {
                 let mut j = Json::obj();
                 j.set("ok", Json::Bool(true));
                 (j, true)
             }
             other => (
-                self.error(format!(
-                    "unknown command '{other}' (known: health, spec, stats, shutdown)"
-                )),
+                self.error(
+                    entry,
+                    format!("unknown command '{other}' (known: health, spec, stats, shutdown)"),
+                ),
                 false,
             ),
         }
     }
 
-    fn error(&self, message: String) -> Json {
-        self.stats.note_error();
+    /// Error reply counted against `entry`'s stats.
+    fn error(&self, entry: &ModelEntry, message: String) -> Json {
+        entry.stats().note_error();
         let mut j = Json::obj();
         j.set("error", Json::Str(message));
         j
+    }
+
+    /// Error reply for requests that never resolved to a model (parse
+    /// failures, unknown model names): counted against the default model.
+    fn error_default(&self, message: String) -> Json {
+        self.error(self.registry.default_entry(), message)
     }
 }
 
@@ -306,73 +401,103 @@ mod tests {
     use crate::dataset::synthetic;
     use crate::learner::gbt::GbtConfig;
     use crate::learner::{GradientBoostedTreesLearner, Learner};
+    use crate::serving::session::Session;
+    use crate::serving::BatcherConfig;
+    use std::time::Duration;
 
-    fn test_session() -> Session {
-        let ds = synthetic::adult_like(200, 7);
+    fn test_session(seed: u64, trees: usize) -> Session {
+        let ds = synthetic::adult_like(200, seed);
         let mut cfg = GbtConfig::new("income");
-        cfg.num_trees = 3;
+        cfg.num_trees = trees;
         cfg.max_depth = 3;
         Session::new(GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap())
     }
 
-    fn conn(session: Arc<Session>, batcher: Arc<Batcher>, stats: Arc<ServingStats>) -> Connection {
-        Connection {
-            session,
-            batcher,
-            stats,
+    fn two_model_conn() -> (Connection, Arc<Registry>) {
+        let mut registry = Registry::new(BatcherConfig {
+            max_delay: Duration::ZERO,
+            ..Default::default()
+        });
+        registry.register("a", test_session(7, 3)).unwrap();
+        registry.register("b", test_session(8, 5)).unwrap();
+        let registry = Arc::new(registry);
+        let conn = Connection {
+            registry: Arc::clone(&registry),
             shutdown: Arc::new(AtomicBool::new(false)),
             wake_addr: "127.0.0.1:1".parse().unwrap(),
-        }
+        };
+        (conn, registry)
     }
 
     #[test]
     fn respond_handles_requests_commands_and_errors() {
-        let session = Arc::new(test_session());
-        let stats = Arc::new(ServingStats::new());
-        let batcher = Arc::new(Batcher::with_stats(
-            Arc::clone(&session),
-            BatcherConfig { max_delay: std::time::Duration::ZERO, ..Default::default() },
-            Arc::clone(&stats),
-        ));
-        let c = conn(Arc::clone(&session), batcher, Arc::clone(&stats));
-        let mut block = session.new_block();
+        let (c, registry) = two_model_conn();
+        let mut blocks: Vec<Option<RowBlock>> = vec![None, None];
 
-        // Multi-row request.
-        let (resp, stop) =
-            c.respond(r#"{"rows": [{"age": 30}, {"age": 60, "education": "Doctorate"}]}"#, &mut block);
+        // Multi-row request (default model: "a").
+        let (resp, stop) = c.respond(
+            r#"{"rows": [{"age": 30}, {"age": 60, "education": "Doctorate"}]}"#,
+            &mut blocks,
+        );
         assert!(!stop);
         assert_eq!(resp.req_arr("predictions").unwrap().len(), 2);
+        assert_eq!(resp.req_str("model").unwrap(), "a");
 
-        // Single-row shorthand.
-        let (resp, _) = c.respond(r#"{"age": 41}"#, &mut block);
+        // Routed request.
+        let (resp, _) = c.respond(r#"{"model": "b", "rows": [{"age": 41}]}"#, &mut blocks);
         assert_eq!(resp.req_arr("predictions").unwrap().len(), 1);
+        assert_eq!(resp.req_str("model").unwrap(), "b");
+
+        // Single-row shorthand goes to the default model.
+        let (resp, _) = c.respond(r#"{"age": 41}"#, &mut blocks);
+        assert_eq!(resp.req_str("model").unwrap(), "a");
+
+        // Unknown model: clean error naming the registry.
+        let (resp, _) = c.respond(r#"{"model": "zzz", "rows": [{"age": 4}]}"#, &mut blocks);
+        let err = resp.req_str("error").unwrap();
+        assert!(err.contains("zzz") && err.contains("a, b"), "{err}");
+
+        // Non-string "model" in protocol form.
+        let (resp, _) = c.respond(r#"{"model": 5, "rows": [{"age": 4}]}"#, &mut blocks);
+        assert!(resp.req_str("error").unwrap().contains("must be a string"));
+
+        // Shorthand routing attempt gets the canonical-form hint.
+        let (resp, _) = c.respond(r#"{"model": "b", "age": 30}"#, &mut blocks);
+        let err = resp.req_str("error").unwrap();
+        assert!(err.contains("shorthand") && err.contains("rows"), "{err}");
 
         // Malformed JSON and unknown features answer with errors, in-band.
-        let (resp, _) = c.respond("not json at all", &mut block);
+        let (resp, _) = c.respond("not json at all", &mut blocks);
         assert!(resp.req_str("error").unwrap().contains("invalid JSON"));
-        let (resp, _) = c.respond(r#"{"bogus_feature": 1}"#, &mut block);
+        let (resp, _) = c.respond(r#"{"bogus_feature": 1}"#, &mut blocks);
         assert!(resp.req_str("error").unwrap().contains("bogus_feature"));
-        let (resp, _) = c.respond(r#"{"rows": []}"#, &mut block);
+        let (resp, _) = c.respond(r#"{"rows": []}"#, &mut blocks);
         assert!(resp.req_str("error").unwrap().contains("no rows"));
-        let (resp, _) = c.respond(r#"{"rows": 5}"#, &mut block);
+        let (resp, _) = c.respond(r#"{"rows": 5}"#, &mut blocks);
         assert!(resp.req_str("error").unwrap().contains("array"));
 
-        // Commands.
-        let (resp, _) = c.respond(r#"{"cmd": "health"}"#, &mut block);
+        // Commands; "model" routes health/spec.
+        let (resp, _) = c.respond(r#"{"cmd": "health"}"#, &mut blocks);
         assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
-        let (resp, _) = c.respond(r#"{"cmd": "spec"}"#, &mut block);
+        assert_eq!(resp.req_str("model").unwrap(), "a");
+        assert_eq!(resp.req_arr("models").unwrap().len(), 2);
+        let (resp, _) = c.respond(r#"{"cmd": "spec", "model": "b"}"#, &mut blocks);
         assert_eq!(resp.req_str("label").unwrap(), "income");
-        let (resp, _) = c.respond(r#"{"cmd": "stats"}"#, &mut block);
-        assert!(resp.req_f64("requests").unwrap() >= 2.0);
-        let (resp, _) = c.respond(r#"{"cmd": "dance"}"#, &mut block);
+        assert_eq!(resp.req_str("model").unwrap(), "b");
+        let (resp, _) = c.respond(r#"{"cmd": "dance"}"#, &mut blocks);
         assert!(resp.req_str("error").unwrap().contains("unknown command"));
-        let (resp, stop) = c.respond(r#"{"cmd": "shutdown"}"#, &mut block);
+        let (resp, stop) = c.respond(r#"{"cmd": "shutdown"}"#, &mut blocks);
         assert!(stop);
         assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
 
-        let snap = stats.snapshot();
-        assert_eq!(snap.requests, 2);
-        assert_eq!(snap.rows, 3);
-        assert_eq!(snap.errors, 5);
+        // Per-model stats: "a" answered 2 requests + the parse/decode
+        // errors attributed to the default model; "b" answered 1.
+        let (resp, _) = c.respond(r#"{"cmd": "stats"}"#, &mut blocks);
+        assert!(resp.req_f64("requests").unwrap() >= 3.0);
+        let models = resp.req("models").unwrap();
+        assert_eq!(models.req("a").unwrap().req_f64("requests").unwrap(), 2.0);
+        assert_eq!(models.req("b").unwrap().req_f64("requests").unwrap(), 1.0);
+        assert!(models.req("a").unwrap().req_f64("errors").unwrap() >= 5.0);
+        assert_eq!(registry.get("b").unwrap().stats().snapshot().errors, 0);
     }
 }

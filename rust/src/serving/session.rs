@@ -10,9 +10,10 @@
 //! (categorical-set rows aside, which own their token lists).
 
 use crate::dataset::{ColumnData, DataSpec, Dataset, FeatureSemantic, MISSING_BOOL, MISSING_CAT};
-use crate::inference::InferenceEngine;
+use crate::inference::{InferenceEngine, BLOCK_SIZE};
 use crate::model::Model;
 use crate::utils::json::Json;
+use crate::utils::pool::WorkerPool;
 use std::collections::HashMap;
 use std::path::Path;
 
@@ -53,8 +54,9 @@ impl RowBlock {
     }
 
     /// The block as a columnar dataset, row count synced. Only valid until
-    /// the next mutation.
-    fn as_dataset(&mut self) -> &Dataset {
+    /// the next mutation. Public so tests can pin the decode layer against
+    /// independently built columnar ground truth.
+    pub fn dataset(&mut self) -> &Dataset {
         let n = self.ds.sync_num_rows().expect("decode pushed one value per column per row");
         debug_assert_eq!(n, self.rows);
         &self.ds
@@ -224,18 +226,58 @@ impl Session {
 
     /// Scores every row of the block through the pinned engine (or the
     /// model row loop for wrapper models) into a fresh row-major buffer of
-    /// `rows * output_dim()` values. One engine call per invocation — the
-    /// batcher's whole flush is a single `predict_batch`.
+    /// `rows * output_dim()` values. Single-threaded: the whole block is
+    /// one `predict_batch` call. The batcher's flush path is
+    /// [`Session::predict_block_pooled`], which this delegates to.
     pub fn predict_block(&self, block: &mut RowBlock) -> Vec<f64> {
+        self.predict_block_pooled(block, None)
+    }
+
+    /// As [`Session::predict_block`], but when a scoring pool is provided
+    /// and the block spans more than one [`BLOCK_SIZE`] kernel block, the
+    /// [`crate::inference::block_spans`] partition is scattered across the
+    /// pool's workers with index-disjoint output slices — the
+    /// `predict_into` contract, but over persistent `utils/pool.rs`
+    /// workers so a large coalesced flush does not score on one thread
+    /// (and does not pay per-flush thread spawns). Engines are
+    /// row-independent and spans are block-aligned, so the output is
+    /// bit-identical to the single-call path.
+    pub fn predict_block_pooled(
+        &self,
+        block: &mut RowBlock,
+        pool: Option<&WorkerPool>,
+    ) -> Vec<f64> {
         let n = block.rows;
         let dim = self.dim;
         let mut out = vec![0.0f64; n * dim];
         if n == 0 {
             return out;
         }
-        let ds = block.as_dataset();
+        let ds = block.dataset();
         match &self.engine {
-            Some(e) => e.predict_batch(ds, 0..n, &mut out),
+            Some(e) => {
+                let spans = match pool {
+                    Some(p) if p.num_workers() > 1 && n > BLOCK_SIZE => {
+                        crate::inference::block_spans(n, p.num_workers())
+                    }
+                    _ => Vec::new(),
+                };
+                if spans.len() > 1 {
+                    let pool = pool.expect("spans are only computed when a pool is present");
+                    let engine = e.as_ref();
+                    let mut jobs = Vec::with_capacity(spans.len());
+                    let mut rest: &mut [f64] = &mut out;
+                    for span in spans {
+                        let (head, tail) = std::mem::take(&mut rest)
+                            .split_at_mut((span.end - span.start) * dim);
+                        rest = tail;
+                        jobs.push(move || engine.predict_batch(ds, span, head));
+                    }
+                    pool.run_scoped(jobs);
+                } else {
+                    e.predict_batch(ds, 0..n, &mut out);
+                }
+            }
             None => {
                 for r in 0..n {
                     out[r * dim..(r + 1) * dim]
@@ -435,7 +477,7 @@ mod tests {
         let mut block = s.new_block();
         let row = Json::parse(r#"{"age": null, "workclass": "Private"}"#).unwrap();
         s.decode_row(&mut block, &row).unwrap();
-        let ds = block.as_dataset();
+        let ds = block.dataset();
         assert!(ds.column(0).is_missing(0)); // age -> NaN
         assert!(ds.column(4).is_missing(0)); // occupation absent -> MISSING_CAT
     }
@@ -492,7 +534,7 @@ mod tests {
         let mut block = s.new_block();
         let row = Json::parse(r#"{"workclass": "Space-tourism"}"#).unwrap();
         s.decode_row(&mut block, &row).unwrap();
-        assert!(block.as_dataset().column(2).is_missing(0));
+        assert!(block.dataset().column(2).is_missing(0));
     }
 
     #[test]

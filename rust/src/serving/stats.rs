@@ -158,53 +158,23 @@ impl ServingStats {
         *self.latency_us.lock().expect("stats poisoned") = LatencyReservoir::new();
     }
 
+    /// Point-in-time latency summary: exact full-stream
+    /// `(count, mean, min, max)` plus a clone of the reservoir sample.
+    /// Copies under the lock; callers sort/merge outside it.
+    pub fn latency_summary(&self) -> (u64, f64, f64, f64, Vec<f64>) {
+        let r = self.latency_us.lock().expect("stats poisoned");
+        (r.moments.count(), r.moments.mean(), r.moments.min(), r.moments.max(), r.samples.clone())
+    }
+
     /// JSON export: counters plus latency mean and p50/p95/p99 (µs).
     /// Count/mean/min/max are exact over the full stream; percentiles are
     /// exact below [`LATENCY_RESERVOIR_CAP`] samples, sampled above.
     pub fn to_json(&self) -> Json {
-        let s = self.snapshot();
-        let mut j = Json::obj();
-        j.set("requests", Json::Num(s.requests as f64))
-            .set("rows", Json::Num(s.rows as f64))
-            .set("errors", Json::Num(s.errors as f64))
-            .set("rejected", Json::Num(s.rejected as f64))
-            .set("batches", Json::Num(s.batches as f64))
-            .set("batched_rows", Json::Num(s.batched_rows as f64))
-            .set("batched_requests", Json::Num(s.batched_requests as f64))
-            .set(
-                "mean_batch_rows",
-                Json::Num(if s.batches > 0 {
-                    s.batched_rows as f64 / s.batches as f64
-                } else {
-                    0.0
-                }),
-            )
-            .set("queue_rows", Json::Num(s.queue_rows as f64))
-            .set("queue_rows_peak", Json::Num(s.queue_rows_peak as f64));
         // Copy what is needed under the lock; sort outside it so a stats
         // call never stalls in-flight request accounting.
-        let (count, mean, min, max, mut xs) = {
-            let r = self.latency_us.lock().expect("stats poisoned");
-            (
-                r.moments.count(),
-                r.moments.mean(),
-                r.moments.min(),
-                r.moments.max(),
-                r.samples.clone(),
-            )
-        };
-        let mut lat = Json::obj();
-        lat.set("count", Json::Num(count as f64));
-        if count > 0 {
-            xs.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
-            lat.set("mean_us", Json::Num(mean))
-                .set("min_us", Json::Num(min))
-                .set("max_us", Json::Num(max));
-            for (name, p) in [("p50_us", 0.50), ("p95_us", 0.95), ("p99_us", 0.99)] {
-                lat.set(name, Json::Num(percentile(&xs, p)));
-            }
-        }
-        j.set("latency", lat);
+        let (count, mean, min, max, xs) = self.latency_summary();
+        let mut j = counters_json(&self.snapshot());
+        j.set("latency", latency_json(count, mean, min, max, xs));
         j
     }
 
@@ -242,6 +212,104 @@ impl ServingStats {
         out.push_str(&h.render(10, 20));
         out
     }
+}
+
+/// The counter section shared by [`ServingStats::to_json`] and the
+/// per-model entries of [`aggregate_json`] (everything except the
+/// latency block).
+fn counters_json(s: &StatsSnapshot) -> Json {
+    let mut j = Json::obj();
+    j.set("requests", Json::Num(s.requests as f64))
+        .set("rows", Json::Num(s.rows as f64))
+        .set("errors", Json::Num(s.errors as f64))
+        .set("rejected", Json::Num(s.rejected as f64))
+        .set("batches", Json::Num(s.batches as f64))
+        .set("batched_rows", Json::Num(s.batched_rows as f64))
+        .set("batched_requests", Json::Num(s.batched_requests as f64))
+        .set(
+            "mean_batch_rows",
+            Json::Num(if s.batches > 0 {
+                s.batched_rows as f64 / s.batches as f64
+            } else {
+                0.0
+            }),
+        )
+        .set("queue_rows", Json::Num(s.queue_rows as f64))
+        .set("queue_rows_peak", Json::Num(s.queue_rows_peak as f64));
+    j
+}
+
+/// Renders one latency block (`count` exact; percentiles from `xs`,
+/// which is sorted here, outside any lock).
+fn latency_json(count: u64, mean: f64, min: f64, max: f64, mut xs: Vec<f64>) -> Json {
+    let mut lat = Json::obj();
+    lat.set("count", Json::Num(count as f64));
+    if count > 0 {
+        xs.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        lat.set("mean_us", Json::Num(mean))
+            .set("min_us", Json::Num(min))
+            .set("max_us", Json::Num(max));
+        for (name, p) in [("p50_us", 0.50), ("p95_us", 0.95), ("p99_us", 0.99)] {
+            lat.set(name, Json::Num(percentile(&xs, p)));
+        }
+    }
+    lat
+}
+
+/// The multi-model `{"cmd": "stats"}` export: the top level carries the
+/// same keys as [`ServingStats::to_json`], aggregated across every model
+/// (counters summed; latency count/mean/min/max combined exactly from the
+/// per-model moments, percentiles over the concatenated reservoir
+/// samples), plus a `"models"` object with each model's full individual
+/// export. Each model is read **once** — the aggregate and its `"models"`
+/// entry come from the same snapshot, so the two levels of one reply
+/// always agree. With a single model the top level therefore matches
+/// that model's own `to_json` — the PR-3 single-model wire shape is
+/// preserved.
+pub fn aggregate_json(named: &[(&str, &ServingStats)]) -> Json {
+    let mut total = StatsSnapshot::default();
+    let mut count = 0u64;
+    let mut mean_weighted = 0.0f64;
+    let mut min = f64::INFINITY;
+    let mut max = f64::NEG_INFINITY;
+    let mut samples: Vec<f64> = Vec::new();
+    let mut models = Json::obj();
+    for (name, stats) in named {
+        let s = stats.snapshot();
+        let (c, mean, mn, mx, xs) = stats.latency_summary();
+        total.requests += s.requests;
+        total.rows += s.rows;
+        total.errors += s.errors;
+        total.rejected += s.rejected;
+        total.batches += s.batches;
+        total.batched_rows += s.batched_rows;
+        total.batched_requests += s.batched_requests;
+        total.queue_rows += s.queue_rows;
+        total.queue_rows_peak = total.queue_rows_peak.max(s.queue_rows_peak);
+        if c > 0 {
+            count += c;
+            mean_weighted += mean * c as f64;
+            min = min.min(mn);
+            max = max.max(mx);
+            samples.extend_from_slice(&xs);
+        }
+        let mut mj = counters_json(&s);
+        mj.set("latency", latency_json(c, mean, mn, mx, xs));
+        models.set(name, mj);
+    }
+    let mut j = counters_json(&total);
+    j.set(
+        "latency",
+        latency_json(
+            count,
+            if count > 0 { mean_weighted / count as f64 } else { 0.0 },
+            min,
+            max,
+            samples,
+        ),
+    );
+    j.set("models", models);
+    j
 }
 
 /// Nearest-rank percentile over an ascending-sorted sample.
@@ -291,6 +359,37 @@ mod tests {
         assert_eq!(j.req_f64("requests").unwrap(), 0.0);
         assert_eq!(j.req("latency").unwrap().req_f64("count").unwrap(), 0.0);
         assert!(s.report().contains("(empty)"));
+    }
+
+    #[test]
+    fn aggregate_json_sums_counters_and_merges_latency() {
+        let a = ServingStats::new();
+        let b = ServingStats::new();
+        a.note_request(2, 100.0);
+        a.note_request(2, 300.0);
+        b.note_request(1, 500.0);
+        b.note_error();
+        a.note_batch(4, 2);
+        b.note_batch(1, 1);
+        a.set_queue_rows(7);
+        a.set_queue_rows(0);
+        b.set_queue_rows(3);
+        let j = aggregate_json(&[("a", &a), ("b", &b)]);
+        assert_eq!(j.req_f64("requests").unwrap(), 3.0);
+        assert_eq!(j.req_f64("rows").unwrap(), 5.0);
+        assert_eq!(j.req_f64("errors").unwrap(), 1.0);
+        assert_eq!(j.req_f64("batches").unwrap(), 2.0);
+        assert_eq!(j.req_f64("mean_batch_rows").unwrap(), 2.5);
+        assert_eq!(j.req_f64("queue_rows_peak").unwrap(), 7.0);
+        let lat = j.req("latency").unwrap();
+        assert_eq!(lat.req_f64("count").unwrap(), 3.0);
+        assert_eq!(lat.req_f64("mean_us").unwrap(), 300.0);
+        assert_eq!(lat.req_f64("min_us").unwrap(), 100.0);
+        assert_eq!(lat.req_f64("max_us").unwrap(), 500.0);
+        // Per-model breakdown carries each model's own full export.
+        let models = j.req("models").unwrap();
+        assert_eq!(models.req("a").unwrap().req_f64("requests").unwrap(), 2.0);
+        assert_eq!(models.req("b").unwrap().req_f64("errors").unwrap(), 1.0);
     }
 
     #[test]

@@ -191,7 +191,7 @@ impl Json {
     }
 
     pub fn parse(text: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -240,9 +240,18 @@ impl fmt::Display for JsonError {
 
 impl std::error::Error for JsonError {}
 
+/// Nesting cap for the recursive-descent parser. Any legitimate payload
+/// in this codebase is a handful of levels deep; without the cap a
+/// hostile input of `[[[[…` recurses once per byte and overflows the
+/// stack — which in the TCP server would abort the whole process from a
+/// single malformed request line.
+const MAX_PARSE_DEPTH: usize = 128;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    /// Current container nesting while parsing (see [`MAX_PARSE_DEPTH`]).
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -299,7 +308,22 @@ impl<'a> Parser<'a> {
         }
     }
 
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_PARSE_DEPTH {
+            return Err(self.err("JSON nested deeper than 128 levels"));
+        }
+        Ok(())
+    }
+
     fn object(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
+        let v = self.object_inner()?;
+        self.depth -= 1;
+        Ok(v)
+    }
+
+    fn object_inner(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
         let mut m = BTreeMap::new();
         self.skip_ws();
@@ -324,6 +348,13 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
+        let v = self.array_inner()?;
+        self.depth -= 1;
+        Ok(v)
+    }
+
+    fn array_inner(&mut self) -> Result<Json, JsonError> {
         self.expect(b'[')?;
         let mut v = Vec::new();
         self.skip_ws();
@@ -448,6 +479,22 @@ fn utf8_len(first: u8) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn parse_depth_is_capped_not_stack_overflowed() {
+        // Hostile nesting errors out instead of recursing per byte and
+        // overflowing the stack (the TCP server parses untrusted lines).
+        let deep = "[".repeat(100_000) + &"]".repeat(100_000);
+        let err = Json::parse(&deep).unwrap_err();
+        assert!(err.to_string().contains("128 levels"), "{err}");
+        let deep_obj = r#"{"a":"#.repeat(1000) + "1" + &"}".repeat(1000);
+        assert!(Json::parse(&deep_obj).is_err());
+        // At the cap still parses; siblings do not accumulate depth.
+        let ok = "[".repeat(128) + &"]".repeat(128);
+        assert!(Json::parse(&ok).is_ok(), "128 levels must parse");
+        let wide = format!("[{}[1]]", "[1],".repeat(500));
+        assert!(Json::parse(&wide).is_ok(), "wide-but-shallow must parse");
+    }
 
     #[test]
     fn roundtrip_compound() {

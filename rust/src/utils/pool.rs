@@ -105,6 +105,75 @@ impl WorkerPool {
         self.senders[worker].send(Box::new(f)).expect("worker channel closed");
     }
 
+    /// Runs every job to completion on the pool's workers, blocking the
+    /// caller until all of them finish. Unlike [`WorkerPool::submit_to`],
+    /// the jobs may borrow from the caller's stack frame (they are not
+    /// `'static`): this is the scoped span-scatter the serving batcher
+    /// uses to fan one coalesced flush out across persistent workers with
+    /// index-disjoint `&mut` slices, the same contract as
+    /// `InferenceEngine::predict_into` — but without spawning fresh OS
+    /// threads per flush.
+    ///
+    /// Jobs are placed round-robin. With one worker (or one job) the jobs
+    /// run inline on the caller's thread. Panics if a worker dies before
+    /// completing its jobs (the borrows would otherwise be unguarded).
+    pub fn run_scoped<'env, F>(&self, jobs: Vec<F>)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        let n_jobs = jobs.len();
+        if n_jobs <= 1 || self.num_workers() <= 1 {
+            for job in jobs {
+                job();
+            }
+            return;
+        }
+        let (done_tx, done_rx) = std::sync::mpsc::channel::<()>();
+        for (i, job) in jobs.into_iter().enumerate() {
+            let done = done_tx.clone();
+            let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                job();
+                let _ = done.send(());
+            });
+            // SAFETY: the job may borrow data from the caller's frame
+            // (lifetime 'env). We erase that lifetime to hand it to a
+            // persistent worker, which is sound because this function does
+            // not unwind or return until every `done_tx` clone is gone —
+            // each job either ran to completion (sent, then dropped its
+            // clone) or was dropped unexecuted (a panicked job unwinds
+            // past the send; a dead worker's queue drops pending jobs) —
+            // so no job can still be running, and no borrow can still be
+            // live, once the drain loop below finishes. Box<dyn FnOnce>
+            // has the same (fat-pointer) layout for both lifetimes.
+            let job: Box<dyn FnOnce() + Send + 'static> = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'env>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(job)
+            };
+            // Deliberately NOT submit_to: its "worker channel closed"
+            // panic would unwind this frame mid-scatter while jobs on the
+            // surviving workers still hold `&mut` borrows into it. A send
+            // to a dead worker instead drops the job (and its `done`
+            // clone); the accounting below notices the loss only after
+            // every surviving job has finished.
+            let _ = self.senders[i % self.senders.len()].send(job);
+        }
+        drop(done_tx);
+        // Drain until the channel closes or all jobs reported in. Only
+        // after that — when no job can still be running — is it safe to
+        // unwind on a lost job.
+        let mut completed = 0usize;
+        while completed < n_jobs && done_rx.recv().is_ok() {
+            completed += 1;
+        }
+        assert_eq!(
+            completed, n_jobs,
+            "worker pool lost {} scoped job(s): a worker died mid-run",
+            n_jobs - completed
+        );
+    }
+
     /// Runs `f(w)` on every worker and blocks until all complete.
     pub fn broadcast<F>(&self, f: F)
     where
@@ -172,6 +241,42 @@ mod tests {
             COUNT.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(COUNT.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn run_scoped_borrows_and_joins() {
+        let pool = WorkerPool::new(3);
+        // Jobs borrow disjoint &mut chunks of a stack-local buffer — the
+        // exact shape of the batcher's parallel flush.
+        let mut out = vec![0u64; 97];
+        {
+            let mut jobs = Vec::new();
+            let mut rest: &mut [u64] = &mut out;
+            let mut start = 0usize;
+            while !rest.is_empty() {
+                let take = rest.len().min(10);
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+                rest = tail;
+                let s = start;
+                start += take;
+                jobs.push(move || {
+                    for (i, x) in head.iter_mut().enumerate() {
+                        *x = (s + i) as u64 * 2;
+                    }
+                });
+            }
+            pool.run_scoped(jobs);
+        }
+        assert_eq!(out, (0..97).map(|i| i * 2).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn run_scoped_empty_and_single() {
+        let pool = WorkerPool::new(2);
+        pool.run_scoped(Vec::<fn()>::new());
+        let mut hit = false;
+        pool.run_scoped(vec![|| hit = true]);
+        assert!(hit);
     }
 
     #[test]

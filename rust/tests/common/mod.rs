@@ -1,0 +1,188 @@
+//! Shared integration-test fixtures: deterministic small RF/GBT model
+//! builders and synthetic mixed-semantic datasets, used by `serving.rs`,
+//! `properties.rs` and `end_to_end.rs` (each test binary compiles its own
+//! copy via `mod common;`). Everything here is seed-deterministic — the
+//! same arguments always produce the same model, so tests pinning
+//! bit-identity can rebuild references freely.
+#![allow(dead_code)]
+
+use std::sync::Arc;
+use ydf::dataset::dataspec::{ColumnSpec, DataSpec};
+use ydf::dataset::{synthetic, ColumnData, Dataset, MISSING_BOOL, MISSING_CAT};
+use ydf::learner::gbt::GbtConfig;
+use ydf::learner::random_forest::RandomForestConfig;
+use ydf::learner::{GradientBoostedTreesLearner, Learner, RandomForestLearner};
+use ydf::model::Model;
+use ydf::serving::{RowBlock, Session};
+use ydf::utils::json::Json;
+use ydf::utils::rng::Rng;
+
+/// Deterministic small GBT classifier trained on the adult-like synthetic
+/// table (label `income`, mixed numerical/categorical features).
+pub fn adult_gbt(rows: usize, seed: u64, trees: usize, depth: usize) -> Box<dyn Model> {
+    let ds = synthetic::adult_like(rows, seed);
+    let mut cfg = GbtConfig::new("income");
+    cfg.num_trees = trees;
+    cfg.max_depth = depth;
+    GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap()
+}
+
+/// Deterministic small Random Forest classifier on the same table.
+pub fn adult_rf(rows: usize, seed: u64, trees: usize) -> Box<dyn Model> {
+    let ds = synthetic::adult_like(rows, seed);
+    let mut cfg = RandomForestConfig::new("income");
+    cfg.num_trees = trees;
+    cfg.compute_oob = false;
+    RandomForestLearner::new(cfg).train(&ds).unwrap()
+}
+
+/// Serving session over [`adult_gbt`], shareable across threads.
+pub fn adult_session(rows: usize, seed: u64, trees: usize, depth: usize) -> Arc<Session> {
+    Arc::new(adult_session_owned(rows, seed, trees, depth))
+}
+
+/// As [`adult_session`], but by value (what `Registry::register` takes).
+pub fn adult_session_owned(rows: usize, seed: u64, trees: usize, depth: usize) -> Session {
+    Session::new(adult_gbt(rows, seed, trees, depth))
+}
+
+/// JSON request rows for an adult-like session covering the decode edge
+/// cases: every 7th row drops `age` (numerical missing → NaN) and every
+/// 4th carries an out-of-dictionary `workclass` (→ missing category).
+pub fn adult_json_rows(n: usize) -> Vec<String> {
+    let workclasses = ["Private", "Self-emp-inc", "Federal-gov", "Moon-base"];
+    let educations = ["HS-grad", "Bachelors", "Masters", "Doctorate"];
+    (0..n)
+        .map(|i| {
+            let age = if i % 7 == 0 {
+                "null".to_string() // missing numerical -> NaN
+            } else {
+                format!("{}", 18 + (i * 13) % 60)
+            };
+            format!(
+                r#"{{"age": {age}, "hours_per_week": {}, "workclass": "{}",
+                    "education": "{}", "capital_gain": {}}}"#,
+                20 + (i * 7) % 50,
+                workclasses[i % workclasses.len()], // i%4==3 -> OOD
+                educations[(i / 3) % educations.len()],
+                (i % 11) * 500,
+            )
+        })
+        .collect()
+}
+
+/// Decodes every JSON row into one fresh block of `session`.
+pub fn decode_all(session: &Session, rows: &[String]) -> RowBlock {
+    let mut block = session.new_block();
+    for r in rows {
+        session.decode_row(&mut block, &Json::parse(r).unwrap()).unwrap();
+    }
+    block
+}
+
+/// Builds a mixed-semantic dataset (numerical + categorical + boolean +
+/// categorical-set, all with missing values) and a label column:
+/// categorical with `classes` classes when `classes >= 2`, numerical
+/// (regression) when `classes == 0`. Column order: `x0`, `x1`, `cat`,
+/// `flag`, [`tokens`,] `label`.
+pub fn mixed_ds(n: usize, classes: usize, rng: &mut Rng) -> Dataset {
+    mixed_ds_opt(n, classes, true, rng)
+}
+
+/// `mixed_ds` with the categorical-set column optional: without it, the
+/// trained trees stay inside QuickScorer's condition envelope while the
+/// numerical/categorical/boolean columns still carry missing values.
+pub fn mixed_ds_opt(n: usize, classes: usize, with_catset: bool, rng: &mut Rng) -> Dataset {
+    let mut x0 = Vec::with_capacity(n);
+    let mut x1 = Vec::with_capacity(n);
+    let mut cat = Vec::with_capacity(n);
+    let mut boo = Vec::with_capacity(n);
+    let mut cs_offsets = vec![0u32];
+    let mut cs_values: Vec<u32> = Vec::new();
+    let mut label_cat = Vec::with_capacity(n);
+    let mut label_num = Vec::with_capacity(n);
+    for i in 0..n {
+        let a = rng.uniform_range(-2.0, 2.0);
+        let b = rng.uniform_range(-2.0, 2.0);
+        let c = rng.uniform_usize(4);
+        let bo = rng.bernoulli(0.5);
+        x0.push(if rng.bernoulli(0.06) { f32::NAN } else { a as f32 });
+        x1.push(if rng.bernoulli(0.06) { f32::NAN } else { b as f32 });
+        cat.push(if rng.bernoulli(0.06) { MISSING_CAT } else { c as u32 });
+        boo.push(if rng.bernoulli(0.06) { MISSING_BOOL } else { bo as u8 });
+        let mut has_token0 = false;
+        if with_catset {
+            if rng.bernoulli(0.06) {
+                cs_values.push(MISSING_CAT); // sentinel: missing set
+            } else {
+                for _ in 0..rng.uniform_usize(3) {
+                    let tok = rng.uniform_usize(5) as u32;
+                    has_token0 |= tok == 0;
+                    cs_values.push(tok);
+                }
+            }
+            cs_offsets.push(cs_values.len() as u32);
+        }
+        let z = a + 0.5 * b
+            + if bo { 0.8 } else { -0.4 }
+            + c as f64 * 0.3
+            + if has_token0 { 1.2 } else { 0.0 }
+            + rng.normal_ms(0.0, 0.3);
+        if classes >= 2 {
+            let mut y = if z > 0.8 {
+                2
+            } else if z > -0.2 {
+                1
+            } else {
+                0
+            };
+            y = y.min(classes as u32 - 1);
+            // Guarantee every class appears.
+            if i < classes {
+                y = i as u32;
+            }
+            label_cat.push(y);
+        } else {
+            label_num.push(z as f32);
+        }
+    }
+    let mut columns = vec![
+        ColumnSpec::numerical("x0"),
+        ColumnSpec::numerical("x1"),
+        ColumnSpec::categorical("cat", (0..4).map(|i| format!("c{i}")).collect()),
+        ColumnSpec::boolean("flag"),
+    ];
+    let mut data = vec![
+        ColumnData::Numerical(x0),
+        ColumnData::Numerical(x1),
+        ColumnData::Categorical(cat),
+        ColumnData::Boolean(boo),
+    ];
+    if with_catset {
+        columns.push(ColumnSpec::catset("tokens", (0..5).map(|i| format!("t{i}")).collect()));
+        data.push(ColumnData::CategoricalSet { offsets: cs_offsets, values: cs_values });
+    }
+    if classes >= 2 {
+        columns.push(ColumnSpec::categorical(
+            "label",
+            (0..classes).map(|i| format!("y{i}")).collect(),
+        ));
+        data.push(ColumnData::Categorical(label_cat));
+    } else {
+        columns.push(ColumnSpec::numerical("label"));
+        data.push(ColumnData::Numerical(label_num));
+    }
+    Dataset::new(DataSpec { columns }, data).unwrap()
+}
+
+/// A deterministic small GBT classifier over [`mixed_ds`] (all four
+/// feature semantics, missing values everywhere) plus the dataset it was
+/// trained on.
+pub fn mixed_gbt(n: usize, classes: usize, seed: u64) -> (Box<dyn Model>, Dataset) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let ds = mixed_ds(n, classes, &mut rng);
+    let mut cfg = GbtConfig::new("label");
+    cfg.num_trees = 4;
+    cfg.max_depth = 4;
+    (GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap(), ds)
+}

@@ -1,6 +1,9 @@
 //! End-to-end integration: CSV → dataspec → train → save/load → engines →
 //! evaluation, across learner families; plus the benchmark harness's
-//! expected orderings on a small suite.
+//! expected orderings on a small suite. Deterministic model builders come
+//! from `tests/common/mod.rs`.
+
+mod common;
 
 use std::collections::HashMap;
 use ydf::dataset::csv::{read_csv_str, write_csv_string};
@@ -41,11 +44,7 @@ fn csv_roundtrip_train_eval_all_learners() {
 #[test]
 fn engines_agree_on_every_row() {
     let ds = synthetic::adult_like(300, 203);
-    let mut params = HashMap::new();
-    params.insert("num_trees".to_string(), "12".to_string());
-    params.insert("max_depth".to_string(), "5".to_string());
-    let learner = create_learner("GRADIENT_BOOSTED_TREES", "income", &params).unwrap();
-    let model = learner.train(&ds).unwrap();
+    let model = common::adult_gbt(300, 203, 12, 5);
     let engines = compile_engines(model.as_ref());
     assert!(engines.len() >= 3, "expected QuickScorer+Flat+Naive");
     let reference = engines.last().unwrap().predict_dataset(&ds); // naive
@@ -54,6 +53,35 @@ fn engines_agree_on_every_row() {
         for (r, (a, b)) in preds.iter().zip(&reference).enumerate() {
             for (x, y) in a.iter().zip(b) {
                 assert!((x - y).abs() < 1e-9, "{} row {r}: {a:?} vs {b:?}", e.name());
+            }
+        }
+    }
+}
+
+/// The RF builder and the mixed-semantic GBT builder from the shared
+/// fixture layer produce models every engine path agrees on — the
+/// fixtures are safe foundations for bit-identity tests elsewhere.
+#[test]
+fn fixture_models_are_deterministic_and_consistent() {
+    // Same arguments → the same model, prediction for prediction (the
+    // serving tests rebuild references from seeds and rely on this).
+    let ds = synthetic::adult_like(150, 331);
+    let m1 = common::adult_gbt(150, 331, 4, 3);
+    let m2 = common::adult_gbt(150, 331, 4, 3);
+    let rf1 = common::adult_rf(150, 331, 5);
+    let rf2 = common::adult_rf(150, 331, 5);
+    for r in 0..ds.num_rows() {
+        assert_eq!(m1.predict_ds_row(&ds, r), m2.predict_ds_row(&ds, r), "gbt row {r}");
+        assert_eq!(rf1.predict_ds_row(&ds, r), rf2.predict_ds_row(&ds, r), "rf row {r}");
+    }
+    let (mixed_model, mixed) = common::mixed_gbt(120, 3, 77);
+    let engines = compile_engines(mixed_model.as_ref());
+    let reference = engines.last().unwrap().predict_dataset(&mixed);
+    for e in &engines {
+        let preds = e.predict_dataset(&mixed);
+        for (r, (a, b)) in preds.iter().zip(&reference).enumerate() {
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < 1e-9, "{} row {r}", e.name());
             }
         }
     }

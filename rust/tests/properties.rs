@@ -1,7 +1,12 @@
 //! Property-based tests over coordinator invariants: splitter optimality
-//! and consistency, engine equivalence, partition conservation, metric
-//! bounds, determinism — randomized with fixed seeds (utils::prop).
+//! and consistency, engine equivalence, serving-session decode fidelity,
+//! partition conservation, metric bounds, determinism — randomized with
+//! fixed seeds (utils::prop). Mixed-semantic dataset generators live in
+//! `tests/common/mod.rs`.
 
+mod common;
+
+use common::{mixed_ds, mixed_ds_opt};
 use ydf::dataset::dataspec::{ColumnSpec, DataSpec};
 use ydf::dataset::{ColumnData, Dataset};
 use ydf::splitter::score::Labels;
@@ -181,101 +186,6 @@ fn prop_auc_invariant_under_monotone_transform() {
         let auc3 = roc_auc(&scores, &neg);
         assert!((auc + auc3 - 1.0).abs() < 1e-9, "{auc} + {auc3} != 1");
     });
-}
-
-/// Builds a mixed-semantic dataset (numerical + categorical + boolean +
-/// categorical-set, all with missing values) and a label column:
-/// categorical with `classes` classes when `classes >= 2`, numerical
-/// (regression) when `classes == 0`.
-fn mixed_ds(n: usize, classes: usize, rng: &mut Rng) -> Dataset {
-    mixed_ds_opt(n, classes, true, rng)
-}
-
-/// `mixed_ds` with the categorical-set column optional: without it, the
-/// trained trees stay inside QuickScorer's condition envelope while the
-/// numerical/categorical/boolean columns still carry missing values.
-fn mixed_ds_opt(n: usize, classes: usize, with_catset: bool, rng: &mut Rng) -> Dataset {
-    use ydf::dataset::{MISSING_BOOL, MISSING_CAT};
-    let mut x0 = Vec::with_capacity(n);
-    let mut x1 = Vec::with_capacity(n);
-    let mut cat = Vec::with_capacity(n);
-    let mut boo = Vec::with_capacity(n);
-    let mut cs_offsets = vec![0u32];
-    let mut cs_values: Vec<u32> = Vec::new();
-    let mut label_cat = Vec::with_capacity(n);
-    let mut label_num = Vec::with_capacity(n);
-    for i in 0..n {
-        let a = rng.uniform_range(-2.0, 2.0);
-        let b = rng.uniform_range(-2.0, 2.0);
-        let c = rng.uniform_usize(4);
-        let bo = rng.bernoulli(0.5);
-        x0.push(if rng.bernoulli(0.06) { f32::NAN } else { a as f32 });
-        x1.push(if rng.bernoulli(0.06) { f32::NAN } else { b as f32 });
-        cat.push(if rng.bernoulli(0.06) { MISSING_CAT } else { c as u32 });
-        boo.push(if rng.bernoulli(0.06) { MISSING_BOOL } else { bo as u8 });
-        let mut has_token0 = false;
-        if with_catset {
-            if rng.bernoulli(0.06) {
-                cs_values.push(MISSING_CAT); // sentinel: missing set
-            } else {
-                for _ in 0..rng.uniform_usize(3) {
-                    let tok = rng.uniform_usize(5) as u32;
-                    has_token0 |= tok == 0;
-                    cs_values.push(tok);
-                }
-            }
-            cs_offsets.push(cs_values.len() as u32);
-        }
-        let z = a + 0.5 * b
-            + if bo { 0.8 } else { -0.4 }
-            + c as f64 * 0.3
-            + if has_token0 { 1.2 } else { 0.0 }
-            + rng.normal_ms(0.0, 0.3);
-        if classes >= 2 {
-            let mut y = if z > 0.8 {
-                2
-            } else if z > -0.2 {
-                1
-            } else {
-                0
-            };
-            y = y.min(classes as u32 - 1);
-            // Guarantee every class appears.
-            if i < classes {
-                y = i as u32;
-            }
-            label_cat.push(y);
-        } else {
-            label_num.push(z as f32);
-        }
-    }
-    let mut columns = vec![
-        ColumnSpec::numerical("x0"),
-        ColumnSpec::numerical("x1"),
-        ColumnSpec::categorical("cat", (0..4).map(|i| format!("c{i}")).collect()),
-        ColumnSpec::boolean("flag"),
-    ];
-    let mut data = vec![
-        ColumnData::Numerical(x0),
-        ColumnData::Numerical(x1),
-        ColumnData::Categorical(cat),
-        ColumnData::Boolean(boo),
-    ];
-    if with_catset {
-        columns.push(ColumnSpec::catset("tokens", (0..5).map(|i| format!("t{i}")).collect()));
-        data.push(ColumnData::CategoricalSet { offsets: cs_offsets, values: cs_values });
-    }
-    if classes >= 2 {
-        columns.push(ColumnSpec::categorical(
-            "label",
-            (0..classes).map(|i| format!("y{i}")).collect(),
-        ));
-        data.push(ColumnData::Categorical(label_cat));
-    } else {
-        columns.push(ColumnSpec::numerical("label"));
-        data.push(ColumnData::Numerical(label_num));
-    }
-    Dataset::new(DataSpec { columns }, data).unwrap()
 }
 
 /// Asserts one engine agrees with the model (== NaiveEngine) on the
@@ -540,6 +450,179 @@ fn prop_simd_lanes_match_scalar() {
     cfg.num_trees = 5;
     let model = ydf::learner::GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
     check_simd_bitwise(|simd| flat_with(model.as_ref(), simd), &ds, "oblique-gbt/flat");
+}
+
+/// The serving session's JSON request decode is pinned against columnar
+/// ground truth built independently of the decoder: NaN/missing values in
+/// every semantic, out-of-dictionary categoricals, categorical-set
+/// columns (array and string forms, empty-vs-missing, dropped unknown
+/// tokens), numeric strings, and unknown/extra JSON keys (including the
+/// label) which must error without touching the block.
+#[test]
+fn prop_session_decode_round_trips_columnar_ground_truth() {
+    use ydf::dataset::{MISSING_BOOL, MISSING_CAT};
+    use ydf::learner::gbt::GbtConfig;
+    use ydf::learner::{GradientBoostedTreesLearner, Learner};
+    use ydf::serving::Session;
+    use ydf::utils::json::Json;
+
+    run_cases(0xD0DE, 4, |rng, case| {
+        let n = 60 + rng.uniform_usize(60);
+        let ds = mixed_ds(n, 2, rng);
+        let mut cfg = GbtConfig::new("label");
+        cfg.num_trees = 3;
+        cfg.max_depth = 3;
+        let session =
+            Session::new(GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap());
+        let mut block = session.new_block();
+
+        let m = 50 + rng.uniform_usize(30);
+        let mut exp_x0: Vec<f32> = Vec::new();
+        let mut exp_cat: Vec<u32> = Vec::new();
+        let mut exp_flag: Vec<u8> = Vec::new();
+        let mut exp_sets: Vec<Vec<u32>> = Vec::new();
+        for _ in 0..m {
+            let mut row = Json::obj();
+            // x0 — numbers in eighths are exact in f32, f64 and decimal,
+            // so every representation (number, numeric string, padded
+            // string) must decode to the same bits.
+            let v = (rng.uniform_usize(2001) as f64 - 1000.0) / 8.0;
+            match rng.uniform_usize(5) {
+                0 => exp_x0.push(f32::NAN), // absent
+                1 => {
+                    row.set("x0", Json::Null);
+                    exp_x0.push(f32::NAN);
+                }
+                2 => {
+                    row.set("x0", Json::Num(v));
+                    exp_x0.push(v as f32);
+                }
+                3 => {
+                    row.set("x0", Json::Str(format!("{v}")));
+                    exp_x0.push(v as f32);
+                }
+                _ => {
+                    row.set("x0", Json::Str(format!("  {v} ")));
+                    exp_x0.push(v as f32);
+                }
+            }
+            // x1 stays absent in every row: an always-missing column.
+            match rng.uniform_usize(4) {
+                0 => exp_cat.push(MISSING_CAT), // absent
+                1 => {
+                    row.set("cat", Json::Null);
+                    exp_cat.push(MISSING_CAT);
+                }
+                2 => {
+                    let k = rng.uniform_usize(4);
+                    row.set("cat", Json::Str(format!("c{k}")));
+                    exp_cat.push(k as u32);
+                }
+                _ => {
+                    // Out-of-dictionary category decodes to missing,
+                    // mirroring dataspec encoding at training time.
+                    row.set("cat", Json::Str("definitely-not-in-dict".to_string()));
+                    exp_cat.push(MISSING_CAT);
+                }
+            }
+            match rng.uniform_usize(5) {
+                0 => exp_flag.push(MISSING_BOOL),
+                1 => {
+                    row.set("flag", Json::Null);
+                    exp_flag.push(MISSING_BOOL);
+                }
+                2 => {
+                    let b = rng.bernoulli(0.5);
+                    row.set("flag", Json::Bool(b));
+                    exp_flag.push(b as u8);
+                }
+                3 => {
+                    let b = rng.bernoulli(0.5);
+                    row.set("flag", Json::Num(b as u8 as f64));
+                    exp_flag.push(b as u8);
+                }
+                _ => {
+                    let b = rng.bernoulli(0.5);
+                    row.set(
+                        "flag",
+                        Json::Str(if b { "true" } else { "0" }.to_string()),
+                    );
+                    exp_flag.push(b as u8);
+                }
+            }
+            match rng.uniform_usize(5) {
+                0 => exp_sets.push(vec![MISSING_CAT]), // absent = missing set
+                1 => {
+                    row.set("tokens", Json::Null);
+                    exp_sets.push(vec![MISSING_CAT]);
+                }
+                2 => {
+                    // Empty set is distinct from a missing set.
+                    row.set("tokens", Json::Arr(vec![]));
+                    exp_sets.push(vec![]);
+                }
+                3 => {
+                    // Array form; unknown tokens are dropped in place.
+                    let a = rng.uniform_usize(5);
+                    let b = rng.uniform_usize(5);
+                    row.set(
+                        "tokens",
+                        Json::Arr(vec![
+                            Json::Str(format!("t{a}")),
+                            Json::Str("zzz-not-a-token".to_string()),
+                            Json::Str(format!("t{b}")),
+                        ]),
+                    );
+                    exp_sets.push(vec![a as u32, b as u32]);
+                }
+                _ => {
+                    // Whitespace-separated string form, duplicates kept.
+                    let a = rng.uniform_usize(5);
+                    row.set("tokens", Json::Str(format!("t{a} junk t{a}")));
+                    exp_sets.push(vec![a as u32, a as u32]);
+                }
+            }
+            session.decode_row(&mut block, &row).unwrap();
+        }
+
+        // Unknown/extra keys and the label are rejected without touching
+        // the block.
+        let before = block.rows();
+        let mut extra = Json::obj();
+        extra.set("x0", Json::Num(1.0)).set("extra_key", Json::Num(2.0));
+        let err = session.decode_row(&mut block, &extra).unwrap_err();
+        assert!(err.contains("extra_key"), "case {case}: {err}");
+        let mut labeled = Json::obj();
+        labeled.set("label", Json::Str("y0".into()));
+        let err = session.decode_row(&mut block, &labeled).unwrap_err();
+        assert!(err.contains("label"), "case {case}: {err}");
+        assert_eq!(block.rows(), before, "failed decodes must not grow the block");
+
+        // Columnar ground truth, bit for bit.
+        let got = block.dataset();
+        let x0 = got.columns[0].as_numerical().unwrap();
+        assert_eq!(x0.len(), m);
+        for (i, (a, e)) in x0.iter().zip(&exp_x0).enumerate() {
+            assert_eq!(a.to_bits(), e.to_bits(), "case {case} x0 row {i}: {a} vs {e}");
+        }
+        let x1 = got.columns[1].as_numerical().unwrap();
+        assert!(x1.iter().all(|v| v.is_nan()), "absent x1 must be all-NaN");
+        assert_eq!(got.columns[2].as_categorical().unwrap(), exp_cat.as_slice());
+        assert_eq!(got.columns[3].as_boolean().unwrap(), exp_flag.as_slice());
+        match &got.columns[4] {
+            ColumnData::CategoricalSet { offsets, values } => {
+                assert_eq!(offsets.len(), m + 1);
+                for i in 0..m {
+                    let s = &values[offsets[i] as usize..offsets[i + 1] as usize];
+                    assert_eq!(s, exp_sets[i].as_slice(), "case {case} tokens row {i}");
+                }
+            }
+            _ => panic!("tokens column must be a categorical set"),
+        }
+        // The decoded block also scores through the engine batch path.
+        let out = session.predict_block(&mut block);
+        assert_eq!(out.len(), m * session.output_dim());
+    });
 }
 
 #[test]

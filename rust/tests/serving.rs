@@ -1,55 +1,23 @@
 //! Serving-runtime integration tests: the batcher's coalescing is
 //! bit-identical to one `predict_batch` over the same rows, the bounded
-//! queue rejects instead of blocking, and the TCP server answers the
-//! wire protocol end to end on a loopback socket.
+//! queue rejects instead of blocking, shutdown racing queue-full
+//! submitters stays clean, two models served concurrently stay
+//! bit-identical to their offline batch outputs, and the TCP server
+//! answers the multi-model wire protocol end to end on a loopback socket.
 
+mod common;
+
+use common::{adult_json_rows, adult_session, decode_all};
 use std::sync::Arc;
 use std::time::Duration;
-use ydf::dataset::synthetic;
 use ydf::inference::BLOCK_SIZE;
-use ydf::learner::gbt::GbtConfig;
-use ydf::learner::{GradientBoostedTreesLearner, Learner};
-use ydf::serving::{Batcher, BatcherConfig, RowBlock, Session, SubmitError};
+use ydf::serving::{Batcher, BatcherConfig, Registry, Session, SubmitError};
 use ydf::utils::json::Json;
 
 /// A trained adult-like session plus JSON rows for `n` requests covering
-/// NaN/missing features: every 7th row drops `age` (numerical missing)
-/// and every 5th row carries an out-of-dictionary `workclass`.
+/// NaN/missing features and out-of-dictionary categoricals.
 fn session_and_rows(n: usize, seed: u64) -> (Arc<Session>, Vec<String>) {
-    let ds = synthetic::adult_like(400, seed);
-    let mut cfg = GbtConfig::new("income");
-    cfg.num_trees = 6;
-    cfg.max_depth = 4;
-    let session =
-        Arc::new(Session::new(GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap()));
-    let workclasses = ["Private", "Self-emp-inc", "Federal-gov", "Moon-base"];
-    let educations = ["HS-grad", "Bachelors", "Masters", "Doctorate"];
-    let rows: Vec<String> = (0..n)
-        .map(|i| {
-            let age = if i % 7 == 0 {
-                "null".to_string() // missing numerical -> NaN
-            } else {
-                format!("{}", 18 + (i * 13) % 60)
-            };
-            format!(
-                r#"{{"age": {age}, "hours_per_week": {}, "workclass": "{}",
-                    "education": "{}", "capital_gain": {}}}"#,
-                20 + (i * 7) % 50,
-                workclasses[i % workclasses.len()], // i%4==3 -> OOD
-                educations[(i / 3) % educations.len()],
-                (i % 11) * 500,
-            )
-        })
-        .collect();
-    (session, rows)
-}
-
-fn decode_all(session: &Session, rows: &[String]) -> RowBlock {
-    let mut block = session.new_block();
-    for r in rows {
-        session.decode_row(&mut block, &Json::parse(r).unwrap()).unwrap();
-    }
-    block
+    (adult_session(400, seed, 6, 4), adult_json_rows(n))
 }
 
 /// N concurrent requests (mixed sizes, unaligned tails, NaN/missing and
@@ -81,9 +49,11 @@ fn concurrent_coalesced_requests_match_single_predict_batch() {
             Arc::clone(&session),
             BatcherConfig {
                 // Vary the flush policy across trials: deadline-driven,
-                // adaptive (drain-when-free), and threshold-driven.
+                // adaptive (drain-when-free), and threshold-driven. The
+                // third trial also forces multi-threaded flush scoring.
                 max_delay: Duration::from_micros([500, 0, 2000][trial]),
                 flush_rows: [BLOCK_SIZE, BLOCK_SIZE, 2 * BLOCK_SIZE][trial],
+                score_threads: [1, 1, 3][trial],
                 ..Default::default()
             },
         );
@@ -129,6 +99,7 @@ fn full_queue_rejects_instead_of_blocking() {
             flush_rows: BLOCK_SIZE,
             max_delay: Duration::from_secs(60),
             max_queue_rows: 10,
+            ..Default::default()
         },
     );
     assert_eq!(batcher.capacity_rows(), 10);
@@ -161,18 +132,158 @@ fn full_queue_rejects_instead_of_blocking() {
     }
 }
 
-/// End-to-end over loopback TCP: requests, commands, malformed input,
-/// and shutdown through the real server loop.
+/// Stress: submitters hammering a tiny queue (driving it into
+/// `QueueFull`) racing an explicit shutdown. Every outcome must be clean
+/// — accepted requests are drained and answered, rejected ones got an
+/// immediate error, and after shutdown every submitter observes
+/// `SubmitError::Shutdown`. No panic, no hang, no lost waiter.
+#[test]
+fn shutdown_races_queue_full_rejection() {
+    let (session, rows) = session_and_rows(4, 59);
+    let batcher = Arc::new(Batcher::new(
+        Arc::clone(&session),
+        BatcherConfig {
+            // Unreachable flush threshold + far deadline: the queue fills
+            // and stays full until the shutdown drain, so submitters are
+            // bouncing off QueueFull at the moment shutdown lands.
+            flush_rows: 64 * BLOCK_SIZE,
+            max_delay: Duration::from_secs(60),
+            max_queue_rows: 16,
+            ..Default::default()
+        },
+    ));
+    let dim = session.output_dim();
+    let barrier = Arc::new(std::sync::Barrier::new(9));
+    let mut handles = Vec::new();
+    for t in 0..8u64 {
+        let batcher = Arc::clone(&batcher);
+        let session = Arc::clone(&session);
+        let barrier = Arc::clone(&barrier);
+        let row = rows[(t % 4) as usize].clone();
+        handles.push(std::thread::spawn(move || {
+            let block = decode_all(&session, &[row]);
+            barrier.wait();
+            let (mut accepted, mut full) = (0u32, 0u32);
+            // Waiting is deferred: the queue only drains at shutdown, so
+            // waiting inline would park every submitter after its first
+            // accept and the queue would never fill.
+            let mut pendings = Vec::new();
+            loop {
+                match batcher.submit(&block) {
+                    Ok(pending) => {
+                        accepted += 1;
+                        pendings.push(pending);
+                    }
+                    Err(SubmitError::QueueFull { .. }) => full += 1,
+                    Err(SubmitError::Shutdown) => break,
+                    Err(e) => panic!("unexpected submit error: {e}"),
+                }
+                std::thread::yield_now();
+            }
+            for pending in pendings {
+                // Accepted before shutdown: scored by the drain pass,
+                // never left hanging.
+                let out = pending.wait().expect("accepted requests are drained");
+                assert_eq!(out.len(), dim);
+            }
+            (accepted, full)
+        }));
+    }
+    barrier.wait();
+    // Pull the plug only once the queue has demonstrably filled (a
+    // rejection was recorded): the shutdown is then guaranteed to race
+    // live queue-full bouncing, deterministically, on any scheduler.
+    let t0 = std::time::Instant::now();
+    while batcher.stats().snapshot().rejected == 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "queue never filled: submitters stalled"
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    batcher.shutdown();
+    let mut total_accepted = 0u32;
+    let mut total_full = 0u32;
+    for h in handles {
+        let (a, f) = h.join().expect("no submitter panics");
+        total_accepted += a;
+        total_full += f;
+    }
+    // The 16-row queue accepted exactly its capacity in single-row
+    // requests before jamming; everyone else bounced until shutdown.
+    assert_eq!(total_accepted, 16, "accepted {total_accepted}");
+    assert!(total_full > 0, "the queue never filled — the race never happened");
+    assert_eq!(batcher.stats().snapshot().rejected as u32, total_full);
+}
+
+/// Two models served concurrently through one registry: interleaved
+/// requests coalesce only with same-model rows, and every response is
+/// bit-identical to that model's own single offline `predict_block`.
+#[test]
+fn two_models_served_concurrently_stay_bit_identical() {
+    let rows = adult_json_rows(120);
+    let mut registry = Registry::new(BatcherConfig {
+        max_delay: Duration::from_micros(300),
+        score_threads: 2,
+        ..Default::default()
+    });
+    // Different seeds, tree counts and depths: two genuinely different
+    // models behind one registry.
+    registry.register("a", common::adult_session_owned(300, 61, 5, 4)).unwrap();
+    registry.register("b", common::adult_session_owned(350, 67, 8, 3)).unwrap();
+    // Offline references scored through the registry's own sessions —
+    // the exact models the batchers will serve.
+    let references: Vec<Vec<f64>> = ["a", "b"]
+        .iter()
+        .map(|name| {
+            let (_, entry) = registry.resolve(Some(name)).unwrap();
+            let mut block = decode_all(entry.session(), &rows);
+            entry.session().predict_block(&mut block)
+        })
+        .collect();
+    let registry = Arc::new(registry);
+
+    // 8 clients, alternating models, each sending 15 eight-row requests.
+    std::thread::scope(|scope| {
+        for client in 0..8usize {
+            let registry = Arc::clone(&registry);
+            let rows = &rows;
+            let references = &references;
+            scope.spawn(move || {
+                let model = client % 2;
+                let name = if model == 0 { "a" } else { "b" };
+                let (_, entry) = registry.resolve(Some(name)).unwrap();
+                let dim = entry.session().output_dim();
+                for req in 0..15usize {
+                    let start = (client * 15 + req) * 8 % (rows.len() - 8);
+                    let block = decode_all(entry.session(), &rows[start..start + 8]);
+                    let out = entry.batcher().submit(&block).unwrap().wait().unwrap();
+                    let expected = &references[model][start * dim..(start + 8) * dim];
+                    assert_eq!(out.as_slice(), expected, "client {client} req {req}");
+                }
+            });
+        }
+    });
+    let j = registry.stats_json();
+    let models = j.req("models").unwrap();
+    assert!(models.req("a").unwrap().req_f64("batches").unwrap() >= 1.0);
+    assert!(models.req("b").unwrap().req_f64("batches").unwrap() >= 1.0);
+}
+
+/// End-to-end over loopback TCP: multi-model routing, per-model stats,
+/// unknown-model errors on a surviving connection, malformed input, and
+/// shutdown through the real server loop.
 #[test]
 fn tcp_server_round_trip() {
     use std::io::{BufRead, BufReader, Write};
     use std::net::TcpStream;
 
-    let ds = synthetic::adult_like(200, 53);
-    let mut cfg = GbtConfig::new("income");
-    cfg.num_trees = 3;
-    cfg.max_depth = 3;
-    let session = Session::new(GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap());
+    let mut registry = Registry::new(BatcherConfig {
+        max_delay: Duration::ZERO,
+        ..Default::default()
+    });
+    registry.register("alpha", common::adult_session_owned(200, 53, 3, 3)).unwrap();
+    registry.register("beta", common::adult_session_owned(200, 54, 5, 3)).unwrap();
 
     // The stdout "listening on <addr>" contract is covered by the smoke
     // test; here we pre-bind to learn a free loopback port, release it,
@@ -181,12 +292,8 @@ fn tcp_server_round_trip() {
     let addr = probe.local_addr().unwrap();
     drop(probe);
 
-    let config = ydf::serving::ServerConfig {
-        addr: addr.to_string(),
-        workers: 2,
-        batcher: BatcherConfig { max_delay: Duration::ZERO, ..Default::default() },
-    };
-    let server = std::thread::spawn(move || ydf::serving::serve(session, &config));
+    let config = ydf::serving::ServerConfig { addr: addr.to_string(), workers: 2 };
+    let server = std::thread::spawn(move || ydf::serving::serve(registry, &config));
 
     // Wait for the listener to come up.
     let mut stream = None;
@@ -213,12 +320,17 @@ fn tcp_server_round_trip() {
     let health = rpc(r#"{"cmd": "health"}"#);
     assert_eq!(health.get("ok"), Some(&Json::Bool(true)));
     assert_eq!(health.req_str("model_type").unwrap(), "GRADIENT_BOOSTED_TREES");
+    assert_eq!(health.req_str("model").unwrap(), "alpha"); // default model
+    assert_eq!(health.req_arr("models").unwrap().len(), 2);
 
-    let spec = rpc(r#"{"cmd": "spec"}"#);
+    let spec = rpc(r#"{"cmd": "spec", "model": "beta"}"#);
     assert_eq!(spec.req_str("label").unwrap(), "income");
+    assert_eq!(spec.req_str("model").unwrap(), "beta");
     assert_eq!(spec.req_arr("features").unwrap().len(), 8);
 
+    // Un-routed requests go to the default model.
     let single = rpc(r#"{"age": 44, "education": "Masters"}"#);
+    assert_eq!(single.req_str("model").unwrap(), "alpha");
     let preds = single.req_arr("predictions").unwrap();
     assert_eq!(preds.len(), 1);
     let p0 = preds[0].as_arr().unwrap();
@@ -226,17 +338,41 @@ fn tcp_server_round_trip() {
     let total: f64 = p0.iter().map(|v| v.as_f64().unwrap()).sum();
     assert!((total - 1.0).abs() < 1e-9);
 
+    // Routed requests hit the named model (the two models disagree).
+    let via_a = rpc(r#"{"model": "alpha", "rows": [{"age": 44, "education": "Masters"}]}"#);
+    let via_b = rpc(r#"{"model": "beta", "rows": [{"age": 44, "education": "Masters"}]}"#);
+    assert_eq!(via_b.req_str("model").unwrap(), "beta");
+    assert_eq!(
+        via_a.req_arr("predictions").unwrap().len(),
+        via_b.req_arr("predictions").unwrap().len()
+    );
+    assert_eq!(via_a.req_arr("predictions").unwrap()[0], single.req_arr("predictions").unwrap()[0]);
+
     let multi = rpc(r#"{"rows": [{"age": 23}, {"age": 67, "workclass": "Private"}, {}]}"#);
     assert_eq!(multi.req_arr("predictions").unwrap().len(), 3);
+
+    // Unknown model: clean in-band error — and the connection survives
+    // (the very next request on the same socket is answered).
+    let unknown_model = rpc(r#"{"model": "gamma", "rows": [{"age": 30}]}"#);
+    let err = unknown_model.req_str("error").unwrap();
+    assert!(err.contains("gamma") && err.contains("alpha"), "{err}");
+    let after = rpc(r#"{"age": 30}"#);
+    assert_eq!(after.req_arr("predictions").unwrap().len(), 1);
 
     let bad = rpc("this is not json");
     assert!(bad.req_str("error").unwrap().contains("invalid JSON"), "{bad}");
     let unknown = rpc(r#"{"rows": [{"flux_capacitance": 1.21}]}"#);
     assert!(unknown.req_str("error").unwrap().contains("flux_capacitance"), "{unknown}");
 
+    // Per-model stats: aggregate at the top level, breakdown under
+    // "models".
     let stats = rpc(r#"{"cmd": "stats"}"#);
-    assert!(stats.req_f64("requests").unwrap() >= 2.0);
-    assert!(stats.req_f64("errors").unwrap() >= 2.0);
+    assert!(stats.req_f64("requests").unwrap() >= 5.0);
+    assert!(stats.req_f64("errors").unwrap() >= 3.0);
+    let models = stats.req("models").unwrap();
+    assert!(models.req("alpha").unwrap().req_f64("requests").unwrap() >= 4.0);
+    assert_eq!(models.req("beta").unwrap().req_f64("requests").unwrap(), 1.0);
+    assert_eq!(models.req("beta").unwrap().req_f64("errors").unwrap(), 0.0);
 
     // An idle connection that never sends anything must not stall
     // shutdown: the server closes registered connections on exit.

@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
-# Serving smoke test (`make serve-smoke`): train a tiny model, start
-# `ydf serve` on an ephemeral port, fire single-row / multi-row /
-# malformed requests plus the command set, check every response, and shut
-# the server down through the protocol. Exits non-zero on any mismatch.
+# Serving smoke test (`make serve-smoke`): train two models (GBT + RF),
+# serve both behind one ephemeral port, and drive the multi-model wire
+# protocol end to end: routed and default requests bit-identical to each
+# model's offline `ydf predict` output, per-model stats, unknown-model
+# and malformed-input error replies on a surviving connection, protocol
+# shutdown. Exits non-zero on any mismatch.
 set -euo pipefail
 
 BIN=${BIN:-./target/release/ydf}
@@ -19,14 +21,24 @@ cleanup() {
 }
 trap cleanup EXIT
 
-echo "serve-smoke: training a tiny model"
+echo "serve-smoke: training two tiny models (GBT + RF)"
 "$BIN" synth --name=Iris --output=csv:"$TMP/iris.csv" >/dev/null
 "$BIN" train --dataset=csv:"$TMP/iris.csv" --label=label \
     --learner=GRADIENT_BOOSTED_TREES --param:num_trees=5 \
-    --output="$TMP/model.json" >/dev/null
+    --output="$TMP/model_gbt.json" >/dev/null
+"$BIN" train --dataset=csv:"$TMP/iris.csv" --label=label \
+    --learner=RANDOM_FOREST --param:num_trees=7 \
+    --output="$TMP/model_rf.json" >/dev/null
 
-echo "serve-smoke: starting server on an ephemeral port"
-"$BIN" serve --model="$TMP/model.json" --port=0 --max-delay-ms=1 \
+echo "serve-smoke: computing offline batch predictions for both models"
+"$BIN" predict --dataset=csv:"$TMP/iris.csv" --model="$TMP/model_gbt.json" \
+    --output=csv:"$TMP/preds_gbt.csv" >/dev/null
+"$BIN" predict --dataset=csv:"$TMP/iris.csv" --model="$TMP/model_rf.json" \
+    --output=csv:"$TMP/preds_rf.csv" >/dev/null
+
+echo "serve-smoke: starting the two-model server on an ephemeral port"
+"$BIN" serve --model=gbt="$TMP/model_gbt.json" --model=rf="$TMP/model_rf.json" \
+    --port=0 --max-delay-ms=1 --score-threads=2 \
     >"$TMP/serve.log" 2>&1 &
 SERVER_PID=$!
 
@@ -48,10 +60,16 @@ if [ -z "$PORT" ]; then
 fi
 echo "serve-smoke: server is up on port $PORT"
 
-python3 - "$PORT" <<'EOF'
+python3 - "$PORT" "$TMP/iris.csv" "$TMP/preds_gbt.csv" "$TMP/preds_rf.csv" <<'EOF'
 import json, socket, sys
 
 port = int(sys.argv[1])
+
+def read_csv(path):
+    with open(path) as f:
+        lines = [l.rstrip("\n") for l in f if l.strip()]
+    header = lines[0].split(",")
+    return header, [l.split(",") for l in lines[1:]]
 
 def rpc(line):
     s = socket.create_connection(("127.0.0.1", port), timeout=10)
@@ -70,33 +88,74 @@ def check(cond, what):
 
 health = rpc(json.dumps({"cmd": "health"}))
 check(health.get("ok") is True, "health reports ok")
-check("engine" in health, "health names the engine")
+check(health.get("models") == ["gbt", "rf"], "health lists both models")
+check(health.get("model") == "gbt", "first registered model is the default")
 
 spec = rpc(json.dumps({"cmd": "spec"}))
-features = spec["features"]
-classes = spec["classes"]
-check(len(features) > 0 and len(classes) > 0, "spec lists features and classes")
+label = spec["label"]
+check(len(spec["features"]) > 0 and len(spec["classes"]) > 0,
+      "spec lists features and classes")
+rf_spec = rpc(json.dumps({"cmd": "spec", "model": "rf"}))
+check(rf_spec.get("model") == "rf", "spec routes by the model field")
 
-# Build a generic valid row from the served dataspec: mean-ish numbers
-# for numericals, the first dictionary entry for categoricals.
-def sample_row():
+# Request rows straight from the training CSV: every cell is sent as its
+# raw string, so the server's string->f32 parse is byte-for-byte the same
+# parse the offline CSV reader did — the predictions must then be
+# bit-identical to `ydf predict` output for the same model.
+N = 40
+header, data = read_csv(sys.argv[2])
+rows = []
+for cells in data[:N]:
     row = {}
-    for f in features:
-        if f["semantic"] == "NUMERICAL":
-            row[f["name"]] = 1.0
-        elif "dictionary" in f and f["dictionary"]:
-            row[f["name"]] = f["dictionary"][0]
-    return row
+    for name, cell in zip(header, cells):
+        if name != label and cell != "":
+            row[name] = cell
+    rows.append(row)
 
-single = rpc(json.dumps({"rows": [sample_row()]}))
-preds = single["predictions"]
-check(len(preds) == 1 and len(preds[0]) == len(classes),
-      "single-row request returns one prediction per class")
-check(abs(sum(preds[0]) - 1.0) < 1e-9, "probabilities sum to 1")
+def offline(path):
+    _, pred_rows = read_csv(path)
+    return [[float(x) for x in cells] for cells in pred_rows]
 
-multi = rpc(json.dumps({"rows": [sample_row(), {}, sample_row()]}))
-check(len(multi["predictions"]) == 3,
-      "multi-row request (incl. all-missing row) returns one prediction per row")
+offline_preds = {"gbt": offline(sys.argv[3]), "rf": offline(sys.argv[4])}
+
+for name in ("gbt", "rf"):
+    resp = rpc(json.dumps({"model": name, "rows": rows}))
+    check(resp.get("model") == name, f"response names model '{name}'")
+    preds = resp["predictions"]
+    check(len(preds) == N, f"model '{name}': one prediction per request row")
+    exact = all(
+        served == expected
+        for served, expected in zip(preds, offline_preds[name][:N])
+    )
+    check(exact, f"model '{name}': served == offline predict, bit for bit")
+
+check(offline_preds["gbt"][:N] != offline_preds["rf"][:N],
+      "the two models genuinely disagree (the routing test is meaningful)")
+
+# Requests without a "model" field go to the default model (gbt) — the
+# single-model wire protocol is preserved.
+default = rpc(json.dumps({"rows": rows[:3]}))
+check(default.get("model") == "gbt"
+      and default["predictions"] == offline_preds["gbt"][:3],
+      "default-routed request served by the first model, bit-identical")
+
+single = rpc(json.dumps(rows[0]))
+check(single.get("model") == "gbt" and len(single["predictions"]) == 1,
+      "single-row shorthand goes to the default model")
+check(abs(sum(single["predictions"][0]) - 1.0) < 1e-9, "probabilities sum to 1")
+
+# Unknown model: a clean in-band error reply, not a dropped connection —
+# the same socket answers a valid request right after.
+s = socket.create_connection(("127.0.0.1", port), timeout=10)
+f = s.makefile()
+s.sendall((json.dumps({"model": "nope", "rows": [rows[0]]}) + "\n").encode())
+err = json.loads(f.readline())
+check("nope" in err.get("error", "") and "gbt" in err.get("error", ""),
+      "unknown model gets an error naming the registered models")
+s.sendall((json.dumps({"rows": [rows[0]]}) + "\n").encode())
+again = json.loads(f.readline())
+check("predictions" in again, "connection survives an unknown-model error")
+s.close()
 
 bad = rpc("this is { not json")
 check("error" in bad, "malformed JSON answers with an in-band error")
@@ -106,8 +165,15 @@ check("no_such_feature" in unknown.get("error", ""),
       "unknown feature error names the offender")
 
 stats = rpc(json.dumps({"cmd": "stats"}))
-check(stats["requests"] >= 2, "stats counted the successful requests")
-check(stats["errors"] >= 2, "stats counted the error responses")
+check(stats["requests"] >= 5, "aggregate stats counted the requests")
+check(stats["errors"] >= 3, "aggregate stats counted the error responses")
+per_model = stats.get("models", {})
+check(per_model.get("gbt", {}).get("requests", 0) >= 4,
+      "per-model stats reported for 'gbt'")
+check(per_model.get("rf", {}).get("requests", 0) >= 1,
+      "per-model stats reported for 'rf'")
+check(per_model.get("rf", {}).get("errors", 1) == 0,
+      "errors are attributed per model, not smeared")
 
 bye = rpc(json.dumps({"cmd": "shutdown"}))
 check(bye.get("ok") is True, "shutdown acknowledged")
@@ -126,6 +192,10 @@ fi
 SERVER_PID=""
 grep -q "server stopped" "$TMP/serve.log" || {
     echo "serve-smoke: server log missing clean-stop marker" >&2
+    exit 1
+}
+grep -q "serving model 'rf'" "$TMP/serve.log" || {
+    echo "serve-smoke: server log missing the second model's startup line" >&2
     exit 1
 }
 echo "serve-smoke: PASS"
