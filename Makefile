@@ -17,6 +17,7 @@ docs:
 bench:
 	cargo bench --bench b4_engines
 	cargo bench --bench b5_serving
+	cargo bench --bench b6_training
 
 # End-to-end serving smoke: ephemeral-port server, JSON requests
 # (single-row, multi-row, malformed), protocol shutdown. Depends on

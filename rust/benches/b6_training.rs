@@ -1,0 +1,181 @@
+//! b6: training benchmark — µs per training example for the learners the
+//! training stack optimizes (PR 5: shared column index, per-thread
+//! scratch, arena partitioning, feature-parallel split search), recorded
+//! to `BENCH_training.json` so training performance is tracked across PRs
+//! exactly like `BENCH_inference.json` / `BENCH_serving.json` track the
+//! serving path.
+//!
+//! The grid (mixed numerical+categorical synthetic data, the Table 6
+//! workload shape):
+//!
+//! * `rf_{exact,hist}_t{1,4}` — Random Forest, exact in-sort vs
+//!   64-bin histogram numerical splitter, 1 vs 4 training threads
+//!   (tree-level parallelism).
+//! * `gbt_{exact,hist}_t{1,4}` — Gradient Boosted Trees, same splitter
+//!   pair, 1 vs 4 training threads (per-node feature-parallel split
+//!   search — boosting is sequential across trees).
+//!
+//! Threaded and single-threaded training are bit-identical (pinned by
+//! `rust/tests/properties.rs::prop_threaded_training_bit_identical_to_sequential`),
+//! so every `t4` row measures pure speedup; the JSON carries
+//! `speedup_vs_t1` for the cross-PR record.
+//!
+//! Run: cargo bench --bench b6_training
+//!      cargo bench --bench b6_training -- --rows=8000 --runs=5 --out=path.json
+
+use ydf::dataset::synthetic;
+use ydf::learner::gbt::GbtConfig;
+use ydf::learner::random_forest::RandomForestConfig;
+use ydf::learner::{GradientBoostedTreesLearner, Learner, RandomForestLearner};
+use ydf::splitter::NumericalSplit;
+use ydf::utils::json::Json;
+
+struct ComboResult {
+    key: String,
+    learner: &'static str,
+    splitter: &'static str,
+    threads: usize,
+    num_trees: usize,
+    us_per_example: f64,
+    train_s: f64,
+}
+
+fn time_train(learner: &dyn Learner, ds: &ydf::dataset::Dataset, runs: usize) -> f64 {
+    // Best-of-runs: training is deterministic, so the minimum is the
+    // least-noisy estimate of the true cost.
+    let mut best = f64::INFINITY;
+    for _ in 0..runs.max(1) {
+        let t0 = std::time::Instant::now();
+        let model = learner.train(ds).expect("bench training must succeed");
+        std::hint::black_box(&model);
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut rows = 4000usize;
+    let mut rf_trees = 20usize;
+    let mut gbt_trees = 30usize;
+    let mut runs = 3usize;
+    let mut threads = 4usize;
+    let mut out_path = "BENCH_training.json".to_string();
+    for a in &args {
+        if let Some(v) = a.strip_prefix("--rows=") {
+            rows = v.parse().unwrap();
+        } else if let Some(v) = a.strip_prefix("--rf-trees=") {
+            rf_trees = v.parse().unwrap();
+        } else if let Some(v) = a.strip_prefix("--gbt-trees=") {
+            gbt_trees = v.parse().unwrap();
+        } else if let Some(v) = a.strip_prefix("--runs=") {
+            runs = v.parse().unwrap();
+        } else if let Some(v) = a.strip_prefix("--threads=") {
+            threads = v.parse().unwrap();
+        } else if let Some(v) = a.strip_prefix("--out=") {
+            out_path = v.to_string();
+        }
+    }
+
+    // Mixed numerical/categorical table — the adult-like workload the
+    // inference benchmarks use, so the BENCH_* records stay comparable.
+    let ds = synthetic::adult_like(rows, 20230806);
+    eprintln!(
+        "training benchmark: {rows} rows, RF {rf_trees} trees, GBT {gbt_trees} trees, \
+         best of {runs} runs"
+    );
+
+    let splitters: [(&'static str, NumericalSplit); 2] = [
+        ("exact", NumericalSplit::ExactInSort),
+        ("hist", NumericalSplit::Histogram { bins: 64 }),
+    ];
+
+    // --threads=1 collapses the grid to the single-threaded rows instead
+    // of timing (and overwriting) every t1 combo twice.
+    let thread_grid: Vec<usize> =
+        if threads > 1 { vec![1, threads] } else { vec![1] };
+    let mut results: Vec<ComboResult> = Vec::new();
+    for (split_name, numerical) in splitters {
+        for &t in &thread_grid {
+            let mut cfg = RandomForestConfig::new("income");
+            cfg.num_trees = rf_trees;
+            cfg.compute_oob = false;
+            cfg.splitter.numerical = numerical;
+            cfg.num_threads = t;
+            let secs = time_train(&RandomForestLearner::new(cfg), &ds, runs);
+            results.push(ComboResult {
+                key: format!("rf_{split_name}_t{t}"),
+                learner: "RANDOM_FOREST",
+                splitter: split_name,
+                threads: t,
+                num_trees: rf_trees,
+                us_per_example: secs / rows as f64 * 1e6,
+                train_s: secs,
+            });
+
+            let mut cfg = GbtConfig::new("income");
+            cfg.num_trees = gbt_trees;
+            cfg.max_depth = 6;
+            cfg.splitter.numerical = numerical;
+            cfg.num_threads = t;
+            let secs = time_train(&GradientBoostedTreesLearner::new(cfg), &ds, runs);
+            results.push(ComboResult {
+                key: format!("gbt_{split_name}_t{t}"),
+                learner: "GRADIENT_BOOSTED_TREES",
+                splitter: split_name,
+                threads: t,
+                num_trees: gbt_trees,
+                us_per_example: secs / rows as f64 * 1e6,
+                train_s: secs,
+            });
+        }
+    }
+
+    let t1_us = |key_t1: &str| -> Option<f64> {
+        results.iter().find(|r| r.key == key_t1).map(|r| r.us_per_example)
+    };
+    println!("{:<16} {:>12} {:>10} {:>12}", "combo", "us/example", "train s", "speedup");
+    let mut combos = Json::obj();
+    for r in &results {
+        let speedup = if r.threads > 1 {
+            t1_us(&format!(
+                "{}_{}_t1",
+                if r.learner == "RANDOM_FOREST" { "rf" } else { "gbt" },
+                r.splitter
+            ))
+            .map(|base| base / r.us_per_example)
+        } else {
+            None
+        };
+        println!(
+            "{:<16} {:>12.3} {:>10.3} {:>12}",
+            r.key,
+            r.us_per_example,
+            r.train_s,
+            speedup.map(|s| format!("{s:.2}x")).unwrap_or_else(|| "-".to_string())
+        );
+        let mut cj = Json::obj();
+        cj.set("learner", Json::Str(r.learner.to_string()))
+            .set("splitter", Json::Str(r.splitter.to_string()))
+            .set("threads", Json::Num(r.threads as f64))
+            .set("num_trees", Json::Num(r.num_trees as f64))
+            .set("us_per_example", Json::Num(r.us_per_example))
+            .set("train_s", Json::Num(r.train_s));
+        if let Some(s) = speedup {
+            cj.set("speedup_vs_t1", Json::Num(s));
+        }
+        combos.set(&r.key, cj);
+    }
+
+    let mut j = Json::obj();
+    j.set("rows", Json::Num(rows as f64))
+        .set("rf_trees", Json::Num(rf_trees as f64))
+        .set("gbt_trees", Json::Num(gbt_trees as f64))
+        .set("runs", Json::Num(runs as f64))
+        .set("threads", Json::Num(threads as f64))
+        .set("combos", combos);
+    match std::fs::write(&out_path, j.to_string_pretty()) {
+        Ok(()) => eprintln!("wrote {out_path}"),
+        Err(e) => eprintln!("cannot write {out_path}: {e}"),
+    }
+}

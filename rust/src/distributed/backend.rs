@@ -65,7 +65,7 @@ impl Backend for ThreadBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::splitter::TrainingCache;
+    use crate::splitter::NodeScratch;
     use crate::utils::rng::Rng;
 
     fn workers(n: usize) -> Vec<WorkerState> {
@@ -73,7 +73,7 @@ mod tests {
         (0..n)
             .map(|i| WorkerState {
                 features: vec![i],
-                cache: TrainingCache::new(&ds),
+                scratch: NodeScratch::new(ds.num_rows()),
                 rng: Rng::seed_from_u64(i as u64),
             })
             .collect()

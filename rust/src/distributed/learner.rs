@@ -11,7 +11,7 @@ use crate::learner::{classification_labels, feature_columns, Learner};
 use crate::model::forest::{GbtLoss, GradientBoostedTreesModel};
 use crate::model::{Model, Task};
 use crate::splitter::score::Labels;
-use crate::splitter::TrainingCache;
+use crate::splitter::{ColumnIndex, NodeScratch};
 use crate::utils::rng::Rng;
 use crate::utils::stats::sigmoid;
 
@@ -53,11 +53,15 @@ impl<B: Backend> Learner for DistributedGbtLearner<B> {
         let n = ds.num_rows();
         let features = feature_columns(ds, label_col);
         let shards = shard_features(&features, self.num_workers);
+        // Shared read-only column index (the paper's workers each hold
+        // their shard's sort orders; here the lazily built index only ever
+        // materializes the columns a worker actually touches).
+        let index = ColumnIndex::new(ds);
         let mut workers: Vec<WorkerState> = shards
             .into_iter()
             .map(|features| WorkerState {
                 features,
-                cache: TrainingCache::new(ds),
+                scratch: NodeScratch::new(ds.num_rows()),
                 rng: Rng::seed_from_u64(cfg.seed ^ 0xD157),
             })
             .collect();
@@ -88,6 +92,7 @@ impl<B: Backend> Learner for DistributedGbtLearner<B> {
                 (0..n as u32).collect(),
                 &labels_view,
                 &mut workers,
+                &index,
                 &cfg.splitter,
                 cfg.max_depth,
                 cfg.min_examples,

@@ -21,7 +21,8 @@ use crate::dataset::Dataset;
 use crate::model::tree::{DecisionTree, Node};
 use crate::splitter::score::Labels;
 use crate::splitter::{
-    find_best_split, SplitCandidate, SplitterConfig, TrainingCache,
+    better_candidate, find_best_split, ColumnIndex, NodeScratch, SplitCandidate,
+    SplitterConfig,
 };
 use crate::utils::rng::Rng;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -78,10 +79,12 @@ pub fn delta_bit_encoded_size(partition: &[bool]) -> u64 {
     bytes.max(1)
 }
 
-/// One worker's view: its feature shard and a training cache.
+/// One worker's view: its feature shard and its private split-search
+/// scratch (the shared read-only [`ColumnIndex`] is passed to
+/// [`grow_tree_distributed`] — workers only own mutable state).
 pub struct WorkerState {
     pub features: Vec<usize>,
-    pub cache: TrainingCache,
+    pub scratch: NodeScratch,
     pub rng: Rng,
 }
 
@@ -95,6 +98,7 @@ pub fn grow_tree_distributed<B: Backend>(
     rows: Vec<u32>,
     labels: &Labels,
     workers: &mut [WorkerState],
+    index: &ColumnIndex,
     splitter: &SplitterConfig,
     max_depth: usize,
     min_examples: usize,
@@ -124,26 +128,24 @@ pub fn grow_tree_distributed<B: Backend>(
                     labels,
                     &w.features,
                     splitter,
-                    &mut w.cache,
+                    index,
+                    &mut w.scratch,
                     &mut w.rng,
                 );
                 // A proposal message: condition + gain, ~32 bytes.
                 net.record(32);
                 cand
             });
-        // Leader reduction: best gain; exact-tie gains break toward the
-        // smallest attribute index, matching the single-machine splitter's
-        // first-wins scan so distributed training is bit-exact.
+        // Leader reduction with the shared `(gain, lowest feature index)`
+        // tie-break — the same total order every worker's local reduction
+        // used, so the hierarchical reduce equals the single-machine flat
+        // reduce and distributed training is bit-exact.
         let best = proposals.into_iter().flatten().fold(
             None::<SplitCandidate>,
             |acc, c| match acc {
                 None => Some(c),
                 Some(b) => {
-                    let (ba, ca) = (
-                        b.condition.attributes().first().copied().unwrap_or(usize::MAX),
-                        c.condition.attributes().first().copied().unwrap_or(usize::MAX),
-                    );
-                    if c.gain > b.gain || (c.gain == b.gain && ca < ba) {
+                    if better_candidate(&c, &b) {
                         Some(c)
                     } else {
                         Some(b)

@@ -8,9 +8,10 @@ use crate::model::forest::RandomForestModel;
 use crate::model::tree::DecisionTree;
 use crate::model::{Model, Task};
 use crate::splitter::score::Labels;
-use crate::splitter::{SplitterConfig, TrainingCache};
+use crate::splitter::{ColumnIndex, RowArena, SplitEngine, SplitterConfig};
 use crate::utils::rng::Rng;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// CART configuration.
 #[derive(Clone, Debug)]
@@ -22,6 +23,11 @@ pub struct CartConfig {
     pub splitter: SplitterConfig,
     /// Fraction of examples used for reduced-error pruning (0 disables).
     pub pruning_ratio: f64,
+    /// Threads for the per-node split search (CART considers every
+    /// feature at every node, so the feature-parallel `SplitEngine` path
+    /// applies directly; bit-identical to single-threaded). Defaults to
+    /// [`super::train_threads`] (the `YDF_TRAIN_THREADS` override, else 1).
+    pub num_threads: usize,
     pub seed: u64,
 }
 
@@ -34,6 +40,7 @@ impl CartConfig {
             min_examples: 5,
             splitter: SplitterConfig::default(),
             pruning_ratio: 0.1,
+            num_threads: super::train_threads(),
             seed: 9876,
         }
     }
@@ -64,6 +71,7 @@ pub fn factory(
     cfg.max_depth = super::parse_param(params, "max_depth", cfg.max_depth)?;
     cfg.min_examples = super::parse_param(params, "min_examples", cfg.min_examples)?;
     cfg.seed = super::parse_param(params, "seed", cfg.seed)?;
+    cfg.num_threads = super::parse_param(params, "num_threads", cfg.num_threads)?;
     if let Some(t) = params.get("task") {
         cfg.task = match t.as_str() {
             "CLASSIFICATION" => Task::Classification,
@@ -239,10 +247,20 @@ impl Learner for CartLearner {
             growing: GrowingStrategy::Local,
             attr_sampling: AttrSampling::All,
         };
-        let mut cache = TrainingCache::new(ds);
+        let mut engine =
+            SplitEngine::new(Arc::new(ColumnIndex::new(ds)), cfg.num_threads);
+        let mut arena = RowArena::new();
         let mut rng = Rng::seed_from_u64(cfg.seed);
-        let mut tree =
-            grow_tree(ds, train_rows, &labels_view, &features, &tree_cfg, &mut cache, &mut rng);
+        let mut tree = grow_tree(
+            ds,
+            &train_rows,
+            &labels_view,
+            &features,
+            &tree_cfg,
+            &mut engine,
+            &mut arena,
+            &mut rng,
+        );
 
         if !prune_rows.is_empty() {
             prune(&mut tree, ds, &prune_rows, cfg.task, &class_labels, &reg_targets);

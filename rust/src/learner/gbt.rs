@@ -10,11 +10,13 @@ use crate::model::forest::{GbtLoss, GradientBoostedTreesModel};
 use crate::model::{Model, SelfEvaluation, Task};
 use crate::splitter::score::Labels;
 use crate::splitter::{
-    CategoricalSplit, ObliqueNormalization, SplitAxis, SplitterConfig, TrainingCache,
+    CategoricalSplit, ColumnIndex, ObliqueNormalization, RowArena, SplitAxis, SplitEngine,
+    SplitterConfig,
 };
 use crate::utils::rng::Rng;
 use crate::utils::stats::{sigmoid, softmax_in_place};
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Early-stopping policy (Appendix C.1: `early_stopping: LOSS_INCREASE`).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -47,6 +49,12 @@ pub struct GbtConfig {
     /// validation dataset is provided (§3.3).
     pub validation_ratio: f64,
     pub early_stopping: EarlyStopping,
+    /// Threads for the per-node split search (§3.10 work division across
+    /// features): tree growth is sequential by nature in boosting, but
+    /// each node's candidate features are scored in parallel. Bit-identical
+    /// to single-threaded for any value. Defaults to
+    /// [`super::train_threads`] (the `YDF_TRAIN_THREADS` override, else 1).
+    pub num_threads: usize,
     pub seed: u64,
 }
 
@@ -68,6 +76,7 @@ impl GbtConfig {
             growing: GrowingStrategy::Local,
             validation_ratio: 0.1,
             early_stopping: EarlyStopping::LossIncrease { patience: 30 },
+            num_threads: super::train_threads(),
             seed: 4321,
         }
     }
@@ -119,6 +128,7 @@ pub fn factory(
     cfg.use_hessian_gain =
         super::parse_param(params, "use_hessian_gain", cfg.use_hessian_gain)?;
     cfg.seed = super::parse_param(params, "seed", cfg.seed)?;
+    cfg.num_threads = super::parse_param(params, "num_threads", cfg.num_threads)?;
     if let Some(t) = params.get("task") {
         cfg.task = match t.as_str() {
             "CLASSIFICATION" => Task::Classification,
@@ -264,7 +274,12 @@ impl GradientBoostedTreesLearner {
             attr_sampling: cfg.attr_sampling,
         };
 
-        let mut cache = TrainingCache::new(train);
+        // One split engine (shared column index + worker pool + per-thread
+        // scratch) and one row arena for the whole boosting run: per-node
+        // and per-tree training state is reused, not reallocated.
+        let mut engine =
+            SplitEngine::new(Arc::new(ColumnIndex::new(train)), cfg.num_threads);
+        let mut arena = RowArena::new();
         let mut trees = Vec::new();
         let mut grad = vec![0.0f32; n];
         let mut hess = vec![0.0f32; n];
@@ -321,11 +336,12 @@ impl GradientBoostedTreesLearner {
                 };
                 let mut tree = grow_tree(
                     train,
-                    rows.clone(),
+                    &rows,
                     &labels_view,
                     &features,
                     &tree_cfg,
-                    &mut cache,
+                    &mut engine,
+                    &mut arena,
                     &mut rng,
                 );
                 // Bake the shrinkage into leaf values.

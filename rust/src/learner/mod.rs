@@ -114,6 +114,33 @@ pub fn feature_columns(ds: &Dataset, label_col: usize) -> Vec<usize> {
     (0..ds.num_columns()).filter(|&c| c != label_col).collect()
 }
 
+/// Default training thread count: `YDF_TRAIN_THREADS` when set to a
+/// positive integer, otherwise 1. This seeds
+/// `RandomForestConfig::num_threads` (tree-level parallelism) and
+/// `GbtConfig::num_threads` (per-node feature-parallel split search);
+/// both are bit-identical to single-threaded training, so the knob is
+/// pure throughput. A set-but-invalid value (unparsable, or `0`) falls
+/// back to 1 with a one-time warning on stderr naming the bad value —
+/// the same contract as `YDF_INFER_THREADS` on the inference side.
+pub fn train_threads() -> usize {
+    match std::env::var("YDF_TRAIN_THREADS") {
+        Ok(v) => match v.parse::<usize>() {
+            Ok(t) if t >= 1 => t,
+            _ => {
+                static WARN_ONCE: std::sync::Once = std::sync::Once::new();
+                WARN_ONCE.call_once(|| {
+                    eprintln!(
+                        "warning: ignoring YDF_TRAIN_THREADS='{v}' (expected a positive \
+                         integer); using 1 training thread"
+                    );
+                });
+                1
+            }
+        },
+        Err(_) => 1,
+    }
+}
+
 /// Binary-classification sanity guard used by GBT's binomial loss.
 pub fn require_binary(ds: &Dataset, label_col: usize) -> Result<(), String> {
     let spec = &ds.spec.columns[label_col];

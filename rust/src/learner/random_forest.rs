@@ -8,11 +8,13 @@ use crate::model::forest::RandomForestModel;
 use crate::model::{Model, SelfEvaluation, Task};
 use crate::splitter::score::Labels;
 use crate::splitter::{
-    CategoricalSplit, ObliqueNormalization, SplitAxis, SplitterConfig,
+    CategoricalSplit, ColumnIndex, ObliqueNormalization, RowArena, SplitAxis, SplitEngine,
+    SplitterConfig,
 };
 use crate::utils::pool::parallel_map;
 use crate::utils::rng::Rng;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Random Forest configuration. Defaults = Appendix C.1 "Random Forest
 /// default hyper-parameters" (categorical CART, local growth, depth 16,
@@ -33,6 +35,10 @@ pub struct RandomForestConfig {
     pub winner_take_all: bool,
     /// Compute the OOB self-evaluation (§3.6).
     pub compute_oob: bool,
+    /// Trees trained concurrently (`parallel_map` over trees; bit-identical
+    /// to sequential — per-tree seeds, order-independent assembly).
+    /// Defaults to [`super::train_threads`] (the `YDF_TRAIN_THREADS`
+    /// override, else 1).
     pub num_threads: usize,
     pub seed: u64,
 }
@@ -51,7 +57,7 @@ impl RandomForestConfig {
             bootstrap: true,
             winner_take_all: true,
             compute_oob: true,
-            num_threads: 1,
+            num_threads: super::train_threads(),
             seed: 1234,
         }
     }
@@ -93,6 +99,7 @@ pub fn factory(
     cfg.max_depth = super::parse_param(params, "max_depth", cfg.max_depth)?;
     cfg.min_examples = super::parse_param(params, "min_examples", cfg.min_examples)?;
     cfg.seed = super::parse_param(params, "seed", cfg.seed)?;
+    cfg.num_threads = super::parse_param(params, "num_threads", cfg.num_threads)?;
     cfg.winner_take_all =
         super::parse_param(params, "winner_take_all", cfg.winner_take_all)?;
     if let Some(t) = params.get("task") {
@@ -108,6 +115,7 @@ pub fn factory(
         c.num_trees = cfg.num_trees;
         c.task = cfg.task;
         c.seed = cfg.seed;
+        c.num_threads = cfg.num_threads;
         cfg = c;
     }
     Ok(Box::new(RandomForestLearner::new(cfg)))
@@ -167,6 +175,10 @@ impl Learner for RandomForestLearner {
         let mut seed_rng = Rng::seed_from_u64(cfg.seed);
         let tree_seeds: Vec<u64> = (0..cfg.num_trees).map(|_| seed_rng.next_u64()).collect();
 
+        // Shared read-only column index (sort orders / binnings built at
+        // most once across all trees and threads); each tree worker gets
+        // its own sequential split engine and row arena over it.
+        let index = Arc::new(ColumnIndex::new(ds));
         let trees_and_bags = parallel_map(cfg.num_trees, cfg.num_threads, |t| {
             let mut rng = Rng::seed_from_u64(tree_seeds[t]);
             let rows: Vec<u32> = if cfg.bootstrap {
@@ -184,9 +196,18 @@ impl Learner for RandomForestLearner {
                 }
                 Targets::Reg { targets, .. } => Labels::Regression { targets },
             };
-            let mut cache = crate::splitter::TrainingCache::new(ds);
-            let tree =
-                grow_tree(ds, rows, &labels_view, &features, &tree_cfg, &mut cache, &mut rng);
+            let mut engine = SplitEngine::sequential(Arc::clone(&index));
+            let mut arena = RowArena::new();
+            let tree = grow_tree(
+                ds,
+                &rows,
+                &labels_view,
+                &features,
+                &tree_cfg,
+                &mut engine,
+                &mut arena,
+                &mut rng,
+            );
             (tree, in_bag)
         });
 

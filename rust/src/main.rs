@@ -23,7 +23,11 @@ COMMANDS
   infer_dataspec   --dataset=csv:FILE --output=SPEC.json
   show_dataspec    --dataspec=SPEC.json [--dataset=csv:FILE]
   train            --dataset=csv:FILE --label=NAME --learner=NAME
-                   [--param:KEY=VALUE ...] --output=MODEL.json
+                   [--param:KEY=VALUE ...] [--threads=N] --output=MODEL.json
+                   (--threads: training threads — RF trains trees in
+                    parallel, GBT/CART score candidate features in
+                    parallel, LINEAR ignores it; bit-identical to
+                    --threads=1. Defaults to YDF_TRAIN_THREADS, else 1)
   show_model       --model=MODEL.json
   evaluate         --dataset=csv:FILE --model=MODEL.json
   predict          --dataset=csv:FILE --model=MODEL.json --output=csv:FILE
@@ -135,10 +139,23 @@ fn main() {
             let ds = load_dataset(req(&flags, "dataset"));
             let label = req(&flags, "label");
             let learner_name = req(&flags, "learner");
-            let params: HashMap<String, String> = flags
+            let mut params: HashMap<String, String> = flags
                 .iter()
                 .filter_map(|(k, v)| k.strip_prefix("param:").map(|p| (p.to_string(), v.clone())))
                 .collect();
+            // --threads is sugar for --param:num_threads (validated here so
+            // the error names the flag, not the hyper-parameter).
+            if let Some(t) = flags.get("threads") {
+                ok_or_die(
+                    t.parse::<usize>()
+                        .ok()
+                        .filter(|&t| t >= 1)
+                        .ok_or_else(|| {
+                            format!("--threads must be a positive integer, got '{t}'")
+                        }),
+                );
+                params.insert("num_threads".to_string(), t.clone());
+            }
             let learner = ok_or_die(create_learner(learner_name, label, &params));
             let t0 = std::time::Instant::now();
             let model = ok_or_die(learner.train(&ds));

@@ -51,6 +51,19 @@ impl Condition {
         }
     }
 
+    /// The lowest attribute index the condition tests (oblique attrs are
+    /// stored sorted). Allocation-free — this is the split tie-break key,
+    /// compared on every candidate of every node during training.
+    pub fn first_attribute(&self) -> Option<usize> {
+        match self {
+            Condition::Higher { attr, .. }
+            | Condition::ContainsBitmap { attr, .. }
+            | Condition::ContainsSetBitmap { attr, .. }
+            | Condition::IsTrue { attr } => Some(*attr),
+            Condition::Oblique { attrs, .. } => attrs.first().copied(),
+        }
+    }
+
     /// Human-readable name matching the paper's report vocabulary.
     pub fn type_name(&self) -> &'static str {
         match self {

@@ -7,6 +7,31 @@
 //! XGBoost; the histogram splitter provides LightGBM-style approximate
 //! splitting. `Auto` picks in-sorting vs pre-sorting per node, the dynamic
 //! choice §2.3 credits to the modular design.
+//!
+//! ## Training-state layering (PR 5)
+//!
+//! The split search is structured for concurrency and zero per-node
+//! allocation (§3.10's work division across features):
+//!
+//! * [`ColumnIndex`] — shared, read-only after construction: global
+//!   per-feature sort orders and histogram binnings, built lazily behind
+//!   `OnceLock`s so concurrent searchers (RF tree threads, the feature
+//!   pool) build each column at most once.
+//! * [`NodeScratch`] — per-thread mutable scratch: epoch-stamped node
+//!   membership, reusable `(value, row)` / missing-row buffers and pooled
+//!   [`score::ScoreAcc`] histograms. Splitters take
+//!   `(&ColumnIndex, &mut NodeScratch)` instead of one exclusive cache.
+//! * [`RowArena`] — one `Vec<u32>` per tree, partitioned in place (stable
+//!   pass); nodes hold `(start, len)` spans, so growing a tree performs no
+//!   per-node row-set allocation.
+//! * [`SplitEngine`] — bundles an `Arc<ColumnIndex>`, a
+//!   [`crate::utils::pool::WorkerPool`] and one `NodeScratch` per worker;
+//!   [`SplitEngine::find_best_split`] fans candidate features out across
+//!   the pool. Results are bit-identical to the sequential
+//!   [`find_best_split`]: candidates are scored independently (randomized
+//!   splitters get per-candidate seeds derived from one node seed) and
+//!   reduced with the deterministic `(gain, lowest feature index)`
+//!   tie-break.
 
 pub mod categorical;
 pub mod numerical;
@@ -15,8 +40,10 @@ pub mod score;
 
 use crate::dataset::{ColumnData, Dataset, FeatureSemantic};
 use crate::model::tree::Condition;
-use crate::utils::rng::Rng;
-use score::Labels;
+use crate::utils::pool::WorkerPool;
+use crate::utils::rng::{splitmix64, Rng};
+use score::{Labels, ScoreAcc};
+use std::sync::{Arc, OnceLock};
 
 /// A proposed split.
 #[derive(Clone, Debug)]
@@ -87,79 +114,56 @@ impl Default for SplitterConfig {
     }
 }
 
-/// Per-training caches: lazily built global sort orders and histogram bin
-/// assignments, plus node-membership scratch (epoch-stamped to avoid
-/// clearing).
-pub struct TrainingCache {
+// ---------------------------------------------------------------------------
+// ColumnIndex: shared, read-only per-feature structures.
+// ---------------------------------------------------------------------------
+
+/// Global per-feature training structures, built once per learner and
+/// shared (read-only) by every tree and every split-search thread: the
+/// pre-sorted row order and the quantile-histogram binning of each
+/// numerical column. Construction is lazy — each slot is a `OnceLock`
+/// filled on first use, so columns the splitter configuration never
+/// touches cost nothing, and concurrent first uses build exactly once.
+pub struct ColumnIndex {
     /// Per column: rows sorted by value, missing rows excluded.
-    sorted: Vec<Option<Vec<u32>>>,
-    /// Per column: (bin upper edges, per-row bin index).
-    binned: Vec<Option<(Vec<f32>, Vec<u16>)>>,
-    /// Node membership stamp per row.
-    member_epoch: Vec<u32>,
-    epoch: u32,
+    sorted: Vec<OnceLock<Vec<u32>>>,
+    /// Per column: (bin upper edges, per-row bin index). The bin count is
+    /// captured on first use (one binning per column per index — the bin
+    /// count is a per-learner constant).
+    binned: Vec<OnceLock<(Vec<f32>, Vec<u16>)>>,
     num_rows: usize,
 }
 
-impl TrainingCache {
-    pub fn new(ds: &Dataset) -> TrainingCache {
-        TrainingCache {
-            sorted: vec![None; ds.num_columns()],
-            binned: vec![None; ds.num_columns()],
-            member_epoch: vec![0; ds.num_rows()],
-            epoch: 0,
+impl ColumnIndex {
+    pub fn new(ds: &Dataset) -> ColumnIndex {
+        ColumnIndex {
+            sorted: (0..ds.num_columns()).map(|_| OnceLock::new()).collect(),
+            binned: (0..ds.num_columns()).map(|_| OnceLock::new()).collect(),
             num_rows: ds.num_rows(),
         }
     }
 
-    /// Marks `rows` as the current node; returns the epoch token and the
-    /// number of *distinct* rows stamped (fewer than `rows.len()` exactly
-    /// when `rows` contains bootstrap duplicates, which the membership
-    /// stamps cannot express).
-    fn mark_members(&mut self, rows: &[u32]) -> (u32, usize) {
-        self.epoch += 1;
-        let mut distinct = 0usize;
-        for &r in rows {
-            if self.member_epoch[r as usize] != self.epoch {
-                self.member_epoch[r as usize] = self.epoch;
-                distinct += 1;
-            }
-        }
-        (self.epoch, distinct)
+    pub fn num_rows(&self) -> usize {
+        self.num_rows
     }
 
-    #[inline]
-    fn is_member(&self, row: u32, epoch: u32) -> bool {
-        self.member_epoch[row as usize] == epoch
-    }
-
-    /// Builds the global sort order of a numerical column on first use.
-    /// Split from the accessor so callers can hold the `&self` borrow of
-    /// [`TrainingCache::sorted_order`] alongside `is_member` — the seed
-    /// cloned the full O(N) order per node to work around the `&mut`
-    /// borrow instead.
-    fn ensure_sorted(&mut self, ds: &Dataset, col: usize) {
-        if self.sorted[col].is_none() {
+    /// The global sort order of a numerical column (built on first use).
+    pub fn sorted_order(&self, ds: &Dataset, col: usize) -> &[u32] {
+        self.sorted[col].get_or_init(|| {
             let values = ds.columns[col].as_numerical().expect("presort on non-numerical");
             let mut idx: Vec<u32> =
                 (0..values.len() as u32).filter(|&r| !values[r as usize].is_nan()).collect();
             idx.sort_by(|&a, &b| {
                 values[a as usize].partial_cmp(&values[b as usize]).unwrap()
             });
-            self.sorted[col] = Some(idx);
-        }
+            idx
+        })
     }
 
-    /// Borrows the prebuilt global sort order (`ensure_sorted` first).
-    fn sorted_order(&self, col: usize) -> &[u32] {
-        self.sorted[col].as_ref().expect("ensure_sorted must be called before sorted_order")
-    }
-
-    /// Builds the histogram binning of a numerical column on first use
-    /// (same two-phase pattern as `ensure_sorted`: the seed cloned the
-    /// per-row bin assignment per node).
-    fn ensure_binned(&mut self, ds: &Dataset, col: usize, bins: usize) {
-        if self.binned[col].is_none() {
+    /// The quantile binning (bin upper edges, per-row bin index) of a
+    /// numerical column (built on first use with `bins` buckets).
+    pub fn binned_column(&self, ds: &Dataset, col: usize, bins: usize) -> (&[f32], &[u16]) {
+        let b = self.binned[col].get_or_init(|| {
             let values = ds.columns[col].as_numerical().expect("binning non-numerical");
             let mut sorted: Vec<f32> =
                 values.iter().copied().filter(|v| !v.is_nan()).collect();
@@ -185,23 +189,323 @@ impl TrainingCache {
                 .iter()
                 .map(|&v| if v.is_nan() { u16::MAX } else { bin_of(v) })
                 .collect();
-            self.binned[col] = Some((edges, assigned));
-        }
-    }
-
-    /// Borrows the prebuilt (bin edges, per-row bin index) of a column
-    /// (`ensure_binned` first).
-    fn binned_column(&self, col: usize) -> (&[f32], &[u16]) {
-        let b =
-            self.binned[col].as_ref().expect("ensure_binned must be called before binned_column");
+            (edges, assigned)
+        });
         (b.0.as_slice(), b.1.as_slice())
     }
 }
 
-/// Finds the best split over the candidate columns.
+// ---------------------------------------------------------------------------
+// NodeScratch: per-thread reusable buffers.
+// ---------------------------------------------------------------------------
+
+/// Per-thread split-search scratch. Buffers grow to the largest node seen
+/// and are reused for every subsequent candidate, so the steady-state
+/// split search allocates nothing. One `NodeScratch` must not be shared
+/// across concurrent searches; [`SplitEngine`] owns one per worker.
+pub struct NodeScratch {
+    /// Node membership stamp per row (epoch-stamped to avoid clearing).
+    member_epoch: Vec<u32>,
+    epoch: u32,
+    /// Reusable (value, row) pairs of the numerical splitters and the
+    /// oblique projection buffer.
+    pub(crate) pairs: Vec<(f32, u32)>,
+    /// Reusable missing-row buffer of the numerical splitters.
+    pub(crate) missing: Vec<u32>,
+    /// Pooled per-bin accumulators of the histogram splitter.
+    pub(crate) bin_accs: Vec<ScoreAcc>,
+    pub(crate) bin_counts: Vec<usize>,
+    /// Pooled suffix accumulators (`suffix[b]` = union of bins `b..`).
+    pub(crate) suffix_accs: Vec<ScoreAcc>,
+}
+
+impl NodeScratch {
+    pub fn new(num_rows: usize) -> NodeScratch {
+        NodeScratch {
+            member_epoch: vec![0; num_rows],
+            epoch: 0,
+            pairs: Vec::new(),
+            missing: Vec::new(),
+            bin_accs: Vec::new(),
+            bin_counts: Vec::new(),
+            suffix_accs: Vec::new(),
+        }
+    }
+
+    /// Marks `rows` as the current node; returns the epoch token and the
+    /// number of *distinct* rows stamped (fewer than `rows.len()` exactly
+    /// when `rows` contains bootstrap duplicates, which the membership
+    /// stamps cannot express).
+    pub(crate) fn mark_members(&mut self, rows: &[u32]) -> (u32, usize) {
+        self.epoch += 1;
+        let mut distinct = 0usize;
+        for &r in rows {
+            if self.member_epoch[r as usize] != self.epoch {
+                self.member_epoch[r as usize] = self.epoch;
+                distinct += 1;
+            }
+        }
+        (self.epoch, distinct)
+    }
+
+    /// Borrow the membership stamps alongside the pair buffer (disjoint
+    /// fields; the presorted splitter filters the global order through the
+    /// stamps while pushing into the reusable pair buffer).
+    #[inline]
+    pub(crate) fn members_and_pairs(
+        &mut self,
+    ) -> (&[u32], &mut Vec<(f32, u32)>, &mut Vec<u32>) {
+        (&self.member_epoch, &mut self.pairs, &mut self.missing)
+    }
+
+    /// Prepares the pooled histogram accumulators: the first `num_bins`
+    /// bin accumulators (+ counts) and `num_bins + 1` suffix accumulators
+    /// are zeroed and type-checked against the label view. The pools keep
+    /// their high-water-mark length — columns have different deduped bin
+    /// counts, and shrinking to fit would reallocate on nearly every
+    /// candidate; callers must index only `[..num_bins]`.
+    pub(crate) fn ensure_bins(&mut self, labels: &Labels, num_bins: usize) {
+        let prepare = |accs: &mut Vec<ScoreAcc>, want: usize| {
+            if accs.first().map(|a| !a.compatible(labels)).unwrap_or(false) {
+                accs.clear();
+            }
+            for a in accs.iter_mut().take(want) {
+                a.reset();
+            }
+            while accs.len() < want {
+                accs.push(labels.new_acc());
+            }
+        };
+        prepare(&mut self.bin_accs, num_bins);
+        prepare(&mut self.suffix_accs, num_bins + 1);
+        self.bin_counts.clear();
+        self.bin_counts.resize(num_bins, 0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RowArena: per-tree row storage, partitioned in place.
+// ---------------------------------------------------------------------------
+
+/// The row set of one growing tree, partitioned in place. Nodes address
+/// their examples as `(start, len)` spans of the arena instead of owning
+/// `Vec<u32>`s, which removes the two fresh vectors `partition_rows`
+/// allocated per node (LightGBM keeps its `data_indices` the same way).
+/// The `scratch` buffer makes the partition stable — both sides keep the
+/// original relative row order, matching [`partition_rows`] exactly —
+/// and is reused across nodes and trees.
+#[derive(Default)]
+pub struct RowArena {
+    rows: Vec<u32>,
+    scratch: Vec<u32>,
+}
+
+impl RowArena {
+    pub fn new() -> RowArena {
+        RowArena::default()
+    }
+
+    /// Loads a tree's row set (bootstrap duplicates allowed), reusing the
+    /// arena's storage.
+    pub fn reset(&mut self, rows: &[u32]) {
+        self.rows.clear();
+        self.rows.extend_from_slice(rows);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// The rows of a node span.
+    pub fn span(&self, start: usize, len: usize) -> &[u32] {
+        &self.rows[start..start + len]
+    }
+
+    /// Partitions the span `[start, start+len)` in place by `condition`
+    /// (missing values follow `missing_to_positive`): positives first,
+    /// then negatives, both in their original relative order (stable).
+    /// Returns the number of positive rows. Other spans are untouched, so
+    /// disjoint open leaves (best-first growth) stay valid.
+    pub fn partition_span(
+        &mut self,
+        ds: &Dataset,
+        condition: &Condition,
+        missing_to_positive: bool,
+        start: usize,
+        len: usize,
+    ) -> usize {
+        let span = &mut self.rows[start..start + len];
+        self.scratch.clear();
+        let mut n_pos = 0usize;
+        for i in 0..span.len() {
+            let r = span[i];
+            let goes_pos =
+                condition.evaluate_ds(ds, r as usize).unwrap_or(missing_to_positive);
+            if goes_pos {
+                span[n_pos] = r;
+                n_pos += 1;
+            } else {
+                self.scratch.push(r);
+            }
+        }
+        span[n_pos..].copy_from_slice(&self.scratch);
+        n_pos
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic candidate scoring and reduction.
+// ---------------------------------------------------------------------------
+
+/// The tie-break key of a candidate: the lowest attribute index of its
+/// condition (conditions store attributes sorted; no allocation).
+fn candidate_key(c: &SplitCandidate) -> usize {
+    c.condition.first_attribute().unwrap_or(usize::MAX)
+}
+
+/// `(gain, lowest feature index)` ordering: higher gain wins; exact gain
+/// ties break toward the smaller attribute index. This makes the split
+/// choice independent of candidate scan order, which is what lets the
+/// parallel search ([`SplitEngine`]), the sequential search and the
+/// distributed leader reduction all pick the same split. (The seed's
+/// `c.gain > b.gain` kept whichever tied feature was scanned first.)
+pub fn better_candidate(c: &SplitCandidate, best: &SplitCandidate) -> bool {
+    c.gain > best.gain || (c.gain == best.gain && candidate_key(c) < candidate_key(best))
+}
+
+/// Folds one candidate result into the running best, applying the
+/// minimum-gain floor and the `(gain, lowest feature index)` order.
+fn consider(best: &mut Option<SplitCandidate>, cand: Option<SplitCandidate>) {
+    if let Some(c) = cand {
+        if c.gain > 1e-12 && best.as_ref().map(|b| better_candidate(&c, b)).unwrap_or(true) {
+            *best = Some(c);
+        }
+    }
+}
+
+/// Reduces per-candidate results (in candidate order) to the best split.
+fn reduce_candidates<I: IntoIterator<Item = Option<SplitCandidate>>>(
+    results: I,
+) -> Option<SplitCandidate> {
+    let mut best: Option<SplitCandidate> = None;
+    for cand in results {
+        consider(&mut best, cand);
+    }
+    best
+}
+
+/// Does this configuration consume randomness during split scoring?
+/// (Random categorical subsets and sparse oblique projections do; the
+/// exact splitters don't, and then `find_best_split` leaves the caller's
+/// RNG untouched — which keeps distributed and single-machine training
+/// bit-identical under the default configuration.)
+fn scoring_uses_rng(cfg: &SplitterConfig) -> bool {
+    matches!(cfg.categorical, CategoricalSplit::Random { .. })
+        || matches!(cfg.axis, SplitAxis::SparseOblique { .. })
+}
+
+/// Per-candidate RNG, derived from the node seed and a salt (the column
+/// index, or [`OBLIQUE_SALT`] for the combined oblique candidate).
+/// Candidates draw from independent streams, so scoring order — and
+/// thread count — cannot change any candidate's result.
+fn candidate_rng(node_seed: u64, salt: u64) -> Rng {
+    let mut s = node_seed ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    Rng::seed_from_u64(splitmix64(&mut s))
+}
+
+const OBLIQUE_SALT: u64 = u64::MAX;
+
+/// The work units of one node's split search: every non-oblique candidate
+/// column, plus (under sparse-oblique axes) one combined unit over all
+/// numerical candidates.
+fn split_units(
+    ds: &Dataset,
+    candidates: &[usize],
+    cfg: &SplitterConfig,
+) -> (Vec<usize>, Vec<usize>) {
+    let oblique = matches!(cfg.axis, SplitAxis::SparseOblique { .. });
+    let mut unit_cols = Vec::with_capacity(candidates.len());
+    let mut oblique_cols = Vec::new();
+    for &col in candidates {
+        if oblique && ds.spec.columns[col].semantic == FeatureSemantic::Numerical {
+            oblique_cols.push(col);
+        } else {
+            unit_cols.push(col);
+        }
+    }
+    (unit_cols, oblique_cols)
+}
+
+/// Scores one candidate column (any semantic except the combined oblique
+/// unit).
+#[allow(clippy::too_many_arguments)]
+fn eval_column(
+    ds: &Dataset,
+    col: usize,
+    rows: &[u32],
+    labels: &Labels,
+    cfg: &SplitterConfig,
+    index: &ColumnIndex,
+    scratch: &mut NodeScratch,
+    node_seed: u64,
+) -> Option<SplitCandidate> {
+    match ds.spec.columns[col].semantic {
+        FeatureSemantic::Numerical => {
+            numerical::split_numerical(ds, col, rows, labels, cfg, index, scratch)
+        }
+        FeatureSemantic::Categorical => categorical::split_categorical(
+            ds,
+            col,
+            rows,
+            labels,
+            cfg,
+            &mut candidate_rng(node_seed, col as u64),
+        ),
+        FeatureSemantic::Boolean => categorical::split_boolean(ds, col, rows, labels, cfg),
+        FeatureSemantic::CategoricalSet => {
+            categorical::split_categorical_set(ds, col, rows, labels, cfg)
+        }
+    }
+}
+
+/// Scores the combined sparse-oblique unit over the numerical candidates.
+fn eval_oblique(
+    ds: &Dataset,
+    oblique_cols: &[usize],
+    rows: &[u32],
+    labels: &Labels,
+    cfg: &SplitterConfig,
+    scratch: &mut NodeScratch,
+    node_seed: u64,
+) -> Option<SplitCandidate> {
+    match cfg.axis {
+        SplitAxis::SparseOblique { num_projections_exponent, normalization } => {
+            oblique::split_oblique(
+                ds,
+                oblique_cols,
+                rows,
+                labels,
+                cfg,
+                num_projections_exponent,
+                normalization,
+                scratch,
+                &mut candidate_rng(node_seed, OBLIQUE_SALT),
+            )
+        }
+        SplitAxis::AxisAligned => None,
+    }
+}
+
+/// Finds the best split over the candidate columns, sequentially.
 ///
 /// `rows` are the examples in the node (duplicates allowed under
-/// bootstrap); `candidates` are column indices to consider.
+/// bootstrap); `candidates` are column indices to consider. This is the
+/// single-threaded core; [`SplitEngine::find_best_split`] is the
+/// thread-parallel front end and produces bit-identical results.
 #[allow(clippy::too_many_arguments)]
 pub fn find_best_split(
     ds: &Dataset,
@@ -209,71 +513,177 @@ pub fn find_best_split(
     labels: &Labels,
     candidates: &[usize],
     cfg: &SplitterConfig,
-    cache: &mut TrainingCache,
+    index: &ColumnIndex,
+    scratch: &mut NodeScratch,
     rng: &mut Rng,
 ) -> Option<SplitCandidate> {
-    let mut best: Option<SplitCandidate> = None;
-    let mut consider = |cand: Option<SplitCandidate>, best: &mut Option<SplitCandidate>| {
-        if let Some(c) = cand {
-            if c.gain > 1e-12 && best.as_ref().map(|b| c.gain > b.gain).unwrap_or(true) {
-                *best = Some(c);
-            }
-        }
-    };
+    let node_seed = if scoring_uses_rng(cfg) { rng.next_u64() } else { 0 };
+    find_best_split_seeded(ds, rows, labels, candidates, cfg, index, scratch, node_seed)
+}
 
+#[allow(clippy::too_many_arguments)]
+fn find_best_split_seeded(
+    ds: &Dataset,
+    rows: &[u32],
+    labels: &Labels,
+    candidates: &[usize],
+    cfg: &SplitterConfig,
+    index: &ColumnIndex,
+    scratch: &mut NodeScratch,
+    node_seed: u64,
+) -> Option<SplitCandidate> {
+    // Fold each candidate as it is scored, in candidate order with the
+    // oblique unit last — the exact reduction order of the parallel
+    // path, with no per-node result buffer.
     let oblique = matches!(cfg.axis, SplitAxis::SparseOblique { .. });
-    let mut numerical_candidates = Vec::new();
+    let mut oblique_cols: Vec<usize> = Vec::new();
+    let mut best: Option<SplitCandidate> = None;
     for &col in candidates {
-        match ds.spec.columns[col].semantic {
-            FeatureSemantic::Numerical => {
-                if oblique {
-                    numerical_candidates.push(col);
-                } else {
-                    consider(
-                        numerical::split_numerical(ds, col, rows, labels, cfg, cache),
-                        &mut best,
-                    );
-                }
-            }
-            FeatureSemantic::Categorical => {
-                consider(
-                    categorical::split_categorical(ds, col, rows, labels, cfg, rng),
-                    &mut best,
-                );
-            }
-            FeatureSemantic::Boolean => {
-                consider(categorical::split_boolean(ds, col, rows, labels, cfg), &mut best);
-            }
-            FeatureSemantic::CategoricalSet => {
-                consider(
-                    categorical::split_categorical_set(ds, col, rows, labels, cfg),
-                    &mut best,
-                );
-            }
-        }
-    }
-    if oblique && !numerical_candidates.is_empty() {
-        if let SplitAxis::SparseOblique { num_projections_exponent, normalization } = cfg.axis {
+        if oblique && ds.spec.columns[col].semantic == FeatureSemantic::Numerical {
+            oblique_cols.push(col);
+        } else {
             consider(
-                oblique::split_oblique(
-                    ds,
-                    &numerical_candidates,
-                    rows,
-                    labels,
-                    cfg,
-                    num_projections_exponent,
-                    normalization,
-                    rng,
-                ),
                 &mut best,
+                eval_column(ds, col, rows, labels, cfg, index, &mut *scratch, node_seed),
             );
         }
+    }
+    if !oblique_cols.is_empty() {
+        consider(
+            &mut best,
+            eval_oblique(ds, &oblique_cols, rows, labels, cfg, scratch, node_seed),
+        );
     }
     best
 }
 
+// ---------------------------------------------------------------------------
+// SplitEngine: thread-parallel split search.
+// ---------------------------------------------------------------------------
+
+/// The split-search engine one tree grower drives: the shared
+/// [`ColumnIndex`], an optional persistent worker pool, and one
+/// [`NodeScratch`] per worker. With `threads <= 1` every call runs inline
+/// on the caller's thread; with more, candidate features are divided into
+/// contiguous chunks scattered over the pool
+/// ([`WorkerPool::run_scoped`]), each chunk scoring with its own scratch.
+/// The reduction is performed on the caller's thread in candidate order,
+/// so the result is bit-identical to [`find_best_split`] for any thread
+/// count.
+pub struct SplitEngine {
+    index: Arc<ColumnIndex>,
+    pool: Option<WorkerPool>,
+    scratches: Vec<NodeScratch>,
+}
+
+impl SplitEngine {
+    /// `threads <= 1` builds a sequential engine (no pool, one scratch).
+    pub fn new(index: Arc<ColumnIndex>, threads: usize) -> SplitEngine {
+        let threads = threads.max(1);
+        let num_rows = index.num_rows();
+        SplitEngine {
+            index,
+            pool: if threads > 1 { Some(WorkerPool::new(threads)) } else { None },
+            scratches: (0..threads).map(|_| NodeScratch::new(num_rows)).collect(),
+        }
+    }
+
+    /// Sequential engine (the common per-tree worker in a parallel RF).
+    pub fn sequential(index: Arc<ColumnIndex>) -> SplitEngine {
+        SplitEngine::new(index, 1)
+    }
+
+    pub fn index(&self) -> &ColumnIndex {
+        &self.index
+    }
+
+    pub fn num_threads(&self) -> usize {
+        self.scratches.len()
+    }
+
+    /// Finds the best split over `candidates`, fanning the per-feature
+    /// scoring out across the engine's workers when it has any.
+    pub fn find_best_split(
+        &mut self,
+        ds: &Dataset,
+        rows: &[u32],
+        labels: &Labels,
+        candidates: &[usize],
+        cfg: &SplitterConfig,
+        rng: &mut Rng,
+    ) -> Option<SplitCandidate> {
+        let node_seed = if scoring_uses_rng(cfg) { rng.next_u64() } else { 0 };
+        let (unit_cols, oblique_cols) = split_units(ds, candidates, cfg);
+        let n_units = unit_cols.len() + usize::from(!oblique_cols.is_empty());
+        // Deep-tree leaves are tiny; below this much total work the
+        // scatter/drain round trip costs more than it buys. Both paths
+        // are bit-identical, so the cutoff is pure throughput tuning.
+        const PAR_MIN_WORK: usize = 512;
+        if self.pool.is_none()
+            || n_units < 2
+            || rows.len().saturating_mul(n_units) < PAR_MIN_WORK
+        {
+            return find_best_split_seeded(
+                ds,
+                rows,
+                labels,
+                candidates,
+                cfg,
+                &self.index,
+                &mut self.scratches[0],
+                node_seed,
+            );
+        }
+
+        let mut results: Vec<Option<SplitCandidate>> = Vec::new();
+        results.resize_with(n_units, || None);
+        let chunk = n_units.div_ceil(self.scratches.len());
+        let index: &ColumnIndex = &self.index;
+        let unit_cols_ref: &[usize] = &unit_cols;
+        let oblique_cols_ref: &[usize] = &oblique_cols;
+        let mut jobs = Vec::with_capacity(n_units.div_ceil(chunk));
+        for ((out_chunk, scratch), start) in results
+            .chunks_mut(chunk)
+            .zip(self.scratches.iter_mut())
+            .zip((0..n_units).step_by(chunk))
+        {
+            jobs.push(move || {
+                for (j, slot) in out_chunk.iter_mut().enumerate() {
+                    let u = start + j;
+                    *slot = if u < unit_cols_ref.len() {
+                        eval_column(
+                            ds,
+                            unit_cols_ref[u],
+                            rows,
+                            labels,
+                            cfg,
+                            index,
+                            &mut *scratch,
+                            node_seed,
+                        )
+                    } else {
+                        eval_oblique(
+                            ds,
+                            oblique_cols_ref,
+                            rows,
+                            labels,
+                            cfg,
+                            &mut *scratch,
+                            node_seed,
+                        )
+                    };
+                }
+            });
+        }
+        self.pool.as_ref().expect("pool checked above").run_scoped(jobs);
+        reduce_candidates(results)
+    }
+}
+
 /// Partitions `rows` into (positive, negative) according to a condition,
-/// applying the missing policy.
+/// applying the missing policy. The growers use [`RowArena`] spans
+/// instead; this allocating form remains for the distributed leader (the
+/// broadcast wants owned vectors) and as the arena's reference semantics.
 pub fn partition_rows(
     ds: &Dataset,
     rows: &[u32],
@@ -370,18 +780,21 @@ pub(crate) fn scan_sorted_pairs(
 }
 
 /// Collects the non-missing (value, row) pairs and missing rows of a
-/// numerical column restricted to `rows`.
+/// numerical column restricted to `rows`, into reusable buffers (cleared
+/// first).
 pub(crate) fn collect_numerical(
     ds: &Dataset,
     col: usize,
     rows: &[u32],
-) -> (Vec<(f32, u32)>, Vec<u32>) {
+    pairs: &mut Vec<(f32, u32)>,
+    missing: &mut Vec<u32>,
+) {
     let values = match &ds.columns[col] {
         ColumnData::Numerical(v) => v,
         _ => panic!("collect_numerical on non-numerical column"),
     };
-    let mut pairs = Vec::with_capacity(rows.len());
-    let mut missing = Vec::new();
+    pairs.clear();
+    missing.clear();
     for &r in rows {
         let v = values[r as usize];
         if v.is_nan() {
@@ -390,5 +803,155 @@ pub(crate) fn collect_numerical(
             pairs.push((v, r));
         }
     }
-    (pairs, missing)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::dataspec::{ColumnSpec, DataSpec};
+
+    /// Two identical feature columns: their best splits tie exactly, and
+    /// the `(gain, lowest feature index)` rule must pick column 0 no
+    /// matter which order the candidates are scanned in.
+    fn twin_column_ds() -> (Dataset, Vec<u32>) {
+        let v = vec![1.0f32, 2.0, 3.0, 10.0, 11.0, 12.0];
+        let spec = DataSpec {
+            columns: vec![ColumnSpec::numerical("a"), ColumnSpec::numerical("b")],
+        };
+        let ds = Dataset::new(
+            spec,
+            vec![ColumnData::Numerical(v.clone()), ColumnData::Numerical(v)],
+        )
+        .unwrap();
+        (ds, vec![0, 0, 0, 1, 1, 1])
+    }
+
+    #[test]
+    fn tie_break_picks_lowest_feature_index_in_any_scan_order() {
+        let (ds, y) = twin_column_ds();
+        let labels = Labels::Classification { labels: &y, num_classes: 2 };
+        let cfg = SplitterConfig { min_examples: 1, ..Default::default() };
+        let index = ColumnIndex::new(&ds);
+        let mut scratch = NodeScratch::new(ds.num_rows());
+        let rows: Vec<u32> = (0..6).collect();
+        for candidates in [[0usize, 1], [1usize, 0]] {
+            let best = find_best_split(
+                &ds,
+                &rows,
+                &labels,
+                &candidates,
+                &cfg,
+                &index,
+                &mut scratch,
+                &mut Rng::seed_from_u64(1),
+            )
+            .unwrap();
+            match best.condition {
+                Condition::Higher { attr, .. } => {
+                    assert_eq!(attr, 0, "candidates {candidates:?} must tie-break to col 0")
+                }
+                _ => panic!("wrong condition"),
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_engine_matches_sequential_bitwise() {
+        // Big enough (rows × units ≥ the parallel cutoff) that the pooled
+        // engine really scatters; three numerical columns with noisy
+        // signal plus NaNs so the candidates have distinct gains.
+        let n = 300usize;
+        let mut rng = Rng::seed_from_u64(21);
+        let cols: Vec<Vec<f32>> = (0..3)
+            .map(|_| {
+                (0..n)
+                    .map(|_| {
+                        if rng.bernoulli(0.05) {
+                            f32::NAN
+                        } else {
+                            rng.uniform_range(-4.0, 4.0) as f32
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let y: Vec<u32> = (0..n)
+            .map(|i| {
+                let v = cols[0][i];
+                ((v.is_nan() || v > 0.0) as u32) ^ (rng.bernoulli(0.15) as u32)
+            })
+            .collect();
+        let spec = DataSpec {
+            columns: (0..3).map(|i| ColumnSpec::numerical(&format!("x{i}"))).collect(),
+        };
+        let ds = Dataset::new(
+            spec,
+            cols.into_iter().map(ColumnData::Numerical).collect(),
+        )
+        .unwrap();
+        let labels = Labels::Classification { labels: &y, num_classes: 2 };
+        let cfg = SplitterConfig { min_examples: 2, ..Default::default() };
+        let rows: Vec<u32> = (0..n as u32).collect();
+        let index = Arc::new(ColumnIndex::new(&ds));
+        let mut seq = SplitEngine::sequential(Arc::clone(&index));
+        let mut par = SplitEngine::new(index, 3);
+        assert_eq!(par.num_threads(), 3);
+        for candidates in [vec![0usize, 1, 2], vec![2usize, 1, 0], vec![1usize, 2]] {
+            let a = seq
+                .find_best_split(&ds, &rows, &labels, &candidates, &cfg, &mut Rng::seed_from_u64(7))
+                .unwrap();
+            let b = par
+                .find_best_split(&ds, &rows, &labels, &candidates, &cfg, &mut Rng::seed_from_u64(7))
+                .unwrap();
+            assert_eq!(a.gain.to_bits(), b.gain.to_bits(), "candidates {candidates:?}");
+            assert_eq!(
+                format!("{:?}", a.condition),
+                format!("{:?}", b.condition),
+                "candidates {candidates:?}"
+            );
+            assert_eq!(a.missing_to_positive, b.missing_to_positive);
+        }
+    }
+
+    #[test]
+    fn arena_partition_is_stable_and_in_place() {
+        let (ds, _y) = twin_column_ds();
+        let mut arena = RowArena::new();
+        // Duplicates (bootstrap) and unsorted order on purpose.
+        arena.reset(&[5, 0, 3, 0, 2, 4, 1, 5]);
+        let cond = Condition::Higher { attr: 0, threshold: 6.5 };
+        let (pos, neg) = partition_rows(&ds, &[5, 0, 3, 0, 2, 4, 1, 5], &cond, false);
+        let n_pos = arena.partition_span(&ds, &cond, false, 0, 8);
+        assert_eq!(arena.span(0, n_pos), pos.as_slice());
+        assert_eq!(arena.span(n_pos, 8 - n_pos), neg.as_slice());
+        assert_eq!(n_pos, 4); // rows 5,3,4,5 have values >= 6.5
+    }
+
+    #[test]
+    fn arena_partition_leaves_other_spans_untouched() {
+        let (ds, _y) = twin_column_ds();
+        let mut arena = RowArena::new();
+        arena.reset(&[0, 1, 2, 3, 4, 5]);
+        let cond = Condition::Higher { attr: 0, threshold: 6.5 };
+        // Partition only [2, 6); the prefix span must not move.
+        let n_pos = arena.partition_span(&ds, &cond, false, 2, 4);
+        assert_eq!(arena.span(0, 2), &[0, 1]);
+        assert_eq!(n_pos, 3);
+        assert_eq!(arena.span(2, 3), &[3, 4, 5]);
+        assert_eq!(arena.span(5, 1), &[2]);
+    }
+
+    #[test]
+    fn column_index_is_shared_and_lazy() {
+        let (ds, _) = twin_column_ds();
+        let index = Arc::new(ColumnIndex::new(&ds));
+        let a = index.sorted_order(&ds, 0);
+        assert_eq!(a, &[0, 1, 2, 3, 4, 5]);
+        // Same allocation on the second call (built once).
+        let b = index.sorted_order(&ds, 0);
+        assert_eq!(a.as_ptr(), b.as_ptr());
+        let (edges, assigned) = index.binned_column(&ds, 1, 4);
+        assert!(!edges.is_empty());
+        assert_eq!(assigned.len(), 6);
+    }
 }

@@ -1,11 +1,19 @@
 //! Numerical feature splitters: exact in-sorting, exact pre-sorted, the
 //! per-node automatic choice between them, and approximate histogram
 //! splitting (§3.8, §2.3).
+//!
+//! The row-proportional state is allocation-free in the steady state:
+//! `(value, row)` pairs and missing rows go into the reusable
+//! [`NodeScratch`] buffers, global sort orders and binnings come from the
+//! shared read-only [`ColumnIndex`], and the histogram's per-bin/suffix
+//! accumulators are pooled in the scratch. (A handful of O(1) score
+//! accumulators — parent/left/missing — are still built per candidate;
+//! they are constant-size, not node-size.)
 
 use super::score::{Labels, ScoreAcc};
 use super::{
-    collect_numerical, scan_sorted_pairs, NumericalSplit, SplitCandidate, SplitterConfig,
-    TrainingCache,
+    collect_numerical, scan_sorted_pairs, ColumnIndex, NodeScratch, NumericalSplit,
+    SplitCandidate, SplitterConfig,
 };
 use crate::dataset::Dataset;
 use crate::model::tree::Condition;
@@ -17,73 +25,82 @@ pub fn split_numerical(
     rows: &[u32],
     labels: &Labels,
     cfg: &SplitterConfig,
-    cache: &mut TrainingCache,
+    index: &ColumnIndex,
+    scratch: &mut NodeScratch,
 ) -> Option<SplitCandidate> {
     match cfg.numerical {
-        NumericalSplit::ExactInSort => split_insort(ds, col, rows, labels, cfg),
-        NumericalSplit::Presorted => split_presorted(ds, col, rows, labels, cfg, cache),
+        NumericalSplit::ExactInSort => split_insort(ds, col, rows, labels, cfg, scratch),
+        NumericalSplit::Presorted => {
+            split_presorted(ds, col, rows, labels, cfg, index, scratch)
+        }
         NumericalSplit::Auto => {
             // In-sorting costs n·log n on node size n; pre-sorting costs a
             // full pass over all N rows. Pick the cheaper one per node —
             // the dynamic-choice behaviour §2.3 attributes to modularity.
             let n = rows.len() as f64;
-            if n * n.log2().max(1.0) <= cache.num_rows as f64 {
-                split_insort(ds, col, rows, labels, cfg)
+            if n * n.log2().max(1.0) <= index.num_rows() as f64 {
+                split_insort(ds, col, rows, labels, cfg, scratch)
             } else {
-                split_presorted(ds, col, rows, labels, cfg, cache)
+                split_presorted(ds, col, rows, labels, cfg, index, scratch)
             }
         }
         NumericalSplit::Histogram { bins } => {
-            split_histogram(ds, col, rows, labels, cfg, cache, bins)
+            split_histogram(ds, col, rows, labels, cfg, index, scratch, bins)
         }
     }
 }
 
-/// Exact splitter, in-sorting approach: sort the node's feature values.
+/// Exact splitter, in-sorting approach: sort the node's feature values
+/// (in the reusable scratch pair buffer).
 pub fn split_insort(
     ds: &Dataset,
     col: usize,
     rows: &[u32],
     labels: &Labels,
     cfg: &SplitterConfig,
+    scratch: &mut NodeScratch,
 ) -> Option<SplitCandidate> {
-    let (mut pairs, missing) = collect_numerical(ds, col, rows);
-    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-    scan_sorted_pairs(&pairs, &missing, labels, cfg.min_examples).map(|r| SplitCandidate {
-        condition: Condition::Higher { attr: col, threshold: r.threshold },
-        gain: r.gain,
-        missing_to_positive: r.missing_to_positive,
+    collect_numerical(ds, col, rows, &mut scratch.pairs, &mut scratch.missing);
+    scratch.pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    scan_sorted_pairs(&scratch.pairs, &scratch.missing, labels, cfg.min_examples).map(|r| {
+        SplitCandidate {
+            condition: Condition::Higher { attr: col, threshold: r.threshold },
+            gain: r.gain,
+            missing_to_positive: r.missing_to_positive,
+        }
     })
 }
 
 /// Exact splitter, pre-sorting approach: reuse the global sort order of the
-/// column and filter it down to the node's rows.
+/// column and filter it down to the node's rows via the membership stamps.
 pub fn split_presorted(
     ds: &Dataset,
     col: usize,
     rows: &[u32],
     labels: &Labels,
     cfg: &SplitterConfig,
-    cache: &mut TrainingCache,
+    index: &ColumnIndex,
+    scratch: &mut NodeScratch,
 ) -> Option<SplitCandidate> {
     // Duplicated rows (bootstrap) need multiplicity, which membership
     // stamps cannot express; fall back to in-sorting in that case. The RF
     // learner does not use presorting for exactly this reason.
-    let (epoch, distinct) = cache.mark_members(rows);
+    let (epoch, distinct) = scratch.mark_members(rows);
     if distinct != rows.len() {
-        return split_insort(ds, col, rows, labels, cfg);
+        return split_insort(ds, col, rows, labels, cfg, scratch);
     }
-    cache.ensure_sorted(ds, col);
+    let order = index.sorted_order(ds, col);
     let values = ds.columns[col].as_numerical().expect("numerical column");
-    let mut pairs = Vec::with_capacity(rows.len());
-    for &r in cache.sorted_order(col) {
-        if cache.is_member(r, epoch) {
+    let (members, pairs, missing) = scratch.members_and_pairs();
+    pairs.clear();
+    for &r in order {
+        if members[r as usize] == epoch {
             pairs.push((values[r as usize], r));
         }
     }
-    let missing: Vec<u32> =
-        rows.iter().copied().filter(|&r| values[r as usize].is_nan()).collect();
-    scan_sorted_pairs(&pairs, &missing, labels, cfg.min_examples).map(|r| SplitCandidate {
+    missing.clear();
+    missing.extend(rows.iter().copied().filter(|&r| values[r as usize].is_nan()));
+    scan_sorted_pairs(pairs, missing, labels, cfg.min_examples).map(|r| SplitCandidate {
         condition: Condition::Higher { attr: col, threshold: r.threshold },
         gain: r.gain,
         missing_to_positive: r.missing_to_positive,
@@ -91,24 +108,25 @@ pub fn split_presorted(
 }
 
 /// Approximate histogram splitter (LightGBM-style): bucket values into
-/// quantile bins once, then scan per-bin statistics per node.
+/// quantile bins once (shared [`ColumnIndex`]), then scan per-bin
+/// statistics per node with pooled accumulators.
+#[allow(clippy::too_many_arguments)]
 pub fn split_histogram(
     ds: &Dataset,
     col: usize,
     rows: &[u32],
     labels: &Labels,
     cfg: &SplitterConfig,
-    cache: &mut TrainingCache,
+    index: &ColumnIndex,
+    scratch: &mut NodeScratch,
     bins: usize,
 ) -> Option<SplitCandidate> {
-    cache.ensure_binned(ds, col, bins);
-    let (edges, assignment) = cache.binned_column(col);
+    let (edges, assignment) = index.binned_column(ds, col, bins);
     if edges.is_empty() {
         return None;
     }
     let num_bins = edges.len() + 1;
-    let mut accs: Vec<ScoreAcc> = (0..num_bins).map(|_| labels.new_acc()).collect();
-    let mut bin_counts = vec![0usize; num_bins];
+    scratch.ensure_bins(labels, num_bins);
     let mut miss = labels.new_acc();
     let values = ds.columns[col].as_numerical().expect("numerical column");
     let mut sum = 0.0f64;
@@ -118,8 +136,8 @@ pub fn split_histogram(
         if b == u16::MAX {
             miss.add(labels, r as usize);
         } else {
-            accs[b as usize].add(labels, r as usize);
-            bin_counts[b as usize] += 1;
+            scratch.bin_accs[b as usize].add(labels, r as usize);
+            scratch.bin_counts[b as usize] += 1;
             sum += values[r as usize] as f64;
             n_nonmissing += 1;
         }
@@ -130,22 +148,24 @@ pub fn split_histogram(
     let mean = (sum / n_nonmissing as f64) as f32;
     let has_missing = miss.count() > 0.0;
 
+    // The pools keep their high-water-mark length (ensure_bins) — only
+    // the first `num_bins` entries belong to this column.
     let mut parent = labels.new_acc();
-    for a in &accs {
+    for a in &scratch.bin_accs[..num_bins] {
         parent.merge(a);
     }
     parent.merge(&miss);
 
     // Suffix accumulators: suffix[b] = union of bins b..num_bins, computed
-    // once so the scan is O(bins), not O(bins^2).
-    let mut suffix: Vec<ScoreAcc> = Vec::with_capacity(num_bins + 1);
-    suffix.push(labels.new_acc());
-    for a in accs.iter().rev() {
-        let mut next = suffix.last().unwrap().clone();
-        next.merge(a);
-        suffix.push(next);
+    // once so the scan is O(bins), not O(bins^2). Pooled in the scratch —
+    // filled back-to-front in place.
+    for b in (0..num_bins).rev() {
+        let (head, tail) = scratch.suffix_accs.split_at_mut(b + 1);
+        let dst = &mut head[b];
+        dst.reset();
+        dst.merge(&tail[0]);
+        dst.merge(&scratch.bin_accs[b]);
     }
-    suffix.reverse(); // suffix[b] now covers bins b..
 
     // Scan: left = bins 0..=b (values <= edges[b]), threshold just above
     // edge b. Condition is x >= t, so left is the negative branch.
@@ -153,8 +173,8 @@ pub fn split_histogram(
     let mut n_left = 0usize;
     let mut best: Option<SplitCandidate> = None;
     for b in 0..num_bins - 1 {
-        left.merge(&accs[b]);
-        n_left += bin_counts[b];
+        left.merge(&scratch.bin_accs[b]);
+        n_left += scratch.bin_counts[b];
         let n_right = n_nonmissing - n_left;
         if n_left < cfg.min_examples || n_right < cfg.min_examples {
             continue;
@@ -163,16 +183,16 @@ pub fn split_histogram(
         let missing_to_positive = mean >= threshold;
         let gain = if has_missing {
             if missing_to_positive {
-                let mut r2 = suffix[b + 1].clone();
+                let mut r2 = scratch.suffix_accs[b + 1].clone();
                 r2.merge(&miss);
                 ScoreAcc::gain(&parent, &left, &r2, labels)
             } else {
                 let mut l2 = left.clone();
                 l2.merge(&miss);
-                ScoreAcc::gain(&parent, &l2, &suffix[b + 1], labels)
+                ScoreAcc::gain(&parent, &l2, &scratch.suffix_accs[b + 1], labels)
             }
         } else {
-            ScoreAcc::gain(&parent, &left, &suffix[b + 1], labels)
+            ScoreAcc::gain(&parent, &left, &scratch.suffix_accs[b + 1], labels)
         };
         if gain > best.as_ref().map(|b| b.gain).unwrap_or(0.0) {
             best = Some(SplitCandidate {
@@ -211,13 +231,18 @@ mod tests {
         SplitterConfig { min_examples: 1, ..Default::default() }
     }
 
+    fn scratch_for(ds: &Dataset) -> NodeScratch {
+        NodeScratch::new(ds.num_rows())
+    }
+
     #[test]
     fn insort_finds_obvious_boundary() {
         let ds = ds_with(vec![1.0, 2.0, 3.0, 10.0, 11.0, 12.0]);
         let labels_data = vec![0u32, 0, 0, 1, 1, 1];
         let labels = Labels::Classification { labels: &labels_data, num_classes: 2 };
         let rows: Vec<u32> = (0..6).collect();
-        let c = split_insort(&ds, 0, &rows, &labels, &cfg()).unwrap();
+        let mut scratch = scratch_for(&ds);
+        let c = split_insort(&ds, 0, &rows, &labels, &cfg(), &mut scratch).unwrap();
         match c.condition {
             Condition::Higher { attr, threshold } => {
                 assert_eq!(attr, 0);
@@ -240,9 +265,10 @@ mod tests {
             let ds = ds_with(values);
             let labels = Labels::Classification { labels: &labels_data, num_classes: 2 };
             let rows: Vec<u32> = (0..n as u32).filter(|r| r % 3 != 0).collect();
-            let mut cache = TrainingCache::new(&ds);
-            let a = split_insort(&ds, 0, &rows, &labels, &cfg());
-            let b = split_presorted(&ds, 0, &rows, &labels, &cfg(), &mut cache);
+            let index = ColumnIndex::new(&ds);
+            let mut scratch = scratch_for(&ds);
+            let a = split_insort(&ds, 0, &rows, &labels, &cfg(), &mut scratch);
+            let b = split_presorted(&ds, 0, &rows, &labels, &cfg(), &index, &mut scratch);
             match (a, b) {
                 (Some(a), Some(b)) => {
                     assert!((a.gain - b.gain).abs() < 1e-9, "{} vs {}", a.gain, b.gain);
@@ -261,6 +287,25 @@ mod tests {
     }
 
     #[test]
+    fn presorted_with_duplicates_falls_back_to_insort() {
+        let ds = ds_with(vec![1.0, 2.0, 3.0, 10.0, 11.0, 12.0]);
+        let labels_data = vec![0u32, 0, 0, 1, 1, 1];
+        let labels = Labels::Classification { labels: &labels_data, num_classes: 2 };
+        // Bootstrap-style duplicates.
+        let rows: Vec<u32> = vec![0, 0, 1, 2, 3, 4, 5, 5];
+        let index = ColumnIndex::new(&ds);
+        let mut scratch = scratch_for(&ds);
+        let a = split_insort(&ds, 0, &rows, &labels, &cfg(), &mut scratch);
+        let b = split_presorted(&ds, 0, &rows, &labels, &cfg(), &index, &mut scratch);
+        match (a, b) {
+            (Some(a), Some(b)) => {
+                assert_eq!(a.gain.to_bits(), b.gain.to_bits());
+            }
+            other => panic!("mismatch: {other:?}"),
+        }
+    }
+
+    #[test]
     fn histogram_close_to_exact_on_separable() {
         let n = 200;
         let mut rng = Rng::seed_from_u64(9);
@@ -269,8 +314,10 @@ mod tests {
         let ds = ds_with(values);
         let labels = Labels::Classification { labels: &labels_data, num_classes: 2 };
         let rows: Vec<u32> = (0..n as u32).collect();
-        let mut cache = TrainingCache::new(&ds);
-        let c = split_histogram(&ds, 0, &rows, &labels, &cfg(), &mut cache, 64).unwrap();
+        let index = ColumnIndex::new(&ds);
+        let mut scratch = scratch_for(&ds);
+        let c =
+            split_histogram(&ds, 0, &rows, &labels, &cfg(), &index, &mut scratch, 64).unwrap();
         match c.condition {
             Condition::Higher { threshold, .. } => {
                 assert!((threshold - 0.6).abs() < 0.05, "threshold {threshold}");
@@ -280,13 +327,59 @@ mod tests {
     }
 
     #[test]
+    fn histogram_scratch_reuse_is_stable() {
+        // Two consecutive calls through the same scratch must agree bit
+        // for bit (pooled accumulators fully reset between nodes).
+        let n = 120;
+        let mut rng = Rng::seed_from_u64(13);
+        let values: Vec<f32> = (0..n)
+            .map(|_| if rng.bernoulli(0.05) { f32::NAN } else { rng.uniform_range(-3.0, 3.0) as f32 })
+            .collect();
+        let labels_data: Vec<u32> =
+            values.iter().map(|&v| (v.is_nan() || v > 0.0) as u32).collect();
+        let ds = ds_with(values);
+        let labels = Labels::Classification { labels: &labels_data, num_classes: 2 };
+        let rows: Vec<u32> = (0..n as u32).collect();
+        let index = ColumnIndex::new(&ds);
+        let mut scratch = scratch_for(&ds);
+        let a = split_histogram(&ds, 0, &rows, &labels, &cfg(), &index, &mut scratch, 16)
+            .unwrap();
+        let b = split_histogram(&ds, 0, &rows, &labels, &cfg(), &index, &mut scratch, 16)
+            .unwrap();
+        assert_eq!(a.gain.to_bits(), b.gain.to_bits());
+
+        // A low-cardinality column dedupes to fewer bins: the pool keeps
+        // its high-water length and only `[..num_bins]` may be read —
+        // results through the warm pool must match a fresh scratch.
+        let coarse: Vec<f32> = (0..n).map(|i| (i % 3) as f32).collect();
+        let labels2_data: Vec<u32> = coarse.iter().map(|&v| (v > 1.0) as u32).collect();
+        let labels2 = Labels::Classification { labels: &labels2_data, num_classes: 2 };
+        let ds2 = ds_with(coarse);
+        let index2 = ColumnIndex::new(&ds2);
+        let warm =
+            split_histogram(&ds2, 0, &rows, &labels2, &cfg(), &index2, &mut scratch, 16)
+                .unwrap();
+        let mut fresh = scratch_for(&ds2);
+        let cold =
+            split_histogram(&ds2, 0, &rows, &labels2, &cfg(), &index2, &mut fresh, 16)
+                .unwrap();
+        assert_eq!(warm.gain.to_bits(), cold.gain.to_bits());
+
+        // And back to the wide column through the same (shrunk-use) pool.
+        let c = split_histogram(&ds, 0, &rows, &labels, &cfg(), &index, &mut scratch, 16)
+            .unwrap();
+        assert_eq!(a.gain.to_bits(), c.gain.to_bits());
+    }
+
+    #[test]
     fn missing_values_follow_mean() {
         // Mean is in the high block, so missing should go positive.
         let ds = ds_with(vec![1.0, 1.5, 100.0, 101.0, 102.0, f32::NAN]);
         let labels_data = vec![0u32, 0, 1, 1, 1, 1];
         let labels = Labels::Classification { labels: &labels_data, num_classes: 2 };
         let rows: Vec<u32> = (0..6).collect();
-        let c = split_insort(&ds, 0, &rows, &labels, &cfg()).unwrap();
+        let mut scratch = scratch_for(&ds);
+        let c = split_insort(&ds, 0, &rows, &labels, &cfg(), &mut scratch).unwrap();
         assert!(c.missing_to_positive);
     }
 
@@ -296,7 +389,8 @@ mod tests {
         let labels_data = vec![0u32, 1, 0, 1, 0, 1, 0, 1, 0, 1];
         let labels = Labels::Classification { labels: &labels_data, num_classes: 2 };
         let rows: Vec<u32> = (0..10).collect();
-        assert!(split_insort(&ds, 0, &rows, &labels, &cfg()).is_none());
+        let mut scratch = scratch_for(&ds);
+        assert!(split_insort(&ds, 0, &rows, &labels, &cfg(), &mut scratch).is_none());
     }
 
     #[test]
@@ -307,7 +401,8 @@ mod tests {
         let rows: Vec<u32> = (0..4).collect();
         let mut c = cfg();
         c.min_examples = 2;
-        let best = split_insort(&ds, 0, &rows, &labels, &c).unwrap();
+        let mut scratch = scratch_for(&ds);
+        let best = split_insort(&ds, 0, &rows, &labels, &c, &mut scratch).unwrap();
         // The only legal boundary is 2|2.
         match best.condition {
             Condition::Higher { threshold, .. } => {
@@ -330,7 +425,8 @@ mod tests {
         let targets = vec![1.0f32, 1.1, 0.9, 5.0, 5.1, 4.9];
         let labels = Labels::Regression { targets: &targets };
         let rows: Vec<u32> = (0..6).collect();
-        let c = split_insort(&ds, 0, &rows, &labels, &cfg()).unwrap();
+        let mut scratch = scratch_for(&ds);
+        let c = split_insort(&ds, 0, &rows, &labels, &cfg(), &mut scratch).unwrap();
         match c.condition {
             Condition::Higher { threshold, .. } => {
                 assert!((threshold - 3.5).abs() < 1e-6)

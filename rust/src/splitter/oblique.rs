@@ -8,12 +8,16 @@
 //! stored weights so inference needs no extra state.
 
 use super::score::Labels;
-use super::{scan_sorted_pairs, ObliqueNormalization, SplitCandidate, SplitterConfig};
+use super::{
+    scan_sorted_pairs, NodeScratch, ObliqueNormalization, SplitCandidate, SplitterConfig,
+};
 use crate::dataset::{ColumnData, Dataset};
 use crate::model::tree::Condition;
 use crate::utils::rng::Rng;
 
 /// Finds the best sparse oblique split over `num_cols` numerical columns.
+/// The projection buffer lives in the per-thread [`NodeScratch`] (its
+/// reusable pair buffer), so repeated projections allocate nothing.
 #[allow(clippy::too_many_arguments)]
 pub fn split_oblique(
     ds: &Dataset,
@@ -23,6 +27,7 @@ pub fn split_oblique(
     cfg: &SplitterConfig,
     num_projections_exponent: f64,
     normalization: ObliqueNormalization,
+    scratch: &mut NodeScratch,
     rng: &mut Rng,
 ) -> Option<SplitCandidate> {
     let p = num_cols.len();
@@ -35,7 +40,7 @@ pub fn split_oblique(
         .clamp(1, 200);
 
     let mut best: Option<SplitCandidate> = None;
-    let mut projected: Vec<(f32, u32)> = Vec::with_capacity(rows.len());
+    let projected = &mut scratch.pairs;
     for _ in 0..num_projections {
         // Sparse projection: expected 2-3 nonzero coordinates.
         let nnz = 1 + rng.uniform_usize(3.min(p));
@@ -85,7 +90,7 @@ pub fn split_oblique(
             projected.push((acc, r));
         }
         projected.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        if let Some(scan) = scan_sorted_pairs(&projected, &[], labels, cfg.min_examples) {
+        if let Some(scan) = scan_sorted_pairs(projected, &[], labels, cfg.min_examples) {
             if scan.gain > best.as_ref().map(|b| b.gain).unwrap_or(0.0) {
                 best = Some(SplitCandidate {
                     condition: Condition::Oblique {
@@ -158,6 +163,7 @@ mod tests {
         let labels = Labels::Classification { labels: &labels_data, num_classes: 2 };
         let rows: Vec<u32> = (0..n as u32).collect();
         let cfg = SplitterConfig { min_examples: 5, ..Default::default() };
+        let mut scratch = NodeScratch::new(ds.num_rows());
         let cand = split_oblique(
             &ds,
             &[0, 1],
@@ -166,6 +172,7 @@ mod tests {
             &cfg,
             2.0, // enough projections to find the diagonal
             ObliqueNormalization::MinMax,
+            &mut scratch,
             &mut Rng::seed_from_u64(3),
         )
         .unwrap();
@@ -198,6 +205,7 @@ mod tests {
         let labels_data = vec![0u32, 1];
         let labels = Labels::Classification { labels: &labels_data, num_classes: 2 };
         let cfg = SplitterConfig::default();
+        let mut scratch = NodeScratch::new(ds.num_rows());
         assert!(split_oblique(
             &ds,
             &[],
@@ -206,6 +214,7 @@ mod tests {
             &cfg,
             1.0,
             ObliqueNormalization::None,
+            &mut scratch,
             &mut Rng::seed_from_u64(1)
         )
         .is_none());

@@ -135,6 +135,43 @@ impl ScoreAcc {
         }
     }
 
+    /// Zeroes the accumulator in place, keeping its allocation — the pool
+    /// operation of `NodeScratch` (reuse across nodes without reallocating
+    /// the per-class count vector).
+    pub fn reset(&mut self) {
+        match self {
+            ScoreAcc::Class { counts, n } => {
+                counts.iter_mut().for_each(|c| *c = 0.0);
+                *n = 0.0;
+            }
+            ScoreAcc::Reg { sum, sum_sq, n } => {
+                *sum = 0.0;
+                *sum_sq = 0.0;
+                *n = 0.0;
+            }
+            ScoreAcc::Grad { g, h, neg_g_sq, n } => {
+                *g = 0.0;
+                *h = 0.0;
+                *neg_g_sq = 0.0;
+                *n = 0.0;
+            }
+        }
+    }
+
+    /// Whether a pooled accumulator can be reused (after [`ScoreAcc::reset`]) for
+    /// this label view: same kind, and for classification the same class
+    /// count.
+    pub fn compatible(&self, labels: &Labels) -> bool {
+        match (self, labels) {
+            (ScoreAcc::Class { counts, .. }, Labels::Classification { num_classes, .. }) => {
+                counts.len() == *num_classes
+            }
+            (ScoreAcc::Reg { .. }, Labels::Regression { .. }) => true,
+            (ScoreAcc::Grad { .. }, Labels::Gradients { .. }) => true,
+            _ => false,
+        }
+    }
+
     /// Node impurity × n (so gains are additive in examples).
     fn weighted_impurity(&self, labels: &Labels) -> f64 {
         match self {

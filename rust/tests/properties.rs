@@ -11,7 +11,8 @@ use ydf::dataset::dataspec::{ColumnSpec, DataSpec};
 use ydf::dataset::{ColumnData, Dataset};
 use ydf::splitter::score::Labels;
 use ydf::splitter::{
-    find_best_split, partition_rows, NumericalSplit, SplitterConfig, TrainingCache,
+    find_best_split, partition_rows, ColumnIndex, NodeScratch, NumericalSplit, RowArena,
+    SplitterConfig,
 };
 use ydf::utils::prop::{gen_f64_vec, gen_labels, run_cases};
 use ydf::utils::rng::Rng;
@@ -63,11 +64,12 @@ fn prop_exact_splitter_is_optimal() {
         let ds = numeric_ds(values.clone());
         let labels_view = Labels::Classification { labels: &labels, num_classes: 2 };
         let cfg = SplitterConfig { min_examples: 2, ..Default::default() };
-        let mut cache = TrainingCache::new(&ds);
+        let index = ColumnIndex::new(&ds);
+        let mut scratch = NodeScratch::new(ds.num_rows());
         let mut split_rng = Rng::seed_from_u64(1);
         let rows: Vec<u32> = (0..n as u32).collect();
         let found = find_best_split(
-            &ds, &rows, &labels_view, &[0], &cfg, &mut cache, &mut split_rng,
+            &ds, &rows, &labels_view, &[0], &cfg, &index, &mut scratch, &mut split_rng,
         );
         let brute = brute_force_best_gain(&values, &labels, 2)
             .filter(|&g| g > 1e-12);
@@ -90,12 +92,13 @@ fn prop_partition_conserves_rows() {
         let ds = numeric_ds(values);
         let labels_view = Labels::Classification { labels: &labels, num_classes: 2 };
         let cfg = SplitterConfig { min_examples: 1, ..Default::default() };
-        let mut cache = TrainingCache::new(&ds);
+        let index = ColumnIndex::new(&ds);
+        let mut scratch = NodeScratch::new(ds.num_rows());
         let mut split_rng = Rng::seed_from_u64(2);
         let rows: Vec<u32> = (0..n as u32).collect();
-        if let Some(split) =
-            find_best_split(&ds, &rows, &labels_view, &[0], &cfg, &mut cache, &mut split_rng)
-        {
+        if let Some(split) = find_best_split(
+            &ds, &rows, &labels_view, &[0], &cfg, &index, &mut scratch, &mut split_rng,
+        ) {
             let (pos, neg) =
                 partition_rows(&ds, &rows, &split.condition, split.missing_to_positive);
             let mut all: Vec<u32> = pos.iter().chain(neg.iter()).copied().collect();
@@ -116,18 +119,18 @@ fn prop_histogram_gain_never_exceeds_exact() {
         let rows: Vec<u32> = (0..n as u32).collect();
         let mut split_rng = Rng::seed_from_u64(3);
         let exact_cfg = SplitterConfig { min_examples: 1, ..Default::default() };
-        let mut cache = TrainingCache::new(&ds);
+        let index = ColumnIndex::new(&ds);
+        let mut scratch = NodeScratch::new(ds.num_rows());
         let exact = find_best_split(
-            &ds, &rows, &labels_view, &[0], &exact_cfg, &mut cache, &mut split_rng,
+            &ds, &rows, &labels_view, &[0], &exact_cfg, &index, &mut scratch, &mut split_rng,
         );
         let hist_cfg = SplitterConfig {
             min_examples: 1,
             numerical: NumericalSplit::Histogram { bins: 32 },
             ..Default::default()
         };
-        let mut cache2 = TrainingCache::new(&ds);
         let hist = find_best_split(
-            &ds, &rows, &labels_view, &[0], &hist_cfg, &mut cache2, &mut split_rng,
+            &ds, &rows, &labels_view, &[0], &hist_cfg, &index, &mut scratch, &mut split_rng,
         );
         if let (Some(e), Some(h)) = (&exact, &hist) {
             assert!(
@@ -622,6 +625,162 @@ fn prop_session_decode_round_trips_columnar_ground_truth() {
         // The decoded block also scores through the engine batch path.
         let out = session.predict_block(&mut block);
         assert_eq!(out.len(), m * session.output_dim());
+    });
+}
+
+/// Threaded training is bit-identical to single-threaded. RF parallelizes
+/// across trees (`num_threads` in `parallel_map`); GBT parallelizes each
+/// node's split search across candidate features (`num_threads` in the
+/// `SplitEngine` pool). Exercised on mixed-semantic data with NaN/missing
+/// values in every column, bootstrap duplicates (RF), and both the exact
+/// and the randomized (oblique + random-categorical, best-first) splitter
+/// stacks — the configurations where per-candidate RNG derivation and the
+/// `(gain, lowest feature index)` tie-break actually carry the guarantee.
+#[test]
+fn prop_threaded_training_bit_identical_to_sequential() {
+    use ydf::learner::gbt::GbtConfig;
+    use ydf::learner::random_forest::RandomForestConfig;
+    use ydf::learner::{GradientBoostedTreesLearner, Learner, RandomForestLearner};
+
+    run_cases(0x7EAD5, 3, |rng, case| {
+        // Large enough that the root nodes clear the engine's parallel
+        // cutoff (rows × candidate units ≥ 512) — the pooled scatter must
+        // actually run, not just its sequential fallback.
+        let n = 150 + rng.uniform_usize(60);
+        let classes = if case % 2 == 0 { 2 } else { 3 };
+        let ds = mixed_ds(n, classes, rng);
+
+        // Random Forest: bootstrap duplicates + sqrt attribute sampling.
+        let mut rf = RandomForestConfig::new("label");
+        rf.num_trees = 6;
+        rf.compute_oob = false;
+        rf.num_threads = 1;
+        let seq = RandomForestLearner::new(rf.clone()).train(&ds).unwrap();
+        rf.num_threads = 3;
+        let par = RandomForestLearner::new(rf).train(&ds).unwrap();
+        assert_eq!(
+            seq.to_json().to_string(),
+            par.to_json().to_string(),
+            "case {case}: threaded RF must equal sequential"
+        );
+
+        // GBT, exact axis-aligned splitters (no scoring RNG at all).
+        let mut gbt = GbtConfig::new("label");
+        gbt.num_trees = 4;
+        gbt.max_depth = 4;
+        gbt.num_threads = 1;
+        let seq = GradientBoostedTreesLearner::new(gbt.clone()).train(&ds).unwrap();
+        gbt.num_threads = 4;
+        let par = GradientBoostedTreesLearner::new(gbt).train(&ds).unwrap();
+        assert_eq!(
+            seq.to_json().to_string(),
+            par.to_json().to_string(),
+            "case {case}: threaded GBT must equal sequential"
+        );
+
+        // GBT, randomized stack: sparse oblique projections + random
+        // categorical subsets + best-first growth (benchmark_rank1@v1).
+        let mut gbt = GbtConfig::benchmark_rank1("label");
+        gbt.num_trees = 3;
+        gbt.num_threads = 1;
+        let seq = GradientBoostedTreesLearner::new(gbt.clone()).train(&ds).unwrap();
+        gbt.num_threads = 3;
+        let par = GradientBoostedTreesLearner::new(gbt).train(&ds).unwrap();
+        assert_eq!(
+            seq.to_json().to_string(),
+            par.to_json().to_string(),
+            "case {case}: threaded randomized GBT must equal sequential"
+        );
+
+        // CART: single tree, every feature considered at every node —
+        // the pure feature-parallel path.
+        use ydf::learner::cart::{CartConfig, CartLearner};
+        let mut cart = CartConfig::new("label");
+        cart.num_threads = 1;
+        let seq = CartLearner::new(cart.clone()).train(&ds).unwrap();
+        cart.num_threads = 4;
+        let par = CartLearner::new(cart).train(&ds).unwrap();
+        assert_eq!(
+            seq.to_json().to_string(),
+            par.to_json().to_string(),
+            "case {case}: threaded CART must equal sequential"
+        );
+    });
+}
+
+/// The arena's in-place span partition is exactly `partition_rows`:
+/// same sides, same (stable) order, under duplicates, NaN-driven missing
+/// routing, and nested sub-span partitioning.
+#[test]
+fn prop_arena_partition_matches_partition_rows() {
+    run_cases(0xA2E4A, 25, |rng, case| {
+        let n = 30 + rng.uniform_usize(60);
+        let ds = mixed_ds(n, 2, rng);
+        // Bootstrap-style duplicated row multiset.
+        let rows: Vec<u32> =
+            (0..n + n / 3).map(|_| rng.uniform_usize(n) as u32).collect();
+        let labels: Vec<u32> = match &ds.columns[ds.num_columns() - 1] {
+            ydf::dataset::ColumnData::Categorical(v) => v.clone(),
+            _ => panic!("label column"),
+        };
+        let labels_view = Labels::Classification { labels: &labels, num_classes: 2 };
+        let cfg = SplitterConfig { min_examples: 1, ..Default::default() };
+        let index = ColumnIndex::new(&ds);
+        let mut scratch = NodeScratch::new(ds.num_rows());
+        let mut split_rng = Rng::seed_from_u64(case as u64);
+        let candidates: Vec<usize> = (0..ds.num_columns() - 1).collect();
+        let split = match find_best_split(
+            &ds, &rows, &labels_view, &candidates, &cfg, &index, &mut scratch, &mut split_rng,
+        ) {
+            Some(s) => s,
+            None => return,
+        };
+
+        let (pos, neg) =
+            partition_rows(&ds, &rows, &split.condition, split.missing_to_positive);
+        let mut arena = RowArena::new();
+        arena.reset(&rows);
+        let n_pos = arena.partition_span(
+            &ds,
+            &split.condition,
+            split.missing_to_positive,
+            0,
+            rows.len(),
+        );
+        assert_eq!(n_pos, pos.len(), "case {case}: positive count");
+        assert_eq!(arena.span(0, n_pos), pos.as_slice(), "case {case}: positive side");
+        assert_eq!(
+            arena.span(n_pos, rows.len() - n_pos),
+            neg.as_slice(),
+            "case {case}: negative side"
+        );
+
+        // Re-partition the positive child span (as the grower does) —
+        // must match partition_rows applied to the positive side.
+        if pos.len() > 1 {
+            let (pp, pn) =
+                partition_rows(&ds, &pos, &split.condition, !split.missing_to_positive);
+            let k = arena.partition_span(
+                &ds,
+                &split.condition,
+                !split.missing_to_positive,
+                0,
+                n_pos,
+            );
+            assert_eq!(arena.span(0, k), pp.as_slice(), "case {case}: nested positive");
+            assert_eq!(
+                arena.span(k, n_pos - k),
+                pn.as_slice(),
+                "case {case}: nested negative"
+            );
+            // The sibling (negative) span was untouched by the nested
+            // partition.
+            assert_eq!(
+                arena.span(n_pos, rows.len() - n_pos),
+                neg.as_slice(),
+                "case {case}: sibling span must survive nested partitions"
+            );
+        }
     });
 }
 
