@@ -1,10 +1,12 @@
 //! b5: serving-runtime benchmark — the micro-batching path under load.
 //!
-//! Three families of configurations, all closed-loop (one in-flight
+//! Five families of configurations, all closed-loop (one in-flight
 //! request per client — the standard closed-system load model), all
 //! recorded to `BENCH_serving.json` so serving performance is tracked
 //! across PRs exactly like `BENCH_inference.json` tracks the engine
-//! kernels:
+//! kernels. Every combo now also records client-observed **p99 latency**
+//! — the control-plane work (hot reload, admission control) is judged on
+//! tail behavior, not means:
 //!
 //! * `s{rows}_c{clients}` — the PR-3 grid: request-size × concurrency
 //!   over one model, single-threaded flush scoring.
@@ -15,12 +17,21 @@
 //!   coalesced flushes fan block spans out across the scoring pool
 //!   (`par`, 4 workers) vs the single-threaded baseline (`seq`), so the
 //!   parallel-flush speedup is tracked across PRs.
+//! * `reload_s8_c4` — hot reload under load: clients hammer one model
+//!   name while it is swapped repeatedly; the p99 shows what a swap
+//!   costs the tail (clients re-resolve on generation change and retry
+//!   requests lost to a draining batcher — the loop never drops one).
+//! * `quota_s8_c16` — admission saturation: more offered load than the
+//!   per-model quota and shared admission budget admit; rejected
+//!   submissions spin-retry, so the numbers describe the accepted
+//!   goodput and its tail latency under sustained overload.
 //!
 //! Run: cargo bench --bench b5_serving
 //!      cargo bench --bench b5_serving -- --requests=500 --out=path.json
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 use ydf::dataset::synthetic;
 use ydf::learner::gbt::GbtConfig;
 use ydf::learner::{GradientBoostedTreesLearner, Learner};
@@ -38,6 +49,7 @@ struct ComboResult {
     concurrency: usize,
     requests: usize,
     us_per_request: f64,
+    p99_us: f64,
     requests_per_s: f64,
     rows_per_s: f64,
     mean_batch_rows: f64,
@@ -51,30 +63,61 @@ fn train_session(seed: u64, trees: usize) -> Session {
     Session::new(GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap())
 }
 
+/// A quick-to-train replacement model for the reload combo: the swap
+/// cadence must be dominated by the swap, not by training the stand-in.
+fn train_small_session(seed: u64) -> Session {
+    let ds = synthetic::adult_like(1000, seed);
+    let mut cfg = GbtConfig::new("income");
+    cfg.num_trees = 10;
+    cfg.max_depth = 3;
+    Session::new(GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap())
+}
+
+/// p99 of `xs` (microseconds); sorts in place.
+fn p99(xs: &mut [f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((xs.len() as f64 * 0.99).ceil() as usize).clamp(1, xs.len());
+    xs[rank - 1]
+}
+
 /// Closed loop over per-client (batcher, prototype-request) lanes — one
 /// lane per client, so coalesced batches mix genuinely different rows
 /// (a shared prototype would give every flush identical tree paths and
 /// flatter-than-real numbers). Client `i` drives lane `i`,
-/// `requests_per_client` times.
-fn run_closed_loop(lanes: &[(Arc<Batcher>, RowBlock)], requests_per_client: usize) -> f64 {
-    let t0 = std::time::Instant::now();
-    std::thread::scope(|s| {
-        for (batcher, block) in lanes {
-            s.spawn(move || {
-                for _ in 0..requests_per_client {
-                    let out = batcher
-                        .submit(block)
-                        .expect("bench load stays under queue capacity")
-                        .wait()
-                        .expect("batcher serves until dropped");
-                    std::hint::black_box(out);
-                }
-            });
-        }
+/// `requests_per_client` times. Returns (wall seconds, p99 µs).
+fn run_closed_loop(lanes: &[(Arc<Batcher>, RowBlock)], requests_per_client: usize) -> (f64, f64) {
+    let t0 = Instant::now();
+    let per_client: Vec<Vec<f64>> = std::thread::scope(|s| {
+        let handles: Vec<_> = lanes
+            .iter()
+            .map(|(batcher, block)| {
+                s.spawn(move || {
+                    let mut us = Vec::with_capacity(requests_per_client);
+                    for _ in 0..requests_per_client {
+                        let r0 = Instant::now();
+                        let out = batcher
+                            .submit(block)
+                            .expect("bench load stays under queue capacity")
+                            .wait()
+                            .expect("batcher serves until dropped");
+                        us.push(r0.elapsed().as_secs_f64() * 1e6);
+                        std::hint::black_box(out);
+                    }
+                    us
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
     });
-    t0.elapsed().as_secs_f64()
+    let wall = t0.elapsed().as_secs_f64();
+    let mut all: Vec<f64> = per_client.into_iter().flatten().collect();
+    (wall, p99(&mut all))
 }
 
+#[allow(clippy::too_many_arguments)]
 fn combo_result(
     key: String,
     models: usize,
@@ -83,6 +126,7 @@ fn combo_result(
     concurrency: usize,
     requests_per_client: usize,
     wall: f64,
+    p99_us: f64,
     batches: u64,
     batched_rows: u64,
 ) -> ComboResult {
@@ -95,6 +139,7 @@ fn combo_result(
         concurrency,
         requests: total_requests,
         us_per_request: wall / total_requests as f64 * 1e6,
+        p99_us,
         requests_per_s: total_requests as f64 / wall,
         rows_per_s: (total_requests * request_rows) as f64 / wall,
         mean_batch_rows: if batches > 0 { batched_rows as f64 / batches as f64 } else { 0.0 },
@@ -117,25 +162,27 @@ fn main() {
     // GBT, so b4 and b5 numbers describe the same model family.
     let session = Arc::new(train_session(20230806, 50));
     println!(
-        "serving benchmark: engine {}, {} requests/client\n  {:>16} {:>12} {:>11} {:>14} {:>14} {:>12} {:>16}",
+        "serving benchmark: engine {}, {} requests/client\n  {:>16} {:>12} {:>11} {:>14} {:>12} {:>14} {:>12} {:>16}",
         session.engine_name(),
         requests_per_client,
         "combo",
         "request_rows",
         "concurrency",
         "us/request",
+        "p99_us",
         "requests/s",
         "rows/s",
         "mean batch rows",
     );
     let mut results: Vec<ComboResult> = Vec::new();
-    let mut report = |r: &ComboResult| {
+    let report = |r: &ComboResult| {
         println!(
-            "  {:>16} {:>12} {:>11} {:>14.2} {:>14.0} {:>12.0} {:>16.1}",
+            "  {:>16} {:>12} {:>11} {:>14.2} {:>12.0} {:>14.0} {:>12.0} {:>16.1}",
             r.key,
             r.request_rows,
             r.concurrency,
             r.us_per_request,
+            r.p99_us,
             r.requests_per_s,
             r.rows_per_s,
             r.mean_batch_rows,
@@ -161,7 +208,7 @@ fn main() {
                     (Arc::clone(&batcher), request_block(&session, request_rows, client))
                 })
                 .collect();
-            let wall = run_closed_loop(&lanes, requests_per_client);
+            let (wall, tail) = run_closed_loop(&lanes, requests_per_client);
             let snap = batcher.stats().snapshot();
             let r = combo_result(
                 format!("s{request_rows}_c{concurrency}"),
@@ -171,6 +218,7 @@ fn main() {
                 concurrency,
                 requests_per_client,
                 wall,
+                tail,
                 snap.batches,
                 snap.batched_rows,
             );
@@ -182,7 +230,7 @@ fn main() {
     // Family 2: two models behind one registry, clients alternating —
     // the multi-model serving dimension.
     {
-        let mut registry = Registry::new(BatcherConfig {
+        let registry = Registry::new(BatcherConfig {
             max_delay: Duration::ZERO,
             score_threads: 1,
             ..Default::default()
@@ -193,25 +241,25 @@ fn main() {
             let request_rows = 8usize;
             // One lane per client, alternating models, rows varied per
             // client.
+            let entries = registry.entries();
             let lanes: Vec<(Arc<Batcher>, RowBlock)> = (0..concurrency)
                 .map(|client| {
-                    let e = &registry.entries()[client % registry.len()];
+                    let e = &entries[client % entries.len()];
                     (Arc::clone(e.batcher()), request_block(e.session(), request_rows, client))
                 })
                 .collect();
             // The registry's stats persist across concurrency runs;
             // report this run's delta.
-            let base: Vec<(u64, u64)> = registry
-                .entries()
+            let base: Vec<(u64, u64)> = entries
                 .iter()
                 .map(|e| {
                     let s = e.stats().snapshot();
                     (s.batches, s.batched_rows)
                 })
                 .collect();
-            let wall = run_closed_loop(&lanes, requests_per_client);
+            let (wall, tail) = run_closed_loop(&lanes, requests_per_client);
             let (mut batches, mut batched_rows) = (0u64, 0u64);
-            for (e, (b0, r0)) in registry.entries().iter().zip(&base) {
+            for (e, (b0, r0)) in entries.iter().zip(&base) {
                 let s = e.stats().snapshot();
                 batches += s.batches - b0;
                 batched_rows += s.batched_rows - r0;
@@ -224,6 +272,7 @@ fn main() {
                 concurrency,
                 requests_per_client,
                 wall,
+                tail,
                 batches,
                 batched_rows,
             );
@@ -249,7 +298,7 @@ fn main() {
             .collect();
         // Fewer, heavier requests: same row volume as ~64-row combos.
         let heavy_requests = (requests_per_client / 8).max(10);
-        let wall = run_closed_loop(&lanes, heavy_requests);
+        let (wall, tail) = run_closed_loop(&lanes, heavy_requests);
         let snap = batcher.stats().snapshot();
         let r = combo_result(
             key.to_string(),
@@ -259,6 +308,171 @@ fn main() {
             4,
             heavy_requests,
             wall,
+            tail,
+            snap.batches,
+            snap.batched_rows,
+        );
+        report(&r);
+        results.push(r);
+    }
+
+    // Family 4: hot reload under load — the control-plane cost combo.
+    // Four clients hammer one model name while it is swapped three
+    // times; every request eventually completes (a submission lost to a
+    // draining generation re-resolves and retries), and the p99 records
+    // what the swaps cost the tail.
+    {
+        let registry = Arc::new(Registry::new(BatcherConfig {
+            max_delay: Duration::ZERO,
+            score_threads: 1,
+            ..Default::default()
+        }));
+        registry.register("hot", train_session(20230806, 50)).unwrap();
+        let (concurrency, request_rows) = (4usize, 8usize);
+        let clients_done = AtomicUsize::new(0);
+        let retried = AtomicUsize::new(0);
+        let t0 = Instant::now();
+        let per_client: Vec<Vec<f64>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..concurrency)
+                .map(|client| {
+                    let registry = Arc::clone(&registry);
+                    let (clients_done, retried) = (&clients_done, &retried);
+                    s.spawn(move || {
+                        let mut us = Vec::with_capacity(requests_per_client);
+                        let mut entry = registry.resolve(Some("hot")).unwrap();
+                        let mut block = request_block(entry.session(), request_rows, client);
+                        for _ in 0..requests_per_client {
+                            let r0 = Instant::now();
+                            loop {
+                                let live = registry.resolve(Some("hot")).unwrap();
+                                if live.generation() != entry.generation() {
+                                    // Swapped: rebuild the request for the
+                                    // new generation's dataspec scratch.
+                                    block =
+                                        request_block(live.session(), request_rows, client);
+                                    entry = live;
+                                }
+                                match entry.batcher().submit(&block) {
+                                    Ok(p) => {
+                                        if let Ok(out) = p.wait() {
+                                            std::hint::black_box(out);
+                                            break;
+                                        }
+                                        // Drained out from under us —
+                                        // retry against the new generation.
+                                        retried.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                    Err(_) => {
+                                        retried.fetch_add(1, Ordering::Relaxed);
+                                        std::thread::yield_now();
+                                    }
+                                }
+                            }
+                            us.push(r0.elapsed().as_secs_f64() * 1e6);
+                        }
+                        clients_done.fetch_add(1, Ordering::Relaxed);
+                        us
+                    })
+                })
+                .collect();
+            // The swapper: three hot swaps spaced across the run.
+            let swapper_registry = Arc::clone(&registry);
+            let clients_done = &clients_done;
+            s.spawn(move || {
+                for round in 0..3u64 {
+                    std::thread::sleep(Duration::from_millis(40));
+                    if clients_done.load(Ordering::Relaxed) == concurrency {
+                        break; // load finished before the swap schedule did
+                    }
+                    let incoming = train_small_session(9000 + round);
+                    swapper_registry.swap("hot", incoming).expect("swap of a live model");
+                }
+            });
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let mut all: Vec<f64> = per_client.into_iter().flatten().collect();
+        let tail = p99(&mut all);
+        let hot = registry.resolve(Some("hot")).unwrap();
+        let snap = hot.stats().snapshot(); // stats survive swaps with the name
+        println!(
+            "  (reload combo: {} reloads, {} retried submissions)",
+            snap.reloads,
+            retried.load(Ordering::Relaxed)
+        );
+        let r = combo_result(
+            "reload_s8_c4".to_string(),
+            1,
+            1,
+            request_rows,
+            concurrency,
+            requests_per_client,
+            wall,
+            tail,
+            snap.batches,
+            snap.batched_rows,
+        );
+        report(&r);
+        results.push(r);
+    }
+
+    // Family 5: admission saturation — offered load far above the quota
+    // and shared admission budget; rejected submissions spin-retry, so
+    // this measures accepted goodput and its tail under overload.
+    {
+        let registry = Registry::new(BatcherConfig {
+            max_delay: Duration::ZERO,
+            score_threads: 1,
+            quota_rows: 64,
+            admission_rows: 96,
+            ..Default::default()
+        });
+        registry.register("quota", train_session(20230806, 50)).unwrap();
+        let entry = registry.resolve(Some("quota")).unwrap();
+        let (concurrency, request_rows) = (16usize, 8usize);
+        // Shorter per-client run: 16 clients spin-retrying is heavy.
+        let saturated_requests = (requests_per_client / 2).max(20);
+        let t0 = Instant::now();
+        let per_client: Vec<Vec<f64>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..concurrency)
+                .map(|client| {
+                    let entry = &entry;
+                    s.spawn(move || {
+                        let block = request_block(entry.session(), request_rows, client);
+                        let mut us = Vec::with_capacity(saturated_requests);
+                        for _ in 0..saturated_requests {
+                            let r0 = Instant::now();
+                            let out = loop {
+                                match entry.batcher().submit(&block) {
+                                    Ok(p) => {
+                                        break p.wait().expect("batcher serves until dropped")
+                                    }
+                                    Err(_) => std::thread::yield_now(), // quota/admission bounce
+                                }
+                            };
+                            us.push(r0.elapsed().as_secs_f64() * 1e6);
+                            std::hint::black_box(out);
+                        }
+                        us
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let mut all: Vec<f64> = per_client.into_iter().flatten().collect();
+        let tail = p99(&mut all);
+        let snap = entry.stats().snapshot();
+        println!("  (quota combo: {} rejected submissions)", snap.rejected);
+        let r = combo_result(
+            "quota_s8_c16".to_string(),
+            1,
+            1,
+            request_rows,
+            concurrency,
+            saturated_requests,
+            wall,
+            tail,
             snap.batches,
             snap.batched_rows,
         );
@@ -275,6 +489,7 @@ fn main() {
             .set("concurrency", Json::Num(r.concurrency as f64))
             .set("requests", Json::Num(r.requests as f64))
             .set("us_per_request", Json::Num(r.us_per_request))
+            .set("p99_us", Json::Num(r.p99_us))
             .set("requests_per_s", Json::Num(r.requests_per_s))
             .set("rows_per_s", Json::Num(r.rows_per_s))
             .set("mean_batch_rows", Json::Num(r.mean_batch_rows));

@@ -113,6 +113,46 @@ impl ColumnData {
         Ok(())
     }
 
+    /// Appends rows `start..end` of `other` to this column. Both columns
+    /// must have the same semantic. Used by the serving batcher's
+    /// deadline-shed pass to re-pack the surviving rows of a flush into a
+    /// fresh block without re-decoding the original requests.
+    pub fn extend_from_range(
+        &mut self,
+        other: &ColumnData,
+        start: usize,
+        end: usize,
+    ) -> Result<(), String> {
+        match (self, other) {
+            (ColumnData::Numerical(a), ColumnData::Numerical(b)) => {
+                a.extend_from_slice(&b[start..end])
+            }
+            (ColumnData::Categorical(a), ColumnData::Categorical(b)) => {
+                a.extend_from_slice(&b[start..end])
+            }
+            (ColumnData::Boolean(a), ColumnData::Boolean(b)) => a.extend_from_slice(&b[start..end]),
+            (
+                ColumnData::CategoricalSet { offsets, values },
+                ColumnData::CategoricalSet { offsets: o2, values: v2 },
+            ) => {
+                // Row r of `other` spans values o2[r]..o2[r+1]; rebase that
+                // window onto the end of this column's value buffer.
+                let base = values.len() as u32;
+                let shift = o2[start];
+                values.extend_from_slice(&v2[o2[start] as usize..o2[end] as usize]);
+                offsets.extend(o2[start + 1..=end].iter().map(|&w| base + (w - shift)));
+            }
+            (a, b) => {
+                return Err(format!(
+                    "cannot append a {:?} column to a {:?} column",
+                    b.semantic(),
+                    a.semantic()
+                ))
+            }
+        }
+        Ok(())
+    }
+
     /// Removes all rows, keeping the allocation (serving decode scratch).
     pub fn clear(&mut self) {
         match self {
@@ -416,6 +456,37 @@ mod tests {
 
         let mut b = ColumnData::Boolean(vec![1]);
         let err = b.extend_from(&ColumnData::Numerical(vec![0.0])).unwrap_err();
+        assert!(err.contains("cannot append"), "{err}");
+    }
+
+    #[test]
+    fn extend_from_range_slices_and_rebases() {
+        let mut a = ColumnData::Numerical(vec![1.0]);
+        a.extend_from_range(&ColumnData::Numerical(vec![10.0, 11.0, 12.0, 13.0]), 1, 3).unwrap();
+        assert_eq!(a.as_numerical().unwrap(), &[1.0, 11.0, 12.0]);
+
+        // CategoricalSet rows: [5,6] | [7] | [] | [MISSING]; take rows 1..3.
+        let src = ColumnData::CategoricalSet {
+            offsets: vec![0, 2, 3, 3, 4],
+            values: vec![5, 6, 7, MISSING_CAT],
+        };
+        let mut s = ColumnData::CategoricalSet { offsets: vec![0, 1], values: vec![4] };
+        s.extend_from_range(&src, 1, 3).unwrap();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.set_values(0).unwrap(), &[4]);
+        assert_eq!(s.set_values(1).unwrap(), &[7]);
+        assert_eq!(s.set_values(2).unwrap(), &[] as &[u32]);
+        // The missing-sentinel row survives a ranged copy too.
+        s.extend_from_range(&src, 3, 4).unwrap();
+        assert!(s.is_missing(3));
+
+        // Empty range is a no-op.
+        let before = s.len();
+        s.extend_from_range(&src, 2, 2).unwrap();
+        assert_eq!(s.len(), before);
+
+        let mut b = ColumnData::Boolean(vec![1]);
+        let err = b.extend_from_range(&ColumnData::Numerical(vec![0.0]), 0, 1).unwrap_err();
         assert!(err.contains("cannot append"), "{err}");
     }
 

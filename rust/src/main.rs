@@ -36,10 +36,20 @@ COMMANDS
                    [--addr=127.0.0.1] [--port=8123] [--workers=4]
                    [--flush-rows=64] [--max-delay-ms=2]
                    [--max-queue-rows=4096] [--score-threads=0]
+                   [--conn-timeout=60] [--queue-deadline-ms=1000]
+                   [--quota-rows=0] [--admission-rows=0]
                    (--model repeats to serve several models from one
                     port; the first is the default route. NAME defaults
                     to the file stem. --score-threads: workers a large
-                    coalesced flush fans out over; 0 = auto, 1 = serial)
+                    coalesced flush fans out over; 0 = auto, 1 = serial.
+                    --conn-timeout: seconds before an idle/stalled
+                    connection is reaped, 0 = never. --queue-deadline-ms:
+                    shed requests queued longer than this with a
+                    retryable error, 0 = never shed. --quota-rows:
+                    per-model pending-row cap; --admission-rows: shared
+                    pending-row budget across all models; 0 = off.
+                    Models hot-reload while serving via the load/swap/
+                    unload admin commands, docs/serving.md)
   synth            --name=TABLE5_NAME --output=csv:FILE [--max-examples=N]
   benchmark_suite  [--full] [--folds=N] [--trees=N] [--trials=N]
                    [--datasets=a,b,c] [--max-examples=N]
@@ -241,8 +251,13 @@ fn main() {
                 max_delay: std::time::Duration::from_secs_f64(max_delay_ms / 1e3),
                 max_queue_rows: parse_usize("max-queue-rows", 4096),
                 score_threads: parse_usize("score-threads", 0),
+                queue_deadline: std::time::Duration::from_millis(
+                    parse_usize("queue-deadline-ms", 1000) as u64,
+                ),
+                quota_rows: parse_usize("quota-rows", 0),
+                admission_rows: parse_usize("admission-rows", 0),
             };
-            let mut registry = ydf::serving::Registry::new(batcher);
+            let registry = ydf::serving::Registry::new(batcher);
             for m in model_flags {
                 // `name=path`, where a name is a plain identifier. Two
                 // escape hatches keep the single-model form backward
@@ -276,9 +291,15 @@ fn main() {
                 );
                 ok_or_die(registry.register(&name, session));
             }
+            let conn_timeout_s = parse_usize("conn-timeout", 60);
             let config = ydf::serving::ServerConfig {
                 addr: format!("{addr}:{port}"),
                 workers: parse_usize("workers", 4),
+                // 0 = never reap; otherwise seconds of socket silence
+                // before an idle or stalled connection is closed.
+                conn_timeout: (conn_timeout_s > 0)
+                    .then(|| std::time::Duration::from_secs(conn_timeout_s as u64)),
+                ..Default::default()
             };
             println!("protocol: newline-delimited JSON (docs/serving.md)");
             ok_or_die(ydf::serving::serve(registry, &config));

@@ -19,17 +19,35 @@
 //! `predict_batch` over the same rows (pinned by
 //! `rust/tests/serving.rs`).
 //!
-//! The queue is bounded by [`BatcherConfig::max_queue_rows`]: a submit
-//! that would overflow is rejected immediately with
-//! [`SubmitError::QueueFull`] — backpressure surfaces to the client as a
-//! retryable error instead of unbounded memory growth or an indefinite
-//! block.
+//! Admission is layered, every rejection immediate and in-band:
+//!
+//! * the queue is bounded by [`BatcherConfig::max_queue_rows`]
+//!   ([`SubmitError::QueueFull`] beyond it);
+//! * an optional per-model quota ([`BatcherConfig::quota_rows`]) rejects
+//!   a hot model's submissions before they can crowd out its neighbors
+//!   ([`SubmitError::QuotaExceeded`]);
+//! * an optional registry-wide [`AdmissionControl`] budget caps the
+//!   total rows pending across every model ([`SubmitError::AdmissionFull`]).
+//!
+//! Accepted requests are additionally covered by the queue deadline
+//! ([`BatcherConfig::queue_deadline`]): a request still unscored when its
+//! flush finally starts is *shed* with a retryable
+//! [`ScoreError::Shed`] reply carrying a `retry_after_ms` hint, instead
+//! of aging unboundedly behind a slow engine.
+//!
+//! The scorer is panic-isolated: an engine panic mid-flush is caught,
+//! every waiter of that flush receives an in-band [`ScoreError::Failed`]
+//! reply, and the batcher keeps serving subsequent flushes. Only a panic
+//! outside the scoring boundary fails the batcher open (shutdown +
+//! waiters answered with errors), never a silent wedge.
 
 use super::session::{RowBlock, Session};
 use super::stats::ServingStats;
 use crate::inference::BLOCK_SIZE;
 use crate::utils::pool::WorkerPool;
 use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -58,6 +76,21 @@ pub struct BatcherConfig {
     /// flushes single-threaded. Ignored when the batcher is handed a
     /// shared scoring pool ([`Batcher::with_scoring_pool`]).
     pub score_threads: usize,
+    /// Per-request queue deadline: a request still unscored when its
+    /// flush starts, `queue_deadline` after submission, is shed with a
+    /// retryable [`ScoreError::Shed`] reply instead of being scored late.
+    /// `Duration::ZERO` (the default) disables shedding.
+    pub queue_deadline: Duration,
+    /// Per-model pending-row quota, checked against this batcher's own
+    /// queue on submit; `0` (the default) disables it. Meaningful below
+    /// `max_queue_rows` when several models share one server — it stops
+    /// one hot model from monopolizing worker and scoring capacity.
+    pub quota_rows: usize,
+    /// Registry-wide admission budget: total rows pending across *all* of
+    /// a registry's batchers; `0` (the default) disables it. Read by
+    /// `Registry::new` (which builds the shared [`AdmissionControl`]);
+    /// standalone batchers ignore it.
+    pub admission_rows: usize,
 }
 
 impl Default for BatcherConfig {
@@ -67,6 +100,9 @@ impl Default for BatcherConfig {
             max_delay: Duration::from_millis(2),
             max_queue_rows: 64 * BLOCK_SIZE,
             score_threads: 0,
+            queue_deadline: Duration::ZERO,
+            quota_rows: 0,
+            admission_rows: 0,
         }
     }
 }
@@ -91,14 +127,68 @@ impl BatcherConfig {
     }
 }
 
+/// Registry-wide admission budget: one shared counter of rows pending
+/// (queued but not yet taken by a scorer) across every model's batcher.
+/// Reserved on submit, released when a flush takes the rows — so the
+/// budget bounds queued memory and queueing delay, not scoring itself.
+pub struct AdmissionControl {
+    pending: AtomicUsize,
+    capacity: usize,
+}
+
+impl AdmissionControl {
+    pub fn new(capacity: usize) -> AdmissionControl {
+        AdmissionControl { pending: AtomicUsize::new(0), capacity: capacity.max(1) }
+    }
+
+    /// Rows currently reserved across all participating batchers.
+    pub fn pending_rows(&self) -> usize {
+        self.pending.load(Ordering::Relaxed)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Reserves `n` rows; on overflow returns `(pending, capacity)`
+    /// without reserving anything.
+    fn try_reserve(&self, n: usize) -> Result<(), (usize, usize)> {
+        let mut cur = self.pending.load(Ordering::Relaxed);
+        loop {
+            if cur + n > self.capacity {
+                return Err((cur, self.capacity));
+            }
+            match self.pending.compare_exchange_weak(
+                cur,
+                cur + n,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Ok(()),
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    fn release(&self, n: usize) {
+        self.pending.fetch_sub(n, Ordering::Relaxed);
+    }
+}
+
 /// Why a submission was rejected. All variants are immediate — the
 /// batcher never blocks a submitter.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum SubmitError {
     /// Queue at capacity; retry after in-flight requests drain.
     QueueFull { pending_rows: usize, capacity: usize },
-    /// The request alone exceeds the queue capacity and can never be
-    /// accepted; split it into smaller requests.
+    /// This model's pending rows are at its quota
+    /// ([`BatcherConfig::quota_rows`]); retry after its queue drains.
+    QuotaExceeded { pending_rows: usize, quota: usize },
+    /// The shared admission budget across every model is exhausted
+    /// ([`BatcherConfig::admission_rows`]); retry shortly.
+    AdmissionFull { pending_rows: usize, capacity: usize },
+    /// The request alone exceeds the queue capacity (or this model's
+    /// quota) and can never be accepted; split it into smaller requests.
     RequestTooLarge { rows: usize, capacity: usize },
     /// Zero-row requests have no result to wait for.
     EmptyRequest,
@@ -113,6 +203,16 @@ impl fmt::Display for SubmitError {
                 f,
                 "serving queue full ({pending_rows}/{capacity} rows pending); retry shortly"
             ),
+            SubmitError::QuotaExceeded { pending_rows, quota } => write!(
+                f,
+                "model queue quota exhausted ({pending_rows}/{quota} rows pending for this \
+                 model); retry shortly"
+            ),
+            SubmitError::AdmissionFull { pending_rows, capacity } => write!(
+                f,
+                "serving admission budget exhausted ({pending_rows}/{capacity} rows pending \
+                 across all models); retry shortly"
+            ),
             SubmitError::RequestTooLarge { rows, capacity } => write!(
                 f,
                 "request of {rows} rows exceeds the queue capacity of {capacity} rows; \
@@ -126,19 +226,51 @@ impl fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
+/// Why an *accepted* request was not scored. Unlike [`SubmitError`] this
+/// arrives through [`Pending::wait`], after the request sat in the queue.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ScoreError {
+    /// Scoring did not happen (engine panic, batcher shutdown). The
+    /// request was not served; it is safe to retry.
+    Failed(String),
+    /// Shed by the queue deadline ([`BatcherConfig::queue_deadline`]):
+    /// the request aged out before its flush started. `retry_after_ms`
+    /// estimates when the queue should have drained (about twice the
+    /// recent flush wall time).
+    Shed { waited_ms: u64, retry_after_ms: u64 },
+}
+
+impl fmt::Display for ScoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ScoreError::Failed(why) => write!(f, "{why}"),
+            ScoreError::Shed { waited_ms, retry_after_ms } => write!(
+                f,
+                "request shed before scoring: queued for {waited_ms} ms, past the queue \
+                 deadline; retry in ~{retry_after_ms} ms"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ScoreError {}
+
 /// A submitted request's pending result.
 pub struct Pending {
-    rx: Receiver<Result<Vec<f64>, String>>,
+    rx: Receiver<Result<Vec<f64>, ScoreError>>,
 }
 
 impl Pending {
-    /// Blocks until the coalesced batch containing this request is scored.
-    /// Returns the request's own predictions, row-major
-    /// (`rows * output_dim()` values).
-    pub fn wait(self) -> Result<Vec<f64>, String> {
+    /// Blocks until the coalesced batch containing this request is scored
+    /// (or shed / failed — always an answer, never a hang). Returns the
+    /// request's own predictions, row-major (`rows * output_dim()`
+    /// values).
+    pub fn wait(self) -> Result<Vec<f64>, ScoreError> {
         match self.rx.recv() {
             Ok(r) => r,
-            Err(_) => Err("serving batcher shut down before scoring the request".to_string()),
+            Err(_) => Err(ScoreError::Failed(
+                "serving batcher shut down before scoring the request".to_string(),
+            )),
         }
     }
 }
@@ -147,7 +279,9 @@ struct Waiter {
     /// First row of this request inside the accumulation block.
     start_row: usize,
     rows: usize,
-    tx: Sender<Result<Vec<f64>, String>>,
+    /// Submission time: the queue-deadline anchor.
+    enqueued: Instant,
+    tx: Sender<Result<Vec<f64>, ScoreError>>,
 }
 
 struct QueueState {
@@ -157,12 +291,19 @@ struct QueueState {
     /// Arrival time of the oldest pending request (deadline anchor).
     oldest: Option<Instant>,
     shutdown: bool,
+    /// Set (under the lock, before the final `notify_all`) when the
+    /// scorer thread exits — clean drain or fail-open. Gates
+    /// [`Batcher::await_drained`].
+    scorer_exited: bool,
 }
 
 struct Shared {
     state: Mutex<QueueState>,
-    /// Wakes the scorer on submission and shutdown.
+    /// Wakes the scorer on submission and shutdown, and `await_drained`
+    /// callers on scorer exit.
     bell: Condvar,
+    #[cfg(any(test, feature = "fault-injection"))]
+    faults: Arc<super::faults::FaultPlan>,
 }
 
 /// The micro-batching coalescer. Clone-free: share it behind an `Arc`.
@@ -174,6 +315,8 @@ pub struct Batcher {
     stats: Arc<ServingStats>,
     flush_rows: usize,
     max_queue_rows: usize,
+    quota_rows: usize,
+    admission: Option<Arc<AdmissionControl>>,
     scorer: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -194,16 +337,31 @@ impl Batcher {
         Batcher::with_scoring_pool(session, config, stats, pool)
     }
 
-    /// The most general constructor: score large flushes over `score_pool`
-    /// when one is given (the registry shares one pool across all of its
-    /// models' batchers), single-threaded otherwise. The pool must be
-    /// dedicated to scoring — handing over a pool whose workers can block
-    /// on serving requests (like the TCP connection pool) would deadlock.
+    /// As [`Batcher::with_admission`] without a shared admission budget.
+    /// Score large flushes over `score_pool` when one is given (the
+    /// registry shares one pool across all of its models' batchers),
+    /// single-threaded otherwise. The pool must be dedicated to scoring —
+    /// handing over a pool whose workers can block on serving requests
+    /// (like the TCP connection pool) would deadlock.
     pub fn with_scoring_pool(
         session: Arc<Session>,
         config: BatcherConfig,
         stats: Arc<ServingStats>,
         score_pool: Option<Arc<WorkerPool>>,
+    ) -> Batcher {
+        Batcher::with_admission(session, config, stats, score_pool, None)
+    }
+
+    /// The most general constructor: everything [`Batcher::with_scoring_pool`]
+    /// takes, plus an optional shared [`AdmissionControl`] charged on
+    /// every submit (the registry hands the same controller to each of
+    /// its batchers so the budget spans models).
+    pub fn with_admission(
+        session: Arc<Session>,
+        config: BatcherConfig,
+        stats: Arc<ServingStats>,
+        score_pool: Option<Arc<WorkerPool>>,
+        admission: Option<Arc<AdmissionControl>>,
     ) -> Batcher {
         let flush_rows = config.flush_rows.max(1).div_ceil(BLOCK_SIZE) * BLOCK_SIZE;
         let max_queue_rows = config.max_queue_rows.max(1);
@@ -213,18 +371,32 @@ impl Batcher {
                 waiters: Vec::new(),
                 oldest: None,
                 shutdown: false,
+                scorer_exited: false,
             }),
             bell: Condvar::new(),
+            #[cfg(any(test, feature = "fault-injection"))]
+            faults: Arc::new(super::faults::FaultPlan::new()),
         });
         let scorer = {
             let shared = Arc::clone(&shared);
             let session = Arc::clone(&session);
             let stats = Arc::clone(&stats);
+            let admission = admission.clone();
             let max_delay = config.max_delay;
+            let queue_deadline = config.queue_deadline;
             std::thread::Builder::new()
                 .name("ydf-serving-scorer".to_string())
                 .spawn(move || {
-                    scorer_loop(shared, session, stats, flush_rows, max_delay, score_pool)
+                    scorer_loop(
+                        shared,
+                        session,
+                        stats,
+                        flush_rows,
+                        max_delay,
+                        queue_deadline,
+                        score_pool,
+                        admission,
+                    )
                 })
                 .expect("failed to spawn serving scorer thread")
         };
@@ -234,6 +406,8 @@ impl Batcher {
             stats,
             flush_rows,
             max_queue_rows,
+            quota_rows: config.quota_rows,
+            admission,
             scorer: Some(scorer),
         }
     }
@@ -258,6 +432,14 @@ impl Batcher {
         self.max_queue_rows
     }
 
+    /// This batcher's fault-injection plan (chaos tests arm it; the hot
+    /// path checks a few relaxed atomics per flush in test builds and
+    /// does not exist otherwise).
+    #[cfg(any(test, feature = "fault-injection"))]
+    pub fn faults(&self) -> &Arc<super::faults::FaultPlan> {
+        &self.shared.faults
+    }
+
     /// Initiates shutdown without waiting: new submissions are rejected
     /// with [`SubmitError::Shutdown`] from this point on, while every
     /// already-accepted request is still scored and answered (the scorer's
@@ -275,17 +457,40 @@ impl Batcher {
         self.shared.bell.notify_all();
     }
 
+    /// Blocks until the scorer thread has exited — i.e. until the drain
+    /// pass after [`Batcher::shutdown`] has answered every accepted
+    /// request (or the scorer failed open). The registry's swap/unload
+    /// path parks its detached drain thread here before marking the old
+    /// generation `Retired`.
+    pub fn await_drained(&self) {
+        let mut state = match self.shared.state.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        while !state.scorer_exited {
+            state = match self.shared.bell.wait(state) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+    }
+
     /// Enqueues every row of `rows` as one request, copied in arrival
     /// order into the shared accumulation block. Returns immediately —
     /// with a [`Pending`] handle, or with the backpressure error if the
-    /// bounded queue cannot take the rows.
+    /// bounded queue (or a quota) cannot take the rows.
     pub fn submit(&self, rows: &RowBlock) -> Result<Pending, SubmitError> {
         let n = rows.rows();
         if n == 0 {
             return Err(SubmitError::EmptyRequest);
         }
-        if n > self.max_queue_rows {
-            return Err(SubmitError::RequestTooLarge { rows: n, capacity: self.max_queue_rows });
+        let hard_cap = if self.quota_rows > 0 {
+            self.max_queue_rows.min(self.quota_rows)
+        } else {
+            self.max_queue_rows
+        };
+        if n > hard_cap {
+            return Err(SubmitError::RequestTooLarge { rows: n, capacity: hard_cap });
         }
         let (tx, rx) = channel();
         {
@@ -309,8 +514,23 @@ impl Batcher {
                     capacity: self.max_queue_rows,
                 });
             }
+            if self.quota_rows > 0 && pending + n > self.quota_rows {
+                self.stats.note_rejected();
+                return Err(SubmitError::QuotaExceeded {
+                    pending_rows: pending,
+                    quota: self.quota_rows,
+                });
+            }
+            if let Some(admission) = &self.admission {
+                // Reserved here, released when a flush takes the rows
+                // (scorer_loop) or the scorer fails open.
+                if let Err((pending_rows, capacity)) = admission.try_reserve(n) {
+                    self.stats.note_rejected();
+                    return Err(SubmitError::AdmissionFull { pending_rows, capacity });
+                }
+            }
             state.acc.append_from(rows);
-            state.waiters.push(Waiter { start_row: pending, rows: n, tx });
+            state.waiters.push(Waiter { start_row: pending, rows: n, enqueued: Instant::now(), tx });
             if state.oldest.is_none() {
                 state.oldest = Some(Instant::now());
             }
@@ -330,45 +550,72 @@ impl Drop for Batcher {
     }
 }
 
+/// Best-effort text from a caught panic payload.
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic payload".to_string()
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn scorer_loop(
     shared: Arc<Shared>,
     session: Arc<Session>,
     stats: Arc<ServingStats>,
     flush_rows: usize,
     max_delay: Duration,
+    queue_deadline: Duration,
     score_pool: Option<Arc<WorkerPool>>,
+    admission: Option<Arc<AdmissionControl>>,
 ) {
-    // If this thread unwinds (an engine panic, a lost scoped job), fail
-    // open: mark shutdown so later submissions get an error reply instead
-    // of queueing forever, and drop the queued waiters so their
-    // `Pending::wait` returns the shutdown error instead of blocking on a
-    // channel nobody will ever answer. Without this, a scorer panic that
-    // strikes outside the lock (the common case — scoring runs with the
-    // lock released) leaves the mutex unpoisoned and the whole server
-    // wedges silently. On a clean exit the guard is a no-op: shutdown is
-    // already set and the waiter list is empty.
-    struct FailOpen(Arc<Shared>);
+    // If this thread unwinds past the scoring boundary (a lost scoped
+    // job, a bug outside the catch_unwind below), fail open: mark
+    // shutdown so later submissions get an error reply instead of
+    // queueing forever, drop the queued waiters so their `Pending::wait`
+    // returns the shutdown error instead of blocking on a channel nobody
+    // will ever answer, and give the queued rows back to the shared
+    // admission budget so the rest of the registry is not permanently
+    // charged for them. On a clean exit the guard only records the
+    // scorer's exit for `await_drained`: shutdown is already set and the
+    // waiter list and queue are empty.
+    struct FailOpen {
+        shared: Arc<Shared>,
+        admission: Option<Arc<AdmissionControl>>,
+    }
     impl Drop for FailOpen {
         fn drop(&mut self) {
             // Recover a poisoned lock rather than skip: leaving the
             // waiters in place would hang their Pending::wait forever —
-            // the exact wedge this guard exists to prevent. Setting the
-            // flag and dropping the senders is valid on any state.
-            let mut state = match self.0.state.lock() {
+            // the exact wedge this guard exists to prevent. Every write
+            // below is valid on any state.
+            let mut state = match self.shared.state.lock() {
                 Ok(g) => g,
                 Err(poisoned) => poisoned.into_inner(),
             };
             state.shutdown = true;
             state.waiters.clear();
+            if let Some(admission) = &self.admission {
+                admission.release(state.acc.rows());
+            }
+            state.acc.clear();
+            state.scorer_exited = true;
             drop(state);
-            self.0.bell.notify_all();
+            self.shared.bell.notify_all();
         }
     }
-    let _fail_open = FailOpen(Arc::clone(&shared));
+    let _fail_open = FailOpen { shared: Arc::clone(&shared), admission: admission.clone() };
     // Double buffer: while one block scores, submissions fill the other.
     // `spare` is moved into the queue at flush and recovered (cleared)
     // after scattering, so steady-state flushing allocates nothing.
     let mut spare = session.new_block();
+    // Recent flush wall time (EWMA, ms): the basis of the shed replies'
+    // retry_after_ms hint. Seeded pessimistically low; converges within a
+    // few flushes.
+    let mut ewma_flush_ms = 1.0f64;
     let mut state = shared.state.lock().expect("serving queue poisoned");
     loop {
         // Wait for work or a flush condition. Spurious wakeups just
@@ -403,26 +650,97 @@ fn scorer_loop(
         }
         // Take the whole pending batch; submissions continue concurrently
         // into the spare block while this one scores.
-        let mut batch = std::mem::replace(&mut state.acc, spare);
-        let waiters = std::mem::take(&mut state.waiters);
+        let mut score_batch = std::mem::replace(&mut state.acc, spare);
+        let mut waiters = std::mem::take(&mut state.waiters);
         state.oldest = None;
         let exiting = state.shutdown;
         stats.set_queue_rows(0);
         drop(state);
-
-        let dim = session.output_dim();
-        // Large coalesced batches fan block spans out across the scoring
-        // pool (bit-identical to the single-call path); small ones score
-        // inline on this thread.
-        let out = session.predict_block_pooled(&mut batch, score_pool.as_deref());
-        stats.note_batch(batch.rows(), waiters.len());
-        for w in waiters {
-            let chunk = out[w.start_row * dim..(w.start_row + w.rows) * dim].to_vec();
-            // A submitter that dropped its Pending just doesn't collect.
-            let _ = w.tx.send(Ok(chunk));
+        // The rows now belong to this flush, not the queue: give them
+        // back to the shared admission budget.
+        if let Some(admission) = &admission {
+            admission.release(score_batch.rows());
         }
-        batch.clear();
-        spare = batch;
+
+        // Deadline shed pass: answer aged-out waiters with a retryable
+        // error and re-pack the survivors (start_row-compacted) into a
+        // fresh block. The exceptional path — it allocates; the common
+        // all-on-time flush stays allocation-free.
+        let mut retained: Option<RowBlock> = None;
+        if queue_deadline > Duration::ZERO {
+            let now = Instant::now();
+            if waiters.iter().any(|w| now.duration_since(w.enqueued) > queue_deadline) {
+                let retry_after_ms = (ewma_flush_ms * 2.0).clamp(1.0, 10_000.0).ceil() as u64;
+                let mut kept_block = session.new_block();
+                let mut kept = Vec::with_capacity(waiters.len());
+                let mut at = 0usize;
+                for mut w in waiters {
+                    let waited = now.duration_since(w.enqueued);
+                    if waited > queue_deadline {
+                        stats.note_shed();
+                        let _ = w.tx.send(Err(ScoreError::Shed {
+                            waited_ms: waited.as_millis() as u64,
+                            retry_after_ms,
+                        }));
+                    } else {
+                        kept_block.append_rows(&score_batch, w.start_row, w.rows);
+                        w.start_row = at;
+                        at += w.rows;
+                        kept.push(w);
+                    }
+                }
+                waiters = kept;
+                retained = Some(std::mem::replace(&mut score_batch, kept_block));
+            }
+        }
+
+        if !waiters.is_empty() {
+            let dim = session.output_dim();
+            let t_flush = Instant::now();
+            // Panic boundary: an engine panic mid-flush (or an injected
+            // fault) must cost exactly this flush — in-band error replies
+            // to its waiters — and nothing else. Large coalesced batches
+            // fan block spans out across the scoring pool (bit-identical
+            // to the single-call path); small ones score inline on this
+            // thread. AssertUnwindSafe: on panic, `score_batch` is only
+            // ever cleared afterwards, never read.
+            let scored = catch_unwind(AssertUnwindSafe(|| {
+                #[cfg(any(test, feature = "fault-injection"))]
+                shared.faults.on_flush();
+                session.predict_block_pooled(&mut score_batch, score_pool.as_deref())
+            }));
+            match scored {
+                Ok(out) => {
+                    stats.note_batch(score_batch.rows(), waiters.len());
+                    for w in waiters {
+                        let chunk = out[w.start_row * dim..(w.start_row + w.rows) * dim].to_vec();
+                        // A submitter that dropped its Pending just
+                        // doesn't collect.
+                        let _ = w.tx.send(Ok(chunk));
+                    }
+                }
+                Err(payload) => {
+                    let why = panic_message(payload.as_ref());
+                    for w in waiters {
+                        let _ = w.tx.send(Err(ScoreError::Failed(format!(
+                            "scoring failed: the engine panicked mid-flush ({why}); the \
+                             request was not served — retry"
+                        ))));
+                    }
+                }
+            }
+            let wall_ms = (t_flush.elapsed().as_secs_f64() * 1e3).max(0.01);
+            ewma_flush_ms = 0.7 * ewma_flush_ms + 0.3 * wall_ms;
+        }
+        // Restore the double buffer: when the shed pass swapped in a
+        // fresh block, the original (larger) allocation is the one worth
+        // keeping.
+        let mut back = match retained {
+            Some(original) => original,
+            None => score_batch,
+        };
+        back.clear();
+        spare = back;
         if exiting {
             // One drain pass under shutdown: anything submitted between
             // the flush and now still gets scored on the next iteration;
@@ -577,5 +895,133 @@ mod tests {
         drop(b);
         let out = pending.wait().unwrap();
         assert_eq!(out.len(), s.output_dim());
+    }
+
+    #[test]
+    fn await_drained_returns_after_shutdown() {
+        let s = session();
+        let b = Batcher::new(
+            Arc::clone(&s),
+            BatcherConfig {
+                max_delay: Duration::from_secs(30),
+                flush_rows: 1024,
+                ..Default::default()
+            },
+        );
+        let pending = b.submit(&one_row(&s, 44.0)).unwrap();
+        b.shutdown();
+        b.await_drained();
+        // The drain completed before await_drained returned: the result
+        // is already in the channel.
+        assert_eq!(pending.wait().unwrap().len(), s.output_dim());
+    }
+
+    #[test]
+    fn scorer_panic_answers_in_band_and_keeps_serving() {
+        let s = session();
+        let b = Batcher::new(
+            Arc::clone(&s),
+            BatcherConfig { max_delay: Duration::ZERO, ..Default::default() },
+        );
+        b.faults().arm_scorer_panics(1);
+        let err = b.submit(&one_row(&s, 35.0)).unwrap().wait().unwrap_err();
+        match err {
+            ScoreError::Failed(why) => assert!(why.contains("panicked"), "{why}"),
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        assert_eq!(b.faults().fired_panics(), 1);
+        // The batcher survives the panic: the very next flush scores.
+        let out = b.submit(&one_row(&s, 36.0)).unwrap().wait().unwrap();
+        assert_eq!(out.len(), s.output_dim());
+    }
+
+    #[test]
+    fn queue_deadline_sheds_with_retry_hint() {
+        let s = session();
+        let b = Batcher::new(
+            Arc::clone(&s),
+            BatcherConfig {
+                max_delay: Duration::ZERO,
+                queue_deadline: Duration::from_millis(20),
+                ..Default::default()
+            },
+        );
+        // Flush 1 (the first request) sleeps 200 ms in the scorer; the
+        // second request queues behind it, ages past the 20 ms deadline,
+        // and must be shed when flush 2 starts.
+        b.faults().arm_flush_delay(1, 200);
+        let p1 = b.submit(&one_row(&s, 30.0)).unwrap();
+        std::thread::sleep(Duration::from_millis(50)); // flush 1 is now sleeping
+        let p2 = b.submit(&one_row(&s, 31.0)).unwrap();
+        assert_eq!(p1.wait().unwrap().len(), s.output_dim());
+        match p2.wait().unwrap_err() {
+            ScoreError::Shed { waited_ms, retry_after_ms } => {
+                assert!(waited_ms >= 20, "waited {waited_ms} ms");
+                assert!(retry_after_ms >= 1);
+            }
+            other => panic!("expected Shed, got {other:?}"),
+        }
+        assert_eq!(b.stats().snapshot().shed_deadline, 1);
+        // Shedding is not shutdown: the batcher keeps serving.
+        assert!(b.submit(&one_row(&s, 32.0)).unwrap().wait().is_ok());
+    }
+
+    #[test]
+    fn quota_and_admission_budget_reject_in_band() {
+        let s = session();
+        let admission = Arc::new(AdmissionControl::new(3));
+        let cfg = BatcherConfig {
+            max_delay: Duration::from_secs(30),
+            flush_rows: 1024,
+            max_queue_rows: 100,
+            quota_rows: 2,
+            ..Default::default()
+        };
+        let hot = Batcher::with_admission(
+            Arc::clone(&s),
+            cfg.clone(),
+            Arc::new(ServingStats::new()),
+            None,
+            Some(Arc::clone(&admission)),
+        );
+        let neighbor = Batcher::with_admission(
+            Arc::clone(&s),
+            cfg,
+            Arc::new(ServingStats::new()),
+            None,
+            Some(Arc::clone(&admission)),
+        );
+        // A request larger than the quota can never be accepted.
+        let mut big = s.new_block();
+        for _ in 0..3 {
+            big.append_from(&one_row(&s, 30.0));
+        }
+        assert!(matches!(
+            hot.submit(&big).unwrap_err(),
+            SubmitError::RequestTooLarge { rows: 3, capacity: 2 }
+        ));
+        // The hot model fills its quota (2 rows), then is rejected —
+        // while its neighbor still gets the remaining shared budget.
+        let _h1 = hot.submit(&one_row(&s, 31.0)).unwrap();
+        let _h2 = hot.submit(&one_row(&s, 32.0)).unwrap();
+        assert!(matches!(
+            hot.submit(&one_row(&s, 33.0)).unwrap_err(),
+            SubmitError::QuotaExceeded { pending_rows: 2, quota: 2 }
+        ));
+        assert_eq!(hot.stats().snapshot().rejected, 1);
+        let _n1 = neighbor.submit(&one_row(&s, 34.0)).unwrap();
+        assert_eq!(admission.pending_rows(), 3);
+        // The shared budget is now exhausted: the neighbor's next row is
+        // rejected by admission, not by its (empty-ish) own queue.
+        assert!(matches!(
+            neighbor.submit(&one_row(&s, 35.0)).unwrap_err(),
+            SubmitError::AdmissionFull { pending_rows: 3, capacity: 3 }
+        ));
+        // Draining gives the budget back.
+        drop(hot);
+        drop(neighbor);
+        assert_eq!(admission.pending_rows(), 0);
+        assert_eq!(_h1.wait().unwrap().len(), s.output_dim());
+        assert_eq!(_n1.wait().unwrap().len(), s.output_dim());
     }
 }

@@ -1,0 +1,242 @@
+//! Chaos test for the serving control plane: injected scorer panics,
+//! artificial flush latency and stalled/slow connections under concurrent
+//! multi-model load, with a hot swap landing mid-traffic.
+//!
+//! The acceptance contract (`docs/serving.md`, "Control plane & failure
+//! modes"):
+//!
+//! * every failure surfaces as an **in-band** `{"error": …}` reply — a
+//!   fault never closes a healthy connection or takes the server down;
+//! * a hot swap drops **zero** accepted requests (the old generation
+//!   drains to `Retired`);
+//! * a model untouched by the chaos keeps answering **bit-identically**
+//!   to its offline `predict_block`;
+//! * silent connections are reaped by the deadline, with one final
+//!   in-band notice, and counted in `timed_out_conns`.
+
+use super::batcher::BatcherConfig;
+use super::faults::FaultPlan;
+use super::registry::{Lifecycle, Registry};
+use super::server::{serve_shared, ServerConfig};
+use super::session::Session;
+use crate::dataset::synthetic;
+use crate::learner::gbt::GbtConfig;
+use crate::learner::{GradientBoostedTreesLearner, Learner};
+use crate::utils::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn session(seed: u64, trees: usize) -> Session {
+    let ds = synthetic::adult_like(200, seed);
+    let mut cfg = GbtConfig::new("income");
+    cfg.num_trees = trees;
+    cfg.max_depth = 3;
+    Session::new(GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap())
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => {
+                    let reader = BufReader::new(s.try_clone().unwrap());
+                    return Client { reader, writer: s };
+                }
+                Err(e) => {
+                    assert!(Instant::now() < deadline, "server never came up: {e}");
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        }
+    }
+
+    /// One request line → one reply line, always — the wire contract
+    /// this whole test leans on.
+    fn rpc(&mut self, line: &str) -> Json {
+        writeln!(self.writer, "{line}").expect("connection stays writable");
+        self.writer.flush().unwrap();
+        let mut resp = String::new();
+        let n = self.reader.read_line(&mut resp).expect("connection stays readable");
+        assert!(n > 0, "server closed the connection instead of replying in-band");
+        Json::parse(resp.trim()).expect("every reply is one JSON line")
+    }
+}
+
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+#[test]
+fn chaos_panics_stalls_and_hot_swap_never_take_the_server_down() {
+    // score_threads: 1 keeps flush scoring on each batcher's own scorer
+    // thread — injected panics land exactly at the panic boundary under
+    // test, and the test does not contend on a shared scoring pool.
+    let registry = Arc::new(Registry::new(BatcherConfig {
+        max_delay: Duration::from_millis(1),
+        score_threads: 1,
+        ..Default::default()
+    }));
+    registry.register("stable", session(11, 5)).unwrap();
+    registry.register("volatile", session(22, 4)).unwrap();
+
+    // Offline reference for the stable model over a fixed probe batch.
+    let probe: Vec<String> = (0..8).map(|i| format!(r#"{{"age": {}}}"#, 18 + 6 * i)).collect();
+    let stable_request = format!(r#"{{"model": "stable", "rows": [{}]}}"#, probe.join(", "));
+    let stable_entry = registry.resolve(Some("stable")).unwrap();
+    let dim = stable_entry.session().output_dim();
+    let reference = {
+        let mut block = stable_entry.session().new_block();
+        for r in &probe {
+            let row = Json::parse(r).unwrap();
+            stable_entry.session().decode_row(&mut block, &row).unwrap();
+        }
+        stable_entry.session().predict_block(&mut block)
+    };
+
+    // Arm the chaos BEFORE traffic: the volatile model's next flushes
+    // slow down then panic; the server stalls its first request lines.
+    let old_volatile = registry.resolve(Some("volatile")).unwrap();
+    let volatile_faults = Arc::clone(old_volatile.batcher().faults());
+    volatile_faults.arm_flush_delay(2, 30);
+    volatile_faults.arm_scorer_panics(3);
+    let server_faults = Arc::new(FaultPlan::new());
+    server_faults.arm_conn_stalls(2, 40);
+
+    let probe_listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = probe_listener.local_addr().unwrap();
+    drop(probe_listener);
+    let config = ServerConfig {
+        addr: addr.to_string(),
+        workers: 6,
+        // Short deadline so the stalled-connection sub-case reaps fast;
+        // live clients reply-turnaround far inside it.
+        conn_timeout: Some(Duration::from_millis(300)),
+        faults: Some(Arc::clone(&server_faults)),
+    };
+    let server_registry = Arc::clone(&registry);
+    let server = std::thread::spawn(move || serve_shared(server_registry, &config));
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let volatile_ok = Arc::new(AtomicUsize::new(0));
+    let volatile_err = Arc::new(AtomicUsize::new(0));
+
+    std::thread::scope(|scope| {
+        // Two clients hammer the untouched model: bit-identity on every
+        // single reply, throughout panics, stalls and the swap.
+        for client in 0..2usize {
+            let (stop, stable_request, reference) = (Arc::clone(&stop), &stable_request, &reference);
+            scope.spawn(move || {
+                let mut c = Client::connect(addr);
+                let mut req = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    let resp = c.rpc(stable_request);
+                    let preds = resp
+                        .req_arr("predictions")
+                        .unwrap_or_else(|e| panic!("client {client} req {req}: {e} in {resp}"));
+                    assert_eq!(preds.len(), probe_len(reference, dim));
+                    for (i, p) in preds.iter().enumerate() {
+                        let got: Vec<f64> =
+                            p.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect();
+                        assert_eq!(
+                            got.as_slice(),
+                            &reference[i * dim..(i + 1) * dim],
+                            "stable model drifted under chaos (client {client} req {req} row {i})"
+                        );
+                    }
+                    req += 1;
+                }
+            });
+        }
+        // Two clients hammer the faulted model: replies are predictions
+        // or in-band errors — never a dropped line, never a dead socket.
+        for _ in 0..2usize {
+            let (stop, ok, err) =
+                (Arc::clone(&stop), Arc::clone(&volatile_ok), Arc::clone(&volatile_err));
+            scope.spawn(move || {
+                let mut c = Client::connect(addr);
+                while !stop.load(Ordering::Relaxed) {
+                    let resp = c.rpc(r#"{"model": "volatile", "rows": [{"age": 33}]}"#);
+                    if resp.get("error").is_some() {
+                        err.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        assert_eq!(resp.req_arr("predictions").unwrap().len(), 1);
+                        ok.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+
+        // Stalled-connection sub-case: a client that never completes a
+        // request line is reaped at the deadline with one in-band notice.
+        let slow = Client::connect(addr);
+        let mut slow_reader = slow.reader;
+        let mut notice = String::new();
+        slow_reader.read_line(&mut notice).expect("reaper sends a final line");
+        assert!(notice.contains("timed out"), "unexpected reap notice: {notice:?}");
+        drop(slow_reader);
+
+        // The armed faults demonstrably fired, answered in-band.
+        wait_until("injected connection stalls", || server_faults.fired_stalls() >= 2);
+        wait_until("injected scorer panics", || {
+            volatile_faults.fired_panics() >= 3 && volatile_err.load(Ordering::Relaxed) >= 1
+        });
+        wait_until("post-panic recovery of the volatile batcher", || {
+            volatile_ok.load(Ordering::Relaxed) >= 1
+        });
+
+        // Hot swap mid-traffic: the volatile model is replaced while its
+        // clients keep sending.
+        let ok_before_swap = volatile_ok.load(Ordering::Relaxed);
+        let generation = registry.swap("volatile", session(99, 6)).unwrap();
+        assert!(generation > old_volatile.generation());
+        wait_until("old generation drained to Retired", || {
+            old_volatile.state() == Lifecycle::Retired
+        });
+        wait_until("clients served by the new generation", || {
+            volatile_ok.load(Ordering::Relaxed) > ok_before_swap + 3
+        });
+
+        stop.store(true, Ordering::Relaxed);
+    });
+
+    // Post-chaos control-plane view, over the wire.
+    let mut c = Client::connect(addr);
+    let health = c.rpc(r#"{"cmd": "health"}"#);
+    let states = health.req("states").unwrap();
+    assert_eq!(states.req_str("stable").unwrap(), "Serving");
+    assert_eq!(states.req_str("volatile").unwrap(), "Serving");
+    let transitions = health.req("transitions").unwrap().to_string();
+    assert!(transitions.contains("Retired"), "{transitions}");
+
+    let stats = c.rpc(r#"{"cmd": "stats"}"#);
+    assert!(stats.req_f64("timed_out_conns").unwrap() >= 1.0, "{stats}");
+    assert_eq!(stats.req_f64("reloads").unwrap(), 1.0, "{stats}");
+    assert!(stats.req_f64("errors").unwrap() >= 1.0, "{stats}");
+
+    // The server still serves — bit-identically — and shuts down clean.
+    let resp = c.rpc(&stable_request);
+    let preds = resp.req_arr("predictions").unwrap();
+    let got: Vec<f64> = preds[0].as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect();
+    assert_eq!(got.as_slice(), &reference[..dim]);
+    let bye = c.rpc(r#"{"cmd": "shutdown"}"#);
+    assert_eq!(bye.get("ok"), Some(&Json::Bool(true)));
+    server.join().unwrap().expect("server exits cleanly after the chaos");
+}
+
+/// Rows in the reference prediction vector.
+fn probe_len(reference: &[f64], dim: usize) -> usize {
+    reference.len() / dim
+}

@@ -1,0 +1,156 @@
+//! Fault-injection harness for the serving runtime.
+//!
+//! Compiled only under `cfg(any(test, feature = "fault-injection"))`: in
+//! release builds without the `fault-injection` feature this module — and
+//! every hook call site — vanishes, so the hot path pays nothing.
+//!
+//! A [`FaultPlan`] is a bundle of armed, self-decrementing fault budgets.
+//! Each `Batcher` owns its own plan (reachable via `Batcher::faults()`),
+//! and the TCP server accepts an optional plan through
+//! `ServerConfig::faults`; plans are per-instance `Arc`s, never global
+//! state, so parallel tests cannot contaminate each other.
+//!
+//! Three injectable fault points:
+//! - **scorer panic mid-flush** (`arm_scorer_panics`): the next N flushes
+//!   panic inside the scorer's panic boundary, emulating an engine bug.
+//!   The batcher must convert each into in-band error replies and keep
+//!   serving.
+//! - **artificial flush latency** (`arm_flush_delay`): the next N flushes
+//!   sleep before scoring, emulating a slow engine; drives the queue
+//!   deadline shedding path.
+//! - **connection stall** (`arm_conn_stalls`): the server sleeps before
+//!   processing the next N request lines, emulating a wedged worker;
+//!   drives client-visible tail latency without touching the scorer.
+//!
+//! Every fault also increments a `fired_*` counter so chaos tests can
+//! assert the fault actually happened rather than silently racing past it.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Duration;
+
+/// Armed fault budgets plus fired counters. All methods take `&self`;
+/// share a plan across threads with `Arc<FaultPlan>`.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    panic_flushes: AtomicUsize,
+    delay_flushes: AtomicUsize,
+    flush_delay_ms: AtomicU64,
+    stall_lines: AtomicUsize,
+    line_stall_ms: AtomicU64,
+    fired_panics: AtomicUsize,
+    fired_delays: AtomicUsize,
+    fired_stalls: AtomicUsize,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Arms the next `n` flushes to panic inside the scorer.
+    pub fn arm_scorer_panics(&self, n: usize) {
+        self.panic_flushes.store(n, Ordering::SeqCst);
+    }
+
+    /// Arms the next `n` flushes to sleep `ms` milliseconds before scoring.
+    pub fn arm_flush_delay(&self, n: usize, ms: u64) {
+        self.flush_delay_ms.store(ms, Ordering::SeqCst);
+        self.delay_flushes.store(n, Ordering::SeqCst);
+    }
+
+    /// Arms the next `n` request lines to stall `ms` milliseconds before
+    /// the server processes them.
+    pub fn arm_conn_stalls(&self, n: usize, ms: u64) {
+        self.line_stall_ms.store(ms, Ordering::SeqCst);
+        self.stall_lines.store(n, Ordering::SeqCst);
+    }
+
+    /// Disarms everything armed; fired counters are kept.
+    pub fn disarm(&self) {
+        self.panic_flushes.store(0, Ordering::SeqCst);
+        self.delay_flushes.store(0, Ordering::SeqCst);
+        self.stall_lines.store(0, Ordering::SeqCst);
+    }
+
+    pub fn fired_panics(&self) -> usize {
+        self.fired_panics.load(Ordering::SeqCst)
+    }
+
+    pub fn fired_delays(&self) -> usize {
+        self.fired_delays.load(Ordering::SeqCst)
+    }
+
+    pub fn fired_stalls(&self) -> usize {
+        self.fired_stalls.load(Ordering::SeqCst)
+    }
+
+    /// Atomically consumes one unit of an armed budget; false when spent.
+    fn take(counter: &AtomicUsize) -> bool {
+        counter.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |c| c.checked_sub(1)).is_ok()
+    }
+
+    /// Scorer hook, called once per flush *inside* the batcher's panic
+    /// boundary: an injected panic here is indistinguishable from an
+    /// engine panicking mid-batch.
+    pub fn on_flush(&self) {
+        if Self::take(&self.delay_flushes) {
+            self.fired_delays.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(Duration::from_millis(self.flush_delay_ms.load(Ordering::SeqCst)));
+        }
+        if Self::take(&self.panic_flushes) {
+            self.fired_panics.fetch_add(1, Ordering::SeqCst);
+            panic!("fault-injection: scorer panic mid-flush");
+        }
+    }
+
+    /// Server hook, called once per received request line.
+    pub fn on_request_line(&self) {
+        if Self::take(&self.stall_lines) {
+            self.fired_stalls.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(Duration::from_millis(self.line_stall_ms.load(Ordering::SeqCst)));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budgets_decrement_and_fired_counters_track() {
+        let p = FaultPlan::new();
+        p.arm_flush_delay(2, 0);
+        p.on_flush();
+        p.on_flush();
+        p.on_flush(); // budget spent: no third delay
+        assert_eq!(p.fired_delays(), 2);
+        assert_eq!(p.fired_panics(), 0);
+
+        p.arm_conn_stalls(1, 0);
+        p.on_request_line();
+        p.on_request_line();
+        assert_eq!(p.fired_stalls(), 1);
+    }
+
+    #[test]
+    fn armed_panic_fires_once_then_disarms() {
+        let p = FaultPlan::new();
+        p.arm_scorer_panics(1);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| p.on_flush()));
+        assert!(r.is_err());
+        assert_eq!(p.fired_panics(), 1);
+        p.on_flush(); // budget spent: no second panic
+        assert_eq!(p.fired_panics(), 1);
+    }
+
+    #[test]
+    fn disarm_clears_armed_budgets() {
+        let p = FaultPlan::new();
+        p.arm_scorer_panics(5);
+        p.arm_flush_delay(5, 1);
+        p.disarm();
+        p.on_flush();
+        assert_eq!(p.fired_panics(), 0);
+        assert_eq!(p.fired_delays(), 0);
+    }
+}

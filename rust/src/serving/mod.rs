@@ -37,12 +37,34 @@
 //!   throughput / queue-depth counters, exportable as JSON per model and
 //!   aggregated across the registry.
 //!
+//! Layered on top is a fault-tolerant **control plane**:
+//!
+//! * **Hot reload** — `{"cmd": "load"|"swap"|"unload"}` admin requests
+//!   mutate the live [`Registry`]: the incoming session is built with no
+//!   registry lock held, installed by an atomic entry swap, and the
+//!   outgoing generation drains in the background with zero accepted
+//!   requests dropped (lifecycle `Loading → Serving → Draining →
+//!   Retired`/`Failed`, surfaced by `{"cmd": "health"}`).
+//! * **Deadlines** — read/write timeouts on every accepted connection
+//!   (slowloris/idle reaping) plus a per-request queue deadline: requests
+//!   that wait too long are shed with a retryable in-band error carrying
+//!   a `retry_after_ms` hint derived from observed flush latency.
+//! * **Admission control** — per-model queue quotas and a shared
+//!   cross-model pending-row budget layered on the reject-on-full
+//!   backpressure.
+//! * **Fault injection** (the `faults` module, compiled under
+//!   `cfg(any(test, feature = "fault-injection"))`) — armed budgets for
+//!   scorer panics mid-flush, artificial flush latency and connection
+//!   stalls, driving the chaos tests; scorer panics are caught at the
+//!   flush boundary and answered as in-band errors, so one bad batch
+//!   never takes the server down.
+//!
 //! The CLI exposes all of this as `ydf serve --model=name=path …` (the
 //! flag repeats to serve several models from one port); the wire
-//! protocol is specified in `docs/serving.md` ("Server loop") and
-//! `cargo bench --bench b5_serving` tracks µs/request and requests/s
-//! across request-size × concurrency × model-count combinations in
-//! `BENCH_serving.json`.
+//! protocol is specified in `docs/serving.md` ("Server loop" and
+//! "Control plane & failure modes") and `cargo bench --bench b5_serving`
+//! tracks µs/request and requests/s across request-size × concurrency ×
+//! model-count combinations in `BENCH_serving.json`.
 //!
 //! ```
 //! use ydf::learner::gbt::GbtConfig;
@@ -69,13 +91,20 @@
 //! ```
 
 pub mod batcher;
+#[cfg(any(test, feature = "fault-injection"))]
+pub mod faults;
 pub mod registry;
 pub mod server;
 pub mod session;
 pub mod stats;
 
-pub use batcher::{Batcher, BatcherConfig, Pending, SubmitError};
-pub use registry::{ModelEntry, Registry};
-pub use server::{serve, ServerConfig};
+#[cfg(test)]
+mod chaos_tests;
+
+pub use batcher::{AdmissionControl, Batcher, BatcherConfig, Pending, ScoreError, SubmitError};
+#[cfg(any(test, feature = "fault-injection"))]
+pub use faults::FaultPlan;
+pub use registry::{Lifecycle, LoadTicket, ModelEntry, Registry};
+pub use server::{serve, serve_shared, ServerConfig};
 pub use session::{RowBlock, Session};
 pub use stats::ServingStats;

@@ -1,4 +1,5 @@
-//! Multi-model serving registry: several named models behind one server.
+//! Multi-model serving registry: several named models behind one server,
+//! hot-reloadable while serving.
 //!
 //! The paper's serving story (§3.7, §5) is one library hosting many
 //! models, each pinned to the fastest engine its structure compiles to.
@@ -14,29 +15,106 @@
 //! [`BatcherConfig::score_threads`]): flushes larger than one kernel
 //! block fan their block spans out across it, so a 512-row coalesced
 //! flush no longer scores on one thread — and N models do not multiply
-//! the scoring-thread count.
+//! the scoring-thread count. When [`BatcherConfig::admission_rows`] is
+//! set, all batchers also share one [`AdmissionControl`] budget.
+//!
+//! # Control plane
+//!
+//! The registry is mutable while serving: [`Registry::load`] adds a
+//! model, [`Registry::swap`] replaces one under an existing name, and
+//! [`Registry::unload`] removes one — each an `&self` operation safe to
+//! call from any connection worker. Every generation of every model
+//! walks the lifecycle
+//!
+//! ```text
+//! Loading -> Serving -> Draining -> Retired
+//!        \-> Failed
+//! ```
+//!
+//! A swap builds the incoming [`Session`] **without holding the registry
+//! lock** (model builds take milliseconds to seconds; reads keep
+//! resolving throughout), then atomically replaces the entry `Arc` at
+//! the same registration index — the default route and per-model stats
+//! (plus their `reloads` counter) carry over. The outgoing generation is
+//! marked `Draining`, its batcher shut down (rejecting new submissions
+//! while the drain pass answers everything already accepted — zero
+//! in-flight requests dropped), and a detached drain thread marks it
+//! `Retired` once [`Batcher::await_drained`] returns. In-flight
+//! connections holding the old entry `Arc` finish their requests against
+//! the old session; new resolutions see the new generation immediately.
 
-use super::batcher::Batcher;
+use super::batcher::{AdmissionControl, Batcher};
 use super::session::Session;
 use super::stats::{aggregate_json, ServingStats};
 use super::BatcherConfig;
 use crate::utils::json::Json;
 use crate::utils::pool::WorkerPool;
-use std::collections::HashMap;
-use std::sync::Arc;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
-/// One served model: a session pinned to its engine, the batcher that
-/// coalesces its requests, and its telemetry.
+/// Lifecycle of one generation of one served model. Stored as an atomic
+/// on the entry so readers never take the registry lock to inspect it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lifecycle {
+    /// The incoming session is being built; not yet routable.
+    Loading = 0,
+    /// Live: resolvable and scoring.
+    Serving = 1,
+    /// Swapped out or unloaded; no longer resolvable, still answering
+    /// the requests it had accepted.
+    Draining = 2,
+    /// Fully drained; every accepted request was answered.
+    Retired = 3,
+    /// The load never went live (bad path, corrupt model, name race).
+    Failed = 4,
+}
+
+impl Lifecycle {
+    pub fn name(self) -> &'static str {
+        match self {
+            Lifecycle::Loading => "Loading",
+            Lifecycle::Serving => "Serving",
+            Lifecycle::Draining => "Draining",
+            Lifecycle::Retired => "Retired",
+            Lifecycle::Failed => "Failed",
+        }
+    }
+
+    fn from_u8(x: u8) -> Lifecycle {
+        match x {
+            0 => Lifecycle::Loading,
+            1 => Lifecycle::Serving,
+            2 => Lifecycle::Draining,
+            3 => Lifecycle::Retired,
+            _ => Lifecycle::Failed,
+        }
+    }
+}
+
+/// One served model generation: a session pinned to its engine, the
+/// batcher that coalesces its requests, its telemetry, and its lifecycle
+/// state. Handed out as an `Arc` snapshot — an entry stays fully usable
+/// (scoring, draining) after it is swapped out of the registry.
 pub struct ModelEntry {
     name: String,
+    /// Registry-unique, monotonically increasing: distinguishes the
+    /// generations a name serves across swaps (connection scratch blocks
+    /// key on it).
+    generation: u64,
     session: Arc<Session>,
     batcher: Arc<Batcher>,
     stats: Arc<ServingStats>,
+    state: Arc<AtomicU8>,
 }
 
 impl ModelEntry {
     pub fn name(&self) -> &str {
         &self.name
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation
     }
 
     pub fn session(&self) -> &Arc<Session> {
@@ -50,114 +128,474 @@ impl ModelEntry {
     pub fn stats(&self) -> &Arc<ServingStats> {
         &self.stats
     }
+
+    pub fn state(&self) -> Lifecycle {
+        Lifecycle::from_u8(self.state.load(Ordering::SeqCst))
+    }
+
+    fn set_state(&self, s: Lifecycle) {
+        self.state.store(s as u8, Ordering::SeqCst);
+    }
 }
 
-/// Named collection of serving sessions sharing one batching policy and
-/// one scoring pool. The first registered model is the default route.
-pub struct Registry {
-    entries: Vec<ModelEntry>,
+/// A live view of one lifecycle record for the health report: the state
+/// cell is shared with the entry (or failed ticket), so the log shows
+/// `Draining` turning into `Retired` without bookkeeping.
+struct Transition {
+    name: String,
+    generation: u64,
+    state: Arc<AtomicU8>,
+}
+
+/// Recent lifecycle records kept for `{"cmd": "health"}`; oldest dropped
+/// beyond this.
+const TRANSITION_LOG_CAP: usize = 32;
+
+struct Inner {
+    /// Registration order; the first entry is the default route. A swap
+    /// replaces in place (order preserved); an unload removes.
+    entries: Vec<Arc<ModelEntry>>,
     by_name: HashMap<String, usize>,
+}
+
+impl Inner {
+    fn reindex(&mut self) {
+        self.by_name.clear();
+        for (i, e) in self.entries.iter().enumerate() {
+            self.by_name.insert(e.name.clone(), i);
+        }
+    }
+}
+
+/// In-progress load/swap handle from [`Registry::begin_load`]: the name
+/// is reserved and a `Loading` record published. Finish with
+/// [`Registry::complete_load`] or [`Registry::fail_load`]; dropping the
+/// ticket unreserves the name and marks the record `Failed`.
+pub struct LoadTicket {
+    name: String,
+    generation: u64,
+    state: Arc<AtomicU8>,
+    swap: bool,
+    /// Present until complete/fail; its drop releases the name
+    /// reservation.
+    guard: Option<LoadGuard>,
+}
+
+struct LoadGuard {
+    name: String,
+    loading: Arc<Mutex<HashSet<String>>>,
+}
+
+impl Drop for LoadGuard {
+    fn drop(&mut self) {
+        let mut loading = match self.loading.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        loading.remove(&self.name);
+    }
+}
+
+impl Drop for LoadTicket {
+    fn drop(&mut self) {
+        if self.guard.is_some() {
+            // Abandoned without complete_load: the attempt failed.
+            self.state.store(Lifecycle::Failed as u8, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Named collection of serving sessions sharing one batching policy, one
+/// scoring pool and (optionally) one admission budget. The first
+/// registered model is the default route. All mutating operations take
+/// `&self`: the registry is designed to be shared behind an `Arc` and
+/// administered while serving.
+pub struct Registry {
+    inner: RwLock<Inner>,
     batcher_config: BatcherConfig,
     /// Shared across every entry's batcher; `None` when flushes score
     /// single-threaded (`score_threads` resolves to 1).
     score_pool: Option<Arc<WorkerPool>>,
+    /// Shared pending-row budget across every entry's batcher; `None`
+    /// when `admission_rows` is 0.
+    admission: Option<Arc<AdmissionControl>>,
+    next_generation: AtomicU64,
+    /// Names with a load/swap in flight (duplicate-admin guard).
+    loading: Arc<Mutex<HashSet<String>>>,
+    /// Recent lifecycle records, oldest first, bounded.
+    transitions: Mutex<Vec<Transition>>,
 }
 
 impl Registry {
     /// An empty registry; `config` is applied to every model's batcher.
     /// The shared scoring pool is sized from `config.score_threads`
-    /// (`0` = the `batch_threads()` default, `1` = no pool).
+    /// (`0` = the `batch_threads()` default, `1` = no pool); the shared
+    /// admission budget from `config.admission_rows` (`0` = none).
     pub fn new(config: BatcherConfig) -> Registry {
         let score_pool = config.resolve_score_pool();
+        let admission =
+            (config.admission_rows > 0).then(|| Arc::new(AdmissionControl::new(config.admission_rows)));
         Registry {
-            entries: Vec::new(),
-            by_name: HashMap::new(),
+            inner: RwLock::new(Inner { entries: Vec::new(), by_name: HashMap::new() }),
             batcher_config: config,
             score_pool,
+            admission,
+            next_generation: AtomicU64::new(1),
+            loading: Arc::new(Mutex::new(HashSet::new())),
+            transitions: Mutex::new(Vec::new()),
         }
+    }
+
+    fn read(&self) -> std::sync::RwLockReadGuard<'_, Inner> {
+        match self.inner.read() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    fn write(&self) -> std::sync::RwLockWriteGuard<'_, Inner> {
+        match self.inner.write() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    fn log_transition(&self, name: &str, generation: u64, state: Arc<AtomicU8>) {
+        let mut log = match self.transitions.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if log.len() >= TRANSITION_LOG_CAP {
+            log.remove(0);
+        }
+        log.push(Transition { name: name.to_string(), generation, state });
     }
 
     /// Registers `session` under `name`, spinning up its batcher (and
     /// scorer thread) immediately. Errors on an empty or duplicate name —
     /// misconfiguration reports what is wrong instead of silently
-    /// shadowing an already-served model (§2.1).
-    pub fn register(&mut self, name: &str, session: Session) -> Result<(), String> {
+    /// shadowing an already-served model (§2.1). Sugar for
+    /// [`Registry::load`] discarding the generation.
+    pub fn register(&self, name: &str, session: Session) -> Result<(), String> {
+        self.load(name, session).map(|_| ())
+    }
+
+    /// Adds a *new* model while serving; errors if `name` is taken.
+    /// Returns the new generation number.
+    pub fn load(&self, name: &str, session: Session) -> Result<u64, String> {
+        let ticket = self.begin_load(name, false)?;
+        self.complete_load(ticket, session)
+    }
+
+    /// Replaces the model behind an *existing* name while serving: the
+    /// new session takes over the name (and its registration slot — a
+    /// swapped default model stays the default), the old generation
+    /// drains in the background with zero accepted requests dropped.
+    /// Returns the new generation number.
+    pub fn swap(&self, name: &str, session: Session) -> Result<u64, String> {
+        let ticket = self.begin_load(name, true)?;
+        self.complete_load(ticket, session)
+    }
+
+    /// Phase 1 of load/swap: validates the name, reserves it against
+    /// concurrent admin operations, and publishes a `Loading` lifecycle
+    /// record. The heavyweight session build then runs **without any
+    /// registry lock held** (the server does it on the requesting
+    /// connection's worker); finish with [`Registry::complete_load`] or
+    /// [`Registry::fail_load`].
+    pub fn begin_load(&self, name: &str, swap: bool) -> Result<LoadTicket, String> {
         if name.is_empty() {
             return Err("model name must not be empty".to_string());
         }
-        if self.by_name.contains_key(name) {
-            return Err(format!(
-                "model '{name}' is already registered; model names must be unique"
-            ));
+        {
+            let inner = self.read();
+            let exists = inner.by_name.contains_key(name);
+            if swap && !exists {
+                return Err(format!(
+                    "cannot swap model '{name}': not registered. Registered models: {}.",
+                    inner.entries.iter().map(|e| e.name.as_str()).collect::<Vec<_>>().join(", ")
+                ));
+            }
+            if !swap && exists {
+                return Err(format!(
+                    "model '{name}' is already registered; model names must be unique \
+                     (swap replaces a live model)"
+                ));
+            }
         }
+        {
+            let mut loading = match self.loading.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            if !loading.insert(name.to_string()) {
+                return Err(format!("a load of model '{name}' is already in progress"));
+            }
+        }
+        let generation = self.next_generation.fetch_add(1, Ordering::SeqCst);
+        let state = Arc::new(AtomicU8::new(Lifecycle::Loading as u8));
+        self.log_transition(name, generation, Arc::clone(&state));
+        Ok(LoadTicket {
+            name: name.to_string(),
+            generation,
+            state,
+            swap,
+            guard: Some(LoadGuard { name: name.to_string(), loading: Arc::clone(&self.loading) }),
+        })
+    }
+
+    /// Phase 2 of load/swap: installs the built session under the
+    /// ticket's name. The entry (and its batcher's scorer thread) is
+    /// constructed outside the write lock; only the `Vec` slot swap
+    /// happens under it. On swap, the outgoing generation starts
+    /// draining in the background.
+    pub fn complete_load(&self, mut ticket: LoadTicket, session: Session) -> Result<u64, String> {
+        // Reuse the name's stats across generations: counters (and the
+        // reloads count) describe the *name* clients route to, not one
+        // generation.
+        let prior = {
+            let inner = self.read();
+            inner.by_name.get(&ticket.name).map(|&i| Arc::clone(&inner.entries[i]))
+        };
+        let stats =
+            prior.as_ref().map(|e| Arc::clone(e.stats())).unwrap_or_else(|| Arc::new(ServingStats::new()));
         let session = Arc::new(session);
-        let stats = Arc::new(ServingStats::new());
-        let batcher = Arc::new(Batcher::with_scoring_pool(
+        let batcher = Arc::new(Batcher::with_admission(
             Arc::clone(&session),
             self.batcher_config.clone(),
             Arc::clone(&stats),
             self.score_pool.clone(),
+            self.admission.clone(),
         ));
-        self.by_name.insert(name.to_string(), self.entries.len());
-        self.entries.push(ModelEntry { name: name.to_string(), session, batcher, stats });
-        Ok(())
+        let entry = Arc::new(ModelEntry {
+            name: ticket.name.clone(),
+            generation: ticket.generation,
+            session,
+            batcher,
+            stats,
+            state: Arc::clone(&ticket.state),
+        });
+        let old = {
+            let mut inner = self.write();
+            match inner.by_name.get(&ticket.name).copied() {
+                Some(i) => {
+                    if !ticket.swap {
+                        // Unreachable while the loading-set reservation
+                        // holds; keep a loud error rather than clobber.
+                        drop(inner);
+                        return Err(format!(
+                            "model '{}' appeared while loading; use swap to replace it",
+                            ticket.name
+                        ));
+                    }
+                    Some(std::mem::replace(&mut inner.entries[i], entry))
+                }
+                None => {
+                    if ticket.swap {
+                        drop(inner);
+                        return Err(format!(
+                            "cannot swap model '{}': it was unloaded while the replacement \
+                             was loading",
+                            ticket.name
+                        ));
+                    }
+                    let at = inner.entries.len();
+                    inner.by_name.insert(ticket.name.clone(), at);
+                    inner.entries.push(entry);
+                    None
+                }
+            }
+        };
+        ticket.state.store(Lifecycle::Serving as u8, Ordering::SeqCst);
+        ticket.guard = None; // release the name reservation, keep Serving
+        if let Some(old) = old {
+            old.stats().note_reload();
+            self.log_transition(&old.name, old.generation, Arc::clone(&old.state));
+            Self::drain_detached(old);
+        }
+        Ok(ticket.generation)
+    }
+
+    /// Phase 2 of a load that could not produce a session (bad path,
+    /// corrupt file): marks the lifecycle record `Failed` and releases
+    /// the name.
+    pub fn fail_load(&self, ticket: LoadTicket) {
+        drop(ticket); // LoadTicket::drop marks Failed and unreserves
+    }
+
+    /// Removes the model behind `name` while serving. The entry drains
+    /// in the background (zero accepted requests dropped). Refuses to
+    /// remove the last model — the server always has a default route.
+    /// Returns the unloaded generation.
+    pub fn unload(&self, name: &str) -> Result<u64, String> {
+        {
+            let loading = match self.loading.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            if loading.contains(name) {
+                return Err(format!(
+                    "a load of model '{name}' is in progress; retry after it settles"
+                ));
+            }
+        }
+        let old = {
+            let mut inner = self.write();
+            let Some(i) = inner.by_name.get(name).copied() else {
+                return Err(format!(
+                    "unknown model '{name}'. Registered models: {}.",
+                    inner.entries.iter().map(|e| e.name.as_str()).collect::<Vec<_>>().join(", ")
+                ));
+            };
+            if inner.entries.len() == 1 {
+                return Err(format!(
+                    "cannot unload '{name}': it is the last serving model (the server \
+                     always keeps a default route); swap it instead"
+                ));
+            }
+            let old = inner.entries.remove(i);
+            inner.reindex();
+            old
+        };
+        let generation = old.generation;
+        self.log_transition(&old.name, generation, Arc::clone(&old.state));
+        Self::drain_detached(old);
+        Ok(generation)
+    }
+
+    /// Retires an outgoing generation off the caller's thread: shut the
+    /// batcher down (new submissions rejected in-band), then wait for
+    /// the drain pass to answer everything already accepted.
+    fn drain_detached(old: Arc<ModelEntry>) {
+        old.set_state(Lifecycle::Draining);
+        old.batcher().shutdown();
+        let handoff = Arc::clone(&old);
+        let spawned = std::thread::Builder::new()
+            .name("ydf-serving-drain".to_string())
+            .spawn(move || {
+                handoff.batcher().await_drained();
+                handoff.set_state(Lifecycle::Retired);
+            });
+        if spawned.is_err() {
+            // No thread to be had: drain inline rather than leave the
+            // record stuck in Draining.
+            old.batcher().await_drained();
+            old.set_state(Lifecycle::Retired);
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.read().entries.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.read().entries.is_empty()
     }
 
     /// Registered model names, in registration order (the first is the
     /// default route).
-    pub fn names(&self) -> Vec<&str> {
-        self.entries.iter().map(|e| e.name.as_str()).collect()
+    pub fn names(&self) -> Vec<String> {
+        self.read().entries.iter().map(|e| e.name.clone()).collect()
     }
 
-    /// The default model: the first registered. Panics on an empty
-    /// registry (the server refuses to start on one).
-    pub fn default_entry(&self) -> &ModelEntry {
-        &self.entries[0]
+    /// The default model: the first registered (position is preserved by
+    /// swaps and inherited on unload). Panics on an empty registry (the
+    /// server refuses to start on one, and unload refuses to empty it).
+    pub fn default_entry(&self) -> Arc<ModelEntry> {
+        Arc::clone(self.read().entries.first().expect("registry has no models"))
     }
 
-    pub fn get(&self, name: &str) -> Option<&ModelEntry> {
-        self.by_name.get(name).map(|&i| &self.entries[i])
+    pub fn get(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        let inner = self.read();
+        inner.by_name.get(name).map(|&i| Arc::clone(&inner.entries[i]))
     }
 
-    /// Entries in registration order (index-stable: the position matches
-    /// what [`Registry::resolve`] returns, so per-connection scratch can
-    /// be indexed by it).
-    pub fn entries(&self) -> &[ModelEntry] {
-        &self.entries
+    /// Snapshot of the entries in registration order. Owned `Arc`s: the
+    /// caller's view stays valid (scoring, draining) even if a swap
+    /// replaces an entry a microsecond later.
+    pub fn entries(&self) -> Vec<Arc<ModelEntry>> {
+        self.read().entries.iter().map(Arc::clone).collect()
     }
 
     /// Routes an optional request `"model"` field to an entry: `None`
     /// means the default model. Unknown names are a clean error listing
     /// what *is* registered — the server turns it into an in-band
-    /// `{"error": …}` reply, never a dropped connection.
-    pub fn resolve(&self, name: Option<&str>) -> Result<(usize, &ModelEntry), String> {
+    /// `{"error": …}` reply, never a dropped connection. A model that is
+    /// `Draining`/`Retired` is no longer in the registry, so routing to
+    /// it yields the same unknown-model error.
+    pub fn resolve(&self, name: Option<&str>) -> Result<Arc<ModelEntry>, String> {
+        let inner = self.read();
         match name {
-            None => Ok((0, self.default_entry())),
-            Some(n) => match self.by_name.get(n) {
-                Some(&i) => Ok((i, &self.entries[i])),
+            None => inner
+                .entries
+                .first()
+                .map(Arc::clone)
+                .ok_or_else(|| "no models are registered".to_string()),
+            Some(n) => match inner.by_name.get(n) {
+                Some(&i) => Ok(Arc::clone(&inner.entries[i])),
                 None => Err(format!(
                     "unknown model '{n}'. Registered models: {}.",
-                    self.names().join(", ")
+                    inner.entries.iter().map(|e| e.name.as_str()).collect::<Vec<_>>().join(", ")
                 )),
             },
         }
+    }
+
+    /// The shared admission budget, when configured.
+    pub fn admission(&self) -> Option<&Arc<AdmissionControl>> {
+        self.admission.as_ref()
+    }
+
+    /// `{"cmd": "health"}` fragment: each live model's lifecycle state.
+    pub fn states_json(&self) -> Json {
+        let mut j = Json::obj();
+        for e in self.read().entries.iter() {
+            j.set(&e.name, Json::Str(e.state().name().to_string()));
+        }
+        j
+    }
+
+    /// `{"cmd": "health"}` fragment: recent lifecycle records (loads,
+    /// swaps, unloads — including `Draining`/`Retired`/`Failed`
+    /// generations no longer in the registry), oldest first.
+    pub fn transitions_json(&self) -> Json {
+        let log = match self.transitions.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        Json::Arr(
+            log.iter()
+                .map(|t| {
+                    let mut j = Json::obj();
+                    j.set("model", Json::Str(t.name.clone()))
+                        .set("generation", Json::Num(t.generation as f64))
+                        .set(
+                            "state",
+                            Json::Str(
+                                Lifecycle::from_u8(t.state.load(Ordering::SeqCst)).name().to_string(),
+                            ),
+                        );
+                    j
+                })
+                .collect(),
+        )
     }
 
     /// The `{"cmd": "stats"}` payload: aggregate counters at the top
     /// level (single-model shape preserved) plus a per-model breakdown
     /// under `"models"`.
     pub fn stats_json(&self) -> Json {
+        let entries = self.entries();
         let named: Vec<(&str, &ServingStats)> =
-            self.entries.iter().map(|e| (e.name.as_str(), e.stats.as_ref())).collect();
-        aggregate_json(&named)
+            entries.iter().map(|e| (e.name.as_str(), e.stats.as_ref())).collect();
+        let mut j = aggregate_json(&named);
+        if let Some(admission) = &self.admission {
+            let mut a = Json::obj();
+            a.set("pending_rows", Json::Num(admission.pending_rows() as f64))
+                .set("capacity", Json::Num(admission.capacity() as f64));
+            j.set("admission", a);
+        }
+        j
     }
 }
 
@@ -167,6 +605,7 @@ mod tests {
     use crate::dataset::synthetic;
     use crate::learner::gbt::GbtConfig;
     use crate::learner::{GradientBoostedTreesLearner, Learner};
+    use std::time::Duration;
 
     fn session(seed: u64, trees: usize) -> Session {
         let ds = synthetic::adult_like(200, seed);
@@ -176,9 +615,24 @@ mod tests {
         Session::new(GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap())
     }
 
+    fn one_row(e: &ModelEntry, age: f64) -> super::super::RowBlock {
+        let mut block = e.session().new_block();
+        let row = crate::utils::json::Json::parse(&format!(r#"{{"age": {age}}}"#)).unwrap();
+        e.session().decode_row(&mut block, &row).unwrap();
+        block
+    }
+
+    fn await_state(e: &ModelEntry, want: Lifecycle) {
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while e.state() != want {
+            assert!(std::time::Instant::now() < deadline, "stuck in {:?}", e.state());
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
     #[test]
     fn register_resolve_and_default() {
-        let mut r = Registry::new(BatcherConfig {
+        let r = Registry::new(BatcherConfig {
             max_delay: std::time::Duration::ZERO,
             ..Default::default()
         });
@@ -187,16 +641,17 @@ mod tests {
         r.register("b", session(2, 4)).unwrap();
         assert_eq!(r.len(), 2);
         assert_eq!(r.names(), vec!["a", "b"]);
-        assert_eq!(r.resolve(None).unwrap().1.name(), "a"); // first = default
-        let (idx, b) = r.resolve(Some("b")).unwrap();
-        assert_eq!((idx, b.name()), (1, "b"));
+        assert_eq!(r.resolve(None).unwrap().name(), "a"); // first = default
+        let b = r.resolve(Some("b")).unwrap();
+        assert_eq!(b.name(), "b");
+        assert_eq!(b.state(), Lifecycle::Serving);
         let err = r.resolve(Some("zzz")).unwrap_err();
         assert!(err.contains("zzz") && err.contains("a, b"), "{err}");
     }
 
     #[test]
     fn duplicate_and_empty_names_rejected() {
-        let mut r = Registry::new(BatcherConfig::default());
+        let r = Registry::new(BatcherConfig::default());
         r.register("m", session(3, 3)).unwrap();
         assert!(r.register("m", session(4, 3)).unwrap_err().contains("already registered"));
         assert!(r.register("", session(5, 3)).unwrap_err().contains("empty"));
@@ -205,18 +660,16 @@ mod tests {
 
     #[test]
     fn per_model_requests_route_to_their_own_batcher_and_stats() {
-        let mut r = Registry::new(BatcherConfig {
+        let r = Registry::new(BatcherConfig {
             max_delay: std::time::Duration::ZERO,
             ..Default::default()
         });
         r.register("a", session(6, 3)).unwrap();
         r.register("b", session(7, 5)).unwrap();
         for (name, n) in [("a", 2usize), ("b", 3usize)] {
-            let (_, e) = r.resolve(Some(name)).unwrap();
+            let e = r.resolve(Some(name)).unwrap();
             for _ in 0..n {
-                let mut block = e.session().new_block();
-                let row = crate::utils::json::Json::parse(r#"{"age": 33}"#).unwrap();
-                e.session().decode_row(&mut block, &row).unwrap();
+                let block = one_row(&e, 33.0);
                 let out = e.batcher().submit(&block).unwrap().wait().unwrap();
                 assert_eq!(out.len(), e.session().output_dim());
                 e.stats().note_request(1, 50.0);
@@ -230,5 +683,98 @@ mod tests {
         // Batches ran on each model's own batcher.
         assert!(models.req("a").unwrap().req_f64("batches").unwrap() >= 1.0);
         assert!(models.req("b").unwrap().req_f64("batches").unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn unload_shifts_default_and_drains_accepted_requests() {
+        // Flush unreachable: only the drain pass can answer the pending
+        // request — proving unload drops nothing it accepted.
+        let r = Registry::new(BatcherConfig {
+            max_delay: Duration::from_secs(30),
+            flush_rows: 1 << 20,
+            ..Default::default()
+        });
+        r.register("a", session(10, 3)).unwrap();
+        r.register("b", session(11, 4)).unwrap();
+        let a = r.resolve(Some("a")).unwrap();
+        let pending = a.batcher().submit(&one_row(&a, 40.0)).unwrap();
+
+        let generation = r.unload("a").unwrap();
+        assert_eq!(generation, a.generation());
+        // The accepted request is still answered...
+        assert_eq!(pending.wait().unwrap().len(), a.session().output_dim());
+        // ...the old entry drains to Retired...
+        await_state(&a, Lifecycle::Retired);
+        // ...new submissions to the held entry are rejected in-band...
+        assert!(matches!(
+            a.batcher().submit(&one_row(&a, 41.0)),
+            Err(crate::serving::SubmitError::Shutdown)
+        ));
+        // ...routing no longer finds it, and the default shifted to 'b'.
+        assert!(r.resolve(Some("a")).unwrap_err().contains("unknown model"));
+        assert_eq!(r.resolve(None).unwrap().name(), "b");
+        // The last model is protected.
+        let err = r.unload("b").unwrap_err();
+        assert!(err.contains("last serving model"), "{err}");
+        // The health log remembers the retired generation.
+        let log = r.transitions_json().to_string();
+        assert!(log.contains("Retired"), "{log}");
+    }
+
+    #[test]
+    fn swap_replaces_session_preserves_slot_and_stats() {
+        let r = Registry::new(BatcherConfig {
+            max_delay: Duration::ZERO,
+            ..Default::default()
+        });
+        r.register("m", session(20, 2)).unwrap();
+        r.register("other", session(21, 3)).unwrap();
+        let old = r.resolve(Some("m")).unwrap();
+        old.stats().note_request(1, 10.0);
+        let old_out = old.batcher().submit(&one_row(&old, 44.0)).unwrap().wait().unwrap();
+
+        // Different seed and tree count: the replacement genuinely
+        // disagrees with the old generation.
+        let generation = r.swap("m", session(99, 8)).unwrap();
+        let new = r.resolve(Some("m")).unwrap();
+        assert!(generation > old.generation());
+        assert_eq!(new.generation(), generation);
+        assert_eq!(new.state(), Lifecycle::Serving);
+        // Same registration slot: 'm' is still the default route.
+        assert_eq!(r.resolve(None).unwrap().name(), "m");
+        assert_eq!(r.names(), vec!["m", "other"]);
+        // Stats carried over, and the swap was counted.
+        let snap = new.stats().snapshot();
+        assert_eq!(snap.requests, 1);
+        assert_eq!(snap.reloads, 1);
+        // The new generation scores (and disagrees with the old one).
+        let new_out = new.batcher().submit(&one_row(&new, 44.0)).unwrap().wait().unwrap();
+        assert_eq!(new_out.len(), new.session().output_dim());
+        assert_ne!(old_out, new_out);
+        // The old generation drains out.
+        await_state(&old, Lifecycle::Retired);
+        // Double-swap guard: a second swap of the same name works after
+        // the first settled (the reservation was released).
+        r.swap("m", session(100, 2)).unwrap();
+    }
+
+    #[test]
+    fn begin_load_reserves_name_and_fail_load_records_failure() {
+        let r = Registry::new(BatcherConfig::default());
+        r.register("m", session(30, 2)).unwrap();
+        let ticket = r.begin_load("incoming", false).unwrap();
+        // Reserved: a concurrent load/swap/unload of the same name is
+        // refused while the ticket is open.
+        assert!(r.begin_load("incoming", false).unwrap_err().contains("in progress"));
+        r.fail_load(ticket);
+        let log = r.transitions_json().to_string();
+        assert!(log.contains("Failed"), "{log}");
+        // The name is free again...
+        let ticket = r.begin_load("incoming", false).unwrap();
+        r.complete_load(ticket, session(31, 2)).unwrap();
+        assert_eq!(r.resolve(Some("incoming")).unwrap().state(), Lifecycle::Serving);
+        // ...and invalid admin targets stay loud.
+        assert!(r.begin_load("ghost", true).unwrap_err().contains("not registered"));
+        assert!(r.unload("ghost").unwrap_err().contains("unknown model"));
     }
 }

@@ -24,27 +24,46 @@
 //! Commands (`"model"` selects the model `health`/`spec` describe):
 //!
 //! ```text
-//! {"cmd": "health"}    -> {"ok": true, "model": …, "models": […], "engine": …}
+//! {"cmd": "health"}    -> {"ok": true, "model": …, "models": […], "states": {…}, …}
 //! {"cmd": "spec"}      -> {"model": …, "features": […], "label": …, "classes": […]}
 //! {"cmd": "stats"}     -> aggregate counters + per-model breakdown under "models"
 //! {"cmd": "shutdown"}  -> {"ok": true}, then the server stops accepting
 //! ```
 //!
+//! Admin commands — the hot-reload control plane (`"path"` is a model
+//! file on the *server's* filesystem):
+//!
+//! ```text
+//! {"cmd": "load",   "model": "fraud_v3", "path": "/models/fraud_v3.ydf"}
+//! {"cmd": "swap",   "model": "fraud",    "path": "/models/fraud_v3.ydf"}
+//! {"cmd": "unload", "model": "fraud_v1"}
+//! ```
+//!
+//! → `{"ok": true, "cmd": …, "model": …, "generation": N}`. The session
+//! build runs on the requesting connection's worker with no registry
+//! lock held — scoring traffic is never paused; a swap drains the old
+//! generation in the background with zero accepted requests dropped.
+//!
 //! Every error — malformed JSON, unknown feature, unknown model, full
-//! queue — is a `{"error": "…"}` response on the same line; the
-//! connection survives. See `docs/serving.md` ("Server loop") for the
-//! full contract.
+//! queue, a deadline-shed request (with `"retryable": true` and a
+//! `"retry_after_ms"` hint), a failed load — is a `{"error": "…"}`
+//! response on the same line; the connection survives. Connections that
+//! stay silent (or write nothing readable) longer than
+//! [`ServerConfig::conn_timeout`] are reaped with one final in-band
+//! error. See `docs/serving.md` ("Server loop", "Control plane &
+//! failure modes") for the full contract.
 
+use super::batcher::ScoreError;
 use super::registry::{ModelEntry, Registry};
-use super::session::RowBlock;
+use super::session::{RowBlock, Session};
 use crate::utils::json::Json;
 use crate::utils::pool::WorkerPool;
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Front-end configuration. `workers` bounds concurrent connections (a
 /// connection occupies its worker until the peer disconnects). Batching
@@ -54,18 +73,34 @@ pub struct ServerConfig {
     /// Bind address; port 0 picks an ephemeral port (printed on stdout).
     pub addr: String,
     pub workers: usize,
+    /// Read/write timeout applied to every accepted connection (`None`
+    /// = never time out). A worker parked on a silent peer — an idle
+    /// client, or a slowloris dribbling bytes — is reclaimed after this
+    /// long: the peer gets one in-band timeout error, the connection
+    /// closes, and `timed_out_conns` increments.
+    pub conn_timeout: Option<Duration>,
+    /// Fault plan consulted once per received request line (the
+    /// connection-stall fault point). Test-only plumbing.
+    #[cfg(any(test, feature = "fault-injection"))]
+    pub faults: Option<Arc<super::faults::FaultPlan>>,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { addr: "127.0.0.1:8123".to_string(), workers: 4 }
+        ServerConfig {
+            addr: "127.0.0.1:8123".to_string(),
+            workers: 4,
+            conn_timeout: Some(Duration::from_secs(60)),
+            #[cfg(any(test, feature = "fault-injection"))]
+            faults: None,
+        }
     }
 }
 
 /// Live-connection registry: a clone of every open stream, so shutdown
-/// can close them and unblock workers parked in `reader.lines()` —
-/// without it, one idle client connection would stall `serve()`'s worker
-/// join forever.
+/// can close them and unblock workers parked in `read_line` — without
+/// it, one idle client connection would stall `serve()`'s worker join
+/// forever (or until its `conn_timeout` fires).
 #[derive(Default)]
 struct ConnRegistry {
     streams: Mutex<HashMap<u64, TcpStream>>,
@@ -96,10 +131,9 @@ impl ConnRegistry {
 
     fn close_all(&self) {
         for (_, s) in self.lock().drain() {
-            // Read half only: unblocks workers parked in
-            // `reader.lines()` (they see EOF) while letting responses
-            // to already-accepted in-flight requests still be written
-            // before the worker exits.
+            // Read half only: unblocks workers parked reading (they see
+            // EOF) while letting responses to already-accepted in-flight
+            // requests still be written before the worker exits.
             let _ = s.shutdown(Shutdown::Read);
         }
     }
@@ -112,6 +146,14 @@ impl ConnRegistry {
 /// the exit), every model's batcher drains, and the call returns once
 /// every worker has exited.
 pub fn serve(registry: Registry, config: &ServerConfig) -> Result<(), String> {
+    serve_shared(Arc::new(registry), config)
+}
+
+/// [`serve`] over an already-shared registry: callers that keep their
+/// own `Arc<Registry>` (tests driving admin operations from outside the
+/// wire protocol, embedders running their own control loop) hand a
+/// clone here and hot-reload concurrently with the serving loop.
+pub fn serve_shared(registry: Arc<Registry>, config: &ServerConfig) -> Result<(), String> {
     if registry.is_empty() {
         return Err("cannot serve an empty registry: register at least one model".to_string());
     }
@@ -120,7 +162,6 @@ pub fn serve(registry: Registry, config: &ServerConfig) -> Result<(), String> {
     let local = listener
         .local_addr()
         .map_err(|e| format!("cannot resolve bound address: {e}"))?;
-    let registry = Arc::new(registry);
     for e in registry.entries() {
         println!(
             "serving model '{}' ({}) through engine: {}",
@@ -147,11 +188,17 @@ pub fn serve(registry: Registry, config: &ServerConfig) -> Result<(), String> {
             Ok(s) => s,
             Err(_) => continue,
         };
+        // Slowloris / idle-client protection: a worker blocked on this
+        // peer gets its thread back after conn_timeout.
+        let _ = stream.set_read_timeout(config.conn_timeout);
+        let _ = stream.set_write_timeout(config.conn_timeout);
         let id = stream.try_clone().ok().map(|c| conns.insert(c));
         let conn = Connection {
             registry: Arc::clone(&registry),
             shutdown: Arc::clone(&shutdown),
             wake_addr: local,
+            #[cfg(any(test, feature = "fault-injection"))]
+            faults: config.faults.clone(),
         };
         let w = loads
             .iter()
@@ -172,15 +219,24 @@ pub fn serve(registry: Registry, config: &ServerConfig) -> Result<(), String> {
     }
     conns.close_all(); // unblock workers parked on idle connections
     drop(pool); // join workers (in-flight requests finish)
-    drop(registry); // last Arc: every model's batcher flushes + joins
+    drop(registry); // possibly the last Arc: batchers flush + join
     println!("server stopped");
     Ok(())
 }
+
+/// Decode scratch kept per connection, keyed by model-entry generation
+/// (a swap changes the generation, so a stale block for the old dataspec
+/// can never be fed to the new session). Beyond this many cached blocks
+/// the map is reset — a connection churning through hot-swapped
+/// generations must not grow scratch without bound.
+const MAX_SCRATCH_BLOCKS: usize = 16;
 
 struct Connection {
     registry: Arc<Registry>,
     shutdown: Arc<AtomicBool>,
     wake_addr: std::net::SocketAddr,
+    #[cfg(any(test, feature = "fault-injection"))]
+    faults: Option<Arc<super::faults::FaultPlan>>,
 }
 
 impl Connection {
@@ -189,21 +245,47 @@ impl Connection {
             Ok(w) => w,
             Err(_) => return,
         };
-        let reader = BufReader::new(stream);
+        let mut reader = BufReader::new(stream);
         // Per-model decode scratch, lazily created: connections that only
         // ever talk to one model allocate one block.
-        let mut blocks: Vec<Option<RowBlock>> =
-            (0..self.registry.len()).map(|_| None).collect();
-        for line in reader.lines() {
-            let line = match line {
-                Ok(l) => l,
+        let mut blocks: HashMap<u64, RowBlock> = HashMap::new();
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) => return, // EOF: peer closed cleanly
+                Ok(_) => {}
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                    // conn_timeout fired with no complete line: reap the
+                    // connection, telling the peer why, in-band.
+                    self.note_conn_timeout();
+                    let mut j = Json::obj();
+                    j.set(
+                        "error",
+                        Json::Str(
+                            "connection timed out waiting for a complete request line; \
+                             closing (reconnect to continue)"
+                                .to_string(),
+                        ),
+                    );
+                    let _ = writeln!(writer, "{j}").and_then(|_| writer.flush());
+                    return;
+                }
                 Err(_) => return, // peer went away
-            };
+            }
             if line.trim().is_empty() {
                 continue;
             }
-            let (response, stop) = self.respond(&line, &mut blocks);
-            if writeln!(writer, "{response}").and_then(|_| writer.flush()).is_err() {
+            #[cfg(any(test, feature = "fault-injection"))]
+            if let Some(f) = &self.faults {
+                f.on_request_line();
+            }
+            let (response, stop) = self.respond(line.trim_end(), &mut blocks);
+            if let Err(e) = writeln!(writer, "{response}").and_then(|_| writer.flush()) {
+                if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) {
+                    // Peer stopped reading (slowloris on the write side).
+                    self.note_conn_timeout();
+                }
                 return;
             }
             if stop {
@@ -216,13 +298,34 @@ impl Connection {
         }
     }
 
+    /// Timed-out connections are charged to the default model's stats —
+    /// the timeout fires between requests, when no model is addressed
+    /// (the aggregate view sums it either way).
+    fn note_conn_timeout(&self) {
+        self.registry.default_entry().stats().note_conn_timeout();
+    }
+
     /// One request line → (response line, stop-serving flag).
-    fn respond(&self, line: &str, blocks: &mut [Option<RowBlock>]) -> (Json, bool) {
+    fn respond(&self, line: &str, blocks: &mut HashMap<u64, RowBlock>) -> (Json, bool) {
         let t0 = Instant::now();
         let request = match Json::parse(line) {
             Ok(j) => j,
             Err(e) => return (self.error_default(format!("invalid JSON: {e}")), false),
         };
+        // Admin commands dispatch before routing: a load targets a name
+        // that is *not yet* registered, so resolving first would bounce
+        // it with an unknown-model error. Only the strict admin shape
+        // (reserved keys exclusively) short-circuits — anything else
+        // falls through to normal routing and fails loudly there.
+        if let Some(cmd @ ("load" | "swap" | "unload")) =
+            request.get("cmd").and_then(|c| c.as_str())
+        {
+            let reserved_only = matches!(&request, Json::Obj(m)
+                if m.keys().all(|k| k == "cmd" || k == "model" || k == "path"));
+            if reserved_only {
+                return (self.admin(cmd, &request), false);
+            }
+        }
         // Routing (docs/serving.md): the top-level "model" string selects
         // the serving session. It is protocol-reserved in the canonical
         // {"rows": …} form and in command form, where the top level holds
@@ -244,10 +347,12 @@ impl Connection {
             }
             _ => None,
         };
-        let (idx, entry) = match self.registry.resolve(routed) {
+        let entry = match self.registry.resolve(routed) {
             Ok(x) => x,
             // Unknown model: a clean in-band error reply naming the
-            // registered models — never a dropped connection.
+            // registered models — never a dropped connection. A model
+            // mid-drain after swap/unload lands here too: it is no
+            // longer routable the instant the registry changed.
             Err(e) => return (self.error_default(e), false),
         };
         let session = entry.session();
@@ -261,7 +366,7 @@ impl Connection {
             let reserved_only = matches!(&request, Json::Obj(m)
                 if m.keys().all(|k| k == "cmd" || k == "model"));
             if reserved_only || !session.has_column("cmd") {
-                return self.command(cmd, entry);
+                return self.command(cmd, &entry);
             }
         }
         let rows: Vec<&Json> = match request.get("rows") {
@@ -269,7 +374,7 @@ impl Connection {
             Some(other) if !session.has_column("rows") => {
                 return (
                     self.error(
-                        entry,
+                        &entry,
                         format!("\"rows\" must be an array of feature objects, got {other}"),
                     ),
                     false,
@@ -287,7 +392,7 @@ impl Connection {
                     if !session.has_column("model") {
                         return (
                             self.error(
-                                entry,
+                                &entry,
                                 format!(
                                     "the single-row shorthand always addresses the default \
                                      model; to route to '{m}', use \
@@ -302,25 +407,48 @@ impl Connection {
             }
         };
         if rows.is_empty() {
-            return (self.error(entry, "request contains no rows".to_string()), false);
+            return (self.error(&entry, "request contains no rows".to_string()), false);
         }
-        let block = blocks[idx].get_or_insert_with(|| session.new_block());
+        // Scratch is keyed by entry *generation*: a hot swap of this
+        // model name must never decode into a block shaped for the old
+        // dataspec.
+        if blocks.len() >= MAX_SCRATCH_BLOCKS && !blocks.contains_key(&entry.generation()) {
+            blocks.clear();
+        }
+        let block = blocks
+            .entry(entry.generation())
+            .or_insert_with(|| session.new_block());
         block.clear();
         for row in rows {
             if let Err(e) = session.decode_row(block, row) {
-                return (self.error(entry, e), false);
+                return (self.error(&entry, e), false);
             }
         }
         let n = block.rows();
         let pending = match entry.batcher().submit(block) {
             Ok(p) => p,
-            // QueueFull is additionally counted in the `rejected` counter
-            // by the batcher; every error response increments `errors`.
-            Err(e) => return (self.error(entry, e.to_string()), false),
+            // Rejections (full queue, quota, admission budget) are
+            // additionally counted in the `rejected` counter by the
+            // batcher; every error response increments `errors`.
+            Err(e) => return (self.error(&entry, e.to_string()), false),
         };
         let flat = match pending.wait() {
             Ok(f) => f,
-            Err(e) => return (self.error(entry, e), false),
+            Err(ScoreError::Shed { waited_ms, retry_after_ms }) => {
+                // Shed by the queue deadline: retryable by contract, and
+                // the hint tells a well-behaved client when.
+                let mut j = self.error(
+                    &entry,
+                    format!(
+                        "request shed: queued {waited_ms} ms without being scored \
+                         (queue deadline exceeded); retry in {retry_after_ms} ms"
+                    ),
+                );
+                j.set("retryable", Json::Bool(true))
+                    .set("retry_after_ms", Json::Num(retry_after_ms as f64));
+                return (j, false);
+            }
+            Err(e) => return (self.error(&entry, e.to_string()), false),
         };
         let dim = session.output_dim();
         let predictions = Json::Arr(
@@ -335,6 +463,49 @@ impl Connection {
         (resp, false)
     }
 
+    /// Control-plane commands: load/swap build the session on *this*
+    /// worker with no registry lock held (scoring never pauses), then
+    /// atomically install it.
+    fn admin(&self, cmd: &str, request: &Json) -> Json {
+        let Some(name) = request.get("model").and_then(|m| m.as_str()) else {
+            return self.error_default(format!(
+                "'{cmd}' needs a \"model\" field naming the target model"
+            ));
+        };
+        let result = match cmd {
+            "unload" => self.registry.unload(name),
+            _ => {
+                let Some(path) = request.get("path").and_then(|p| p.as_str()) else {
+                    return self.error_default(format!(
+                        "'{cmd}' needs a \"path\" field: a model file on the server's \
+                         filesystem"
+                    ));
+                };
+                match self.registry.begin_load(name, cmd == "swap") {
+                    Err(e) => Err(e),
+                    Ok(ticket) => match Session::open(std::path::Path::new(path)) {
+                        Ok(session) => self.registry.complete_load(ticket, session),
+                        Err(e) => {
+                            self.registry.fail_load(ticket);
+                            Err(format!("cannot {cmd} model '{name}': {e}"))
+                        }
+                    },
+                }
+            }
+        };
+        match result {
+            Ok(generation) => {
+                let mut j = Json::obj();
+                j.set("ok", Json::Bool(true))
+                    .set("cmd", Json::Str(cmd.to_string()))
+                    .set("model", Json::Str(name.to_string()))
+                    .set("generation", Json::Num(generation as f64));
+                j
+            }
+            Err(e) => self.error_default(e),
+        }
+    }
+
     fn command(&self, cmd: &str, entry: &ModelEntry) -> (Json, bool) {
         match cmd {
             "health" => {
@@ -347,10 +518,12 @@ impl Connection {
                             self.registry
                                 .names()
                                 .into_iter()
-                                .map(|n| Json::Str(n.to_string()))
+                                .map(Json::Str)
                                 .collect(),
                         ),
                     )
+                    .set("states", self.registry.states_json())
+                    .set("transitions", self.registry.transitions_json())
                     .set("engine", Json::Str(entry.session().engine_name()))
                     .set(
                         "model_type",
@@ -373,7 +546,10 @@ impl Connection {
             other => (
                 self.error(
                     entry,
-                    format!("unknown command '{other}' (known: health, spec, stats, shutdown)"),
+                    format!(
+                        "unknown command '{other}' (known: health, spec, stats, shutdown, \
+                         load, swap, unload)"
+                    ),
                 ),
                 false,
             ),
@@ -389,9 +565,10 @@ impl Connection {
     }
 
     /// Error reply for requests that never resolved to a model (parse
-    /// failures, unknown model names): counted against the default model.
+    /// failures, unknown model names, admin failures): counted against
+    /// the default model.
     fn error_default(&self, message: String) -> Json {
-        self.error(self.registry.default_entry(), message)
+        self.error(&self.registry.default_entry(), message)
     }
 }
 
@@ -403,7 +580,6 @@ mod tests {
     use crate::learner::{GradientBoostedTreesLearner, Learner};
     use crate::serving::session::Session;
     use crate::serving::BatcherConfig;
-    use std::time::Duration;
 
     fn test_session(seed: u64, trees: usize) -> Session {
         let ds = synthetic::adult_like(200, seed);
@@ -414,7 +590,7 @@ mod tests {
     }
 
     fn two_model_conn() -> (Connection, Arc<Registry>) {
-        let mut registry = Registry::new(BatcherConfig {
+        let registry = Registry::new(BatcherConfig {
             max_delay: Duration::ZERO,
             ..Default::default()
         });
@@ -425,6 +601,7 @@ mod tests {
             registry: Arc::clone(&registry),
             shutdown: Arc::new(AtomicBool::new(false)),
             wake_addr: "127.0.0.1:1".parse().unwrap(),
+            faults: None,
         };
         (conn, registry)
     }
@@ -432,7 +609,7 @@ mod tests {
     #[test]
     fn respond_handles_requests_commands_and_errors() {
         let (c, registry) = two_model_conn();
-        let mut blocks: Vec<Option<RowBlock>> = vec![None, None];
+        let mut blocks: HashMap<u64, RowBlock> = HashMap::new();
 
         // Multi-row request (default model: "a").
         let (resp, stop) = c.respond(
@@ -481,6 +658,8 @@ mod tests {
         assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
         assert_eq!(resp.req_str("model").unwrap(), "a");
         assert_eq!(resp.req_arr("models").unwrap().len(), 2);
+        assert_eq!(resp.req("states").unwrap().req_str("a").unwrap(), "Serving");
+        assert_eq!(resp.req("states").unwrap().req_str("b").unwrap(), "Serving");
         let (resp, _) = c.respond(r#"{"cmd": "spec", "model": "b"}"#, &mut blocks);
         assert_eq!(resp.req_str("label").unwrap(), "income");
         assert_eq!(resp.req_str("model").unwrap(), "b");
@@ -499,5 +678,67 @@ mod tests {
         assert_eq!(models.req("b").unwrap().req_f64("requests").unwrap(), 1.0);
         assert!(models.req("a").unwrap().req_f64("errors").unwrap() >= 5.0);
         assert_eq!(registry.get("b").unwrap().stats().snapshot().errors, 0);
+    }
+
+    #[test]
+    fn admin_load_swap_unload_round_trip_over_respond() {
+        let (c, registry) = two_model_conn();
+        let mut blocks: HashMap<u64, RowBlock> = HashMap::new();
+        let dir = std::env::temp_dir().join(format!(
+            "ydf_admin_test_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.ydf.json");
+        let incoming = test_session(42, 7);
+        crate::model::io::save_model(incoming.model(), &path).unwrap();
+        let path_str = path.to_str().unwrap();
+
+        // load: a third model appears and serves.
+        let (resp, stop) =
+            c.respond(&format!(r#"{{"cmd": "load", "model": "c", "path": "{path_str}"}}"#), &mut blocks);
+        assert!(!stop);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        let gen_load = resp.req_f64("generation").unwrap();
+        let (resp, _) = c.respond(r#"{"model": "c", "rows": [{"age": 50}]}"#, &mut blocks);
+        assert_eq!(resp.req_str("model").unwrap(), "c");
+
+        // swap: same name, new generation; predictions switch to the new
+        // session's (model "c" file scored through name "b").
+        let before = c.respond(r#"{"model": "b", "rows": [{"age": 50}]}"#, &mut blocks).0;
+        let (resp, _) =
+            c.respond(&format!(r#"{{"cmd": "swap", "model": "b", "path": "{path_str}"}}"#), &mut blocks);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        assert!(resp.req_f64("generation").unwrap() > gen_load);
+        let after = c.respond(r#"{"model": "b", "rows": [{"age": 50}]}"#, &mut blocks).0;
+        assert_ne!(
+            before.req_arr("predictions").unwrap(),
+            after.req_arr("predictions").unwrap()
+        );
+
+        // Admin errors are in-band: bad path fails the load, the name
+        // stays free, and the failure lands in the transition log.
+        let (resp, _) = c.respond(
+            r#"{"cmd": "load", "model": "d", "path": "/nonexistent/nope.json"}"#,
+            &mut blocks,
+        );
+        assert!(resp.req_str("error").unwrap().contains("cannot load"), "{resp}");
+        let (resp, _) = c.respond(r#"{"cmd": "health"}"#, &mut blocks);
+        assert!(resp.to_string().contains("Failed"), "{resp}");
+        // Missing fields are named.
+        let (resp, _) = c.respond(r#"{"cmd": "swap", "model": "b"}"#, &mut blocks);
+        assert!(resp.req_str("error").unwrap().contains("path"));
+        let (resp, _) = c.respond(r#"{"cmd": "unload"}"#, &mut blocks);
+        assert!(resp.req_str("error").unwrap().contains("model"));
+
+        // unload: "c" disappears from routing.
+        let (resp, _) = c.respond(r#"{"cmd": "unload", "model": "c"}"#, &mut blocks);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        let (resp, _) = c.respond(r#"{"model": "c", "rows": [{"age": 50}]}"#, &mut blocks);
+        assert!(resp.req_str("error").unwrap().contains("unknown model"));
+        assert_eq!(registry.names(), vec!["a", "b"]);
+
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

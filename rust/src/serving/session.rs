@@ -53,6 +53,18 @@ impl RowBlock {
         self.rows += other.rows;
     }
 
+    /// Appends `len` rows of `other` starting at row `start`: the
+    /// batcher's deadline-shed pass re-packs a flush's surviving rows into
+    /// a fresh block without re-decoding the original requests.
+    pub fn append_rows(&mut self, other: &RowBlock, start: usize, len: usize) {
+        debug_assert!(start + len <= other.rows);
+        for (dst, src) in self.ds.columns.iter_mut().zip(&other.ds.columns) {
+            dst.extend_from_range(src, start, start + len)
+                .expect("blocks from the same session share semantics");
+        }
+        self.rows += len;
+    }
+
     /// The block as a columnar dataset, row count synced. Only valid until
     /// the next mutation. Public so tests can pin the decode layer against
     /// independently built columnar ground truth.

@@ -63,6 +63,9 @@ pub struct ServingStats {
     rows: AtomicU64,
     errors: AtomicU64,
     rejected: AtomicU64,
+    shed_deadline: AtomicU64,
+    timed_out_conns: AtomicU64,
+    reloads: AtomicU64,
     batches: AtomicU64,
     batched_rows: AtomicU64,
     batched_requests: AtomicU64,
@@ -79,6 +82,9 @@ pub struct StatsSnapshot {
     pub rows: u64,
     pub errors: u64,
     pub rejected: u64,
+    pub shed_deadline: u64,
+    pub timed_out_conns: u64,
+    pub reloads: u64,
     pub batches: u64,
     pub batched_rows: u64,
     pub batched_requests: u64,
@@ -99,6 +105,9 @@ impl ServingStats {
             rows: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            shed_deadline: AtomicU64::new(0),
+            timed_out_conns: AtomicU64::new(0),
+            reloads: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_rows: AtomicU64::new(0),
             batched_requests: AtomicU64::new(0),
@@ -121,9 +130,25 @@ impl ServingStats {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// One submission rejected by the bounded queue (backpressure).
+    /// One submission rejected by the bounded queue, a per-model quota or
+    /// the shared admission budget (backpressure).
     pub fn note_rejected(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One accepted request shed at flush time by the queue deadline.
+    pub fn note_shed(&self) {
+        self.shed_deadline.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One connection closed by the read/write idle timeout.
+    pub fn note_conn_timeout(&self) {
+        self.timed_out_conns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One hot reload (swap) of the model behind this stats handle.
+    pub fn note_reload(&self) {
+        self.reloads.fetch_add(1, Ordering::Relaxed);
     }
 
     /// One scored batch coalescing `requests` requests into `rows` rows.
@@ -145,6 +170,9 @@ impl ServingStats {
             rows: self.rows.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            shed_deadline: self.shed_deadline.load(Ordering::Relaxed),
+            timed_out_conns: self.timed_out_conns.load(Ordering::Relaxed),
+            reloads: self.reloads.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             batched_rows: self.batched_rows.load(Ordering::Relaxed),
             batched_requests: self.batched_requests.load(Ordering::Relaxed),
@@ -183,13 +211,17 @@ impl ServingStats {
     pub fn report(&self) -> String {
         let s = self.snapshot();
         let mut out = format!(
-            "requests: {} ({} rows, {} errors, {} rejected)\n\
+            "requests: {} ({} rows, {} errors, {} rejected, {} deadline-shed)\n\
+             lifecycle: {} reloads, {} timed-out connections\n\
              batches: {} (mean {:.1} rows/batch, {:.1} requests/batch)\n\
              queue: {} rows now, {} rows peak\n\nrequest latency (us):\n",
             s.requests,
             s.rows,
             s.errors,
             s.rejected,
+            s.shed_deadline,
+            s.reloads,
+            s.timed_out_conns,
             s.batches,
             if s.batches > 0 { s.batched_rows as f64 / s.batches as f64 } else { 0.0 },
             if s.batches > 0 { s.batched_requests as f64 / s.batches as f64 } else { 0.0 },
@@ -223,6 +255,9 @@ fn counters_json(s: &StatsSnapshot) -> Json {
         .set("rows", Json::Num(s.rows as f64))
         .set("errors", Json::Num(s.errors as f64))
         .set("rejected", Json::Num(s.rejected as f64))
+        .set("shed_deadline", Json::Num(s.shed_deadline as f64))
+        .set("timed_out_conns", Json::Num(s.timed_out_conns as f64))
+        .set("reloads", Json::Num(s.reloads as f64))
         .set("batches", Json::Num(s.batches as f64))
         .set("batched_rows", Json::Num(s.batched_rows as f64))
         .set("batched_requests", Json::Num(s.batched_requests as f64))
@@ -281,6 +316,9 @@ pub fn aggregate_json(named: &[(&str, &ServingStats)]) -> Json {
         total.rows += s.rows;
         total.errors += s.errors;
         total.rejected += s.rejected;
+        total.shed_deadline += s.shed_deadline;
+        total.timed_out_conns += s.timed_out_conns;
+        total.reloads += s.reloads;
         total.batches += s.batches;
         total.batched_rows += s.batched_rows;
         total.batched_requests += s.batched_requests;
@@ -332,6 +370,10 @@ mod tests {
         s.note_request(8, 480.0);
         s.note_error();
         s.note_rejected();
+        s.note_shed();
+        s.note_shed();
+        s.note_conn_timeout();
+        s.note_reload();
         s.note_batch(9, 2);
         s.set_queue_rows(5);
         s.set_queue_rows(2);
@@ -340,11 +382,17 @@ mod tests {
         assert_eq!(snap.rows, 9);
         assert_eq!(snap.errors, 1);
         assert_eq!(snap.rejected, 1);
+        assert_eq!(snap.shed_deadline, 2);
+        assert_eq!(snap.timed_out_conns, 1);
+        assert_eq!(snap.reloads, 1);
         assert_eq!(snap.batches, 1);
         assert_eq!(snap.queue_rows, 2);
         assert_eq!(snap.queue_rows_peak, 5);
         let j = s.to_json();
         assert_eq!(j.req_f64("requests").unwrap(), 2.0);
+        assert_eq!(j.req_f64("shed_deadline").unwrap(), 2.0);
+        assert_eq!(j.req_f64("timed_out_conns").unwrap(), 1.0);
+        assert_eq!(j.req_f64("reloads").unwrap(), 1.0);
         assert_eq!(j.req_f64("mean_batch_rows").unwrap(), 9.0);
         let lat = j.req("latency").unwrap();
         assert_eq!(lat.req_f64("count").unwrap(), 2.0);
@@ -374,8 +422,14 @@ mod tests {
         a.set_queue_rows(7);
         a.set_queue_rows(0);
         b.set_queue_rows(3);
+        a.note_shed();
+        b.note_reload();
+        b.note_conn_timeout();
         let j = aggregate_json(&[("a", &a), ("b", &b)]);
         assert_eq!(j.req_f64("requests").unwrap(), 3.0);
+        assert_eq!(j.req_f64("shed_deadline").unwrap(), 1.0);
+        assert_eq!(j.req_f64("reloads").unwrap(), 1.0);
+        assert_eq!(j.req_f64("timed_out_conns").unwrap(), 1.0);
         assert_eq!(j.req_f64("rows").unwrap(), 5.0);
         assert_eq!(j.req_f64("errors").unwrap(), 1.0);
         assert_eq!(j.req_f64("batches").unwrap(), 2.0);

@@ -86,7 +86,15 @@ impl WorkerPool {
                     .name(format!("ydf-worker-{w}"))
                     .spawn(move || {
                         while let Ok(job) = rx.recv() {
-                            job();
+                            // A panicking job must not take the worker with
+                            // it: the pool is long-lived and shared (every
+                            // serving model's flush spans land here), and a
+                            // dead worker would silently degrade all future
+                            // work. The panic is contained to the job;
+                            // `run_scoped`/`broadcast` accounting still
+                            // notices the loss because the job's completion
+                            // signal is dropped unsent.
+                            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
                         }
                     })
                     .expect("failed to spawn worker"),
@@ -115,8 +123,10 @@ impl WorkerPool {
     /// threads per flush.
     ///
     /// Jobs are placed round-robin. With one worker (or one job) the jobs
-    /// run inline on the caller's thread. Panics if a worker dies before
-    /// completing its jobs (the borrows would otherwise be unguarded).
+    /// run inline on the caller's thread. Panics if any job is lost — it
+    /// panicked mid-run, or its worker died — because the caller's borrows
+    /// would otherwise be unguarded; the workers themselves survive a
+    /// panicking job.
     pub fn run_scoped<'env, F>(&self, jobs: Vec<F>)
     where
         F: FnOnce() + Send + 'env,
@@ -169,7 +179,7 @@ impl WorkerPool {
         }
         assert_eq!(
             completed, n_jobs,
-            "worker pool lost {} scoped job(s): a worker died mid-run",
+            "worker pool lost {} scoped job(s): a job panicked or a worker died mid-run",
             n_jobs - completed
         );
     }
@@ -189,8 +199,12 @@ impl WorkerPool {
                 let _ = done.send(());
             });
         }
+        // Without this drop a lost job (panicked, or its worker died)
+        // would leave the original sender alive and `recv` blocked
+        // forever — fail loudly instead of hanging.
+        drop(done_tx);
         for _ in 0..self.senders.len() {
-            done_rx.recv().expect("worker died");
+            done_rx.recv().expect("a broadcast job was lost: it panicked or its worker died");
         }
     }
 }
@@ -285,5 +299,49 @@ mod tests {
         let (tx, rx) = std::sync::mpsc::channel();
         pool.submit_to(1, move || tx.send(42).unwrap());
         assert_eq!(rx.recv().unwrap(), 42);
+    }
+
+    #[test]
+    fn worker_survives_panicking_job() {
+        let pool = WorkerPool::new(2);
+        pool.submit_to(0, || panic!("injected job panic"));
+        // The same worker is still alive and processing its queue.
+        let (tx, rx) = std::sync::mpsc::channel();
+        pool.submit_to(0, move || tx.send(7).unwrap());
+        assert_eq!(rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap(), 7);
+    }
+
+    #[test]
+    fn run_scoped_reports_lost_jobs_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        // A panicking scoped job is reported to the caller once every
+        // surviving job has finished (the borrows are then dead)...
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_scoped(vec![
+                Box::new(|| {}) as Box<dyn FnOnce() + Send>,
+                Box::new(|| panic!("injected scoped-job panic")),
+                Box::new(|| {}),
+                Box::new(|| {}),
+            ]);
+        }));
+        let payload = r.unwrap_err();
+        let message = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(message.contains("lost 1 scoped job"), "{message}");
+        // ...and the workers survived: the pool still completes new work.
+        let hits = AtomicUsize::new(0);
+        pool.run_scoped(
+            (0..4)
+                .map(|_| {
+                    || {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    }
+                })
+                .collect::<Vec<_>>(),
+        );
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
     }
 }

@@ -222,7 +222,7 @@ fn shutdown_races_queue_full_rejection() {
 #[test]
 fn two_models_served_concurrently_stay_bit_identical() {
     let rows = adult_json_rows(120);
-    let mut registry = Registry::new(BatcherConfig {
+    let registry = Registry::new(BatcherConfig {
         max_delay: Duration::from_micros(300),
         score_threads: 2,
         ..Default::default()
@@ -236,7 +236,7 @@ fn two_models_served_concurrently_stay_bit_identical() {
     let references: Vec<Vec<f64>> = ["a", "b"]
         .iter()
         .map(|name| {
-            let (_, entry) = registry.resolve(Some(name)).unwrap();
+            let entry = registry.resolve(Some(name)).unwrap();
             let mut block = decode_all(entry.session(), &rows);
             entry.session().predict_block(&mut block)
         })
@@ -252,7 +252,7 @@ fn two_models_served_concurrently_stay_bit_identical() {
             scope.spawn(move || {
                 let model = client % 2;
                 let name = if model == 0 { "a" } else { "b" };
-                let (_, entry) = registry.resolve(Some(name)).unwrap();
+                let entry = registry.resolve(Some(name)).unwrap();
                 let dim = entry.session().output_dim();
                 for req in 0..15usize {
                     let start = (client * 15 + req) * 8 % (rows.len() - 8);
@@ -278,7 +278,7 @@ fn tcp_server_round_trip() {
     use std::io::{BufRead, BufReader, Write};
     use std::net::TcpStream;
 
-    let mut registry = Registry::new(BatcherConfig {
+    let registry = Registry::new(BatcherConfig {
         max_delay: Duration::ZERO,
         ..Default::default()
     });
@@ -292,7 +292,11 @@ fn tcp_server_round_trip() {
     let addr = probe.local_addr().unwrap();
     drop(probe);
 
-    let config = ydf::serving::ServerConfig { addr: addr.to_string(), workers: 2 };
+    let config = ydf::serving::ServerConfig {
+        addr: addr.to_string(),
+        workers: 2,
+        ..Default::default()
+    };
     let server = std::thread::spawn(move || ydf::serving::serve(registry, &config));
 
     // Wait for the listener to come up.
@@ -382,4 +386,96 @@ fn tcp_server_round_trip() {
     assert_eq!(bye.get("ok"), Some(&Json::Bool(true)));
     server.join().unwrap().expect("server exits cleanly");
     drop(idle);
+}
+
+/// Hot-swap isolation: while one model is swapped repeatedly under
+/// concurrent load, a neighboring model's predictions stay bit-identical
+/// to its offline `predict_block`, every request accepted by a draining
+/// generation is still answered (zero drops), and clients of the swapped
+/// name converge to the new generation.
+#[test]
+fn untouched_model_bit_identical_while_neighbor_swaps() {
+    let rows = adult_json_rows(64);
+    let registry = Arc::new(Registry::new(BatcherConfig {
+        max_delay: Duration::from_micros(200),
+        ..Default::default()
+    }));
+    registry.register("keep", common::adult_session_owned(300, 71, 6, 4)).unwrap();
+    registry.register("churn", common::adult_session_owned(300, 72, 4, 3)).unwrap();
+
+    // Offline reference through the exact session behind "keep".
+    let keep = registry.resolve(Some("keep")).unwrap();
+    let reference = {
+        let mut block = decode_all(keep.session(), &rows);
+        keep.session().predict_block(&mut block)
+    };
+    let dim = keep.session().output_dim();
+
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    std::thread::scope(|scope| {
+        // 3 clients hammering "keep": bit-identity on every response.
+        for client in 0..3usize {
+            let registry = Arc::clone(&registry);
+            let (rows, reference, stop) = (&rows, &reference, Arc::clone(&stop));
+            scope.spawn(move || {
+                let mut req = 0usize;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let start = (client * 13 + req * 7) % (rows.len() - 8);
+                    let entry = registry.resolve(Some("keep")).unwrap();
+                    let block = decode_all(entry.session(), &rows[start..start + 8]);
+                    let out = entry.batcher().submit(&block).unwrap().wait().unwrap();
+                    assert_eq!(
+                        out.as_slice(),
+                        &reference[start * dim..(start + 8) * dim],
+                        "'keep' drifted during a neighbor swap (client {client} req {req})"
+                    );
+                    req += 1;
+                }
+            });
+        }
+        // 2 clients hammering "churn": every *accepted* request must be
+        // answered even when its generation is mid-drain; a submit that
+        // loses the race to the swap sees a clean Shutdown rejection and
+        // re-resolves.
+        for client in 0..2usize {
+            let registry = Arc::clone(&registry);
+            let (rows, stop) = (&rows, Arc::clone(&stop));
+            scope.spawn(move || {
+                let mut req = 0usize;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let start = (client * 11 + req * 5) % (rows.len() - 4);
+                    let entry = registry.resolve(Some("churn")).unwrap();
+                    let block = decode_all(entry.session(), &rows[start..start + 4]);
+                    match entry.batcher().submit(&block) {
+                        Ok(pending) => {
+                            let out = pending.wait().expect("accepted requests are never dropped");
+                            assert_eq!(out.len(), 4 * entry.session().output_dim());
+                            req += 1;
+                        }
+                        Err(SubmitError::Shutdown) => continue, // swapped out: re-resolve
+                        Err(e) => panic!("unexpected rejection: {e}"),
+                    }
+                }
+            });
+        }
+        // Main thread: swap "churn" three times mid-traffic.
+        let mut last_generation = 0;
+        for round in 0..3u64 {
+            std::thread::sleep(Duration::from_millis(30));
+            let incoming = common::adult_session_owned(300, 80 + round, 3 + round as usize, 3);
+            let generation = registry.swap("churn", incoming).unwrap();
+            assert!(generation > last_generation);
+            last_generation = generation;
+        }
+        std::thread::sleep(Duration::from_millis(30));
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    });
+
+    // The surviving registry routes to the last generation, still Serving.
+    let churn = registry.resolve(Some("churn")).unwrap();
+    assert_eq!(churn.state(), ydf::serving::Lifecycle::Serving);
+    // Old generations drained out; the health log kept their trail.
+    let log = registry.transitions_json().to_string();
+    assert!(log.contains("Serving"), "{log}");
+    assert_eq!(registry.stats_json().req_f64("reloads").unwrap(), 3.0);
 }

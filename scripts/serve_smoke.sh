@@ -3,8 +3,11 @@
 # serve both behind one ephemeral port, and drive the multi-model wire
 # protocol end to end: routed and default requests bit-identical to each
 # model's offline `ydf predict` output, per-model stats, unknown-model
-# and malformed-input error replies on a surviving connection, protocol
-# shutdown. Exits non-zero on any mismatch.
+# and malformed-input error replies on a surviving connection, a live
+# hot swap under concurrent traffic (zero dropped requests, post-swap
+# replies bit-identical to the replacement's offline `ydf predict`), a
+# load/unload round trip, and protocol shutdown. Exits non-zero on any
+# mismatch.
 set -euo pipefail
 
 BIN=${BIN:-./target/release/ydf}
@@ -29,12 +32,18 @@ echo "serve-smoke: training two tiny models (GBT + RF)"
 "$BIN" train --dataset=csv:"$TMP/iris.csv" --label=label \
     --learner=RANDOM_FOREST --param:num_trees=7 \
     --output="$TMP/model_rf.json" >/dev/null
+# A third model to hot-swap in for "gbt" while traffic is in flight.
+"$BIN" train --dataset=csv:"$TMP/iris.csv" --label=label \
+    --learner=GRADIENT_BOOSTED_TREES --param:num_trees=9 \
+    --output="$TMP/model_gbt2.json" >/dev/null
 
-echo "serve-smoke: computing offline batch predictions for both models"
+echo "serve-smoke: computing offline batch predictions for all models"
 "$BIN" predict --dataset=csv:"$TMP/iris.csv" --model="$TMP/model_gbt.json" \
     --output=csv:"$TMP/preds_gbt.csv" >/dev/null
 "$BIN" predict --dataset=csv:"$TMP/iris.csv" --model="$TMP/model_rf.json" \
     --output=csv:"$TMP/preds_rf.csv" >/dev/null
+"$BIN" predict --dataset=csv:"$TMP/iris.csv" --model="$TMP/model_gbt2.json" \
+    --output=csv:"$TMP/preds_gbt2.csv" >/dev/null
 
 echo "serve-smoke: starting the two-model server on an ephemeral port"
 "$BIN" serve --model=gbt="$TMP/model_gbt.json" --model=rf="$TMP/model_rf.json" \
@@ -60,8 +69,9 @@ if [ -z "$PORT" ]; then
 fi
 echo "serve-smoke: server is up on port $PORT"
 
-python3 - "$PORT" "$TMP/iris.csv" "$TMP/preds_gbt.csv" "$TMP/preds_rf.csv" <<'EOF'
-import json, socket, sys
+python3 - "$PORT" "$TMP/iris.csv" "$TMP/preds_gbt.csv" "$TMP/preds_rf.csv" \
+    "$TMP/preds_gbt2.csv" "$TMP/model_gbt2.json" "$TMP/model_rf.json" <<'EOF'
+import json, socket, sys, threading, time
 
 port = int(sys.argv[1])
 
@@ -174,6 +184,99 @@ check(per_model.get("rf", {}).get("requests", 0) >= 1,
       "per-model stats reported for 'rf'")
 check(per_model.get("rf", {}).get("errors", 1) == 0,
       "errors are attributed per model, not smeared")
+
+# --- Control plane: hot swap under live traffic -----------------------
+offline_gbt2 = offline(sys.argv[5])
+model_gbt2_path, model_rf_path = sys.argv[6], sys.argv[7]
+check(offline_preds["gbt"][:N] != offline_gbt2[:N],
+      "the replacement model genuinely disagrees with the original")
+
+stop = threading.Event()
+dropped, errors, served = [], [], [0]
+alock = threading.Lock()
+
+def hammer():
+    # One long-lived connection per client: a dropped request would show
+    # up as a reply-less line (EOF) — exactly what must never happen.
+    s = socket.create_connection(("127.0.0.1", port), timeout=10)
+    f = s.makefile()
+    req = json.dumps({"model": "gbt", "rows": rows[:4]}) + "\n"
+    while not stop.is_set():
+        s.sendall(req.encode())
+        line = f.readline()
+        if not line:
+            with alock:
+                dropped.append("connection closed without a reply")
+            return
+        resp = json.loads(line)
+        with alock:
+            if "predictions" in resp:
+                served[0] += 1
+            else:
+                errors.append(resp.get("error", str(resp)))
+    s.close()
+
+def served_at_least(n):
+    deadline = time.time() + 30
+    while time.time() < deadline:
+        with alock:
+            if served[0] >= n or dropped:
+                return
+        time.sleep(0.01)
+    raise SystemExit("serve-smoke: FAILED: swap traffic stalled")
+
+threads = [threading.Thread(target=hammer) for _ in range(3)]
+for t in threads:
+    t.start()
+served_at_least(10)  # traffic is flowing before the swap lands
+swap = rpc(json.dumps({"cmd": "swap", "model": "gbt", "path": model_gbt2_path}))
+check(swap.get("ok") is True and swap.get("generation", 0) > 0,
+      "live swap acknowledged with a new generation")
+with alock:
+    after_swap_target = served[0] + 10
+served_at_least(after_swap_target)  # the new generation is serving
+stop.set()
+for t in threads:
+    t.join()
+check(not dropped, "zero requests dropped across the swap")
+# The only tolerable in-band replies at the swap instant are drain
+# rejections from the retiring generation — anything else is a bug.
+bad = [e for e in errors if "shutting down" not in e]
+check(not bad, f"no unexpected error replies across the swap: {bad[:3]}")
+
+after = rpc(json.dumps({"model": "gbt", "rows": rows}))
+check(after["predictions"] == offline_gbt2[:N],
+      "post-swap serving is bit-identical to the replacement's offline predict")
+
+# The old generation drains to Retired, visible in the transition log.
+states, retired = {}, False
+for _ in range(100):
+    health = rpc(json.dumps({"cmd": "health"}))
+    states = health.get("states", {})
+    if any(t.get("state") == "Retired" for t in health.get("transitions", [])):
+        retired = True
+        break
+    time.sleep(0.1)
+check(retired, "old generation drained to Retired in the transition log")
+check(states.get("gbt") == "Serving" and states.get("rf") == "Serving",
+      "both live models report Serving after the swap")
+
+stats = rpc(json.dumps({"cmd": "stats"}))
+check(stats.get("reloads", 0) == 1, "aggregate stats counted the reload")
+check(stats.get("models", {}).get("gbt", {}).get("reloads", 0) == 1,
+      "the reload is attributed to the swapped model")
+
+# Load/unload round trip: a third model comes and goes on the live server.
+loaded = rpc(json.dumps({"cmd": "load", "model": "extra", "path": model_rf_path}))
+check(loaded.get("ok") is True, "live load of a third model acknowledged")
+via_extra = rpc(json.dumps({"model": "extra", "rows": rows[:5]}))
+check(via_extra.get("predictions") == offline_preds["rf"][:5],
+      "the freshly loaded model serves bit-identically to offline predict")
+gone = rpc(json.dumps({"cmd": "unload", "model": "extra"}))
+check(gone.get("ok") is True, "unload acknowledged")
+unknown_again = rpc(json.dumps({"model": "extra", "rows": rows[:1]}))
+check("extra" in unknown_again.get("error", ""),
+      "an unloaded model is unknown again")
 
 bye = rpc(json.dumps({"cmd": "shutdown"}))
 check(bye.get("ok") is True, "shutdown acknowledged")
