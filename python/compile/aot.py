@@ -1,6 +1,13 @@
 """AOT lowering: JAX/Pallas graphs -> HLO *text* artifacts for the Rust
 PJRT runtime.
 
+NOTE: the native compiled-forest path supersedes this pipeline for
+production AOT serving — `ydf compile` (rust/src/inference/compiled.rs)
+lowers a trained forest to a checksummed, mmap-able `.bin` artifact
+with exact (bit-identical) semantics and no Python/XLA dependency.
+This module stays as the cross-backend escape hatch for the
+feature-gated PJRT engine; see the compiled-forest item in ROADMAP.md.
+
 HLO text — not `lowered.compile().serialize()` — is the interchange
 format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids that
 the runtime's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the

@@ -46,7 +46,40 @@ fn main() {
     let bench = benchmark_inference(model.as_ref(), &ds, runs);
     println!("{}", bench.report());
 
-    match std::fs::write(&out_path, bench.to_json().to_string_pretty()) {
+    // Model-open time: parsing the JSON model vs mmap-ing the compiled
+    // artifact (`ydf compile`) — the serving cold-start the artifact
+    // format exists to cut. Recorded as "model_open" in the JSON report.
+    let dir = std::env::temp_dir().join("ydf_b4_model_open");
+    std::fs::create_dir_all(&dir).ok();
+    let json_path = dir.join("model.json");
+    let bin_path = dir.join("model.bin");
+    ydf::model::io::save_model(model.as_ref(), &json_path).unwrap();
+    let forest = ydf::inference::compiled::CompiledForest::lower(model.as_ref()).unwrap();
+    forest.write_artifact(&bin_path).unwrap();
+    let time_open_ms = |path: &std::path::Path| {
+        let t0 = std::time::Instant::now();
+        for _ in 0..runs.max(1) {
+            std::hint::black_box(ydf::model::io::load_model(path).unwrap());
+        }
+        t0.elapsed().as_secs_f64() / runs.max(1) as f64 * 1e3
+    };
+    let json_ms = time_open_ms(&json_path);
+    let artifact_ms = time_open_ms(&bin_path);
+    let artifact_bytes = std::fs::metadata(&bin_path).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "  model open: JSON parse {json_ms:.3} ms, artifact mmap {artifact_ms:.3} ms \
+         ({artifact_bytes} bytes on disk)"
+    );
+    std::fs::remove_file(&json_path).ok();
+    std::fs::remove_file(&bin_path).ok();
+
+    let mut report = bench.to_json();
+    let mut open = ydf::utils::json::Json::obj();
+    open.set("json_ms", ydf::utils::json::Json::Num(json_ms))
+        .set("artifact_ms", ydf::utils::json::Json::Num(artifact_ms))
+        .set("artifact_bytes", ydf::utils::json::Json::Num(artifact_bytes as f64));
+    report.set("model_open", open);
+    match std::fs::write(&out_path, report.to_string_pretty()) {
         Ok(()) => eprintln!("wrote {out_path}"),
         Err(e) => eprintln!("cannot write {out_path}: {e}"),
     }

@@ -1,0 +1,1676 @@
+//! Compiled-forest engine: a trained RF/GBT lowered to one flat,
+//! position-independent word array that is also the on-disk artifact
+//! (`ydf compile` → a versioned, checksummed `.bin` mmap-ed back at serve
+//! time). This closes the AOT path the feature-gated PJRT stub left open
+//! (ROADMAP "Compiled-forest engine"): the SIMD-evaluation paper
+//! (arXiv 2205.07307) shows flat if-converted layouts win 2-4x over
+//! pointer trees, and the database-perspective comparison
+//! (arXiv 2302.04430) shows compiled strategies must slot into *measured*
+//! selection — so [`CompiledEngine`] registers as one more
+//! `compile_engines`/`benchmark_inference` row rather than replacing the
+//! flat engine.
+//!
+//! Traversal semantics are an exact mirror of [`super::flat`]: the same
+//! BFS children-adjacent node layout, the same scalar block kernel as the
+//! correctness reference, the same level-synchronous lane kernel over
+//! [`BLOCK_SIZE`]-row blocks (gated per tree on Leaf/Higher/Oblique node
+//! kinds and numerical column resolution), and the shared [`Aggregate`]
+//! output shaping — so compiled predictions are bit-identical to the
+//! naive/flat/QuickScorer engines (pinned by
+//! `rust/tests/compiled.rs::prop_compiled_engine_matches_naive`).
+//!
+//! ## Artifact format (version 1)
+//!
+//! Little-endian. A 24-byte header:
+//!
+//! | bytes  | field                                        |
+//! |--------|----------------------------------------------|
+//! | 0..4   | magic `"YDFC"`                               |
+//! | 4..8   | u32 format version (`ARTIFACT_VERSION`)      |
+//! | 8..12  | u32 length of the meta JSON in bytes         |
+//! | 12..16 | u32 length of the payload in u32 words       |
+//! | 16..24 | u64 FNV-1a checksum of every byte after the header |
+//!
+//! then the meta JSON (`{"artifact":"ydf-compiled-forest","model_type":…,
+//! "task":…,"label_col":…,"spec":{…}}`), zero-padded so the payload starts
+//! at the next multiple of 8, then the payload words. The file length must
+//! equal `pad8(24 + meta_len) + 4 * words_len` exactly.
+//!
+//! The payload is self-describing: 10 section-size words
+//! (aggregate kind/params, leaf dim, tree/node/bitmap/oblique/leaf/initial
+//! counts), then per-tree root indices, 6-word nodes
+//! (`[kind | m2p<<8, attr, f32 threshold bits, aux, aux_len, child]`),
+//! categorical bitmaps (u64s as lo/hi word pairs), oblique terms
+//! (attr + f32 weight bits), leaf values (f32 bits) and GBT initial
+//! predictions (f64s as lo/hi word pairs).
+//!
+//! Loading validates magic, version, length and checksum before touching
+//! the payload, then bounds-checks every structural reference (roots
+//! strictly increasing, children inside the tree range and strictly
+//! forward — traversal provably terminates — attrs inside the dataspec,
+//! aux ranges inside their sections). A truncated, bit-flipped or
+//! hand-corrupted artifact is a descriptive `Err`, never a panic or an
+//! out-of-bounds read: the mmap-backed and heap-backed code paths read the
+//! exact same validated words. (One caveat inherent to mmap: truncating
+//! the file *while* another process is serving from it can SIGBUS — see
+//! `docs/serving.md`; artifacts should be replaced atomically via rename.)
+
+use super::{Aggregate, BLOCK_SIZE, ColumnAccess, InferenceEngine};
+use crate::dataset::{AttrValue, DataSpec, Dataset, Observation};
+use crate::model::forest::{GbtLoss, GradientBoostedTreesModel, RandomForestModel};
+use crate::model::tree::Condition;
+use crate::model::{Model, Task};
+use crate::utils::json::Json;
+use std::ops::Range;
+use std::path::Path;
+use std::sync::Arc;
+
+const KIND_LEAF: u8 = 0;
+const KIND_HIGHER: u8 = 1;
+const KIND_CONTAINS: u8 = 2;
+const KIND_CONTAINS_SET: u8 = 3;
+const KIND_OBLIQUE: u8 = 4;
+const KIND_IS_TRUE: u8 = 5;
+
+/// First bytes of every compiled-forest artifact.
+pub const ARTIFACT_MAGIC: [u8; 4] = *b"YDFC";
+/// Current artifact format version. Bump only with a loader branch —
+/// like the JSON model format, old artifacts must load forever.
+pub const ARTIFACT_VERSION: u32 = 1;
+/// Header length in bytes: magic + version + meta_len + words_len + checksum.
+const HEADER_LEN: usize = 24;
+/// Section-size words at the start of the payload.
+const META_WORDS: usize = 10;
+/// Words per packed node.
+const NODE_WORDS: usize = 6;
+
+/// FNV-1a 64-bit hash — the artifact checksum. Dependency-free and fast
+/// enough to verify a model file once at open time.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn pad8(x: usize) -> usize {
+    (x + 7) & !7
+}
+
+/// Read-only memory mapping of an artifact file. Gated to little-endian
+/// unix targets: the artifact is little-endian on disk, and mapping it
+/// is only zero-copy where the host matches; everywhere else
+/// [`CompiledForest::open`] falls back to an owned read + decode.
+#[cfg(all(unix, target_endian = "little"))]
+mod mmap {
+    use std::os::unix::io::AsRawFd;
+    use std::path::Path;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut core::ffi::c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut core::ffi::c_void;
+        fn munmap(addr: *mut core::ffi::c_void, len: usize) -> i32;
+    }
+
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    pub struct MappedFile {
+        ptr: *mut core::ffi::c_void,
+        len: usize,
+    }
+
+    // The mapping is PROT_READ and never mutated after construction.
+    unsafe impl Send for MappedFile {}
+    unsafe impl Sync for MappedFile {}
+
+    impl MappedFile {
+        pub fn open(path: &Path) -> Result<MappedFile, String> {
+            let file = std::fs::File::open(path)
+                .map_err(|e| format!("cannot open {}: {e}", path.display()))?;
+            let len = file
+                .metadata()
+                .map_err(|e| format!("cannot stat {}: {e}", path.display()))?
+                .len();
+            if len == 0 || len > usize::MAX as u64 {
+                return Err(format!("{}: unmappable size {len}", path.display()));
+            }
+            let len = len as usize;
+            let ptr = unsafe {
+                mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, file.as_raw_fd(), 0)
+            };
+            if ptr as isize == -1 {
+                return Err(format!("mmap of {} failed", path.display()));
+            }
+            Ok(MappedFile { ptr, len })
+        }
+
+        pub fn bytes(&self) -> &[u8] {
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+    }
+
+    impl Drop for MappedFile {
+        fn drop(&mut self) {
+            unsafe {
+                munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
+/// The payload word array: owned (lowered in memory, or decoded from a
+/// file on hosts without mmap) or a view into a mapped artifact. Both are
+/// validated identically by [`CompiledForest::build`] before any
+/// traversal touches them.
+enum Words {
+    Owned(Vec<u32>),
+    #[cfg(all(unix, target_endian = "little"))]
+    Mapped {
+        map: mmap::MappedFile,
+        words_off: usize,
+        words_len: usize,
+    },
+}
+
+impl Words {
+    #[inline]
+    fn as_slice(&self) -> &[u32] {
+        match self {
+            Words::Owned(v) => v,
+            #[cfg(all(unix, target_endian = "little"))]
+            Words::Mapped { map, words_off, words_len } => unsafe {
+                // `words_off` is 8-aligned within a page-aligned map and
+                // `words_off + 4 * words_len == file length` was checked by
+                // `parse_artifact`, so the cast is aligned and in bounds.
+                std::slice::from_raw_parts(
+                    map.bytes().as_ptr().add(*words_off) as *const u32,
+                    *words_len,
+                )
+            },
+        }
+    }
+
+    fn is_mapped(&self) -> bool {
+        match self {
+            Words::Owned(_) => false,
+            #[cfg(all(unix, target_endian = "little"))]
+            Words::Mapped { .. } => true,
+        }
+    }
+}
+
+/// One decoded node (6 payload words). Children are adjacent: positive at
+/// `child`, negative at `child + 1` — the flat engine's layout.
+#[derive(Clone, Copy)]
+struct CNode {
+    kind: u8,
+    missing_to_positive: bool,
+    attr: u32,
+    threshold: f32,
+    aux: u32,
+    aux_len: u32,
+    child: u32,
+}
+
+/// A forest lowered to the artifact word layout, servable in place
+/// (possibly straight off an mmap). Produced by [`CompiledForest::lower`]
+/// from a trained model or by [`CompiledForest::open`] /
+/// [`CompiledForest::from_artifact_bytes`] from an artifact; both paths
+/// run the same structural validation.
+pub struct CompiledForest {
+    words: Words,
+    num_trees: usize,
+    num_nodes: usize,
+    nodes_off: usize,
+    bitmaps_off: usize,
+    oblique_off: usize,
+    leaves_off: usize,
+    initial_off: usize,
+    leaf_dim: usize,
+    aggregate: Aggregate,
+    spec: DataSpec,
+    task: Task,
+    label_col: usize,
+    /// Per tree: every node is Leaf/Higher/Oblique (the lane kernel's
+    /// envelope, same gate as the flat engine).
+    lane_ok: Vec<bool>,
+    /// Per tree: attrs read by Higher nodes; the lane kernel requires each
+    /// to resolve to a numerical column of the dataset at hand.
+    lane_attrs: Vec<Vec<u32>>,
+}
+
+impl CompiledForest {
+    // ----- lowering (model -> words) -----
+
+    /// Lowers a trained model to the compiled layout. Only RF/GBT forests
+    /// lower; anything else is a descriptive error.
+    pub fn lower(model: &dyn Model) -> Result<CompiledForest, String> {
+        let (trees, leaf_dim, aggregate, spec, task, label_col) = if let Some(m) =
+            model.as_any().downcast_ref::<RandomForestModel>()
+        {
+            let num_classes = match m.task {
+                Task::Classification => m.spec.columns[m.label_col].vocab_size(),
+                Task::Regression => 1,
+            };
+            let aggregate = match m.task {
+                Task::Classification => Aggregate::RfAverage {
+                    num_classes,
+                    winner_take_all: m.winner_take_all,
+                },
+                Task::Regression => Aggregate::RfRegression,
+            };
+            (&m.trees, num_classes, aggregate, m.spec.clone(), m.task, m.label_col)
+        } else if let Some(m) = model.as_any().downcast_ref::<GradientBoostedTreesModel>() {
+            let aggregate = Aggregate::Gbt {
+                loss: m.loss,
+                dim: m.trees_per_iter,
+                initial: m.initial_predictions.clone(),
+            };
+            (&m.trees, 1, aggregate, m.spec.clone(), m.task, m.label_col)
+        } else {
+            return Err(format!(
+                "model type {} has no compiled-forest lowering (only RANDOM_FOREST and \
+                 GRADIENT_BOOSTED_TREES models compile)",
+                model.model_type()
+            ));
+        };
+
+        // BFS copy with children-adjacent layout — identical to the flat
+        // engine, so both engines route every example to the same leaf.
+        let mut nodes: Vec<CNode> = Vec::new();
+        let mut roots: Vec<u32> = Vec::with_capacity(trees.len());
+        let mut bitmaps: Vec<u64> = Vec::new();
+        let mut oblique: Vec<(u32, f32)> = Vec::new();
+        let mut leaf_values: Vec<f32> = Vec::new();
+        let placeholder = CNode {
+            kind: KIND_LEAF,
+            missing_to_positive: false,
+            attr: 0,
+            threshold: 0.0,
+            aux: 0,
+            aux_len: 0,
+            child: 0,
+        };
+        for t in trees.iter() {
+            roots.push(nodes.len() as u32);
+            let mut flat_of = vec![u32::MAX; t.nodes.len()];
+            let mut queue = std::collections::VecDeque::new();
+            flat_of[0] = nodes.len() as u32;
+            nodes.push(placeholder);
+            queue.push_back(0usize);
+            while let Some(orig) = queue.pop_front() {
+                let node = &t.nodes[orig];
+                let flat_idx = flat_of[orig] as usize;
+                match &node.condition {
+                    None => {
+                        let aux = leaf_values.len() as u32;
+                        leaf_values.extend_from_slice(&node.value);
+                        for _ in node.value.len()..leaf_dim {
+                            leaf_values.push(0.0);
+                        }
+                        nodes[flat_idx] = CNode {
+                            aux,
+                            aux_len: leaf_dim as u32,
+                            ..placeholder
+                        };
+                    }
+                    Some(cond) => {
+                        let child = nodes.len() as u32;
+                        nodes.push(placeholder);
+                        nodes.push(placeholder);
+                        flat_of[node.positive as usize] = child;
+                        flat_of[node.negative as usize] = child + 1;
+                        queue.push_back(node.positive as usize);
+                        queue.push_back(node.negative as usize);
+                        let m2p = node.missing_to_positive;
+                        let cn = match cond {
+                            Condition::Higher { attr, threshold } => CNode {
+                                kind: KIND_HIGHER,
+                                missing_to_positive: m2p,
+                                attr: *attr as u32,
+                                threshold: *threshold,
+                                child,
+                                ..placeholder
+                            },
+                            Condition::ContainsBitmap { attr, bitmap } => {
+                                let aux = bitmaps.len() as u32;
+                                bitmaps.extend_from_slice(bitmap);
+                                CNode {
+                                    kind: KIND_CONTAINS,
+                                    missing_to_positive: m2p,
+                                    attr: *attr as u32,
+                                    aux,
+                                    aux_len: bitmap.len() as u32,
+                                    child,
+                                    ..placeholder
+                                }
+                            }
+                            Condition::ContainsSetBitmap { attr, bitmap } => {
+                                let aux = bitmaps.len() as u32;
+                                bitmaps.extend_from_slice(bitmap);
+                                CNode {
+                                    kind: KIND_CONTAINS_SET,
+                                    missing_to_positive: m2p,
+                                    attr: *attr as u32,
+                                    aux,
+                                    aux_len: bitmap.len() as u32,
+                                    child,
+                                    ..placeholder
+                                }
+                            }
+                            Condition::Oblique { attrs, weights, threshold } => {
+                                let aux = oblique.len() as u32;
+                                for (&a, &w) in attrs.iter().zip(weights) {
+                                    oblique.push((a as u32, w));
+                                }
+                                CNode {
+                                    kind: KIND_OBLIQUE,
+                                    missing_to_positive: m2p,
+                                    threshold: *threshold,
+                                    aux,
+                                    aux_len: attrs.len() as u32,
+                                    child,
+                                    ..placeholder
+                                }
+                            }
+                            Condition::IsTrue { attr } => CNode {
+                                kind: KIND_IS_TRUE,
+                                missing_to_positive: m2p,
+                                attr: *attr as u32,
+                                child,
+                                ..placeholder
+                            },
+                        };
+                        nodes[flat_idx] = cn;
+                    }
+                }
+            }
+        }
+        if nodes.len() >= u32::MAX as usize
+            || leaf_values.len() >= u32::MAX as usize
+            || bitmaps.len() >= u32::MAX as usize
+            || oblique.len() >= u32::MAX as usize
+        {
+            return Err("forest too large for the compiled artifact's u32 indices".into());
+        }
+
+        // Pack into the payload word layout.
+        let (agg_kind, k1, k2, initial): (u32, u32, u32, &[f64]) = match &aggregate {
+            Aggregate::RfAverage { num_classes, winner_take_all } => {
+                (0, *num_classes as u32, *winner_take_all as u32, &[])
+            }
+            Aggregate::RfRegression => (1, 0, 0, &[]),
+            Aggregate::Gbt { loss, dim, initial } => {
+                let code = match loss {
+                    GbtLoss::BinomialLogLikelihood => 0,
+                    GbtLoss::MultinomialLogLikelihood => 1,
+                    GbtLoss::SquaredError => 2,
+                };
+                (2, *dim as u32, code, initial.as_slice())
+            }
+        };
+        let total = META_WORDS
+            + roots.len()
+            + nodes.len() * NODE_WORDS
+            + 2 * bitmaps.len()
+            + 2 * oblique.len()
+            + leaf_values.len()
+            + 2 * initial.len();
+        let mut w: Vec<u32> = Vec::with_capacity(total);
+        w.extend_from_slice(&[
+            agg_kind,
+            k1,
+            k2,
+            leaf_dim as u32,
+            roots.len() as u32,
+            nodes.len() as u32,
+            bitmaps.len() as u32,
+            oblique.len() as u32,
+            leaf_values.len() as u32,
+            initial.len() as u32,
+        ]);
+        w.extend_from_slice(&roots);
+        for n in &nodes {
+            w.push(n.kind as u32 | (n.missing_to_positive as u32) << 8);
+            w.push(n.attr);
+            w.push(n.threshold.to_bits());
+            w.push(n.aux);
+            w.push(n.aux_len);
+            w.push(n.child);
+        }
+        for &b in &bitmaps {
+            w.push(b as u32);
+            w.push((b >> 32) as u32);
+        }
+        for &(a, wgt) in &oblique {
+            w.push(a);
+            w.push(wgt.to_bits());
+        }
+        for &v in &leaf_values {
+            w.push(v.to_bits());
+        }
+        for &x in initial {
+            let bits = x.to_bits();
+            w.push(bits as u32);
+            w.push((bits >> 32) as u32);
+        }
+        debug_assert_eq!(w.len(), total);
+        // Single read path: lowering goes through the same validation as
+        // loading, so a lowered forest and its round-tripped artifact are
+        // the same structure by construction.
+        Self::build(Words::Owned(w), spec, task, label_col)
+    }
+
+    // ----- artifact write -----
+
+    /// Serializes to the artifact byte format (header + meta + payload).
+    pub fn to_artifact_bytes(&self) -> Vec<u8> {
+        let w = self.words.as_slice();
+        let mut meta = Json::obj();
+        meta.set("artifact", Json::Str("ydf-compiled-forest".into()))
+            .set("model_type", Json::Str(self.model_type_name().into()))
+            .set("task", Json::Str(self.task.name().into()))
+            .set("label_col", Json::Num(self.label_col as f64))
+            .set("spec", self.spec.to_json());
+        let meta_bytes = meta.to_string().into_bytes();
+        let words_off = pad8(HEADER_LEN + meta_bytes.len());
+        let mut out = Vec::with_capacity(words_off + 4 * w.len());
+        out.extend_from_slice(&ARTIFACT_MAGIC);
+        out.extend_from_slice(&ARTIFACT_VERSION.to_le_bytes());
+        out.extend_from_slice(&(meta_bytes.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(w.len() as u32).to_le_bytes());
+        out.extend_from_slice(&0u64.to_le_bytes()); // checksum patched below
+        out.extend_from_slice(&meta_bytes);
+        out.resize(words_off, 0);
+        for &x in w {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        let ck = fnv1a64(&out[HEADER_LEN..]);
+        out[16..24].copy_from_slice(&ck.to_le_bytes());
+        out
+    }
+
+    /// Writes the artifact to a file.
+    pub fn write_artifact(&self, path: &Path) -> Result<(), String> {
+        std::fs::write(path, self.to_artifact_bytes())
+            .map_err(|e| format!("cannot write compiled artifact {}: {e}", path.display()))
+    }
+
+    // ----- artifact read -----
+
+    /// Decodes an artifact from bytes already in memory (always heap-owned;
+    /// [`CompiledForest::open`] is the mmap path).
+    pub fn from_artifact_bytes(bytes: &[u8]) -> Result<CompiledForest, String> {
+        Self::from_bytes_origin(bytes, "<memory>")
+    }
+
+    /// Opens an artifact file, mmap-ing it read-only where the platform
+    /// allows (little-endian unix) and falling back to an owned read
+    /// elsewhere or when the map fails. Full validation either way.
+    pub fn open(path: &Path) -> Result<CompiledForest, String> {
+        let origin = path.display().to_string();
+        #[cfg(all(unix, target_endian = "little"))]
+        {
+            if let Ok(map) = mmap::MappedFile::open(path) {
+                let (meta, words_off, words_len) = parse_artifact(map.bytes(), &origin)?;
+                let words = Words::Mapped { map, words_off, words_len };
+                return Self::build_from_meta(words, &meta, &origin);
+            }
+        }
+        let bytes = std::fs::read(path)
+            .map_err(|e| format!("cannot read compiled artifact {origin}: {e}"))?;
+        Self::from_bytes_origin(&bytes, &origin)
+    }
+
+    fn from_bytes_origin(bytes: &[u8], origin: &str) -> Result<CompiledForest, String> {
+        let (meta, words_off, words_len) = parse_artifact(bytes, origin)?;
+        let mut words = Vec::with_capacity(words_len);
+        for ch in bytes[words_off..words_off + 4 * words_len].chunks_exact(4) {
+            words.push(u32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
+        }
+        Self::build_from_meta(Words::Owned(words), &meta, origin)
+    }
+
+    fn build_from_meta(words: Words, meta: &Json, origin: &str) -> Result<CompiledForest, String> {
+        let wrap = |e: String| format!("compiled artifact {origin}: {e}");
+        let tag = meta.req_str("artifact").map_err(|e| wrap(e.to_string()))?;
+        if tag != "ydf-compiled-forest" {
+            return Err(wrap(format!("unexpected artifact tag '{tag}'")));
+        }
+        let model_type = meta.req_str("model_type").map_err(|e| wrap(e.to_string()))?.to_string();
+        let task = match meta.req_str("task").map_err(|e| wrap(e.to_string()))? {
+            "CLASSIFICATION" => Task::Classification,
+            "REGRESSION" => Task::Regression,
+            t => return Err(wrap(format!("unknown task '{t}'"))),
+        };
+        let label_col = meta.req_usize("label_col").map_err(|e| wrap(e.to_string()))?;
+        let spec = meta
+            .req("spec")
+            .and_then(DataSpec::from_json)
+            .map_err(|e| wrap(e.to_string()))?;
+        let forest = Self::build(words, spec, task, label_col).map_err(wrap)?;
+        if model_type != forest.model_type_name() {
+            return Err(format!(
+                "compiled artifact {origin}: meta model_type '{model_type}' does not match the \
+                 payload aggregate ({})",
+                forest.model_type_name()
+            ));
+        }
+        Ok(forest)
+    }
+
+    /// Validates the payload structurally and constructs the forest. The
+    /// single gate every construction path (lowering, heap decode, mmap)
+    /// funnels through: after it succeeds, traversal can index the words
+    /// without further bounds checks.
+    fn build(
+        words: Words,
+        spec: DataSpec,
+        task: Task,
+        label_col: usize,
+    ) -> Result<CompiledForest, String> {
+        let w = words.as_slice();
+        if w.len() < META_WORDS {
+            return Err(format!(
+                "payload holds {} words; at least {META_WORDS} are required",
+                w.len()
+            ));
+        }
+        let leaf_dim = w[3] as usize;
+        let num_trees = w[4] as usize;
+        let num_nodes = w[5] as usize;
+        let num_bitmap_words = w[6] as usize;
+        let num_oblique_terms = w[7] as usize;
+        let num_leaf_values = w[8] as usize;
+        let num_initial = w[9] as usize;
+
+        // Section offsets, computed in u64 so hostile counts cannot wrap.
+        let roots_off = META_WORDS as u64;
+        let nodes_off = roots_off + num_trees as u64;
+        let bitmaps_off = nodes_off + num_nodes as u64 * NODE_WORDS as u64;
+        let oblique_off = bitmaps_off + 2 * num_bitmap_words as u64;
+        let leaves_off = oblique_off + 2 * num_oblique_terms as u64;
+        let initial_off = leaves_off + num_leaf_values as u64;
+        let total = initial_off + 2 * num_initial as u64;
+        if total != w.len() as u64 {
+            return Err(format!(
+                "section sizes require {total} payload words but {} are present",
+                w.len()
+            ));
+        }
+
+        // Aggregate decode, strict: every parameter combination that the
+        // writer cannot produce is rejected.
+        let aggregate = match w[0] {
+            0 => {
+                if w[1] == 0 || w[2] > 1 || leaf_dim != w[1] as usize || num_initial != 0 {
+                    return Err(format!(
+                        "invalid RF-classification aggregate (classes={}, wta={}, leaf_dim={}, \
+                         initial={})",
+                        w[1], w[2], leaf_dim, num_initial
+                    ));
+                }
+                Aggregate::RfAverage {
+                    num_classes: w[1] as usize,
+                    winner_take_all: w[2] == 1,
+                }
+            }
+            1 => {
+                if w[1] != 0 || w[2] != 0 || leaf_dim != 1 || num_initial != 0 {
+                    return Err("invalid RF-regression aggregate parameters".into());
+                }
+                Aggregate::RfRegression
+            }
+            2 => {
+                let loss = match w[2] {
+                    0 => GbtLoss::BinomialLogLikelihood,
+                    1 => GbtLoss::MultinomialLogLikelihood,
+                    2 => GbtLoss::SquaredError,
+                    c => return Err(format!("unknown GBT loss code {c}")),
+                };
+                let dim = w[1] as usize;
+                if dim == 0 || leaf_dim != 1 || num_initial != dim {
+                    return Err(format!(
+                        "invalid GBT aggregate (dim={dim}, leaf_dim={leaf_dim}, \
+                         initial={num_initial})"
+                    ));
+                }
+                let io = initial_off as usize;
+                let initial: Vec<f64> = (0..dim)
+                    .map(|i| {
+                        let lo = w[io + 2 * i] as u64;
+                        let hi = w[io + 2 * i + 1] as u64;
+                        f64::from_bits(lo | hi << 32)
+                    })
+                    .collect();
+                Aggregate::Gbt { loss, dim, initial }
+            }
+            k => return Err(format!("unknown aggregate kind {k}")),
+        };
+
+        // Meta / payload consistency.
+        let expect_task = match &aggregate {
+            Aggregate::RfAverage { .. } => Task::Classification,
+            Aggregate::RfRegression => Task::Regression,
+            Aggregate::Gbt { loss, .. } => {
+                if *loss == GbtLoss::SquaredError {
+                    Task::Regression
+                } else {
+                    Task::Classification
+                }
+            }
+        };
+        if task != expect_task {
+            return Err(format!(
+                "task {} does not match the payload aggregate (expected {})",
+                task.name(),
+                expect_task.name()
+            ));
+        }
+        let ncols = spec.columns.len();
+        if label_col >= ncols {
+            return Err(format!(
+                "label column {label_col} is outside the {ncols}-column dataspec"
+            ));
+        }
+        let spec_dim = match task {
+            Task::Classification => spec.columns[label_col].vocab_size(),
+            Task::Regression => 1,
+        };
+        if aggregate.output_dim() != spec_dim {
+            return Err(format!(
+                "aggregate output dimension {} does not match the dataspec label ({spec_dim})",
+                aggregate.output_dim()
+            ));
+        }
+
+        // Roots: strictly increasing from 0, all in range.
+        if num_trees == 0 {
+            return Err("artifact contains no trees".into());
+        }
+        let ro = roots_off as usize;
+        if w[ro] != 0 {
+            return Err(format!("first tree root is {} (must be 0)", w[ro]));
+        }
+        for ti in 1..num_trees {
+            if w[ro + ti] <= w[ro + ti - 1] {
+                return Err(format!("tree roots are not strictly increasing at tree {ti}"));
+            }
+        }
+        if num_nodes == 0 || w[ro + num_trees - 1] as usize >= num_nodes {
+            return Err(format!(
+                "tree root {} is outside the {num_nodes}-node table",
+                w.get(ro + num_trees - 1).copied().unwrap_or(0)
+            ));
+        }
+
+        // Per-node structural validation + lane metadata, per tree range.
+        let no = nodes_off as usize;
+        let mut lane_ok = Vec::with_capacity(num_trees);
+        let mut lane_attrs: Vec<Vec<u32>> = Vec::with_capacity(num_trees);
+        for ti in 0..num_trees {
+            let lo = w[ro + ti] as usize;
+            let hi = if ti + 1 < num_trees { w[ro + ti + 1] as usize } else { num_nodes };
+            let mut ok = true;
+            let mut attrs: Vec<u32> = Vec::new();
+            for i in lo..hi {
+                let b = no + i * NODE_WORDS;
+                let w0 = w[b];
+                if w0 >> 9 != 0 {
+                    return Err(format!("node {i}: reserved flag bits set ({w0:#x})"));
+                }
+                let kind = (w0 & 0xFF) as u8;
+                let attr = w[b + 1] as usize;
+                let aux = w[b + 3] as u64;
+                let aux_len = w[b + 4] as u64;
+                let child = w[b + 5] as usize;
+                match kind {
+                    KIND_LEAF => {
+                        if aux_len as usize != leaf_dim
+                            || aux + aux_len > num_leaf_values as u64
+                        {
+                            return Err(format!(
+                                "node {i}: leaf values {aux}+{aux_len} escape the \
+                                 {num_leaf_values}-value table"
+                            ));
+                        }
+                    }
+                    KIND_HIGHER | KIND_CONTAINS | KIND_CONTAINS_SET | KIND_OBLIQUE
+                    | KIND_IS_TRUE => {
+                        // Children strictly forward and inside this tree's
+                        // range: traversal always terminates.
+                        if child <= i || child + 1 >= hi {
+                            return Err(format!(
+                                "node {i}: children {child},{} escape the tree range {lo}..{hi}",
+                                child + 1
+                            ));
+                        }
+                        if kind != KIND_OBLIQUE && attr >= ncols {
+                            return Err(format!(
+                                "node {i}: attribute {attr} is outside the {ncols}-column dataspec"
+                            ));
+                        }
+                        if (kind == KIND_CONTAINS || kind == KIND_CONTAINS_SET)
+                            && aux + aux_len > num_bitmap_words as u64
+                        {
+                            return Err(format!(
+                                "node {i}: bitmap {aux}+{aux_len} escapes the \
+                                 {num_bitmap_words}-word table"
+                            ));
+                        }
+                        if kind == KIND_OBLIQUE {
+                            if aux + aux_len > num_oblique_terms as u64 {
+                                return Err(format!(
+                                    "node {i}: oblique terms {aux}+{aux_len} escape the \
+                                     {num_oblique_terms}-term table"
+                                ));
+                            }
+                            let oo = oblique_off as usize;
+                            for t in aux..aux + aux_len {
+                                let a = w[oo + 2 * t as usize] as usize;
+                                if a >= ncols {
+                                    return Err(format!(
+                                        "node {i}: oblique term attribute {a} is outside the \
+                                         {ncols}-column dataspec"
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                    k => return Err(format!("node {i}: unknown condition kind {k}")),
+                }
+                match kind {
+                    KIND_LEAF | KIND_OBLIQUE => {}
+                    KIND_HIGHER => attrs.push(attr as u32),
+                    _ => ok = false,
+                }
+            }
+            attrs.sort_unstable();
+            attrs.dedup();
+            lane_ok.push(ok);
+            lane_attrs.push(attrs);
+        }
+
+        let (nodes_off, bitmaps_off, oblique_off, leaves_off, initial_off) = (
+            nodes_off as usize,
+            bitmaps_off as usize,
+            oblique_off as usize,
+            leaves_off as usize,
+            initial_off as usize,
+        );
+        Ok(CompiledForest {
+            words,
+            num_trees,
+            num_nodes,
+            nodes_off,
+            bitmaps_off,
+            oblique_off,
+            leaves_off,
+            initial_off,
+            leaf_dim,
+            aggregate,
+            spec,
+            task,
+            label_col,
+            lane_ok,
+            lane_attrs,
+        })
+    }
+
+    // ----- accessors -----
+
+    pub fn num_trees(&self) -> usize {
+        self.num_trees
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    /// True when the payload is served straight off an mmap-ed file.
+    pub fn is_mapped(&self) -> bool {
+        self.words.is_mapped()
+    }
+
+    pub fn spec(&self) -> &DataSpec {
+        &self.spec
+    }
+
+    pub fn task(&self) -> Task {
+        self.task
+    }
+
+    pub fn label_col(&self) -> usize {
+        self.label_col
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.aggregate.output_dim()
+    }
+
+    /// The lowered model family: "RANDOM_FOREST" or
+    /// "GRADIENT_BOOSTED_TREES".
+    pub fn model_type_name(&self) -> &'static str {
+        match self.aggregate {
+            Aggregate::Gbt { .. } => "GRADIENT_BOOSTED_TREES",
+            _ => "RANDOM_FOREST",
+        }
+    }
+
+    fn kind_display(&self) -> &'static str {
+        match self.aggregate {
+            Aggregate::Gbt { .. } => "GradientBoostedTrees",
+            _ => "RandomForest",
+        }
+    }
+
+    /// Sorted, deduplicated attribute indices the forest reads — the same
+    /// contract as `model::forest::used_attributes`.
+    pub fn used_attributes(&self) -> Vec<usize> {
+        let w = self.words.as_slice();
+        let mut attrs = Vec::new();
+        for i in 0..self.num_nodes {
+            let n = self.node_at(w, i);
+            match n.kind {
+                KIND_LEAF => {}
+                KIND_OBLIQUE => {
+                    for t in n.aux..n.aux + n.aux_len {
+                        attrs.push(self.oblique_term(w, t as usize).0 as usize);
+                    }
+                }
+                _ => attrs.push(n.attr as usize),
+            }
+        }
+        attrs.sort_unstable();
+        attrs.dedup();
+        attrs
+    }
+
+    #[inline]
+    fn node_at(&self, w: &[u32], idx: usize) -> CNode {
+        let b = self.nodes_off + idx * NODE_WORDS;
+        CNode {
+            kind: (w[b] & 0xFF) as u8,
+            missing_to_positive: (w[b] >> 8) & 1 == 1,
+            attr: w[b + 1],
+            threshold: f32::from_bits(w[b + 2]),
+            aux: w[b + 3],
+            aux_len: w[b + 4],
+            child: w[b + 5],
+        }
+    }
+
+    #[inline]
+    fn root(&self, w: &[u32], ti: usize) -> u32 {
+        w[META_WORDS + ti]
+    }
+
+    /// Mirrors `model::tree::bitmap_contains` over the word-packed u64s.
+    #[inline]
+    fn bitmap_has(&self, w: &[u32], aux: u32, aux_len: u32, value: u32) -> bool {
+        let word = (value / 64) as usize;
+        if word >= aux_len as usize {
+            return false;
+        }
+        let b = self.bitmaps_off + 2 * (aux as usize + word);
+        let bits = w[b] as u64 | (w[b + 1] as u64) << 32;
+        (bits >> (value % 64)) & 1 == 1
+    }
+
+    #[inline]
+    fn oblique_term(&self, w: &[u32], t: usize) -> (u32, f32) {
+        let b = self.oblique_off + 2 * t;
+        (w[b], f32::from_bits(w[b + 1]))
+    }
+
+    #[inline]
+    fn leaf_value(&self, w: &[u32], off: usize) -> f32 {
+        f32::from_bits(w[self.leaves_off + off])
+    }
+
+    // ----- traversal (exact mirrors of the flat engine's kernels) -----
+
+    /// Evaluates one tree on a row observation; returns leaf-value offset.
+    fn eval_tree_row(&self, w: &[u32], root: u32, obs: &Observation) -> u32 {
+        let mut idx = root;
+        loop {
+            let n = self.node_at(w, idx as usize);
+            let go_pos = match n.kind {
+                KIND_LEAF => return n.aux,
+                KIND_HIGHER => match &obs[n.attr as usize] {
+                    AttrValue::Num(x) if !x.is_nan() => *x >= n.threshold,
+                    _ => n.missing_to_positive,
+                },
+                KIND_CONTAINS => match &obs[n.attr as usize] {
+                    AttrValue::Cat(c) => self.bitmap_has(w, n.aux, n.aux_len, *c),
+                    _ => n.missing_to_positive,
+                },
+                KIND_CONTAINS_SET => match &obs[n.attr as usize] {
+                    AttrValue::CatSet(items) => {
+                        items.iter().any(|&i| self.bitmap_has(w, n.aux, n.aux_len, i))
+                    }
+                    _ => n.missing_to_positive,
+                },
+                KIND_OBLIQUE => {
+                    let mut acc = 0.0f32;
+                    for t in n.aux..n.aux + n.aux_len {
+                        let (a, wgt) = self.oblique_term(w, t as usize);
+                        if let AttrValue::Num(x) = &obs[a as usize] {
+                            if !x.is_nan() {
+                                acc += wgt * x;
+                            }
+                        }
+                    }
+                    acc >= n.threshold
+                }
+                KIND_IS_TRUE => match &obs[n.attr as usize] {
+                    AttrValue::Bool(b) => *b,
+                    _ => n.missing_to_positive,
+                },
+                _ => unreachable!("kinds validated at build"),
+            };
+            idx = if go_pos { n.child } else { n.child + 1 };
+        }
+    }
+
+    /// Same traversal against resolved columnar slices (scalar kernel).
+    fn eval_tree_cols(&self, w: &[u32], root: u32, cols: &ColumnAccess, row: usize) -> u32 {
+        let mut idx = root;
+        loop {
+            let n = self.node_at(w, idx as usize);
+            let go_pos = match n.kind {
+                KIND_LEAF => return n.aux,
+                KIND_HIGHER => match cols.num[n.attr as usize] {
+                    Some(v) => {
+                        let x = v[row];
+                        if x.is_nan() {
+                            n.missing_to_positive
+                        } else {
+                            x >= n.threshold
+                        }
+                    }
+                    None => n.missing_to_positive,
+                },
+                KIND_CONTAINS => match cols.cat[n.attr as usize] {
+                    Some(v) => {
+                        let c = v[row];
+                        if c == crate::dataset::MISSING_CAT {
+                            n.missing_to_positive
+                        } else {
+                            self.bitmap_has(w, n.aux, n.aux_len, c)
+                        }
+                    }
+                    None => n.missing_to_positive,
+                },
+                KIND_CONTAINS_SET => {
+                    let col = &cols.columns[n.attr as usize];
+                    if col.is_missing(row) {
+                        n.missing_to_positive
+                    } else {
+                        col.set_values(row)
+                            .map(|items| {
+                                items.iter().any(|&i| self.bitmap_has(w, n.aux, n.aux_len, i))
+                            })
+                            .unwrap_or(n.missing_to_positive)
+                    }
+                }
+                KIND_OBLIQUE => {
+                    let mut acc = 0.0f32;
+                    for t in n.aux..n.aux + n.aux_len {
+                        let (a, wgt) = self.oblique_term(w, t as usize);
+                        if let Some(v) = cols.num[a as usize] {
+                            let x = v[row];
+                            if !x.is_nan() {
+                                acc += wgt * x;
+                            }
+                        }
+                    }
+                    acc >= n.threshold
+                }
+                KIND_IS_TRUE => match cols.boolean[n.attr as usize] {
+                    Some(v) => match v[row] {
+                        1 => true,
+                        0 => false,
+                        _ => n.missing_to_positive,
+                    },
+                    None => n.missing_to_positive,
+                },
+                _ => unreachable!("kinds validated at build"),
+            };
+            idx = if go_pos { n.child } else { n.child + 1 };
+        }
+    }
+
+    /// Lane-wise (level-synchronous) traversal of one tree over the block
+    /// rows `start..start + bs` — the flat engine's lane kernel over the
+    /// word layout: same gating, same run detection, same term-major
+    /// oblique accumulation preserving each lane's scalar term order, so
+    /// it is bit-identical to `eval_tree_cols`.
+    #[allow(clippy::too_many_arguments)]
+    fn eval_tree_cols_lanes(
+        &self,
+        w: &[u32],
+        root: u32,
+        cols: &ColumnAccess,
+        start: usize,
+        bs: usize,
+        leaves: &mut [u32],
+        stride: usize,
+        ti: usize,
+    ) {
+        debug_assert!(bs <= BLOCK_SIZE);
+        let mut idx = [0u32; BLOCK_SIZE];
+        let mut row = [0u32; BLOCK_SIZE];
+        let mut xs = [0.0f32; BLOCK_SIZE];
+        let mut ts = [0.0f32; BLOCK_SIZE];
+        let mut m2p = [false; BLOCK_SIZE];
+        let mut ch = [0u32; BLOCK_SIZE];
+        for i in 0..bs {
+            idx[i] = root;
+            row[i] = i as u32;
+        }
+        let mut m = bs;
+        while m > 0 {
+            // Retire lanes that reached a leaf; keep the rest in row order.
+            let mut kept = 0usize;
+            for i in 0..m {
+                let n = self.node_at(w, idx[i] as usize);
+                if n.kind == KIND_LEAF {
+                    leaves[row[i] as usize * stride + ti] = n.aux;
+                } else {
+                    idx[kept] = idx[i];
+                    row[kept] = row[i];
+                    kept += 1;
+                }
+            }
+            m = kept;
+            if m == 0 {
+                break;
+            }
+            // Gather (x, threshold, child) per lane, sharing node decode
+            // across runs of consecutive lanes on the same node.
+            let mut i = 0usize;
+            while i < m {
+                let node_idx = idx[i];
+                let mut j = i + 1;
+                while j < m && idx[j] == node_idx {
+                    j += 1;
+                }
+                let n = self.node_at(w, node_idx as usize);
+                match n.kind {
+                    KIND_HIGHER => {
+                        let col = cols.num[n.attr as usize]
+                            .expect("lane kernel requires resolved numerical columns");
+                        for k in i..j {
+                            xs[k] = col[start + row[k] as usize];
+                        }
+                        for k in i..j {
+                            ts[k] = n.threshold;
+                            m2p[k] = n.missing_to_positive;
+                            ch[k] = n.child;
+                        }
+                    }
+                    KIND_OBLIQUE => {
+                        xs[i..j].fill(0.0);
+                        // Term-major across the run's lanes; each lane still
+                        // accumulates in the scalar kernel's term order.
+                        for t in n.aux..n.aux + n.aux_len {
+                            let (a, wgt) = self.oblique_term(w, t as usize);
+                            if let Some(col) = cols.num[a as usize] {
+                                for k in i..j {
+                                    let x = col[start + row[k] as usize];
+                                    if !x.is_nan() {
+                                        xs[k] += wgt * x;
+                                    }
+                                }
+                            }
+                        }
+                        for k in i..j {
+                            ts[k] = n.threshold;
+                            // The scalar kernel never routes oblique nodes by
+                            // the missing policy: `acc >= threshold` with a
+                            // NaN accumulator is plain false.
+                            m2p[k] = false;
+                            ch[k] = n.child;
+                        }
+                    }
+                    _ => unreachable!("lane kernel gated on node kinds"),
+                }
+                i = j;
+            }
+            // Branch-free compare + advance, vectorizable.
+            for i in 0..m {
+                let x = xs[i];
+                let nan = x.is_nan();
+                let go_pos = (!nan && x >= ts[i]) | (nan & m2p[i]);
+                idx[i] = ch[i] + (!go_pos) as u32;
+            }
+        }
+    }
+
+    /// Aggregates one example's per-tree leaf offsets into `out`
+    /// (`aggregate.output_dim()` values); `scores` is reusable scratch of
+    /// `aggregate.score_dim()` values. Same operation order as the flat
+    /// engine's aggregation, so outputs are bit-identical.
+    fn aggregate_leaves_into(
+        &self,
+        w: &[u32],
+        leaf_offsets: &[u32],
+        scores: &mut [f64],
+        out: &mut [f64],
+    ) {
+        match &self.aggregate {
+            Aggregate::RfAverage { winner_take_all, .. } => {
+                out.fill(0.0);
+                for &off in leaf_offsets {
+                    let base = off as usize;
+                    if *winner_take_all {
+                        let mut best = 0usize;
+                        let mut best_v = self.leaf_value(w, base);
+                        for k in 1..self.leaf_dim {
+                            let x = self.leaf_value(w, base + k);
+                            if x > best_v {
+                                best = k;
+                                best_v = x;
+                            }
+                        }
+                        out[best] += 1.0;
+                    } else {
+                        for (k, a) in out.iter_mut().enumerate() {
+                            *a += self.leaf_value(w, base + k) as f64;
+                        }
+                    }
+                }
+                let n = leaf_offsets.len().max(1) as f64;
+                for a in out.iter_mut() {
+                    *a /= n;
+                }
+            }
+            Aggregate::RfRegression => {
+                let sum: f64 = leaf_offsets
+                    .iter()
+                    .map(|&off| self.leaf_value(w, off as usize) as f64)
+                    .sum();
+                out[0] = sum / leaf_offsets.len().max(1) as f64;
+            }
+            Aggregate::Gbt { loss, dim, initial } => {
+                scores.copy_from_slice(initial);
+                for (i, &off) in leaf_offsets.iter().enumerate() {
+                    scores[i % dim] += self.leaf_value(w, off as usize) as f64;
+                }
+                Aggregate::apply_gbt_link(*loss, scores, out);
+            }
+        }
+    }
+
+    /// Predicts one row observation.
+    pub fn predict_row_obs(&self, obs: &Observation) -> Vec<f64> {
+        let w = self.words.as_slice();
+        let leaves: Vec<u32> = (0..self.num_trees)
+            .map(|ti| self.eval_tree_row(w, self.root(w, ti), obs))
+            .collect();
+        let mut scores = vec![0.0f64; self.aggregate.score_dim()];
+        let mut out = vec![0.0f64; self.aggregate.output_dim()];
+        self.aggregate_leaves_into(w, &leaves, &mut scores, &mut out);
+        out
+    }
+
+    /// Predicts one dataset row through the scalar columnar path. Resolves
+    /// columns per call — fine for the `Model` fallback, not the batch path.
+    pub fn predict_ds_single(&self, ds: &Dataset, row: usize) -> Vec<f64> {
+        let w = self.words.as_slice();
+        let cols = ColumnAccess::new(ds);
+        let leaves: Vec<u32> = (0..self.num_trees)
+            .map(|ti| self.eval_tree_cols(w, self.root(w, ti), &cols, row))
+            .collect();
+        let mut scores = vec![0.0f64; self.aggregate.score_dim()];
+        let mut out = vec![0.0f64; self.aggregate.output_dim()];
+        self.aggregate_leaves_into(w, &leaves, &mut scores, &mut out);
+        out
+    }
+
+    /// Batch prediction over `rows` into the caller's row-major buffer —
+    /// the flat engine's block loop over the word layout. `simd` selects
+    /// the lane kernel where the per-tree gate allows it.
+    pub(crate) fn predict_batch_cols(
+        &self,
+        ds: &Dataset,
+        rows: Range<usize>,
+        out: &mut [f64],
+        simd: bool,
+    ) {
+        let dim = self.aggregate.output_dim();
+        debug_assert_eq!(out.len(), rows.len() * dim);
+        let w = self.words.as_slice();
+        let cols = ColumnAccess::new(ds);
+        let num_trees = self.num_trees;
+        let use_lanes: Vec<bool> = if simd {
+            (0..num_trees)
+                .map(|ti| {
+                    self.lane_ok[ti]
+                        && self.lane_attrs[ti]
+                            .iter()
+                            .all(|&a| cols.num[a as usize].is_some())
+                })
+                .collect()
+        } else {
+            vec![false; num_trees]
+        };
+        let mut leaves = vec![0u32; BLOCK_SIZE * num_trees];
+        let mut scores = vec![0.0f64; self.aggregate.score_dim()];
+        let mut start = rows.start;
+        let mut out_off = 0usize;
+        while start < rows.end {
+            let bs = BLOCK_SIZE.min(rows.end - start);
+            for ti in 0..num_trees {
+                let root = self.root(w, ti);
+                if use_lanes[ti] {
+                    self.eval_tree_cols_lanes(
+                        w, root, &cols, start, bs, &mut leaves, num_trees, ti,
+                    );
+                } else {
+                    for bi in 0..bs {
+                        leaves[bi * num_trees + ti] =
+                            self.eval_tree_cols(w, root, &cols, start + bi);
+                    }
+                }
+            }
+            for bi in 0..bs {
+                let o = out_off + bi * dim;
+                self.aggregate_leaves_into(
+                    w,
+                    &leaves[bi * num_trees..(bi + 1) * num_trees],
+                    &mut scores,
+                    &mut out[o..o + dim],
+                );
+            }
+            start += bs;
+            out_off += bs * dim;
+        }
+    }
+}
+
+fn parse_artifact(bytes: &[u8], origin: &str) -> Result<(Json, usize, usize), String> {
+    let err = |msg: String| format!("compiled artifact {origin}: {msg}");
+    if bytes.len() < HEADER_LEN {
+        return Err(err(format!(
+            "{} bytes is too short to be a compiled artifact",
+            bytes.len()
+        )));
+    }
+    if bytes[0..4] != ARTIFACT_MAGIC {
+        return Err(err("bad magic (not a compiled-forest artifact)".into()));
+    }
+    let version = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]);
+    if version != ARTIFACT_VERSION {
+        return Err(err(format!(
+            "artifact version {version} is not supported (this library reads version \
+             {ARTIFACT_VERSION})"
+        )));
+    }
+    let meta_len = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as u64;
+    let words_len = u32::from_le_bytes([bytes[12], bytes[13], bytes[14], bytes[15]]) as u64;
+    let words_off = (HEADER_LEN as u64 + meta_len + 7) & !7;
+    let expected = words_off + 4 * words_len;
+    if bytes.len() as u64 != expected {
+        return Err(err(format!(
+            "truncated or oversized: {} bytes on disk, the header requires {expected}",
+            bytes.len()
+        )));
+    }
+    let stored = u64::from_le_bytes([
+        bytes[16], bytes[17], bytes[18], bytes[19], bytes[20], bytes[21], bytes[22], bytes[23],
+    ]);
+    let computed = fnv1a64(&bytes[HEADER_LEN..]);
+    if stored != computed {
+        return Err(err(format!(
+            "checksum mismatch (stored {stored:016x}, computed {computed:016x}) — the file is \
+             corrupted"
+        )));
+    }
+    let meta_text = std::str::from_utf8(&bytes[HEADER_LEN..HEADER_LEN + meta_len as usize])
+        .map_err(|_| err("meta block is not valid UTF-8".into()))?;
+    let meta = Json::parse(meta_text).map_err(|e| err(format!("invalid meta JSON: {e}")))?;
+    Ok((meta, words_off as usize, words_len as usize))
+}
+
+/// Inference engine over a [`CompiledForest`]. Scalar and lane block
+/// kernels like the flat engine; `set_simd` selects per instance.
+pub struct CompiledEngine {
+    forest: Arc<CompiledForest>,
+    simd: bool,
+}
+
+impl CompiledEngine {
+    /// Compiles from a trained RF/GBT (lowering it) or a [`CompiledModel`]
+    /// (sharing its already-lowered forest). `None` for anything else.
+    pub fn compile(model: &dyn Model) -> Option<CompiledEngine> {
+        if let Some(cm) = model.as_any().downcast_ref::<CompiledModel>() {
+            return Some(CompiledEngine::new(Arc::clone(&cm.forest)));
+        }
+        CompiledForest::lower(model).ok().map(|f| CompiledEngine::new(Arc::new(f)))
+    }
+
+    pub fn new(forest: Arc<CompiledForest>) -> CompiledEngine {
+        CompiledEngine { forest, simd: cfg!(feature = "simd") }
+    }
+
+    /// Selects the lane-wise (`true`) or scalar (`false`) block kernel,
+    /// like `FlatEngine::set_simd`; the two are bit-identical.
+    pub fn set_simd(&mut self, on: bool) {
+        self.simd = on;
+    }
+
+    pub fn forest(&self) -> &Arc<CompiledForest> {
+        &self.forest
+    }
+}
+
+impl InferenceEngine for CompiledEngine {
+    fn name(&self) -> String {
+        format!("{}Compiled", self.forest.kind_display())
+    }
+
+    fn output_dim(&self) -> usize {
+        self.forest.aggregate.output_dim()
+    }
+
+    fn predict_row(&self, obs: &Observation) -> Vec<f64> {
+        self.forest.predict_row_obs(obs)
+    }
+
+    fn predict_batch(&self, ds: &Dataset, rows: Range<usize>, out: &mut [f64]) {
+        self.forest.predict_batch_cols(ds, rows, out, self.simd);
+    }
+}
+
+/// A compiled artifact as a [`Model`]: what `model::io::load_model`
+/// returns for a `.bin` path, so the CLI and the serving `Session` open
+/// artifacts exactly like JSON models. Engine selection routes it to
+/// [`CompiledEngine`] (the only engine that understands it). Note that
+/// `to_json` is intentionally a stub — the artifact byte format
+/// ([`CompiledForest::write_artifact`]) is this model's serialization.
+pub struct CompiledModel {
+    forest: Arc<CompiledForest>,
+}
+
+impl CompiledModel {
+    /// Opens a `.bin` artifact (mmap where available).
+    pub fn open(path: &Path) -> Result<CompiledModel, String> {
+        CompiledForest::open(path).map(|f| CompiledModel { forest: Arc::new(f) })
+    }
+
+    pub fn from_forest(forest: Arc<CompiledForest>) -> CompiledModel {
+        CompiledModel { forest }
+    }
+
+    pub fn forest(&self) -> &Arc<CompiledForest> {
+        &self.forest
+    }
+}
+
+impl Model for CompiledModel {
+    fn model_type(&self) -> &'static str {
+        match self.forest.aggregate {
+            Aggregate::Gbt { .. } => "COMPILED_GRADIENT_BOOSTED_TREES",
+            _ => "COMPILED_RANDOM_FOREST",
+        }
+    }
+
+    fn task(&self) -> Task {
+        self.forest.task
+    }
+
+    fn spec(&self) -> &DataSpec {
+        &self.forest.spec
+    }
+
+    fn label_col(&self) -> usize {
+        self.forest.label_col
+    }
+
+    fn input_features(&self) -> Vec<usize> {
+        self.forest.used_attributes()
+    }
+
+    fn predict_row(&self, obs: &Observation) -> Vec<f64> {
+        self.forest.predict_row_obs(obs)
+    }
+
+    fn predict_ds_row(&self, ds: &Dataset, row: usize) -> Vec<f64> {
+        self.forest.predict_ds_single(ds, row)
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "Type: \"{}\"\nTask: {}\nLabel: \"{}\"\n\nCompiled-forest artifact \
+             (format v{ARTIFACT_VERSION}): {} trees, {} nodes, served {}.\nInput features: {}.\n",
+            self.model_type(),
+            self.forest.task.name(),
+            self.forest.spec.columns[self.forest.label_col].name,
+            self.forest.num_trees,
+            self.forest.num_nodes,
+            if self.forest.is_mapped() { "from an mmap-ed file" } else { "from heap memory" },
+            self.forest.used_attributes().len(),
+        )
+    }
+
+    fn to_json(&self) -> Json {
+        // The artifact byte format is the serialization of this model; a
+        // JSON dump would be a lossy second format to maintain.
+        let mut j = Json::obj();
+        j.set("model_type", Json::Str(self.model_type().into())).set(
+            "note",
+            Json::Str(
+                "compiled artifact; serialize with CompiledForest::write_artifact (ydf compile)"
+                    .into(),
+            ),
+        );
+        j
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synthetic;
+    use crate::learner::gbt::GbtConfig;
+    use crate::learner::random_forest::RandomForestConfig;
+    use crate::learner::{GradientBoostedTreesLearner, Learner, RandomForestLearner};
+
+    fn bit_eq(a: &[f64], b: &[f64], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: value {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn compiled_matches_flat_bitwise_gbt() {
+        let ds = synthetic::adult_like(200, 231);
+        let mut cfg = GbtConfig::new("income");
+        cfg.num_trees = 10;
+        cfg.max_depth = 4;
+        let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+        let flat = super::super::flat::FlatEngine::compile(model.as_ref()).unwrap();
+        let compiled = CompiledEngine::compile(model.as_ref()).unwrap();
+        assert_eq!(compiled.name(), "GradientBoostedTreesCompiled");
+        let dim = compiled.output_dim();
+        let n = ds.num_rows();
+        let mut a = vec![0.0f64; n * dim];
+        let mut b = vec![0.0f64; n * dim];
+        flat.predict_batch(&ds, 0..n, &mut a);
+        compiled.predict_batch(&ds, 0..n, &mut b);
+        bit_eq(&a, &b, "batch");
+        for r in 0..20 {
+            bit_eq(
+                &compiled.predict_row(&ds.row(r)),
+                &model.predict_ds_row(&ds, r),
+                "row",
+            );
+        }
+    }
+
+    #[test]
+    fn compiled_matches_naive_rf_regression() {
+        let ds = synthetic::adult_like(150, 233);
+        let mut cfg = RandomForestConfig::new("age");
+        cfg.task = Task::Regression;
+        cfg.num_trees = 6;
+        cfg.compute_oob = false;
+        let model = RandomForestLearner::new(cfg).train(&ds).unwrap();
+        let compiled = CompiledEngine::compile(model.as_ref()).unwrap();
+        assert_eq!(compiled.name(), "RandomForestCompiled");
+        for r in 0..ds.num_rows() {
+            bit_eq(
+                &compiled.predict_row(&ds.row(r)),
+                &model.predict_ds_row(&ds, r),
+                "rf-regression row",
+            );
+        }
+    }
+
+    #[test]
+    fn lane_kernel_matches_scalar_bitwise() {
+        let ds = synthetic::adult_like(150, 235);
+        let mut cfg = GbtConfig::benchmark_rank1("income"); // oblique splits
+        cfg.num_trees = 6;
+        let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+        let mut scalar = CompiledEngine::compile(model.as_ref()).unwrap();
+        scalar.set_simd(false);
+        let mut lanes = CompiledEngine::compile(model.as_ref()).unwrap();
+        lanes.set_simd(true);
+        let dim = scalar.output_dim();
+        let n = ds.num_rows();
+        let mut a = vec![0.0f64; n * dim];
+        let mut b = vec![0.0f64; n * dim];
+        scalar.predict_batch(&ds, 0..n, &mut a);
+        lanes.predict_batch(&ds, 0..n, &mut b);
+        bit_eq(&a, &b, "scalar vs lane kernel");
+    }
+
+    #[test]
+    fn artifact_bytes_round_trip_bit_identical() {
+        let ds = synthetic::adult_like(120, 237);
+        let mut cfg = GbtConfig::new("income");
+        cfg.num_trees = 6;
+        cfg.max_depth = 4;
+        let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+        let forest = CompiledForest::lower(model.as_ref()).unwrap();
+        let bytes = forest.to_artifact_bytes();
+        let loaded = CompiledForest::from_artifact_bytes(&bytes).unwrap();
+        assert_eq!(loaded.num_trees(), forest.num_trees());
+        assert_eq!(loaded.num_nodes(), forest.num_nodes());
+        assert_eq!(loaded.used_attributes(), forest.used_attributes());
+        let n = ds.num_rows();
+        let dim = forest.output_dim();
+        let mut a = vec![0.0f64; n * dim];
+        let mut b = vec![0.0f64; n * dim];
+        forest.predict_batch_cols(&ds, 0..n, &mut a, true);
+        loaded.predict_batch_cols(&ds, 0..n, &mut b, true);
+        bit_eq(&a, &b, "round trip");
+        // Byte-stable: re-serializing the loaded forest reproduces the file.
+        assert_eq!(bytes, loaded.to_artifact_bytes());
+    }
+
+    #[test]
+    fn hostile_artifacts_rejected_cleanly() {
+        let ds = synthetic::adult_like(100, 239);
+        let mut cfg = GbtConfig::new("income");
+        cfg.num_trees = 3;
+        cfg.max_depth = 3;
+        let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+        let bytes = CompiledForest::lower(model.as_ref()).unwrap().to_artifact_bytes();
+
+        // Truncations at a spread of lengths, incl. mid-header.
+        for cut in [0usize, 1, 4, 12, 23, HEADER_LEN, bytes.len() / 3, bytes.len() - 1] {
+            let e = CompiledForest::from_artifact_bytes(&bytes[..cut]).unwrap_err();
+            assert!(!e.is_empty(), "cut={cut}");
+        }
+        // Wrong magic.
+        let mut b = bytes.clone();
+        b[0..4].copy_from_slice(b"JSON");
+        assert!(CompiledForest::from_artifact_bytes(&b).unwrap_err().contains("magic"));
+        // Future version.
+        let mut b = bytes.clone();
+        b[4..8].copy_from_slice(&2u32.to_le_bytes());
+        assert!(CompiledForest::from_artifact_bytes(&b).unwrap_err().contains("version"));
+        // A bit flip anywhere in the body trips the checksum.
+        let mut b = bytes.clone();
+        let mid = HEADER_LEN + (b.len() - HEADER_LEN) / 2;
+        b[mid] ^= 0x40;
+        assert!(CompiledForest::from_artifact_bytes(&b).unwrap_err().contains("checksum"));
+        // Trailing garbage is an exact-length violation.
+        let mut b = bytes.clone();
+        b.push(0);
+        assert!(CompiledForest::from_artifact_bytes(&b).unwrap_err().contains("truncated"));
+    }
+
+    #[test]
+    fn checksum_repaired_structural_corruption_rejected() {
+        // An attacker who re-computes the checksum still cannot make the
+        // structural validator accept out-of-range children.
+        let ds = synthetic::adult_like(100, 241);
+        let mut cfg = GbtConfig::new("income");
+        cfg.num_trees = 3;
+        cfg.max_depth = 3;
+        let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+        let forest = CompiledForest::lower(model.as_ref()).unwrap();
+        let mut bytes = forest.to_artifact_bytes();
+        let meta_len =
+            u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize;
+        let words_off = (HEADER_LEN + meta_len + 7) & !7;
+        // Root node (first node) is internal in any depth>1 tree: smash its
+        // child word (node word 5) to u32::MAX.
+        let child_byte = words_off + 4 * (META_WORDS + forest.num_trees() + 5);
+        bytes[child_byte..child_byte + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let ck = fnv1a64(&bytes[HEADER_LEN..]);
+        bytes[16..24].copy_from_slice(&ck.to_le_bytes());
+        let e = CompiledForest::from_artifact_bytes(&bytes).unwrap_err();
+        assert!(e.contains("children") || e.contains("range"), "{e}");
+    }
+
+    #[test]
+    fn linear_model_not_lowerable() {
+        let ds = synthetic::adult_like(50, 243);
+        let model = crate::learner::LinearLearner::default_config("income")
+            .train(&ds)
+            .unwrap();
+        assert!(CompiledForest::lower(model.as_ref()).is_err());
+        assert!(CompiledEngine::compile(model.as_ref()).is_none());
+    }
+
+    #[test]
+    fn compiled_model_exposes_forest_metadata() {
+        let ds = synthetic::adult_like(100, 245);
+        let mut cfg = GbtConfig::new("income");
+        cfg.num_trees = 4;
+        cfg.max_depth = 3;
+        let model = GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap();
+        let forest = Arc::new(CompiledForest::lower(model.as_ref()).unwrap());
+        let cm = CompiledModel::from_forest(Arc::clone(&forest));
+        assert_eq!(cm.model_type(), "COMPILED_GRADIENT_BOOSTED_TREES");
+        assert_eq!(cm.num_classes(), model.num_classes());
+        assert_eq!(cm.input_features(), model.input_features());
+        for r in 0..30 {
+            bit_eq(&cm.predict_ds_row(&ds, r), &model.predict_ds_row(&ds, r), "model row");
+        }
+        assert!(cm.describe().contains("Compiled-forest artifact"));
+        // An engine compiled *from* the CompiledModel shares the forest.
+        let eng = CompiledEngine::compile(&cm).unwrap();
+        assert_eq!(eng.name(), "GradientBoostedTreesCompiled");
+    }
+}

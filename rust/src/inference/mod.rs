@@ -12,6 +12,11 @@
 //!   traversal for trees with ≤ 64 leaves and Higher/Contains/IsTrue
 //!   conditions only (the engine the B.4 report calls
 //!   `GradientBoostedTreesQuickScorer`). Fastest when compatible.
+//! * [`compiled::CompiledEngine`] — the forest lowered to one flat word
+//!   array that doubles as a versioned, checksummed on-disk artifact
+//!   (`ydf compile` → `.bin`, mmap-ed back at serve time). Traversal
+//!   mirrors the flat engine (same kernels, bit-identical); the win is
+//!   near-instant model open and a position-independent layout.
 //! * [`pjrt::PjrtEngine`] — the XLA artifact produced by the build-time
 //!   JAX/Pallas layers, executed through the PJRT C API (requires the
 //!   `xla` cargo feature plus `make artifacts`; lossy: binary GBT over
@@ -72,6 +77,7 @@
 //! assert!((p0.iter().sum::<f64>() - 1.0).abs() < 1e-9);
 //! ```
 
+pub mod compiled;
 pub mod flat;
 pub mod naive;
 pub mod pjrt;
@@ -287,12 +293,22 @@ pub trait InferenceEngine: Send + Sync {
 /// the automatic engine selection of §3.7: callers normally use
 /// `engines.first()`.
 pub fn compile_engines(model: &dyn Model) -> Vec<Box<dyn InferenceEngine>> {
+    // An artifact-backed model only the compiled engine understands (the
+    // naive fallback cannot traverse the word layout).
+    if model.as_any().downcast_ref::<compiled::CompiledModel>().is_some() {
+        let eng = compiled::CompiledEngine::compile(model)
+            .expect("CompiledModel always compiles to CompiledEngine");
+        return vec![Box::new(eng)];
+    }
     let mut out: Vec<Box<dyn InferenceEngine>> = Vec::new();
     if let Some(qs) = quickscorer::QuickScorerEngine::compile(model) {
         out.push(Box::new(qs));
     }
     if let Some(flat) = flat::FlatEngine::compile(model) {
         out.push(Box::new(flat));
+    }
+    if let Some(ce) = compiled::CompiledEngine::compile(model) {
+        out.push(Box::new(ce));
     }
     out.push(Box::new(naive::NaiveEngine::compile(model)));
     out
@@ -304,6 +320,16 @@ pub fn compile_engines(model: &dyn Model) -> Vec<Box<dyn InferenceEngine>> {
 /// single source of truth for the automatic selection order; the serving
 /// layer pins one session to the engine returned here.
 pub fn fastest_engine(model: &dyn Model) -> Option<Box<dyn InferenceEngine>> {
+    // Artifact-backed models route to the compiled engine — the only one
+    // that understands the word layout. For in-memory RF/GBT the JSON-era
+    // order (QuickScorer → flat) is kept: the compiled engine's traversal
+    // mirrors the flat engine's, so auto-picking it would change nothing
+    // but the label, and `BENCH_inference.json` tracks both rows so the
+    // adaptive-routing item (ROADMAP) can make this a measured choice.
+    if model.as_any().downcast_ref::<compiled::CompiledModel>().is_some() {
+        return compiled::CompiledEngine::compile(model)
+            .map(|ce| Box::new(ce) as Box<dyn InferenceEngine>);
+    }
     if let Some(qs) = quickscorer::QuickScorerEngine::compile(model) {
         return Some(Box::new(qs));
     }
@@ -388,6 +414,10 @@ pub fn benchmark_inference(
         if let Some(mut fl) = flat::FlatEngine::compile(model) {
             fl.set_simd(false);
             entries.push((format!("{}[scalar]", fl.name()), Box::new(fl), false));
+        }
+        if let Some(mut ce) = compiled::CompiledEngine::compile(model) {
+            ce.set_simd(false);
+            entries.push((format!("{}[scalar]", ce.name()), Box::new(ce), false));
         }
     }
     let runs = runs.max(1);

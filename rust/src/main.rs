@@ -28,11 +28,16 @@ COMMANDS
                     parallel, GBT/CART score candidate features in
                     parallel, LINEAR ignores it; bit-identical to
                     --threads=1. Defaults to YDF_TRAIN_THREADS, else 1)
-  show_model       --model=MODEL.json
-  evaluate         --dataset=csv:FILE --model=MODEL.json
-  predict          --dataset=csv:FILE --model=MODEL.json --output=csv:FILE
-  benchmark_inference --dataset=csv:FILE --model=MODEL.json [--runs=20]
-  serve            --model=[NAME=]MODEL.json [--model=NAME2=OTHER.json ...]
+  compile          --model=MODEL.json --output=MODEL.bin
+                   (lowers a trained RF/GBT to the compiled-forest
+                    artifact: a versioned, checksummed flat layout that
+                    mmap-loads at serve time. Every command below accepts
+                    the .bin wherever it accepts MODEL.json)
+  show_model       --model=MODEL.json|MODEL.bin
+  evaluate         --dataset=csv:FILE --model=MODEL.json|MODEL.bin
+  predict          --dataset=csv:FILE --model=MODEL.json|MODEL.bin --output=csv:FILE
+  benchmark_inference --dataset=csv:FILE --model=MODEL.json|MODEL.bin [--runs=20]
+  serve            --model=[NAME=]MODEL.json|.bin [--model=NAME2=OTHER.json ...]
                    [--addr=127.0.0.1] [--port=8123] [--workers=4]
                    [--flush-rows=64] [--max-delay-ms=2]
                    [--max-queue-rows=4096] [--score-threads=0]
@@ -176,6 +181,22 @@ fn main() {
                 learner_name,
                 ds.num_rows(),
                 t0.elapsed().as_secs_f64()
+            );
+        }
+        "compile" => {
+            let model_path = req(&flags, "model");
+            let model = ok_or_die(load_model(Path::new(model_path)));
+            let forest =
+                ok_or_die(ydf::inference::compiled::CompiledForest::lower(model.as_ref()));
+            let out = req(&flags, "output");
+            ok_or_die(forest.write_artifact(Path::new(out)));
+            let bytes = std::fs::metadata(out).map(|m| m.len()).unwrap_or(0);
+            println!(
+                "compiled {} ({} trees, {} nodes) -> {out} ({bytes} bytes, format v{})",
+                model_path,
+                forest.num_trees(),
+                forest.num_nodes(),
+                ydf::inference::compiled::ARTIFACT_VERSION
             );
         }
         "show_model" => {

@@ -114,8 +114,22 @@ pub fn model_from_string(text: &str) -> Result<Box<dyn Model>, String> {
     }
 }
 
-/// Loads a model from a file.
+/// Loads a model from a file. Sniffs the first bytes: a compiled-forest
+/// artifact (magic `"YDFC"`, see `inference::compiled`) opens via mmap as
+/// a [`crate::inference::compiled::CompiledModel`]; anything else is
+/// parsed as the JSON model format. Callers — the CLI, the serving
+/// `Session` — therefore accept `.bin` artifacts wherever they accept
+/// JSON models.
 pub fn load_model(path: &Path) -> Result<Box<dyn Model>, String> {
+    let mut magic = [0u8; 4];
+    let is_artifact = std::fs::File::open(path)
+        .and_then(|mut f| std::io::Read::read_exact(&mut f, &mut magic))
+        .map(|_| magic == crate::inference::compiled::ARTIFACT_MAGIC)
+        .unwrap_or(false);
+    if is_artifact {
+        return crate::inference::compiled::CompiledModel::open(path)
+            .map(|m| Box::new(m) as Box<dyn Model>);
+    }
     let text = std::fs::read_to_string(path)
         .map_err(|e| format!("cannot read model file {}: {e}", path.display()))?;
     model_from_string(&text)

@@ -1,0 +1,392 @@
+//! Differential test harness for the compiled-forest engine
+//! (`rust/src/inference/compiled.rs`): randomized compiled-vs-naive
+//! bit-identity across semantics/tasks/lanes, artifact round-trips
+//! through real files (mmap path), hostile-input rejection, and serving
+//! integration — `.bin`-backed sessions bit-identical to JSON-backed
+//! ones, including a hot swap to an artifact-backed generation under
+//! concurrent load.
+
+mod common;
+
+use common::{adult_gbt, adult_json_rows, decode_all, mixed_ds_opt, mixed_gbt};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+use ydf::dataset::synthetic;
+use ydf::inference::compiled::{CompiledEngine, CompiledForest, CompiledModel};
+use ydf::inference::naive::NaiveEngine;
+use ydf::inference::InferenceEngine;
+use ydf::learner::gbt::GbtConfig;
+use ydf::learner::random_forest::RandomForestConfig;
+use ydf::learner::{GradientBoostedTreesLearner, Learner, RandomForestLearner};
+use ydf::model::io::{load_model, save_model};
+use ydf::model::{Model, Task};
+use ydf::serving::{BatcherConfig, Registry, Session, SubmitError};
+use ydf::utils::prop::run_cases;
+
+/// Bitwise f64 comparison: `assert_eq!` on floats would accept -0.0 vs
+/// 0.0 and reject NaN vs NaN; the differential contract is exact bits.
+fn assert_bits_eq(got: &[f64], want: &[f64], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            g.to_bits() == w.to_bits(),
+            "{what}: value {i} differs: {g} (bits {:#x}) vs {w} (bits {:#x})",
+            g.to_bits(),
+            w.to_bits()
+        );
+    }
+}
+
+/// Fresh per-test scratch directory under the system temp dir.
+fn scratch_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ydf_compiled_{name}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The headline differential property: for randomized forests over
+/// mixed-semantic datasets (NaN numericals, missing categoricals and
+/// booleans, out-of-dictionary categories, optional categorical-set
+/// columns, oblique splits, binary/multiclass/regression, row counts
+/// that leave unaligned 64-row block tails), the compiled engine is
+/// bit-for-bit identical to the naive pointer-chasing engine — in both
+/// the SIMD lane kernel and the scalar sweep, over full batches,
+/// unaligned sub-ranges, the threaded `predict_into` fan-out, and the
+/// single-row serving path.
+#[test]
+fn prop_compiled_engine_matches_naive() {
+    run_cases(0xC0DEC, 12, |rng, case| {
+        // classes: 2 → binary, 3 → multiclass, 0 → regression.
+        let classes = [2usize, 3, 0][case % 3];
+        let with_catset = case % 2 == 0;
+        // 48..128 rows: below, straddling and above one 64-row block.
+        let n = 48 + rng.uniform_usize(80);
+        let ds = mixed_ds_opt(n, classes, with_catset, rng);
+        let model: Box<dyn Model> = match (classes, case % 4) {
+            (0, c) if c % 2 == 0 => {
+                // Random Forest regression (RfRegression aggregate).
+                let mut cfg = RandomForestConfig::new("label");
+                cfg.task = Task::Regression;
+                cfg.num_trees = 3;
+                cfg.compute_oob = false;
+                RandomForestLearner::new(cfg).train(&ds).unwrap()
+            }
+            (0, _) => {
+                // GBT regression (squared-error loss, identity link).
+                let mut cfg = GbtConfig::new("label");
+                cfg.task = Task::Regression;
+                cfg.num_trees = 3;
+                cfg.max_depth = 4;
+                GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap()
+            }
+            (_, 1) => {
+                // Oblique splits (Appendix C.1 rank-1 recipe).
+                let mut cfg = GbtConfig::benchmark_rank1("label");
+                cfg.num_trees = 3;
+                GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap()
+            }
+            (_, 3) => {
+                let mut cfg = RandomForestConfig::new("label");
+                cfg.num_trees = 3;
+                cfg.compute_oob = false;
+                RandomForestLearner::new(cfg).train(&ds).unwrap()
+            }
+            _ => {
+                let mut cfg = GbtConfig::new("label");
+                cfg.num_trees = 3;
+                cfg.max_depth = 4;
+                GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap()
+            }
+        };
+
+        let naive = NaiveEngine::compile(model.as_ref());
+        let mut compiled = CompiledEngine::compile(model.as_ref())
+            .expect("RF/GBT models always lower to the compiled engine");
+        let dim = naive.output_dim();
+        assert_eq!(compiled.output_dim(), dim, "case {case}: output_dim");
+
+        let mut want = vec![0.0f64; n * dim];
+        naive.predict_batch(&ds, 0..n, &mut want);
+
+        for simd in [true, false] {
+            compiled.set_simd(simd);
+            let lane = if simd { "simd" } else { "scalar" };
+
+            let mut got = vec![0.0f64; n * dim];
+            compiled.predict_batch(&ds, 0..n, &mut got);
+            assert_bits_eq(&got, &want, &format!("case {case} [{lane}] full batch"));
+
+            // Unaligned sub-range: starts and ends off block boundaries.
+            let lo = 1 + rng.uniform_usize(n / 3);
+            let hi = n - rng.uniform_usize(n / 4).min(n - lo - 1);
+            let mut sub = vec![0.0f64; (hi - lo) * dim];
+            compiled.predict_batch(&ds, lo..hi, &mut sub);
+            assert_bits_eq(
+                &sub,
+                &want[lo * dim..hi * dim],
+                &format!("case {case} [{lane}] sub-range {lo}..{hi}"),
+            );
+
+            // Threaded fan-out must tile blocks without seams.
+            let mut threaded = vec![0.0f64; n * dim];
+            compiled.predict_into(&ds, 3, &mut threaded);
+            assert_bits_eq(&threaded, &want, &format!("case {case} [{lane}] predict_into"));
+
+            // Single-row serving path.
+            for r in [0, n / 2, n - 1] {
+                let obs = ds.row(r);
+                assert_bits_eq(
+                    &compiled.predict_row(&obs),
+                    &naive.predict_row(&obs),
+                    &format!("case {case} [{lane}] predict_row {r}"),
+                );
+            }
+        }
+    });
+}
+
+/// Compile → write `.bin` → reopen (mmap where available) → the loaded
+/// forest predicts bit-identically to the in-memory one and re-serializes
+/// to the exact same bytes.
+#[test]
+fn artifact_file_roundtrip_bit_identical() {
+    let (model, ds) = mixed_gbt(220, 3, 0xA7);
+    let forest = CompiledForest::lower(model.as_ref()).unwrap();
+    let dir = scratch_dir("roundtrip");
+    let path = dir.join("model.bin");
+    forest.write_artifact(&path).unwrap();
+
+    let loaded = CompiledForest::open(&path).unwrap();
+    #[cfg(all(unix, target_endian = "little"))]
+    assert!(loaded.is_mapped(), "unix little-endian load should mmap");
+    assert_eq!(loaded.num_trees(), forest.num_trees());
+    assert_eq!(loaded.num_nodes(), forest.num_nodes());
+    assert_eq!(loaded.to_artifact_bytes(), std::fs::read(&path).unwrap(), "byte-stable");
+
+    let n = ds.num_rows();
+    let mem = CompiledEngine::new(Arc::new(forest));
+    let map = CompiledEngine::new(Arc::new(loaded));
+    let dim = mem.output_dim();
+    let mut want = vec![0.0f64; n * dim];
+    let mut got = vec![0.0f64; n * dim];
+    mem.predict_batch(&ds, 0..n, &mut want);
+    map.predict_batch(&ds, 0..n, &mut got);
+    assert_bits_eq(&got, &want, "mmap-loaded vs in-memory");
+
+    // And the whole chain stays pinned to the naive reference.
+    let mut naive_out = vec![0.0f64; n * dim];
+    NaiveEngine::compile(model.as_ref()).predict_batch(&ds, 0..n, &mut naive_out);
+    assert_bits_eq(&got, &naive_out, "mmap-loaded vs naive");
+
+    std::fs::remove_file(&path).ok();
+}
+
+/// `load_model` sniffs the artifact magic: a `.bin` path yields a
+/// `CompiledModel` whose metadata (features, classes, task) matches the
+/// original and whose row predictions stay pinned to the naive engine.
+#[test]
+fn load_model_accepts_artifacts() {
+    let ds = synthetic::adult_like(300, 9);
+    let model = adult_gbt(300, 9, 4, 4);
+    let dir = scratch_dir("load_model");
+    let bin = dir.join("model.bin");
+    CompiledForest::lower(model.as_ref()).unwrap().write_artifact(&bin).unwrap();
+
+    let opened = load_model(&bin).unwrap();
+    assert_eq!(opened.model_type(), "COMPILED_GRADIENT_BOOSTED_TREES");
+    assert_eq!(opened.task(), model.task());
+    assert_eq!(opened.input_features(), model.input_features());
+    assert_eq!(opened.num_classes(), model.num_classes());
+    assert_eq!(opened.label_col(), model.label_col());
+
+    let naive = NaiveEngine::compile(model.as_ref());
+    for r in [0usize, 7, 131, 299] {
+        let obs = ds.row(r);
+        assert_bits_eq(
+            &opened.predict_row(&obs),
+            &naive.predict_row(&obs),
+            &format!("artifact model predict_row {r}"),
+        );
+    }
+    std::fs::remove_file(&bin).ok();
+}
+
+/// Hostile inputs: every truncation and every single-bit corruption of a
+/// valid artifact must be rejected with a clean error — no panic, no
+/// out-of-bounds access. The checksum covers everything after the
+/// header, and the header fields are each validated, so a flip anywhere
+/// is detectable.
+#[test]
+fn hostile_artifacts_rejected_not_panicked() {
+    let (model, _ds) = mixed_gbt(160, 2, 0x51);
+    let bytes = CompiledForest::lower(model.as_ref()).unwrap().to_artifact_bytes();
+    assert!(CompiledForest::from_artifact_bytes(&bytes).is_ok(), "baseline must load");
+
+    // Truncations stepped across the file plus the header boundaries.
+    let mut lengths: Vec<usize> = (0..bytes.len()).step_by(13).collect();
+    lengths.extend([0, 1, 4, 12, 23, 24, bytes.len() - 1]);
+    for len in lengths {
+        let r = CompiledForest::from_artifact_bytes(&bytes[..len]);
+        assert!(r.is_err(), "truncation to {len} bytes must be rejected");
+    }
+
+    // Single-bit flips stepped across the whole file — header, meta,
+    // padding, payload, checksum field itself.
+    for pos in (0..bytes.len()).step_by(7) {
+        let mut c = bytes.clone();
+        c[pos] ^= 0x10;
+        let r = CompiledForest::from_artifact_bytes(&c);
+        assert!(r.is_err(), "bit flip at byte {pos} must be rejected");
+    }
+
+    // Trailing garbage changes the exact-length expectation.
+    let mut long = bytes.clone();
+    long.push(0);
+    assert!(CompiledForest::from_artifact_bytes(&long).is_err(), "oversize rejected");
+
+    // Files that were never artifacts.
+    let dir = scratch_dir("hostile");
+    let garbage = dir.join("garbage.bin");
+    std::fs::write(&garbage, b"definitely not a forest").unwrap();
+    assert!(CompiledModel::open(&garbage).is_err(), "garbage file rejected");
+    let jsonish = dir.join("model.json");
+    std::fs::write(&jsonish, "{\"format_version\": 1}").unwrap();
+    assert!(CompiledModel::open(&jsonish).is_err(), "JSON file rejected by artifact loader");
+
+    // A truncated file behind `load_model`: the magic still sniffs as an
+    // artifact, and the artifact loader reports the corruption.
+    let truncated = dir.join("truncated.bin");
+    std::fs::write(&truncated, &bytes[..bytes.len() / 2]).unwrap();
+    let err = load_model(&truncated).expect_err("truncated artifact must not load");
+    assert!(
+        err.contains("truncated") || err.contains("corrupted"),
+        "error should name the corruption: {err}"
+    );
+    for p in [&garbage, &jsonish, &truncated] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+/// Serving parity: a session opened from a `.bin` artifact answers the
+/// exact same bits as a session opened from the JSON model it was
+/// compiled from — for a QuickScorer-eligible model and for an oblique
+/// model that forces the flat engine on the JSON side.
+#[test]
+fn artifact_session_bit_identical_to_json_session() {
+    let dir = scratch_dir("session_parity");
+    let rows = adult_json_rows(80);
+    let train = synthetic::adult_like(300, 21);
+
+    let plain = adult_gbt(300, 21, 5, 4);
+    let oblique: Box<dyn Model> = {
+        let mut cfg = GbtConfig::benchmark_rank1("income");
+        cfg.num_trees = 4;
+        GradientBoostedTreesLearner::new(cfg).train(&train).unwrap()
+    };
+
+    for (tag, model) in [("plain", &plain), ("oblique", &oblique)] {
+        let json = dir.join(format!("{tag}.json"));
+        let bin = dir.join(format!("{tag}.bin"));
+        save_model(model.as_ref(), &json).unwrap();
+        CompiledForest::lower(model.as_ref()).unwrap().write_artifact(&bin).unwrap();
+
+        let js = Session::open(&json).unwrap();
+        let bs = Session::open(&bin).unwrap();
+        assert!(
+            bs.engine_name().contains("Compiled"),
+            "{tag}: artifact session engine is {}",
+            bs.engine_name()
+        );
+        assert_eq!(js.output_dim(), bs.output_dim(), "{tag}: output_dim");
+        assert_eq!(js.class_names(), bs.class_names(), "{tag}: class_names");
+
+        let mut jb = decode_all(&js, &rows);
+        let mut bb = decode_all(&bs, &rows);
+        assert_bits_eq(
+            &bs.predict_block(&mut bb),
+            &js.predict_block(&mut jb),
+            &format!("{tag}: artifact session vs JSON session"),
+        );
+        std::fs::remove_file(&json).ok();
+        std::fs::remove_file(&bin).ok();
+    }
+}
+
+/// Hot swap to an artifact-backed generation under concurrent load:
+/// every request the batcher accepts is answered (the PR-6 zero-drop
+/// contract), a submit racing the swap sees a clean Shutdown rejection
+/// and re-resolves, and after the swap the name serves the compiled
+/// engine with bits matching the offline `.bin` reference.
+#[test]
+fn swap_to_artifact_backed_generation_zero_drops() {
+    let dir = scratch_dir("swap");
+    let rows = adult_json_rows(48);
+
+    // Incoming model, compiled to an artifact on disk.
+    let incoming = adult_gbt(300, 81, 5, 4);
+    let bin = dir.join("incoming.bin");
+    CompiledForest::lower(incoming.as_ref()).unwrap().write_artifact(&bin).unwrap();
+
+    // Offline reference through an artifact-backed session.
+    let offline = Session::open(&bin).unwrap();
+    let reference = {
+        let mut block = decode_all(&offline, &rows);
+        offline.predict_block(&mut block)
+    };
+    let dim = offline.output_dim();
+
+    let registry = Arc::new(Registry::new(BatcherConfig {
+        max_delay: Duration::from_micros(200),
+        ..Default::default()
+    }));
+    registry.register("live", common::adult_session_owned(300, 71, 6, 4)).unwrap();
+
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    std::thread::scope(|scope| {
+        for client in 0..2usize {
+            let registry = Arc::clone(&registry);
+            let (rows, stop) = (&rows, Arc::clone(&stop));
+            scope.spawn(move || {
+                let mut req = 0usize;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let start = (client * 11 + req * 5) % (rows.len() - 8);
+                    let entry = registry.resolve(Some("live")).unwrap();
+                    let block = decode_all(entry.session(), &rows[start..start + 8]);
+                    match entry.batcher().submit(&block) {
+                        Ok(pending) => {
+                            let out = pending.wait().expect("accepted requests are never dropped");
+                            assert_eq!(out.len(), 8 * entry.session().output_dim());
+                            req += 1;
+                        }
+                        Err(SubmitError::Shutdown) => continue, // swapped out: re-resolve
+                        Err(e) => panic!("unexpected rejection: {e}"),
+                    }
+                }
+            });
+        }
+        // Swap the live name to the artifact-backed session mid-traffic.
+        std::thread::sleep(Duration::from_millis(30));
+        let generation = registry.swap("live", Session::open(&bin).unwrap()).unwrap();
+        assert!(generation > 0);
+        std::thread::sleep(Duration::from_millis(30));
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    });
+
+    // The surviving generation is the compiled artifact, bit-identical
+    // to the offline reference.
+    let entry = registry.resolve(Some("live")).unwrap();
+    assert_eq!(entry.state(), ydf::serving::Lifecycle::Serving);
+    assert!(
+        entry.session().engine_name().contains("Compiled"),
+        "post-swap engine is {}",
+        entry.session().engine_name()
+    );
+    let block = decode_all(entry.session(), &rows);
+    let out = entry.batcher().submit(&block).unwrap().wait().unwrap();
+    assert_bits_eq(&out, &reference, "post-swap responses vs offline .bin reference");
+    assert_eq!(out.len(), rows.len() * dim);
+    assert_eq!(registry.stats_json().req_f64("reloads").unwrap(), 1.0);
+
+    std::fs::remove_file(&bin).ok();
+}

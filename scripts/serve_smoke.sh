@@ -1,13 +1,15 @@
 #!/usr/bin/env bash
 # Serving smoke test (`make serve-smoke`): train two models (GBT + RF),
-# serve both behind one ephemeral port, and drive the multi-model wire
-# protocol end to end: routed and default requests bit-identical to each
-# model's offline `ydf predict` output, per-model stats, unknown-model
-# and malformed-input error replies on a surviving connection, a live
-# hot swap under concurrent traffic (zero dropped requests, post-swap
-# replies bit-identical to the replacement's offline `ydf predict`), a
-# load/unload round trip, and protocol shutdown. Exits non-zero on any
-# mismatch.
+# compile the GBT ones to mmap-able artifacts (`ydf compile`), serve
+# JSON- and artifact-backed models behind one ephemeral port, and drive
+# the multi-model wire protocol end to end: routed and default requests
+# bit-identical to each model's offline `ydf predict` output (including
+# the `.bin`-backed model), per-model stats, unknown-model and
+# malformed-input error replies on a surviving connection, a live hot
+# swap to an artifact-backed generation under concurrent traffic (zero
+# dropped requests, post-swap replies bit-identical to the replacement's
+# offline `ydf predict`), a load/unload round trip, and protocol
+# shutdown. Exits non-zero on any mismatch.
 set -euo pipefail
 
 BIN=${BIN:-./target/release/ydf}
@@ -37,6 +39,10 @@ echo "serve-smoke: training two tiny models (GBT + RF)"
     --learner=GRADIENT_BOOSTED_TREES --param:num_trees=9 \
     --output="$TMP/model_gbt2.json" >/dev/null
 
+echo "serve-smoke: compiling the GBT models to artifacts (ydf compile)"
+"$BIN" compile --model="$TMP/model_gbt.json" --output="$TMP/model_gbt.bin" >/dev/null
+"$BIN" compile --model="$TMP/model_gbt2.json" --output="$TMP/model_gbt2.bin" >/dev/null
+
 echo "serve-smoke: computing offline batch predictions for all models"
 "$BIN" predict --dataset=csv:"$TMP/iris.csv" --model="$TMP/model_gbt.json" \
     --output=csv:"$TMP/preds_gbt.csv" >/dev/null
@@ -45,8 +51,19 @@ echo "serve-smoke: computing offline batch predictions for all models"
 "$BIN" predict --dataset=csv:"$TMP/iris.csv" --model="$TMP/model_gbt2.json" \
     --output=csv:"$TMP/preds_gbt2.csv" >/dev/null
 
-echo "serve-smoke: starting the two-model server on an ephemeral port"
+# Offline predictions through the compiled artifact must be byte-for-byte
+# the JSON model's output — the `.bin` is a lossless lowering.
+"$BIN" predict --dataset=csv:"$TMP/iris.csv" --model="$TMP/model_gbt.bin" \
+    --output=csv:"$TMP/preds_cgbt.csv" >/dev/null
+cmp "$TMP/preds_gbt.csv" "$TMP/preds_cgbt.csv" || {
+    echo "serve-smoke: compiled-artifact predictions differ from the JSON model" >&2
+    exit 1
+}
+echo "serve-smoke: ok: offline predict via .bin artifact is byte-identical"
+
+echo "serve-smoke: starting the three-model server on an ephemeral port"
 "$BIN" serve --model=gbt="$TMP/model_gbt.json" --model=rf="$TMP/model_rf.json" \
+    --model=cgbt="$TMP/model_gbt.bin" \
     --port=0 --max-delay-ms=1 --score-threads=2 \
     >"$TMP/serve.log" 2>&1 &
 SERVER_PID=$!
@@ -70,7 +87,7 @@ fi
 echo "serve-smoke: server is up on port $PORT"
 
 python3 - "$PORT" "$TMP/iris.csv" "$TMP/preds_gbt.csv" "$TMP/preds_rf.csv" \
-    "$TMP/preds_gbt2.csv" "$TMP/model_gbt2.json" "$TMP/model_rf.json" <<'EOF'
+    "$TMP/preds_gbt2.csv" "$TMP/model_gbt2.bin" "$TMP/model_rf.json" <<'EOF'
 import json, socket, sys, threading, time
 
 port = int(sys.argv[1])
@@ -98,7 +115,8 @@ def check(cond, what):
 
 health = rpc(json.dumps({"cmd": "health"}))
 check(health.get("ok") is True, "health reports ok")
-check(health.get("models") == ["gbt", "rf"], "health lists both models")
+check(health.get("models") == ["gbt", "rf", "cgbt"],
+      "health lists all three models (incl. the artifact-backed one)")
 check(health.get("model") == "gbt", "first registered model is the default")
 
 spec = rpc(json.dumps({"cmd": "spec"}))
@@ -142,6 +160,13 @@ for name in ("gbt", "rf"):
 check(offline_preds["gbt"][:N] != offline_preds["rf"][:N],
       "the two models genuinely disagree (the routing test is meaningful)")
 
+# The artifact-backed model ("cgbt" serves model_gbt.bin) must answer the
+# exact same bits as the JSON-backed "gbt" — one forest, two storage
+# formats, one compiled-vs-naive differential contract.
+cgbt = rpc(json.dumps({"model": "cgbt", "rows": rows}))
+check(cgbt.get("model") == "cgbt" and cgbt["predictions"] == offline_preds["gbt"][:N],
+      "artifact-backed model serves bit-identically to its JSON source")
+
 # Requests without a "model" field go to the default model (gbt) — the
 # single-model wire protocol is preserved.
 default = rpc(json.dumps({"rows": rows[:3]}))
@@ -184,8 +209,13 @@ check(per_model.get("rf", {}).get("requests", 0) >= 1,
       "per-model stats reported for 'rf'")
 check(per_model.get("rf", {}).get("errors", 1) == 0,
       "errors are attributed per model, not smeared")
+check(per_model.get("cgbt", {}).get("requests", 0) >= 1,
+      "per-model stats reported for the artifact-backed model")
 
-# --- Control plane: hot swap under live traffic -----------------------
+# --- Control plane: hot swap to an artifact-backed generation ---------
+# The replacement path is model_gbt2.bin: the server's swap handler goes
+# through the same magic-sniffing loader as startup, so the incoming
+# generation runs the compiled engine off the mmap-ed artifact.
 offline_gbt2 = offline(sys.argv[5])
 model_gbt2_path, model_rf_path = sys.argv[6], sys.argv[7]
 check(offline_preds["gbt"][:N] != offline_gbt2[:N],
@@ -231,7 +261,7 @@ for t in threads:
 served_at_least(10)  # traffic is flowing before the swap lands
 swap = rpc(json.dumps({"cmd": "swap", "model": "gbt", "path": model_gbt2_path}))
 check(swap.get("ok") is True and swap.get("generation", 0) > 0,
-      "live swap acknowledged with a new generation")
+      "live swap to the .bin artifact acknowledged with a new generation")
 with alock:
     after_swap_target = served[0] + 10
 served_at_least(after_swap_target)  # the new generation is serving
@@ -246,7 +276,8 @@ check(not bad, f"no unexpected error replies across the swap: {bad[:3]}")
 
 after = rpc(json.dumps({"model": "gbt", "rows": rows}))
 check(after["predictions"] == offline_gbt2[:N],
-      "post-swap serving is bit-identical to the replacement's offline predict")
+      "post-swap artifact-backed serving is bit-identical to the "
+      "replacement's offline predict")
 
 # The old generation drains to Retired, visible in the transition log.
 states, retired = {}, False
@@ -258,8 +289,9 @@ for _ in range(100):
         break
     time.sleep(0.1)
 check(retired, "old generation drained to Retired in the transition log")
-check(states.get("gbt") == "Serving" and states.get("rf") == "Serving",
-      "both live models report Serving after the swap")
+check(states.get("gbt") == "Serving" and states.get("rf") == "Serving"
+      and states.get("cgbt") == "Serving",
+      "all live models report Serving after the swap")
 
 stats = rpc(json.dumps({"cmd": "stats"}))
 check(stats.get("reloads", 0) == 1, "aggregate stats counted the reload")
@@ -299,6 +331,10 @@ grep -q "server stopped" "$TMP/serve.log" || {
 }
 grep -q "serving model 'rf'" "$TMP/serve.log" || {
     echo "serve-smoke: server log missing the second model's startup line" >&2
+    exit 1
+}
+grep -q "serving model 'cgbt'" "$TMP/serve.log" || {
+    echo "serve-smoke: server log missing the artifact-backed model's startup line" >&2
     exit 1
 }
 echo "serve-smoke: PASS"
