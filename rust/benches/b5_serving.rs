@@ -1,6 +1,6 @@
 //! b5: serving-runtime benchmark — the micro-batching path under load.
 //!
-//! Five families of configurations, all closed-loop (one in-flight
+//! Six families of configurations, all closed-loop (one in-flight
 //! request per client — the standard closed-system load model), all
 //! recorded to `BENCH_serving.json` so serving performance is tracked
 //! across PRs exactly like `BENCH_inference.json` tracks the engine
@@ -10,6 +10,10 @@
 //!
 //! * `s{rows}_c{clients}` — the PR-3 grid: request-size × concurrency
 //!   over one model, single-threaded flush scoring.
+//! * `trace_off_s8_c4` / `trace_on_s8_c4` — tracing overhead: the same
+//!   closed loop with the Chrome-trace collector disabled vs enabled.
+//!   The off combo must stay within noise of `s8_c4` — disabled span
+//!   sites cost one relaxed atomic load and no allocation.
 //! * `m2_s{rows}_c{clients}` — multi-model: two sessions behind one
 //!   registry, clients alternating models, each model coalescing only
 //!   its own rows.
@@ -225,6 +229,51 @@ fn main() {
             report(&r);
             results.push(r);
         }
+    }
+
+    // Family 1b: tracing overhead — the same 8-row × 4-client closed
+    // loop with the Chrome-trace collector off and then on. The off
+    // combo pins the disabled-path cost (one relaxed atomic load per
+    // span site, no allocation): its us/request must stay within noise
+    // of `s8_c4` above. The on combo bounds the enabled-path cost.
+    for (key, trace_on) in [("trace_off_s8_c4", false), ("trace_on_s8_c4", true)] {
+        let batcher = Arc::new(Batcher::new(
+            Arc::clone(&session),
+            BatcherConfig {
+                max_delay: Duration::ZERO,
+                score_threads: 1,
+                ..Default::default()
+            },
+        ));
+        let lanes: Vec<(Arc<Batcher>, RowBlock)> = (0..4)
+            .map(|client| (Arc::clone(&batcher), request_block(&session, 8, client)))
+            .collect();
+        if trace_on {
+            ydf::obs::trace::enable();
+        }
+        let (wall, tail) = run_closed_loop(&lanes, requests_per_client);
+        if trace_on {
+            ydf::obs::trace::disable();
+            // Drain the buffer so the collected spans don't linger for
+            // the rest of the process; the events themselves are not
+            // the artifact here, the throughput delta is.
+            std::hint::black_box(ydf::obs::trace::take_json());
+        }
+        let snap = batcher.stats().snapshot();
+        let r = combo_result(
+            key.to_string(),
+            1,
+            1,
+            8,
+            4,
+            requests_per_client,
+            wall,
+            tail,
+            snap.batches,
+            snap.batched_rows,
+        );
+        report(&r);
+        results.push(r);
     }
 
     // Family 2: two models behind one registry, clients alternating —

@@ -99,26 +99,12 @@ pub const BLOCK_SIZE: usize = 64;
 /// Thread count for whole-dataset fan-out: `YDF_INFER_THREADS` when set
 /// to a positive integer, otherwise the machine's available parallelism.
 /// A set-but-invalid value (unparsable, or `0`) also falls back, with a
-/// one-time warning on stderr naming the bad value — a misconfigured
-/// deployment should be diagnosable, not silently single- or all-core.
+/// one-time warning naming the bad value (via `utils::env`) — a
+/// misconfigured deployment should be diagnosable, not silently single-
+/// or all-core.
 pub fn batch_threads() -> usize {
     let fallback = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    match std::env::var("YDF_INFER_THREADS") {
-        Ok(v) => match v.parse::<usize>() {
-            Ok(t) if t >= 1 => t,
-            _ => {
-                static WARN_ONCE: std::sync::Once = std::sync::Once::new();
-                WARN_ONCE.call_once(|| {
-                    eprintln!(
-                        "warning: ignoring YDF_INFER_THREADS='{v}' (expected a positive \
-                         integer); using {fallback} inference threads"
-                    );
-                });
-                fallback
-            }
-        },
-        Err(_) => fallback,
-    }
+    crate::utils::env::positive_usize("YDF_INFER_THREADS").unwrap_or(fallback)
 }
 
 /// Partitions `n` rows into at most `threads` contiguous,
@@ -346,13 +332,30 @@ pub fn predict_flat(model: &dyn Model, ds: &Dataset) -> (Vec<f64>, usize) {
     let n = ds.num_rows();
     let mut flat = vec![0.0f64; n * dim];
     if let Some(engine) = fastest_engine(model) {
+        crate::ydf_debug!("predict_flat: scoring {n} rows via {}", engine.name());
         engine.predict_into(ds, batch_threads(), &mut flat);
+        note_offline_rows(&engine.name(), n);
     } else {
+        crate::ydf_debug!("predict_flat: scoring {n} rows via model row loop (no engine compiled)");
         for r in 0..n {
             flat[r * dim..(r + 1) * dim].copy_from_slice(&model.predict_ds_row(ds, r));
         }
+        note_offline_rows("row loop", n);
     }
     (flat, dim)
+}
+
+/// Feeds the offline-inference rows counter. One registry lookup per
+/// `predict_flat` call — dataset-level, not per row, so the lock is
+/// negligible next to the prediction work it accounts for.
+fn note_offline_rows(engine: &str, rows: usize) {
+    crate::obs::metrics()
+        .counter_with(
+            "ydf_inference_rows_total",
+            "Rows scored offline through predict_flat, by engine.",
+            &[("engine", engine)],
+        )
+        .add(rows as u64);
 }
 
 /// Name of the engine [`predict_flat`] would select for `model` — the

@@ -251,6 +251,8 @@ impl Learner for CartLearner {
             SplitEngine::new(Arc::new(ColumnIndex::new(ds)), cfg.num_threads);
         let mut arena = RowArena::new();
         let mut rng = Rng::seed_from_u64(cfg.seed);
+        let t_span = crate::obs::trace::begin();
+        let t_grow = std::time::Instant::now();
         let mut tree = grow_tree(
             ds,
             &train_rows,
@@ -261,7 +263,25 @@ impl Learner for CartLearner {
             &mut arena,
             &mut rng,
         );
+        let grow_us = t_grow.elapsed().as_secs_f64() * 1e6;
+        crate::obs::metrics()
+            .counter_with(
+                "ydf_train_trees_total",
+                "Trees grown during training, by learner.",
+                &[("learner", "cart")],
+            )
+            .inc();
+        crate::obs::trace::end(t_span, "train_tree", || {
+            use crate::obs::trace::ArgValue;
+            vec![
+                ("learner", ArgValue::Str("cart".to_string())),
+                ("nodes", ArgValue::U64(tree.nodes.len() as u64)),
+                ("us", ArgValue::F64(grow_us)),
+            ]
+        });
+        let nodes_before_prune = tree.nodes.len();
 
+        let t_prune = crate::obs::trace::begin();
         if !prune_rows.is_empty() {
             prune(&mut tree, ds, &prune_rows, cfg.task, &class_labels, &reg_targets);
         } else if let Some(v) = valid {
@@ -272,6 +292,18 @@ impl Learner for CartLearner {
             let rows: Vec<u32> = (0..v.num_rows() as u32).collect();
             prune(&mut tree, v, &rows, cfg.task, &v_labels, &v_targets);
         }
+        crate::obs::trace::end(t_prune, "prune", || {
+            use crate::obs::trace::ArgValue;
+            vec![
+                ("nodes_before", ArgValue::U64(nodes_before_prune as u64)),
+                ("nodes_after", ArgValue::U64(tree.nodes.len() as u64)),
+            ]
+        });
+        crate::ydf_info!(
+            "cart: grew tree with {nodes_before_prune} nodes in {grow_us:.0} us, \
+             {} nodes after pruning",
+            tree.nodes.len()
+        );
 
         Ok(Box::new(RandomForestModel {
             spec: ds.spec.clone(),

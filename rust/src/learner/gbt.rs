@@ -288,7 +288,29 @@ impl GradientBoostedTreesLearner {
         let mut since_best = 0usize;
         let mut last_valid_loss = None;
 
-        'outer: for _iter in 0..cfg.num_trees {
+        // Training telemetry: per-tree counters in the global metrics
+        // registry, per-tree trace spans, and a per-iteration progress
+        // line (train loss included) at info level. The train loss is an
+        // extra pass over `scores`, so it is computed only when someone is
+        // listening — with `YDF_LOG=off`/`warn` and no trace, the boosting
+        // loop does exactly the work it did before.
+        let obs_trees = crate::obs::metrics().counter_with(
+            "ydf_train_trees_total",
+            "Trees grown during training, by learner.",
+            &[("learner", "gbt")],
+        );
+        let obs_iters = crate::obs::metrics().counter_with(
+            "ydf_train_iterations_total",
+            "Boosting iterations completed.",
+            &[("learner", "gbt")],
+        );
+        let obs_tree_us = crate::obs::metrics().counter_with(
+            "ydf_train_tree_micros_total",
+            "Wall-clock microseconds spent growing trees (split search included), by learner.",
+            &[("learner", "gbt")],
+        );
+
+        'outer: for iter in 0..cfg.num_trees {
             // Row subsampling for this iteration.
             let rows: Vec<u32> = if cfg.subsample < 1.0 {
                 (0..n as u32)
@@ -334,6 +356,8 @@ impl GradientBoostedTreesLearner {
                     l1: cfg.l1,
                     l2: cfg.l2,
                 };
+                let t_span = crate::obs::trace::begin();
+                let t_grow = std::time::Instant::now();
                 let mut tree = grow_tree(
                     train,
                     &rows,
@@ -343,6 +367,24 @@ impl GradientBoostedTreesLearner {
                     &mut engine,
                     &mut arena,
                     &mut rng,
+                );
+                let grow_us = t_grow.elapsed().as_secs_f64() * 1e6;
+                obs_trees.inc();
+                obs_tree_us.add(grow_us as u64);
+                crate::obs::trace::end(t_span, "train_tree", || {
+                    use crate::obs::trace::ArgValue;
+                    vec![
+                        ("learner", ArgValue::Str("gbt".to_string())),
+                        ("iter", ArgValue::U64(iter as u64)),
+                        ("dim", ArgValue::U64(k as u64)),
+                        ("nodes", ArgValue::U64(tree.nodes.len() as u64)),
+                        ("us", ArgValue::F64(grow_us)),
+                    ]
+                });
+                crate::ydf_debug!(
+                    "gbt iter {iter} dim {k}: grew tree with {} nodes in {:.0} us",
+                    tree.nodes.len(),
+                    grow_us
                 );
                 // Bake the shrinkage into leaf values.
                 for node in &mut tree.nodes {
@@ -360,6 +402,59 @@ impl GradientBoostedTreesLearner {
                     }
                 }
                 trees.push(tree);
+            }
+            obs_iters.inc();
+            if crate::obs::log::enabled(crate::obs::log::Level::Info)
+                || crate::obs::trace::enabled()
+            {
+                // Train loss at the current scores — same formulas as the
+                // validation loss below, over the training arrays.
+                let train_loss = match &targets {
+                    BoostTargets::Binary { labels, .. } => {
+                        let mut loss_sum = 0.0;
+                        for i in 0..n {
+                            let p = sigmoid(scores[i]).clamp(1e-12, 1.0 - 1e-12);
+                            loss_sum -= if labels[i] == 1 { p.ln() } else { (1.0 - p).ln() };
+                        }
+                        loss_sum / n.max(1) as f64
+                    }
+                    BoostTargets::Multiclass { labels, num_classes, .. } => {
+                        let mut loss_sum = 0.0;
+                        for i in 0..n {
+                            let mut probs: Vec<f64> =
+                                (0..*num_classes).map(|c| scores[i * dim + c]).collect();
+                            softmax_in_place(&mut probs);
+                            loss_sum -= probs[labels[i] as usize].max(1e-12).ln();
+                        }
+                        loss_sum / n.max(1) as f64
+                    }
+                    BoostTargets::Regression { targets, .. } => {
+                        let mut loss_sum = 0.0;
+                        for i in 0..n {
+                            let e = scores[i] - targets[i] as f64;
+                            loss_sum += e * e;
+                        }
+                        loss_sum / n.max(1) as f64
+                    }
+                };
+                crate::ydf_info!(
+                    "gbt iter {iter}: {} trees, train loss {train_loss:.6}, \
+                     {} sampled rows, arena {} rows",
+                    trees.len(),
+                    rows.len(),
+                    arena.len()
+                );
+                crate::obs::trace::instant("train_iteration", || {
+                    use crate::obs::trace::ArgValue;
+                    vec![
+                        ("learner", ArgValue::Str("gbt".to_string())),
+                        ("iter", ArgValue::U64(iter as u64)),
+                        ("trees", ArgValue::U64(trees.len() as u64)),
+                        ("train_loss", ArgValue::F64(train_loss)),
+                        ("rows", ArgValue::U64(rows.len() as u64)),
+                        ("arena_rows", ArgValue::U64(arena.len() as u64)),
+                    ]
+                });
             }
 
             // Early stopping on validation loss (LOSS_INCREASE).

@@ -120,25 +120,11 @@ pub fn feature_columns(ds: &Dataset, label_col: usize) -> Vec<usize> {
 /// `GbtConfig::num_threads` (per-node feature-parallel split search);
 /// both are bit-identical to single-threaded training, so the knob is
 /// pure throughput. A set-but-invalid value (unparsable, or `0`) falls
-/// back to 1 with a one-time warning on stderr naming the bad value —
-/// the same contract as `YDF_INFER_THREADS` on the inference side.
+/// back to 1 with a one-time warning naming the bad value (via
+/// `utils::env`) — the same contract as `YDF_INFER_THREADS` on the
+/// inference side.
 pub fn train_threads() -> usize {
-    match std::env::var("YDF_TRAIN_THREADS") {
-        Ok(v) => match v.parse::<usize>() {
-            Ok(t) if t >= 1 => t,
-            _ => {
-                static WARN_ONCE: std::sync::Once = std::sync::Once::new();
-                WARN_ONCE.call_once(|| {
-                    eprintln!(
-                        "warning: ignoring YDF_TRAIN_THREADS='{v}' (expected a positive \
-                         integer); using 1 training thread"
-                    );
-                });
-                1
-            }
-        },
-        Err(_) => 1,
-    }
+    crate::utils::env::positive_usize("YDF_TRAIN_THREADS").unwrap_or(1)
 }
 
 /// Binary-classification sanity guard used by GBT's binomial loss.

@@ -179,6 +179,21 @@ impl Learner for RandomForestLearner {
         // most once across all trees and threads); each tree worker gets
         // its own sequential split engine and row arena over it.
         let index = Arc::new(ColumnIndex::new(ds));
+        // Training telemetry. The handles are resolved once here and the
+        // closure below only touches relaxed atomics and (when enabled)
+        // the trace buffer — no RNG draws, no ordering dependence — so
+        // threaded training stays bit-identical to sequential (pinned by
+        // `prop_threaded_training_bit_identical_to_sequential`).
+        let obs_trees = crate::obs::metrics().counter_with(
+            "ydf_train_trees_total",
+            "Trees grown during training, by learner.",
+            &[("learner", "rf")],
+        );
+        let obs_tree_us = crate::obs::metrics().counter_with(
+            "ydf_train_tree_micros_total",
+            "Wall-clock microseconds spent growing trees (split search included), by learner.",
+            &[("learner", "rf")],
+        );
         let trees_and_bags = parallel_map(cfg.num_trees, cfg.num_threads, |t| {
             let mut rng = Rng::seed_from_u64(tree_seeds[t]);
             let rows: Vec<u32> = if cfg.bootstrap {
@@ -198,6 +213,8 @@ impl Learner for RandomForestLearner {
             };
             let mut engine = SplitEngine::sequential(Arc::clone(&index));
             let mut arena = RowArena::new();
+            let t_span = crate::obs::trace::begin();
+            let t_grow = std::time::Instant::now();
             let tree = grow_tree(
                 ds,
                 &rows,
@@ -208,6 +225,23 @@ impl Learner for RandomForestLearner {
                 &mut arena,
                 &mut rng,
             );
+            let grow_us = t_grow.elapsed().as_secs_f64() * 1e6;
+            obs_trees.inc();
+            obs_tree_us.add(grow_us as u64);
+            crate::obs::trace::end(t_span, "train_tree", || {
+                use crate::obs::trace::ArgValue;
+                vec![
+                    ("learner", ArgValue::Str("rf".to_string())),
+                    ("tree", ArgValue::U64(t as u64)),
+                    ("nodes", ArgValue::U64(tree.nodes.len() as u64)),
+                    ("us", ArgValue::F64(grow_us)),
+                ]
+            });
+            crate::ydf_debug!(
+                "rf tree {t}: {} nodes in {:.0} us",
+                tree.nodes.len(),
+                grow_us
+            );
             (tree, in_bag)
         });
 
@@ -217,6 +251,12 @@ impl Learner for RandomForestLearner {
             trees.push(tree);
             bags.push(bag);
         }
+        crate::ydf_info!(
+            "rf: grew {} trees on {} rows ({} thread(s))",
+            trees.len(),
+            n,
+            cfg.num_threads.max(1)
+        );
 
         // Out-of-bag evaluation (§3.6): each example is scored only by the
         // trees whose bootstrap sample excluded it.

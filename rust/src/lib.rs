@@ -33,6 +33,7 @@ pub mod inference;
 pub mod learner;
 pub mod metalearner;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod serving;
 pub mod splitter;

@@ -23,11 +23,16 @@ COMMANDS
   infer_dataspec   --dataset=csv:FILE --output=SPEC.json
   show_dataspec    --dataspec=SPEC.json [--dataset=csv:FILE]
   train            --dataset=csv:FILE --label=NAME --learner=NAME
-                   [--param:KEY=VALUE ...] [--threads=N] --output=MODEL.json
+                   [--param:KEY=VALUE ...] [--threads=N] [--trace=FILE]
+                   --output=MODEL.json
                    (--threads: training threads — RF trains trees in
                     parallel, GBT/CART score candidate features in
                     parallel, LINEAR ignores it; bit-identical to
-                    --threads=1. Defaults to YDF_TRAIN_THREADS, else 1)
+                    --threads=1. Defaults to YDF_TRAIN_THREADS, else 1.
+                    --trace: write per-tree/per-iteration training spans
+                    as Chrome trace-event JSON, loadable in
+                    chrome://tracing or Perfetto. YDF_LOG=info prints
+                    per-iteration training progress; docs/observability.md)
   compile          --model=MODEL.json --output=MODEL.bin
                    (lowers a trained RF/GBT to the compiled-forest
                     artifact: a versioned, checksummed flat layout that
@@ -42,7 +47,7 @@ COMMANDS
                    [--flush-rows=64] [--max-delay-ms=2]
                    [--max-queue-rows=4096] [--score-threads=0]
                    [--conn-timeout=60] [--queue-deadline-ms=1000]
-                   [--quota-rows=0] [--admission-rows=0]
+                   [--quota-rows=0] [--admission-rows=0] [--trace=FILE]
                    (--model repeats to serve several models from one
                     port; the first is the default route. NAME defaults
                     to the file stem. --score-threads: workers a large
@@ -54,7 +59,11 @@ COMMANDS
                     per-model pending-row cap; --admission-rows: shared
                     pending-row budget across all models; 0 = off.
                     Models hot-reload while serving via the load/swap/
-                    unload admin commands, docs/serving.md)
+                    unload admin commands, docs/serving.md. --trace:
+                    record request/flush spans, written as Chrome
+                    trace-event JSON when the server stops; the metrics
+                    wire command exposes Prometheus text exposition,
+                    docs/observability.md)
   synth            --name=TABLE5_NAME --output=csv:FILE [--max-examples=N]
   benchmark_suite  [--full] [--folds=N] [--trees=N] [--trials=N]
                    [--datasets=a,b,c] [--max-examples=N]
@@ -118,6 +127,30 @@ fn ok_or_die<T>(r: Result<T, String>) -> T {
     })
 }
 
+/// `--trace=FILE`: turns span recording on now and returns the target
+/// path; the caller writes the file once its command finishes (see
+/// `docs/observability.md` for the span vocabulary).
+fn trace_flag(flags: &HashMap<String, String>) -> Option<PathBuf> {
+    flags.get("trace").map(|p| {
+        if p == "true" {
+            eprintln!("--trace needs a file path: --trace=FILE");
+            std::process::exit(2);
+        }
+        ydf::obs::trace::enable();
+        PathBuf::from(p)
+    })
+}
+
+fn write_trace(path: &Path) {
+    match ydf::obs::trace::write_file(path) {
+        Ok(events) => println!("wrote {events} trace event(s) to {}", path.display()),
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(1);
+        }
+    }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (cmd, rest) = match args.split_first() {
@@ -172,6 +205,7 @@ fn main() {
                 params.insert("num_threads".to_string(), t.clone());
             }
             let learner = ok_or_die(create_learner(learner_name, label, &params));
+            let trace_path = trace_flag(&flags);
             let t0 = std::time::Instant::now();
             let model = ok_or_die(learner.train(&ds));
             let out = req(&flags, "output");
@@ -182,6 +216,9 @@ fn main() {
                 ds.num_rows(),
                 t0.elapsed().as_secs_f64()
             );
+            if let Some(p) = trace_path {
+                write_trace(&p);
+            }
         }
         "compile" => {
             let model_path = req(&flags, "model");
@@ -323,7 +360,11 @@ fn main() {
                 ..Default::default()
             };
             println!("protocol: newline-delimited JSON (docs/serving.md)");
+            let trace_path = trace_flag(&flags);
             ok_or_die(ydf::serving::serve(registry, &config));
+            if let Some(p) = trace_path {
+                write_trace(&p);
+            }
         }
         "synth" => {
             let name = req(&flags, "name");

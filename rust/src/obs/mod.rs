@@ -1,0 +1,247 @@
+//! Unified observability: named metrics, leveled logging, and execution
+//! tracing — dependency-free, near-zero-cost when idle.
+//!
+//! Three faces (the paper's "simplicity and safety of use" principle
+//! applied to operations — behavior should be measurable, not guessed):
+//!
+//! * **Metrics** (this module): a process-global registry of named,
+//!   optionally labeled counters and gauges backed by relaxed atomics.
+//!   The serving batcher feeds per-flush engine timings (the data the
+//!   adaptive-engine-routing ROADMAP item needs), the learners feed
+//!   per-tree training counters, `utils/pool.rs` feeds pool activity,
+//!   and the inference layer feeds batch-call counters. Rendered in
+//!   Prometheus text exposition format by [`prom`] — the serving wire
+//!   protocol exposes it as `{"cmd": "metrics"}`.
+//! * **Logging** ([`log`]): a leveled facade (`YDF_LOG=off|warn|info|
+//!   debug`, default `warn`) behind the [`crate::ydf_warn!`],
+//!   [`crate::ydf_info!`] and [`crate::ydf_debug!`] macros. Training
+//!   progress (per-iteration loss, per-tree events) logs at `info`/
+//!   `debug`; misconfiguration warnings at `warn`.
+//! * **Tracing** ([`trace`]): Chrome trace-event JSON spans (request
+//!   lifecycle, per-flush scoring, per-tree training), enabled by
+//!   `ydf serve --trace=FILE` / `ydf train --trace=FILE`. One relaxed
+//!   atomic load per span site when disabled — no allocation, no lock.
+//!
+//! Hot paths cache their metric handles in `OnceLock` statics: the
+//! registry lock is taken once per (name, label-set) for the process
+//! lifetime, after which a metric update is one relaxed `fetch_add`.
+
+pub mod log;
+pub mod prom;
+pub mod trace;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A monotone counter. Cheap to clone (an `Arc` around one atomic);
+/// updates are relaxed — counters are statistics, not synchronization.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-write-wins gauge (current value, not a running total).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// What a registered metric is, for exposition (`# TYPE` lines).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+}
+
+impl MetricKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+        }
+    }
+}
+
+/// One metric family in a [`Metrics::snapshot`]: every label-set series
+/// registered under one name, values read at snapshot time.
+pub struct MetricFamily {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub kind: MetricKind,
+    /// `(sorted label pairs, value)` per series, in deterministic order.
+    pub series: Vec<(Vec<(String, String)>, u64)>,
+}
+
+struct Slot {
+    help: &'static str,
+    kind: MetricKind,
+    /// Label-set → value cell. `BTreeMap` keeps exposition deterministic.
+    series: BTreeMap<Vec<(String, String)>, Arc<AtomicU64>>,
+}
+
+/// The process-global named-metric registry. Registration is idempotent:
+/// asking for the same `(name, labels)` twice returns handles to the
+/// same underlying cell, so call sites don't need to coordinate.
+pub struct Metrics {
+    slots: Mutex<BTreeMap<&'static str, Slot>>,
+}
+
+/// The global registry ([`Metrics`]). Exists for the process lifetime;
+/// a long-lived server accumulates counters across model reloads.
+pub fn metrics() -> &'static Metrics {
+    static METRICS: OnceLock<Metrics> = OnceLock::new();
+    METRICS.get_or_init(|| Metrics { slots: Mutex::new(BTreeMap::new()) })
+}
+
+impl Metrics {
+    pub fn counter(&self, name: &'static str, help: &'static str) -> Counter {
+        self.counter_with(name, help, &[])
+    }
+
+    /// A counter series under `name` with the given label pairs (label
+    /// order does not matter; pairs are sorted by label name).
+    pub fn counter_with(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&str, &str)],
+    ) -> Counter {
+        Counter(self.cell(name, help, MetricKind::Counter, labels))
+    }
+
+    pub fn gauge(&self, name: &'static str, help: &'static str) -> Gauge {
+        self.gauge_with(name, help, &[])
+    }
+
+    pub fn gauge_with(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&str, &str)],
+    ) -> Gauge {
+        Gauge(self.cell(name, help, MetricKind::Gauge, labels))
+    }
+
+    fn cell(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        kind: MetricKind,
+        labels: &[(&str, &str)],
+    ) -> Arc<AtomicU64> {
+        let mut key: Vec<(String, String)> =
+            labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        key.sort();
+        let mut slots = match self.slots.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        let slot = slots.entry(name).or_insert_with(|| Slot {
+            help,
+            kind,
+            series: BTreeMap::new(),
+        });
+        debug_assert_eq!(
+            slot.kind, kind,
+            "metric '{name}' registered with two different kinds"
+        );
+        Arc::clone(slot.series.entry(key).or_default())
+    }
+
+    /// A point-in-time read of every registered series, families and
+    /// series both in deterministic (name, label) order.
+    pub fn snapshot(&self) -> Vec<MetricFamily> {
+        let slots = match self.slots.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        slots
+            .iter()
+            .map(|(&name, slot)| MetricFamily {
+                name,
+                help: slot.help,
+                kind: slot.kind,
+                series: slot
+                    .series
+                    .iter()
+                    .map(|(labels, cell)| (labels.clone(), cell.load(Ordering::Relaxed)))
+                    .collect(),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registration_is_idempotent_and_shared() {
+        let a = metrics().counter("ydf_test_obs_shared_total", "test counter");
+        let b = metrics().counter("ydf_test_obs_shared_total", "test counter");
+        let before = a.get();
+        b.add(3);
+        assert_eq!(a.get(), before + 3, "both handles hit the same cell");
+    }
+
+    #[test]
+    fn labeled_series_are_distinct_and_snapshot_ordered() {
+        let x = metrics().counter_with(
+            "ydf_test_obs_labeled_total",
+            "test labeled counter",
+            &[("engine", "x")],
+        );
+        let y = metrics().counter_with(
+            "ydf_test_obs_labeled_total",
+            "test labeled counter",
+            &[("engine", "y")],
+        );
+        x.add(1);
+        y.add(2);
+        let snap = metrics().snapshot();
+        let fam = snap
+            .iter()
+            .find(|f| f.name == "ydf_test_obs_labeled_total")
+            .expect("family registered");
+        assert_eq!(fam.kind, MetricKind::Counter);
+        assert!(fam.series.len() >= 2);
+        // Series come out label-sorted: engine=x before engine=y.
+        let labels: Vec<&str> = fam
+            .series
+            .iter()
+            .filter_map(|(ls, _)| ls.iter().find(|(k, _)| k == "engine").map(|(_, v)| v.as_str()))
+            .collect();
+        let mut sorted = labels.clone();
+        sorted.sort();
+        assert_eq!(labels, sorted);
+    }
+
+    #[test]
+    fn gauge_is_last_write_wins() {
+        let g = metrics().gauge("ydf_test_obs_gauge", "test gauge");
+        g.set(7);
+        g.set(3);
+        assert_eq!(g.get(), 3);
+    }
+}

@@ -1,0 +1,137 @@
+//! Prometheus text exposition (format version 0.0.4) rendering for the
+//! [`super::metrics`] registry.
+//!
+//! [`render_global`] walks the registry snapshot and emits one
+//! `# HELP` / `# TYPE` header plus one sample line per labeled series.
+//! The serving layer prepends its own per-model families (rendered from
+//! `ServingStats` snapshots in `serving::Registry::prometheus`, which
+//! keeps `obs` free of serving dependencies) using the same
+//! [`family_header`] / [`sample`] helpers, so both halves share escaping
+//! and formatting rules.
+
+use super::metrics;
+
+/// Renders every family in the global registry. Deterministic order
+/// (families by name, series by sorted label pairs).
+pub fn render_global() -> String {
+    let mut out = String::new();
+    for family in metrics().snapshot() {
+        family_header(&mut out, family.name, family.help, family.kind.name());
+        for (labels, value) in &family.series {
+            let pairs: Vec<(&str, &str)> =
+                labels.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+            sample(&mut out, family.name, &pairs, *value as f64);
+        }
+    }
+    out
+}
+
+/// Appends the `# HELP` / `# TYPE` header for one metric family.
+/// `kind` is the Prometheus type string: `counter`, `gauge`, `summary`.
+pub fn family_header(out: &mut String, name: &str, help: &str, kind: &str) {
+    out.push_str("# HELP ");
+    out.push_str(name);
+    out.push(' ');
+    // HELP text is a single line; escape backslash and newline per spec.
+    for c in help.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out.push('\n');
+    out.push_str("# TYPE ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(kind);
+    out.push('\n');
+}
+
+/// Appends one sample line: `name{label="value",...} value`. Label
+/// values get the spec's escaping (backslash, double quote, newline);
+/// non-finite values render as `0` (the registry only holds integers, but
+/// serving-side summaries pass computed f64s through here).
+pub fn sample(out: &mut String, name: &str, labels: &[(&str, &str)], value: f64) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(k);
+            out.push_str("=\"");
+            for c in v.chars() {
+                match c {
+                    '\\' => out.push_str("\\\\"),
+                    '"' => out.push_str("\\\""),
+                    '\n' => out.push_str("\\n"),
+                    c => out.push(c),
+                }
+            }
+            out.push('"');
+        }
+        out.push('}');
+    }
+    out.push(' ');
+    let value = if value.is_finite() { value } else { 0.0 };
+    if value == value.trunc() && value.abs() < 1e15 {
+        out.push_str(&format!("{}", value as i64));
+    } else {
+        out.push_str(&format!("{value}"));
+    }
+    out.push('\n');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_lines_match_exposition_syntax() {
+        let mut out = String::new();
+        family_header(&mut out, "ydf_test_prom_total", "a test\nfamily", "counter");
+        sample(&mut out, "ydf_test_prom_total", &[], 3.0);
+        sample(
+            &mut out,
+            "ydf_test_prom_total",
+            &[("engine", "a\"b\\c"), ("model", "m")],
+            1.5,
+        );
+        sample(&mut out, "ydf_test_prom_total", &[("engine", "nan")], f64::NAN);
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines[0], "# HELP ydf_test_prom_total a test\\nfamily");
+        assert_eq!(lines[1], "# TYPE ydf_test_prom_total counter");
+        assert_eq!(lines[2], "ydf_test_prom_total 3");
+        assert_eq!(
+            lines[3],
+            "ydf_test_prom_total{engine=\"a\\\"b\\\\c\",model=\"m\"} 1.5"
+        );
+        assert_eq!(lines[4], "ydf_test_prom_total{engine=\"nan\"} 0");
+    }
+
+    #[test]
+    fn global_render_includes_registered_series() {
+        let c = metrics().counter_with(
+            "ydf_test_prom_global_total",
+            "exposition test counter",
+            &[("case", "render")],
+        );
+        c.add(2);
+        let text = render_global();
+        assert!(text.contains("# TYPE ydf_test_prom_global_total counter"));
+        assert!(text.contains("ydf_test_prom_global_total{case=\"render\"}"));
+        // Every non-comment line is `name[{labels}] value`.
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            let (name_part, value_part) =
+                line.rsplit_once(' ').expect("sample has a value");
+            assert!(value_part.parse::<f64>().is_ok(), "bad value in: {line}");
+            let name = name_part.split('{').next().unwrap();
+            assert!(
+                name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+                "bad metric name in: {line}"
+            );
+        }
+    }
+}

@@ -1,0 +1,285 @@
+//! Chrome trace-event recording: timed spans and instant markers,
+//! serialized as the Trace Event Format JSON (`chrome://tracing`,
+//! Perfetto, `speedscope` all load it).
+//!
+//! Span sites are **near-zero-cost while tracing is disabled**: a
+//! [`begin`] is one relaxed atomic load returning an empty token, the
+//! matching [`end`] sees the empty token and returns before touching its
+//! argument closure — no allocation, no lock, no clock read. Enabled
+//! spans buffer in memory (bounded at [`MAX_EVENTS`]; overflow drops and
+//! counts) and are written once, by [`write_file`], when the traced
+//! command finishes — `ydf train --trace=FILE` /
+//! `ydf serve --trace=FILE`.
+//!
+//! Event vocabulary (see `docs/observability.md`):
+//!
+//! * `request` / `decode` / `wait` — the serving request lifecycle, per
+//!   connection worker (enqueue → flush → score → reply).
+//! * `flush` — one coalesced batcher flush, with `engine`, `rows`,
+//!   `blocks` and `us` args: the per-flush engine timing record the
+//!   adaptive-engine-routing roadmap item consumes.
+//! * `train_iteration` / `train_tree` / `prune` — learner progress.
+
+use crate::utils::json::Json;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Buffered-event cap: ~a few hundred MB of worst-case JSON, far above
+/// any realistic trace session. Beyond it events are dropped (and the
+/// drop count recorded in the written file) rather than growing without
+/// bound inside a long-lived server.
+pub const MAX_EVENTS: usize = 1 << 20;
+
+/// One span/instant argument value.
+pub enum ArgValue {
+    U64(u64),
+    F64(f64),
+    Str(String),
+}
+
+struct Event {
+    name: &'static str,
+    /// Trace-event phase: `b'X'` = complete span, `b'i'` = instant.
+    ph: u8,
+    /// µs since the trace epoch.
+    ts_us: f64,
+    dur_us: f64,
+    tid: u64,
+    args: Vec<(&'static str, ArgValue)>,
+}
+
+#[derive(Default)]
+struct Buffer {
+    events: Vec<Event>,
+    dropped: u64,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+fn buffer() -> &'static Mutex<Buffer> {
+    static BUF: OnceLock<Mutex<Buffer>> = OnceLock::new();
+    BUF.get_or_init(|| Mutex::new(Buffer::default()))
+}
+
+/// The common time origin every `ts` is relative to (Chrome only needs
+/// timestamps to be mutually consistent, not absolute).
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Stable small ids for trace `tid` fields (thread names are not
+/// portable and `ThreadId` has no stable numeric form).
+fn tid() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static TID: u64 = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    TID.with(|t| *t)
+}
+
+/// Whether spans are being recorded — one relaxed load.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Starts recording. Clears any previously buffered events so a new
+/// trace session starts clean.
+pub fn enable() {
+    epoch();
+    let mut buf = lock();
+    buf.events.clear();
+    buf.dropped = 0;
+    drop(buf);
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Stops recording. Buffered events stay until drained.
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+fn lock() -> std::sync::MutexGuard<'static, Buffer> {
+    match buffer().lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// A span start token. Empty when tracing was disabled at [`begin`] —
+/// the matching [`end`] is then a no-op.
+pub struct SpanStart(Option<Instant>);
+
+/// Opens a span. When tracing is disabled this is one relaxed atomic
+/// load and returns an empty token — no clock read, no allocation.
+#[inline]
+pub fn begin() -> SpanStart {
+    if ENABLED.load(Ordering::Relaxed) {
+        SpanStart(Some(Instant::now()))
+    } else {
+        SpanStart(None)
+    }
+}
+
+/// Closes a span opened by [`begin`]. `args` is only invoked when the
+/// span is live, so argument construction (string clones included) costs
+/// nothing while tracing is disabled.
+pub fn end<F>(start: SpanStart, name: &'static str, args: F)
+where
+    F: FnOnce() -> Vec<(&'static str, ArgValue)>,
+{
+    let Some(t0) = start.0 else { return };
+    let dur_us = t0.elapsed().as_secs_f64() * 1e6;
+    let ts_us = t0.saturating_duration_since(epoch()).as_secs_f64() * 1e6;
+    push(Event { name, ph: b'X', ts_us, dur_us, tid: tid(), args: args() });
+}
+
+/// Records an instant marker (a point event, no duration).
+pub fn instant<F>(name: &'static str, args: F)
+where
+    F: FnOnce() -> Vec<(&'static str, ArgValue)>,
+{
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    let ts_us = epoch().elapsed().as_secs_f64() * 1e6;
+    push(Event { name, ph: b'i', ts_us, dur_us: 0.0, tid: tid(), args: args() });
+}
+
+fn push(event: Event) {
+    let mut buf = lock();
+    if buf.events.len() >= MAX_EVENTS {
+        buf.dropped += 1;
+        return;
+    }
+    buf.events.push(event);
+}
+
+/// Drains every buffered event into a Chrome-trace JSON object:
+/// `{"traceEvents": […], "displayTimeUnit": "ms", "droppedEvents": N}`.
+/// Does not change the enabled state.
+pub fn take_json() -> Json {
+    let mut buf = lock();
+    let events = std::mem::take(&mut buf.events);
+    let dropped = std::mem::replace(&mut buf.dropped, 0);
+    drop(buf);
+    let trace_events = events
+        .into_iter()
+        .map(|e| {
+            let mut j = Json::obj();
+            j.set("name", Json::Str(e.name.to_string()))
+                .set("ph", Json::Str((e.ph as char).to_string()))
+                .set("ts", Json::Num(e.ts_us))
+                .set("pid", Json::Num(1.0))
+                .set("tid", Json::Num(e.tid as f64));
+            if e.ph == b'X' {
+                j.set("dur", Json::Num(e.dur_us));
+            } else {
+                // Instant scope: thread-local marker.
+                j.set("s", Json::Str("t".to_string()));
+            }
+            if !e.args.is_empty() {
+                let mut args = Json::obj();
+                for (k, v) in e.args {
+                    let jv = match v {
+                        ArgValue::U64(x) => Json::Num(x as f64),
+                        ArgValue::F64(x) => Json::Num(x),
+                        ArgValue::Str(s) => Json::Str(s),
+                    };
+                    args.set(k, jv);
+                }
+                j.set("args", args);
+            }
+            j
+        })
+        .collect();
+    let mut out = Json::obj();
+    out.set("traceEvents", Json::Arr(trace_events))
+        .set("displayTimeUnit", Json::Str("ms".to_string()))
+        .set("droppedEvents", Json::Num(dropped as f64));
+    out
+}
+
+/// Stops recording, drains the buffer and writes the Chrome-trace JSON
+/// to `path`. Returns the number of events written.
+pub fn write_file(path: &Path) -> Result<usize, String> {
+    disable();
+    let json = take_json();
+    let count = json
+        .get("traceEvents")
+        .and_then(|t| t.as_arr())
+        .map(|a| a.len())
+        .unwrap_or(0);
+    std::fs::write(path, json.to_string())
+        .map_err(|e| format!("cannot write trace file {}: {e}", path.display()))?;
+    Ok(count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        disable();
+        let t = begin();
+        end(t, "ydf_test_trace_disabled", || {
+            panic!("args closure must not run while tracing is disabled")
+        });
+        instant("ydf_test_trace_disabled", || {
+            panic!("args closure must not run while tracing is disabled")
+        });
+        let events = take_json();
+        let names: Vec<&str> = events
+            .req_arr("traceEvents")
+            .unwrap()
+            .iter()
+            .filter_map(|e| e.get("name").and_then(|n| n.as_str()))
+            .collect();
+        assert!(!names.contains(&"ydf_test_trace_disabled"));
+    }
+
+    #[test]
+    fn spans_round_trip_through_json() {
+        enable();
+        let t = begin();
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        end(t, "ydf_test_trace_span", || {
+            vec![
+                ("engine", ArgValue::Str("TestEngine".to_string())),
+                ("rows", ArgValue::U64(128)),
+                ("us", ArgValue::F64(12.5)),
+            ]
+        });
+        instant("ydf_test_trace_mark", || vec![("iter", ArgValue::U64(3))]);
+        let path = std::env::temp_dir()
+            .join(format!("ydf_trace_test_{}.json", std::process::id()));
+        write_file(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(&text).expect("trace file is valid JSON");
+        let _ = std::fs::remove_file(&path);
+        // Re-serialize → re-parse: the round trip is lossless.
+        assert_eq!(Json::parse(&parsed.to_string()).unwrap(), parsed);
+        let events = parsed.req_arr("traceEvents").unwrap();
+        // Other concurrently running tests may have contributed events
+        // while tracing was enabled; assert on ours only.
+        let span = events
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("ydf_test_trace_span"))
+            .expect("recorded span present");
+        assert_eq!(span.req_str("ph").unwrap(), "X");
+        assert!(span.req_f64("dur").unwrap() >= 1_000.0, "slept ≥ 1 ms");
+        assert!(span.req_f64("ts").unwrap() >= 0.0);
+        let args = span.req("args").unwrap();
+        assert_eq!(args.req_str("engine").unwrap(), "TestEngine");
+        assert_eq!(args.req_f64("rows").unwrap(), 128.0);
+        let mark = events
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("ydf_test_trace_mark"))
+            .expect("recorded instant present");
+        assert_eq!(mark.req_str("ph").unwrap(), "i");
+    }
+}

@@ -597,6 +597,84 @@ impl Registry {
         }
         j
     }
+
+    /// The `{"cmd": "metrics"}` payload: the full Prometheus text
+    /// exposition (format 0.0.4). Per-model serving families are rendered
+    /// here from each entry's [`ServingStats`] snapshot — labeled
+    /// `model="…"` — followed by the global `obs` registry (flush, pool,
+    /// inference and training families). Latency is a `summary`:
+    /// `quantile` series from the reservoir plus exact `_sum`/`_count`.
+    pub fn prometheus(&self) -> String {
+        use crate::obs::prom::{family_header, sample};
+        let mut out = String::new();
+        let entries = self.entries();
+        // (name, help, kind, per-snapshot accessor) for the counter-shaped
+        // serving families; one family header each, one sample per model.
+        type Get = fn(&crate::serving::stats::StatsSnapshot) -> f64;
+        let families: &[(&str, &str, &str, Get)] = &[
+            ("ydf_serving_requests_total", "Requests answered successfully.", "counter",
+             |s| s.requests as f64),
+            ("ydf_serving_rows_total", "Rows scored across answered requests.", "counter",
+             |s| s.rows as f64),
+            ("ydf_serving_errors_total", "Requests answered with an in-band error.", "counter",
+             |s| s.errors as f64),
+            ("ydf_serving_rejected_total", "Submissions rejected by backpressure.", "counter",
+             |s| s.rejected as f64),
+            ("ydf_serving_shed_deadline_total", "Accepted requests shed by the queue deadline.",
+             "counter", |s| s.shed_deadline as f64),
+            ("ydf_serving_timed_out_connections_total", "Connections reaped by the idle timeout.",
+             "counter", |s| s.timed_out_conns as f64),
+            ("ydf_serving_reloads_total", "Hot reloads (swaps) of the model.", "counter",
+             |s| s.reloads as f64),
+            ("ydf_serving_batches_total", "Coalesced batches scored.", "counter",
+             |s| s.batches as f64),
+            ("ydf_serving_batched_rows_total", "Rows scored through coalesced batches.", "counter",
+             |s| s.batched_rows as f64),
+            ("ydf_serving_queue_rows", "Rows currently queued for scoring.", "gauge",
+             |s| s.queue_rows as f64),
+            ("ydf_serving_queue_rows_peak", "High-water mark of queued rows.", "gauge",
+             |s| s.queue_rows_peak as f64),
+        ];
+        let snapshots: Vec<_> = entries
+            .iter()
+            .map(|e| (e.name.as_str(), e.stats.snapshot()))
+            .collect();
+        for (name, help, kind, get) in families {
+            family_header(&mut out, name, help, kind);
+            for (model, snap) in &snapshots {
+                sample(&mut out, name, &[("model", model)], get(snap));
+            }
+        }
+        family_header(&mut out, "ydf_serving_generation", "Model generation (hot-reload counter).", "gauge");
+        for e in &entries {
+            sample(&mut out, "ydf_serving_generation", &[("model", e.name.as_str())],
+                e.generation as f64);
+        }
+        family_header(
+            &mut out,
+            "ydf_serving_latency_us",
+            "Request wall latency in microseconds (quantiles from a bounded uniform reservoir; sum/count exact).",
+            "summary",
+        );
+        for e in &entries {
+            let (count, mean, _min, _max, mut xs) = e.stats.latency_summary();
+            xs.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+            let model = e.name.as_str();
+            for (q, p) in [("0.5", 0.50), ("0.95", 0.95), ("0.99", 0.99)] {
+                let v = if xs.is_empty() {
+                    0.0
+                } else {
+                    let rank = ((p * xs.len() as f64).ceil() as usize).clamp(1, xs.len());
+                    xs[rank - 1]
+                };
+                sample(&mut out, "ydf_serving_latency_us", &[("model", model), ("quantile", q)], v);
+            }
+            sample(&mut out, "ydf_serving_latency_us_sum", &[("model", model)], mean * count as f64);
+            sample(&mut out, "ydf_serving_latency_us_count", &[("model", model)], count as f64);
+        }
+        out.push_str(&crate::obs::prom::render_global());
+        out
+    }
 }
 
 #[cfg(test)]
@@ -628,6 +706,44 @@ mod tests {
             assert!(std::time::Instant::now() < deadline, "stuck in {:?}", e.state());
             std::thread::sleep(Duration::from_millis(2));
         }
+    }
+
+    #[test]
+    fn prometheus_exposition_covers_models_and_globals() {
+        let r = Registry::new(BatcherConfig {
+            max_delay: std::time::Duration::ZERO,
+            ..Default::default()
+        });
+        r.register("promtest", session(7, 3)).unwrap();
+        let e = r.get("promtest").unwrap();
+        let block = one_row(&e, 44.0);
+        e.batcher().submit(&block).unwrap().wait().unwrap();
+        e.stats().note_request(1, 123.0);
+        let text = r.prometheus();
+        assert!(text.contains("# TYPE ydf_serving_requests_total counter"), "{text}");
+        assert!(text.contains("ydf_serving_requests_total{model=\"promtest\"} 1"));
+        assert!(text.contains("ydf_serving_latency_us{model=\"promtest\",quantile=\"0.5\"} 123"));
+        assert!(text.contains("ydf_serving_latency_us_sum{model=\"promtest\"} 123"));
+        assert!(text.contains("ydf_serving_latency_us_count{model=\"promtest\"} 1"));
+        assert!(text.contains("# TYPE ydf_serving_latency_us summary"));
+        // The global obs registry rides along — the flush this test's own
+        // request just triggered guarantees the family exists.
+        assert!(text.contains("# TYPE ydf_flush_total counter"));
+        // Every non-comment line is `name[{labels}] value` with a parsable
+        // value and a legal metric name.
+        let mut samples = 0usize;
+        for line in text.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+            let (name_part, value) = line.rsplit_once(' ').expect("sample line");
+            assert!(value.parse::<f64>().is_ok(), "bad value: {line}");
+            let name = name_part.split('{').next().unwrap();
+            assert!(
+                !name.is_empty()
+                    && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+                "bad name: {line}"
+            );
+            samples += 1;
+        }
+        assert!(samples > 0);
     }
 
     #[test]

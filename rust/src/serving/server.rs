@@ -27,6 +27,9 @@
 //! {"cmd": "health"}    -> {"ok": true, "model": …, "models": […], "states": {…}, …}
 //! {"cmd": "spec"}      -> {"model": …, "features": […], "label": …, "classes": […]}
 //! {"cmd": "stats"}     -> aggregate counters + per-model breakdown under "models"
+//! {"cmd": "metrics"}   -> {"content_type": "text/plain; version=0.0.4", "metrics": "…"} —
+//!                         the full Prometheus text exposition (per-model serving
+//!                         counters + the global obs registry) as one JSON string
 //! {"cmd": "shutdown"}  -> {"ok": true}, then the server stops accepting
 //! ```
 //!
@@ -280,7 +283,12 @@ impl Connection {
             if let Some(f) = &self.faults {
                 f.on_request_line();
             }
+            let t_req = crate::obs::trace::begin();
             let (response, stop) = self.respond(line.trim_end(), &mut blocks);
+            crate::obs::trace::end(t_req, "request", || {
+                use crate::obs::trace::ArgValue;
+                vec![("ok", ArgValue::U64(u64::from(response.get("error").is_none())))]
+            });
             if let Err(e) = writeln!(writer, "{response}").and_then(|_| writer.flush()) {
                 if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) {
                     // Peer stopped reading (slowloris on the write side).
@@ -419,12 +427,19 @@ impl Connection {
             .entry(entry.generation())
             .or_insert_with(|| session.new_block());
         block.clear();
+        // Lifecycle spans (decode → wait): error paths drop the start
+        // token unrecorded, so a failed request traces only its outer
+        // "request" span.
+        let t_decode = crate::obs::trace::begin();
         for row in rows {
             if let Err(e) = session.decode_row(block, row) {
                 return (self.error(&entry, e), false);
             }
         }
         let n = block.rows();
+        crate::obs::trace::end(t_decode, "decode", || {
+            vec![("rows", crate::obs::trace::ArgValue::U64(n as u64))]
+        });
         let pending = match entry.batcher().submit(block) {
             Ok(p) => p,
             // Rejections (full queue, quota, admission budget) are
@@ -432,6 +447,7 @@ impl Connection {
             // batcher; every error response increments `errors`.
             Err(e) => return (self.error(&entry, e.to_string()), false),
         };
+        let t_wait = crate::obs::trace::begin();
         let flat = match pending.wait() {
             Ok(f) => f,
             Err(ScoreError::Shed { waited_ms, retry_after_ms }) => {
@@ -450,6 +466,9 @@ impl Connection {
             }
             Err(e) => return (self.error(&entry, e.to_string()), false),
         };
+        crate::obs::trace::end(t_wait, "wait", || {
+            vec![("rows", crate::obs::trace::ArgValue::U64(n as u64))]
+        });
         let dim = session.output_dim();
         let predictions = Json::Arr(
             flat.chunks(dim)
@@ -538,6 +557,18 @@ impl Connection {
                 (j, false)
             }
             "stats" => (self.registry.stats_json(), false),
+            "metrics" => {
+                // Prometheus exposition as one JSON string: the wire
+                // protocol is line-delimited JSON, so the multi-line text
+                // rides in a field; a scrape bridge unwraps "metrics".
+                let mut j = Json::obj();
+                j.set(
+                    "content_type",
+                    Json::Str("text/plain; version=0.0.4".to_string()),
+                )
+                .set("metrics", Json::Str(self.registry.prometheus()));
+                (j, false)
+            }
             "shutdown" => {
                 let mut j = Json::obj();
                 j.set("ok", Json::Bool(true));
@@ -547,8 +578,8 @@ impl Connection {
                 self.error(
                     entry,
                     format!(
-                        "unknown command '{other}' (known: health, spec, stats, shutdown, \
-                         load, swap, unload)"
+                        "unknown command '{other}' (known: health, spec, stats, metrics, \
+                         shutdown, load, swap, unload)"
                     ),
                 ),
                 false,

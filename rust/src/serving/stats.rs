@@ -460,6 +460,92 @@ mod tests {
     }
 
     #[test]
+    fn percentile_edge_cases_zero_and_one_sample() {
+        // 0 samples: the latency block is just {"count": 0} — no
+        // percentile keys to mislead a dashboard, and percentile() on an
+        // empty sample answers 0.0 rather than panicking.
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        let empty = ServingStats::new();
+        let lat0 = empty.to_json();
+        let lat0 = lat0.req("latency").unwrap();
+        assert_eq!(lat0.req_f64("count").unwrap(), 0.0);
+        assert!(lat0.get("p50_us").is_none());
+        assert!(lat0.get("mean_us").is_none());
+        // 1 sample: every percentile is that sample (nearest rank clamps
+        // to the only element), as are min/mean/max.
+        let one = ServingStats::new();
+        one.note_request(1, 250.0);
+        let j = one.to_json();
+        let lat = j.req("latency").unwrap();
+        for key in ["p50_us", "p95_us", "p99_us", "mean_us", "min_us", "max_us"] {
+            assert_eq!(lat.req_f64(key).unwrap(), 250.0, "{key}");
+        }
+    }
+
+    #[test]
+    fn reservoir_sample_bounded_and_moments_exact_past_cap() {
+        // Drive well past the cap and check both halves of the contract:
+        // the retained sample never exceeds LATENCY_RESERVOIR_CAP and
+        // every retained value came from the stream, while count/mean/
+        // min/max stay exact over the *full* stream.
+        let s = ServingStats::new();
+        let n = 2 * LATENCY_RESERVOIR_CAP + 123;
+        for i in 0..n {
+            s.note_request(1, i as f64);
+        }
+        let (count, mean, min, max, samples) = s.latency_summary();
+        assert_eq!(count, n as u64);
+        assert_eq!(min, 0.0);
+        assert_eq!(max, (n - 1) as f64);
+        let exact_mean = (n - 1) as f64 / 2.0;
+        assert!((mean - exact_mean).abs() < 1e-6, "mean {mean} vs {exact_mean}");
+        assert_eq!(samples.len(), LATENCY_RESERVOIR_CAP);
+        assert!(samples
+            .iter()
+            .all(|&x| x >= 0.0 && x < n as f64 && x.fract() == 0.0));
+        // Algorithm R actually replaced entries: a reservoir frozen at the
+        // first CAP values would top out at CAP-1.
+        assert!(
+            samples.iter().cloned().fold(0.0f64, f64::max)
+                >= LATENCY_RESERVOIR_CAP as f64,
+            "no sample past the cap made it into the reservoir"
+        );
+    }
+
+    #[test]
+    fn aggregate_json_multi_model_shape() {
+        let a = ServingStats::new();
+        let b = ServingStats::new();
+        let c = ServingStats::new();
+        a.note_request(1, 10.0);
+        b.note_request(2, 20.0);
+        // c stays empty: an idle model must still appear in the breakdown.
+        let j = aggregate_json(&[("alpha", &a), ("beta", &b), ("gamma", &c)]);
+        let models = j.req("models").unwrap();
+        let Json::Obj(map) = models else { panic!("models is an object") };
+        let names: Vec<&str> = map.keys().map(|k| k.as_str()).collect();
+        assert_eq!(names, ["alpha", "beta", "gamma"], "one entry per model");
+        for (name, entry) in map {
+            // Each entry is a full per-model export: counters + latency.
+            for key in ["requests", "rows", "errors", "batches", "queue_rows"] {
+                assert!(entry.get(key).is_some(), "{name} missing {key}");
+            }
+            assert!(entry.req("latency").unwrap().get("count").is_some());
+        }
+        assert_eq!(j.req_f64("requests").unwrap(), 2.0);
+        assert_eq!(j.req_f64("rows").unwrap(), 3.0);
+        assert_eq!(j.req("latency").unwrap().req_f64("count").unwrap(), 2.0);
+        // Single-model aggregation preserves that model's own export at
+        // the top level (the PR-3 wire shape).
+        let solo = aggregate_json(&[("alpha", &a)]);
+        assert_eq!(solo.req_f64("requests").unwrap(), a.to_json().req_f64("requests").unwrap());
+        assert_eq!(
+            solo.req("latency").unwrap().req_f64("p99_us").unwrap(),
+            a.to_json().req("latency").unwrap().req_f64("p99_us").unwrap()
+        );
+    }
+
+    #[test]
     fn reservoir_stays_bounded_with_exact_moments() {
         let s = ServingStats::new();
         let n = LATENCY_RESERVOIR_CAP + 500;

@@ -1,0 +1,98 @@
+//! Environment-variable parsing with warn-once diagnostics.
+//!
+//! `YDF_INFER_THREADS`, `YDF_TRAIN_THREADS` and `YDF_LOG` each used to
+//! carry (or would have duplicated) their own `static Once` +
+//! `eprintln!` for the "set but malformed" case. This module centralizes
+//! the pattern: parse helpers return `None` when the variable is unset
+//! or invalid — the caller applies its default — and an invalid value
+//! warns exactly once per variable through the leveled log facade.
+
+use std::collections::HashSet;
+use std::sync::{Mutex, OnceLock};
+
+fn warned() -> &'static Mutex<HashSet<String>> {
+    static WARNED: OnceLock<Mutex<HashSet<String>>> = OnceLock::new();
+    WARNED.get_or_init(|| Mutex::new(HashSet::new()))
+}
+
+/// Emits `message` at warn level, at most once per `key` for the process
+/// lifetime. Keyed per variable so one misconfigured knob cannot
+/// suppress diagnostics for another.
+pub fn warn_once(key: &str, message: &str) {
+    let mut set = match warned().lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    if !set.insert(key.to_string()) {
+        return;
+    }
+    drop(set);
+    crate::ydf_warn!("{message}");
+}
+
+/// The variable's value, trimmed. `None` when unset or blank.
+pub fn string(name: &str) -> Option<String> {
+    let raw = std::env::var(name).ok()?;
+    let trimmed = raw.trim();
+    if trimmed.is_empty() {
+        None
+    } else {
+        Some(trimmed.to_string())
+    }
+}
+
+/// Parses `name` as a positive integer (≥ 1). `None` when unset; a set
+/// but malformed value warns once and also returns `None`, so the
+/// caller's default applies either way.
+pub fn positive_usize(name: &str) -> Option<usize> {
+    let raw = string(name)?;
+    match raw.parse::<usize>() {
+        Ok(n) if n >= 1 => Some(n),
+        _ => {
+            warn_once(
+                name,
+                &format!("ignoring {name}='{raw}': expected a positive integer"),
+            );
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn positive_usize_parses_and_rejects() {
+        // Distinct variable names per case: the process environment and
+        // the warn-once set are both global.
+        std::env::set_var("YDF_TEST_ENV_OK", "4");
+        assert_eq!(positive_usize("YDF_TEST_ENV_OK"), Some(4));
+        std::env::set_var("YDF_TEST_ENV_PADDED", "  8  ");
+        assert_eq!(positive_usize("YDF_TEST_ENV_PADDED"), Some(8));
+        std::env::set_var("YDF_TEST_ENV_ZERO", "0");
+        assert_eq!(positive_usize("YDF_TEST_ENV_ZERO"), None);
+        std::env::set_var("YDF_TEST_ENV_JUNK", "many");
+        assert_eq!(positive_usize("YDF_TEST_ENV_JUNK"), None);
+        assert_eq!(positive_usize("YDF_TEST_ENV_UNSET_NEVER_SET"), None);
+    }
+
+    #[test]
+    fn string_trims_and_drops_blank() {
+        std::env::set_var("YDF_TEST_ENV_STR", "  debug ");
+        assert_eq!(string("YDF_TEST_ENV_STR").as_deref(), Some("debug"));
+        std::env::set_var("YDF_TEST_ENV_BLANK", "   ");
+        assert_eq!(string("YDF_TEST_ENV_BLANK"), None);
+    }
+
+    #[test]
+    fn warn_once_is_per_key() {
+        // No panic on repeats; keyed entries are independent.
+        warn_once("YDF_TEST_WARN_A", "warn A");
+        warn_once("YDF_TEST_WARN_A", "warn A again (suppressed)");
+        warn_once("YDF_TEST_WARN_B", "warn B");
+        let set = warned().lock().unwrap();
+        assert!(set.contains("YDF_TEST_WARN_A"));
+        assert!(set.contains("YDF_TEST_WARN_B"));
+    }
+}

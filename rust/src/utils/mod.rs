@@ -6,6 +6,7 @@
 //! dependencies with small, well-tested implementations.
 
 pub mod bench;
+pub mod env;
 pub mod histogram;
 pub mod json;
 pub mod pool;

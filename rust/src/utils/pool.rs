@@ -76,6 +76,16 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 
 impl WorkerPool {
     pub fn new(workers: usize) -> WorkerPool {
+        // Registered eagerly (not on first job) so pool metrics exist in
+        // the `{"cmd":"metrics"}` exposition as soon as a pool is built —
+        // a freshly started server has pools but may not have flushed a
+        // multi-span batch yet.
+        crate::obs::metrics()
+            .counter("ydf_pools_total", "Worker pools constructed.")
+            .inc();
+        crate::obs::metrics()
+            .counter("ydf_pool_workers_total", "Worker threads spawned across all pools.")
+            .add(workers as u64);
         let mut senders = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
@@ -132,6 +142,21 @@ impl WorkerPool {
         F: FnOnce() + Send + 'env,
     {
         let n_jobs = jobs.len();
+        // Called per tree node during feature-parallel training: the
+        // metric handle is resolved once per process, after which this is
+        // one relaxed fetch_add.
+        {
+            use std::sync::OnceLock;
+            static SCOPED_JOBS: OnceLock<crate::obs::Counter> = OnceLock::new();
+            SCOPED_JOBS
+                .get_or_init(|| {
+                    crate::obs::metrics().counter(
+                        "ydf_pool_scoped_jobs_total",
+                        "Jobs executed through WorkerPool::run_scoped (inline or on workers).",
+                    )
+                })
+                .add(n_jobs as u64);
+        }
         if n_jobs <= 1 || self.num_workers() <= 1 {
             for job in jobs {
                 job();

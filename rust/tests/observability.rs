@@ -1,0 +1,121 @@
+//! Observability integration: the `ydf` binary's training telemetry.
+//!
+//! Two acceptance criteria from the observability PR are pinned here
+//! against the real binary (not the library): `YDF_LOG=info` prints
+//! per-iteration loss lines to stderr and `YDF_LOG=off` prints nothing,
+//! and `--trace=FILE` writes Chrome trace-event JSON that round-trips
+//! through `utils/json.rs`.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+use ydf::dataset::csv::write_csv_string;
+use ydf::dataset::synthetic;
+use ydf::utils::json::Json;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_ydf")
+}
+
+/// Per-process temp path so parallel test binaries never collide.
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ydf_obs_{}_{name}", std::process::id()))
+}
+
+fn write_dataset(name: &str) -> PathBuf {
+    let ds = synthetic::adult_like(300, 42);
+    let path = tmp(name);
+    std::fs::write(&path, write_csv_string(&ds)).unwrap();
+    path
+}
+
+fn train(csv: &Path, model_out: &Path, extra: &[String], log_level: &str) -> Output {
+    Command::new(bin())
+        .arg("train")
+        .arg(format!("--dataset={}", csv.display()))
+        .arg("--label=income")
+        .arg("--learner=GRADIENT_BOOSTED_TREES")
+        .arg("--param:num_trees=5")
+        .arg(format!("--output={}", model_out.display()))
+        .args(extra)
+        .env("YDF_LOG", log_level)
+        .output()
+        .expect("spawn ydf binary")
+}
+
+#[test]
+fn train_log_levels_gate_stderr() {
+    let csv = write_dataset("levels.csv");
+    let model = tmp("levels_model.json");
+
+    let info = train(&csv, &model, &[], "info");
+    assert!(info.status.success(), "train failed: {}", String::from_utf8_lossy(&info.stderr));
+    let stderr = String::from_utf8_lossy(&info.stderr);
+    assert!(
+        stderr.contains("[ydf info]") && stderr.contains("train loss"),
+        "YDF_LOG=info must print per-iteration loss lines, got: {stderr:?}"
+    );
+    // One line per boosting iteration (5 trees → 5 `gbt iter` lines).
+    assert_eq!(
+        stderr.lines().filter(|l| l.contains("gbt iter")).count(),
+        5,
+        "expected one telemetry line per iteration: {stderr:?}"
+    );
+
+    let off = train(&csv, &model, &[], "off");
+    assert!(off.status.success(), "train failed: {}", String::from_utf8_lossy(&off.stderr));
+    assert!(
+        off.stderr.is_empty(),
+        "YDF_LOG=off must silence all telemetry, got: {:?}",
+        String::from_utf8_lossy(&off.stderr)
+    );
+
+    let _ = std::fs::remove_file(&csv);
+    let _ = std::fs::remove_file(&model);
+}
+
+#[test]
+fn train_trace_round_trips_through_json() {
+    let csv = write_dataset("trace.csv");
+    let model = tmp("trace_model.json");
+    let trace = tmp("train_trace.json");
+
+    let out = train(&csv, &model, &[format!("--trace={}", trace.display())], "off");
+    assert!(out.status.success(), "train failed: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("trace event(s)"), "expected trace confirmation: {stdout:?}");
+
+    let text = std::fs::read_to_string(&trace).expect("trace file written");
+    let parsed = Json::parse(&text).expect("trace file is valid JSON");
+    // Lossless round trip through our own JSON layer.
+    assert_eq!(Json::parse(&parsed.to_string()).unwrap(), parsed);
+
+    let events = parsed.req_arr("traceEvents").expect("traceEvents array");
+    assert!(!events.is_empty(), "a traced training run must record events");
+    let mut saw_train_tree = false;
+    let mut saw_iteration = false;
+    for e in events {
+        let ph = e.req_str("ph").unwrap();
+        assert!(ph == "X" || ph == "i", "unexpected phase {ph:?}");
+        assert!(e.req_f64("ts").unwrap() >= 0.0);
+        assert!(e.req_f64("tid").unwrap() >= 1.0);
+        if ph == "X" {
+            assert!(e.req_f64("dur").unwrap() >= 0.0);
+        }
+        match e.req_str("name").unwrap() {
+            "train_tree" => {
+                saw_train_tree = true;
+                let args = e.req("args").unwrap();
+                assert_eq!(args.req_str("learner").unwrap(), "gbt");
+                assert!(args.req_f64("nodes").unwrap() >= 1.0);
+            }
+            "train_iteration" => saw_iteration = true,
+            _ => {}
+        }
+    }
+    assert!(saw_train_tree, "per-tree spans missing from trace");
+    assert!(saw_iteration, "per-iteration instants missing from trace");
+
+    let _ = std::fs::remove_file(&csv);
+    let _ = std::fs::remove_file(&model);
+    let _ = std::fs::remove_file(&trace);
+}

@@ -8,8 +8,10 @@
 # malformed-input error replies on a surviving connection, a live hot
 # swap to an artifact-backed generation under concurrent traffic (zero
 # dropped requests, post-swap replies bit-identical to the replacement's
-# offline `ydf predict`), a load/unload round trip, and protocol
-# shutdown. Exits non-zero on any mismatch.
+# offline `ydf predict`), Prometheus metrics exposition ({"cmd":
+# "metrics"} — every sample line syntax-checked, all three metric groups
+# present), a load/unload round trip, and protocol shutdown. Exits
+# non-zero on any mismatch.
 set -euo pipefail
 
 BIN=${BIN:-./target/release/ydf}
@@ -211,6 +213,33 @@ check(per_model.get("rf", {}).get("errors", 1) == 0,
       "errors are attributed per model, not smeared")
 check(per_model.get("cgbt", {}).get("requests", 0) >= 1,
       "per-model stats reported for the artifact-backed model")
+
+# --- Observability: Prometheus exposition over the wire ---------------
+# By this point the server has answered requests (serving counters),
+# flushed coalesced batches (per-engine flush counters) and built its
+# scoring pool (--score-threads=2 → pool gauges), so all three metric
+# groups must appear, and every sample line must parse as Prometheus
+# text exposition.
+import re
+metrics = rpc(json.dumps({"cmd": "metrics"}))
+check(metrics.get("content_type", "").startswith("text/plain"),
+      "metrics reply declares the Prometheus text content type")
+body = metrics.get("metrics")
+check(isinstance(body, str) and body.strip() != "",
+      "metrics body is a non-empty string")
+sample_re = re.compile(
+    r'^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^{}]*\})? [-+]?[0-9]*\.?[0-9]+([eE][-+]?[0-9]+)?$')
+lines = [l for l in body.splitlines() if l and not l.startswith("#")]
+bad_lines = [l for l in lines if not sample_re.match(l)]
+check(not bad_lines,
+      f"every metrics sample parses as exposition syntax: {bad_lines[:3]}")
+check(len(lines) > 0, f"metrics exposition carries samples ({len(lines)})")
+check('ydf_serving_requests_total{model="gbt"}' in body,
+      "serving counters exposed per model")
+check('ydf_serving_latency_us{model="gbt",quantile="0.5"}' in body,
+      "latency summary exposed with quantile labels")
+check("ydf_flush_total" in body, "per-engine flush counters exposed")
+check("ydf_pool_workers_total" in body, "scoring-pool metrics exposed")
 
 # --- Control plane: hot swap to an artifact-backed generation ---------
 # The replacement path is model_gbt2.bin: the server's swap handler goes
