@@ -79,6 +79,56 @@ fn main() {
         .set("artifact_ms", ydf::utils::json::Json::Num(artifact_ms))
         .set("artifact_bytes", ydf::utils::json::Json::Num(artifact_bytes as f64));
     report.set("model_open", open);
+
+    // Measured routing (inference::router): the per-batch-size winner
+    // table the serving router pins at model load, next to the static
+    // engine order's time in the same bucket — the routed-vs-static
+    // record the router exists to improve on.
+    use ydf::inference::router;
+    use ydf::utils::json::Json;
+    let static_tag = router::static_variant(model.as_ref())
+        .map(|v| v.tag())
+        .unwrap_or_else(|| "none".to_string());
+    let mut router_json = Json::obj();
+    router_json.set("static", Json::Str(static_tag.clone()));
+    let mut buckets_json = Json::obj();
+    match router::measure_model(model.as_ref(), router::DEFAULT_SEED) {
+        Some(table) => {
+            println!("  router calibration (static order pins: {static_tag}):");
+            for b in &table.buckets {
+                let (winner, best_ns) = &b.ranking[0];
+                let static_ns = b
+                    .ranking
+                    .iter()
+                    .find(|(v, _)| v.tag() == static_tag)
+                    .map(|(_, ns)| *ns);
+                match static_ns {
+                    Some(s_ns) => println!(
+                        "    rows={:<4} routed {:<20} {best_ns:>10.1} ns/row   static {s_ns:>10.1} ns/row ({:+.1}%)",
+                        b.rows,
+                        winner.tag(),
+                        (best_ns / s_ns - 1.0) * 100.0
+                    ),
+                    None => println!(
+                        "    rows={:<4} routed {:<20} {best_ns:>10.1} ns/row",
+                        b.rows,
+                        winner.tag()
+                    ),
+                }
+                let mut bj = Json::obj();
+                bj.set("winner", Json::Str(winner.tag()))
+                    .set("ns_per_row", Json::Num(*best_ns));
+                if let Some(s_ns) = static_ns {
+                    bj.set("static_ns_per_row", Json::Num(s_ns));
+                }
+                buckets_json.set(&b.rows.to_string(), bj);
+            }
+        }
+        None => println!("  (router calibration skipped: no optimized engine compiles)"),
+    }
+    router_json.set("buckets", buckets_json);
+    report.set("router", router_json);
+
     match std::fs::write(&out_path, report.to_string_pretty()) {
         Ok(()) => eprintln!("wrote {out_path}"),
         Err(e) => eprintln!("cannot write {out_path}: {e}"),

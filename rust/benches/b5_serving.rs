@@ -29,6 +29,11 @@
 //!   per-model quota and shared admission budget admit; rejected
 //!   submissions spin-retry, so the numbers describe the accepted
 //!   goodput and its tail latency under sustained overload.
+//! * `routed_s8_c4` / `routed_s512_c4` — measured routing: the same
+//!   closed loops as `s8_c4` / `seq_s512_c4` through a
+//!   calibration-routed session (`Session::new_calibrated`), whose
+//!   batcher re-routes every flush to the per-batch-size winner engine
+//!   instead of the static order — the routed-vs-static serving rows.
 //!
 //! Run: cargo bench --bench b5_serving
 //!      cargo bench --bench b5_serving -- --requests=500 --out=path.json
@@ -65,6 +70,17 @@ fn train_session(seed: u64, trees: usize) -> Session {
     cfg.num_trees = trees;
     cfg.max_depth = 5;
     Session::new(GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap())
+}
+
+/// As [`train_session`], but with the in-memory micro-calibration pass:
+/// the session's router times every engine variant per batch-size
+/// bucket and each flush runs the measured winner for its row count.
+fn train_calibrated_session(seed: u64, trees: usize) -> Session {
+    let ds = synthetic::adult_like(4000, seed);
+    let mut cfg = GbtConfig::new("income");
+    cfg.num_trees = trees;
+    cfg.max_depth = 5;
+    Session::new_calibrated(GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap())
 }
 
 /// A quick-to-train replacement model for the reload combo: the swap
@@ -529,6 +545,51 @@ fn main() {
         results.push(r);
     }
 
+    // Family 6: measured routing — the s8_c4 and seq_s512_c4 loops
+    // through a calibrated session, so the routed rows sit next to
+    // their static-order baselines in the same report. The calibrated
+    // router re-routes each flush by its actual row count; routing only
+    // ever changes which bit-identical engine runs.
+    let routed = Arc::new(train_calibrated_session(20230806, 50));
+    println!(
+        "  (routed combos: calibration pins {} @8 rows, {} @512 rows)",
+        routed.engine_name_for_rows(8),
+        routed.engine_name_for_rows(512),
+    );
+    for (key, request_rows, per_client) in [
+        ("routed_s8_c4", 8usize, requests_per_client),
+        ("routed_s512_c4", 512usize, (requests_per_client / 8).max(10)),
+    ] {
+        let batcher = Arc::new(Batcher::new(
+            Arc::clone(&routed),
+            BatcherConfig {
+                max_delay: Duration::ZERO,
+                score_threads: 1,
+                max_queue_rows: 8 * 512,
+                ..Default::default()
+            },
+        ));
+        let lanes: Vec<(Arc<Batcher>, RowBlock)> = (0..4)
+            .map(|client| (Arc::clone(&batcher), request_block(&routed, request_rows, client)))
+            .collect();
+        let (wall, tail) = run_closed_loop(&lanes, per_client);
+        let snap = batcher.stats().snapshot();
+        let r = combo_result(
+            key.to_string(),
+            1,
+            1,
+            request_rows,
+            4,
+            per_client,
+            wall,
+            tail,
+            snap.batches,
+            snap.batched_rows,
+        );
+        report(&r);
+        results.push(r);
+    }
+
     let mut combos = Json::obj();
     for r in &results {
         let mut cj = Json::obj();
@@ -546,6 +607,7 @@ fn main() {
     }
     let mut j = Json::obj();
     j.set("engine", Json::Str(session.engine_name()))
+        .set("router", routed.router_json())
         .set("requests_per_client", Json::Num(requests_per_client as f64))
         .set("block_size", Json::Num(ydf::inference::BLOCK_SIZE as f64))
         .set("combos", combos);

@@ -45,6 +45,13 @@
 //! that no engine compiles. [`auto_engine_name`] reports which path
 //! `predict_flat` would take, so tools can surface the selection.
 //!
+//! The static order is only the fallback: [`router`] measures every
+//! compatible engine variant per batch-size bucket at model load and
+//! pins a per-(model, bucket) winner table — the serving `Session` and
+//! `Batcher` route each flush by its actual row count through that
+//! table ([`router::Router`]), caching the measurement next to the
+//! model as `<model>.router.json`.
+//!
 //! ## SIMD lane kernels
 //!
 //! The flat and QuickScorer engines each carry two block kernels: a
@@ -82,6 +89,7 @@ pub mod flat;
 pub mod naive;
 pub mod pjrt;
 pub mod quickscorer;
+pub mod router;
 
 use crate::dataset::{ColumnData, Dataset, Observation};
 use crate::model::forest::GbtLoss;
@@ -300,26 +308,17 @@ pub fn compile_engines(model: &dyn Model) -> Vec<Box<dyn InferenceEngine>> {
     out
 }
 
-/// The engine [`predict_flat`] rides on: QuickScorer when compatible,
-/// otherwise the flat engine, otherwise `None` (wrapper models —
-/// ensembles, calibrators — fall back to the model's own row loop). The
-/// single source of truth for the automatic selection order; the serving
-/// layer pins one session to the engine returned here.
+/// The engine [`predict_flat`] rides on, or `None` for wrapper models
+/// (ensembles, calibrators — those fall back to the model's own row
+/// loop). A thin wrapper over [`router::Router::uncalibrated`], which
+/// owns the static §3.7 preference order: compiled for artifact-backed
+/// models, else QuickScorer when compatible, else the flat engine.
+/// Callers that want the *measured* per-batch-size choice open a
+/// serving `Session` with a [`router::CalibrateMode`] instead — the
+/// router calibrates per (model, bucket) and this wrapper is its
+/// static fallback.
 pub fn fastest_engine(model: &dyn Model) -> Option<Box<dyn InferenceEngine>> {
-    // Artifact-backed models route to the compiled engine — the only one
-    // that understands the word layout. For in-memory RF/GBT the JSON-era
-    // order (QuickScorer → flat) is kept: the compiled engine's traversal
-    // mirrors the flat engine's, so auto-picking it would change nothing
-    // but the label, and `BENCH_inference.json` tracks both rows so the
-    // adaptive-routing item (ROADMAP) can make this a measured choice.
-    if model.as_any().downcast_ref::<compiled::CompiledModel>().is_some() {
-        return compiled::CompiledEngine::compile(model)
-            .map(|ce| Box::new(ce) as Box<dyn InferenceEngine>);
-    }
-    if let Some(qs) = quickscorer::QuickScorerEngine::compile(model) {
-        return Some(Box::new(qs));
-    }
-    flat::FlatEngine::compile(model).map(|fl| Box::new(fl) as Box<dyn InferenceEngine>)
+    router::Router::uncalibrated(model).map(router::Router::into_primary)
 }
 
 /// Batch prediction for any model through the fastest compatible engine:

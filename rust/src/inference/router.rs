@@ -1,0 +1,837 @@
+//! Measured engine routing: per-(model, batch-size) calibration replaces
+//! the static §3.7 preference order.
+//!
+//! The paper picks the fastest compatible engine with a fixed ranking
+//! (QuickScorer → flat → naive), but no single engine wins across model
+//! shape × batch size × hardware (see the database-perspective comparison
+//! in PAPERS.md). This module makes the choice a measurement: at model
+//! load, a micro-calibration pass times every compatible engine variant
+//! (QuickScorer / flat / compiled, each in its SIMD and scalar lane) on
+//! synthetic blocks shaped by the model's own dataspec, one timing per
+//! batch-size bucket ([`BUCKETS`] = 1, 8, 64, 512 rows). The ranked
+//! result is a [`CalibrationTable`]; for models loaded from disk it is
+//! cached as a small JSON file next to the model (`<model>.router.json`,
+//! versioned + checksummed like the compiled-forest artifact) so repeat
+//! opens skip the measurement.
+//!
+//! A [`Router`] pins one engine per bucket for a session's lifetime.
+//! `Session::predict_block_pooled` and the serving `Batcher` route each
+//! flush by its actual row count, so a 1-row interactive request and a
+//! 512-row coalesced flush can hit different engines on the same model.
+//! Every candidate engine is bit-identical on the core model types
+//! (pinned by `rust/tests/properties.rs`), so routing only ever changes
+//! speed, never output.
+//!
+//! Failure policy: a corrupt, truncated or stale table falls back to the
+//! static order silently (one `ydf_warn!`), never errors — the table is
+//! a cache of measurements, not part of the model. Each routing decision
+//! increments `ydf_router_decisions_total{engine=,bucket=}`.
+
+use crate::dataset::{ColumnData, Dataset, FeatureSemantic, MISSING_CAT};
+use crate::model::Model;
+use crate::obs::Counter;
+use crate::utils::json::Json;
+use crate::utils::rng::Rng;
+use crate::ydf_warn;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use super::{compiled, flat, quickscorer, InferenceEngine, BLOCK_SIZE};
+
+/// Batch-size buckets the router calibrates and routes over: a single
+/// interactive row, a small coalesced flush, one inference block, and a
+/// bulk flush.
+pub const BUCKETS: [usize; 4] = [1, 8, 64, 512];
+
+/// Bucket label values used in `ydf_router_decisions_total{bucket=…}`.
+const BUCKET_LABELS: [&str; 4] = ["1", "8", "64", "512"];
+
+/// Calibration-table file format version; bump on incompatible changes
+/// (an old on-disk table then falls back to the static order).
+pub const TABLE_VERSION: u64 = 1;
+
+/// Seed for the synthetic calibration rows. Fixed so the measurement
+/// procedure is deterministic given a seed: the same model and seed see
+/// the same calibration inputs (timings still vary with the machine —
+/// that variance is exactly what the cached table freezes).
+pub const DEFAULT_SEED: u64 = 0x9DF0_0C41;
+
+/// Maps a flush's actual row count to its bucket index. Boundaries are
+/// the geometric midpoints between adjacent bucket sizes, so each flush
+/// is attributed to the bucket whose calibration point it is closest to
+/// (in ratio terms).
+pub fn bucket_index(rows: usize) -> usize {
+    if rows <= 2 {
+        0
+    } else if rows <= 22 {
+        1
+    } else if rows <= 181 {
+        2
+    } else {
+        3
+    }
+}
+
+/// The engine families the router can choose between. Naive is excluded
+/// on purpose: it exists as the correctness reference and never wins.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum EngineKind {
+    QuickScorer,
+    Flat,
+    Compiled,
+}
+
+/// One routable engine configuration: a family plus which block kernel
+/// (`set_simd`) it runs. The calibration table stores rankings of these.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Variant {
+    pub kind: EngineKind,
+    pub simd: bool,
+}
+
+impl Variant {
+    /// Stable serialization tag, e.g. `quickscorer[simd]` or
+    /// `compiled[scalar]` — intentionally not the engine's display
+    /// `name()`, which varies with the model kind.
+    pub fn tag(&self) -> String {
+        let kind = match self.kind {
+            EngineKind::QuickScorer => "quickscorer",
+            EngineKind::Flat => "flat",
+            EngineKind::Compiled => "compiled",
+        };
+        let lane = if self.simd { "simd" } else { "scalar" };
+        format!("{kind}[{lane}]")
+    }
+
+    pub fn parse(tag: &str) -> Option<Variant> {
+        let (kind, lane) = tag.strip_suffix(']')?.split_once('[')?;
+        let kind = match kind {
+            "quickscorer" => EngineKind::QuickScorer,
+            "flat" => EngineKind::Flat,
+            "compiled" => EngineKind::Compiled,
+            _ => return None,
+        };
+        let simd = match lane {
+            "simd" => true,
+            "scalar" => false,
+            _ => return None,
+        };
+        Some(Variant { kind, simd })
+    }
+}
+
+/// Compiles one variant for `model`, or `None` when the model's
+/// structure rules the family out (QuickScorer's 64-leaf/condition
+/// envelope, non-forest models, …).
+fn build_variant(model: &dyn Model, v: Variant) -> Option<Box<dyn InferenceEngine>> {
+    match v.kind {
+        EngineKind::QuickScorer => quickscorer::QuickScorerEngine::compile(model).map(|mut e| {
+            e.set_simd(v.simd);
+            Box::new(e) as Box<dyn InferenceEngine>
+        }),
+        EngineKind::Flat => flat::FlatEngine::compile(model).map(|mut e| {
+            e.set_simd(v.simd);
+            Box::new(e) as Box<dyn InferenceEngine>
+        }),
+        EngineKind::Compiled => compiled::CompiledEngine::compile(model).map(|mut e| {
+            e.set_simd(v.simd);
+            Box::new(e) as Box<dyn InferenceEngine>
+        }),
+    }
+}
+
+/// Every variant worth timing for `model`. Artifact-backed
+/// [`compiled::CompiledModel`]s only resolve to the compiled engine
+/// (there is no tree structure to feed the others); in-memory forests
+/// get every family that compiles, each in both lanes. Empty for
+/// wrapper models (ensembles, calibrators) — those fall back to the
+/// model's own row loop, same as before the router existed.
+pub fn candidate_variants(model: &dyn Model) -> Vec<Variant> {
+    let kinds: Vec<EngineKind> =
+        if model.as_any().downcast_ref::<compiled::CompiledModel>().is_some() {
+            vec![EngineKind::Compiled]
+        } else {
+            let mut kinds = Vec::new();
+            if quickscorer::QuickScorerEngine::compile(model).is_some() {
+                kinds.push(EngineKind::QuickScorer);
+            }
+            if flat::FlatEngine::compile(model).is_some() {
+                kinds.push(EngineKind::Flat);
+            }
+            if compiled::CompiledEngine::compile(model).is_some() {
+                kinds.push(EngineKind::Compiled);
+            }
+            kinds
+        };
+    kinds
+        .into_iter()
+        .flat_map(|kind| [Variant { kind, simd: true }, Variant { kind, simd: false }])
+        .collect()
+}
+
+/// The static §3.7 preference order — what `fastest_engine` pinned
+/// before calibration existed and what every fallback path routes to:
+/// compiled for artifact-backed models, else QuickScorer when it
+/// compiles, else the flat engine. The lane is the build default (the
+/// `simd` cargo feature). `None` for wrapper models.
+pub fn static_variant(model: &dyn Model) -> Option<Variant> {
+    let simd = cfg!(feature = "simd");
+    if model.as_any().downcast_ref::<compiled::CompiledModel>().is_some() {
+        return Some(Variant { kind: EngineKind::Compiled, simd });
+    }
+    if quickscorer::QuickScorerEngine::compile(model).is_some() {
+        Some(Variant { kind: EngineKind::QuickScorer, simd })
+    } else if flat::FlatEngine::compile(model).is_some() {
+        Some(Variant { kind: EngineKind::Flat, simd })
+    } else {
+        None
+    }
+}
+
+/// Synthesizes `rows` calibration rows shaped by the model's dataspec:
+/// numericals uniform over each column's observed [min, max], categorials
+/// uniform over the vocabulary, plus a sprinkle of missing values so the
+/// timed traversal exercises the missing-value branches real traffic
+/// hits. Every spec column (label included — engines never read it, but
+/// `Dataset::new` wants equal lengths) is filled.
+pub fn synthetic_rows(model: &dyn Model, rows: usize, seed: u64) -> Dataset {
+    let spec = model.spec();
+    let mut rng = Rng::seed_from_u64(seed);
+    let missing = |rng: &mut Rng| rng.bernoulli(1.0 / 16.0);
+    let columns: Vec<ColumnData> = spec
+        .columns
+        .iter()
+        .map(|col| match col.semantic {
+            FeatureSemantic::Numerical => {
+                let (lo, hi) = if col.num_stats.max > col.num_stats.min {
+                    (col.num_stats.min, col.num_stats.max)
+                } else {
+                    (0.0, 1.0)
+                };
+                ColumnData::Numerical(
+                    (0..rows)
+                        .map(|_| {
+                            if missing(&mut rng) {
+                                f32::NAN
+                            } else {
+                                rng.uniform_range(lo, hi) as f32
+                            }
+                        })
+                        .collect(),
+                )
+            }
+            FeatureSemantic::Categorical => {
+                let vocab = col.vocab_size();
+                ColumnData::Categorical(
+                    (0..rows)
+                        .map(|_| {
+                            if vocab == 0 || missing(&mut rng) {
+                                MISSING_CAT
+                            } else {
+                                rng.uniform_usize(vocab) as u32
+                            }
+                        })
+                        .collect(),
+                )
+            }
+            FeatureSemantic::Boolean => ColumnData::Boolean(
+                (0..rows)
+                    .map(|_| {
+                        if missing(&mut rng) {
+                            crate::dataset::MISSING_BOOL
+                        } else {
+                            rng.bernoulli(0.5) as u8
+                        }
+                    })
+                    .collect(),
+            ),
+            FeatureSemantic::CategoricalSet => {
+                let vocab = col.vocab_size();
+                let mut offsets = vec![0u32];
+                let mut values = Vec::new();
+                for _ in 0..rows {
+                    if vocab > 0 && !missing(&mut rng) {
+                        for _ in 0..rng.uniform_usize(3) {
+                            values.push(rng.uniform_usize(vocab) as u32);
+                        }
+                    }
+                    offsets.push(values.len() as u32);
+                }
+                ColumnData::CategoricalSet { offsets, values }
+            }
+        })
+        .collect();
+    Dataset::new(spec.clone(), columns).expect("synthetic calibration columns match the spec")
+}
+
+/// Best-of-passes ns/row for one engine on the first `rows` rows of the
+/// calibration dataset. Repetitions are scaled so every bucket measures
+/// a comparable number of rows; one warmup pass primes caches and lazy
+/// scratch before the clock starts.
+fn measure_ns_per_row(
+    engine: &dyn InferenceEngine,
+    ds: &Dataset,
+    rows: usize,
+    out: &mut [f64],
+) -> f64 {
+    let reps = (1024 / rows).clamp(2, 64);
+    engine.predict_batch(ds, 0..rows, out);
+    let mut best = f64::INFINITY;
+    for _ in 0..2 {
+        let start = Instant::now();
+        for _ in 0..reps {
+            engine.predict_batch(ds, 0..rows, out);
+        }
+        let ns = start.elapsed().as_nanos() as f64 / (reps * rows) as f64;
+        best = best.min(ns);
+    }
+    best
+}
+
+/// One bucket's measured ranking, fastest first.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BucketRanking {
+    /// The bucket's calibration row count (a [`BUCKETS`] entry).
+    pub rows: usize,
+    /// `(variant, ns_per_row)`, sorted ascending by time.
+    pub ranking: Vec<(Variant, f64)>,
+}
+
+/// The result of a micro-calibration pass: per-bucket engine rankings,
+/// plus the identity of the measurement (model fingerprint + data seed)
+/// so a cached table can be validated against the model it is opened
+/// next to.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CalibrationTable {
+    /// `fnv1a64` of the model file's bytes; `0` for in-memory
+    /// calibrations that are never persisted.
+    pub model_fingerprint: u64,
+    /// Seed the synthetic calibration rows were drawn with.
+    pub seed: u64,
+    /// One entry per [`BUCKETS`] bucket, in bucket order.
+    pub buckets: Vec<BucketRanking>,
+}
+
+/// Runs the micro-calibration pass for `model`: builds every candidate
+/// variant, times each per bucket on seeded synthetic rows, and returns
+/// the ranked table. `None` when no optimized engine compiles (wrapper
+/// models) — callers fall back to the static order / row loop. Costs a
+/// few milliseconds per model; runs once per load (or never, when a
+/// valid cached table exists).
+pub fn measure_model(model: &dyn Model, seed: u64) -> Option<CalibrationTable> {
+    let engines: Vec<(Variant, Box<dyn InferenceEngine>)> = candidate_variants(model)
+        .into_iter()
+        .filter_map(|v| build_variant(model, v).map(|e| (v, e)))
+        .collect();
+    if engines.is_empty() {
+        return None;
+    }
+    let max_rows = *BUCKETS.last().unwrap();
+    let ds = synthetic_rows(model, max_rows, seed);
+    let dim = engines[0].1.output_dim();
+    let mut out = vec![0.0f64; max_rows * dim];
+    let buckets = BUCKETS
+        .iter()
+        .map(|&rows| {
+            let mut ranking: Vec<(Variant, f64)> = engines
+                .iter()
+                .map(|(v, e)| (*v, measure_ns_per_row(e.as_ref(), &ds, rows, &mut out[..rows * dim])))
+                .collect();
+            ranking.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
+            BucketRanking { rows, ranking }
+        })
+        .collect();
+    Some(CalibrationTable { model_fingerprint: 0, seed, buckets })
+}
+
+/// Path of the cached calibration table for a model file:
+/// `<model>.router.json`, next to the model so the two travel together.
+pub fn table_path(model_path: &Path) -> PathBuf {
+    let mut os = model_path.as_os_str().to_os_string();
+    os.push(".router.json");
+    PathBuf::from(os)
+}
+
+impl CalibrationTable {
+    fn payload_json(&self) -> Json {
+        let mut buckets = Json::obj();
+        for b in &self.buckets {
+            let mut bj = Json::obj();
+            bj.set(
+                "ranking",
+                Json::Arr(b.ranking.iter().map(|(v, _)| Json::Str(v.tag())).collect()),
+            )
+            .set(
+                "ns_per_row",
+                Json::Arr(b.ranking.iter().map(|(_, ns)| Json::Num(*ns)).collect()),
+            );
+            buckets.set(&b.rows.to_string(), bj);
+        }
+        let mut payload = Json::obj();
+        payload
+            .set("version", Json::Num(TABLE_VERSION as f64))
+            .set("model_fingerprint", Json::Str(format!("{:016x}", self.model_fingerprint)))
+            .set("block_size", Json::Num(BLOCK_SIZE as f64))
+            .set("seed", Json::Str(format!("{:016x}", self.seed)))
+            .set("buckets", buckets);
+        payload
+    }
+
+    /// Serializes to the on-disk format: a one-line header carrying the
+    /// version and the `fnv1a64` checksum of every byte that follows,
+    /// then the payload JSON. Hashing the exact payload bytes (like the
+    /// compiled-forest artifact does) means any flipped or truncated
+    /// byte is detected, whitespace included.
+    pub fn to_file_string(&self) -> String {
+        let payload = self.payload_json().to_string_pretty();
+        let checksum = compiled::fnv1a64(payload.as_bytes());
+        format!(
+            "{{\"router_table_version\": {TABLE_VERSION}, \"checksum\": \"{checksum:016x}\"}}\n{payload}"
+        )
+    }
+
+    /// Parses the on-disk format, verifying header, checksum and payload
+    /// structure. Errors describe what failed; callers treat any error
+    /// as "no table".
+    pub fn from_file_string(text: &str) -> Result<CalibrationTable, String> {
+        let (header, payload_text) = text
+            .split_once('\n')
+            .ok_or_else(|| "missing header line".to_string())?;
+        let header = Json::parse(header).map_err(|e| format!("invalid header: {e}"))?;
+        let version = header.req_f64("router_table_version")? as u64;
+        if version != TABLE_VERSION {
+            return Err(format!("table version {version} != supported {TABLE_VERSION}"));
+        }
+        let want = u64::from_str_radix(header.req_str("checksum")?, 16)
+            .map_err(|e| format!("invalid checksum field: {e}"))?;
+        let got = compiled::fnv1a64(payload_text.as_bytes());
+        if got != want {
+            return Err(format!("checksum mismatch: stored {want:016x}, computed {got:016x}"));
+        }
+        let payload = Json::parse(payload_text).map_err(|e| format!("invalid payload: {e}"))?;
+        if payload.req_usize("block_size")? != BLOCK_SIZE {
+            return Err("table was calibrated for a different BLOCK_SIZE".to_string());
+        }
+        let model_fingerprint = u64::from_str_radix(payload.req_str("model_fingerprint")?, 16)
+            .map_err(|e| format!("invalid model_fingerprint: {e}"))?;
+        let seed = u64::from_str_radix(payload.req_str("seed")?, 16)
+            .map_err(|e| format!("invalid seed: {e}"))?;
+        let bj = payload.req("buckets")?;
+        let mut buckets = Vec::with_capacity(BUCKETS.len());
+        for rows in BUCKETS {
+            let b = bj.req(&rows.to_string())?;
+            let tags = b.req_arr("ranking")?;
+            let times = b.req_arr("ns_per_row")?;
+            if tags.is_empty() || tags.len() != times.len() {
+                return Err(format!("bucket {rows}: malformed ranking"));
+            }
+            let mut ranking = Vec::with_capacity(tags.len());
+            for (tag, ns) in tags.iter().zip(times) {
+                let tag = tag.as_str().ok_or_else(|| format!("bucket {rows}: non-string tag"))?;
+                let variant = Variant::parse(tag)
+                    .ok_or_else(|| format!("bucket {rows}: unknown engine variant '{tag}'"))?;
+                let ns = ns.as_f64().ok_or_else(|| format!("bucket {rows}: non-numeric time"))?;
+                ranking.push((variant, ns));
+            }
+            buckets.push(BucketRanking { rows, ranking });
+        }
+        Ok(CalibrationTable { model_fingerprint, seed, buckets })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        std::fs::write(path, self.to_file_string())
+            .map_err(|e| format!("cannot write {}: {e}", path.display()))
+    }
+
+    /// Loads and validates a cached table. Any failure — unreadable
+    /// file, corrupt bytes, version skew, or a fingerprint that no
+    /// longer matches the model file (the model was retrained or
+    /// recompiled under the table) — yields `None` with a warning;
+    /// never an error, never a panic.
+    pub fn load(path: &Path, expect_fingerprint: u64) -> Option<CalibrationTable> {
+        let text = std::fs::read_to_string(path).ok()?;
+        match CalibrationTable::from_file_string(&text) {
+            Ok(table) if table.model_fingerprint == expect_fingerprint => Some(table),
+            Ok(_) => {
+                ydf_warn!(
+                    "calibration table {} is stale (model changed); using the static engine order",
+                    path.display()
+                );
+                None
+            }
+            Err(e) => {
+                ydf_warn!(
+                    "ignoring corrupt calibration table {}: {e}; using the static engine order",
+                    path.display()
+                );
+                None
+            }
+        }
+    }
+}
+
+/// How a session resolves its router when opening a model file.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum CalibrateMode {
+    /// Ignore calibration entirely: pin the static §3.7 order.
+    Off,
+    /// Use a valid cached table; measure-and-cache when none exists.
+    /// A *corrupt or stale* table falls back to the static order without
+    /// re-measuring (re-calibrating behind a bad file would mask it).
+    Load,
+    /// Always re-measure and rewrite the cached table.
+    Force,
+}
+
+impl CalibrateMode {
+    pub fn parse(s: &str) -> Option<CalibrateMode> {
+        match s {
+            "off" => Some(CalibrateMode::Off),
+            "load" => Some(CalibrateMode::Load),
+            "force" => Some(CalibrateMode::Force),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CalibrateMode::Off => "off",
+            CalibrateMode::Load => "load",
+            CalibrateMode::Force => "force",
+        }
+    }
+}
+
+/// One bucket's pinned route.
+struct BucketRoute {
+    /// Index into [`Router::engines`].
+    engine: usize,
+    variant: Variant,
+    /// The engine's display `name()`, for `health` / flush labels.
+    name: String,
+    /// `ydf_router_decisions_total{engine=<tag>, bucket=<rows>}`.
+    decisions: Counter,
+}
+
+/// The ranked routing table a `Session` pins: one compiled engine per
+/// batch-size bucket (deduplicated — a variant winning several buckets
+/// is compiled once). Built either from the static order (every bucket
+/// routes to the same engine) or from a [`CalibrationTable`].
+pub struct Router {
+    engines: Vec<Box<dyn InferenceEngine>>,
+    buckets: Vec<BucketRoute>,
+    calibrated: bool,
+}
+
+impl Router {
+    /// The pre-router behavior: the static §3.7 engine pinned for every
+    /// bucket. `None` for wrapper models (callers use the model's own
+    /// row loop).
+    pub fn uncalibrated(model: &dyn Model) -> Option<Router> {
+        let v = static_variant(model)?;
+        Some(Router::from_variants(model, [v; 4], false))
+    }
+
+    /// Routes per the measured table: each bucket pins the fastest
+    /// ranked variant that still compiles for this model (a stale-ish
+    /// table may name a variant a retrained model no longer supports);
+    /// buckets with no buildable ranked variant fall back to the static
+    /// choice. `None` for wrapper models.
+    pub fn calibrated(model: &dyn Model, table: &CalibrationTable) -> Option<Router> {
+        let fallback = static_variant(model)?;
+        let mut per_bucket = [fallback; 4];
+        for (i, slot) in per_bucket.iter_mut().enumerate() {
+            if let Some(v) = table.buckets.get(i).and_then(|b| {
+                b.ranking.iter().map(|(v, _)| *v).find(|&v| build_variant(model, v).is_some())
+            }) {
+                *slot = v;
+            }
+        }
+        Some(Router::from_variants(model, per_bucket, true))
+    }
+
+    /// Measures and routes in one step without touching the filesystem
+    /// (benchmarks, tests, `Session::new_calibrated`). Falls back to the
+    /// static order when nothing compiles to measure.
+    pub fn calibrated_in_memory(model: &dyn Model, seed: u64) -> Option<Router> {
+        match measure_model(model, seed) {
+            Some(table) => Router::calibrated(model, &table),
+            None => Router::uncalibrated(model),
+        }
+    }
+
+    fn from_variants(model: &dyn Model, per_bucket: [Variant; 4], calibrated: bool) -> Router {
+        let metrics = crate::obs::metrics();
+        let mut engines: Vec<(Variant, Box<dyn InferenceEngine>)> = Vec::new();
+        let buckets = per_bucket
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| {
+                let engine = match engines.iter().position(|(ev, _)| *ev == v) {
+                    Some(idx) => idx,
+                    None => {
+                        let built = build_variant(model, v)
+                            .expect("router variants are checked buildable before pinning");
+                        engines.push((v, built));
+                        engines.len() - 1
+                    }
+                };
+                let name = engines[engine].1.name();
+                let tag = v.tag();
+                let decisions = metrics.counter_with(
+                    "ydf_router_decisions_total",
+                    "Per-flush engine-routing decisions by the calibrated router.",
+                    &[("engine", tag.as_str()), ("bucket", BUCKET_LABELS[i])],
+                );
+                BucketRoute { engine, variant: v, name, decisions }
+            })
+            .collect();
+        Router {
+            engines: engines.into_iter().map(|(_, e)| e).collect(),
+            buckets,
+            calibrated,
+        }
+    }
+
+    /// The engine a `rows`-row flush routes to, recording the decision
+    /// in `ydf_router_decisions_total`. This is the hot-path entry: one
+    /// bucket lookup plus one relaxed counter increment.
+    pub fn route(&self, rows: usize) -> &dyn InferenceEngine {
+        let b = &self.buckets[bucket_index(rows)];
+        b.decisions.inc();
+        self.engines[b.engine].as_ref()
+    }
+
+    /// The engine `route(rows)` would pick, without recording a
+    /// decision (tests, benchmarks, introspection).
+    pub fn engine_for_rows(&self, rows: usize) -> &dyn InferenceEngine {
+        self.engines[self.buckets[bucket_index(rows)].engine].as_ref()
+    }
+
+    pub fn engine_name_for_rows(&self, rows: usize) -> &str {
+        &self.buckets[bucket_index(rows)].name
+    }
+
+    pub fn variant_for_rows(&self, rows: usize) -> Variant {
+        self.buckets[bucket_index(rows)].variant
+    }
+
+    /// The name reported as *the* session engine: the route for one
+    /// [`BLOCK_SIZE`] inference block, the workhorse flush size.
+    pub fn primary_name(&self) -> &str {
+        self.engine_name_for_rows(BLOCK_SIZE)
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.engines[0].output_dim()
+    }
+
+    /// Whether the routes came from a measurement (vs the static order).
+    pub fn calibrated(&self) -> bool {
+        self.calibrated
+    }
+
+    /// Route summary for `health` and benches:
+    /// `{"calibrated": …, "buckets": {"1": "flat[simd]", …}}`.
+    pub fn to_json(&self) -> Json {
+        let mut buckets = Json::obj();
+        for (rows, route) in BUCKETS.iter().zip(&self.buckets) {
+            buckets.set(&rows.to_string(), Json::Str(route.variant.tag()));
+        }
+        let mut j = Json::obj();
+        j.set("calibrated", Json::Bool(self.calibrated)).set("buckets", buckets);
+        j
+    }
+
+    /// Consumes the router, returning the primary (bucket-`BLOCK_SIZE`)
+    /// engine — the thin-wrapper path `fastest_engine` uses.
+    pub fn into_primary(mut self) -> Box<dyn InferenceEngine> {
+        let idx = self.buckets[bucket_index(BLOCK_SIZE)].engine;
+        self.engines.swap_remove(idx)
+    }
+}
+
+/// Resolves the router for a model loaded from `path` under `mode`;
+/// this is the `Session::open_with` policy in one place:
+///
+/// * `Off` — static order, any cached table ignored.
+/// * `Load` — a valid cached table routes; a present-but-invalid one
+///   (corrupt / stale) falls back to the static order; a missing one is
+///   measured now and cached.
+/// * `Force` — always re-measure and rewrite the cache.
+///
+/// Never errors: every failure path degrades to the static order (or
+/// the row loop for engine-less models).
+pub fn for_model_file(model: &dyn Model, path: &Path, mode: CalibrateMode) -> Option<Router> {
+    if mode == CalibrateMode::Off {
+        return Router::uncalibrated(model);
+    }
+    let fingerprint = std::fs::read(path).map(|b| compiled::fnv1a64(&b)).unwrap_or(0);
+    let cache = table_path(path);
+    if mode == CalibrateMode::Load && cache.exists() {
+        return match CalibrationTable::load(&cache, fingerprint) {
+            Some(table) => Router::calibrated(model, &table),
+            None => Router::uncalibrated(model),
+        };
+    }
+    match measure_model(model, DEFAULT_SEED) {
+        Some(mut table) => {
+            table.model_fingerprint = fingerprint;
+            if let Err(e) = table.save(&cache) {
+                ydf_warn!("cannot cache calibration table: {e}");
+            }
+            Router::calibrated(model, &table)
+        }
+        None => Router::uncalibrated(model),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::learner::gbt::GbtConfig;
+    use crate::learner::{GradientBoostedTreesLearner, Learner};
+
+    fn small_gbt() -> Box<dyn Model> {
+        let data = crate::dataset::synthetic::adult_like(300, 11);
+        let mut config = GbtConfig::new("income");
+        config.num_trees = 3;
+        config.max_depth = 4;
+        GradientBoostedTreesLearner::new(config).train(&data).unwrap()
+    }
+
+    #[test]
+    fn bucket_index_boundaries() {
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 0);
+        assert_eq!(bucket_index(3), 1);
+        assert_eq!(bucket_index(8), 1);
+        assert_eq!(bucket_index(22), 1);
+        assert_eq!(bucket_index(23), 2);
+        assert_eq!(bucket_index(64), 2);
+        assert_eq!(bucket_index(181), 2);
+        assert_eq!(bucket_index(182), 3);
+        assert_eq!(bucket_index(512), 3);
+        assert_eq!(bucket_index(100_000), 3);
+    }
+
+    #[test]
+    fn variant_tags_round_trip() {
+        for kind in [EngineKind::QuickScorer, EngineKind::Flat, EngineKind::Compiled] {
+            for simd in [true, false] {
+                let v = Variant { kind, simd };
+                assert_eq!(Variant::parse(&v.tag()), Some(v), "{}", v.tag());
+            }
+        }
+        assert_eq!(Variant::parse("naive[simd]"), None);
+        assert_eq!(Variant::parse("flat[wide]"), None);
+        assert_eq!(Variant::parse("flat"), None);
+    }
+
+    #[test]
+    fn static_router_matches_compile_engines_head() {
+        let model = small_gbt();
+        let router = Router::uncalibrated(model.as_ref()).expect("GBT compiles an engine");
+        let head = super::super::compile_engines(model.as_ref())
+            .into_iter()
+            .next()
+            .unwrap();
+        assert_eq!(router.primary_name(), head.name());
+        assert!(!router.calibrated());
+        // Every bucket routes to the same engine in the static order.
+        for rows in BUCKETS {
+            assert_eq!(router.engine_name_for_rows(rows), router.primary_name());
+        }
+    }
+
+    #[test]
+    fn table_file_round_trip_and_tamper_detection() {
+        let table = CalibrationTable {
+            model_fingerprint: 0xDEAD_BEEF_0BAD_F00D,
+            seed: 42,
+            buckets: BUCKETS
+                .iter()
+                .map(|&rows| BucketRanking {
+                    rows,
+                    ranking: vec![
+                        (Variant { kind: EngineKind::Flat, simd: true }, 12.5),
+                        (Variant { kind: EngineKind::QuickScorer, simd: false }, 31.25),
+                    ],
+                })
+                .collect(),
+        };
+        let text = table.to_file_string();
+        let back = CalibrationTable::from_file_string(&text).unwrap();
+        assert_eq!(back, table);
+
+        // Any flipped byte in the payload is caught by the checksum; a
+        // flipped header is caught by its own parse/validation.
+        let bytes = text.as_bytes();
+        for pos in (0..bytes.len()).step_by(11) {
+            let mut bad = bytes.to_vec();
+            bad[pos] ^= 0x10;
+            if let Ok(s) = String::from_utf8(bad) {
+                assert!(
+                    CalibrationTable::from_file_string(&s).is_err(),
+                    "flip at byte {pos} must be rejected"
+                );
+            }
+        }
+        // Truncations are caught too.
+        for cut in (0..text.len()).step_by(17) {
+            assert!(CalibrationTable::from_file_string(&text[..cut]).is_err());
+        }
+        // Version skew falls back.
+        let skewed = text.replacen(
+            &format!("\"router_table_version\": {TABLE_VERSION}"),
+            &format!("\"router_table_version\": {}", TABLE_VERSION + 1),
+            1,
+        );
+        assert!(CalibrationTable::from_file_string(&skewed).is_err());
+    }
+
+    #[test]
+    fn measured_router_routes_every_bucket_and_reports_json() {
+        let model = small_gbt();
+        let table = measure_model(model.as_ref(), DEFAULT_SEED).expect("engines compile");
+        assert_eq!(table.buckets.len(), BUCKETS.len());
+        for b in &table.buckets {
+            assert!(!b.ranking.is_empty());
+            // Ranked ascending by measured time.
+            for pair in b.ranking.windows(2) {
+                assert!(pair[0].1 <= pair[1].1);
+            }
+        }
+        let router = Router::calibrated(model.as_ref(), &table).unwrap();
+        assert!(router.calibrated());
+        for rows in [1, 7, 64, 2000] {
+            // Routing must resolve and the engine must score.
+            let ds = synthetic_rows(model.as_ref(), 4, 1);
+            let engine = router.engine_for_rows(rows);
+            let mut out = vec![0.0; 4 * engine.output_dim()];
+            engine.predict_batch(&ds, 0..4, &mut out);
+        }
+        let j = router.to_json();
+        assert_eq!(j.get("calibrated"), Some(&Json::Bool(true)));
+        for rows in BUCKETS {
+            let tag = j.req("buckets").unwrap().req_str(&rows.to_string()).unwrap().to_string();
+            assert!(Variant::parse(&tag).is_some(), "{tag}");
+        }
+        // Decisions feed the global metrics registry.
+        router.route(1);
+        router.route(512);
+        let prom = crate::obs::prom::render_global();
+        assert!(prom.contains("ydf_router_decisions_total"), "{prom}");
+    }
+
+    #[test]
+    fn synthetic_rows_are_deterministic_given_a_seed() {
+        let model = small_gbt();
+        let a = synthetic_rows(model.as_ref(), 64, 7);
+        let b = synthetic_rows(model.as_ref(), 64, 7);
+        let c = synthetic_rows(model.as_ref(), 64, 8);
+        let row_key = |ds: &Dataset| format!("{:?}", ds.row(63));
+        assert_eq!(row_key(&a), row_key(&b));
+        assert_ne!(row_key(&a), row_key(&c));
+    }
+}

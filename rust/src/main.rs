@@ -48,6 +48,7 @@ COMMANDS
                    [--max-queue-rows=4096] [--score-threads=0]
                    [--conn-timeout=60] [--queue-deadline-ms=1000]
                    [--quota-rows=0] [--admission-rows=0] [--trace=FILE]
+                   [--calibrate=off|load|force]
                    (--model repeats to serve several models from one
                     port; the first is the default route. NAME defaults
                     to the file stem. --score-threads: workers a large
@@ -59,7 +60,12 @@ COMMANDS
                     per-model pending-row cap; --admission-rows: shared
                     pending-row budget across all models; 0 = off.
                     Models hot-reload while serving via the load/swap/
-                    unload admin commands, docs/serving.md. --trace:
+                    unload admin commands, docs/serving.md.
+                    --calibrate: engine routing per batch size —
+                    "load" (default) uses/creates the cached
+                    calibration table next to each model file, "force"
+                    re-measures, "off" pins the static engine order.
+                    --trace:
                     record request/flush spans, written as Chrome
                     trace-event JSON when the server stops; the metrics
                     wire command exposes Prometheus text exposition,
@@ -315,6 +321,18 @@ fn main() {
                 quota_rows: parse_usize("quota-rows", 0),
                 admission_rows: parse_usize("admission-rows", 0),
             };
+            // --calibrate=off|load|force (default load): off pins the
+            // static engine order; load uses the cached per-batch-size
+            // calibration table next to each model (measuring and
+            // caching on a miss); force re-measures and rewrites it.
+            let calibrate = flags.get("calibrate").map_or(
+                ydf::inference::router::CalibrateMode::Load,
+                |v| {
+                    ok_or_die(ydf::inference::router::CalibrateMode::parse(v).ok_or_else(
+                        || format!("--calibrate must be off, load or force, got '{v}'"),
+                    ))
+                },
+            );
             let registry = ydf::serving::Registry::new(batcher);
             for m in model_flags {
                 // `name=path`, where a name is a plain identifier. Two
@@ -339,13 +357,15 @@ fn main() {
                         m,
                     ),
                 };
-                let session = ok_or_die(ydf::serving::Session::open(Path::new(path)));
+                let session =
+                    ok_or_die(ydf::serving::Session::open_with(Path::new(path), calibrate));
                 println!(
-                    "model '{}': {} ({} -> {} outputs)",
+                    "model '{}': {} ({} -> {} outputs, calibration {})",
                     name,
                     path,
                     session.model().model_type(),
-                    session.output_dim()
+                    session.output_dim(),
+                    if session.router_calibrated() { "measured" } else { "static" }
                 );
                 ok_or_die(registry.register(&name, session));
             }
@@ -357,6 +377,9 @@ fn main() {
                 // before an idle or stalled connection is closed.
                 conn_timeout: (conn_timeout_s > 0)
                     .then(|| std::time::Duration::from_secs(conn_timeout_s as u64)),
+                // Hot reloads (load/swap) open sessions under the same
+                // calibration policy as the boot-time --model flags.
+                calibrate,
                 ..Default::default()
             };
             println!("protocol: newline-delimited JSON (docs/serving.md)");

@@ -608,42 +608,52 @@ fn scorer_loop(
         }
     }
     let _fail_open = FailOpen { shared: Arc::clone(&shared), admission: admission.clone() };
-    // Per-flush observability: counters labeled by engine name, resolved
-    // once per scorer thread (a metric update below is one relaxed
-    // fetch_add), plus a trace span per flush. This is the per-flush
-    // engine timing record — engine, rows, blocks, µs — the
-    // adaptive-engine-routing ROADMAP item consumes.
-    let engine = session.engine_name();
-    let obs = {
-        let m = crate::obs::metrics();
-        let labels: &[(&str, &str)] = &[("engine", engine.as_str())];
-        (
-            m.counter_with("ydf_flush_total", "Batcher flushes scored, by engine.", labels),
-            m.counter_with(
-                "ydf_flush_rows_total",
-                "Rows scored by batcher flushes, by engine.",
-                labels,
-            ),
-            m.counter_with(
-                "ydf_flush_blocks_total",
-                "Inference blocks scored by batcher flushes, by engine.",
-                labels,
-            ),
-            m.counter_with(
-                "ydf_flush_micros_total",
-                "Wall-clock microseconds spent scoring batcher flushes, by engine.",
-                labels,
-            ),
-        )
-    };
+    // Per-flush observability: counters labeled by the engine each flush
+    // routes to. The session's router pins one engine per batch-size
+    // bucket for its lifetime, so the counter handles are resolved once
+    // per bucket up front (a metric update below stays one relaxed
+    // fetch_add) and each flush picks its bucket's set by actual row
+    // count — the per-flush engine timing record the router's calibration
+    // tables are validated against in production.
+    let flush_obs: Vec<(String, [crate::obs::Counter; 4])> = crate::inference::router::BUCKETS
+        .iter()
+        .map(|&rows| {
+            let engine = session.engine_name_for_rows(rows);
+            let m = crate::obs::metrics();
+            let labels: &[(&str, &str)] = &[("engine", engine.as_str())];
+            let counters = [
+                m.counter_with("ydf_flush_total", "Batcher flushes scored, by engine.", labels),
+                m.counter_with(
+                    "ydf_flush_rows_total",
+                    "Rows scored by batcher flushes, by engine.",
+                    labels,
+                ),
+                m.counter_with(
+                    "ydf_flush_blocks_total",
+                    "Inference blocks scored by batcher flushes, by engine.",
+                    labels,
+                ),
+                m.counter_with(
+                    "ydf_flush_micros_total",
+                    "Wall-clock microseconds spent scoring batcher flushes, by engine.",
+                    labels,
+                ),
+            ];
+            (engine, counters)
+        })
+        .collect();
     // Double buffer: while one block scores, submissions fill the other.
     // `spare` is moved into the queue at flush and recovered (cleared)
     // after scattering, so steady-state flushing allocates nothing.
     let mut spare = session.new_block();
     // Recent flush wall time (EWMA, ms): the basis of the shed replies'
-    // retry_after_ms hint. Seeded pessimistically low; converges within a
-    // few flushes.
-    let mut ewma_flush_ms = 1.0f64;
+    // retry_after_ms hint. `None` until the first flush completes — a
+    // fabricated seed (the old `1.0`) made pre-first-flush sheds tell
+    // clients to retry in ~2 ms even when real flushes take 100+ ms,
+    // inviting a stampede exactly when the server is saturated. Until a
+    // flush has been observed, the hint falls back to the configured
+    // max_delay (the floor of any flush's end-to-end latency).
+    let mut ewma_flush_ms: Option<f64> = None;
     let mut state = shared.state.lock().expect("serving queue poisoned");
     loop {
         // Wait for work or a flush condition. Spurious wakeups just
@@ -698,7 +708,13 @@ fn scorer_loop(
         if queue_deadline > Duration::ZERO {
             let now = Instant::now();
             if waiters.iter().any(|w| now.duration_since(w.enqueued) > queue_deadline) {
-                let retry_after_ms = (ewma_flush_ms * 2.0).clamp(1.0, 10_000.0).ceil() as u64;
+                let retry_after_ms = match ewma_flush_ms {
+                    Some(w) => (w * 2.0).clamp(1.0, 10_000.0).ceil() as u64,
+                    // No flush observed yet: report the batching delay —
+                    // honest (a retry cannot be answered sooner than one
+                    // flush cycle) and stampede-free.
+                    None => (max_delay.as_millis() as u64).clamp(1, 10_000),
+                };
                 let mut kept_block = session.new_block();
                 let mut kept = Vec::with_capacity(waiters.len());
                 let mut at = 0usize;
@@ -761,11 +777,14 @@ fn scorer_loop(
             }
             let flush_us = t_flush.elapsed().as_secs_f64() * 1e6;
             let blocks = flushed_rows.div_ceil(crate::inference::BLOCK_SIZE);
-            let (flushes_c, rows_c, blocks_c, micros_c) = &obs;
-            flushes_c.inc();
-            rows_c.add(flushed_rows as u64);
-            blocks_c.add(blocks as u64);
-            micros_c.add(flush_us as u64);
+            // Attribute the flush to the engine its row count routed to
+            // (the same bucket predict_block_pooled just used).
+            let bucket = crate::inference::router::bucket_index(flushed_rows);
+            let (engine, counters) = &flush_obs[bucket];
+            counters[0].inc();
+            counters[1].add(flushed_rows as u64);
+            counters[2].add(blocks as u64);
+            counters[3].add(flush_us as u64);
             crate::obs::trace::end(t_span, "flush", || {
                 use crate::obs::trace::ArgValue;
                 vec![
@@ -776,7 +795,12 @@ fn scorer_loop(
                 ]
             });
             let wall_ms = (flush_us / 1e3).max(0.01);
-            ewma_flush_ms = 0.7 * ewma_flush_ms + 0.3 * wall_ms;
+            ewma_flush_ms = Some(match ewma_flush_ms {
+                // The first observation sets the level exactly; after
+                // that the usual 0.7/0.3 smoothing tracks drift.
+                None => wall_ms,
+                Some(prev) => 0.7 * prev + 0.3 * wall_ms,
+            });
         }
         // Restore the double buffer: when the shed pass swapped in a
         // fresh block, the original (larger) allocation is the one worth
@@ -1044,6 +1068,38 @@ mod tests {
         assert_eq!(b.stats().snapshot().shed_deadline, 1);
         // Shedding is not shutdown: the batcher keeps serving.
         assert!(b.submit(&one_row(&s, 32.0)).unwrap().wait().is_ok());
+    }
+
+    #[test]
+    fn shed_before_first_flush_hints_max_delay_not_a_fabricated_seed() {
+        let s = session();
+        // Flush threshold unreachable and a long batching delay: the one
+        // submitted row waits out max_delay, and when its flush finally
+        // starts it is already past the queue deadline — shed before any
+        // flush has ever completed.
+        let max_delay = Duration::from_millis(150);
+        let b = Batcher::new(
+            Arc::clone(&s),
+            BatcherConfig {
+                max_delay,
+                flush_rows: 1024,
+                queue_deadline: Duration::from_millis(10),
+                ..Default::default()
+            },
+        );
+        match b.submit(&one_row(&s, 30.0)).unwrap().wait().unwrap_err() {
+            ScoreError::Shed { waited_ms, retry_after_ms } => {
+                assert!(waited_ms >= 100, "waited {waited_ms} ms");
+                // The old 1.0 ms EWMA seed produced a ~2 ms hint here; a
+                // pre-first-flush shed must report the configured
+                // batching delay instead.
+                assert!(
+                    retry_after_ms >= max_delay.as_millis() as u64,
+                    "retry_after_ms = {retry_after_ms}"
+                );
+            }
+            other => panic!("expected Shed, got {other:?}"),
+        }
     }
 
     #[test]

@@ -624,6 +624,9 @@ impl Registry {
              "counter", |s| s.shed_deadline as f64),
             ("ydf_serving_timed_out_connections_total", "Connections reaped by the idle timeout.",
              "counter", |s| s.timed_out_conns as f64),
+            ("ydf_serving_overlong_lines_total",
+             "Connections closed for a request line over max_line_bytes.", "counter",
+             |s| s.overlong_lines as f64),
             ("ydf_serving_reloads_total", "Hot reloads (swaps) of the model.", "counter",
              |s| s.reloads as f64),
             ("ydf_serving_batches_total", "Coalesced batches scored.", "counter",

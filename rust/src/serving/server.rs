@@ -53,16 +53,21 @@
 //! response on the same line; the connection survives. Connections that
 //! stay silent (or write nothing readable) longer than
 //! [`ServerConfig::conn_timeout`] are reaped with one final in-band
-//! error. See `docs/serving.md` ("Server loop", "Control plane &
-//! failure modes") for the full contract.
+//! error, and a request line longer than
+//! [`ServerConfig::max_line_bytes`] is answered with one in-band error
+//! and the connection closed — the peer is mid-line, so there is no
+//! next line boundary to resynchronize on. See `docs/serving.md`
+//! ("Server loop", "Control plane & failure modes") for the full
+//! contract.
 
 use super::batcher::ScoreError;
 use super::registry::{ModelEntry, Registry};
 use super::session::{RowBlock, Session};
+use crate::inference::router::CalibrateMode;
 use crate::utils::json::Json;
 use crate::utils::pool::WorkerPool;
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -82,6 +87,18 @@ pub struct ServerConfig {
     /// long: the peer gets one in-band timeout error, the connection
     /// closes, and `timed_out_conns` increments.
     pub conn_timeout: Option<Duration>,
+    /// Hard cap on one request line's length in bytes. A peer that
+    /// streams more than this without a newline gets one in-band error
+    /// and its connection closed (`overlong_lines` increments) instead
+    /// of growing the line buffer — and the worker's memory — without
+    /// bound. The 16 MiB default clears any sane batch by orders of
+    /// magnitude.
+    pub max_line_bytes: usize,
+    /// Engine-calibration policy applied when the control plane opens a
+    /// model file (`load`/`swap`): the [`CalibrateMode`] forwarded to
+    /// [`Session::open_with`]. Mirrors the server CLI's
+    /// `--calibrate=off|load|force` flag.
+    pub calibrate: CalibrateMode,
     /// Fault plan consulted once per received request line (the
     /// connection-stall fault point). Test-only plumbing.
     #[cfg(any(test, feature = "fault-injection"))]
@@ -94,6 +111,8 @@ impl Default for ServerConfig {
             addr: "127.0.0.1:8123".to_string(),
             workers: 4,
             conn_timeout: Some(Duration::from_secs(60)),
+            max_line_bytes: 16 << 20,
+            calibrate: CalibrateMode::Load,
             #[cfg(any(test, feature = "fault-injection"))]
             faults: None,
         }
@@ -200,6 +219,8 @@ pub fn serve_shared(registry: Arc<Registry>, config: &ServerConfig) -> Result<()
             registry: Arc::clone(&registry),
             shutdown: Arc::clone(&shutdown),
             wake_addr: local,
+            max_line_bytes: config.max_line_bytes.max(1),
+            calibrate: config.calibrate,
             #[cfg(any(test, feature = "fault-injection"))]
             faults: config.faults.clone(),
         };
@@ -238,6 +259,8 @@ struct Connection {
     registry: Arc<Registry>,
     shutdown: Arc<AtomicBool>,
     wake_addr: std::net::SocketAddr,
+    max_line_bytes: usize,
+    calibrate: CalibrateMode,
     #[cfg(any(test, feature = "fault-injection"))]
     faults: Option<Arc<super::faults::FaultPlan>>,
 }
@@ -252,10 +275,18 @@ impl Connection {
         // Per-model decode scratch, lazily created: connections that only
         // ever talk to one model allocate one block.
         let mut blocks: HashMap<u64, RowBlock> = HashMap::new();
-        let mut line = String::new();
+        let mut buf: Vec<u8> = Vec::new();
+        let cap = self.max_line_bytes as u64;
         loop {
-            line.clear();
-            match reader.read_line(&mut line) {
+            buf.clear();
+            // Bounded line read: at most `cap + 1` bytes of one line are
+            // ever buffered. An unbounded `read_line` grows the buffer
+            // as fast as a hostile peer can stream newline-free bytes —
+            // a per-connection OOM. The +1 distinguishes "exactly cap
+            // bytes, then the newline" (fine) from "cap exceeded"
+            // (overlong). The `Take` is per-iteration, so the budget
+            // resets for every line.
+            match reader.by_ref().take(cap + 1).read_until(b'\n', &mut buf) {
                 Ok(0) => return, // EOF: peer closed cleanly
                 Ok(_) => {}
                 Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
@@ -276,6 +307,31 @@ impl Connection {
                 }
                 Err(_) => return, // peer went away
             }
+            if buf.len() as u64 > cap && !buf.ends_with(b"\n") {
+                // cap + 1 bytes arrived without a newline: this line can
+                // never fit. Answer in-band and close — the peer is
+                // mid-line, so there is no boundary to resynchronize on.
+                self.note_overlong_line();
+                let resp = self.error_default(format!(
+                    "request line exceeds max_line_bytes ({} bytes); closing connection",
+                    self.max_line_bytes
+                ));
+                let _ = writeln!(writer, "{resp}").and_then(|_| writer.flush());
+                return;
+            }
+            let line = match std::str::from_utf8(&buf) {
+                Ok(s) => s,
+                Err(e) => {
+                    // The newline boundary is intact, so unlike the
+                    // overlong case the connection survives.
+                    let resp =
+                        self.error_default(format!("request line is not valid UTF-8: {e}"));
+                    if writeln!(writer, "{resp}").and_then(|_| writer.flush()).is_err() {
+                        return;
+                    }
+                    continue;
+                }
+            };
             if line.trim().is_empty() {
                 continue;
             }
@@ -311,6 +367,12 @@ impl Connection {
     /// (the aggregate view sums it either way).
     fn note_conn_timeout(&self) {
         self.registry.default_entry().stats().note_conn_timeout();
+    }
+
+    /// Overlong request lines are likewise charged to the default model:
+    /// the line never parsed, so no model was addressed.
+    fn note_overlong_line(&self) {
+        self.registry.default_entry().stats().note_overlong_line();
     }
 
     /// One request line → (response line, stop-serving flag).
@@ -502,7 +564,8 @@ impl Connection {
                 };
                 match self.registry.begin_load(name, cmd == "swap") {
                     Err(e) => Err(e),
-                    Ok(ticket) => match Session::open(std::path::Path::new(path)) {
+                    Ok(ticket) => match Session::open_with(std::path::Path::new(path), self.calibrate)
+                    {
                         Ok(session) => self.registry.complete_load(ticket, session),
                         Err(e) => {
                             self.registry.fail_load(ticket);
@@ -544,6 +607,7 @@ impl Connection {
                     .set("states", self.registry.states_json())
                     .set("transitions", self.registry.transitions_json())
                     .set("engine", Json::Str(entry.session().engine_name()))
+                    .set("router", entry.session().router_json())
                     .set(
                         "model_type",
                         Json::Str(entry.session().model().model_type().to_string()),
@@ -632,6 +696,8 @@ mod tests {
             registry: Arc::clone(&registry),
             shutdown: Arc::new(AtomicBool::new(false)),
             wake_addr: "127.0.0.1:1".parse().unwrap(),
+            max_line_bytes: 16 << 20,
+            calibrate: CalibrateMode::Off,
             faults: None,
         };
         (conn, registry)

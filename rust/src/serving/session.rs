@@ -1,5 +1,6 @@
-//! Serving session: a loaded model pinned to its auto-selected inference
-//! engine, plus dataspec-driven request decoding.
+//! Serving session: a loaded model pinned to its engine routing table
+//! (one engine per batch-size bucket, measured or static — see
+//! [`crate::inference::router`]), plus dataspec-driven request decoding.
 //!
 //! Incoming requests name features by column name; the session maps names
 //! to dataspec columns once at construction and materializes rows
@@ -10,6 +11,7 @@
 //! (categorical-set rows aside, which own their token lists).
 
 use crate::dataset::{ColumnData, DataSpec, Dataset, FeatureSemantic, MISSING_BOOL, MISSING_CAT};
+use crate::inference::router::{CalibrateMode, Router};
 use crate::inference::{InferenceEngine, BLOCK_SIZE};
 use crate::model::Model;
 use crate::utils::json::Json;
@@ -75,14 +77,14 @@ impl RowBlock {
     }
 }
 
-/// A loaded model pinned to its fastest compatible engine, ready to
-/// decode and score requests. Shared across connection handlers and the
+/// A loaded model pinned to its engine routing table, ready to decode
+/// and score requests. Shared across connection handlers and the
 /// batcher behind an `Arc`.
 pub struct Session {
     model: Box<dyn Model>,
-    /// Fastest compatible engine; `None` for wrapper models, which fall
-    /// back to the model's own row loop.
-    engine: Option<Box<dyn InferenceEngine>>,
+    /// Per-batch-size-bucket engine routes; `None` for wrapper models,
+    /// which fall back to the model's own row loop.
+    router: Option<Router>,
     col_by_name: HashMap<String, usize>,
     dim: usize,
     /// Empty columnar prototype cloned by [`Session::new_block`].
@@ -90,11 +92,30 @@ pub struct Session {
 }
 
 impl Session {
-    /// Pins `model` to the fastest engine its structure compiles to
-    /// (QuickScorer → flat SoA → the model's own row loop), the same
-    /// selection `predict_flat` makes for offline batches.
+    /// Pins `model` to the static engine order (compiled for artifacts,
+    /// else QuickScorer → flat SoA → the model's own row loop) — the
+    /// same selection `predict_flat` makes for offline batches. No
+    /// calibration pass runs; use [`Session::new_calibrated`] or
+    /// [`Session::open_with`] for measured per-bucket routing.
     pub fn new(model: Box<dyn Model>) -> Session {
-        let engine = crate::inference::fastest_engine(model.as_ref());
+        let router = Router::uncalibrated(model.as_ref());
+        Session::assemble(model, router)
+    }
+
+    /// As [`Session::new`], but running the router's micro-calibration
+    /// pass in memory so every batch-size bucket pins its measured
+    /// winner. No table file is read or written — file-backed callers
+    /// use [`Session::open_with`], which caches the measurement next to
+    /// the model.
+    pub fn new_calibrated(model: Box<dyn Model>) -> Session {
+        let router = Router::calibrated_in_memory(
+            model.as_ref(),
+            crate::inference::router::DEFAULT_SEED,
+        );
+        Session::assemble(model, router)
+    }
+
+    fn assemble(model: Box<dyn Model>, router: Option<Router>) -> Session {
         let spec = model.spec();
         let col_by_name: HashMap<String, usize> = spec
             .columns
@@ -103,16 +124,30 @@ impl Session {
             .map(|(i, c)| (c.name.clone(), i))
             .collect();
         let prototype = empty_like(spec);
-        let dim = engine
+        let dim = router
             .as_ref()
-            .map(|e| e.output_dim())
+            .map(|r| r.output_dim())
             .unwrap_or_else(|| model.num_classes().max(1));
-        Session { model, engine, col_by_name, dim, prototype }
+        Session { model, router, col_by_name, dim, prototype }
     }
 
-    /// Loads a model file and opens a session on it.
+    /// Loads a model file and opens a session on it with
+    /// [`CalibrateMode::Load`] semantics: a valid cached calibration
+    /// table next to the model routes; a missing one is measured and
+    /// cached; a corrupt or stale one falls back to the static order.
     pub fn open(path: &Path) -> Result<Session, String> {
-        Ok(Session::new(crate::model::io::load_model(path)?))
+        Session::open_with(path, CalibrateMode::Load)
+    }
+
+    /// Loads a model file and opens a session with an explicit router
+    /// calibration mode (`ydf serve --calibrate=off|load|force`). See
+    /// [`crate::inference::router::for_model_file`] for the exact
+    /// policy; no mode can fail the open — every router failure path
+    /// degrades to the static engine order.
+    pub fn open_with(path: &Path, mode: CalibrateMode) -> Result<Session, String> {
+        let model = crate::model::io::load_model(path)?;
+        let router = crate::inference::router::for_model_file(model.as_ref(), path, mode);
+        Ok(Session::assemble(model, router))
     }
 
     /// Values per prediction (class count, or 1 for regression).
@@ -129,12 +164,43 @@ impl Session {
         self.model.as_ref()
     }
 
-    /// Name of the engine scoring this session's requests.
+    /// Name of the engine scoring this session's workhorse flushes (one
+    /// [`BLOCK_SIZE`] block) — what `health` and startup banners report
+    /// as *the* session engine. Other flush sizes may route elsewhere;
+    /// see [`Session::engine_name_for_rows`].
     pub fn engine_name(&self) -> String {
-        self.engine
+        self.router
             .as_ref()
-            .map(|e| e.name())
+            .map(|r| r.primary_name().to_string())
             .unwrap_or_else(|| "model row loop (no engine compiled)".to_string())
+    }
+
+    /// Name of the engine a `rows`-row flush routes to; the batcher
+    /// labels its per-flush telemetry with this.
+    pub fn engine_name_for_rows(&self, rows: usize) -> String {
+        self.router
+            .as_ref()
+            .map(|r| r.engine_name_for_rows(rows).to_string())
+            .unwrap_or_else(|| "model row loop (no engine compiled)".to_string())
+    }
+
+    /// Whether the session's routes were measured by a calibration pass
+    /// (vs the static fallback order).
+    pub fn router_calibrated(&self) -> bool {
+        self.router.as_ref().map(|r| r.calibrated()).unwrap_or(false)
+    }
+
+    /// Router summary for `health`: per-bucket engine tags plus whether
+    /// the table was measured or static.
+    pub fn router_json(&self) -> Json {
+        match &self.router {
+            Some(r) => r.to_json(),
+            None => {
+                let mut j = Json::obj();
+                j.set("calibrated", Json::Bool(false)).set("buckets", Json::obj());
+                j
+            }
+        }
     }
 
     /// Fresh columnar decode scratch matching the model's dataspec.
@@ -236,11 +302,11 @@ impl Session {
             .collect()
     }
 
-    /// Scores every row of the block through the pinned engine (or the
-    /// model row loop for wrapper models) into a fresh row-major buffer of
-    /// `rows * output_dim()` values. Single-threaded: the whole block is
-    /// one `predict_batch` call. The batcher's flush path is
-    /// [`Session::predict_block_pooled`], which this delegates to.
+    /// Scores every row of the block through the engine its row count
+    /// routes to (or the model row loop for wrapper models) into a fresh
+    /// row-major buffer of `rows * output_dim()` values. Single-threaded:
+    /// the whole block is one `predict_batch` call. The batcher's flush
+    /// path is [`Session::predict_block_pooled`], which this delegates to.
     pub fn predict_block(&self, block: &mut RowBlock) -> Vec<f64> {
         self.predict_block_pooled(block, None)
     }
@@ -266,8 +332,13 @@ impl Session {
             return out;
         }
         let ds = block.dataset();
-        match &self.engine {
-            Some(e) => {
+        match &self.router {
+            Some(router) => {
+                // The routing decision: the flush's actual row count
+                // picks the bucket, the bucket picks the engine (and
+                // feeds ydf_router_decisions_total). All candidate
+                // engines are bit-identical, so this only changes speed.
+                let e: &dyn InferenceEngine = router.route(n);
                 let spans = match pool {
                     Some(p) if p.num_workers() > 1 && n > BLOCK_SIZE => {
                         crate::inference::block_spans(n, p.num_workers())
@@ -276,7 +347,7 @@ impl Session {
                 };
                 if spans.len() > 1 {
                     let pool = pool.expect("spans are only computed when a pool is present");
-                    let engine = e.as_ref();
+                    let engine = e;
                     let mut jobs = Vec::with_capacity(spans.len());
                     let mut rest: &mut [f64] = &mut out;
                     for span in spans {
@@ -589,5 +660,45 @@ mod tests {
             name.contains("QuickScorer") || name.contains("OptPred"),
             "expected an optimized engine, got {name}"
         );
+        // Static routing: every bucket reports the same engine, and the
+        // health summary says so.
+        assert!(!s.router_calibrated());
+        for rows in crate::inference::router::BUCKETS {
+            assert_eq!(s.engine_name_for_rows(rows), name);
+        }
+    }
+
+    #[test]
+    fn calibrated_session_bit_identical_to_static_across_buckets() {
+        let train = || {
+            let ds = synthetic::adult_like(300, 2024);
+            let mut cfg = GbtConfig::new("income");
+            cfg.num_trees = 5;
+            cfg.max_depth = 4;
+            GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap()
+        };
+        // Training is deterministic, so the two sessions hold the same
+        // forest; only the routing differs.
+        let fixed = Session::new(train());
+        let routed = Session::new_calibrated(train());
+        assert!(routed.router_calibrated());
+        let j = routed.router_json();
+        assert_eq!(j.get("calibrated"), Some(&Json::Bool(true)));
+        let row = Json::parse(r#"{"age": 44, "education": "Masters", "hours_per_week": 45}"#)
+            .unwrap();
+        for rows in [1usize, 9, 65, 200] {
+            let mut a = fixed.new_block();
+            let mut b = routed.new_block();
+            for _ in 0..rows {
+                fixed.decode_row(&mut a, &row).unwrap();
+                routed.decode_row(&mut b, &row).unwrap();
+            }
+            let pa = fixed.predict_block(&mut a);
+            let pb = routed.predict_block(&mut b);
+            assert_eq!(pa.len(), pb.len());
+            for (x, y) in pa.iter().zip(&pb) {
+                assert_eq!(x.to_bits(), y.to_bits(), "routing changed output at {rows} rows");
+            }
+        }
     }
 }

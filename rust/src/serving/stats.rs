@@ -65,6 +65,7 @@ pub struct ServingStats {
     rejected: AtomicU64,
     shed_deadline: AtomicU64,
     timed_out_conns: AtomicU64,
+    overlong_lines: AtomicU64,
     reloads: AtomicU64,
     batches: AtomicU64,
     batched_rows: AtomicU64,
@@ -84,6 +85,7 @@ pub struct StatsSnapshot {
     pub rejected: u64,
     pub shed_deadline: u64,
     pub timed_out_conns: u64,
+    pub overlong_lines: u64,
     pub reloads: u64,
     pub batches: u64,
     pub batched_rows: u64,
@@ -107,6 +109,7 @@ impl ServingStats {
             rejected: AtomicU64::new(0),
             shed_deadline: AtomicU64::new(0),
             timed_out_conns: AtomicU64::new(0),
+            overlong_lines: AtomicU64::new(0),
             reloads: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_rows: AtomicU64::new(0),
@@ -146,6 +149,12 @@ impl ServingStats {
         self.timed_out_conns.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One connection closed for streaming a request line past the
+    /// server's byte cap without a newline (OOM guard).
+    pub fn note_overlong_line(&self) {
+        self.overlong_lines.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// One hot reload (swap) of the model behind this stats handle.
     pub fn note_reload(&self) {
         self.reloads.fetch_add(1, Ordering::Relaxed);
@@ -172,6 +181,7 @@ impl ServingStats {
             rejected: self.rejected.load(Ordering::Relaxed),
             shed_deadline: self.shed_deadline.load(Ordering::Relaxed),
             timed_out_conns: self.timed_out_conns.load(Ordering::Relaxed),
+            overlong_lines: self.overlong_lines.load(Ordering::Relaxed),
             reloads: self.reloads.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             batched_rows: self.batched_rows.load(Ordering::Relaxed),
@@ -212,7 +222,7 @@ impl ServingStats {
         let s = self.snapshot();
         let mut out = format!(
             "requests: {} ({} rows, {} errors, {} rejected, {} deadline-shed)\n\
-             lifecycle: {} reloads, {} timed-out connections\n\
+             lifecycle: {} reloads, {} timed-out connections, {} overlong lines\n\
              batches: {} (mean {:.1} rows/batch, {:.1} requests/batch)\n\
              queue: {} rows now, {} rows peak\n\nrequest latency (us):\n",
             s.requests,
@@ -222,6 +232,7 @@ impl ServingStats {
             s.shed_deadline,
             s.reloads,
             s.timed_out_conns,
+            s.overlong_lines,
             s.batches,
             if s.batches > 0 { s.batched_rows as f64 / s.batches as f64 } else { 0.0 },
             if s.batches > 0 { s.batched_requests as f64 / s.batches as f64 } else { 0.0 },
@@ -257,6 +268,7 @@ fn counters_json(s: &StatsSnapshot) -> Json {
         .set("rejected", Json::Num(s.rejected as f64))
         .set("shed_deadline", Json::Num(s.shed_deadline as f64))
         .set("timed_out_conns", Json::Num(s.timed_out_conns as f64))
+        .set("overlong_lines", Json::Num(s.overlong_lines as f64))
         .set("reloads", Json::Num(s.reloads as f64))
         .set("batches", Json::Num(s.batches as f64))
         .set("batched_rows", Json::Num(s.batched_rows as f64))
@@ -293,21 +305,25 @@ fn latency_json(count: u64, mean: f64, min: f64, max: f64, mut xs: Vec<f64>) -> 
 
 /// The multi-model `{"cmd": "stats"}` export: the top level carries the
 /// same keys as [`ServingStats::to_json`], aggregated across every model
-/// (counters summed; latency count/mean/min/max combined exactly from the
-/// per-model moments, percentiles over the concatenated reservoir
-/// samples), plus a `"models"` object with each model's full individual
-/// export. Each model is read **once** — the aggregate and its `"models"`
-/// entry come from the same snapshot, so the two levels of one reply
-/// always agree. With a single model the top level therefore matches
-/// that model's own `to_json` — the PR-3 single-model wire shape is
-/// preserved.
+/// (counters summed; latency count/mean/min/max combined exactly from
+/// the per-model moments; percentiles by *weighted* nearest rank over
+/// the merged reservoirs — each model's retained sample carries weight
+/// `count / samples.len()`, its exact stream multiplicity, so a model
+/// with 100 requests no longer pulls on the aggregate like one with a
+/// million), plus a `"models"` object with each model's full individual
+/// export. Each model is read **once** — the aggregate and its
+/// `"models"` entry come from the same snapshot, so the two levels of
+/// one reply always agree. With a single model every sample has equal
+/// weight and weighted nearest rank reduces to the unweighted one, so
+/// the top level matches that model's own `to_json` — the PR-3
+/// single-model wire shape is preserved.
 pub fn aggregate_json(named: &[(&str, &ServingStats)]) -> Json {
     let mut total = StatsSnapshot::default();
     let mut count = 0u64;
     let mut mean_weighted = 0.0f64;
     let mut min = f64::INFINITY;
     let mut max = f64::NEG_INFINITY;
-    let mut samples: Vec<f64> = Vec::new();
+    let mut samples: Vec<(f64, f64)> = Vec::new();
     let mut models = Json::obj();
     for (name, stats) in named {
         let s = stats.snapshot();
@@ -318,6 +334,7 @@ pub fn aggregate_json(named: &[(&str, &ServingStats)]) -> Json {
         total.rejected += s.rejected;
         total.shed_deadline += s.shed_deadline;
         total.timed_out_conns += s.timed_out_conns;
+        total.overlong_lines += s.overlong_lines;
         total.reloads += s.reloads;
         total.batches += s.batches;
         total.batched_rows += s.batched_rows;
@@ -329,7 +346,13 @@ pub fn aggregate_json(named: &[(&str, &ServingStats)]) -> Json {
             mean_weighted += mean * c as f64;
             min = min.min(mn);
             max = max.max(mx);
-            samples.extend_from_slice(&xs);
+            // Each reservoir uniformly samples its own stream, so a
+            // retained sample stands for count/len requests. Weighting
+            // restores each model's true share of the merged stream —
+            // plain concatenation would give a capped 1M-request model
+            // the same pull as an uncapped 16k one.
+            let w = c as f64 / xs.len() as f64;
+            samples.extend(xs.iter().map(|&x| (x, w)));
         }
         let mut mj = counters_json(&s);
         mj.set("latency", latency_json(c, mean, mn, mx, xs));
@@ -338,7 +361,7 @@ pub fn aggregate_json(named: &[(&str, &ServingStats)]) -> Json {
     let mut j = counters_json(&total);
     j.set(
         "latency",
-        latency_json(
+        weighted_latency_json(
             count,
             if count > 0 { mean_weighted / count as f64 } else { 0.0 },
             min,
@@ -350,6 +373,24 @@ pub fn aggregate_json(named: &[(&str, &ServingStats)]) -> Json {
     j
 }
 
+/// As [`latency_json`], over `(value, weight)` samples merged from
+/// several reservoirs.
+fn weighted_latency_json(count: u64, mean: f64, min: f64, max: f64, mut xs: Vec<(f64, f64)>) -> Json {
+    let mut lat = Json::obj();
+    lat.set("count", Json::Num(count as f64));
+    if count > 0 {
+        xs.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("latencies are finite"));
+        let total: f64 = xs.iter().map(|(_, w)| w).sum();
+        lat.set("mean_us", Json::Num(mean))
+            .set("min_us", Json::Num(min))
+            .set("max_us", Json::Num(max));
+        for (name, p) in [("p50_us", 0.50), ("p95_us", 0.95), ("p99_us", 0.99)] {
+            lat.set(name, Json::Num(weighted_percentile(&xs, total, p)));
+        }
+    }
+    lat
+}
+
 /// Nearest-rank percentile over an ascending-sorted sample.
 fn percentile(sorted: &[f64], p: f64) -> f64 {
     if sorted.is_empty() {
@@ -357,6 +398,27 @@ fn percentile(sorted: &[f64], p: f64) -> f64 {
     }
     let rank = ((p * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
     sorted[rank - 1]
+}
+
+/// Weighted nearest-rank percentile over ascending-sorted
+/// `(value, weight)` pairs: the smallest value whose cumulative weight
+/// reaches `p` of `total`. With equal weights this reduces exactly to
+/// [`percentile`]; the relative slack absorbs floating-point
+/// accumulation so the boundary rank does not flip.
+fn weighted_percentile(sorted: &[(f64, f64)], total: f64, p: f64) -> f64 {
+    if sorted.is_empty() || total <= 0.0 {
+        return 0.0;
+    }
+    let threshold = p * total;
+    let slack = total * 1e-9;
+    let mut cum = 0.0;
+    for &(x, w) in sorted {
+        cum += w;
+        if cum + slack >= threshold {
+            return x;
+        }
+    }
+    sorted[sorted.len() - 1].0
 }
 
 #[cfg(test)]
@@ -543,6 +605,54 @@ mod tests {
             solo.req("latency").unwrap().req_f64("p99_us").unwrap(),
             a.to_json().req("latency").unwrap().req_f64("p99_us").unwrap()
         );
+    }
+
+    #[test]
+    fn aggregate_percentiles_weight_models_by_stream_count() {
+        // Model A saw 4x the reservoir cap of fast requests, so its
+        // reservoir is capped at 16384 samples standing for 65536
+        // requests. Model B saw 2048 slow requests, all retained. The
+        // merged stream is 65536 fast + 2048 slow = ~3% slow, so p50
+        // and p95 must be fast and only p99 slow. Unweighted
+        // concatenation would see 16384 fast vs 2048 slow samples
+        // (~11% slow) — still p95=fast, but weight B up and the bias
+        // flips medians; pin the exact weighted ranks instead.
+        let a = ServingStats::new();
+        let b = ServingStats::new();
+        for _ in 0..4 * LATENCY_RESERVOIR_CAP {
+            a.note_request(1, 10.0);
+        }
+        for _ in 0..2048 {
+            b.note_request(1, 1000.0);
+        }
+        let j = aggregate_json(&[("fast", &a), ("slow", &b)]);
+        let lat = j.req("latency").unwrap();
+        let total = (4 * LATENCY_RESERVOIR_CAP + 2048) as f64;
+        assert_eq!(lat.req_f64("count").unwrap(), total);
+        // Slow share = 2048/67584 ≈ 3.03%: below the p95 tail, inside
+        // the p99 tail.
+        assert_eq!(lat.req_f64("p50_us").unwrap(), 10.0);
+        assert_eq!(lat.req_f64("p95_us").unwrap(), 10.0);
+        assert_eq!(lat.req_f64("p99_us").unwrap(), 1000.0);
+        // Moments stay exact: mean = (65536*10 + 2048*1000) / 67584.
+        let want_mean = (4.0 * LATENCY_RESERVOIR_CAP as f64 * 10.0 + 2048.0 * 1000.0) / total;
+        assert!((lat.req_f64("mean_us").unwrap() - want_mean).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weighted_percentile_with_equal_weights_matches_plain_nearest_rank() {
+        // The single-model aggregate path must reduce exactly to the
+        // per-model export: same values, equal weights, same ranks.
+        let xs: Vec<f64> = (1..=97).map(|i| i as f64).collect();
+        let weighted: Vec<(f64, f64)> = xs.iter().map(|&x| (x, 3.5)).collect();
+        let total = 3.5 * xs.len() as f64;
+        for p in [0.01, 0.25, 0.50, 0.90, 0.95, 0.99, 1.0] {
+            assert_eq!(
+                weighted_percentile(&weighted, total, p),
+                percentile(&xs, p),
+                "p={p}"
+            );
+        }
     }
 
     #[test]

@@ -801,3 +801,91 @@ fn prop_kfold_partitions() {
         assert!(max - min <= 1, "folds must be balanced: {sizes:?}");
     });
 }
+
+/// Measured engine routing never changes predictions, only which
+/// bit-identical engine computes them: for randomized mixed-semantic
+/// models (NaN numericals, missing categoricals/booleans, optional
+/// categorical-set columns, oblique splits, binary/multiclass/
+/// regression), a calibrated router's output at every bucket's row
+/// count — and one row past each bucket boundary, where [`route`]
+/// switches engines — is bit-for-bit the naive reference. Every
+/// candidate variant the calibration pass can rank is itself checked
+/// against naive, so whichever ranking the timing jitter produces, the
+/// routed bits are pinned.
+#[test]
+fn prop_router_bit_identical_across_buckets() {
+    use ydf::inference::naive::NaiveEngine;
+    use ydf::inference::router::{self, Router};
+    use ydf::inference::InferenceEngine;
+    use ydf::learner::gbt::GbtConfig;
+    use ydf::learner::{GradientBoostedTreesLearner, Learner};
+    use ydf::model::Task;
+
+    run_cases(0x40073, 6, |rng, case| {
+        let classes = [2usize, 3, 0][case % 3];
+        let with_catset = case % 2 == 0;
+        // Enough rows to exercise the largest bucket (512) plus one.
+        let ds = mixed_ds_opt(520, classes, with_catset, rng);
+        let model: Box<dyn ydf::model::Model> = match (classes, case % 4) {
+            (0, _) => {
+                let mut cfg = GbtConfig::new("label");
+                cfg.task = Task::Regression;
+                cfg.num_trees = 3;
+                cfg.max_depth = 4;
+                GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap()
+            }
+            (_, 1) => {
+                // Oblique splits: QuickScorer refuses, so the router's
+                // candidate set shrinks to flat/compiled — the routing
+                // must stay exact over a partial engine roster too.
+                let mut cfg = GbtConfig::benchmark_rank1("label");
+                cfg.num_trees = 3;
+                GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap()
+            }
+            _ => {
+                let mut cfg = GbtConfig::new("label");
+                cfg.num_trees = 3;
+                cfg.max_depth = 4;
+                GradientBoostedTreesLearner::new(cfg).train(&ds).unwrap()
+            }
+        };
+
+        let naive = NaiveEngine::compile(model.as_ref());
+        let dim = naive.output_dim();
+        let router = Router::calibrated_in_memory(model.as_ref(), 0x5EED ^ case as u64)
+            .expect("forest models always compile at least one optimized engine");
+
+        let mut sizes: Vec<usize> = router::BUCKETS.to_vec();
+        sizes.extend(router::BUCKETS.iter().map(|&b| b + 1)); // cross each boundary
+        for rows in sizes {
+            let mut want = vec![0.0f64; rows * dim];
+            naive.predict_batch(&ds, 0..rows, &mut want);
+            let engine = router.route(rows);
+            let mut got = vec![0.0f64; rows * dim];
+            engine.predict_batch(&ds, 0..rows, &mut got);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    g.to_bits() == w.to_bits(),
+                    "case {case}: {rows} rows via {}: value {i} differs: {g} vs {w}",
+                    router.engine_name_for_rows(rows)
+                );
+            }
+        }
+
+        // The table the router picked from: every ranked variant is a
+        // real engine, every bucket is covered, times are finite.
+        let table = router::measure_model(model.as_ref(), 0x5EED ^ case as u64).unwrap();
+        assert_eq!(table.buckets.len(), router::BUCKETS.len());
+        for b in &table.buckets {
+            assert!(!b.ranking.is_empty(), "case {case}: bucket {} unranked", b.rows);
+            for (variant, ns) in &b.ranking {
+                assert!(ns.is_finite() && *ns >= 0.0, "case {case}: bad time {ns}");
+                assert_eq!(
+                    router::Variant::parse(&variant.tag()),
+                    Some(*variant),
+                    "case {case}: variant tag must round-trip"
+                );
+            }
+        }
+    });
+}

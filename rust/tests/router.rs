@@ -1,0 +1,179 @@
+//! Integration tests for measured engine routing
+//! (`rust/src/inference/router.rs`): the calibration table caches next
+//! to the model file and round-trips through a real session reopen,
+//! hostile tables (every stepped truncation and bit flip, plus a stale
+//! fingerprint) degrade to the static engine order without an error,
+//! and a calibration-routed session answers the exact same bits as a
+//! static one at every batch-size bucket.
+
+mod common;
+
+use common::{adult_gbt, adult_json_rows, decode_all};
+use std::path::PathBuf;
+use ydf::inference::router::{self, CalibrateMode};
+use ydf::model::io::save_model;
+use ydf::serving::Session;
+
+/// Bitwise f64 comparison: routing must only ever change *which*
+/// bit-identical engine runs, so the contract is exact bits, not
+/// approximate equality.
+fn assert_bits_eq(got: &[f64], want: &[f64], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            g.to_bits() == w.to_bits(),
+            "{what}: value {i} differs: {g} (bits {:#x}) vs {w} (bits {:#x})",
+            g.to_bits(),
+            w.to_bits()
+        );
+    }
+}
+
+/// Fresh per-test scratch directory under the system temp dir.
+fn scratch_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ydf_router_{name}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// First calibrated open measures and writes `<model>.router.json`;
+/// the second open consumes the cached table byte-for-byte (the file is
+/// not rewritten) and routes every bucket the same way. `Off` ignores
+/// the cache; `Force` re-measures and rewrites it as a valid table.
+#[test]
+fn calibration_table_caches_next_to_the_model_and_reloads() {
+    let dir = scratch_dir("cache");
+    let path = dir.join("model.json");
+    save_model(adult_gbt(300, 0xCA11, 5, 4).as_ref(), &path).unwrap();
+
+    let first = Session::open_with(&path, CalibrateMode::Load).unwrap();
+    assert!(first.router_calibrated(), "first open measures and calibrates");
+    let table = router::table_path(&path);
+    assert!(table.is_file(), "calibration is cached next to the model");
+    let cached = std::fs::read_to_string(&table).unwrap();
+
+    let second = Session::open_with(&path, CalibrateMode::Load).unwrap();
+    assert!(second.router_calibrated(), "second open reuses the cache");
+    assert_eq!(
+        std::fs::read_to_string(&table).unwrap(),
+        cached,
+        "a cache hit must not rewrite the table"
+    );
+    for &rows in &router::BUCKETS {
+        assert_eq!(
+            first.engine_name_for_rows(rows),
+            second.engine_name_for_rows(rows),
+            "bucket {rows}: the cached table must reproduce the measured routing"
+        );
+    }
+
+    let off = Session::open_with(&path, CalibrateMode::Off).unwrap();
+    assert!(!off.router_calibrated(), "Off pins the static order despite the cache");
+
+    let forced = Session::open_with(&path, CalibrateMode::Force).unwrap();
+    assert!(forced.router_calibrated(), "Force re-measures");
+    let rewritten = std::fs::read_to_string(&table).unwrap();
+    assert!(
+        router::CalibrationTable::from_file_string(&rewritten).is_ok(),
+        "Force leaves a valid table behind"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Hostile cached tables: every stepped single-bit corruption and
+/// truncation of a valid table — and a structurally valid table whose
+/// fingerprint no longer matches the model — must open cleanly with the
+/// static engine order, exactly like a session with no table at all.
+/// Mirrors `hostile_artifacts_rejected_not_panicked` in `compiled.rs`,
+/// except the router's contract is *fallback*, not error.
+#[test]
+fn hostile_calibration_tables_fall_back_to_static_order() {
+    let dir = scratch_dir("hostile");
+    let path = dir.join("model.json");
+    save_model(adult_gbt(300, 0xBAD5EED, 5, 4).as_ref(), &path).unwrap();
+
+    let baseline = Session::open_with(&path, CalibrateMode::Off).unwrap();
+    // Seed a valid cache, then corrupt it in place.
+    Session::open_with(&path, CalibrateMode::Load).unwrap();
+    let table = router::table_path(&path);
+    let bytes = std::fs::read(&table).unwrap();
+    let expect_static = |s: &Session, what: &str| {
+        assert!(!s.router_calibrated(), "{what}: must fall back to the static order");
+        for &rows in &router::BUCKETS {
+            assert_eq!(
+                s.engine_name_for_rows(rows),
+                baseline.engine_name_for_rows(rows),
+                "{what}: bucket {rows} must route as the static order does"
+            );
+        }
+    };
+
+    // Single-bit flips stepped across the file — header, checksum field,
+    // payload, whitespace. The checksum covers the exact payload bytes
+    // and the header fields are each validated, so every flip must be
+    // detected and degrade to the static order (never re-measured: a
+    // silently rewritten cache would mask the corruption).
+    for pos in (0..bytes.len()).step_by(29) {
+        let mut corrupt = bytes.clone();
+        corrupt[pos] ^= 0x10;
+        std::fs::write(&table, &corrupt).unwrap();
+        let s = Session::open_with(&path, CalibrateMode::Load).unwrap();
+        expect_static(&s, &format!("bit flip at byte {pos}"));
+        assert_eq!(
+            std::fs::read(&table).unwrap(),
+            corrupt,
+            "bit flip at byte {pos}: the bad cache must not be rewritten"
+        );
+    }
+
+    // Truncations stepped across the file, plus the empty file.
+    let mut lengths: Vec<usize> = (0..bytes.len()).step_by(37).collect();
+    lengths.extend([0, 1, bytes.len() - 1]);
+    for len in lengths {
+        std::fs::write(&table, &bytes[..len]).unwrap();
+        let s = Session::open_with(&path, CalibrateMode::Load).unwrap();
+        expect_static(&s, &format!("truncation to {len} bytes"));
+    }
+
+    // A well-formed table for a *different* model: the fingerprint check
+    // must reject it as stale.
+    std::fs::write(&table, &bytes).unwrap();
+    save_model(adult_gbt(300, 0xD1FF, 7, 4).as_ref(), &path).unwrap();
+    let stale_baseline = Session::open_with(&path, CalibrateMode::Off).unwrap();
+    let s = Session::open_with(&path, CalibrateMode::Load).unwrap();
+    assert!(!s.router_calibrated(), "stale fingerprint must fall back");
+    for &rows in &router::BUCKETS {
+        assert_eq!(s.engine_name_for_rows(rows), stale_baseline.engine_name_for_rows(rows));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The routing bit-identity contract over the full file-backed serving
+/// path: a `Force`-calibrated session and an `Off` (static) session
+/// opened from the same model file answer identical bits for the same
+/// decoded requests at every bucket's row count — whatever engine the
+/// measurement happened to pick per bucket.
+#[test]
+fn routed_session_bit_identical_to_static_at_every_bucket() {
+    let dir = scratch_dir("bit_identity");
+    let path = dir.join("model.json");
+    save_model(adult_gbt(500, 0xB17, 8, 4).as_ref(), &path).unwrap();
+
+    let routed = Session::open_with(&path, CalibrateMode::Force).unwrap();
+    let fixed = Session::open_with(&path, CalibrateMode::Off).unwrap();
+    assert!(routed.router_calibrated());
+    assert!(!fixed.router_calibrated());
+
+    // One past each bucket boundary too, so re-routing by actual row
+    // count (not just exact bucket sizes) is covered. Rows include
+    // missing numericals and out-of-dictionary categories.
+    let requests = adult_json_rows(512);
+    for n in [1usize, 2, 3, 8, 23, 64, 181, 182, 512] {
+        let mut routed_block = decode_all(&routed, &requests[..n]);
+        let mut fixed_block = decode_all(&fixed, &requests[..n]);
+        let got = routed.predict_block(&mut routed_block);
+        let want = fixed.predict_block(&mut fixed_block);
+        assert_bits_eq(&got, &want, &format!("{n} rows"));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -479,3 +479,97 @@ fn untouched_model_bit_identical_while_neighbor_swaps() {
     assert!(log.contains("Serving"), "{log}");
     assert_eq!(registry.stats_json().req_f64("reloads").unwrap(), 3.0);
 }
+
+/// The request-line length cap: a peer streaming more than
+/// `max_line_bytes` without a newline gets one in-band error naming the
+/// cap, the connection is closed (not the server), `overlong_lines`
+/// shows up in stats, and a fresh connection still serves.
+#[test]
+fn overlong_request_line_answered_in_band_and_connection_closed() {
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::net::TcpStream;
+
+    let registry = Registry::new(BatcherConfig {
+        max_delay: Duration::ZERO,
+        ..Default::default()
+    });
+    registry.register("capped", common::adult_session_owned(200, 61, 3, 3)).unwrap();
+
+    let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = probe.local_addr().unwrap();
+    drop(probe);
+    let config = ydf::serving::ServerConfig {
+        addr: addr.to_string(),
+        workers: 2,
+        max_line_bytes: 4096,
+        ..Default::default()
+    };
+    let server = std::thread::spawn(move || ydf::serving::serve(registry, &config));
+    let mut stream = None;
+    for _ in 0..100 {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+    let stream = stream.expect("server came up within 2s");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+
+    // One byte past the cap, no newline: the server must answer in-band
+    // the moment the budget is exhausted — not wait for a line that
+    // never ends, not buffer beyond the cap. (Exactly cap + 1 bytes so
+    // the server consumes everything sent: closing with unread bytes in
+    // the socket would turn the close into a reply-destroying RST and
+    // make the test racy.)
+    let flood = vec![b'x'; 4096 + 1];
+    writer.write_all(&flood).unwrap();
+    writer.flush().unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let err = Json::parse(resp.trim()).unwrap();
+    let msg = err.req_str("error").unwrap();
+    assert!(msg.contains("max_line_bytes") && msg.contains("4096"), "{msg}");
+    // The connection is closed after the reply: the next read sees EOF.
+    let mut rest = Vec::new();
+    assert_eq!(reader.read_to_end(&mut rest).unwrap(), 0, "connection must be closed");
+
+    // A fresh connection serves normally and the counter recorded the
+    // event — in stats and in the Prometheus exposition.
+    let fresh = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(fresh.try_clone().unwrap());
+    let mut writer = fresh;
+    let mut rpc = |line: &str| -> Json {
+        writeln!(writer, "{line}").unwrap();
+        writer.flush().unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        Json::parse(resp.trim()).unwrap()
+    };
+    let ok = rpc(r#"{"age": 33}"#);
+    assert_eq!(ok.req_arr("predictions").unwrap().len(), 1);
+    let stats = rpc(r#"{"cmd": "stats"}"#);
+    assert_eq!(stats.req_f64("overlong_lines").unwrap(), 1.0, "{stats}");
+    let metrics = rpc(r#"{"cmd": "metrics"}"#);
+    assert!(
+        metrics.req_str("metrics").unwrap().contains("ydf_serving_overlong_lines_total"),
+        "exposition must carry the overlong-lines family"
+    );
+
+    // A line of exactly the cap (content + newline) is *not* overlong.
+    let mut exact = format!(r#"{{"age": 41, "pad": "{}"#, "y".repeat(3000));
+    exact.push_str("\"}");
+    assert!(exact.len() <= 4096);
+    let resp = rpc(&exact);
+    assert!(
+        resp.req_str("error").unwrap().contains("pad"),
+        "under-cap line reaches JSON handling (unknown feature): {resp}"
+    );
+
+    let bye = rpc(r#"{"cmd": "shutdown"}"#);
+    assert_eq!(bye.get("ok"), Some(&Json::Bool(true)));
+    server.join().unwrap().expect("server exits cleanly");
+}

@@ -10,8 +10,10 @@
 # dropped requests, post-swap replies bit-identical to the replacement's
 # offline `ydf predict`), Prometheus metrics exposition ({"cmd":
 # "metrics"} — every sample line syntax-checked, all three metric groups
-# present), a load/unload round trip, and protocol shutdown. Exits
-# non-zero on any mismatch.
+# present, router decision counters included), measured engine routing
+# (the default --calibrate=load pass reports a calibrated per-bucket
+# table in health, before and after the swap), a load/unload round
+# trip, and protocol shutdown. Exits non-zero on any mismatch.
 set -euo pipefail
 
 BIN=${BIN:-./target/release/ydf}
@@ -121,6 +123,19 @@ check(health.get("models") == ["gbt", "rf", "cgbt"],
       "health lists all three models (incl. the artifact-backed one)")
 check(health.get("model") == "gbt", "first registered model is the default")
 
+# Measured engine routing: the default --calibrate=load ran a
+# micro-calibration pass at model load (no cached table existed for the
+# freshly trained models), so health must report a calibrated router
+# with one pinned engine tag per batch-size bucket.
+router = health.get("router", {})
+check(router.get("calibrated") is True,
+      "health: default --calibrate=load measured a routing table")
+buckets = router.get("buckets", {})
+check(set(buckets) == {"1", "8", "64", "512"},
+      "health: router pins every batch-size bucket")
+check(all(isinstance(t, str) and "[" in t for t in buckets.values()),
+      f"health: every bucket names an engine[lane] variant: {buckets}")
+
 spec = rpc(json.dumps({"cmd": "spec"}))
 label = spec["label"]
 check(len(spec["features"]) > 0 and len(spec["classes"]) > 0,
@@ -213,6 +228,8 @@ check(per_model.get("rf", {}).get("errors", 1) == 0,
       "errors are attributed per model, not smeared")
 check(per_model.get("cgbt", {}).get("requests", 0) >= 1,
       "per-model stats reported for the artifact-backed model")
+check(stats.get("overlong_lines") == 0,
+      "stats expose the overlong-line counter (and nothing tripped it)")
 
 # --- Observability: Prometheus exposition over the wire ---------------
 # By this point the server has answered requests (serving counters),
@@ -240,6 +257,10 @@ check('ydf_serving_latency_us{model="gbt",quantile="0.5"}' in body,
       "latency summary exposed with quantile labels")
 check("ydf_flush_total" in body, "per-engine flush counters exposed")
 check("ydf_pool_workers_total" in body, "scoring-pool metrics exposed")
+check("ydf_router_decisions_total" in body,
+      "router decision counters exposed with engine and bucket labels")
+check("ydf_serving_overlong_lines_total" in body,
+      "overlong-line counter exposed per model")
 
 # --- Control plane: hot swap to an artifact-backed generation ---------
 # The replacement path is model_gbt2.bin: the server's swap handler goes
@@ -321,6 +342,9 @@ check(retired, "old generation drained to Retired in the transition log")
 check(states.get("gbt") == "Serving" and states.get("rf") == "Serving"
       and states.get("cgbt") == "Serving",
       "all live models report Serving after the swap")
+check(health.get("router", {}).get("calibrated") is True,
+      "the swapped-in generation was calibrated too (load went through "
+      "the same --calibrate policy as startup)")
 
 stats = rpc(json.dumps({"cmd": "stats"}))
 check(stats.get("reloads", 0) == 1, "aggregate stats counted the reload")
