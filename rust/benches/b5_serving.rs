@@ -34,6 +34,12 @@
 //!   calibration-routed session (`Session::new_calibrated`), whose
 //!   batcher re-routes every flush to the per-batch-size winner engine
 //!   instead of the static order — the routed-vs-static serving rows.
+//! * `route_s8_c4` / `route_s8_c4_faildown` — fleet routing: the 8-row ×
+//!   4-client closed loop over real loopback TCP through a `ydf route`
+//!   front end backed by two replica backends (vs the in-process `s8_c4`
+//!   numbers, this row carries the full wire + routing-tier overhead),
+//!   then the same loop after one replica is shut down — the p99 with
+//!   every request failing over to the surviving replica.
 //!
 //! Run: cargo bench --bench b5_serving
 //!      cargo bench --bench b5_serving -- --requests=500 --out=path.json
@@ -588,6 +594,228 @@ fn main() {
         );
         report(&r);
         results.push(r);
+    }
+
+    // Family 7: fleet routing over loopback TCP — two replica backends
+    // behind one `ydf route` front end. Unlike every family above, this
+    // loop pays the real wire cost (TCP round trip, JSON decode on the
+    // backend) plus the routing hop, so it is compared against its own
+    // faildown row, not against the in-process combos. The faildown row
+    // re-runs the identical loop after one replica is shut down: every
+    // request placed on the dead replica fails over to the survivor.
+    {
+        use std::io::{BufRead, BufReader, Write};
+        use std::net::{TcpListener, TcpStream};
+
+        let free_addr = || {
+            let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = probe.local_addr().unwrap();
+            drop(probe);
+            addr
+        };
+        let backend_addrs = [free_addr(), free_addr()];
+        let registries: Vec<Arc<Registry>> = backend_addrs
+            .iter()
+            .map(|addr| {
+                let registry = Arc::new(Registry::new(BatcherConfig {
+                    max_delay: Duration::ZERO,
+                    score_threads: 1,
+                    ..Default::default()
+                }));
+                registry.register("m", train_session(20230806, 50)).unwrap();
+                let config = ydf::serving::ServerConfig {
+                    addr: addr.to_string(),
+                    workers: 8,
+                    ..Default::default()
+                };
+                let shared = Arc::clone(&registry);
+                std::thread::spawn(move || ydf::serving::serve_shared(shared, &config));
+                registry
+            })
+            .collect();
+        let router_addr = free_addr();
+        {
+            let config = ydf::serving::RouteConfig {
+                addr: router_addr.to_string(),
+                workers: 8,
+                backends: backend_addrs.iter().map(|a| a.to_string()).collect(),
+                probe_interval: Duration::from_millis(100),
+                backoff_base_ms: 1,
+                backoff_cap_ms: 20,
+                ..Default::default()
+            };
+            std::thread::spawn(move || ydf::serving::route(&config));
+        }
+        let connect = |addr: std::net::SocketAddr| -> (BufReader<TcpStream>, TcpStream) {
+            let deadline = Instant::now() + Duration::from_secs(10);
+            loop {
+                match TcpStream::connect(addr) {
+                    Ok(s) => return (BufReader::new(s.try_clone().unwrap()), s),
+                    Err(e) => {
+                        assert!(Instant::now() < deadline, "no server at {addr}: {e}");
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                }
+            }
+        };
+        // Wait for both backends, then the router.
+        for &addr in &backend_addrs {
+            let (mut r, mut w) = connect(addr);
+            writeln!(w, r#"{{"cmd": "health"}}"#).unwrap();
+            w.flush().unwrap();
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+        }
+        let request_json = |rows: usize, lane: usize| -> String {
+            let workclasses = ["Private", "Self-emp-inc", "Federal-gov", "Local-gov"];
+            let educations = ["HS-grad", "Bachelors", "Masters", "Doctorate"];
+            let body: Vec<String> = (0..rows)
+                .map(|i| {
+                    let k = lane * 31 + i;
+                    format!(
+                        r#"{{"age": {}, "hours_per_week": {}, "workclass": "{}", "education": "{}", "capital_gain": {}}}"#,
+                        18 + k % 60,
+                        20 + (k * 7) % 50,
+                        workclasses[k % workclasses.len()],
+                        educations[(k / 2) % educations.len()],
+                        (k % 9) * 700,
+                    )
+                })
+                .collect();
+            format!(r#"{{"model": "m", "rows": [{}]}}"#, body.join(", "))
+        };
+        // Closed TCP loop: 4 clients, one in-flight request each;
+        // retryable sheds retry (they count toward the request's wall
+        // time, exactly what a well-behaved client would experience).
+        let (concurrency, request_rows) = (4usize, 8usize);
+        let run_tcp_loop = |per_client: usize| -> (f64, f64, usize) {
+            let t0 = Instant::now();
+            let outcome: Vec<(Vec<f64>, usize)> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..concurrency)
+                    .map(|client| {
+                        let request_json = &request_json;
+                        let connect = &connect;
+                        s.spawn(move || {
+                            let (mut reader, mut writer) = connect(router_addr);
+                            let line = request_json(request_rows, client);
+                            let mut us = Vec::with_capacity(per_client);
+                            let mut retried = 0usize;
+                            for _ in 0..per_client {
+                                let r0 = Instant::now();
+                                loop {
+                                    writeln!(writer, "{line}").unwrap();
+                                    writer.flush().unwrap();
+                                    let mut resp = String::new();
+                                    assert!(
+                                        reader.read_line(&mut resp).unwrap() > 0,
+                                        "router dropped a request"
+                                    );
+                                    let j = Json::parse(resp.trim()).unwrap();
+                                    if j.get("error").is_none() {
+                                        std::hint::black_box(resp);
+                                        break;
+                                    }
+                                    assert_eq!(
+                                        j.get("retryable"),
+                                        Some(&Json::Bool(true)),
+                                        "only retryable errors are acceptable: {resp}"
+                                    );
+                                    retried += 1;
+                                    std::thread::sleep(Duration::from_millis(1));
+                                }
+                                us.push(r0.elapsed().as_secs_f64() * 1e6);
+                            }
+                            (us, retried)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            let wall = t0.elapsed().as_secs_f64();
+            let mut all: Vec<f64> = Vec::new();
+            let mut retried = 0usize;
+            for (us, r) in outcome {
+                all.extend(us);
+                retried += r;
+            }
+            (wall, p99(&mut all), retried)
+        };
+        let tcp_requests = (requests_per_client / 2).max(20);
+        let batch_totals = |registries: &[Arc<Registry>]| -> (u64, u64) {
+            registries.iter().fold((0, 0), |(b, rws), reg| {
+                let s = reg.resolve(Some("m")).unwrap().stats().snapshot();
+                (b + s.batches, rws + s.batched_rows)
+            })
+        };
+        let (b0, r0) = batch_totals(&registries);
+        let (wall, tail, _) = run_tcp_loop(tcp_requests);
+        let (b1, r1) = batch_totals(&registries);
+        let r = combo_result(
+            "route_s8_c4".to_string(),
+            1,
+            1,
+            request_rows,
+            concurrency,
+            tcp_requests,
+            wall,
+            tail,
+            b1 - b0,
+            r1 - r0,
+        );
+        report(&r);
+        results.push(r);
+
+        // Shut down replica 0 directly, wait until the router's probes
+        // mark it Down, then run the identical loop degraded.
+        {
+            let (mut reader, mut writer) = connect(backend_addrs[0]);
+            writeln!(writer, r#"{{"cmd": "shutdown"}}"#).unwrap();
+            writer.flush().unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+        }
+        let (mut router_reader, mut router_writer) = connect(router_addr);
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            writeln!(router_writer, r#"{{"cmd": "health"}}"#).unwrap();
+            router_writer.flush().unwrap();
+            let mut line = String::new();
+            router_reader.read_line(&mut line).unwrap();
+            if line.contains("\"Down\"") {
+                break;
+            }
+            assert!(Instant::now() < deadline, "router never marked the killed replica Down");
+            std::thread::sleep(Duration::from_millis(25));
+        }
+        let (b0, r0) = batch_totals(&registries[1..]);
+        let (wall, tail, retried) = run_tcp_loop(tcp_requests);
+        let (b1, r1) = batch_totals(&registries[1..]);
+        println!("  (faildown combo: {retried} retried requests)");
+        let r = combo_result(
+            "route_s8_c4_faildown".to_string(),
+            1,
+            1,
+            request_rows,
+            concurrency,
+            tcp_requests,
+            wall,
+            tail,
+            b1 - b0,
+            r1 - r0,
+        );
+        report(&r);
+        results.push(r);
+
+        // Stop the router and the surviving backend in-band.
+        writeln!(router_writer, r#"{{"cmd": "shutdown"}}"#).unwrap();
+        router_writer.flush().unwrap();
+        let mut line = String::new();
+        router_reader.read_line(&mut line).unwrap();
+        let (mut reader, mut writer) = connect(backend_addrs[1]);
+        writeln!(writer, r#"{{"cmd": "shutdown"}}"#).unwrap();
+        writer.flush().unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
     }
 
     let mut combos = Json::obj();

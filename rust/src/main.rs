@@ -1,8 +1,10 @@
 //! `ydf` CLI — the command-line API of §4.1: `infer_dataspec`,
 //! `show_dataspec`, `train`, `show_model`, `evaluate`, `predict`,
 //! `benchmark_inference`, plus `synth` (dataset generation),
-//! `benchmark_suite` (the §5 experiment harness) and `serve` (the
-//! micro-batching TCP serving runtime, `docs/serving.md`).
+//! `benchmark_suite` (the §5 experiment harness), `serve` (the
+//! micro-batching TCP serving runtime, `docs/serving.md`) and `route`
+//! (the fleet routing tier: one endpoint over N `serve` backends with
+//! health-checked failover).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -42,7 +44,8 @@ COMMANDS
   evaluate         --dataset=csv:FILE --model=MODEL.json|MODEL.bin
   predict          --dataset=csv:FILE --model=MODEL.json|MODEL.bin --output=csv:FILE
   benchmark_inference --dataset=csv:FILE --model=MODEL.json|MODEL.bin [--runs=20]
-  serve            --model=[NAME=]MODEL.json|.bin [--model=NAME2=OTHER.json ...]
+  serve            --model=[NAME=]MODEL.json|.bin[,flush_rows=N][,max_delay_ms=N][,score_threads=N]
+                   [--model=NAME2=OTHER.json ...]
                    [--addr=127.0.0.1] [--port=8123] [--workers=4]
                    [--flush-rows=64] [--max-delay-ms=2]
                    [--max-queue-rows=4096] [--score-threads=0]
@@ -51,7 +54,10 @@ COMMANDS
                    [--calibrate=off|load|force]
                    (--model repeats to serve several models from one
                     port; the first is the default route. NAME defaults
-                    to the file stem. --score-threads: workers a large
+                    to the file stem. Trailing ,key=value pairs on a
+                    --model value override the global batching policy
+                    for that model only (keys: flush_rows, max_delay_ms,
+                    score_threads). --score-threads: workers a large
                     coalesced flush fans out over; 0 = auto, 1 = serial.
                     --conn-timeout: seconds before an idle/stalled
                     connection is reaped, 0 = never. --queue-deadline-ms:
@@ -70,6 +76,25 @@ COMMANDS
                     trace-event JSON when the server stops; the metrics
                     wire command exposes Prometheus text exposition,
                     docs/observability.md)
+  route            --backend=HOST:PORT [--backend=HOST:PORT ...]
+                   [--addr=127.0.0.1] [--port=8200] [--workers=4]
+                   [--replicas=0] [--retry-budget=3]
+                   [--probe-interval-ms=1000] [--connect-timeout-ms=2000]
+                   [--hop-timeout-ms=10000] [--backoff-base-ms=10]
+                   [--backoff-cap-ms=500] [--conn-timeout=60]
+                   (fleet routing tier: one endpoint over N `ydf serve`
+                    backends, speaking the same wire protocol. Requests
+                    place by rendezvous hashing on the \"model\" field
+                    onto per-model replica sets (--replicas; 0 = auto =
+                    min(2, backends)); backends are health-probed every
+                    --probe-interval-ms and transport failures retry on
+                    the next replica with exponential backoff under
+                    --retry-budget. When every replica of a model is
+                    down, requests are shed in band with
+                    {{\"retryable\": true, \"retry_after_ms\": N}}.
+                    drain/undrain admin commands remove/re-admit a
+                    backend with zero dropped requests. docs/serving.md,
+                    \"Fleet routing\")
   synth            --name=TABLE5_NAME --output=csv:FILE [--max-examples=N]
   benchmark_suite  [--full] [--folds=N] [--trees=N] [--trials=N]
                    [--datasets=a,b,c] [--max-examples=N]
@@ -333,7 +358,51 @@ fn main() {
                     ))
                 },
             );
-            let registry = ydf::serving::Registry::new(batcher);
+            // Splits a --model path value's trailing `,key=value` batching
+            // overrides (keys: flush_rows, max_delay_ms, score_threads)
+            // off the actual path. A value naming an existing file is
+            // served verbatim (real paths may contain commas); unknown
+            // keys or unparsable values are rejected loudly at startup.
+            let split_model_options = |raw: &str| -> (String, Option<ydf::serving::BatcherConfig>) {
+                if Path::new(raw).is_file() || !raw.contains(',') {
+                    return (raw.to_string(), None);
+                }
+                let mut parts = raw.split(',');
+                let path = parts.next().unwrap_or(raw).to_string();
+                let mut cfg = batcher.clone();
+                for opt in parts {
+                    let Some((key, value)) = opt.split_once('=') else {
+                        eprintln!(
+                            "bad --model option '{opt}': expected key=value \
+                             (keys: flush_rows, max_delay_ms, score_threads)"
+                        );
+                        std::process::exit(2);
+                    };
+                    let parsed = value.parse::<usize>().unwrap_or_else(|_| {
+                        eprintln!(
+                            "bad --model option '{opt}': '{value}' is not a \
+                             non-negative integer"
+                        );
+                        std::process::exit(2);
+                    });
+                    match key {
+                        "flush_rows" => cfg.flush_rows = parsed,
+                        "max_delay_ms" => {
+                            cfg.max_delay = std::time::Duration::from_millis(parsed as u64)
+                        }
+                        "score_threads" => cfg.score_threads = parsed,
+                        _ => {
+                            eprintln!(
+                                "unknown --model option '{key}' (known keys: \
+                                 flush_rows, max_delay_ms, score_threads)"
+                            );
+                            std::process::exit(2);
+                        }
+                    }
+                }
+                (path, Some(cfg))
+            };
+            let registry = ydf::serving::Registry::new(batcher.clone());
             for m in model_flags {
                 // `name=path`, where a name is a plain identifier. Two
                 // escape hatches keep the single-model form backward
@@ -341,22 +410,37 @@ fn main() {
                 // prefix with a path separator (--model=/data/run=3/m.json)
                 // is never a name, and a value naming an existing file
                 // (--model=run=1.json) is served verbatim as that file.
-                let (name, path) = match m.split_once('=') {
+                let (name, rawpath) = match m.split_once('=') {
                     Some((n, p))
                         if !n.contains('/')
                             && !n.contains('\\')
                             && !Path::new(m).is_file() =>
                     {
-                        (n.to_string(), p)
+                        (Some(n.to_string()), p)
                     }
-                    _ => (
-                        Path::new(m)
-                            .file_stem()
-                            .map(|s| s.to_string_lossy().into_owned())
-                            .unwrap_or_else(|| "default".to_string()),
-                        m,
-                    ),
+                    _ => (None, m),
                 };
+                let (path, override_cfg) = split_model_options(rawpath);
+                let path = path.as_str();
+                // The default name is the *path's* file stem — computed
+                // after the option split so `,flush_rows=8` never leaks
+                // into a model name.
+                let name = name.unwrap_or_else(|| {
+                    Path::new(path)
+                        .file_stem()
+                        .map(|s| s.to_string_lossy().into_owned())
+                        .unwrap_or_else(|| "default".to_string())
+                });
+                if let Some(cfg) = override_cfg {
+                    println!(
+                        "model '{name}': batching override (flush_rows={}, \
+                         max_delay_ms={}, score_threads={})",
+                        cfg.flush_rows,
+                        cfg.max_delay.as_millis(),
+                        cfg.score_threads
+                    );
+                    registry.set_model_config(&name, cfg);
+                }
                 let session =
                     ok_or_die(ydf::serving::Session::open_with(Path::new(path), calibrate));
                 println!(
@@ -388,6 +472,57 @@ fn main() {
             if let Some(p) = trace_path {
                 write_trace(&p);
             }
+        }
+        "route" => {
+            // --backend repeats: re-scan the raw args, same as --model.
+            let backends: Vec<String> = rest
+                .iter()
+                .filter_map(|a| a.strip_prefix("--backend="))
+                .map(|s| s.to_string())
+                .collect();
+            if backends.is_empty() {
+                eprintln!("missing required flag --backend=HOST:PORT (repeat for a fleet)");
+                std::process::exit(2);
+            }
+            let parse_usize = |key: &str, default: usize| -> usize {
+                flags.get(key).map_or(default, |v| {
+                    ok_or_die(v.parse::<usize>().map_err(|_| {
+                        format!("--{key} must be a non-negative integer, got '{v}'")
+                    }))
+                })
+            };
+            let addr = flags.get("addr").map(|s| s.as_str()).unwrap_or("127.0.0.1");
+            let port = parse_usize("port", 8200);
+            let conn_timeout_s = parse_usize("conn-timeout", 60);
+            let defaults = ydf::serving::RouteConfig::default();
+            let config = ydf::serving::RouteConfig {
+                addr: format!("{addr}:{port}"),
+                workers: parse_usize("workers", defaults.workers),
+                backends,
+                conn_timeout: (conn_timeout_s > 0)
+                    .then(|| std::time::Duration::from_secs(conn_timeout_s as u64)),
+                connect_timeout: std::time::Duration::from_millis(parse_usize(
+                    "connect-timeout-ms",
+                    defaults.connect_timeout.as_millis() as usize,
+                ) as u64),
+                hop_timeout: std::time::Duration::from_millis(parse_usize(
+                    "hop-timeout-ms",
+                    defaults.hop_timeout.as_millis() as usize,
+                ) as u64),
+                probe_interval: std::time::Duration::from_millis(parse_usize(
+                    "probe-interval-ms",
+                    defaults.probe_interval.as_millis() as usize,
+                ) as u64),
+                retry_budget: parse_usize("retry-budget", defaults.retry_budget),
+                backoff_base_ms: parse_usize("backoff-base-ms", defaults.backoff_base_ms as usize)
+                    as u64,
+                backoff_cap_ms: parse_usize("backoff-cap-ms", defaults.backoff_cap_ms as usize)
+                    as u64,
+                replicas: parse_usize("replicas", 0),
+                ..Default::default()
+            };
+            println!("protocol: newline-delimited JSON (docs/serving.md, \"Fleet routing\")");
+            ok_or_die(ydf::serving::route(&config));
         }
         "synth" => {
             let name = req(&flags, "name");

@@ -22,6 +22,15 @@
 //!   processing the next N request lines, emulating a wedged worker;
 //!   drives client-visible tail latency without touching the scorer.
 //!
+//! Two more target the routing tier (`ydf route`, `RouteConfig::faults`):
+//! - **forward blackhole** (`arm_forward_drops`): the next N forwarded
+//!   hops fail without touching the network, emulating a killed or
+//!   partitioned backend; drives the router's retry/failover path
+//!   deterministically.
+//! - **forward stall** (`arm_forward_stalls`): the router sleeps before
+//!   the next N forwarded hops, emulating a saturated backend link;
+//!   drives hop-timeout and tail-latency behavior mid-traffic.
+//!
 //! Every fault also increments a `fired_*` counter so chaos tests can
 //! assert the fault actually happened rather than silently racing past it.
 
@@ -37,9 +46,14 @@ pub struct FaultPlan {
     flush_delay_ms: AtomicU64,
     stall_lines: AtomicUsize,
     line_stall_ms: AtomicU64,
+    forward_drops: AtomicUsize,
+    forward_stalls: AtomicUsize,
+    forward_stall_ms: AtomicU64,
     fired_panics: AtomicUsize,
     fired_delays: AtomicUsize,
     fired_stalls: AtomicUsize,
+    fired_forward_drops: AtomicUsize,
+    fired_forward_stalls: AtomicUsize,
 }
 
 impl FaultPlan {
@@ -65,11 +79,26 @@ impl FaultPlan {
         self.stall_lines.store(n, Ordering::SeqCst);
     }
 
+    /// Arms the next `n` forwarded hops (routing tier) to fail as if the
+    /// backend were unreachable — a blackhole, not a slow link.
+    pub fn arm_forward_drops(&self, n: usize) {
+        self.forward_drops.store(n, Ordering::SeqCst);
+    }
+
+    /// Arms the next `n` forwarded hops to sleep `ms` milliseconds before
+    /// the router dials the backend.
+    pub fn arm_forward_stalls(&self, n: usize, ms: u64) {
+        self.forward_stall_ms.store(ms, Ordering::SeqCst);
+        self.forward_stalls.store(n, Ordering::SeqCst);
+    }
+
     /// Disarms everything armed; fired counters are kept.
     pub fn disarm(&self) {
         self.panic_flushes.store(0, Ordering::SeqCst);
         self.delay_flushes.store(0, Ordering::SeqCst);
         self.stall_lines.store(0, Ordering::SeqCst);
+        self.forward_drops.store(0, Ordering::SeqCst);
+        self.forward_stalls.store(0, Ordering::SeqCst);
     }
 
     pub fn fired_panics(&self) -> usize {
@@ -82,6 +111,14 @@ impl FaultPlan {
 
     pub fn fired_stalls(&self) -> usize {
         self.fired_stalls.load(Ordering::SeqCst)
+    }
+
+    pub fn fired_forward_drops(&self) -> usize {
+        self.fired_forward_drops.load(Ordering::SeqCst)
+    }
+
+    pub fn fired_forward_stalls(&self) -> usize {
+        self.fired_forward_stalls.load(Ordering::SeqCst)
     }
 
     /// Atomically consumes one unit of an armed budget; false when spent.
@@ -109,6 +146,24 @@ impl FaultPlan {
             self.fired_stalls.fetch_add(1, Ordering::SeqCst);
             std::thread::sleep(Duration::from_millis(self.line_stall_ms.load(Ordering::SeqCst)));
         }
+    }
+
+    /// Router hook, called once per forwarded hop before dialing the
+    /// backend. Returns `true` when the hop must be blackholed (treated
+    /// as a transport failure without touching the network); a stall
+    /// sleeps, then lets the hop proceed.
+    pub fn on_forward(&self) -> bool {
+        if Self::take(&self.forward_stalls) {
+            self.fired_forward_stalls.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(Duration::from_millis(
+                self.forward_stall_ms.load(Ordering::SeqCst),
+            ));
+        }
+        if Self::take(&self.forward_drops) {
+            self.fired_forward_drops.fetch_add(1, Ordering::SeqCst);
+            return true;
+        }
+        false
     }
 }
 
@@ -148,9 +203,28 @@ mod tests {
         let p = FaultPlan::new();
         p.arm_scorer_panics(5);
         p.arm_flush_delay(5, 1);
+        p.arm_forward_drops(5);
+        p.arm_forward_stalls(5, 1);
         p.disarm();
         p.on_flush();
+        assert!(!p.on_forward());
         assert_eq!(p.fired_panics(), 0);
         assert_eq!(p.fired_delays(), 0);
+        assert_eq!(p.fired_forward_drops(), 0);
+        assert_eq!(p.fired_forward_stalls(), 0);
+    }
+
+    #[test]
+    fn forward_drops_blackhole_then_let_traffic_through() {
+        let p = FaultPlan::new();
+        p.arm_forward_drops(2);
+        assert!(p.on_forward());
+        assert!(p.on_forward());
+        assert!(!p.on_forward(), "budget spent: hops proceed again");
+        assert_eq!(p.fired_forward_drops(), 2);
+
+        p.arm_forward_stalls(1, 0);
+        assert!(!p.on_forward(), "a stall delays but never drops");
+        assert_eq!(p.fired_forward_stalls(), 1);
     }
 }

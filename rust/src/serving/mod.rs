@@ -52,6 +52,15 @@
 //! * **Admission control** — per-model queue quotas and a shared
 //!   cross-model pending-row budget layered on the reject-on-full
 //!   backpressure.
+//! * **Fleet routing** (the [`route`] module, the `ydf route` CLI mode) —
+//!   one logical endpoint over N backend server processes: rendezvous
+//!   hashing on the `"model"` field with per-model replica sets,
+//!   per-backend health probes (`Healthy → Suspect → Down → Recovering`),
+//!   bounded per-hop timeouts, retry-on-next-replica with exponential
+//!   backoff + jitter under a retry budget (idempotent predict requests
+//!   only), in-band `{"retryable": true}` degradation when every replica
+//!   of a model is down, and admin `drain`/`undrain` of a backend for
+//!   zero-drop removal.
 //! * **Fault injection** (the `faults` module, compiled under
 //!   `cfg(any(test, feature = "fault-injection"))`) — armed budgets for
 //!   scorer panics mid-flush, artificial flush latency and connection
@@ -94,6 +103,7 @@ pub mod batcher;
 #[cfg(any(test, feature = "fault-injection"))]
 pub mod faults;
 pub mod registry;
+pub mod route;
 pub mod server;
 pub mod session;
 pub mod stats;
@@ -105,6 +115,7 @@ pub use batcher::{AdmissionControl, Batcher, BatcherConfig, Pending, ScoreError,
 #[cfg(any(test, feature = "fault-injection"))]
 pub use faults::FaultPlan;
 pub use registry::{Lifecycle, LoadTicket, ModelEntry, Registry};
+pub use route::{route, HealthFsm, HealthState, RouteConfig};
 pub use server::{serve, serve_shared, ServerConfig};
 pub use session::{RowBlock, Session};
 pub use stats::ServingStats;

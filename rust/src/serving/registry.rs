@@ -219,6 +219,12 @@ pub struct Registry {
     /// Shared pending-row budget across every entry's batcher; `None`
     /// when `admission_rows` is 0.
     admission: Option<Arc<AdmissionControl>>,
+    /// Per-model batching-policy overrides (`set_model_config`), keyed by
+    /// model name and applied at every load/swap of that name. The pool
+    /// is resolved once at override time: an override keeping the global
+    /// `score_threads` shares the registry pool, anything else gets its
+    /// own (or none, when it resolves to single-threaded scoring).
+    overrides: Mutex<HashMap<String, (BatcherConfig, Option<Arc<WorkerPool>>)>>,
     next_generation: AtomicU64,
     /// Names with a load/swap in flight (duplicate-admin guard).
     loading: Arc<Mutex<HashSet<String>>>,
@@ -240,9 +246,47 @@ impl Registry {
             batcher_config: config,
             score_pool,
             admission,
+            overrides: Mutex::new(HashMap::new()),
             next_generation: AtomicU64::new(1),
             loading: Arc::new(Mutex::new(HashSet::new())),
             transitions: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Overrides the batching policy for one model *name*: every future
+    /// load/swap of `name` builds its batcher from `config` instead of
+    /// the registry-wide default (`--model=name=path,flush_rows=…` on the
+    /// CLI). The admission budget stays shared — per-model overrides tune
+    /// batching, they do not carve out private admission capacity. Set
+    /// before `register`/`load`; an override installed later takes effect
+    /// at the next swap of that name.
+    pub fn set_model_config(&self, name: &str, config: BatcherConfig) {
+        // Resolve the scoring pool once, here: an override that keeps the
+        // global score_threads shares the registry pool (N overridden
+        // models must not multiply scoring threads); a different value
+        // gets its own resolution.
+        let pool = if config.score_threads == self.batcher_config.score_threads {
+            self.score_pool.clone()
+        } else {
+            config.resolve_score_pool()
+        };
+        let mut overrides = match self.overrides.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        overrides.insert(name.to_string(), (config, pool));
+    }
+
+    /// The batcher policy and scoring pool a load of `name` uses:
+    /// the model's override when one is set, else the registry default.
+    fn config_for(&self, name: &str) -> (BatcherConfig, Option<Arc<WorkerPool>>) {
+        let overrides = match self.overrides.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        match overrides.get(name) {
+            Some((c, p)) => (c.clone(), p.clone()),
+            None => (self.batcher_config.clone(), self.score_pool.clone()),
         }
     }
 
@@ -360,11 +404,12 @@ impl Registry {
         let stats =
             prior.as_ref().map(|e| Arc::clone(e.stats())).unwrap_or_else(|| Arc::new(ServingStats::new()));
         let session = Arc::new(session);
+        let (config, score_pool) = self.config_for(&ticket.name);
         let batcher = Arc::new(Batcher::with_admission(
             Arc::clone(&session),
-            self.batcher_config.clone(),
+            config,
             Arc::clone(&stats),
-            self.score_pool.clone(),
+            score_pool,
             self.admission.clone(),
         ));
         let entry = Arc::new(ModelEntry {
@@ -802,6 +847,56 @@ mod tests {
         // Batches ran on each model's own batcher.
         assert!(models.req("a").unwrap().req_f64("batches").unwrap() >= 1.0);
         assert!(models.req("b").unwrap().req_f64("batches").unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn per_model_config_overrides_apply_at_load_and_survive_swap() {
+        let r = Registry::new(BatcherConfig {
+            max_delay: std::time::Duration::ZERO,
+            ..Default::default()
+        });
+        // Override model 'a' to a 1-row queue before it is loaded; 'b'
+        // keeps the registry-wide default.
+        r.set_model_config(
+            "a",
+            BatcherConfig {
+                max_delay: std::time::Duration::ZERO,
+                max_queue_rows: 1,
+                ..Default::default()
+            },
+        );
+        r.register("a", session(41, 3)).unwrap();
+        r.register("b", session(42, 3)).unwrap();
+        let a = r.resolve(Some("a")).unwrap();
+        let b = r.resolve(Some("b")).unwrap();
+        assert_eq!(a.batcher().capacity_rows(), 1, "override applied to 'a'");
+        assert_ne!(b.batcher().capacity_rows(), 1, "'b' keeps the default");
+
+        // Observable behavior, not just the knob: a 2-row request can
+        // never fit 'a''s queue, while 'b' takes it in stride.
+        let two_rows = |e: &ModelEntry| {
+            let mut block = e.session().new_block();
+            for age in [30.0, 40.0] {
+                let row =
+                    crate::utils::json::Json::parse(&format!(r#"{{"age": {age}}}"#)).unwrap();
+                e.session().decode_row(&mut block, &row).unwrap();
+            }
+            block
+        };
+        assert!(matches!(
+            a.batcher().submit(&two_rows(&a)).unwrap_err(),
+            crate::serving::SubmitError::RequestTooLarge { rows: 2, capacity: 1 }
+        ));
+        b.batcher().submit(&two_rows(&b)).unwrap().wait().unwrap();
+        // One-row requests still flow through the overridden batcher.
+        a.batcher().submit(&one_row(&a, 35.0)).unwrap().wait().unwrap();
+
+        // The override is keyed by name: a swap of 'a' rebuilds its
+        // batcher with the same per-model policy.
+        r.swap("a", session(43, 2)).unwrap();
+        let a2 = r.resolve(Some("a")).unwrap();
+        assert_eq!(a2.batcher().capacity_rows(), 1);
+        await_state(&a, Lifecycle::Retired);
     }
 
     #[test]

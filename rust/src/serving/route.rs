@@ -1,0 +1,1447 @@
+//! Fleet routing tier: one logical serving endpoint over N backend
+//! `ydf serve` processes.
+//!
+//! `ydf route --backend=host:port --backend=host:port … --port=…` binds a
+//! TCP front end speaking the *same* newline-delimited JSON protocol as
+//! `ydf serve` (`docs/serving.md`) and forwards each request to one of
+//! the configured backends. This is the sharding/replication layer the
+//! ROADMAP's "millions of users" item calls for: backends are plain
+//! single-process servers; the router adds placement, health tracking
+//! and failover on top, without touching the wire protocol clients speak.
+//!
+//! ## Placement: rendezvous hashing on the `"model"` field
+//!
+//! Each predict request hashes its top-level `"model"` string (absent ⇒
+//! the default route, a stable sentinel key) through **rendezvous
+//! (highest-random-weight) hashing**: every backend is scored with
+//! `splitmix64(fnv1a(model) ^ fnv1a(backend_addr))` and the top
+//! [`RouteConfig::replicas`] scores form the model's **replica set**, in
+//! preference order ([`replica_order`]). Rendezvous hashing keeps the
+//! mapping stable under membership change — a backend going down moves
+//! only the models it hosted, never reshuffles the fleet — and needs no
+//! coordination: every router instance computes the same answer.
+//!
+//! ## Health: probes and the per-backend state machine
+//!
+//! A prober thread sends `{"cmd": "health"}` to every backend each
+//! [`RouteConfig::probe_interval`]; the data path reports per-hop
+//! successes and failures as they happen. Both feed one per-backend
+//! [`HealthFsm`]:
+//!
+//! ```text
+//! Healthy -> Suspect -> Down -> Recovering -> Healthy
+//!    ^---------/                    \--> Down (relapse)
+//! ```
+//!
+//! `Healthy` and one strike (`Suspect`) stay routable — a single lost
+//! packet must not evict a backend; the second consecutive failure goes
+//! `Down` (unroutable). Only the *prober* can re-admit: a probe success
+//! on a `Down` backend moves it to `Recovering`, and
+//! [`RECOVERY_SUCCESSES`] consecutive successes restore `Healthy` — a
+//! flapping backend is not trusted with traffic on its first good probe.
+//!
+//! ## Forwarding, retries and the budget
+//!
+//! Requests are relayed **verbatim**: the router forwards the client's
+//! exact request line and relays the backend's exact reply line. Routed
+//! responses are therefore byte-identical to direct ones, and a backend's
+//! in-band reply — including an error or a shed carrying its own
+//! `retry_after_ms` hint — is *final*: the router never rewrites it and
+//! never overwrites the backend's hint with a front-end guess. Only
+//! **transport** failures (connect/read/write timeout, reset, EOF
+//! mid-reply) trigger failover: the request is retried on the next
+//! routable replica with exponential backoff + deterministic jitter
+//! ([`backoff_delay_ms`]), spending at most [`RouteConfig::retry_budget`]
+//! retries. Predict requests are idempotent (scoring is pure), so
+//! retrying is safe; non-idempotent admin commands (`load`/`swap`/
+//! `unload`) are forwarded **once**, with no retry. When the budget is
+//! exhausted — or every replica of a model is down — the router degrades
+//! in band with the Shed reply shape:
+//! `{"error": …, "retryable": true, "retry_after_ms": N}`, the hint
+//! derived from the EWMA of observed hop latency (before the first
+//! observation: the probe interval, never a fabricated seed).
+//!
+//! ## Draining a backend
+//!
+//! `{"cmd": "drain", "backend": "host:port"}` marks a backend
+//! `Draining` (the PR-6 lifecycle vocabulary): it leaves every replica
+//! set immediately, in-flight hops complete, and nothing is dropped —
+//! the zero-drop removal path for maintenance. `undrain` reverses it.
+//!
+//! ## Observability
+//!
+//! Every hop is counted through the global `obs` registry —
+//! `ydf_route_{forwarded,retries,failovers}_total{backend=,model=}`,
+//! `ydf_route_shed_total{model=}`, `ydf_route_backend_up{backend=}`,
+//! `ydf_route_backend_latency_us{backend=}` — so `{"cmd": "metrics"}`
+//! on the router returns them inside the standard Prometheus exposition;
+//! `{"cmd": "health"}` and `{"cmd": "stats"}` answer locally with a
+//! `"router"` block (per-backend state, draining flag, forward/failure
+//! counters, hop-latency EWMA). See `docs/serving.md` ("Fleet routing").
+
+use crate::utils::json::Json;
+use crate::utils::pool::WorkerPool;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Consecutive probe successes a `Down` backend must string together
+/// (the first moves it to `Recovering`) before it is `Healthy` — and
+/// routable — again.
+pub const RECOVERY_SUCCESSES: u32 = 2;
+
+/// Router configuration. Backends are `host:port` strings, exactly as
+/// passed to `--backend=`; the address string is also the backend's
+/// identity in hashing, metrics labels and `drain` commands.
+#[derive(Clone, Debug)]
+pub struct RouteConfig {
+    /// Bind address; port 0 picks an ephemeral port (printed on stdout,
+    /// same machine-parsable `listening on <addr>` line as `ydf serve`).
+    pub addr: String,
+    /// Worker threads for client connections (one connection occupies a
+    /// worker until the peer disconnects, as in the server).
+    pub workers: usize,
+    /// Backend `host:port` addresses, in `--backend=` order.
+    pub backends: Vec<String>,
+    /// Read/write timeout on every accepted *client* connection
+    /// (`None` = never reap). Same semantics as the server's
+    /// `--conn-timeout`.
+    pub conn_timeout: Option<Duration>,
+    /// Bound on one backend dial.
+    pub connect_timeout: Duration,
+    /// Read/write timeout on one forwarded hop (request write + reply
+    /// read). A backend that accepts but never answers is a transport
+    /// failure at this deadline, triggering failover.
+    pub hop_timeout: Duration,
+    /// Health-probe period.
+    pub probe_interval: Duration,
+    /// Transport-failure retries one predict request may spend across
+    /// replicas (total attempts = budget + 1). `0` disables failover.
+    pub retry_budget: usize,
+    /// Exponential-backoff base for the first retry, in ms.
+    pub backoff_base_ms: u64,
+    /// Backoff ceiling in ms.
+    pub backoff_cap_ms: u64,
+    /// Replica-set size per model; `0` resolves to
+    /// `min(2, backends.len())`.
+    pub replicas: usize,
+    /// Hard cap on one client request line (same contract as
+    /// `ServerConfig::max_line_bytes`).
+    pub max_line_bytes: usize,
+    /// Fault plan consulted once per forwarded hop (the forward-drop /
+    /// forward-stall fault points). Test-only plumbing.
+    #[cfg(any(test, feature = "fault-injection"))]
+    pub faults: Option<Arc<super::faults::FaultPlan>>,
+}
+
+impl Default for RouteConfig {
+    fn default() -> Self {
+        RouteConfig {
+            addr: "127.0.0.1:8200".to_string(),
+            workers: 4,
+            backends: Vec::new(),
+            conn_timeout: Some(Duration::from_secs(60)),
+            connect_timeout: Duration::from_secs(2),
+            hop_timeout: Duration::from_secs(10),
+            probe_interval: Duration::from_secs(1),
+            retry_budget: 3,
+            backoff_base_ms: 10,
+            backoff_cap_ms: 500,
+            replicas: 0,
+            max_line_bytes: 16 << 20,
+            #[cfg(any(test, feature = "fault-injection"))]
+            faults: None,
+        }
+    }
+}
+
+/// Health of one backend as seen by this router.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthState {
+    /// Answering; routable.
+    Healthy,
+    /// One strike (a failed hop or probe); still routable — one lost
+    /// packet must not evict a backend.
+    Suspect,
+    /// Two consecutive strikes; unroutable until the prober re-admits it.
+    Down,
+    /// A probe succeeded on a `Down` backend; unroutable until
+    /// [`RECOVERY_SUCCESSES`] consecutive successes confirm it.
+    Recovering,
+}
+
+impl HealthState {
+    pub fn name(self) -> &'static str {
+        match self {
+            HealthState::Healthy => "Healthy",
+            HealthState::Suspect => "Suspect",
+            HealthState::Down => "Down",
+            HealthState::Recovering => "Recovering",
+        }
+    }
+}
+
+/// The per-backend health state machine. Pure — no clocks, no I/O:
+/// callers feed it success/failure observations from probes and data-path
+/// hops, and read [`HealthFsm::routable`]. Deterministically
+/// unit-testable for exactly that reason.
+#[derive(Debug)]
+pub struct HealthFsm {
+    state: HealthState,
+    /// Consecutive successes while `Recovering`.
+    streak: u32,
+}
+
+impl Default for HealthFsm {
+    fn default() -> Self {
+        HealthFsm::new()
+    }
+}
+
+impl HealthFsm {
+    /// Starts `Healthy`: backends are presumed good until observed
+    /// otherwise, so a cold router routes immediately.
+    pub fn new() -> HealthFsm {
+        HealthFsm { state: HealthState::Healthy, streak: 0 }
+    }
+
+    pub fn state(&self) -> HealthState {
+        self.state
+    }
+
+    /// Whether traffic may be placed on this backend. `Suspect` stays
+    /// routable (one strike is noise); `Recovering` does not — a backend
+    /// is not trusted with traffic until its streak completes.
+    pub fn routable(&self) -> bool {
+        matches!(self.state, HealthState::Healthy | HealthState::Suspect)
+    }
+
+    /// A successful probe or data-path hop.
+    pub fn on_success(&mut self) {
+        self.state = match self.state {
+            HealthState::Healthy | HealthState::Suspect => HealthState::Healthy,
+            HealthState::Down => {
+                self.streak = 1;
+                if RECOVERY_SUCCESSES <= 1 {
+                    HealthState::Healthy
+                } else {
+                    HealthState::Recovering
+                }
+            }
+            HealthState::Recovering => {
+                self.streak += 1;
+                if self.streak >= RECOVERY_SUCCESSES {
+                    HealthState::Healthy
+                } else {
+                    HealthState::Recovering
+                }
+            }
+        };
+    }
+
+    /// A failed probe or data-path hop (transport-level only — an
+    /// in-band error reply is a *successful* hop).
+    pub fn on_failure(&mut self) {
+        self.streak = 0;
+        self.state = match self.state {
+            HealthState::Healthy => HealthState::Suspect,
+            // Second consecutive strike, or a relapse mid-recovery.
+            HealthState::Suspect | HealthState::Recovering | HealthState::Down => {
+                HealthState::Down
+            }
+        };
+    }
+}
+
+/// FNV-1a over bytes: the same dependency-free hash the artifact and
+/// router-table checksums use, here as the rendezvous-hash ingredient.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// SplitMix64 finalizer: decorrelates the xor of two FNV hashes so
+/// near-identical backend addresses (`…:8001` vs `…:8002`) still score
+/// independently per model.
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Rendezvous (highest-random-weight) hashing: scores every backend for
+/// `model` and returns the indices of the top `replicas` scores, highest
+/// first — the model's replica set in preference order. Computed over
+/// the **full** backend list (health filtering happens at routing time),
+/// so the mapping is stable across backend flaps: a backend going down
+/// never reshuffles models it did not host.
+pub fn replica_order(model: &str, backends: &[String], replicas: usize) -> Vec<usize> {
+    let mh = fnv1a(model.as_bytes());
+    let mut scored: Vec<(u64, usize)> = backends
+        .iter()
+        .enumerate()
+        .map(|(i, addr)| (splitmix64(mh ^ fnv1a(addr.as_bytes())), i))
+        .collect();
+    // Highest score first; index breaks the (astronomically unlikely) tie
+    // deterministically so every router instance agrees.
+    scored.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    scored.into_iter().take(replicas.max(1)).map(|(_, i)| i).collect()
+}
+
+/// Backoff before retry number `attempt` (0-based): exponential
+/// `base << attempt`, capped, with deterministic equal-jitter in
+/// `[capped/2, capped]` drawn from `seed` — deterministic for a given
+/// `(seed, attempt)`, which is what makes the retry schedule
+/// unit-testable without a clock, while distinct request seeds still
+/// de-synchronize a thundering herd.
+pub fn backoff_delay_ms(attempt: u32, base_ms: u64, cap_ms: u64, seed: u64) -> u64 {
+    let exp = base_ms
+        .saturating_mul(1u64 << attempt.min(16))
+        .min(cap_ms.max(base_ms.min(1)));
+    let half = exp / 2;
+    // Equal jitter: uniform in [half, exp].
+    half + splitmix64(seed ^ (attempt as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)) % (exp - half + 1)
+}
+
+/// What one forwarded request came to.
+#[derive(Debug)]
+pub enum ForwardOutcome {
+    /// A backend answered (any in-band reply, error replies included —
+    /// they are final, never retried).
+    Reply {
+        /// Index into the candidate list of the backend that answered.
+        backend: usize,
+        reply: String,
+        /// Transport-failure retries spent getting here.
+        retries: u32,
+        /// True when the answering backend was not the first candidate —
+        /// the request failed over.
+        failover: bool,
+    },
+    /// The retry budget ran out with every attempt failing at the
+    /// transport level.
+    Exhausted { retries: u32, last_error: String },
+    /// No routable replica existed to even try.
+    AllDown,
+}
+
+/// The retry/failover core, parameterized over the actual hop (`hop(i)`
+/// forwards to candidate `i` and returns the reply line or a transport
+/// error) and the sleep — so unit tests inject a recording closure
+/// instead of a wall clock and the schedule is checked deterministically.
+///
+/// Attempts cycle through `candidates` in preference order; every retry
+/// first sleeps the deterministic backoff for its attempt number.
+pub fn try_replicas<H, S>(
+    candidates: &[usize],
+    retry_budget: usize,
+    base_ms: u64,
+    cap_ms: u64,
+    seed: u64,
+    mut hop: H,
+    mut sleep: S,
+) -> ForwardOutcome
+where
+    H: FnMut(usize) -> Result<String, String>,
+    S: FnMut(Duration),
+{
+    if candidates.is_empty() {
+        return ForwardOutcome::AllDown;
+    }
+    let mut retries = 0u32;
+    let mut last_error = String::new();
+    for attempt in 0..=retry_budget {
+        if attempt > 0 {
+            retries += 1;
+            sleep(Duration::from_millis(backoff_delay_ms(
+                (attempt - 1) as u32,
+                base_ms,
+                cap_ms,
+                seed,
+            )));
+        }
+        let at = attempt % candidates.len();
+        match hop(candidates[at]) {
+            Ok(reply) => {
+                return ForwardOutcome::Reply {
+                    backend: candidates[at],
+                    reply,
+                    retries,
+                    failover: at != 0,
+                }
+            }
+            Err(e) => last_error = e,
+        }
+    }
+    ForwardOutcome::Exhausted { retries, last_error }
+}
+
+/// Idle forward connections kept per backend beyond which extras are
+/// dropped rather than pooled.
+const IDLE_POOL_CAP: usize = 8;
+
+/// One backend as this router sees it: address, health, drain flag,
+/// pooled forward connections and hop telemetry.
+struct Backend {
+    addr: String,
+    health: Mutex<HealthFsm>,
+    /// Admin-requested removal from every replica set (`drain` command).
+    /// Orthogonal to health: a draining backend may be perfectly
+    /// `Healthy` — it is just not accepting placements.
+    draining: AtomicBool,
+    /// Idle pooled connections; one request-one reply framing means a
+    /// returned connection never holds buffered leftovers.
+    idle: Mutex<Vec<BufReader<TcpStream>>>,
+    forwarded: AtomicU64,
+    failures: AtomicU64,
+    /// EWMA of successful hop wall time, ms. `None` until the first
+    /// observation — the same `Option` discipline as the batcher's
+    /// flush EWMA, so nothing downstream ever sees a fabricated seed.
+    ewma_hop_ms: Mutex<Option<f64>>,
+}
+
+impl Backend {
+    fn new(addr: String) -> Backend {
+        Backend {
+            addr,
+            health: Mutex::new(HealthFsm::new()),
+            draining: AtomicBool::new(false),
+            idle: Mutex::new(Vec::new()),
+            forwarded: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+            ewma_hop_ms: Mutex::new(None),
+        }
+    }
+
+    fn health(&self) -> std::sync::MutexGuard<'_, HealthFsm> {
+        match self.health.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    fn state(&self) -> HealthState {
+        self.health().state()
+    }
+
+    /// Placeable: routable by health and not admin-drained.
+    fn accepts_placement(&self) -> bool {
+        !self.draining.load(Ordering::SeqCst) && self.health().routable()
+    }
+
+    fn note_success(&self) {
+        self.health().on_success();
+    }
+
+    fn note_failure(&self) {
+        self.failures.fetch_add(1, Ordering::Relaxed);
+        self.health().on_failure();
+    }
+
+    fn note_hop_ms(&self, ms: f64) {
+        let mut g = match self.ewma_hop_ms.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        *g = Some(match *g {
+            Some(w) => 0.7 * w + 0.3 * ms,
+            None => ms,
+        });
+    }
+
+    fn ewma(&self) -> Option<f64> {
+        match self.ewma_hop_ms.lock() {
+            Ok(g) => *g,
+            Err(poisoned) => *poisoned.into_inner(),
+        }
+    }
+
+    fn pop_idle(&self) -> Option<BufReader<TcpStream>> {
+        match self.idle.lock() {
+            Ok(mut g) => g.pop(),
+            Err(poisoned) => poisoned.into_inner().pop(),
+        }
+    }
+
+    fn push_idle(&self, conn: BufReader<TcpStream>) {
+        let mut g = match self.idle.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if g.len() < IDLE_POOL_CAP {
+            g.push(conn);
+        }
+    }
+
+    /// Fresh dial with bounded connect + hop deadlines.
+    fn dial(&self, connect_timeout: Duration, hop_timeout: Duration) -> Result<BufReader<TcpStream>, String> {
+        let addr: SocketAddr = self
+            .addr
+            .to_socket_addrs()
+            .map_err(|e| format!("cannot resolve backend {}: {e}", self.addr))?
+            .next()
+            .ok_or_else(|| format!("backend address {} resolves to nothing", self.addr))?;
+        let stream = TcpStream::connect_timeout(&addr, connect_timeout)
+            .map_err(|e| format!("cannot connect to backend {}: {e}", self.addr))?;
+        let _ = stream.set_read_timeout(Some(hop_timeout));
+        let _ = stream.set_write_timeout(Some(hop_timeout));
+        let _ = stream.set_nodelay(true);
+        Ok(BufReader::new(stream))
+    }
+
+    /// One write-line / read-line exchange on an open connection.
+    fn exchange(conn: &mut BufReader<TcpStream>, line: &str) -> Result<String, String> {
+        {
+            // &TcpStream implements Write; the BufReader keeps the read half.
+            let mut w = conn.get_ref();
+            writeln!(w, "{line}").and_then(|_| w.flush()).map_err(|e| format!("write: {e}"))?;
+        }
+        let mut reply = String::new();
+        match conn.read_line(&mut reply) {
+            Ok(0) => Err("backend closed the connection before replying".to_string()),
+            Ok(_) if !reply.ends_with('\n') => {
+                Err("backend reply truncated mid-line".to_string())
+            }
+            Ok(_) => Ok(reply.trim_end().to_string()),
+            Err(e) => Err(format!("read: {e}")),
+        }
+    }
+
+    /// One hop: try a pooled connection first (a stale one — backend
+    /// restarted, pool aged out — falls through), then one fresh dial.
+    /// Success returns the connection to the pool.
+    fn forward(&self, line: &str, connect_timeout: Duration, hop_timeout: Duration) -> Result<String, String> {
+        if let Some(mut conn) = self.pop_idle() {
+            if let Ok(reply) = Self::exchange(&mut conn, line) {
+                self.push_idle(conn);
+                return Ok(reply);
+            }
+            // Stale pooled connection: drop it, fall through to a fresh
+            // dial before charging this backend with a failure.
+        }
+        let mut conn = self.dial(connect_timeout, hop_timeout)?;
+        let reply = Self::exchange(&mut conn, line)?;
+        self.push_idle(conn);
+        Ok(reply)
+    }
+
+    /// `{"cmd": "health"}` fragment for one backend.
+    fn json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("addr", Json::Str(self.addr.clone()))
+            .set("state", Json::Str(self.state().name().to_string()))
+            .set("draining", Json::Bool(self.draining.load(Ordering::SeqCst)))
+            .set("forwarded", Json::Num(self.forwarded.load(Ordering::Relaxed) as f64))
+            .set("failures", Json::Num(self.failures.load(Ordering::Relaxed) as f64));
+        match self.ewma() {
+            Some(w) => j.set("ewma_hop_ms", Json::Num(w)),
+            None => j.set("ewma_hop_ms", Json::Null),
+        };
+        j
+    }
+}
+
+/// Stable hash key for requests with no `"model"` field (the default
+/// route). Not a legal wire model name (names come from `--model=` /
+/// admin commands and are never empty in practice), so it cannot collide
+/// with a real model's replica set by accident in the metrics labels.
+const DEFAULT_ROUTE_KEY: &str = "default";
+
+/// Shared router state: the backend table plus routing knobs.
+struct Router {
+    backends: Vec<Arc<Backend>>,
+    addrs: Vec<String>,
+    replicas: usize,
+    retry_budget: usize,
+    backoff_base_ms: u64,
+    backoff_cap_ms: u64,
+    connect_timeout: Duration,
+    hop_timeout: Duration,
+    probe_interval: Duration,
+    shutdown: Arc<AtomicBool>,
+    /// Router-wide successful-hop EWMA (ms); the shed-hint source when
+    /// the router must fabricate a `retry_after_ms` because no backend
+    /// answered at all. `None` until the first successful hop — early
+    /// sheds fall back to the probe interval (a real, configured clock)
+    /// instead of a made-up seed.
+    ewma_hop_ms: Mutex<Option<f64>>,
+    /// Monotone per-request counter; seeds the deterministic retry
+    /// jitter so concurrent exhausted requests de-synchronize.
+    seq: AtomicU64,
+    #[cfg(any(test, feature = "fault-injection"))]
+    faults: Option<Arc<super::faults::FaultPlan>>,
+}
+
+impl Router {
+    fn new(config: &RouteConfig, shutdown: Arc<AtomicBool>) -> Router {
+        let backends: Vec<Arc<Backend>> =
+            config.backends.iter().map(|a| Arc::new(Backend::new(a.clone()))).collect();
+        Router {
+            addrs: config.backends.clone(),
+            backends,
+            replicas: if config.replicas == 0 {
+                config.backends.len().min(2).max(1)
+            } else {
+                config.replicas.min(config.backends.len().max(1))
+            },
+            retry_budget: config.retry_budget,
+            backoff_base_ms: config.backoff_base_ms,
+            backoff_cap_ms: config.backoff_cap_ms,
+            connect_timeout: config.connect_timeout,
+            hop_timeout: config.hop_timeout,
+            probe_interval: config.probe_interval,
+            shutdown,
+            ewma_hop_ms: Mutex::new(None),
+            seq: AtomicU64::new(0),
+            #[cfg(any(test, feature = "fault-injection"))]
+            faults: config.faults.clone(),
+        }
+    }
+
+    fn backend_by_addr(&self, addr: &str) -> Option<&Arc<Backend>> {
+        self.backends.iter().find(|b| b.addr == addr)
+    }
+
+    fn note_hop_ms(&self, ms: f64) {
+        let mut g = match self.ewma_hop_ms.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        *g = Some(match *g {
+            Some(w) => 0.7 * w + 0.3 * ms,
+            None => ms,
+        });
+    }
+
+    /// The shed `retry_after_ms` hint: twice the observed hop EWMA,
+    /// clamped sane; before any observation, the probe interval — the
+    /// soonest a down backend could be re-admitted anyway.
+    fn shed_hint_ms(&self) -> u64 {
+        let observed = match self.ewma_hop_ms.lock() {
+            Ok(g) => *g,
+            Err(poisoned) => *poisoned.into_inner(),
+        };
+        match observed {
+            Some(w) => (w * 2.0).clamp(1.0, 10_000.0).ceil() as u64,
+            None => (self.probe_interval.as_millis() as u64).clamp(1, 10_000),
+        }
+    }
+
+    /// The model's replica candidates that currently accept placement,
+    /// in preference order.
+    fn routable_candidates(&self, model: &str) -> Vec<usize> {
+        replica_order(model, &self.addrs, self.replicas)
+            .into_iter()
+            .filter(|&i| self.backends[i].accepts_placement())
+            .collect()
+    }
+
+    /// Forwards `line` for `model` with retry/failover; returns the
+    /// reply line to relay (verbatim on success, a router-fabricated
+    /// shed otherwise).
+    fn forward_predict(&self, model: &str, line: &str) -> String {
+        let candidates = self.routable_candidates(model);
+        let seed = splitmix64(self.seq.fetch_add(1, Ordering::Relaxed) ^ fnv1a(model.as_bytes()));
+        let outcome = try_replicas(
+            &candidates,
+            self.retry_budget,
+            self.backoff_base_ms,
+            self.backoff_cap_ms,
+            seed,
+            |i| self.hop(i, line),
+            |d| std::thread::sleep(d),
+        );
+        match outcome {
+            ForwardOutcome::Reply { backend, reply, retries, failover } => {
+                let b = &self.backends[backend];
+                let m = crate::obs::metrics();
+                m.counter_with(
+                    "ydf_route_forwarded_total",
+                    "Requests forwarded to a backend by the routing tier.",
+                    &[("backend", &b.addr), ("model", model)],
+                )
+                .inc();
+                if retries > 0 {
+                    m.counter_with(
+                        "ydf_route_retries_total",
+                        "Transport-failure retries spent by the routing tier.",
+                        &[("backend", &b.addr), ("model", model)],
+                    )
+                    .add(retries as u64);
+                }
+                if failover {
+                    m.counter_with(
+                        "ydf_route_failovers_total",
+                        "Requests answered by a non-primary replica after failover.",
+                        &[("backend", &b.addr), ("model", model)],
+                    )
+                    .inc();
+                }
+                reply
+            }
+            ForwardOutcome::Exhausted { retries, last_error } => {
+                self.shed(model, retries, &format!(
+                    "no replica of model '{model}' answered within the retry budget \
+                     ({retries} retries; last error: {last_error})"
+                ))
+            }
+            ForwardOutcome::AllDown => self.shed(model, 0, &format!(
+                "all replicas of model '{model}' are down or draining"
+            )),
+        }
+    }
+
+    /// Router-fabricated degradation reply, reusing the Shed shape the
+    /// batcher's queue deadline uses — clients handle one contract.
+    /// Only reached when *no* backend produced a reply; a backend's own
+    /// shed rides through `forward_predict` verbatim, hint and all.
+    fn shed(&self, model: &str, retries: u32, message: &str) -> String {
+        crate::obs::metrics()
+            .counter_with(
+                "ydf_route_shed_total",
+                "Requests shed by the routing tier (no replica answered).",
+                &[("model", model)],
+            )
+            .inc();
+        if retries > 0 {
+            crate::obs::metrics()
+                .counter_with(
+                    "ydf_route_retries_total",
+                    "Transport-failure retries spent by the routing tier.",
+                    &[("backend", "none"), ("model", model)],
+                )
+                .add(retries as u64);
+        }
+        let hint = self.shed_hint_ms();
+        let mut j = Json::obj();
+        j.set("error", Json::Str(format!("{message}; retry in {hint} ms")))
+            .set("retryable", Json::Bool(true))
+            .set("retry_after_ms", Json::Num(hint as f64));
+        j.to_string()
+    }
+
+    /// One hop to backend `i`, feeding health and latency telemetry.
+    fn hop(&self, i: usize, line: &str) -> Result<String, String> {
+        #[cfg(any(test, feature = "fault-injection"))]
+        if let Some(f) = &self.faults {
+            if f.on_forward() {
+                self.backends[i].note_failure();
+                return Err("fault-injection: forward blackholed".to_string());
+            }
+        }
+        let b = &self.backends[i];
+        let t0 = Instant::now();
+        match b.forward(line, self.connect_timeout, self.hop_timeout) {
+            Ok(reply) => {
+                let ms = t0.elapsed().as_secs_f64() * 1e3;
+                b.forwarded.fetch_add(1, Ordering::Relaxed);
+                b.note_success();
+                b.note_hop_ms(ms);
+                self.note_hop_ms(ms);
+                crate::obs::metrics()
+                    .gauge_with(
+                        "ydf_route_backend_latency_us",
+                        "EWMA of successful hop latency per backend, in microseconds.",
+                        &[("backend", &b.addr)],
+                    )
+                    .set(b.ewma().unwrap_or(0.0).max(0.0).round() as u64 * 1000);
+                Ok(reply)
+            }
+            Err(e) => {
+                b.note_failure();
+                Err(format!("backend {}: {e}", b.addr))
+            }
+        }
+    }
+
+    /// Forwards a non-idempotent (or unknown) command exactly once to
+    /// the first routable replica for `model`; no retry — a `load` that
+    /// timed out may still have happened.
+    fn forward_once(&self, model: &str, line: &str) -> String {
+        let candidates = self.routable_candidates(model);
+        let Some(&first) = candidates.first() else {
+            return self.shed(model, 0, &format!(
+                "all replicas of model '{model}' are down or draining"
+            ));
+        };
+        match self.hop(first, line) {
+            Ok(reply) => {
+                crate::obs::metrics()
+                    .counter_with(
+                        "ydf_route_forwarded_total",
+                        "Requests forwarded to a backend by the routing tier.",
+                        &[("backend", &self.backends[first].addr), ("model", model)],
+                    )
+                    .inc();
+                reply
+            }
+            Err(e) => {
+                let mut j = Json::obj();
+                j.set("error", Json::Str(format!(
+                    "cannot forward command to backend: {e} (commands are never retried; \
+                     re-issue once the backend recovers, or address it directly)"
+                )));
+                j.to_string()
+            }
+        }
+    }
+
+    /// The `"router"` block for `health`/`stats` replies.
+    fn router_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("backends", Json::Arr(self.backends.iter().map(|b| b.json()).collect()))
+            .set("replicas", Json::Num(self.replicas as f64))
+            .set("retry_budget", Json::Num(self.retry_budget as f64))
+            .set("probe_interval_ms", Json::Num(self.probe_interval.as_millis() as f64));
+        match self.ewma_hop_ms.lock().map(|g| *g).unwrap_or(None) {
+            Some(w) => j.set("ewma_hop_ms", Json::Num(w)),
+            None => j.set("ewma_hop_ms", Json::Null),
+        };
+        j
+    }
+
+    /// One client request line → (reply line, stop flag). Local
+    /// commands answer here; predict requests forward with failover;
+    /// other commands forward once.
+    fn respond(&self, line: &str) -> (String, bool) {
+        let request = match Json::parse(line) {
+            Ok(j) => j,
+            Err(e) => {
+                let mut j = Json::obj();
+                j.set("error", Json::Str(format!("invalid JSON: {e}")));
+                return (j.to_string(), false);
+            }
+        };
+        // Router-local commands use the same reserved-keys-only shape
+        // discipline as the server's admin dispatch: only a strict
+        // command object short-circuits here; anything else routes.
+        if let Some(cmd) = request.get("cmd").and_then(|c| c.as_str()) {
+            let reserved_only = matches!(&request, Json::Obj(m)
+                if m.keys().all(|k| k == "cmd" || k == "model" || k == "backend"));
+            if reserved_only {
+                match cmd {
+                    "health" => {
+                        let mut j = Json::obj();
+                        j.set("ok", Json::Bool(true)).set("router", self.router_json());
+                        return (j.to_string(), false);
+                    }
+                    "stats" => {
+                        let mut j = Json::obj();
+                        j.set("router", self.router_json());
+                        return (j.to_string(), false);
+                    }
+                    "metrics" => {
+                        let mut j = Json::obj();
+                        j.set(
+                            "content_type",
+                            Json::Str("text/plain; version=0.0.4".to_string()),
+                        )
+                        .set("metrics", Json::Str(crate::obs::prom::render_global()));
+                        return (j.to_string(), false);
+                    }
+                    "shutdown" => {
+                        // Stops the *router* only: backends belong to
+                        // their own operators.
+                        let mut j = Json::obj();
+                        j.set("ok", Json::Bool(true));
+                        return (j.to_string(), true);
+                    }
+                    "drain" | "undrain" => {
+                        return (self.drain_cmd(cmd, &request), false);
+                    }
+                    // spec/load/swap/unload and anything else the
+                    // backends know: forward once, no retry.
+                    _ => {
+                        let model = request
+                            .get("model")
+                            .and_then(|m| m.as_str())
+                            .unwrap_or(DEFAULT_ROUTE_KEY);
+                        return (self.forward_once(model, line), false);
+                    }
+                }
+            }
+        }
+        // Predict request (canonical rows form, or the bare shorthand):
+        // idempotent, forwarded with retry/failover. The "model" field
+        // is only routing-relevant in protocol form, mirroring the
+        // server's dispatch precedence.
+        let in_protocol_form = request.get("rows").is_some() || request.get("cmd").is_some();
+        let model = match request.get("model") {
+            Some(Json::Str(m)) if in_protocol_form => m.as_str(),
+            _ => DEFAULT_ROUTE_KEY,
+        };
+        (self.forward_predict(model, line), false)
+    }
+
+    /// `drain`/`undrain`: flips one backend's placement flag. Zero-drop
+    /// by construction — in-flight hops hold their connection and
+    /// complete; the backend merely stops receiving *new* placements.
+    fn drain_cmd(&self, cmd: &str, request: &Json) -> String {
+        let Some(addr) = request.get("backend").and_then(|b| b.as_str()) else {
+            let mut j = Json::obj();
+            j.set("error", Json::Str(format!(
+                "'{cmd}' needs a \"backend\" field naming a configured backend \
+                 (configured: {})",
+                self.addrs.join(", ")
+            )));
+            return j.to_string();
+        };
+        let Some(b) = self.backend_by_addr(addr) else {
+            let mut j = Json::obj();
+            j.set("error", Json::Str(format!(
+                "unknown backend '{addr}'. Configured backends: {}.",
+                self.addrs.join(", ")
+            )));
+            return j.to_string();
+        };
+        let draining = cmd == "drain";
+        b.draining.store(draining, Ordering::SeqCst);
+        let mut j = Json::obj();
+        j.set("ok", Json::Bool(true))
+            .set("cmd", Json::Str(cmd.to_string()))
+            .set("backend", Json::Str(addr.to_string()))
+            // The PR-6 lifecycle vocabulary: a draining backend reads
+            // exactly like a draining model generation.
+            .set("state", Json::Str(if draining { "Draining" } else { "Serving" }.to_string()));
+        j.to_string()
+    }
+
+    /// One probe pass over every backend: fresh dial + `{"cmd":"health"}`.
+    /// The only path that can re-admit a `Down` backend.
+    fn probe_all(&self) {
+        for b in &self.backends {
+            let ok = b
+                .dial(self.connect_timeout, self.hop_timeout)
+                .and_then(|mut conn| Backend::exchange(&mut conn, r#"{"cmd": "health"}"#))
+                .ok()
+                .and_then(|reply| Json::parse(&reply).ok())
+                .map(|j| j.get("ok") == Some(&Json::Bool(true)))
+                .unwrap_or(false);
+            if ok {
+                b.note_success();
+            } else {
+                b.health().on_failure();
+            }
+            crate::obs::metrics()
+                .gauge_with(
+                    "ydf_route_backend_up",
+                    "1 when the backend is routable (Healthy/Suspect), else 0.",
+                    &[("backend", &b.addr)],
+                )
+                .set(u64::from(b.health().routable()));
+        }
+    }
+}
+
+/// Binds, prints `listening on <addr>` (the same machine-parsable line
+/// as `ydf serve`), and routes until a `{"cmd": "shutdown"}` arrives.
+/// See the module docs for the full routing contract.
+pub fn route(config: &RouteConfig) -> Result<(), String> {
+    if config.backends.is_empty() {
+        return Err("cannot route without backends: pass at least one --backend=host:port"
+            .to_string());
+    }
+    let listener = TcpListener::bind(&config.addr)
+        .map_err(|e| format!("cannot bind {}: {e}", config.addr))?;
+    let local = listener
+        .local_addr()
+        .map_err(|e| format!("cannot resolve bound address: {e}"))?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let router = Arc::new(Router::new(config, Arc::clone(&shutdown)));
+    for b in &router.backends {
+        println!("routing to backend {}", b.addr);
+    }
+    println!(
+        "router: {} backend(s), {} replica(s) per model, retry budget {}",
+        router.backends.len(),
+        router.replicas,
+        router.retry_budget
+    );
+    println!("listening on {local}");
+
+    // Prober: periodic health checks; sleeps in short slices so shutdown
+    // is prompt even with a long probe interval.
+    let prober = {
+        let router = Arc::clone(&router);
+        let shutdown = Arc::clone(&shutdown);
+        std::thread::Builder::new()
+            .name("ydf-route-prober".to_string())
+            .spawn(move || {
+                while !shutdown.load(Ordering::SeqCst) {
+                    router.probe_all();
+                    let mut left = router.probe_interval;
+                    while !left.is_zero() && !shutdown.load(Ordering::SeqCst) {
+                        let step = left.min(Duration::from_millis(50));
+                        std::thread::sleep(step);
+                        left = left.saturating_sub(step);
+                    }
+                }
+            })
+            .map_err(|e| format!("cannot spawn prober thread: {e}"))?
+    };
+
+    // Client-connection registry + worker pool: the same shutdown
+    // discipline as serve_shared (close read halves to unpark workers).
+    let conns: Arc<Mutex<HashMap<u64, TcpStream>>> = Arc::new(Mutex::new(HashMap::new()));
+    let next_conn = AtomicU64::new(0);
+    let pool = WorkerPool::new(config.workers.max(1));
+    let loads: Arc<Vec<AtomicUsize>> =
+        Arc::new((0..pool.num_workers()).map(|_| AtomicUsize::new(0)).collect());
+    let max_line_bytes = config.max_line_bytes.max(1);
+    for stream in listener.incoming() {
+        if shutdown.load(Ordering::SeqCst) {
+            break; // the wake-up connection from the shutdown handler
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let _ = stream.set_read_timeout(config.conn_timeout);
+        let _ = stream.set_write_timeout(config.conn_timeout);
+        let id = next_conn.fetch_add(1, Ordering::Relaxed);
+        if let Ok(clone) = stream.try_clone() {
+            let mut g = match conns.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            g.insert(id, clone);
+        }
+        let w = loads
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, l)| l.load(Ordering::Relaxed))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        loads[w].fetch_add(1, Ordering::Relaxed);
+        let router = Arc::clone(&router);
+        let shutdown = Arc::clone(&shutdown);
+        let conns2 = Arc::clone(&conns);
+        let loads2 = Arc::clone(&loads);
+        pool.submit_to(w, move || {
+            handle_client(&router, stream, &shutdown, local, max_line_bytes);
+            let mut g = match conns2.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            g.remove(&id);
+            drop(g);
+            loads2[w].fetch_sub(1, Ordering::Relaxed);
+        });
+    }
+    {
+        let mut g = match conns.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        for (_, s) in g.drain() {
+            // Read half only: unblocks parked workers, lets in-flight
+            // replies finish writing.
+            let _ = s.shutdown(Shutdown::Read);
+        }
+    }
+    drop(pool); // join workers
+    let _ = prober.join();
+    println!("router stopped");
+    Ok(())
+}
+
+/// One client connection: Take-bounded line reads (the server's
+/// overlong/timeout discipline), one routed reply per line.
+fn handle_client(
+    router: &Router,
+    stream: TcpStream,
+    shutdown: &AtomicBool,
+    wake_addr: SocketAddr,
+    max_line_bytes: usize,
+) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut buf: Vec<u8> = Vec::new();
+    let cap = max_line_bytes as u64;
+    loop {
+        buf.clear();
+        match reader.by_ref().take(cap + 1).read_until(b'\n', &mut buf) {
+            Ok(0) => return, // EOF: peer closed cleanly
+            Ok(_) => {}
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                let mut j = Json::obj();
+                j.set(
+                    "error",
+                    Json::Str(
+                        "connection timed out waiting for a complete request line; \
+                         closing (reconnect to continue)"
+                            .to_string(),
+                    ),
+                );
+                let _ = writeln!(writer, "{j}").and_then(|_| writer.flush());
+                return;
+            }
+            Err(_) => return,
+        }
+        if buf.len() as u64 > cap && !buf.ends_with(b"\n") {
+            let mut j = Json::obj();
+            j.set(
+                "error",
+                Json::Str(format!(
+                    "request line exceeds max_line_bytes ({max_line_bytes} bytes); \
+                     closing connection"
+                )),
+            );
+            let _ = writeln!(writer, "{j}").and_then(|_| writer.flush());
+            return;
+        }
+        let line = match std::str::from_utf8(&buf) {
+            Ok(s) => s,
+            Err(e) => {
+                let mut j = Json::obj();
+                j.set("error", Json::Str(format!("request line is not valid UTF-8: {e}")));
+                if writeln!(writer, "{j}").and_then(|_| writer.flush()).is_err() {
+                    return;
+                }
+                continue;
+            }
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (reply, stop) = router.respond(line.trim_end());
+        if writeln!(writer, "{reply}").and_then(|_| writer.flush()).is_err() {
+            return;
+        }
+        if stop {
+            shutdown.store(true, Ordering::SeqCst);
+            let _ = TcpStream::connect(wake_addr);
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn health_fsm_walks_the_full_cycle() {
+        let mut f = HealthFsm::new();
+        assert_eq!(f.state(), HealthState::Healthy);
+        assert!(f.routable());
+
+        // One strike: Suspect, still routable.
+        f.on_failure();
+        assert_eq!(f.state(), HealthState::Suspect);
+        assert!(f.routable());
+        // A success clears the strike.
+        f.on_success();
+        assert_eq!(f.state(), HealthState::Healthy);
+
+        // Two consecutive strikes: Down, unroutable.
+        f.on_failure();
+        f.on_failure();
+        assert_eq!(f.state(), HealthState::Down);
+        assert!(!f.routable());
+        // Further failures keep it Down.
+        f.on_failure();
+        assert_eq!(f.state(), HealthState::Down);
+
+        // First probe success: Recovering — still unroutable.
+        f.on_success();
+        assert_eq!(f.state(), HealthState::Recovering);
+        assert!(!f.routable());
+        // Relapse mid-recovery drops straight back to Down.
+        f.on_failure();
+        assert_eq!(f.state(), HealthState::Down);
+
+        // Full recovery: RECOVERY_SUCCESSES consecutive successes.
+        for _ in 0..RECOVERY_SUCCESSES {
+            f.on_success();
+        }
+        assert_eq!(f.state(), HealthState::Healthy);
+        assert!(f.routable());
+    }
+
+    #[test]
+    fn replica_order_is_deterministic_stable_and_distinct() {
+        let backends: Vec<String> =
+            (0..5).map(|i| format!("127.0.0.1:{}", 9000 + i)).collect();
+
+        // Deterministic: two computations agree.
+        let a = replica_order("fraud", &backends, 2);
+        assert_eq!(a, replica_order("fraud", &backends, 2));
+        assert_eq!(a.len(), 2);
+        assert_ne!(a[0], a[1]);
+        assert!(a.iter().all(|&i| i < backends.len()));
+
+        // The replica set is a prefix of the full preference order:
+        // growing the set never reorders existing replicas.
+        let full = replica_order("fraud", &backends, backends.len());
+        assert_eq!(full.len(), backends.len());
+        assert_eq!(&full[..2], &a[..]);
+
+        // Rendezvous stability: removing a backend that was NOT in a
+        // model's top set leaves the model's placement unchanged
+        // (recompute over the survivors and map indices back by addr).
+        let dropped = full[full.len() - 1]; // the least-preferred backend
+        let survivors: Vec<String> =
+            backends.iter().enumerate().filter(|&(i, _)| i != dropped).map(|(_, b)| b.clone()).collect();
+        let after = replica_order("fraud", &survivors, 2);
+        let after_addrs: Vec<&String> = after.iter().map(|&i| &survivors[i]).collect();
+        let before_addrs: Vec<&String> = a.iter().map(|&i| &backends[i]).collect();
+        assert_eq!(before_addrs, after_addrs);
+
+        // Different models spread: over many models, more than one
+        // backend gets a primary slot.
+        let mut primaries: std::collections::HashSet<usize> = std::collections::HashSet::new();
+        for m in 0..32 {
+            primaries.insert(replica_order(&format!("model_{m}"), &backends, 2)[0]);
+        }
+        assert!(primaries.len() > 1, "rendezvous hashing never spread primaries");
+    }
+
+    #[test]
+    fn backoff_is_deterministic_bounded_and_grows() {
+        // Deterministic for a given (seed, attempt).
+        for attempt in 0..6 {
+            assert_eq!(
+                backoff_delay_ms(attempt, 10, 500, 42),
+                backoff_delay_ms(attempt, 10, 500, 42)
+            );
+        }
+        // Equal-jitter bounds: [capped/2, capped].
+        for seed in 0..50u64 {
+            for attempt in 0..8 {
+                let exp = 10u64.saturating_mul(1 << attempt).min(500);
+                let d = backoff_delay_ms(attempt, 10, 500, seed);
+                assert!(d >= exp / 2 && d <= exp, "attempt {attempt} seed {seed}: {d}");
+            }
+        }
+        // The cap holds even for absurd attempt numbers (no shift overflow).
+        assert!(backoff_delay_ms(63, 10, 500, 7) <= 500);
+        // Different seeds de-synchronize at least sometimes.
+        let spread: std::collections::HashSet<u64> =
+            (0..20).map(|s| backoff_delay_ms(3, 10, 500, s)).collect();
+        assert!(spread.len() > 1);
+    }
+
+    #[test]
+    fn try_replicas_first_hop_success_spends_nothing() {
+        let mut sleeps: Vec<Duration> = Vec::new();
+        let outcome = try_replicas(
+            &[2, 0, 1],
+            3,
+            10,
+            500,
+            7,
+            |i| {
+                assert_eq!(i, 2, "first candidate must be tried first");
+                Ok("reply".to_string())
+            },
+            |d| sleeps.push(d),
+        );
+        match outcome {
+            ForwardOutcome::Reply { backend, reply, retries, failover } => {
+                assert_eq!(backend, 2);
+                assert_eq!(reply, "reply");
+                assert_eq!(retries, 0);
+                assert!(!failover);
+            }
+            other => panic!("expected Reply, got {other:?}"),
+        }
+        assert!(sleeps.is_empty(), "no backoff on a first-hop success");
+    }
+
+    #[test]
+    fn try_replicas_fails_over_with_deterministic_backoff() {
+        let mut sleeps: Vec<u64> = Vec::new();
+        let mut hops: Vec<usize> = Vec::new();
+        let outcome = try_replicas(
+            &[0, 1],
+            3,
+            10,
+            500,
+            99,
+            |i| {
+                hops.push(i);
+                if hops.len() < 3 {
+                    Err("connect refused".to_string())
+                } else {
+                    Ok("late reply".to_string())
+                }
+            },
+            |d| sleeps.push(d.as_millis() as u64),
+        );
+        match outcome {
+            ForwardOutcome::Reply { backend, reply, retries, failover } => {
+                // Attempts cycle 0, 1, 0: the third lands back on 0.
+                assert_eq!(backend, 0);
+                assert_eq!(reply, "late reply");
+                assert_eq!(retries, 2);
+                assert!(!failover, "candidate 0 answered: primary, not a failover");
+            }
+            other => panic!("expected Reply, got {other:?}"),
+        }
+        assert_eq!(hops, vec![0, 1, 0]);
+        // The recorded schedule is exactly the deterministic backoff.
+        assert_eq!(
+            sleeps,
+            vec![backoff_delay_ms(0, 10, 500, 99), backoff_delay_ms(1, 10, 500, 99)]
+        );
+
+        // Second hop answering marks a failover.
+        let outcome = try_replicas(
+            &[0, 1],
+            1,
+            0,
+            0,
+            1,
+            |i| if i == 0 { Err("down".into()) } else { Ok("standby".into()) },
+            |_| {},
+        );
+        assert!(matches!(
+            outcome,
+            ForwardOutcome::Reply { backend: 1, retries: 1, failover: true, .. }
+        ));
+    }
+
+    #[test]
+    fn try_replicas_exhausts_budget_and_reports_all_down() {
+        let mut attempts = 0usize;
+        let outcome = try_replicas(
+            &[0, 1, 2],
+            2,
+            0,
+            0,
+            5,
+            |_| {
+                attempts += 1;
+                Err(format!("fail {attempts}"))
+            },
+            |_| {},
+        );
+        match outcome {
+            ForwardOutcome::Exhausted { retries, last_error } => {
+                assert_eq!(retries, 2);
+                assert_eq!(attempts, 3, "budget 2 = 3 total attempts");
+                assert_eq!(last_error, "fail 3");
+            }
+            other => panic!("expected Exhausted, got {other:?}"),
+        }
+        assert!(matches!(
+            try_replicas(&[], 5, 0, 0, 0, |_| Ok(String::new()), |_| {}),
+            ForwardOutcome::AllDown
+        ));
+    }
+
+    #[test]
+    fn shed_hint_follows_the_option_ewma_discipline() {
+        let config = RouteConfig {
+            backends: vec!["127.0.0.1:1".to_string()],
+            probe_interval: Duration::from_millis(250),
+            ..Default::default()
+        };
+        let router = Router::new(&config, Arc::new(AtomicBool::new(false)));
+        // Before any observation: the configured probe interval, never a
+        // fabricated EWMA seed.
+        assert_eq!(router.shed_hint_ms(), 250);
+        // After observations: twice the EWMA, clamped sane.
+        router.note_hop_ms(8.0);
+        assert_eq!(router.shed_hint_ms(), 16);
+        router.note_hop_ms(8.0); // ewma stays 8.0
+        assert_eq!(router.shed_hint_ms(), 16);
+        router.note_hop_ms(100_000.0);
+        assert_eq!(router.shed_hint_ms(), 10_000, "hint is clamped to 10s");
+    }
+
+    #[test]
+    fn drain_undrain_flip_placement_and_unknown_backend_errors() {
+        let config = RouteConfig {
+            backends: vec!["127.0.0.1:9101".to_string(), "127.0.0.1:9102".to_string()],
+            ..Default::default()
+        };
+        let router = Router::new(&config, Arc::new(AtomicBool::new(false)));
+        assert!(router.backends[0].accepts_placement());
+
+        let reply = router.drain_cmd("drain", &Json::parse(
+            r#"{"cmd": "drain", "backend": "127.0.0.1:9101"}"#).unwrap());
+        let j = Json::parse(&reply).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(j.req_str("state").unwrap(), "Draining");
+        assert!(!router.backends[0].accepts_placement());
+        assert!(router.backends[1].accepts_placement());
+        // A drained backend leaves every replica set.
+        for m in 0..8 {
+            for &i in &router.routable_candidates(&format!("m{m}")) {
+                assert_ne!(i, 0);
+            }
+        }
+
+        let reply = router.drain_cmd("undrain", &Json::parse(
+            r#"{"cmd": "undrain", "backend": "127.0.0.1:9101"}"#).unwrap());
+        assert_eq!(Json::parse(&reply).unwrap().req_str("state").unwrap(), "Serving");
+        assert!(router.backends[0].accepts_placement());
+
+        let reply = router.drain_cmd("drain", &Json::parse(
+            r#"{"cmd": "drain", "backend": "nope:1"}"#).unwrap());
+        assert!(Json::parse(&reply).unwrap().req_str("error").unwrap().contains("unknown backend"));
+        let reply = router.drain_cmd("drain", &Json::parse(r#"{"cmd": "drain"}"#).unwrap());
+        assert!(Json::parse(&reply).unwrap().req_str("error").unwrap().contains("backend"));
+    }
+
+    #[test]
+    fn respond_sheds_in_band_when_every_replica_is_down() {
+        let config = RouteConfig {
+            backends: vec!["127.0.0.1:9201".to_string()],
+            retry_budget: 0,
+            ..Default::default()
+        };
+        let router = Router::new(&config, Arc::new(AtomicBool::new(false)));
+        // Mark the only backend Down (two strikes).
+        router.backends[0].note_failure();
+        router.backends[0].note_failure();
+        assert_eq!(router.backends[0].state(), HealthState::Down);
+
+        let (reply, stop) = router.respond(r#"{"rows": [{"age": 30}]}"#);
+        assert!(!stop);
+        let j = Json::parse(&reply).unwrap();
+        assert_eq!(j.get("retryable"), Some(&Json::Bool(true)), "{reply}");
+        assert!(j.req_f64("retry_after_ms").unwrap() >= 1.0);
+        assert!(j.req_str("error").unwrap().contains("down"), "{reply}");
+    }
+
+    #[test]
+    fn respond_answers_local_commands_without_backends() {
+        let config = RouteConfig {
+            backends: vec!["127.0.0.1:9301".to_string()],
+            ..Default::default()
+        };
+        let router = Router::new(&config, Arc::new(AtomicBool::new(false)));
+
+        let (reply, stop) = router.respond(r#"{"cmd": "health"}"#);
+        assert!(!stop);
+        let j = Json::parse(&reply).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        let block = j.req("router").unwrap();
+        assert_eq!(block.req_arr("backends").unwrap().len(), 1);
+        assert_eq!(block.req_f64("retry_budget").unwrap(), 3.0);
+
+        let (reply, _) = router.respond(r#"{"cmd": "metrics"}"#);
+        let j = Json::parse(&reply).unwrap();
+        assert!(j.req_str("content_type").unwrap().contains("text/plain"));
+
+        let (reply, _) = router.respond("not json");
+        assert!(Json::parse(&reply).unwrap().req_str("error").unwrap().contains("invalid JSON"));
+
+        let (_, stop) = router.respond(r#"{"cmd": "shutdown"}"#);
+        assert!(stop);
+    }
+}

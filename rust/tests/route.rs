@@ -1,0 +1,401 @@
+//! Fleet-routing integration tests (`ydf::serving::route`): routed
+//! responses are byte-identical to direct backend responses and
+//! bit-identical to the offline batch path; when every replica is down
+//! the router degrades in band with a retryable shed; and the chaos
+//! gate — one of two replicas killed mid-traffic — loses zero accepted
+//! requests, emits only in-band retryable errors, and re-admits the
+//! killed backend after restart via health probes.
+
+mod common;
+
+use common::{adult_json_rows, adult_session_owned, decode_all};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+use ydf::serving::{BatcherConfig, Registry, RouteConfig};
+use ydf::utils::json::Json;
+
+/// Reserves a free loopback address by binding port 0, then releasing it
+/// for the server/router under test (the `listening on` stdout contract
+/// is covered by the smoke script).
+fn free_addr() -> SocketAddr {
+    let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = probe.local_addr().unwrap();
+    drop(probe);
+    addr
+}
+
+/// Starts one backend server at `addr` serving the deterministic
+/// adult-like GBT under the name `m`.
+fn start_backend(addr: SocketAddr, seed: u64) -> std::thread::JoinHandle<Result<(), String>> {
+    let registry = Registry::new(BatcherConfig {
+        max_delay: Duration::ZERO,
+        ..Default::default()
+    });
+    registry.register("m", adult_session_owned(400, seed, 6, 4)).unwrap();
+    let config = ydf::serving::ServerConfig {
+        addr: addr.to_string(),
+        // Headroom over the router's pooled forward connections (each
+        // occupies a backend worker for its lifetime), the per-pass
+        // probe connection, and direct test clients.
+        workers: 8,
+        ..Default::default()
+    };
+    std::thread::spawn(move || ydf::serving::serve(registry, &config))
+}
+
+/// Starts the router over `backends` at `addr` with a fast probe cadence.
+fn start_router(
+    addr: SocketAddr,
+    backends: Vec<SocketAddr>,
+) -> std::thread::JoinHandle<Result<(), String>> {
+    let config = RouteConfig {
+        addr: addr.to_string(),
+        workers: 8,
+        backends: backends.iter().map(|a| a.to_string()).collect(),
+        probe_interval: Duration::from_millis(100),
+        backoff_base_ms: 1,
+        backoff_cap_ms: 20,
+        ..Default::default()
+    };
+    std::thread::spawn(move || ydf::serving::route(&config))
+}
+
+/// Line-oriented JSON client with a bounded connect-retry loop (the
+/// server under test comes up asynchronously).
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => {
+                    return Client {
+                        reader: BufReader::new(s.try_clone().unwrap()),
+                        writer: s,
+                    }
+                }
+                Err(e) => {
+                    assert!(
+                        std::time::Instant::now() < deadline,
+                        "server never came up at {addr}: {e}"
+                    );
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        }
+    }
+
+    /// One request line, one reply line. Every accepted request must get
+    /// an in-band reply — a short read here is a dropped request.
+    fn rpc_line(&mut self, line: &str) -> String {
+        writeln!(self.writer, "{line}").unwrap();
+        self.writer.flush().unwrap();
+        let mut resp = String::new();
+        let n = self.reader.read_line(&mut resp).unwrap();
+        assert!(n > 0, "connection closed without an in-band reply");
+        resp.trim_end().to_string()
+    }
+
+    fn rpc(&mut self, line: &str) -> Json {
+        let resp = self.rpc_line(line);
+        Json::parse(&resp).unwrap_or_else(|e| panic!("bad reply '{resp}': {e}"))
+    }
+}
+
+/// Waits (bounded) until `cond` holds, polling `every`.
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    while !cond() {
+        assert!(std::time::Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// The state the router's health block reports for one backend address.
+fn backend_state(health: &Json, addr: &SocketAddr) -> String {
+    let addr = addr.to_string();
+    health
+        .req("router")
+        .unwrap()
+        .req_arr("backends")
+        .unwrap()
+        .iter()
+        .find(|b| b.req_str("addr").unwrap() == addr)
+        .unwrap_or_else(|| panic!("backend {addr} missing from router health"))
+        .req_str("state")
+        .unwrap()
+        .to_string()
+}
+
+/// Blocks until a backend at `addr` answers a health check (servers come
+/// up asynchronously; the router must not see transport failures from a
+/// backend that simply has not bound yet).
+fn wait_backend_up(addr: SocketAddr) {
+    let mut c = Client::connect(addr);
+    assert_eq!(c.rpc(r#"{"cmd": "health"}"#).get("ok"), Some(&Json::Bool(true)));
+}
+
+/// Builds the wire request line for a slice of JSON row strings.
+/// `adult_json_rows` fixtures embed newlines — flattened here because the
+/// wire protocol is strictly one request per line.
+fn request_line(rows: &[String]) -> String {
+    let flat: Vec<String> = rows.iter().map(|r| r.replace('\n', " ")).collect();
+    format!(r#"{{"model": "m", "rows": [{}]}}"#, flat.join(", "))
+}
+
+/// Routed responses over two healthy replicas are (a) byte-identical to
+/// the same request sent directly to a backend — the router forwards
+/// verbatim, it never rewrites a reply — and (b) bit-identical to the
+/// offline `predict_block` over the same rows, NaN/missing rows and
+/// unaligned tails included.
+#[test]
+fn routed_predictions_bit_identical_to_direct_and_offline() {
+    let backend_addrs = [free_addr(), free_addr()];
+    // Same seed on both backends: identical replicas of one model, as a
+    // real replica set would be.
+    let _backend_a = start_backend(backend_addrs[0], 81);
+    let _backend_b = start_backend(backend_addrs[1], 81);
+    wait_backend_up(backend_addrs[0]);
+    wait_backend_up(backend_addrs[1]);
+    let router_addr = free_addr();
+    let router = start_router(router_addr, backend_addrs.to_vec());
+
+    // Offline reference: the identical model, scored through one batch
+    // call.
+    let session = adult_session_owned(400, 81, 6, 4);
+    let rows = adult_json_rows(101); // 101: unaligned tail in every block path
+    let mut reference_block = decode_all(&session, &rows);
+    let reference = session.predict_block(&mut reference_block);
+    let dim = session.output_dim();
+
+    let mut via_router = Client::connect(router_addr);
+    let mut direct = Client::connect(backend_addrs[0]);
+
+    // Mixed request sizes, covering every row exactly once.
+    let sizes = [1usize, 8, 64, 3, 17, 2, 5, 1];
+    let (mut at, mut k) = (0usize, 0usize);
+    while at < rows.len() {
+        let take = sizes[k % sizes.len()].min(rows.len() - at);
+        let line = request_line(&rows[at..at + take]);
+        let routed = via_router.rpc_line(&line);
+        // Verbatim forwarding: the routed reply is byte-identical to the
+        // direct one (both replicas serve the identical model).
+        assert_eq!(routed, direct.rpc_line(&line), "rows {at}..{}", at + take);
+        // And bit-identical to the offline batch path.
+        let parsed = Json::parse(&routed).unwrap();
+        let preds = parsed.req_arr("predictions").unwrap_or_else(|e| {
+            panic!("rows {at}..{}: {e} in {routed}", at + take)
+        });
+        assert_eq!(preds.len(), take);
+        for (i, row) in preds.iter().enumerate() {
+            let got: Vec<f64> =
+                row.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect();
+            let want = &reference[(at + i) * dim..(at + i + 1) * dim];
+            assert_eq!(got.as_slice(), want, "row {}", at + i);
+        }
+        at += take;
+        k += 1;
+    }
+
+    // The router block is live on the health wire, and both backends are
+    // (or become) Healthy under probing.
+    let health = via_router.rpc(r#"{"cmd": "health"}"#);
+    assert_eq!(health.get("ok"), Some(&Json::Bool(true)));
+    let block = health.req("router").unwrap();
+    assert_eq!(block.req_arr("backends").unwrap().len(), 2);
+    assert_eq!(block.req_f64("replicas").unwrap(), 2.0);
+    // Metrics exposition carries the route families.
+    let metrics = via_router.rpc(r#"{"cmd": "metrics"}"#);
+    let text = metrics.req_str("metrics").unwrap();
+    assert!(text.contains("ydf_route_forwarded_total"), "route families missing:\n{text}");
+
+    // Shut everything down in-band.
+    assert_eq!(via_router.rpc(r#"{"cmd": "shutdown"}"#).get("ok"), Some(&Json::Bool(true)));
+    router.join().unwrap().expect("router exits cleanly");
+    for addr in backend_addrs {
+        let mut c = Client::connect(addr);
+        c.rpc(r#"{"cmd": "shutdown"}"#);
+    }
+}
+
+/// With every replica unreachable, predict requests degrade in band with
+/// the Shed reply shape — `retryable: true` plus a `retry_after_ms`
+/// hint — and the health block reports the backends Down.
+#[test]
+fn all_replicas_down_sheds_in_band() {
+    // Two addresses nothing listens on (bound once, then released).
+    let dead = [free_addr(), free_addr()];
+    let router_addr = free_addr();
+    let router = {
+        let config = RouteConfig {
+            addr: router_addr.to_string(),
+            workers: 2,
+            backends: dead.iter().map(|a| a.to_string()).collect(),
+            probe_interval: Duration::from_millis(50),
+            connect_timeout: Duration::from_millis(200),
+            retry_budget: 1,
+            backoff_base_ms: 1,
+            backoff_cap_ms: 5,
+            ..Default::default()
+        };
+        std::thread::spawn(move || ydf::serving::route(&config))
+    };
+    let mut client = Client::connect(router_addr);
+
+    // Whether the probes have marked the backends Down yet or not, the
+    // reply is in-band and retryable — never a dropped connection.
+    let reply = client.rpc(r#"{"model": "m", "rows": [{"age": 30}]}"#);
+    assert_eq!(reply.get("retryable"), Some(&Json::Bool(true)), "{reply}");
+    assert!(reply.req_f64("retry_after_ms").unwrap() >= 1.0);
+    assert!(reply.req_str("error").unwrap().contains("m"), "{reply}");
+
+    // The probes converge both backends to Down.
+    wait_until("both backends Down", || {
+        let health = client.rpc(r#"{"cmd": "health"}"#);
+        dead.iter().all(|a| backend_state(&health, a) == "Down")
+    });
+    // Down replicas shed immediately (no routable candidate to try).
+    let reply = client.rpc(r#"{"model": "m", "rows": [{"age": 30}]}"#);
+    assert_eq!(reply.get("retryable"), Some(&Json::Bool(true)), "{reply}");
+    assert!(reply.req_str("error").unwrap().contains("down"), "{reply}");
+
+    client.rpc(r#"{"cmd": "shutdown"}"#);
+    router.join().unwrap().expect("router exits cleanly");
+}
+
+/// The chaos gate: two replicas of one model, one killed mid-traffic.
+/// Every request gets an in-band reply (zero drops); successful replies
+/// stay bit-identical to the offline reference throughout; only
+/// retryable errors appear while the fleet degrades; and the killed
+/// backend is re-admitted by health probes after it restarts.
+#[test]
+fn killed_replica_fails_over_and_readmits_after_restart() {
+    let backend_addrs = [free_addr(), free_addr()];
+    let backend_a = start_backend(backend_addrs[0], 91);
+    let _backend_b = start_backend(backend_addrs[1], 91);
+    wait_backend_up(backend_addrs[0]);
+    wait_backend_up(backend_addrs[1]);
+    let router_addr = free_addr();
+    let router = start_router(router_addr, backend_addrs.to_vec());
+
+    let session = adult_session_owned(400, 91, 6, 4);
+    let rows = adult_json_rows(24);
+    let mut reference_block = decode_all(&session, &rows);
+    let reference = session.predict_block(&mut reference_block);
+    let dim = session.output_dim();
+
+    // One request per fixture row; asserts bit-identity on success and
+    // returns whether the reply was a (legal) retryable shed instead.
+    let check = |client: &mut Client, i: usize| -> bool {
+        let reply = client.rpc(&request_line(&rows[i..i + 1]));
+        if let Some(err) = reply.get("error") {
+            assert_eq!(
+                reply.get("retryable"),
+                Some(&Json::Bool(true)),
+                "only *retryable* in-band errors are acceptable mid-chaos: {err}"
+            );
+            assert!(reply.req_f64("retry_after_ms").unwrap() >= 1.0);
+            return true;
+        }
+        let preds = reply.req_arr("predictions").unwrap();
+        let got: Vec<f64> =
+            preds[0].as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect();
+        assert_eq!(got.as_slice(), &reference[i * dim..(i + 1) * dim], "row {i}");
+        false
+    };
+
+    let mut client = Client::connect(router_addr);
+    // Phase 1: both replicas healthy — no request may shed.
+    for i in 0..rows.len() {
+        assert!(!check(&mut client, i), "no shed with a healthy fleet (row {i})");
+    }
+
+    // Kill replica A mid-traffic: concurrent clients hammer the router
+    // while the backend goes away; every request still gets an in-band
+    // reply, with sheds allowed only if they are retryable.
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(30));
+        let mut direct = Client::connect(backend_addrs[0]);
+        direct.rpc(r#"{"cmd": "shutdown"}"#);
+    });
+    let shed_count: usize = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4)
+            .map(|t: usize| {
+                let check = &check;
+                scope.spawn(move || {
+                    let mut client = Client::connect(router_addr);
+                    let mut sheds = 0usize;
+                    for round in 0..12usize {
+                        let i = (t * 12 + round) % rows.len();
+                        if check(&mut client, i) {
+                            sheds += 1;
+                        }
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    sheds
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("no client panics")).sum()
+    });
+    killer.join().unwrap();
+    backend_a.join().unwrap().expect("backend A exits cleanly");
+
+    // With replica B alive and a retry budget, failover should absorb
+    // the kill: requests retried onto B, not shed. Tolerate stray sheds
+    // (they were in-band and retryable) but not systematic failure.
+    assert!(shed_count <= 8, "failover mostly absorbed the kill, shed {shed_count}/48");
+
+    // The router marks the killed replica Down...
+    wait_until("killed backend marked Down", || {
+        let health = client.rpc(r#"{"cmd": "health"}"#);
+        backend_state(&health, &backend_addrs[0]) == "Down"
+    });
+    // ...while traffic keeps flowing bit-identically through B.
+    for i in 0..rows.len() {
+        assert!(!check(&mut client, i), "one healthy replica suffices (row {i})");
+    }
+
+    // Restart replica A on its old address: the probes walk it through
+    // Recovering back to Healthy — re-admission needs no admin action.
+    let backend_a = start_backend(backend_addrs[0], 91);
+    wait_backend_up(backend_addrs[0]);
+    wait_until("restarted backend re-admitted", || {
+        let health = client.rpc(r#"{"cmd": "health"}"#);
+        backend_state(&health, &backend_addrs[0]) == "Healthy"
+    });
+    // Full-fleet service again, still bit-identical.
+    for i in 0..rows.len() {
+        assert!(!check(&mut client, i), "restored fleet must not shed (row {i})");
+    }
+
+    // Drain the restarted backend: reported Draining, and traffic flows
+    // unshed through the remaining replica — zero-drop removal.
+    let drain = client.rpc(&format!(
+        r#"{{"cmd": "drain", "backend": "{}"}}"#,
+        backend_addrs[0]
+    ));
+    assert_eq!(drain.req_str("state").unwrap(), "Draining");
+    for i in 0..8 {
+        assert!(!check(&mut client, i), "drain must not shed (row {i})");
+    }
+    let undrain = client.rpc(&format!(
+        r#"{{"cmd": "undrain", "backend": "{}"}}"#,
+        backend_addrs[0]
+    ));
+    assert_eq!(undrain.req_str("state").unwrap(), "Serving");
+
+    client.rpc(r#"{"cmd": "shutdown"}"#);
+    router.join().unwrap().expect("router exits cleanly");
+    for addr in backend_addrs {
+        let mut c = Client::connect(addr);
+        c.rpc(r#"{"cmd": "shutdown"}"#);
+    }
+    backend_a.join().unwrap().expect("restarted backend exits cleanly");
+}

@@ -13,7 +13,12 @@
 # present, router decision counters included), measured engine routing
 # (the default --calibrate=load pass reports a calibrated per-bucket
 # table in health, before and after the swap), a load/unload round
-# trip, and protocol shutdown. Exits non-zero on any mismatch.
+# trip, and protocol shutdown. A second act covers the fleet routing
+# tier: `ydf route` in front of two replica backends — routed replies
+# bit-identical to offline predict, a SIGKILL of the rendezvous primary
+# mid-traffic with zero dropped requests, re-admission of the restarted
+# replica, and ydf_route_* metric families in the router's exposition.
+# Exits non-zero on any mismatch.
 set -euo pipefail
 
 BIN=${BIN:-./target/release/ydf}
@@ -24,8 +29,14 @@ fi
 
 TMP=$(mktemp -d)
 SERVER_PID=""
+B1_PID=""
+B2_PID=""
+ROUTER_PID=""
+BR_PID=""
 cleanup() {
-    [ -n "$SERVER_PID" ] && kill "$SERVER_PID" 2>/dev/null || true
+    for pid in $SERVER_PID $B1_PID $B2_PID $ROUTER_PID $BR_PID; do
+        kill "$pid" 2>/dev/null || true
+    done
     rm -rf "$TMP"
 }
 trap cleanup EXIT
@@ -388,6 +399,276 @@ grep -q "serving model 'rf'" "$TMP/serve.log" || {
 }
 grep -q "serving model 'cgbt'" "$TMP/serve.log" || {
     echo "serve-smoke: server log missing the artifact-backed model's startup line" >&2
+    exit 1
+}
+
+# --- Act two: the fleet routing tier ----------------------------------
+# Two replica backends serving the same model behind one `ydf route`
+# front end. The router speaks the identical wire protocol, so the same
+# python harness drives it: bit-identity through the extra hop, then a
+# SIGKILL of whichever replica rendezvous hashing made the primary while
+# traffic is in flight (zero dropped requests, only retryable in-band
+# errors), then a restart on the same port and probe-driven re-admission.
+
+wait_port() { # wait_port LOGFILE PID — echoes the port from "listening on"
+    local port=""
+    for _ in $(seq 100); do
+        port=$(sed -n 's/^listening on .*:\([0-9][0-9]*\)$/\1/p' "$1" | head -1)
+        [ -n "$port" ] && break
+        if ! kill -0 "$2" 2>/dev/null; then
+            echo "serve-smoke: process died during startup:" >&2
+            cat "$1" >&2
+            return 1
+        fi
+        sleep 0.1
+    done
+    if [ -z "$port" ]; then
+        echo "serve-smoke: process did not report its port:" >&2
+        cat "$1" >&2
+        return 1
+    fi
+    echo "$port"
+}
+
+# --workers=8 on every process in the fleet: the router's pooled
+# forwarding connections occupy backend workers for as long as they sit
+# in the reuse pool, and the health probe plus the direct shutdown
+# client need free workers on top of the concurrent request lanes.
+echo "serve-smoke: starting two replica backends for the routing tier"
+"$BIN" serve --model=iris="$TMP/model_gbt.json" --port=0 --max-delay-ms=1 \
+    --workers=8 >"$TMP/backend1.log" 2>&1 &
+B1_PID=$!
+"$BIN" serve --model=iris="$TMP/model_gbt.json" --port=0 --max-delay-ms=1 \
+    --workers=8 >"$TMP/backend2.log" 2>&1 &
+B2_PID=$!
+B1_PORT=$(wait_port "$TMP/backend1.log" "$B1_PID")
+B2_PORT=$(wait_port "$TMP/backend2.log" "$B2_PID")
+echo "serve-smoke: replica backends up on ports $B1_PORT and $B2_PORT"
+
+"$BIN" route --backend=127.0.0.1:"$B1_PORT" --backend=127.0.0.1:"$B2_PORT" \
+    --port=0 --workers=8 --probe-interval-ms=100 --backoff-base-ms=5 \
+    --backoff-cap-ms=50 >"$TMP/route.log" 2>&1 &
+ROUTER_PID=$!
+ROUTER_PORT=$(wait_port "$TMP/route.log" "$ROUTER_PID")
+echo "serve-smoke: router is up on port $ROUTER_PORT"
+
+python3 - "$ROUTER_PORT" "$TMP/iris.csv" "$TMP/preds_gbt.csv" \
+    "$B1_PID" "$B1_PORT" "$B2_PID" "$B2_PORT" "$TMP/victim_port" <<'EOF'
+import json, os, signal, socket, sys, threading, time
+
+port = int(sys.argv[1])
+port_pid = {int(sys.argv[5]): int(sys.argv[4]), int(sys.argv[7]): int(sys.argv[6])}
+
+def read_csv(path):
+    with open(path) as f:
+        lines = [l.rstrip("\n") for l in f if l.strip()]
+    return lines[0].split(","), [l.split(",") for l in lines[1:]]
+
+def rpc(line):
+    s = socket.create_connection(("127.0.0.1", port), timeout=10)
+    s.sendall((line + "\n").encode())
+    resp = s.makefile().readline()
+    s.close()
+    return json.loads(resp)
+
+checks = 0
+def check(cond, what):
+    global checks
+    if not cond:
+        raise SystemExit(f"serve-smoke: FAILED: {what}")
+    checks += 1
+    print(f"serve-smoke: ok: {what}")
+
+N = 40
+header, data = read_csv(sys.argv[2])
+_, pred_rows = read_csv(sys.argv[3])
+offline = [[float(x) for x in cells] for cells in pred_rows]
+rows = []
+for cells in data[:N]:
+    rows.append({name: cell for name, cell in zip(header, cells)
+                 if name != "label" and cell != ""})
+
+health = rpc(json.dumps({"cmd": "health"}))
+check(health.get("ok") is True and "router" in health,
+      "router health carries a router block")
+backends = health["router"]["backends"]
+check(len(backends) == 2 and all("state" in b for b in backends),
+      "router health lists both replica backends with health states")
+
+resp = rpc(json.dumps({"model": "iris", "rows": rows}))
+check(resp.get("predictions") == offline[:N],
+      "routed predictions are bit-identical to offline predict")
+
+metrics = rpc(json.dumps({"cmd": "metrics"}))["metrics"]
+check('ydf_route_forwarded_total' in metrics,
+      "router metrics expose ydf_route_forwarded_total")
+check('ydf_route_backend_up' in metrics,
+      "router metrics expose the per-backend up gauge")
+
+# Rendezvous hashing sends every "iris" request to one primary; find it
+# from the per-backend forwarded counters so the SIGKILL provably forces
+# failover instead of landing on the idle replica.
+health = rpc(json.dumps({"cmd": "health"}))
+fwd = {b["addr"]: b.get("forwarded", 0) for b in health["router"]["backends"]}
+primary = max(fwd, key=fwd.get)
+check(fwd[primary] > 0, f"the rendezvous primary for 'iris' took traffic ({fwd})")
+victim_port = int(primary.rsplit(":", 1)[1])
+
+stop = threading.Event()
+dropped, bad, served = [], [], [0]
+alock = threading.Lock()
+
+def hammer():
+    s = socket.create_connection(("127.0.0.1", port), timeout=10)
+    f = s.makefile()
+    req = json.dumps({"model": "iris", "rows": rows[:4]}) + "\n"
+    while not stop.is_set():
+        s.sendall(req.encode())
+        line = f.readline()
+        if not line:
+            with alock:
+                dropped.append("connection closed without a reply")
+            return
+        r = json.loads(line)
+        with alock:
+            if r.get("predictions") == offline[:4]:
+                served[0] += 1
+            elif "error" in r and r.get("retryable") is True:
+                pass  # in-band degradation is the contract under failure
+            else:
+                bad.append(line.strip())
+    s.close()
+
+def served_at_least(n):
+    deadline = time.time() + 30
+    while time.time() < deadline:
+        with alock:
+            if served[0] >= n or dropped:
+                return
+        time.sleep(0.01)
+    raise SystemExit("serve-smoke: FAILED: routed traffic stalled")
+
+threads = [threading.Thread(target=hammer) for _ in range(3)]
+for t in threads:
+    t.start()
+served_at_least(10)
+os.kill(port_pid[victim_port], signal.SIGKILL)
+print(f"serve-smoke: SIGKILLed the primary replica on port {victim_port}")
+with alock:
+    target = served[0] + 30
+served_at_least(target)  # the survivor is carrying the load
+stop.set()
+for t in threads:
+    t.join()
+check(not dropped, "zero requests dropped across the replica kill")
+check(not bad, f"survivor replies bit-identical; failures retryable: {bad[:3]}")
+
+state = None
+for _ in range(100):
+    health = rpc(json.dumps({"cmd": "health"}))
+    state = next((b.get("state") for b in health["router"]["backends"]
+                  if b["addr"] == primary), None)
+    if state == "Down":
+        break
+    time.sleep(0.1)
+check(state == "Down", "router probes mark the SIGKILLed replica Down")
+
+metrics = rpc(json.dumps({"cmd": "metrics"}))["metrics"]
+check('ydf_route_retries_total' in metrics and 'ydf_route_failovers_total' in metrics,
+      "retry and failover counters exposed after the kill")
+
+with open(sys.argv[8], "w") as f:
+    f.write(str(victim_port))
+print(f"serve-smoke: routing act 1: all {checks} checks passed")
+EOF
+
+VICTIM_PORT=$(cat "$TMP/victim_port")
+echo "serve-smoke: restarting the killed backend on port $VICTIM_PORT"
+"$BIN" serve --model=iris="$TMP/model_gbt.json" --port="$VICTIM_PORT" \
+    --max-delay-ms=1 --workers=8 >"$TMP/backend_restart.log" 2>&1 &
+BR_PID=$!
+wait_port "$TMP/backend_restart.log" "$BR_PID" >/dev/null
+
+python3 - "$ROUTER_PORT" "$TMP/iris.csv" "$TMP/preds_gbt.csv" \
+    "$VICTIM_PORT" "$B1_PORT" "$B2_PORT" <<'EOF'
+import json, socket, sys, time
+
+port = int(sys.argv[1])
+
+def read_csv(path):
+    with open(path) as f:
+        lines = [l.rstrip("\n") for l in f if l.strip()]
+    return lines[0].split(","), [l.split(",") for l in lines[1:]]
+
+def rpc_at(p, line):
+    s = socket.create_connection(("127.0.0.1", p), timeout=10)
+    s.sendall((line + "\n").encode())
+    resp = s.makefile().readline()
+    s.close()
+    return json.loads(resp)
+
+def rpc(line):
+    return rpc_at(port, line)
+
+checks = 0
+def check(cond, what):
+    global checks
+    if not cond:
+        raise SystemExit(f"serve-smoke: FAILED: {what}")
+    checks += 1
+    print(f"serve-smoke: ok: {what}")
+
+N = 40
+header, data = read_csv(sys.argv[2])
+_, pred_rows = read_csv(sys.argv[3])
+offline = [[float(x) for x in cells] for cells in pred_rows]
+rows = []
+for cells in data[:N]:
+    rows.append({name: cell for name, cell in zip(header, cells)
+                 if name != "label" and cell != ""})
+
+victim = f"127.0.0.1:{sys.argv[4]}"
+state = None
+for _ in range(100):
+    health = rpc(json.dumps({"cmd": "health"}))
+    state = next((b.get("state") for b in health["router"]["backends"]
+                  if b["addr"] == victim), None)
+    if state == "Healthy":
+        break
+    time.sleep(0.1)
+check(state == "Healthy",
+      "restarted replica re-admitted by the probe loop (Recovering -> Healthy)")
+
+resp = rpc(json.dumps({"model": "iris", "rows": rows}))
+check(resp.get("predictions") == offline[:N],
+      "post-recovery routed predictions are bit-identical to offline predict")
+
+bye = rpc(json.dumps({"cmd": "shutdown"}))
+check(bye.get("ok") is True, "router shutdown acknowledged")
+for p in (int(sys.argv[5]), int(sys.argv[6])):
+    gone = rpc_at(p, json.dumps({"cmd": "shutdown"}))
+    check(gone.get("ok") is True, f"backend on port {p} shutdown acknowledged")
+print(f"serve-smoke: routing act 2: all {checks} checks passed")
+EOF
+
+echo "serve-smoke: waiting for the routing fleet to exit"
+for pid in $ROUTER_PID $BR_PID $B1_PID $B2_PID; do
+    for _ in $(seq 100); do
+        kill -0 "$pid" 2>/dev/null || break
+        sleep 0.1
+    done
+    if kill -0 "$pid" 2>/dev/null; then
+        echo "serve-smoke: routing process $pid still running after shutdown" >&2
+        exit 1
+    fi
+done
+ROUTER_PID=""; BR_PID=""; B1_PID=""; B2_PID=""
+grep -q "routing to backend" "$TMP/route.log" || {
+    echo "serve-smoke: router log missing its backend roster" >&2
+    exit 1
+}
+grep -q "router stopped" "$TMP/route.log" || {
+    echo "serve-smoke: router log missing clean-stop marker" >&2
     exit 1
 }
 echo "serve-smoke: PASS"
