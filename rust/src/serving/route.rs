@@ -388,6 +388,23 @@ where
 /// dropped rather than pooled.
 const IDLE_POOL_CAP: usize = 8;
 
+/// Why one request/reply exchange failed: before the request was flushed
+/// (`Unsent` — the backend never saw it, re-sending is always safe) or
+/// after (`Sent` — delivery is unknown, re-sending risks executing a
+/// non-idempotent command twice).
+enum ExchangeFail {
+    Unsent(String),
+    Sent(String),
+}
+
+impl ExchangeFail {
+    fn into_message(self) -> String {
+        match self {
+            ExchangeFail::Unsent(m) | ExchangeFail::Sent(m) => m,
+        }
+    }
+}
+
 /// One backend as this router sees it: address, health, drain flag,
 /// pooled forward connections and hop telemetry.
 struct Backend {
@@ -498,37 +515,54 @@ impl Backend {
     }
 
     /// One write-line / read-line exchange on an open connection.
-    fn exchange(conn: &mut BufReader<TcpStream>, line: &str) -> Result<String, String> {
+    fn exchange(
+        conn: &mut BufReader<TcpStream>,
+        line: &str,
+    ) -> Result<String, ExchangeFail> {
         {
             // &TcpStream implements Write; the BufReader keeps the read half.
             let mut w = conn.get_ref();
-            writeln!(w, "{line}").and_then(|_| w.flush()).map_err(|e| format!("write: {e}"))?;
+            writeln!(w, "{line}")
+                .and_then(|_| w.flush())
+                .map_err(|e| ExchangeFail::Unsent(format!("write: {e}")))?;
         }
         let mut reply = String::new();
         match conn.read_line(&mut reply) {
-            Ok(0) => Err("backend closed the connection before replying".to_string()),
+            Ok(0) => Err(ExchangeFail::Sent(
+                "backend closed the connection before replying".to_string(),
+            )),
             Ok(_) if !reply.ends_with('\n') => {
-                Err("backend reply truncated mid-line".to_string())
+                Err(ExchangeFail::Sent("backend reply truncated mid-line".to_string()))
             }
             Ok(_) => Ok(reply.trim_end().to_string()),
-            Err(e) => Err(format!("read: {e}")),
+            Err(e) => Err(ExchangeFail::Sent(format!("read: {e}"))),
         }
     }
 
-    /// One hop: try a pooled connection first (a stale one — backend
-    /// restarted, pool aged out — falls through), then one fresh dial.
-    /// Success returns the connection to the pool.
+    /// One hop: try a pooled connection first, then — only if the pooled
+    /// write failed, i.e. the request never left this process — one fresh
+    /// dial. A pooled failure *after* the request was flushed (read
+    /// timeout, EOF mid-reply) is a hop failure: the backend may already
+    /// be executing the request, so re-sending on a fresh dial could
+    /// deliver a non-idempotent command twice within what `forward_once`
+    /// treats as a single delivery, and a read timeout has already spent
+    /// this hop's deadline. Success returns the connection to the pool.
     fn forward(&self, line: &str, connect_timeout: Duration, hop_timeout: Duration) -> Result<String, String> {
         if let Some(mut conn) = self.pop_idle() {
-            if let Ok(reply) = Self::exchange(&mut conn, line) {
-                self.push_idle(conn);
-                return Ok(reply);
+            match Self::exchange(&mut conn, line) {
+                Ok(reply) => {
+                    self.push_idle(conn);
+                    return Ok(reply);
+                }
+                // Stale pooled connection caught before the request was
+                // sent: drop it, fall through to a fresh dial before
+                // charging this backend with a failure.
+                Err(ExchangeFail::Unsent(_)) => {}
+                Err(ExchangeFail::Sent(e)) => return Err(e),
             }
-            // Stale pooled connection: drop it, fall through to a fresh
-            // dial before charging this backend with a failure.
         }
         let mut conn = self.dial(connect_timeout, hop_timeout)?;
-        let reply = Self::exchange(&mut conn, line)?;
+        let reply = Self::exchange(&mut conn, line).map_err(ExchangeFail::into_message)?;
         self.push_idle(conn);
         Ok(reply)
     }
@@ -752,7 +786,7 @@ impl Router {
                         "EWMA of successful hop latency per backend, in microseconds.",
                         &[("backend", &b.addr)],
                     )
-                    .set(b.ewma().unwrap_or(0.0).max(0.0).round() as u64 * 1000);
+                    .set((b.ewma().unwrap_or(0.0).max(0.0) * 1000.0).round() as u64);
                 Ok(reply)
             }
             Err(e) => {
@@ -820,6 +854,21 @@ impl Router {
                 return (j.to_string(), false);
             }
         };
+        // Admin commands carry a "path" key (the server's admin shape is
+        // cmd/model/path), so the general reserved gate below would miss
+        // them and drop them into the *retried* predict path — dispatch
+        // them by name first, mirroring the server's own admin dispatch.
+        if matches!(request.get("cmd").and_then(|c| c.as_str()), Some("load" | "swap" | "unload")) {
+            let admin_shape = matches!(&request, Json::Obj(m)
+                if m.keys().all(|k| k == "cmd" || k == "model" || k == "path"));
+            if admin_shape {
+                let model = request
+                    .get("model")
+                    .and_then(|m| m.as_str())
+                    .unwrap_or(DEFAULT_ROUTE_KEY);
+                return (self.forward_once(model, line), false);
+            }
+        }
         // Router-local commands use the same reserved-keys-only shape
         // discipline as the server's admin dispatch: only a strict
         // command object short-circuits here; anything else routes.
@@ -920,15 +969,17 @@ impl Router {
         for b in &self.backends {
             let ok = b
                 .dial(self.connect_timeout, self.hop_timeout)
-                .and_then(|mut conn| Backend::exchange(&mut conn, r#"{"cmd": "health"}"#))
                 .ok()
+                .and_then(|mut conn| Backend::exchange(&mut conn, r#"{"cmd": "health"}"#).ok())
                 .and_then(|reply| Json::parse(&reply).ok())
                 .map(|j| j.get("ok") == Some(&Json::Bool(true)))
                 .unwrap_or(false);
             if ok {
                 b.note_success();
             } else {
-                b.health().on_failure();
+                // note_failure, not a bare FSM poke: probe failures must
+                // show in the per-backend "failures" counter too.
+                b.note_failure();
             }
             crate::obs::metrics()
                 .gauge_with(
@@ -1416,6 +1467,92 @@ mod tests {
         assert_eq!(j.get("retryable"), Some(&Json::Bool(true)), "{reply}");
         assert!(j.req_f64("retry_after_ms").unwrap() >= 1.0);
         assert!(j.req_str("error").unwrap().contains("down"), "{reply}");
+    }
+
+    /// An address that refuses connections: bind an ephemeral port, then
+    /// release it.
+    fn dead_addr() -> String {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener);
+        addr
+    }
+
+    #[test]
+    fn admin_commands_take_the_forward_once_path() {
+        // The admin wire shape carries a "path" key; it must dispatch to
+        // forward_once, not fall through to the retried predict path.
+        let config = RouteConfig {
+            backends: vec![dead_addr()],
+            retry_budget: 3,
+            backoff_base_ms: 1,
+            backoff_cap_ms: 2,
+            connect_timeout: Duration::from_millis(500),
+            ..Default::default()
+        };
+        for line in [
+            r#"{"cmd": "load", "model": "fraud", "path": "/models/fraud.ydf"}"#,
+            r#"{"cmd": "swap", "model": "fraud", "path": "/models/fraud_v2.ydf"}"#,
+            r#"{"cmd": "unload", "model": "fraud"}"#,
+        ] {
+            // Fresh router per command: each failed hop strikes the
+            // backend's health FSM, and a Down backend sheds instead.
+            let router = Router::new(&config, Arc::new(AtomicBool::new(false)));
+            let (reply, stop) = router.respond(line);
+            assert!(!stop);
+            let j = Json::parse(&reply).unwrap();
+            // A failed hop surfaces as a non-retryable command error —
+            // never as a retryable shed inviting the client to re-send a
+            // possibly-already-applied command.
+            assert!(j.get("retryable").is_none(), "{line} -> {reply}");
+            assert!(j.req_str("error").unwrap().contains("never retried"), "{line} -> {reply}");
+        }
+    }
+
+    #[test]
+    fn pooled_failure_after_send_is_a_hop_failure_not_a_resend() {
+        // A "backend" that answers the first request (so the connection
+        // gets pooled), then reads the second request and closes without
+        // replying — a failure *after* the request was flushed.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let mut w = &stream;
+            writeln!(w, "{{\"ok\": true}}").unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            // Close the connection *and* the listener without replying:
+            // a re-send would need a fresh dial and fail differently.
+        });
+        let b = Backend::new(addr);
+        let t = Duration::from_millis(2_000);
+        assert_eq!(b.forward(r#"{"cmd": "health"}"#, t, t).unwrap(), r#"{"ok": true}"#);
+        let err = b.forward(r#"{"cmd": "swap"}"#, t, t).unwrap_err();
+        // The request left on the pooled connection, so its failure must
+        // surface as a hop failure ("closed before replying"), not fall
+        // through to a fresh dial ("cannot connect") that would deliver
+        // the command a second time.
+        assert!(err.contains("before replying"), "after-send failure was re-sent: {err}");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn probe_failures_show_in_the_failures_counter() {
+        let config = RouteConfig {
+            backends: vec![dead_addr()],
+            connect_timeout: Duration::from_millis(500),
+            ..Default::default()
+        };
+        let router = Router::new(&config, Arc::new(AtomicBool::new(false)));
+        router.probe_all();
+        router.probe_all();
+        let b = &router.backends[0];
+        assert_eq!(b.failures.load(Ordering::Relaxed), 2);
+        assert_eq!(b.state(), HealthState::Down);
     }
 
     #[test]
